@@ -1,0 +1,155 @@
+//! Ablations over the design choices DESIGN.md calls out (§3.2 of the paper):
+//!   1. q_{d→b} sweep — mixing vs likelihood queries trade-off
+//!   2. untuned ξ sweep — bound tightness vs bright fraction
+//!   3. explicit (Alg 1) vs implicit (Alg 2) z-resampling at equal query cost
+//!   4. XLA bucket padding overhead vs bright-set size
+//!
+//!     cargo bench --bench ablations [-- --n 4000 --iters 500]
+
+use firefly::bench_harness::Report;
+use firefly::cli::Args;
+use firefly::prelude::*;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 4000);
+    let iters = args.get_usize("iters", 500);
+    let burnin = iters / 4;
+
+    // --- 1. q_{d->b} sweep (MAP-tuned FlyMC) --------------------------------
+    let mut rep = Report::new(
+        "Ablation: q_dark_to_bright sweep (MAP-tuned, MNIST-like)",
+        &["q_db", "queries/iter", "avg bright M", "ESS/1000", "ESS per 1k queries"],
+    );
+    for q in [0.001, 0.005, 0.01, 0.05, 0.1, 0.5] {
+        let cfg = ExperimentConfig {
+            task: Task::LogisticMnist,
+            algorithm: Algorithm::MapTunedFlyMc,
+            n_data: Some(n),
+            iters,
+            burnin,
+            q_dark_to_bright: Some(q),
+            record_every: 0,
+            map_steps: 200,
+            ..Default::default()
+        };
+        let row = run_experiment(&cfg).expect("run").table_row();
+        rep.row(&[
+            format!("{q}"),
+            format!("{:.1}", row.avg_lik_queries_per_iter),
+            format!("{:.1}", row.avg_bright),
+            format!("{:.2}", row.ess_per_1000),
+            format!("{:.3}", 1000.0 * row.efficiency()),
+        ]);
+    }
+    rep.print();
+    rep.write_csv("target/bench_ablation_qdb.csv").unwrap();
+
+    // --- 2. untuned xi sweep ------------------------------------------------
+    let mut rep = Report::new(
+        "Ablation: untuned JJ xi sweep (bound tightness vs bright fraction)",
+        &["xi", "queries/iter", "avg bright M", "M / N"],
+    );
+    for xi in [0.5, 1.0, 1.5, 2.5, 4.0] {
+        let cfg = ExperimentConfig {
+            task: Task::LogisticMnist,
+            algorithm: Algorithm::UntunedFlyMc,
+            n_data: Some(n),
+            iters,
+            burnin,
+            untuned_xi: xi,
+            record_every: 0,
+            ..Default::default()
+        };
+        let row = run_experiment(&cfg).expect("run").table_row();
+        rep.row(&[
+            format!("{xi}"),
+            format!("{:.1}", row.avg_lik_queries_per_iter),
+            format!("{:.1}", row.avg_bright),
+            format!("{:.3}", row.avg_bright / n as f64),
+        ]);
+    }
+    rep.print();
+    rep.write_csv("target/bench_ablation_xi.csv").unwrap();
+
+    // --- 3. explicit vs implicit z-resampling -------------------------------
+    let mut rep = Report::new(
+        "Ablation: explicit (Alg 1) vs implicit (Alg 2) z-resampling",
+        &["scheme", "param", "queries/iter", "ESS/1000", "ESS per 1k queries"],
+    );
+    for (explicit, param) in [
+        (false, 0.01),
+        (false, 0.1),
+        (true, 0.05),
+        (true, 0.1),
+        (true, 0.3),
+    ] {
+        let cfg = ExperimentConfig {
+            task: Task::LogisticMnist,
+            algorithm: Algorithm::MapTunedFlyMc,
+            n_data: Some(n),
+            iters,
+            burnin,
+            explicit_resample: explicit,
+            resample_fraction: param,
+            q_dark_to_bright: Some(param),
+            record_every: 0,
+            map_steps: 200,
+            ..Default::default()
+        };
+        let row = run_experiment(&cfg).expect("run").table_row();
+        rep.row(&[
+            (if explicit { "explicit" } else { "implicit" }).into(),
+            format!("{param}"),
+            format!("{:.1}", row.avg_lik_queries_per_iter),
+            format!("{:.2}", row.ess_per_1000),
+            format!("{:.3}", 1000.0 * row.efficiency()),
+        ]);
+    }
+    rep.print();
+    rep.write_csv("target/bench_ablation_resampling.csv").unwrap();
+
+    // --- 4. XLA bucket padding overhead -------------------------------------
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        use firefly::data::synth;
+        use firefly::metrics::Counters;
+        use firefly::models::LogisticJJ;
+        use firefly::runtime::{BatchEval, XlaBackend};
+        use std::sync::Arc;
+
+        let data = Arc::new(synth::synth_mnist(20_000, 50, 1));
+        let model = Arc::new(LogisticJJ::new(data, 1.5));
+        let counters = Counters::new();
+        let mut xla = XlaBackend::new(model.clone(), counters.clone(), "artifacts").unwrap();
+        let theta = vec![0.05; model.dim()];
+        let mut rep = Report::new(
+            "Ablation: XLA bucketed execution (padding + chunking overhead)",
+            &["batch", "bucket used", "padded lanes", "execs", "time/call (us)"],
+        );
+        for &bs in &[10usize, 200, 256, 1000, 2048, 5000, 20000] {
+            let idx: Vec<usize> = (0..bs).collect();
+            let (mut ll, mut lb) = (Vec::new(), Vec::new());
+            counters.reset();
+            let reps = 20;
+            let t = firefly::util::Timer::start();
+            for _ in 0..reps {
+                xla.eval(&theta, &idx, &mut ll, &mut lb);
+            }
+            let us = t.elapsed_secs() * 1e6 / reps as f64;
+            let padded = counters.padded_lanes() / reps;
+            let execs = counters.xla_executions() / reps;
+            let bucket = if bs <= 256 { 256 } else if bs <= 2048 { 2048 } else { 16384 };
+            rep.row(&[
+                bs.to_string(),
+                bucket.to_string(),
+                padded.to_string(),
+                execs.to_string(),
+                format!("{us:.1}"),
+            ]);
+        }
+        rep.print();
+        rep.write_csv("target/bench_ablation_buckets.csv").unwrap();
+    } else {
+        println!("(skipping XLA bucket ablation: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,63 @@
+//! Regenerates Fig 2 (headless form of examples/toy_trajectory.rs): FlyMC on
+//! the toy 2-d logistic problem, emitting the θ/z trajectories as CSV plus a
+//! one-iteration before/after snapshot of the z flips.
+//!
+//!     cargo bench --bench fig2_toy [-- --iters 80]
+
+use std::sync::Arc;
+
+use firefly::bench_harness::Report;
+use firefly::cli::Args;
+use firefly::data::synth;
+use firefly::metrics::Counters;
+use firefly::models::{IsoGaussian, LogisticJJ, ModelBound, Prior};
+use firefly::prelude::*;
+use firefly::runtime::CpuBackend;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 30);
+    let iters = args.get_usize("iters", 80);
+
+    let data = Arc::new(synth::synth_toy2d(n, 3));
+    let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data.clone(), 1.5));
+    let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 2.0 });
+    let eval = Box::new(CpuBackend::new(model.clone(), Counters::new()));
+    let mut rng = Rng::new(7);
+    let theta0 = prior.sample(3, &mut rng);
+    let mut pp = PseudoPosterior::new(model, prior, eval, theta0.clone());
+    pp.init_z(&mut rng);
+    let mut mh = RandomWalkMh::adaptive(0.3);
+    let mut theta = theta0;
+
+    // per-datum z trace CSV (the paper's bottom-right panel shows all z_n)
+    let mut headers: Vec<String> = vec!["iter".into(), "theta0".into(), "theta1".into(), "bias".into()];
+    headers.extend((0..n).map(|i| format!("z{i}")));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut rep = Report::new("Fig 2 trajectories", &hrefs);
+
+    let mut flips_at_snapshot = (0usize, 0usize);
+    for it in 0..iters {
+        mh.step(&mut pp, &mut theta, &mut rng);
+        let z = pp.implicit_resample(0.2, &mut rng);
+        if it == 3 {
+            // the paper's top panel: the t=3 -> t=4 transition
+            flips_at_snapshot = (z.brightened, z.darkened);
+        }
+        let mut row = vec![
+            it.to_string(),
+            format!("{:.5}", theta[0]),
+            format!("{:.5}", theta[1]),
+            format!("{:.5}", theta[2]),
+        ];
+        row.extend((0..n).map(|i| if pp.bright.is_bright(i) { "1".to_string() } else { "0".to_string() }));
+        rep.row(&row);
+    }
+    rep.write_csv("target/bench_fig2_toy.csv").unwrap();
+    println!("wrote target/bench_fig2_toy.csv ({iters} iterations, {n} data points)");
+    println!(
+        "t=3 -> t=4 transition: {} dark->bright, {} bright->dark (paper shows one bright point going dark)",
+        flips_at_snapshot.0, flips_at_snapshot.1
+    );
+    println!("final bright count: {} of {n}", pp.n_bright());
+}

@@ -1,0 +1,126 @@
+//! Regenerates Fig 4 (a, b, c): for each experiment, 5 replica runs of the
+//! three algorithms; emits the mean ± 1σ series of (top) the full-data log
+//! posterior and (bottom) likelihood queries per iteration.
+//!
+//!     cargo bench --bench fig4_traces [-- --runs 5 --iters 600 --panel a|b|c|all]
+//!
+//! CSV columns: iter, then per algorithm mean and std of both series.
+//! The paper's qualitative shape to look for: MAP-tuned FlyMC converges
+//! SLOWER during burn-in (bounds loose far from the mode) but runs at a tiny
+//! query budget after; untuned FlyMC is the reverse.
+
+use firefly::bench_harness::{ascii_plot, Report};
+use firefly::cli::Args;
+use firefly::prelude::*;
+use firefly::util::math;
+
+fn panel(task: Task, label: &str, n: usize, iters: usize, runs: usize, map_steps: usize) {
+    let algorithms =
+        [Algorithm::RegularMcmc, Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc];
+    // series[alg][run] = (logpost at recorded iters, queries per iter)
+    let mut logpost: Vec<Vec<Vec<f64>>> = vec![Vec::new(); 3];
+    let mut queries: Vec<Vec<Vec<f64>>> = vec![Vec::new(); 3];
+    let record_every = 5usize;
+
+    for run in 0..runs {
+        for (ai, alg) in algorithms.into_iter().enumerate() {
+            let cfg = ExperimentConfig {
+                task,
+                algorithm: alg,
+                n_data: Some(n),
+                iters,
+                burnin: iters / 4,
+                seed: 1000 + run as u64,
+                record_every,
+                map_steps,
+                prior_scale: None,
+                ..Default::default()
+            };
+            let res = run_experiment(&cfg).expect("run");
+            logpost[ai].push(res.chains[0].full_logpost.iter().map(|&(_, l)| l).collect());
+            queries[ai]
+                .push(res.chains[0].queries_per_iter.iter().map(|&q| q as f64).collect());
+        }
+    }
+
+    // aggregate mean/std over runs
+    let agg = |runs_data: &Vec<Vec<f64>>| -> (Vec<f64>, Vec<f64>) {
+        let len = runs_data.iter().map(|r| r.len()).min().unwrap_or(0);
+        let mut mean = vec![0.0; len];
+        let mut std = vec![0.0; len];
+        for i in 0..len {
+            let vals: Vec<f64> = runs_data.iter().map(|r| r[i]).collect();
+            mean[i] = math::mean(&vals);
+            std[i] = if vals.len() > 1 { math::variance(&vals).sqrt() } else { 0.0 };
+        }
+        (mean, std)
+    };
+
+    let names = ["regular", "untuned", "maptuned"];
+    let mut rep = Report::new(
+        &format!("Fig 4{label} series"),
+        &[
+            "iter",
+            "regular_logpost_mean", "regular_logpost_std",
+            "untuned_logpost_mean", "untuned_logpost_std",
+            "maptuned_logpost_mean", "maptuned_logpost_std",
+            "regular_q_mean", "untuned_q_mean", "maptuned_q_mean",
+        ],
+    );
+    let lp: Vec<(Vec<f64>, Vec<f64>)> = logpost.iter().map(agg).collect();
+    let qq: Vec<(Vec<f64>, Vec<f64>)> = queries.iter().map(agg).collect();
+    let npoints = lp.iter().map(|(m, _)| m.len()).min().unwrap();
+    for i in 0..npoints {
+        let qi = (i * record_every).min(qq[0].0.len().saturating_sub(1));
+        rep.row(&[
+            (i * record_every).to_string(),
+            format!("{:.3}", lp[0].0[i]), format!("{:.3}", lp[0].1[i]),
+            format!("{:.3}", lp[1].0[i]), format!("{:.3}", lp[1].1[i]),
+            format!("{:.3}", lp[2].0[i]), format!("{:.3}", lp[2].1[i]),
+            format!("{:.1}", qq[0].0[qi]), format!("{:.1}", qq[1].0[qi]), format!("{:.1}", qq[2].0[qi]),
+        ]);
+    }
+    let path = format!("target/bench_fig4{label}.csv");
+    rep.write_csv(&path).unwrap();
+    println!("wrote {path}");
+
+    let series: Vec<(&str, &[f64])> = names
+        .iter()
+        .zip(&lp)
+        .map(|(n, (m, _))| (*n, m.as_slice()))
+        .collect();
+    ascii_plot(
+        &format!("Fig 4{label} top: full-data log posterior (mean of {runs} runs)"),
+        &series,
+        72,
+        12,
+    );
+    let qseries: Vec<(&str, &[f64])> = names
+        .iter()
+        .zip(&qq)
+        .map(|(n, (m, _))| (*n, m.as_slice()))
+        .collect();
+    ascii_plot(
+        &format!("Fig 4{label} bottom: likelihood queries per iteration"),
+        &qseries,
+        72,
+        12,
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let runs = args.get_usize("runs", 3);
+    let iters = args.get_usize("iters", 600);
+    let which = args.get_str("panel", "all");
+
+    if which == "a" || which == "all" {
+        panel(Task::LogisticMnist, "a", args.get_usize("n", 12_214), iters, runs, 400);
+    }
+    if which == "b" || which == "all" {
+        panel(Task::SoftmaxCifar, "b", args.get_usize("n-cifar", 9_000), iters.min(300), runs, 400);
+    }
+    if which == "c" || which == "all" {
+        panel(Task::RobustOpv, "c", args.get_usize("n-opv", 30_000), iters.min(250), runs, 500);
+    }
+}

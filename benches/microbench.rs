@@ -1,0 +1,128 @@
+//! Hot-path microbenchmarks (§Perf instrumentation): per-datum CPU
+//! evaluation, collapsed bound product, BrightSet ops, the implicit
+//! z-resampling sweep, and XLA execution per bucket. These are the numbers
+//! the EXPERIMENTS.md §Perf before/after table tracks.
+//!
+//!     cargo bench --bench microbench
+
+use std::sync::Arc;
+
+use firefly::bench_harness::Bench;
+use firefly::data::synth;
+use firefly::flymc::{BrightSet, PseudoPosterior};
+use firefly::metrics::Counters;
+use firefly::models::{IsoGaussian, LogisticJJ, ModelBound, Prior, RobustT, SoftmaxBohning};
+use firefly::prelude::*;
+use firefly::runtime::{BatchEval, CpuBackend};
+
+fn main() {
+    let mut rng = Rng::new(1);
+
+    // --- per-datum fused eval (logistic d=51), batch of 256 ------------------
+    let data = Arc::new(synth::synth_mnist(20_000, 50, 1));
+    let logi: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
+    let mut cpu = CpuBackend::new(logi.clone(), Counters::new());
+    let theta: Vec<f64> = (0..logi.dim()).map(|_| rng.normal() * 0.3).collect();
+    let idx: Vec<usize> = (0..256).collect();
+    let (mut ll, mut lb) = (Vec::new(), Vec::new());
+    Bench::new("cpu eval 256x logistic d51 (ll+lb)")
+        .samples(30)
+        .iters_per_sample(50)
+        .run(|| {
+            cpu.eval(&theta, &idx, &mut ll, &mut lb);
+            std::hint::black_box(&ll);
+        });
+    let mut grad = vec![0.0; logi.dim()];
+    Bench::new("cpu eval 256x logistic d51 (+pseudo grad)")
+        .samples(30)
+        .iters_per_sample(50)
+        .run(|| {
+            grad.fill(0.0);
+            cpu.eval_pseudo_grad(&theta, &idx, &mut ll, &mut lb, &mut grad);
+            std::hint::black_box(&grad);
+        });
+
+    // --- softmax + robust per-datum eval -------------------------------------
+    let sdata = Arc::new(synth::synth_cifar3(5000, 256, 2));
+    let soft: Arc<dyn ModelBound> = Arc::new(SoftmaxBohning::new(sdata));
+    let mut scpu = CpuBackend::new(soft.clone(), Counters::new());
+    let stheta: Vec<f64> = (0..soft.dim()).map(|_| rng.normal() * 0.1).collect();
+    Bench::new("cpu eval 256x softmax k3 d256 (ll+lb)")
+        .samples(20)
+        .iters_per_sample(20)
+        .run(|| {
+            scpu.eval(&stheta, &idx, &mut ll, &mut lb);
+            std::hint::black_box(&ll);
+        });
+
+    let rdata = Arc::new(synth::synth_opv(20_000, 57, 3));
+    let rob: Arc<dyn ModelBound> = Arc::new(RobustT::new(rdata, 4.0, 0.5));
+    let mut rcpu = CpuBackend::new(rob.clone(), Counters::new());
+    let rtheta: Vec<f64> = (0..rob.dim()).map(|_| rng.normal() * 0.3).collect();
+    Bench::new("cpu eval 256x robust d57 (ll+lb)")
+        .samples(30)
+        .iters_per_sample(50)
+        .run(|| {
+            rcpu.eval(&rtheta, &idx, &mut ll, &mut lb);
+            std::hint::black_box(&ll);
+        });
+
+    // --- collapsed bound product (the O(D^2) pseudo-prior step) --------------
+    Bench::new("collapsed bound product logistic d51")
+        .samples(30)
+        .iters_per_sample(2000)
+        .run(|| {
+            std::hint::black_box(logi.log_bound_product(&theta));
+        });
+    Bench::new("collapsed bound product softmax k3 d256")
+        .samples(20)
+        .iters_per_sample(200)
+        .run(|| {
+            std::hint::black_box(soft.log_bound_product(&stheta));
+        });
+
+    // --- BrightSet ops --------------------------------------------------------
+    let mut bs = BrightSet::new(1_000_000);
+    let ops: Vec<usize> = (0..10_000).map(|_| rng.below(1_000_000)).collect();
+    Bench::new("BrightSet 10k brighten/darken pairs (N=1M)")
+        .samples(20)
+        .iters_per_sample(10)
+        .run(|| {
+            for &n in &ops {
+                bs.brighten(n);
+            }
+            for &n in &ops {
+                bs.darken(n);
+            }
+        });
+
+    // --- implicit resampling sweep -------------------------------------------
+    let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 1.0 });
+    let eval = Box::new(CpuBackend::new(logi.clone(), Counters::new()));
+    let mut pp = PseudoPosterior::new(logi.clone(), prior, eval, theta.clone());
+    let mut zrng = Rng::new(9);
+    pp.init_z(&mut zrng);
+    Bench::new("implicit z-resample sweep (N=20k, q=0.01)")
+        .samples(20)
+        .iters_per_sample(20)
+        .run(|| {
+            std::hint::black_box(pp.implicit_resample(0.01, &mut zrng));
+        });
+
+    // --- XLA execution per bucket ---------------------------------------------
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        use firefly::runtime::XlaBackend;
+        let data = Arc::new(synth::synth_mnist(20_000, 50, 1));
+        let model = Arc::new(LogisticJJ::new(data, 1.5));
+        let mut xla = XlaBackend::new(model.clone(), Counters::new(), "artifacts").unwrap();
+        for bs in [256usize, 2048] {
+            let idx: Vec<usize> = (0..bs).collect();
+            let name = format!("xla exec logistic d51 bucket {bs}");
+            let (mut ll2, mut lb2) = (Vec::new(), Vec::new());
+            Bench::new(&name).samples(20).iters_per_sample(10).run(|| {
+                xla.eval(&theta, &idx, &mut ll2, &mut lb2);
+                std::hint::black_box(&ll2);
+            });
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Regenerates Table 1, rows 1–3 (MNIST / logistic regression / MH).
+//!
+//!     cargo bench --bench table1_logistic [-- --iters 2000 --chains 3]
+//!
+//! Paper reference (absolute numbers are testbed-specific; the SHAPE to
+//! reproduce is: untuned ≈ N/2 queries and ~0.7x speedup; MAP-tuned ≈ 1-2%
+//! of N queries and >~20x speedup):
+//!   Regular MCMC    12,214 q/iter   3.7 ESS/1k   (1)
+//!   Untuned FlyMC    6,252 q/iter   1.3 ESS/1k   0.7
+//!   MAP-tuned FlyMC    207 q/iter   1.4 ESS/1k   22
+
+use firefly::bench_harness::Report;
+use firefly::cli::Args;
+use firefly::prelude::*;
+
+fn main() {
+    let args = Args::from_env();
+    let base = ExperimentConfig {
+        task: Task::LogisticMnist,
+        n_data: Some(args.get_usize("n", 12_214)),
+        iters: args.get_usize("iters", 1500),
+        burnin: args.get_usize("burnin", 400),
+        chains: args.get_usize("chains", 1),
+        seed: args.get_u64("seed", 0),
+        record_every: 0,
+        ..Default::default()
+    };
+    let mut report = Report::new(
+        "Table 1 rows 1-3: MNIST / logistic regression / Metropolis-Hastings",
+        &["Algorithm", "Avg lik queries/iter", "ESS/1000 iters", "Speedup", "paper q/iter", "paper speedup"],
+    );
+    let paper = [("12214", "(1)"), ("6252", "0.7"), ("207", "22")];
+    let mut regular: Option<TableRow> = None;
+    for (i, alg) in [Algorithm::RegularMcmc, Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc]
+        .into_iter()
+        .enumerate()
+    {
+        let mut cfg = base.clone();
+        cfg.algorithm = alg;
+        let res = run_experiment(&cfg).expect("run");
+        let row = res.table_row();
+        let speedup = match &regular {
+            None => {
+                regular = Some(row.clone());
+                "(1)".into()
+            }
+            Some(r) => format!("{:.1}", row.speedup_vs(r)),
+        };
+        report.row(&[
+            row.algorithm.clone(),
+            format!("{:.0}", row.avg_lik_queries_per_iter),
+            format!("{:.2}", row.ess_per_1000),
+            speedup,
+            paper[i].0.into(),
+            paper[i].1.into(),
+        ]);
+    }
+    report.print();
+    report.write_csv("target/bench_table1_logistic.csv").unwrap();
+    println!("wrote target/bench_table1_logistic.csv");
+}

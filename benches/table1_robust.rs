@@ -1,0 +1,72 @@
+//! Regenerates Table 1, rows 7–9 (OPV / robust regression / slice sampling).
+//!
+//!     cargo bench --bench table1_robust [-- --n 200000 --iters 400]
+//!
+//! The paper uses N = 1.8M molecules; the default here simulates at 200k
+//! (the N/M speedup ratio is scale-free — pass --n 1800000 for full scale).
+//! Paper reference (shape: regular ≈ 10 N queries/iter because slice
+//! sampling evaluates several times per update; untuned ≈ 1.5 N, ~5.7x;
+//! MAP-tuned ≈ 0.3 N, ~29x):
+//!   Regular MCMC    18,182,764 q/iter   1.3 ESS/1k   (1)
+//!   Untuned FlyMC    2,753,428 q/iter   1.1 ESS/1k   5.7
+//!   MAP-tuned FlyMC    575,528 q/iter   1.2 ESS/1k   29
+
+use firefly::bench_harness::Report;
+use firefly::cli::Args;
+use firefly::prelude::*;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 100_000);
+    let base = ExperimentConfig {
+        task: Task::RobustOpv,
+        n_data: Some(n),
+        iters: args.get_usize("iters", 2000),
+        burnin: args.get_usize("burnin", 1000),
+        chains: args.get_usize("chains", 1),
+        seed: args.get_u64("seed", 0),
+        record_every: 0,
+        map_steps: args.get_usize("map-steps", 800),
+        prior_scale: Some(0.5),
+        ..Default::default()
+    };
+    let mut report = Report::new(
+        &format!("Table 1 rows 7-9: OPV / robust regression / slice sampling (N={n})"),
+        &["Algorithm", "Avg lik queries/iter", "q/iter / N", "ESS/1000 iters", "Speedup", "paper q/N", "paper speedup"],
+    );
+    // paper ratios: 18.18M/1.8M = 10.1, 2.75M/1.8M = 1.53, 0.576M/1.8M = 0.32
+    let paper = [("10.1", "(1)"), ("1.53", "5.7"), ("0.32", "29")];
+    let mut regular: Option<TableRow> = None;
+    for (i, alg) in [Algorithm::RegularMcmc, Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc]
+        .into_iter()
+        .enumerate()
+    {
+        let mut cfg = base.clone();
+        cfg.algorithm = alg;
+        if alg == Algorithm::RegularMcmc {
+            cfg.iters = cfg.iters.min(args.get_usize("regular-iters", 300));
+            cfg.burnin = cfg.iters / 3;
+        }
+        let res = run_experiment(&cfg).expect("run");
+        let row = res.table_row();
+        let speedup = match &regular {
+            None => {
+                regular = Some(row.clone());
+                "(1)".into()
+            }
+            Some(r) => format!("{:.1}", row.speedup_vs(r)),
+        };
+        report.row(&[
+            row.algorithm.clone(),
+            format!("{:.0}", row.avg_lik_queries_per_iter),
+            format!("{:.2}", row.avg_lik_queries_per_iter / n as f64),
+            format!("{:.2}", row.ess_per_1000),
+            speedup,
+            paper[i].0.into(),
+            paper[i].1.into(),
+        ]);
+    }
+    report.print();
+    report.write_csv("target/bench_table1_robust.csv").unwrap();
+    println!("wrote target/bench_table1_robust.csv");
+}

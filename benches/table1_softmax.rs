@@ -1,0 +1,61 @@
+//! Regenerates Table 1, rows 4–6 (3-class CIFAR-10 / softmax / Langevin).
+//!
+//!     cargo bench --bench table1_softmax [-- --iters 800]
+//!
+//! Paper reference (shape: untuned ≈ 0.45 N queries, ~1.2x; MAP-tuned ≈ 3-4%
+//! of N, ~11x):
+//!   Regular MCMC    18,000 q/iter   8.0 ESS/1k   (1)
+//!   Untuned FlyMC    8,058 q/iter   4.2 ESS/1k   1.2
+//!   MAP-tuned FlyMC    654 q/iter   3.3 ESS/1k   11
+
+use firefly::bench_harness::Report;
+use firefly::cli::Args;
+use firefly::prelude::*;
+
+fn main() {
+    let args = Args::from_env();
+    let base = ExperimentConfig {
+        task: Task::SoftmaxCifar,
+        n_data: Some(args.get_usize("n", 18_000)),
+        iters: args.get_usize("iters", 1500),
+        burnin: args.get_usize("burnin", 600),
+        chains: args.get_usize("chains", 1),
+        seed: args.get_u64("seed", 0),
+        record_every: 0,
+        map_steps: args.get_usize("map-steps", 600),
+        ..Default::default()
+    };
+    let mut report = Report::new(
+        "Table 1 rows 4-6: 3-Class CIFAR-10 / softmax / Langevin (MALA)",
+        &["Algorithm", "Avg lik queries/iter", "ESS/1000 iters", "Speedup", "paper q/iter", "paper speedup"],
+    );
+    let paper = [("18000", "(1)"), ("8058", "1.2"), ("654", "11")];
+    let mut regular: Option<TableRow> = None;
+    for (i, alg) in [Algorithm::RegularMcmc, Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc]
+        .into_iter()
+        .enumerate()
+    {
+        let mut cfg = base.clone();
+        cfg.algorithm = alg;
+        let res = run_experiment(&cfg).expect("run");
+        let row = res.table_row();
+        let speedup = match &regular {
+            None => {
+                regular = Some(row.clone());
+                "(1)".into()
+            }
+            Some(r) => format!("{:.1}", row.speedup_vs(r)),
+        };
+        report.row(&[
+            row.algorithm.clone(),
+            format!("{:.0}", row.avg_lik_queries_per_iter),
+            format!("{:.2}", row.ess_per_1000),
+            speedup,
+            paper[i].0.into(),
+            paper[i].1.into(),
+        ]);
+    }
+    report.print();
+    report.write_csv("target/bench_table1_softmax.csv").unwrap();
+    println!("wrote target/bench_table1_softmax.csv");
+}

@@ -1,0 +1,48 @@
+//! Quickstart: FlyMC vs regular MCMC on a small logistic-regression problem,
+//! in ~30 lines of library usage.
+//!
+//!     cargo run --release --example quickstart [-- --n 2000 --iters 1500]
+
+use firefly::cli::Args;
+use firefly::prelude::*;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 2000);
+    let iters = args.get_usize("iters", 1500);
+
+    println!("FlyMC quickstart: logistic regression, N={n}, {iters} iterations\n");
+
+    let mut regular_eff = 0.0;
+    for algorithm in [Algorithm::RegularMcmc, Algorithm::MapTunedFlyMc] {
+        let cfg = ExperimentConfig {
+            task: Task::LogisticMnist,
+            algorithm,
+            n_data: Some(n),
+            iters,
+            burnin: iters / 4,
+            record_every: 0,
+            ..Default::default()
+        };
+        let result = run_experiment(&cfg).expect("experiment");
+        let row = result.table_row();
+        println!(
+            "{:<18} lik queries/iter: {:>9.1}   ESS/1000 iters: {:>6.2}",
+            row.algorithm, row.avg_lik_queries_per_iter, row.ess_per_1000
+        );
+        if algorithm == Algorithm::RegularMcmc {
+            regular_eff = row.efficiency();
+        } else {
+            println!(
+                "\nFlyMC speedup (ESS per likelihood evaluation): {:.1}x",
+                row.efficiency() / regular_eff
+            );
+            println!(
+                "average bright points: {:.1} of {} ({:.1}%)",
+                row.avg_bright,
+                n,
+                100.0 * row.avg_bright / n as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Paper experiment §4.2: softmax classification on the 3-class CIFAR-10-like
+//! task (N=18,000, 256 binary features), Langevin-adjusted Metropolis (MALA)
+//! tuned to ~0.574 acceptance, Böhning bound — Table 1 rows 4–6 / Fig 4b.
+//!
+//!     cargo run --release --example softmax_cifar -- \
+//!         [--iters 1500] [--burnin 400] [--backend xla] [--n 18000]
+
+use firefly::bench_harness::{ascii_plot, Report};
+use firefly::cli::Args;
+use firefly::prelude::*;
+
+fn main() {
+    let args = Args::from_env();
+    let base = ExperimentConfig {
+        task: Task::SoftmaxCifar,
+        n_data: Some(args.get_usize("n", 18_000)),
+        iters: args.get_usize("iters", 2500),
+        burnin: args.get_usize("burnin", 1000),
+        chains: args.get_usize("chains", 1),
+        backend: if args.get_str("backend", "cpu") == "xla" { Backend::Xla } else { Backend::Cpu },
+        seed: args.get_u64("seed", 0),
+        record_every: args.get_usize("record-every", 10),
+        map_steps: args.get_usize("map-steps", 600),
+        ..Default::default()
+    };
+    println!(
+        "CIFAR-3-like softmax classification: N={}, K=3, D=256, iters={}, backend={:?}",
+        base.n_data.unwrap(),
+        base.iters,
+        base.backend
+    );
+
+    let mut report = Report::new(
+        "Table 1 (3-Class CIFAR-10 / softmax / Langevin)",
+        &["Algorithm", "Avg lik queries/iter", "ESS per 1000 iters", "Speedup"],
+    );
+    let mut regular: Option<TableRow> = None;
+    let mut traces: Vec<(String, Vec<f64>)> = Vec::new();
+
+    for algorithm in [Algorithm::RegularMcmc, Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc] {
+        let mut cfg = base.clone();
+        cfg.algorithm = algorithm;
+        let result = run_experiment(&cfg).expect("experiment failed");
+        let row = result.table_row();
+        let speedup = match &regular {
+            None => {
+                regular = Some(row.clone());
+                "(1)".to_string()
+            }
+            Some(reg) => format!("{:.1}", row.speedup_vs(reg)),
+        };
+        println!(
+            "  {:<18} queries/iter {:>9.1}  M {:>8.1}  ESS/1k {:>6.2}  wallclock {:>6.2}s",
+            row.algorithm,
+            row.avg_lik_queries_per_iter,
+            row.avg_bright,
+            row.ess_per_1000,
+            row.wallclock_secs,
+        );
+        report.row(&[
+            row.algorithm.clone(),
+            format!("{:.0}", row.avg_lik_queries_per_iter),
+            format!("{:.2}", row.ess_per_1000),
+            speedup,
+        ]);
+        traces.push((
+            row.algorithm.clone(),
+            result.chains[0].full_logpost.iter().map(|&(_, l)| l).collect(),
+        ));
+    }
+    report.print();
+
+    let series: Vec<(&str, &[f64])> =
+        traces.iter().map(|(n, s)| (n.as_str(), s.as_slice())).collect();
+    ascii_plot("Fig 4b (top): full-data log posterior vs iteration", &series, 72, 14);
+}

@@ -1,0 +1,126 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); Python never runs on the sampling
+path.  For every (model, batch-bucket) pair in SPECS we jit-lower the L2
+evaluation graph and write
+
+    artifacts/<name>.hlo.txt      one HLO module, fixed shapes
+    artifacts/manifest.txt        one line per artifact (key=value fields)
+
+HLO text — NOT `lowered.compiler_ir().serialize()` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Batch buckets: the Rust runtime pads a variable-size bright set up to the
+smallest bucket (chunking through the largest for full-data baselines), so a
+handful of fixed shapes serves every bright count.
+
+The robust artifact bakes nu=4 (paper's value) and sigma=1; the Rust runtime
+reaches any sigma by feeding (x/sigma, y/sigma, u0/sigma^2) and shifting the
+returned log-densities by -log(sigma) (exact — see runtime/backend.rs).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402
+
+F = jnp.float64
+
+# (name, builder, example-arg shapes) — one artifact per entry.
+BUCKETS = (256, 2048, 16384)
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F)
+
+
+def logistic_args(d, b):
+    return [_spec((d,)), _spec((b, d)), _spec((b,)), _spec((b,)), _spec((b,))]
+
+
+def softmax_args(k, d, b):
+    return [_spec((k, d)), _spec((b, d)), _spec((b, k)), _spec((b, k)), _spec((b,))]
+
+
+def robust_args(d, b):
+    return [_spec((d,)), _spec((b, d)), _spec((b,)), _spec((b,)), _spec((b,))]
+
+
+def build_specs():
+    specs = []
+    for b in BUCKETS:
+        specs.append((f"logistic.d51.b{b}", "logistic", 51, 1, b, model.logistic_eval, logistic_args(51, b)))
+    specs.append(("logistic.d3.b256", "logistic", 3, 1, 256, model.logistic_eval, logistic_args(3, 256)))
+    for b in BUCKETS:
+        specs.append(
+            (
+                f"softmax.k3.d256.b{b}",
+                "softmax",
+                256,
+                3,
+                b,
+                model.softmax_eval,
+                softmax_args(3, 256, b),
+            )
+        )
+    for b in BUCKETS:
+        specs.append(
+            (
+                f"robust.d57.b{b}",
+                "robust",
+                57,
+                1,
+                b,
+                functools.partial(model.robust_eval, nu=4.0, sigma=1.0),
+                robust_args(57, b),
+            )
+        )
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation (return_tuple=True) -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for name, kind, d, k, bucket, fn, arg_specs in build_specs():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"name={name} kind={kind} d={d} k={k} bucket={bucket} path={fname}"
+        )
+        print(f"wrote {fname}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest.txt ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: fused logistic log-likelihood + Jaakkola–Jordan bound.
+
+This is FlyMC's hot spot for the MNIST experiment: for a (padded) batch of
+bright data points, compute in one pass over the feature block
+
+    s_n  = t_n * (x_n @ theta)           -- MXU/VPU dot product
+    llik = log sigmoid(s_n)              -- VPU elementwise
+    lbnd = a(xi_n) s_n^2 + s_n/2 + c(xi_n)
+
+so the coordinator gets both the likelihood and the bound for the price of a
+single HBM->VMEM pass over the bright rows.  BlockSpec tiles the batch in
+blocks of `block_b` rows; theta is broadcast to every block.
+
+interpret=True: the CPU PJRT plugin cannot run Mosaic custom-calls; interpret
+mode lowers to plain HLO so the same artifact runs under the Rust runtime.
+TPU considerations (VMEM footprint, MXU usage) are discussed in
+DESIGN.md §Hardware-adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _kernel(theta_ref, x_ref, t_ref, xi_ref, mask_ref, ll_ref, lb_ref):
+    theta = theta_ref[...]  # [D]
+    x = x_ref[...]  # [Bb, D]
+    t = t_ref[...]  # [Bb]
+    xi = xi_ref[...]  # [Bb]
+    mask = mask_ref[...]  # [Bb]
+
+    s = t * (x @ theta)  # [Bb]
+    ll = -jnp.logaddexp(0.0, -s)
+
+    axi = jnp.abs(xi)
+    safe = jnp.maximum(axi, 1e-10)
+    a = jnp.where(axi < 1e-6, -0.125 + axi**2 / 96.0, -jnp.tanh(safe / 2.0) / (4.0 * safe))
+    c = -a * axi**2 + axi / 2.0 - jnp.logaddexp(0.0, axi)
+    lb = a * s * s + 0.5 * s + c
+    # The bound is tight at s = +/-xi; floating-point can land an epsilon
+    # above the likelihood there, which would make log(L-B) NaN downstream.
+    lb = jnp.minimum(lb, ll)
+
+    ll_ref[...] = ll * mask
+    lb_ref[...] = lb * mask
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def eval_batch(theta, x, t, xi, mask, *, block_b=DEFAULT_BLOCK_B):
+    """Fused (log L_n, log B_n) over a padded batch.
+
+    theta: [D] f64; x: [B, D]; t, xi, mask: [B].  B must be a multiple of
+    block_b.  Masked-out lanes yield 0 in both outputs.
+    Returns (loglik [B], logbound [B]).
+    """
+    b, d = x.shape
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    spec_rows = pl.BlockSpec((block_b, d), lambda i: (i, 0))
+    spec_vec = pl.BlockSpec((block_b,), lambda i: (i,))
+    spec_theta = pl.BlockSpec((d,), lambda i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct((b,), theta.dtype),
+        jax.ShapeDtypeStruct((b,), theta.dtype),
+    ]
+    return tuple(
+        pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[spec_theta, spec_rows, spec_vec, spec_vec, spec_vec],
+            out_specs=[spec_vec, spec_vec],
+            out_shape=out_shape,
+            interpret=True,
+        )(theta, x, t, xi, mask)
+    )

@@ -1,0 +1,193 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness signal).
+
+Every function here is the straightforward, unfused jnp implementation of the
+per-datum log-likelihoods and collapsible log-lower-bounds used by Firefly
+Monte Carlo (Maclaurin & Adams, 2015):
+
+- logistic regression likelihood + Jaakkola–Jordan (1997) scaled-Gaussian bound
+- softmax classification likelihood + Böhning (1992) quadratic bound
+- student-t robust regression likelihood + tangent (value+gradient matching)
+  scaled-Gaussian bound
+
+The Pallas kernels in this package must match these to float64 tolerance
+(pytest in python/tests/test_kernels.py), and the Rust CpuBackend re-implements
+the same math (cross-checked through the HLO artifacts in rust integration
+tests).
+"""
+
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+# ---------------------------------------------------------------------------
+# Logistic regression + Jaakkola–Jordan bound
+# ---------------------------------------------------------------------------
+
+
+def logistic_loglik(theta, x, t):
+    """Per-datum log L_n(theta) = log sigmoid(t_n * theta @ x_n).
+
+    theta: [D], x: [B, D], t: [B] in {-1, +1}.  Returns [B].
+    """
+    s = t * (x @ theta)
+    # log sigmoid(s) = -softplus(-s)
+    return -jnp.logaddexp(0.0, -s)
+
+
+def jj_coeffs(xi):
+    """Jaakkola–Jordan coefficients (a, b, c) for log B(s) = a s^2 + b s + c.
+
+    a = -tanh(xi/2) / (4 xi)  (even in xi; limit -1/8 at xi=0)
+    b = 1/2
+    c = -a xi^2 + xi/2 - log(e^xi + 1)   (tight at s = +/- xi)
+    """
+    axi = jnp.abs(xi)
+    safe = jnp.maximum(axi, 1e-10)
+    a = jnp.where(axi < 1e-6, -0.125 + axi**2 / 96.0, -jnp.tanh(safe / 2.0) / (4.0 * safe))
+    b = 0.5
+    c = -a * axi**2 + axi / 2.0 - jnp.logaddexp(0.0, axi)
+    return a, b, c
+
+
+def jj_logbound(theta, x, t, xi):
+    """Per-datum log B_n(theta) under the JJ bound with per-datum xi. [B]."""
+    s = t * (x @ theta)
+    a, b, c = jj_coeffs(xi)
+    return a * s**2 + b * s + c
+
+
+# ---------------------------------------------------------------------------
+# Softmax classification + Böhning bound
+# ---------------------------------------------------------------------------
+
+
+def jax_logsumexp(eta):
+    m = jnp.max(eta, axis=1)
+    return m + jnp.log(jnp.sum(jnp.exp(eta - m[:, None]), axis=1))
+
+
+def softmax_loglik(theta, x, t):
+    """Per-datum log L_n = eta_{t_n} - logsumexp(eta), eta = theta @ x_n.
+
+    theta: [K, D], x: [B, D], t: [B] int in [0, K).  Returns [B].
+    """
+    eta = x @ theta.T  # [B, K]
+    k = theta.shape[0]
+    onehot = jnp.arange(k)[None, :] == t[:, None]
+    picked = jnp.sum(jnp.where(onehot, eta, 0.0), axis=1)
+    return picked - jax_logsumexp(eta)
+
+
+def bohning_logbound(theta, x, t, psi):
+    """Per-datum Böhning (1992) quadratic lower bound on the softmax log-lik.
+
+    f(eta) = eta_t - lse(eta) satisfies, for A = 1/2 (I - 11^T/K):
+      f(eta) >= f(psi) + g(psi)^T (eta - psi) - 1/2 (eta-psi)^T A (eta-psi)
+    with g(psi) = onehot(t) - softmax(psi).  Tight at eta = psi.
+
+    theta: [K, D], x: [B, D], t: [B], psi: [B, K] anchor logits.  Returns [B].
+    """
+    eta = x @ theta.T  # [B, K]
+    k = theta.shape[0]
+    onehot = (jnp.arange(k)[None, :] == t[:, None]).astype(eta.dtype)
+    f_psi = jnp.sum(onehot * psi, axis=1) - jax_logsumexp(psi)
+    g = onehot - jnp.exp(psi - jax_logsumexp(psi)[:, None])
+    d = eta - psi
+    quad = 0.5 * (jnp.sum(d * d, axis=1) - jnp.sum(d, axis=1) ** 2 / k)
+    return f_psi + jnp.sum(g * d, axis=1) - 0.5 * quad
+
+
+# ---------------------------------------------------------------------------
+# Robust (student-t) regression + tangent Gaussian bound
+# ---------------------------------------------------------------------------
+
+
+def t_logconst(nu, sigma):
+    return (
+        gammaln((nu + 1.0) / 2.0)
+        - gammaln(nu / 2.0)
+        - 0.5 * jnp.log(nu * jnp.pi * sigma**2)
+    )
+
+
+def t_loglik(theta, x, y, nu, sigma):
+    """Per-datum student-t log density of residual r = y - x @ theta. [B]."""
+    r = y - x @ theta
+    u = r * r
+    return t_logconst(nu, sigma) - (nu + 1.0) / 2.0 * jnp.log1p(u / (nu * sigma**2))
+
+
+def t_logbound(theta, x, y, u0, nu, sigma):
+    """Tangent lower bound of the t log-density in u = r^2 at u = u0.
+
+    f(u) = C - (nu+1)/2 log(1 + u/(nu sigma^2)) is convex in u, so the tangent
+    line at u0 is a global lower bound; as a function of r it is a scaled
+    Gaussian: log B = f(u0) + f'(u0) (r^2 - u0).  Tight at r^2 = u0.
+    """
+    r = y - x @ theta
+    u = r * r
+    c2 = nu * sigma**2
+    f0 = t_logconst(nu, sigma) - (nu + 1.0) / 2.0 * jnp.log1p(u0 / c2)
+    fp0 = -(nu + 1.0) / 2.0 / (c2 + u0)
+    return f0 + fp0 * (u - u0)
+
+
+# ---------------------------------------------------------------------------
+# Pseudo-likelihood gradients (closed forms used by the L2 graphs)
+# ---------------------------------------------------------------------------
+
+
+def _bright_coeff(dll, dlb, delta):
+    """d/ds [log(L - B) - log B] given dlogL/ds, dlogB/ds and delta=logB-logL.
+
+    (L' - B')/(L - B) - B'/B with everything in log space:
+      = (dll - e^delta dlb) / (1 - e^delta) - dlb
+    delta <= 0; clamp away from 0 (a bright point exactly at the tangent has
+    probability ~0, but padding lanes can hit it).
+    """
+    ed = jnp.exp(jnp.minimum(delta, -1e-12))
+    return (dll - ed * dlb) / (1.0 - ed) - dlb
+
+
+def logistic_pseudo_grad(theta, x, t, xi, mask):
+    """grad_theta sum_n mask_n [log(L_n - B_n) - log B_n].  Returns [D]."""
+    s = t * (x @ theta)
+    ll = -jnp.logaddexp(0.0, -s)
+    a, b, _ = jj_coeffs(xi)
+    lb = jj_logbound(theta, x, t, xi)
+    dll = 1.0 / (1.0 + jnp.exp(s))  # sigmoid(-s)
+    dlb = 2.0 * a * s + b
+    coeff = _bright_coeff(dll, dlb, lb - ll) * t * mask
+    return x.T @ coeff
+
+
+def softmax_pseudo_grad(theta, x, t, psi, mask):
+    """grad_Theta sum_n mask_n [log(L_n - B_n) - log B_n].  Returns [K, D]."""
+    eta = x @ theta.T
+    k = theta.shape[0]
+    onehot = (jnp.arange(k)[None, :] == t[:, None]).astype(eta.dtype)
+    ll = softmax_loglik(theta, x, t)
+    lb = bohning_logbound(theta, x, t, psi)
+    soft = jnp.exp(eta - jax_logsumexp(eta)[:, None])
+    dll = onehot - soft  # [B, K]
+    g = onehot - jnp.exp(psi - jax_logsumexp(psi)[:, None])
+    d = eta - psi
+    # dlb/deta = g - A d, A = 1/2 (I - 11^T/K)
+    dlb = g - 0.5 * (d - jnp.sum(d, axis=1, keepdims=True) / k)
+    delta = (lb - ll)[:, None]
+    ed = jnp.exp(jnp.minimum(delta, -1e-12))
+    coeff = ((dll - ed * dlb) / (1.0 - ed) - dlb) * mask[:, None]  # [B, K]
+    return coeff.T @ x
+
+
+def t_pseudo_grad(theta, x, y, u0, nu, sigma, mask):
+    """grad_theta sum_n mask_n [log(L_n - B_n) - log B_n].  Returns [D]."""
+    r = y - x @ theta
+    u = r * r
+    c2 = nu * sigma**2
+    ll = t_loglik(theta, x, y, nu, sigma)
+    lb = t_logbound(theta, x, y, u0, nu, sigma)
+    # d/dr of each log term, then chain through dr/dtheta = -x
+    dll = -(nu + 1.0) * r / (c2 + u)
+    dlb = -(nu + 1.0) * r / (c2 + u0)
+    coeff = _bright_coeff(dll, dlb, lb - ll) * mask
+    return -(x.T @ coeff)

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: fused student-t log-likelihood + tangent Gaussian bound.
+
+For the OPV robust-regression experiment.  Per bright datum n with residual
+r = y_n - x_n @ theta and u = r^2:
+
+    llik = C(nu, sigma) - (nu+1)/2 log(1 + u / (nu sigma^2))
+    lbnd = f(u0_n) + f'(u0_n) (u - u0_n)        (tangent in u at u0_n)
+
+f is convex in u so the tangent is a global lower bound — as a function of r
+it is a scaled Gaussian, hence collapsible via weighted second moments
+(DESIGN.md, bounds::tmatch).  u0_n = 0 untuned, (y_n - x_n @ theta_MAP)^2
+MAP-tuned.
+
+interpret=True for CPU-PJRT execution; see logistic_jj.py for rationale.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _kernel(theta_ref, x_ref, y_ref, u0_ref, mask_ref, ll_ref, lb_ref, *, nu, sigma, logc):
+    theta = theta_ref[...]  # [D]
+    x = x_ref[...]  # [Bb, D]
+    y = y_ref[...]  # [Bb]
+    u0 = u0_ref[...]  # [Bb]
+    mask = mask_ref[...]  # [Bb]
+
+    r = y - x @ theta
+    u = r * r
+    c2 = nu * sigma * sigma
+    ll = logc - (nu + 1.0) / 2.0 * jnp.log1p(u / c2)
+    f0 = logc - (nu + 1.0) / 2.0 * jnp.log1p(u0 / c2)
+    fp0 = -(nu + 1.0) / 2.0 / (c2 + u0)
+    lb = f0 + fp0 * (u - u0)
+    lb = jnp.minimum(lb, ll)  # guard the tangent point against fp epsilon
+
+    ll_ref[...] = ll * mask
+    lb_ref[...] = lb * mask
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "sigma", "block_b"))
+def eval_batch(theta, x, y, u0, mask, *, nu=4.0, sigma=1.0, block_b=DEFAULT_BLOCK_B):
+    """Fused (log L_n, log B_n) for student-t + tangent bound over a batch.
+
+    theta: [D]; x: [B, D]; y, u0, mask: [B].  nu, sigma are compile-time
+    constants (baked into the artifact).  Returns (loglik [B], logbound [B]).
+    """
+    b, d = x.shape
+    assert b % block_b == 0, (b, block_b)
+    logc = (
+        math.lgamma((nu + 1.0) / 2.0)
+        - math.lgamma(nu / 2.0)
+        - 0.5 * math.log(nu * math.pi * sigma * sigma)
+    )
+    grid = (b // block_b,)
+    spec_rows = pl.BlockSpec((block_b, d), lambda i: (i, 0))
+    spec_vec = pl.BlockSpec((block_b,), lambda i: (i,))
+    spec_theta = pl.BlockSpec((d,), lambda i: (0,))
+    out_shape = [
+        jax.ShapeDtypeStruct((b,), theta.dtype),
+        jax.ShapeDtypeStruct((b,), theta.dtype),
+    ]
+    kernel = functools.partial(_kernel, nu=nu, sigma=sigma, logc=logc)
+    return tuple(
+        pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[spec_theta, spec_rows, spec_vec, spec_vec, spec_vec],
+            out_specs=[spec_vec, spec_vec],
+            out_shape=out_shape,
+            interpret=True,
+        )(theta, x, y, u0, mask)
+    )

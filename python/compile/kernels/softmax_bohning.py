@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused softmax log-likelihood + Böhning (1992) bound.
+
+For the CIFAR-3 softmax experiment.  Per bright datum n with logits
+eta = Theta @ x_n (K classes):
+
+    llik = eta_t - logsumexp(eta)
+    lbnd = f(psi) + g(psi)^T (eta - psi) - 1/2 (eta-psi)^T A (eta-psi)
+
+with A = 1/2 (I - 11^T/K) and g(psi) = onehot(t) - softmax(psi).  The anchor
+logits psi_n are inputs (zeros for the untuned bound, Theta_MAP @ x_n for the
+MAP-tuned bound) — everything the collapse needs is per-datum data, so this
+kernel stays a pure map over rows.
+
+interpret=True for CPU-PJRT execution; see logistic_jj.py for rationale.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 256
+
+
+def _lse(eta):
+    m = jnp.max(eta, axis=-1)
+    return m + jnp.log(jnp.sum(jnp.exp(eta - m[..., None]), axis=-1))
+
+
+def _kernel(theta_ref, x_ref, onehot_ref, psi_ref, mask_ref, ll_ref, lb_ref):
+    theta = theta_ref[...]  # [K, D]
+    x = x_ref[...]  # [Bb, D]
+    onehot = onehot_ref[...]  # [Bb, K]  (precomputed one-hot of t)
+    psi = psi_ref[...]  # [Bb, K]
+    mask = mask_ref[...]  # [Bb]
+    k = theta.shape[0]
+
+    eta = x @ theta.T  # [Bb, K] — the MXU matmul tile
+    lse_eta = _lse(eta)
+    ll = jnp.sum(onehot * eta, axis=1) - lse_eta
+
+    lse_psi = _lse(psi)
+    f_psi = jnp.sum(onehot * psi, axis=1) - lse_psi
+    g = onehot - jnp.exp(psi - lse_psi[:, None])
+    d = eta - psi
+    quad = 0.5 * (jnp.sum(d * d, axis=1) - jnp.sum(d, axis=1) ** 2 / k)
+    lb = f_psi + jnp.sum(g * d, axis=1) - 0.5 * quad
+    lb = jnp.minimum(lb, ll)  # guard the tangent point against fp epsilon
+
+    ll_ref[...] = ll * mask
+    lb_ref[...] = lb * mask
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def eval_batch(theta, x, onehot, psi, mask, *, block_b=DEFAULT_BLOCK_B):
+    """Fused (log L_n, log B_n) for softmax + Böhning over a padded batch.
+
+    theta: [K, D]; x: [B, D]; onehot: [B, K]; psi: [B, K]; mask: [B].
+    Returns (loglik [B], logbound [B]).
+    """
+    b, d = x.shape
+    k = theta.shape[0]
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    spec_rows = pl.BlockSpec((block_b, d), lambda i: (i, 0))
+    spec_k = pl.BlockSpec((block_b, k), lambda i: (i, 0))
+    spec_vec = pl.BlockSpec((block_b,), lambda i: (i,))
+    spec_theta = pl.BlockSpec((k, d), lambda i: (0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((b,), theta.dtype),
+        jax.ShapeDtypeStruct((b,), theta.dtype),
+    ]
+    return tuple(
+        pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=[spec_theta, spec_rows, spec_k, spec_k, spec_vec],
+            out_specs=[spec_vec, spec_vec],
+            out_shape=out_shape,
+            interpret=True,
+        )(theta, x, onehot, psi, mask)
+    )

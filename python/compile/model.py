@@ -1,0 +1,103 @@
+"""L2: JAX evaluation graphs for the three FlyMC experiment models.
+
+Each graph is the unit the Rust coordinator executes per MCMC step: given the
+current parameters and a padded, fixed-shape batch of bright data points,
+return
+
+    (loglik [B], logbound [B], pseudo_grad [D] or [K,D], lik_grad [D] or [K,D])
+
+where pseudo_grad = grad_theta sum_n mask_n [log(L_n - B_n) - log B_n] — the
+bright-point term of the FlyMC pseudo-posterior gradient — and lik_grad =
+grad_theta sum_n mask_n log L_n — the full-likelihood gradient that
+regular-MCMC MALA needs. MH and slice sampling use only the first two.
+
+The per-point (loglik, logbound) forward pass runs through the L1 Pallas
+kernels (kernels/*.py); the gradient is the hand-derived closed form (checked
+against jax.grad of the pure-jnp reference in python/tests/test_model.py).
+Everything lowers into a single HLO module per (model, batch-bucket) —
+python/compile/aot.py writes them to artifacts/.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logistic_jj, robust_t, softmax_bohning
+from .kernels.ref import jj_coeffs
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _bright_coeff(dll, dlb, delta):
+    """d/ds [log(L-B) - log B] from dlogL/ds, dlogB/ds, delta = logB - logL."""
+    ed = jnp.exp(jnp.minimum(delta, -1e-12))
+    return (dll - ed * dlb) / (1.0 - ed) - dlb
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression + Jaakkola–Jordan
+# ---------------------------------------------------------------------------
+
+
+def logistic_eval(theta, x, t, xi, mask):
+    """theta [D], x [B,D], t [B] (+-1), xi [B], mask [B] ->
+    (loglik [B], logbound [B], pseudo_grad [D])."""
+    ll, lb = logistic_jj.eval_batch(theta, x, t, xi, mask)
+    s = t * (x @ theta)
+    a, b, _ = jj_coeffs(xi)
+    dll = 1.0 / (1.0 + jnp.exp(s))
+    dlb = 2.0 * a * s + b
+    # ll/lb are pre-masked; recover unmasked delta only where mask=1 (padding
+    # lanes contribute 0 to the gradient through the mask factor below).
+    coeff = _bright_coeff(dll, dlb, lb - ll) * t * mask
+    grad = x.T @ coeff
+    lik_grad = x.T @ (dll * t * mask)
+    return ll, lb, grad, lik_grad
+
+
+# ---------------------------------------------------------------------------
+# Softmax classification + Böhning
+# ---------------------------------------------------------------------------
+
+
+def _lse(eta):
+    m = jnp.max(eta, axis=1)
+    return m + jnp.log(jnp.sum(jnp.exp(eta - m[:, None]), axis=1))
+
+
+def softmax_eval(theta, x, onehot, psi, mask):
+    """theta [K,D], x [B,D], onehot [B,K], psi [B,K], mask [B] ->
+    (loglik [B], logbound [B], pseudo_grad [K,D])."""
+    ll, lb = softmax_bohning.eval_batch(theta, x, onehot, psi, mask)
+    k = theta.shape[0]
+    eta = x @ theta.T
+    soft = jnp.exp(eta - _lse(eta)[:, None])
+    dll = onehot - soft  # [B, K]
+    g = onehot - jnp.exp(psi - _lse(psi)[:, None])
+    d = eta - psi
+    dlb = g - 0.5 * (d - jnp.sum(d, axis=1, keepdims=True) / k)
+    delta = (lb - ll)[:, None]
+    ed = jnp.exp(jnp.minimum(delta, -1e-12))
+    coeff = ((dll - ed * dlb) / (1.0 - ed) - dlb) * mask[:, None]
+    grad = coeff.T @ x
+    lik_grad = (dll * mask[:, None]).T @ x
+    return ll, lb, grad, lik_grad
+
+
+# ---------------------------------------------------------------------------
+# Robust (student-t) regression + tangent bound
+# ---------------------------------------------------------------------------
+
+
+def robust_eval(theta, x, y, u0, mask, *, nu=4.0, sigma=1.0):
+    """theta [D], x [B,D], y [B], u0 [B], mask [B] ->
+    (loglik [B], logbound [B], pseudo_grad [D]).  nu/sigma are baked in."""
+    ll, lb = robust_t.eval_batch(theta, x, y, u0, mask, nu=nu, sigma=sigma)
+    r = y - x @ theta
+    u = r * r
+    c2 = nu * sigma * sigma
+    dll = -(nu + 1.0) * r / (c2 + u)
+    dlb = -(nu + 1.0) * r / (c2 + u0)
+    coeff = _bright_coeff(dll, dlb, lb - ll) * mask
+    grad = -(x.T @ coeff)
+    lik_grad = -(x.T @ (dll * mask))
+    return ll, lb, grad, lik_grad

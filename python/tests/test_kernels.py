@@ -1,0 +1,227 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps randomize shapes, scales and masks; every test asserts
+allclose between the fused kernel outputs and the reference, plus the FlyMC
+invariant 0 < B_n <= L_n (in log space: lb <= ll) that the whole algorithm
+rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logistic_jj, robust_t, softmax_bohning
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# logistic + Jaakkola-Jordan
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.integers(1, 64),
+    blocks=st.integers(1, 3),
+    scale=st.floats(0.1, 10.0),
+)
+def test_logistic_kernel_matches_ref(seed, d, blocks, scale):
+    r = _rng(seed)
+    b = 256 * blocks
+    theta = jnp.array(r.normal(size=d) * scale)
+    x = jnp.array(r.normal(size=(b, d)))
+    t = jnp.array(r.choice([-1.0, 1.0], size=b))
+    xi = jnp.array(np.abs(r.normal(size=b)) * scale)
+    mask = jnp.array((r.random(b) < 0.8).astype(np.float64))
+
+    ll, lb = logistic_jj.eval_batch(theta, x, t, xi, mask)
+    rll = ref.logistic_loglik(theta, x, t)
+    rlb = jnp.minimum(ref.jj_logbound(theta, x, t, xi), rll)
+    np.testing.assert_allclose(ll, rll * mask, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(lb, rlb * mask, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.01, 20.0))
+def test_jj_bound_dominated_by_likelihood(seed, scale):
+    """log B_n(theta) <= log L_n(theta) for every theta, xi (JJ validity)."""
+    r = _rng(seed)
+    s = jnp.array(r.normal(size=512) * scale)  # s = t * theta @ x directly
+    xi = jnp.array(np.abs(r.normal(size=512)) * scale)
+    a, b, c = ref.jj_coeffs(xi)
+    lb = a * s**2 + b * s + c
+    ll = -jnp.logaddexp(0.0, -s)
+    assert bool(jnp.all(lb <= ll + 1e-10))
+
+
+def test_jj_bound_tight_at_xi():
+    """B(s=+/-xi) = L(s=+/-xi): the tangency the MAP-tuning relies on."""
+    xi = jnp.array([0.0, 0.5, 1.5, 4.0, 20.0])
+    a, b, c = ref.jj_coeffs(xi)
+    for sgn in (1.0, -1.0):
+        s = sgn * xi
+        lb = a * s**2 + b * s + c
+        ll = -jnp.logaddexp(0.0, -s)
+        np.testing.assert_allclose(lb, ll, rtol=1e-12, atol=1e-12)
+
+
+def test_jj_xi_zero_limit():
+    a, _, _ = ref.jj_coeffs(jnp.array([0.0, 1e-12, 1e-7]))
+    np.testing.assert_allclose(np.asarray(a), -0.125, rtol=1e-9)
+
+
+def test_logistic_mask_zeroes_padding():
+    r = _rng(7)
+    theta = jnp.array(r.normal(size=5))
+    x = jnp.array(r.normal(size=(256, 5)))
+    t = jnp.ones(256)
+    xi = jnp.ones(256)
+    mask = jnp.zeros(256)
+    ll, lb = logistic_jj.eval_batch(theta, x, t, xi, mask)
+    assert float(jnp.abs(ll).max()) == 0.0
+    assert float(jnp.abs(lb).max()) == 0.0
+
+
+def test_logistic_rejects_unaligned_batch():
+    with pytest.raises(AssertionError):
+        logistic_jj.eval_batch(
+            jnp.zeros(3), jnp.zeros((100, 3)), jnp.ones(100), jnp.ones(100), jnp.ones(100)
+        )
+
+
+# ---------------------------------------------------------------------------
+# softmax + Böhning
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.integers(2, 48),
+    k=st.integers(2, 6),
+    scale=st.floats(0.1, 5.0),
+)
+def test_softmax_kernel_matches_ref(seed, d, k, scale):
+    r = _rng(seed)
+    b = 256
+    theta = jnp.array(r.normal(size=(k, d)) * scale)
+    x = jnp.array(r.normal(size=(b, d)))
+    t = r.integers(0, k, size=b)
+    onehot = jnp.array(np.eye(k)[t])
+    psi = jnp.array(r.normal(size=(b, k)) * scale)
+    mask = jnp.array((r.random(b) < 0.8).astype(np.float64))
+    tj = jnp.array(t)
+
+    ll, lb = softmax_bohning.eval_batch(theta, x, onehot, psi, mask)
+    rll = ref.softmax_loglik(theta, x, tj)
+    rlb = jnp.minimum(ref.bohning_logbound(theta, x, tj, psi), rll)
+    np.testing.assert_allclose(ll, rll * mask, rtol=1e-11, atol=1e-11)
+    np.testing.assert_allclose(lb, rlb * mask, rtol=1e-11, atol=1e-11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 8), scale=st.floats(0.1, 8.0))
+def test_bohning_bound_dominated(seed, k, scale):
+    r = _rng(seed)
+    b, d = 128, 16
+    theta = jnp.array(r.normal(size=(k, d)) * scale)
+    x = jnp.array(r.normal(size=(b, d)))
+    t = jnp.array(r.integers(0, k, size=b))
+    psi = jnp.array(r.normal(size=(b, k)) * scale)
+    ll = ref.softmax_loglik(theta, x, t)
+    lb = ref.bohning_logbound(theta, x, t, psi)
+    assert bool(jnp.all(lb <= ll + 1e-9))
+
+
+def test_bohning_tight_at_anchor():
+    """psi = eta  =>  B_n = L_n (value match at the anchor)."""
+    r = _rng(3)
+    k, d, b = 3, 10, 64
+    theta = jnp.array(r.normal(size=(k, d)))
+    x = jnp.array(r.normal(size=(b, d)))
+    t = jnp.array(r.integers(0, k, size=b))
+    psi = x @ theta.T
+    ll = ref.softmax_loglik(theta, x, t)
+    lb = ref.bohning_logbound(theta, x, t, psi)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(ll), rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# student-t + tangent bound
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.integers(1, 64),
+    nu=st.sampled_from([1.0, 2.0, 4.0, 10.0]),
+    sigma=st.floats(0.2, 5.0),
+)
+def test_robust_kernel_matches_ref(seed, d, nu, sigma):
+    r = _rng(seed)
+    b = 256
+    theta = jnp.array(r.normal(size=d))
+    x = jnp.array(r.normal(size=(b, d)))
+    y = jnp.array(r.standard_t(df=4, size=b) * 2.0)
+    u0 = jnp.array(np.abs(r.normal(size=b)))
+    mask = jnp.array((r.random(b) < 0.8).astype(np.float64))
+
+    ll, lb = robust_t.eval_batch(theta, x, y, u0, mask, nu=nu, sigma=sigma)
+    rll = ref.t_loglik(theta, x, y, nu, sigma)
+    rlb = jnp.minimum(ref.t_logbound(theta, x, y, u0, nu, sigma), rll)
+    np.testing.assert_allclose(ll, rll * mask, rtol=1e-11, atol=1e-12)
+    np.testing.assert_allclose(lb, rlb * mask, rtol=1e-11, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nu=st.floats(0.5, 20.0), sigma=st.floats(0.1, 5.0))
+def test_t_bound_dominated(seed, nu, sigma):
+    r = _rng(seed)
+    b, d = 128, 8
+    theta = jnp.array(r.normal(size=d))
+    x = jnp.array(r.normal(size=(b, d)))
+    y = jnp.array(r.normal(size=b) * 5.0)
+    u0 = jnp.array(np.abs(r.normal(size=b)) * 4.0)
+    ll = ref.t_loglik(theta, x, y, nu, sigma)
+    lb = ref.t_logbound(theta, x, y, u0, nu, sigma)
+    assert bool(jnp.all(lb <= ll + 1e-10))
+
+
+def test_t_bound_tight_at_u0():
+    """u0 = r^2  =>  B_n = L_n (tangency used by MAP tuning)."""
+    r = _rng(5)
+    d, b = 6, 64
+    theta = jnp.array(r.normal(size=d))
+    x = jnp.array(r.normal(size=(b, d)))
+    y = jnp.array(r.normal(size=b))
+    resid = y - x @ theta
+    u0 = resid * resid
+    ll = ref.t_loglik(theta, x, y, 4.0, 1.0)
+    lb = ref.t_logbound(theta, x, y, u0, 4.0, 1.0)
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(ll), rtol=1e-12, atol=1e-12)
+
+
+def test_t_sigma_rescale_identity():
+    """sigma!=1 via input scaling against the sigma=1 artifact (runtime trick)."""
+    r = _rng(11)
+    d, b, sig = 9, 256, 2.5
+    theta = jnp.array(r.normal(size=d))
+    x = jnp.array(r.normal(size=(b, d)))
+    y = jnp.array(r.normal(size=b) * 3.0)
+    u0 = jnp.array(np.abs(r.normal(size=b)))
+    mask = jnp.ones(b)
+    ll1, lb1 = robust_t.eval_batch(theta, x / sig, y / sig, u0 / sig**2, mask, nu=4.0, sigma=1.0)
+    rll = ref.t_loglik(theta, x, y, 4.0, sig)
+    rlb = ref.t_logbound(theta, x, y, u0, 4.0, sig)
+    np.testing.assert_allclose(ll1 - np.log(sig), rll, rtol=1e-11)
+    np.testing.assert_allclose(lb1 - np.log(sig), jnp.minimum(rlb, rll), rtol=1e-11)

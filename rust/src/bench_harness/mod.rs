@@ -1,0 +1,244 @@
+//! Micro/macro benchmark substrate (offline stand-in for `criterion`).
+//!
+//! `Bench::new("name").run(..)` does warmup, then timed samples, and reports
+//! median / mean / std / min in a criterion-like one-liner. The table/figure
+//! benches in `benches/` are *macro* harnesses that use [`Report`] to print
+//! the paper's rows; `benches/microbench.rs` uses the timing half for the
+//! §Perf hot-path iteration.
+
+use crate::util::Timer;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+    pub fn mean_s(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn std_s(&self) -> f64 {
+        let m = self.mean_s();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.samples.len() as f64)
+            .sqrt()
+    }
+    pub fn min_s(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} median {:>12} mean {:>12} ± {:>10} min {:>12}",
+            self.name,
+            fmt_time(self.median_s()),
+            fmt_time(self.mean_s()),
+            fmt_time(self.std_s()),
+            fmt_time(self.min_s()),
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    samples: usize,
+    iters_per_sample: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench { name: name.to_string(), warmup_iters: 3, samples: 10, iters_per_sample: 1 }
+    }
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(1);
+        self
+    }
+    pub fn iters_per_sample(mut self, n: usize) -> Self {
+        self.iters_per_sample = n.max(1);
+        self
+    }
+
+    /// Time `f`, print a criterion-style line, return the samples.
+    pub fn run(self, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Timer::start();
+            for _ in 0..self.iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed_secs() / self.iters_per_sample as f64);
+        }
+        let res = BenchResult { name: self.name, samples };
+        res.report();
+        res
+    }
+}
+
+/// Plain-text table printer for paper-style reports (Table 1, ablations).
+pub struct Report {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Report {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("| {:<w$} ", c, w = w));
+            }
+            s.push('|');
+            println!("{s}");
+        };
+        line(&self.headers);
+        println!("|{}|", widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Also emit as CSV (for the figure series).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// ASCII line plot for quick visual checks of figure series in the terminal.
+pub fn ascii_plot(title: &str, series: &[(&str, &[f64])], width: usize, height: usize) {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let maxlen = series.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    for (_, s) in series {
+        for &v in *s {
+            if v.is_finite() {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+    }
+    if !lo.is_finite() || maxlen < 2 {
+        println!("[{title}: no finite data]");
+        return;
+    }
+    if hi == lo {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', '+', 'o', 'x', '#'];
+    for (si, (_, s)) in series.iter().enumerate() {
+        for (i, &v) in s.iter().enumerate() {
+            if !v.is_finite() {
+                continue;
+            }
+            let xpix = i * (width - 1) / (maxlen - 1).max(1);
+            let ypix = ((v - lo) / (hi - lo) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - ypix.min(height - 1)][xpix] = marks[si % marks.len()];
+        }
+    }
+    println!("\n-- {title} --  [{lo:.4}, {hi:.4}]");
+    for row in grid {
+        println!("  |{}", row.iter().collect::<String>());
+    }
+    println!("  +{}", "-".repeat(width));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{} {}", marks[i % marks.len()], n))
+        .collect();
+    println!("   {}", legend.join("   "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = Bench::new("noop").warmup(1).samples(5).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.min_s() >= 0.0);
+        assert!(r.median_s() >= r.min_s());
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(3e-9).ends_with("ns"));
+        assert!(fmt_time(3e-6).ends_with("µs"));
+        assert!(fmt_time(3e-3).ends_with("ms"));
+        assert!(fmt_time(3.0).ends_with('s'));
+    }
+
+    #[test]
+    fn report_roundtrip_csv() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row(&["1".into(), "2".into()]);
+        let path = std::env::temp_dir().join("firefly_report_test.csv");
+        r.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn ascii_plot_does_not_panic() {
+        let s: Vec<f64> = (0..50).map(|i| (i as f64 * 0.3).sin()).collect();
+        ascii_plot("sin", &[("s", &s)], 40, 8);
+        ascii_plot("empty", &[("e", &[])], 40, 8);
+    }
+}

@@ -1,0 +1,116 @@
+//! CLI substrate (offline stand-in for `clap`): subcommands + `--flag value`
+//! / `--flag=value` / boolean flags, with generated usage text.
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<(String, Option<String>)>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw arg list (without argv[0]). The first non-flag token is
+    /// the subcommand; `--key value`, `--key=value`, and bare `--key` are all
+    /// accepted (a following token starting with `--` is not consumed).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.flags.push((
+                        stripped[..eq].to_string(),
+                        Some(stripped[eq + 1..].to_string()),
+                    ));
+                } else {
+                    let val = match iter.peek() {
+                        Some(next) if !next.starts_with("--") => iter.next(),
+                        _ => None,
+                    };
+                    out.flags.push((stripped.to_string(), val));
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NB: a bare boolean flag followed by a non-flag token would absorb
+        // it as a value (`--verbose extra`) — boolean flags go last or use
+        // `=`; the positional comes before.
+        let a = parse("run --config exp.toml --iters=500 extra --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("config"), Some("exp.toml"));
+        assert_eq!(a.get_usize("iters", 0), 500);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None);
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn flag_does_not_eat_next_flag() {
+        let a = parse("bench --quick --seed 7");
+        assert!(a.has("quick"));
+        assert_eq!(a.get("quick"), None);
+        assert_eq!(a.get_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = parse("x --n 1 --n 2");
+        assert_eq!(a.get_usize("n", 0), 2);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.get_f64("missing", 1.25), 1.25);
+        assert_eq!(a.get_str("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,405 @@
+//! Config substrate: a minimal TOML-subset parser + typed experiment config.
+//!
+//! Supports what the experiment configs need: `[section]` headers, `key =
+//! value` with string / float / int / bool / homogeneous array values, `#`
+//! comments. The typed layer (`ExperimentConfig`) is what `firefly run
+//! --config exp.toml` consumes; every field has a paper-faithful default so
+//! an empty file is a valid MNIST-experiment config.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value ("" = top-level section).
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            doc.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i as usize)
+            .unwrap_or(default)
+    }
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    s.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("cannot parse value: {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if depth == 0 && !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+// ---------------------------------------------------------------------------
+// Typed experiment config
+// ---------------------------------------------------------------------------
+
+/// Which of the three experiment stacks to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// MNIST-like logistic regression, random-walk MH (Table 1 rows 1-3)
+    LogisticMnist,
+    /// CIFAR-3-like softmax, MALA (Table 1 rows 4-6)
+    SoftmaxCifar,
+    /// OPV-like robust regression, slice sampling (Table 1 rows 7-9)
+    RobustOpv,
+    /// 2-d toy logistic (Fig 2)
+    Toy,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Task, String> {
+        match s {
+            "logistic" | "mnist" | "logistic_mnist" => Ok(Task::LogisticMnist),
+            "softmax" | "cifar" | "softmax_cifar" => Ok(Task::SoftmaxCifar),
+            "robust" | "opv" | "robust_opv" => Ok(Task::RobustOpv),
+            "toy" => Ok(Task::Toy),
+            _ => Err(format!("unknown task {s:?}")),
+        }
+    }
+}
+
+/// The three algorithms compared in every experiment (Table 1 / Fig 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    RegularMcmc,
+    UntunedFlyMc,
+    MapTunedFlyMc,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Algorithm, String> {
+        match s {
+            "regular" | "mcmc" => Ok(Algorithm::RegularMcmc),
+            "untuned" | "flymc" => Ok(Algorithm::UntunedFlyMc),
+            "maptuned" | "map" | "map_tuned" => Ok(Algorithm::MapTunedFlyMc),
+            _ => Err(format!("unknown algorithm {s:?}")),
+        }
+    }
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algorithm::RegularMcmc => "Regular MCMC",
+            Algorithm::UntunedFlyMc => "Untuned FlyMC",
+            Algorithm::MapTunedFlyMc => "MAP-tuned FlyMC",
+        }
+    }
+}
+
+/// Likelihood evaluation backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Cpu,
+    Xla,
+}
+
+/// Full experiment description with paper-faithful defaults.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub task: Task,
+    pub algorithm: Algorithm,
+    pub backend: Backend,
+    pub seed: u64,
+    pub iters: usize,
+    pub burnin: usize,
+    pub n_data: Option<usize>, // None = paper-scale default for the task
+    pub chains: usize,
+    /// q_{d->b} for implicit z-resampling (paper: 0.1 untuned, 0.01 tuned)
+    pub q_dark_to_bright: Option<f64>,
+    /// fixed JJ xi for untuned bounds (paper: 1.5)
+    pub untuned_xi: f64,
+    /// use explicit (Alg 1) instead of implicit (Alg 2) z-resampling
+    pub explicit_resample: bool,
+    /// explicit-resample fraction of N per iteration
+    pub resample_fraction: f64,
+    /// None = per-task default (MNIST 1.0, CIFAR 0.15, OPV 0.5 — the paper
+    /// chooses the scale by out-of-sample performance per experiment)
+    pub prior_scale: Option<f64>,
+    pub map_steps: usize,
+    pub record_every: usize,
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            task: Task::LogisticMnist,
+            algorithm: Algorithm::MapTunedFlyMc,
+            backend: Backend::Cpu,
+            seed: 0,
+            iters: 2000,
+            burnin: 500,
+            n_data: None,
+            chains: 1,
+            q_dark_to_bright: None,
+            untuned_xi: 1.5,
+            explicit_resample: false,
+            resample_fraction: 0.1,
+            prior_scale: None,
+            map_steps: 400,
+            record_every: 1,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_doc(doc: &Doc) -> Result<Self, String> {
+        let mut c = ExperimentConfig::default();
+        c.task = Task::parse(&doc.str_or("experiment", "task", "logistic"))?;
+        c.algorithm = Algorithm::parse(&doc.str_or("experiment", "algorithm", "map_tuned"))?;
+        c.backend = match doc.str_or("experiment", "backend", "cpu").as_str() {
+            "cpu" => Backend::Cpu,
+            "xla" => Backend::Xla,
+            other => return Err(format!("unknown backend {other:?}")),
+        };
+        c.seed = doc.usize_or("experiment", "seed", 0) as u64;
+        c.iters = doc.usize_or("experiment", "iters", c.iters);
+        c.burnin = doc.usize_or("experiment", "burnin", c.burnin);
+        if let Some(v) = doc.get("experiment", "n_data").and_then(|v| v.as_i64()) {
+            c.n_data = Some(v as usize);
+        }
+        c.chains = doc.usize_or("experiment", "chains", c.chains);
+        if let Some(v) = doc.get("flymc", "q_dark_to_bright").and_then(|v| v.as_f64()) {
+            c.q_dark_to_bright = Some(v);
+        }
+        c.untuned_xi = doc.f64_or("flymc", "untuned_xi", c.untuned_xi);
+        c.explicit_resample = doc.bool_or("flymc", "explicit_resample", c.explicit_resample);
+        c.resample_fraction = doc.f64_or("flymc", "resample_fraction", c.resample_fraction);
+        if let Some(v) = doc.get("model", "prior_scale").and_then(|v| v.as_f64()) {
+            c.prior_scale = Some(v);
+        }
+        c.map_steps = doc.usize_or("flymc", "map_steps", c.map_steps);
+        c.record_every = doc.usize_or("experiment", "record_every", c.record_every);
+        c.artifacts_dir = doc.str_or("experiment", "artifacts_dir", &c.artifacts_dir);
+        Ok(c)
+    }
+
+    pub fn from_str_toml(text: &str) -> Result<Self, String> {
+        Self::from_doc(&Doc::parse(text)?)
+    }
+
+    /// Paper's q_{d->b} default for the algorithm (0.1 untuned, 0.01 tuned).
+    pub fn effective_q_db(&self) -> f64 {
+        self.q_dark_to_bright.unwrap_or(match self.algorithm {
+            Algorithm::UntunedFlyMc => 0.1,
+            Algorithm::MapTunedFlyMc => 0.01,
+            Algorithm::RegularMcmc => 0.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            top = 1
+            [experiment]
+            task = "softmax"      # a comment
+            iters = 5000
+            step = 0.25
+            flag = true
+            arr = [1, 2.5, "x"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_i64(), Some(1));
+        assert_eq!(doc.str_or("experiment", "task", "?"), "softmax");
+        assert_eq!(doc.usize_or("experiment", "iters", 0), 5000);
+        assert_eq!(doc.f64_or("experiment", "step", 0.0), 0.25);
+        assert!(doc.bool_or("experiment", "flag", false));
+        match doc.get("experiment", "arr").unwrap() {
+            Value::Array(items) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[0].as_i64(), Some(1));
+                assert_eq!(items[1].as_f64(), Some(2.5));
+                assert_eq!(items[2].as_str(), Some("x"));
+            }
+            _ => panic!("not array"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = Doc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("", "s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = Doc::parse("[unclosed").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn experiment_config_defaults_and_overrides() {
+        let c = ExperimentConfig::from_str_toml("").unwrap();
+        assert_eq!(c.task, Task::LogisticMnist);
+        assert_eq!(c.untuned_xi, 1.5);
+        assert!((c.effective_q_db() - 0.01).abs() < 1e-12); // map-tuned default
+
+        let c = ExperimentConfig::from_str_toml(
+            "[experiment]\ntask = \"opv\"\nalgorithm = \"untuned\"\n[flymc]\nuntuned_xi = 2.0",
+        )
+        .unwrap();
+        assert_eq!(c.task, Task::RobustOpv);
+        assert_eq!(c.untuned_xi, 2.0);
+        assert!((c.effective_q_db() - 0.1).abs() < 1e-12); // untuned default
+    }
+
+    #[test]
+    fn algorithm_and_task_parse_aliases() {
+        assert_eq!(Task::parse("mnist").unwrap(), Task::LogisticMnist);
+        assert_eq!(Task::parse("cifar").unwrap(), Task::SoftmaxCifar);
+        assert!(Task::parse("nope").is_err());
+        assert_eq!(Algorithm::parse("map").unwrap(), Algorithm::MapTunedFlyMc);
+        assert!(Algorithm::parse("zzz").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Numeric CSV loading for user-supplied real datasets.
+//!
+//! Formats (documented in README §Data):
+//! - logistic:  each row `f_1,...,f_D,label` with label in {-1, 1} (or {0,1});
+//! - softmax:   each row `f_1,...,f_D,label` with integer label in [0, K);
+//! - regression: each row `f_1,...,f_D,y`.
+//!
+//! A bias column of ones is appended unless `bias=false`.
+
+use super::{LogisticData, RegressionData, SoftmaxData};
+use crate::linalg::Matrix;
+
+fn parse_rows(text: &str) -> Result<Vec<Vec<f64>>, String> {
+    let mut rows = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // skip a header line of non-numeric tokens
+        let cells: Result<Vec<f64>, _> =
+            line.split(',').map(|c| c.trim().parse::<f64>()).collect();
+        match cells {
+            Ok(v) => {
+                if let Some(first) = rows.first() as Option<&Vec<f64>> {
+                    if v.len() != first.len() {
+                        return Err(format!(
+                            "line {}: ragged row ({} vs {} cols)",
+                            lineno + 1,
+                            v.len(),
+                            first.len()
+                        ));
+                    }
+                }
+                rows.push(v);
+            }
+            Err(_) if lineno == 0 => continue, // header
+            Err(e) => return Err(format!("line {}: {}", lineno + 1, e)),
+        }
+    }
+    if rows.is_empty() {
+        return Err("no data rows".to_string());
+    }
+    Ok(rows)
+}
+
+fn to_features(rows: &[Vec<f64>], bias: bool) -> (Matrix, Vec<f64>) {
+    let n = rows.len();
+    let d = rows[0].len() - 1;
+    let cols = if bias { d + 1 } else { d };
+    let mut x = Matrix::zeros(n, cols);
+    let mut last = vec![0.0; n];
+    for (i, row) in rows.iter().enumerate() {
+        x.row_mut(i)[..d].copy_from_slice(&row[..d]);
+        if bias {
+            x[(i, d)] = 1.0;
+        }
+        last[i] = row[d];
+    }
+    (x, last)
+}
+
+pub fn load_logistic(text: &str, bias: bool) -> Result<LogisticData, String> {
+    let rows = parse_rows(text)?;
+    let (x, labels) = to_features(&rows, bias);
+    let t = labels
+        .iter()
+        .map(|&l| {
+            if l == 1.0 || l == -1.0 {
+                Ok(l)
+            } else if l == 0.0 {
+                Ok(-1.0)
+            } else {
+                Err(format!("bad binary label {l}"))
+            }
+        })
+        .collect::<Result<Vec<f64>, String>>()?;
+    Ok(LogisticData { x, t })
+}
+
+pub fn load_softmax(text: &str, bias: bool) -> Result<SoftmaxData, String> {
+    let rows = parse_rows(text)?;
+    let (x, labels) = to_features(&rows, bias);
+    let mut ints = Vec::with_capacity(labels.len());
+    let mut k = 0usize;
+    for &l in &labels {
+        if l < 0.0 || l.fract() != 0.0 {
+            return Err(format!("bad class label {l}"));
+        }
+        let li = l as usize;
+        k = k.max(li + 1);
+        ints.push(li);
+    }
+    Ok(SoftmaxData { x, labels: ints, k })
+}
+
+pub fn load_regression(text: &str, bias: bool) -> Result<RegressionData, String> {
+    let rows = parse_rows(text)?;
+    let (x, y) = to_features(&rows, bias);
+    Ok(RegressionData { x, y })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logistic_roundtrip_with_header_and_zero_labels() {
+        let text = "f1,f2,label\n0.5,1.0,1\n-0.5,2.0,0\n";
+        let d = load_logistic(text, true).unwrap();
+        assert_eq!(d.n(), 2);
+        assert_eq!(d.d(), 3);
+        assert_eq!(d.t, vec![1.0, -1.0]);
+        assert_eq!(d.x[(0, 2)], 1.0);
+    }
+
+    #[test]
+    fn softmax_infers_k() {
+        let text = "1,0,2\n0,1,0\n1,1,1\n";
+        let d = load_softmax(text, false).unwrap();
+        assert_eq!(d.k, 3);
+        assert_eq!(d.labels, vec![2, 0, 1]);
+        assert_eq!(d.d(), 2);
+    }
+
+    #[test]
+    fn regression_basic() {
+        let d = load_regression("1.0,2.0,3.5\n2.0,1.0,-0.5\n", true).unwrap();
+        assert_eq!(d.y, vec![3.5, -0.5]);
+        assert_eq!(d.d(), 3);
+    }
+
+    #[test]
+    fn rejects_ragged_and_bad_labels() {
+        assert!(load_regression("1,2\n1,2,3\n", false).is_err());
+        assert!(load_logistic("1,2,5\n", false).is_err());
+        assert!(load_softmax("1,2,-1\n", false).is_err());
+        assert!(load_regression("", false).is_err());
+    }
+}

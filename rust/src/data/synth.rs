@@ -1,0 +1,161 @@
+//! Synthetic workload generators (paper-dataset stand-ins; see DESIGN.md).
+
+use super::{LogisticData, RegressionData, SoftmaxData};
+use crate::linalg::Matrix;
+use crate::util::{math, Rng};
+
+/// Paper sizes for the three experiments.
+pub const MNIST_N: usize = 12_214;
+pub const CIFAR_N: usize = 18_000;
+pub const OPV_N_FULL: usize = 1_800_000;
+pub const OPV_N_DEFAULT: usize = 200_000;
+
+/// MNIST-7v9-like task: `d` PCA-like features (decaying spectrum) + bias,
+/// labels from a ground-truth logistic model so the margin distribution
+/// matches a well-separated digit pair (~97% linearly separable).
+pub fn synth_mnist(n: usize, d: usize, seed: u64) -> LogisticData {
+    synth_mnist_with_truth(n, d, seed).0
+}
+
+/// Same, returning the generating weights (bias last) for tests.
+pub fn synth_mnist_with_truth(n: usize, d: usize, seed: u64) -> (LogisticData, Vec<f64>) {
+    let mut rng = Rng::new(seed ^ 0x6D6E_6973_74);
+    // ground-truth direction, heavier on the leading "principal components"
+    let mut w: Vec<f64> = (0..d)
+        .map(|j| rng.normal() / (1.0 + j as f64 / 8.0))
+        .collect();
+    // normalize by the *induced logit std* (features have decaying variance
+    // 1/(1+j/4)) so the margin distribution is scale-controlled: logit std 6
+    // gives ~96-97% Bayes accuracy, like the paper's 7-vs-9 task.
+    let logit_var: f64 = w
+        .iter()
+        .enumerate()
+        .map(|(j, &wj)| wj * wj / (1.0 + j as f64 / 4.0))
+        .sum();
+    let scale = 6.0 / logit_var.sqrt();
+    for v in w.iter_mut() {
+        *v *= scale;
+    }
+    w.push(0.3); // bias
+
+    let mut x = Matrix::zeros(n, d + 1);
+    let mut t = vec![0.0; n];
+    for i in 0..n {
+        // PCA-like spectrum: sd of component j decays as 1/sqrt(1+j/4)
+        for j in 0..d {
+            x[(i, j)] = rng.normal() / (1.0 + j as f64 / 4.0).sqrt();
+        }
+        x[(i, d)] = 1.0;
+        let logit: f64 = crate::linalg::dot(x.row(i), &w);
+        t[i] = if rng.bernoulli(math::sigmoid(logit)) { 1.0 } else { -1.0 };
+    }
+    (LogisticData { x, t }, w)
+}
+
+/// CIFAR-3-like task: exactly `d` binary features (matching the paper's 256
+/// deep-autoencoder bits — no bias column, so the feature dim matches the
+/// `softmax.k3.d256` XLA artifact) from per-class Bernoulli prototypes;
+/// 3 balanced classes. The class-conditional rate separation controls logit
+/// spread (Böhning-bound tightness).
+pub fn synth_cifar3(n: usize, d: usize, seed: u64) -> SoftmaxData {
+    let k = 3;
+    let mut rng = Rng::new(seed ^ 0x6369_6661_72);
+    // Per-class feature rates: baseline plus a MODERATE class-specific
+    // boost. The boost size controls logit spread and hence posterior
+    // concentration: large boosts saturate the softmax (tiny Fisher info →
+    // wide posterior → per-datum logits wander far from any anchor → the
+    // fixed-curvature Böhning bound goes loose and everything stays bright).
+    // ~0.08 boosts over ~85 features/class give ~75-85% Bayes accuracy and a
+    // posterior tight enough for the paper's few-%-bright regime.
+    let mut rates = vec![vec![0.0f64; d]; k];
+    for j in 0..d {
+        let base = 0.10 + 0.25 * rng.f64();
+        let hot = rng.below(k);
+        for (c, row) in rates.iter_mut().enumerate() {
+            row[j] = if c == hot { (base + 0.05 + 0.07 * rng.f64()).min(0.95) } else { base };
+        }
+    }
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = vec![0usize; n];
+    for i in 0..n {
+        let c = i % k; // balanced
+        labels[i] = c;
+        for j in 0..d {
+            x[(i, j)] = if rng.bernoulli(rates[c][j]) { 1.0 } else { 0.0 };
+        }
+    }
+    // shuffle rows so batches are class-mixed
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let mut xs = Matrix::zeros(n, d);
+    let mut ls = vec![0usize; n];
+    for (dst, &src) in perm.iter().enumerate() {
+        xs.row_mut(dst).copy_from_slice(x.row(src));
+        ls[dst] = labels[src];
+    }
+    SoftmaxData { x: xs, labels: ls, k }
+}
+
+/// OPV-like robust-regression task: `d` total columns — `d-1` correlated
+/// positive (log-normal-ish) cheminformatic-style features plus a trailing
+/// bias column (total matches the paper's 57 and the `robust.d57` XLA
+/// artifact) — sparse true weights, student-t(4) noise plus a fraction of
+/// gross outliers.
+pub fn synth_opv(n: usize, d: usize, seed: u64) -> RegressionData {
+    synth_opv_with_truth(n, d, seed).0
+}
+
+pub fn synth_opv_with_truth(n: usize, d_total: usize, seed: u64) -> (RegressionData, Vec<f64>) {
+    assert!(d_total >= 2);
+    let d = d_total - 1; // raw features; the last column is the bias
+    let mut rng = Rng::new(seed ^ 0x6F70_76);
+    // sparse truth: ~20% of features active
+    let mut w = vec![0.0f64; d + 1];
+    let active = (d / 5).max(3);
+    for _ in 0..active {
+        let j = rng.below(d);
+        w[j] = rng.normal() * 0.8;
+    }
+    w[d] = 1.2; // intercept
+
+    // factor model for feature correlation: x = |loadings @ z + eps|^0.7
+    let nfac = 6;
+    let loadings: Vec<Vec<f64>> = (0..d)
+        .map(|_| (0..nfac).map(|_| rng.normal() * 0.5).collect())
+        .collect();
+    let mut x = Matrix::zeros(n, d + 1);
+    let mut y = vec![0.0; n];
+    let mut z = vec![0.0; nfac];
+    for i in 0..n {
+        rng.fill_normal(&mut z);
+        for j in 0..d {
+            let f: f64 = crate::linalg::dot(&loadings[j], &z) + rng.normal() * 0.6;
+            // positive, right-skewed like molecular descriptors; then center
+            x[(i, j)] = f.abs().powf(0.7) - 0.8;
+        }
+        x[(i, d)] = 1.0;
+        let mean: f64 = crate::linalg::dot(x.row(i), &w);
+        let noise = if rng.bernoulli(0.01) {
+            rng.normal() * 10.0 // gross outliers: DFT failures etc.
+        } else {
+            rng.student_t(4.0) * 0.3
+        };
+        y[i] = mean + noise;
+    }
+    (RegressionData { x, y }, w)
+}
+
+/// Tiny 2-d (+bias) two-class problem for Fig 2 / quickstart.
+pub fn synth_toy2d(n: usize, seed: u64) -> LogisticData {
+    let mut rng = Rng::new(seed ^ 0x746F_79);
+    let mut x = Matrix::zeros(n, 3);
+    let mut t = vec![0.0; n];
+    for i in 0..n {
+        let c = if i % 2 == 0 { 1.0 } else { -1.0 };
+        x[(i, 0)] = rng.normal() + 1.2 * c;
+        x[(i, 1)] = rng.normal() + 0.8 * c;
+        x[(i, 2)] = 1.0;
+        t[i] = c;
+    }
+    LogisticData { x, t }
+}

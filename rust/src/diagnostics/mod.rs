@@ -1,0 +1,225 @@
+//! MCMC output analysis: autocovariance, effective sample size (Geyer's
+//! initial monotone positive sequence — the estimator family R-CODA's
+//! `effectiveSize` uses, which the paper reports), and split-R̂.
+
+use crate::util::math::{mean, variance};
+
+/// Autocovariance at lags 0..maxlag (biased, 1/T normalization, standard for
+/// ESS estimation).
+pub fn autocovariance(x: &[f64], maxlag: usize) -> Vec<f64> {
+    let t = x.len();
+    let m = mean(x);
+    let maxlag = maxlag.min(t.saturating_sub(1));
+    let mut acov = vec![0.0; maxlag + 1];
+    for (lag, a) in acov.iter_mut().enumerate() {
+        let mut s = 0.0;
+        for i in 0..t - lag {
+            s += (x[i] - m) * (x[i + lag] - m);
+        }
+        *a = s / t as f64;
+    }
+    acov
+}
+
+/// Normalized autocorrelation function.
+pub fn autocorrelation(x: &[f64], maxlag: usize) -> Vec<f64> {
+    let acov = autocovariance(x, maxlag);
+    let c0 = acov[0];
+    if c0 <= 0.0 {
+        return vec![0.0; acov.len()];
+    }
+    acov.iter().map(|&c| c / c0).collect()
+}
+
+/// Effective sample size via Geyer (1992) initial monotone positive pair
+/// sequence: sum Γ_m = γ_{2m} + γ_{2m+1} while positive and non-increasing.
+pub fn ess_geyer(x: &[f64]) -> f64 {
+    let t = x.len();
+    if t < 4 {
+        return t as f64;
+    }
+    let maxlag = (t - 1).min(2 * ((t as f64).sqrt() as usize) + 200);
+    let acov = autocovariance(x, maxlag);
+    let c0 = acov[0];
+    if c0 <= 1e-300 {
+        // constant chain: no information
+        return 1.0;
+    }
+    let mut sum_pairs = 0.0;
+    let mut prev = f64::INFINITY;
+    let mut m = 0;
+    loop {
+        let i = 2 * m;
+        if i + 1 >= acov.len() {
+            break;
+        }
+        let gamma = acov[i] + acov[i + 1];
+        if gamma <= 0.0 {
+            break;
+        }
+        let gamma = gamma.min(prev); // initial monotone sequence
+        // m = 0 pair includes lag 0; handle via the tau formula below
+        sum_pairs += gamma;
+        prev = gamma;
+        m += 1;
+    }
+    // tau = -1 + 2 * sum_m Gamma_m / c0   (Geyer 1992, eq. 3.8-ish)
+    let tau = (-1.0 + 2.0 * sum_pairs / c0).max(1.0 / t as f64);
+    (t as f64 / tau).min(t as f64)
+}
+
+/// ESS per 1000 iterations — the unit Table 1 reports.
+pub fn ess_per_1000(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    ess_geyer(x) * 1000.0 / x.len() as f64
+}
+
+/// Minimum component-wise ESS of a θ-trace (rows = iterations).
+pub fn ess_min_components(trace: &[Vec<f64>]) -> f64 {
+    if trace.is_empty() {
+        return 0.0;
+    }
+    let d = trace[0].len();
+    let mut min_ess = f64::INFINITY;
+    let mut comp = vec![0.0; trace.len()];
+    for j in 0..d {
+        for (i, row) in trace.iter().enumerate() {
+            comp[i] = row[j];
+        }
+        min_ess = min_ess.min(ess_geyer(&comp));
+    }
+    min_ess
+}
+
+/// Split-R̂ (Gelman–Rubin with halved chains) over one scalar per chain.
+pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
+    let mut halves: Vec<&[f64]> = Vec::new();
+    for c in chains {
+        let h = c.len() / 2;
+        if h < 2 {
+            return f64::NAN;
+        }
+        halves.push(&c[..h]);
+        halves.push(&c[h..2 * h]);
+    }
+    let m = halves.len() as f64;
+    let n = halves[0].len() as f64;
+    let means: Vec<f64> = halves.iter().map(|h| mean(h)).collect();
+    let vars: Vec<f64> = halves.iter().map(|h| variance(h)).collect();
+    let grand = mean(&means);
+    let b = n / (m - 1.0) * means.iter().map(|&mu| (mu - grand) * (mu - grand)).sum::<f64>();
+    let w = mean(&vars);
+    if w <= 0.0 {
+        return f64::NAN;
+    }
+    let var_plus = (n - 1.0) / n * w + b / n;
+    (var_plus / w).sqrt()
+}
+
+/// Summary of a scalar trace.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub mean: f64,
+    pub std: f64,
+    pub ess: f64,
+    pub ess_per_1000: f64,
+}
+
+pub fn summarize(x: &[f64]) -> Summary {
+    Summary {
+        mean: mean(x),
+        std: variance(x).sqrt(),
+        ess: ess_geyer(x),
+        ess_per_1000: ess_per_1000(x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn iid_chain_has_ess_close_to_t() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f64> = (0..8000).map(|_| rng.normal()).collect();
+        let ess = ess_geyer(&x);
+        assert!(ess > 5500.0, "iid ESS {ess}");
+        assert!(ess <= 8000.0);
+    }
+
+    #[test]
+    fn ar1_chain_ess_matches_theory() {
+        // AR(1) with coefficient rho has tau = (1+rho)/(1-rho).
+        let rho: f64 = 0.9;
+        let mut rng = Rng::new(2);
+        let t = 200_000;
+        let mut x = vec![0.0; t];
+        for i in 1..t {
+            x[i] = rho * x[i - 1] + (1.0 - rho * rho).sqrt() * rng.normal();
+        }
+        let tau_true = (1.0 + rho) / (1.0 - rho); // 19
+        let ess = ess_geyer(&x);
+        let tau_est = t as f64 / ess;
+        assert!(
+            (tau_est - tau_true).abs() / tau_true < 0.2,
+            "tau est {tau_est} vs {tau_true}"
+        );
+    }
+
+    #[test]
+    fn acf_of_ar1_decays_geometrically() {
+        let rho: f64 = 0.7;
+        let mut rng = Rng::new(3);
+        let t = 100_000;
+        let mut x = vec![0.0; t];
+        for i in 1..t {
+            x[i] = rho * x[i - 1] + rng.normal();
+        }
+        let acf = autocorrelation(&x, 5);
+        for lag in 1..=5 {
+            let expect = rho.powi(lag as i32);
+            assert!(
+                (acf[lag] - expect).abs() < 0.05,
+                "lag {lag}: {} vs {expect}",
+                acf[lag]
+            );
+        }
+    }
+
+    #[test]
+    fn constant_chain_degenerates_gracefully() {
+        let x = vec![3.0; 100];
+        assert!(ess_geyer(&x) >= 1.0);
+        assert!(ess_geyer(&x).is_finite());
+    }
+
+    #[test]
+    fn rhat_near_one_for_same_distribution() {
+        let mut rng = Rng::new(4);
+        let chains: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..4000).map(|_| rng.normal()).collect())
+            .collect();
+        let r = split_rhat(&chains);
+        assert!((r - 1.0).abs() < 0.02, "rhat {r}");
+    }
+
+    #[test]
+    fn rhat_large_for_disjoint_chains() {
+        let mut rng = Rng::new(5);
+        let c1: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let c2: Vec<f64> = (0..2000).map(|_| rng.normal() + 10.0).collect();
+        let r = split_rhat(&[c1, c2]);
+        assert!(r > 3.0, "rhat {r}");
+    }
+
+    #[test]
+    fn ess_per_1000_unit() {
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+        let v = ess_per_1000(&x);
+        assert!((v - ess_geyer(&x)).abs() < 1e-9);
+    }
+}

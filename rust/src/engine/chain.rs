@@ -1,0 +1,233 @@
+//! The FlyMC / regular-MCMC chain loop (paper Alg 1 at the top level):
+//! alternate a θ-update (any sampler) with a z-update (FlyMC only), recording
+//! the traces the paper's figures and tables need.
+
+use crate::flymc::{FullPosterior, PseudoPosterior, ZStats};
+use crate::metrics::CounterSnapshot;
+use crate::samplers::{Sampler, Target};
+use crate::util::{Rng, Timer};
+
+/// Either posterior, so the chain driver is shared between the baseline and
+/// FlyMC (z-updates are a no-op for the regular posterior).
+pub enum ChainTarget {
+    FlyMc(PseudoPosterior),
+    Regular(FullPosterior),
+}
+
+impl ChainTarget {
+    pub fn as_target(&mut self) -> &mut dyn Target {
+        match self {
+            ChainTarget::FlyMc(p) => p,
+            ChainTarget::Regular(p) => p,
+        }
+    }
+
+    pub fn n_bright(&self) -> Option<usize> {
+        match self {
+            ChainTarget::FlyMc(p) => Some(p.n_bright()),
+            ChainTarget::Regular(_) => None,
+        }
+    }
+
+    pub fn counters(&self) -> crate::metrics::Counters {
+        match self {
+            ChainTarget::FlyMc(p) => p.eval.counters().clone(),
+            ChainTarget::Regular(p) => p.eval.counters().clone(),
+        }
+    }
+
+    pub fn true_log_posterior(&self, theta: &[f64]) -> f64 {
+        match self {
+            ChainTarget::FlyMc(p) => p.true_log_posterior(theta),
+            ChainTarget::Regular(p) => p.true_log_posterior(theta),
+        }
+    }
+
+    fn z_step(&mut self, cfg: &ChainConfig, rng: &mut Rng) -> Option<ZStats> {
+        match self {
+            ChainTarget::FlyMc(p) => Some(if cfg.explicit_resample {
+                p.explicit_resample(cfg.resample_fraction, rng)
+            } else {
+                p.implicit_resample(cfg.q_dark_to_bright, rng)
+            }),
+            ChainTarget::Regular(_) => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ChainConfig {
+    pub iters: usize,
+    pub burnin: usize,
+    /// record the (expensive, uncounted) full-data log posterior every k
+    /// iterations; 0 disables
+    pub record_full_every: usize,
+    /// thinning for the θ trace used by ESS
+    pub thin: usize,
+    pub q_dark_to_bright: f64,
+    pub explicit_resample: bool,
+    pub resample_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for ChainConfig {
+    fn default() -> Self {
+        ChainConfig {
+            iters: 2000,
+            burnin: 500,
+            record_full_every: 10,
+            thin: 1,
+            q_dark_to_bright: 0.01,
+            explicit_resample: false,
+            resample_fraction: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ChainResult {
+    /// post-burnin θ samples (thinned)
+    pub theta_trace: Vec<Vec<f64>>,
+    /// joint (pseudo-)posterior log density at every iteration
+    pub logpost_joint: Vec<f64>,
+    /// (iter, full-data log posterior) instrumentation points
+    pub full_logpost: Vec<(usize, f64)>,
+    /// bright count per iteration (FlyMC only)
+    pub bright: Vec<usize>,
+    /// likelihood queries per iteration
+    pub queries_per_iter: Vec<u64>,
+    pub accepted: usize,
+    pub z_brightened: usize,
+    pub z_darkened: usize,
+    pub wallclock_secs: f64,
+    pub final_counters: CounterSnapshot,
+    pub seed: u64,
+}
+
+impl ChainResult {
+    /// Mean likelihood queries per iteration after burn-in (Table 1 col 1).
+    pub fn avg_queries_post_burnin(&self, burnin: usize) -> f64 {
+        let tail = &self.queries_per_iter[burnin.min(self.queries_per_iter.len())..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().sum::<u64>() as f64 / tail.len() as f64
+    }
+
+    /// Mean bright count after burn-in (the paper's M).
+    pub fn avg_bright_post_burnin(&self, burnin: usize) -> f64 {
+        let tail = &self.bright[burnin.min(self.bright.len())..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().sum::<usize>() as f64 / tail.len() as f64
+    }
+}
+
+/// Run one chain: θ-step then z-step per iteration, with per-iteration query
+/// accounting and Fig-4-style instrumentation.
+pub fn run_chain(
+    mut target: ChainTarget,
+    mut sampler: Box<dyn Sampler>,
+    mut theta: Vec<f64>,
+    cfg: &ChainConfig,
+) -> ChainResult {
+    let mut rng = Rng::new(cfg.seed);
+    let counters = target.counters();
+    let timer = Timer::start();
+    let mut out = ChainResult { seed: cfg.seed, ..Default::default() };
+    out.logpost_joint.reserve(cfg.iters);
+    out.queries_per_iter.reserve(cfg.iters);
+
+    // Make sure the target state is committed at theta.
+    target.as_target().commit(&theta);
+    let mut snap = counters.snapshot();
+
+    for it in 0..cfg.iters {
+        let info = sampler.step(target.as_target(), &mut theta, &mut rng);
+        if info.accepted {
+            out.accepted += 1;
+        }
+        if let Some(z) = target.z_step(cfg, &mut rng) {
+            out.z_brightened += z.brightened;
+            out.z_darkened += z.darkened;
+        }
+        let now = counters.snapshot();
+        out.queries_per_iter.push(snap.delta(&now).lik_queries);
+        snap = now;
+
+        out.logpost_joint.push(target.as_target().current_log_density());
+        if let Some(b) = target.n_bright() {
+            out.bright.push(b);
+        }
+        if cfg.record_full_every > 0 && it % cfg.record_full_every == 0 {
+            out.full_logpost.push((it, target.true_log_posterior(&theta)));
+        }
+        if it >= cfg.burnin && (it - cfg.burnin) % cfg.thin.max(1) == 0 {
+            out.theta_trace.push(theta.clone());
+        }
+    }
+    out.wallclock_secs = timer.elapsed_secs();
+    out.final_counters = counters.snapshot();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics::Counters;
+    use crate::models::{IsoGaussian, LogisticJJ, ModelBound, Prior};
+    use crate::runtime::cpu_backend::CpuBackend;
+    use crate::samplers::RandomWalkMh;
+    use std::sync::Arc;
+
+    fn flymc_target(n: usize, seed: u64) -> (ChainTarget, Vec<f64>) {
+        let data = Arc::new(synth::synth_mnist(n, 6, seed));
+        let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
+        let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 1.0 });
+        let counters = Counters::new();
+        let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+        let mut rng = Rng::new(seed + 100);
+        let theta0 = prior.sample(model.dim(), &mut rng);
+        let mut pp = PseudoPosterior::new(model, prior, eval, theta0.clone());
+        pp.init_z(&mut rng);
+        (ChainTarget::FlyMc(pp), theta0)
+    }
+
+    #[test]
+    fn chain_runs_and_records_everything() {
+        let (target, theta0) = flymc_target(400, 1);
+        let cfg = ChainConfig {
+            iters: 100,
+            burnin: 20,
+            record_full_every: 10,
+            q_dark_to_bright: 0.05,
+            ..Default::default()
+        };
+        let res = run_chain(target, Box::new(RandomWalkMh::adaptive(0.05)), theta0, &cfg);
+        assert_eq!(res.logpost_joint.len(), 100);
+        assert_eq!(res.bright.len(), 100);
+        assert_eq!(res.queries_per_iter.len(), 100);
+        assert_eq!(res.theta_trace.len(), 80);
+        assert_eq!(res.full_logpost.len(), 10);
+        assert!(res.logpost_joint.iter().all(|l| l.is_finite()));
+        // FlyMC must query far fewer than N per iteration once burned in
+        let avg = res.avg_queries_post_burnin(20);
+        assert!(avg < 400.0, "avg queries {avg}");
+        assert!(res.wallclock_secs > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (t1, th1) = flymc_target(200, 3);
+        let (t2, th2) = flymc_target(200, 3);
+        let cfg = ChainConfig { iters: 50, burnin: 10, ..Default::default() };
+        let r1 = run_chain(t1, Box::new(RandomWalkMh::new(0.05)), th1, &cfg);
+        let r2 = run_chain(t2, Box::new(RandomWalkMh::new(0.05)), th2, &cfg);
+        assert_eq!(r1.logpost_joint, r2.logpost_joint);
+        assert_eq!(r1.bright, r2.bright);
+        assert_eq!(r1.queries_per_iter, r2.queries_per_iter);
+    }
+}

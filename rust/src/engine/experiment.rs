@@ -1,0 +1,333 @@
+//! Experiment assembly: config → data → model (+ bound tuning) → prior →
+//! backend → sampler → chains, and the Table-1 row computation.
+
+use std::sync::Arc;
+
+use crate::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use crate::data::synth;
+use crate::diagnostics;
+use crate::engine::chain::{run_chain, ChainConfig, ChainResult, ChainTarget};
+use crate::flymc::{FullPosterior, PseudoPosterior};
+use crate::map_estimate::{map_estimate, MapConfig};
+use crate::metrics::Counters;
+use crate::models::{
+    IsoGaussian, Laplace, LogisticJJ, ModelBound, Prior, RobustT, SoftmaxBohning,
+};
+use crate::runtime::{make_backend, XlaSource};
+use crate::samplers::{Mala, RandomWalkMh, Sampler, SliceSampler};
+use crate::util::{Rng, Timer};
+
+/// Default problem sizes (paper-scale for MNIST/CIFAR; OPV default scaled,
+/// see DESIGN.md §Scaling-defaults).
+pub fn default_n(task: Task) -> usize {
+    match task {
+        Task::LogisticMnist => synth::MNIST_N,
+        Task::SoftmaxCifar => synth::CIFAR_N,
+        Task::RobustOpv => synth::OPV_N_DEFAULT,
+        Task::Toy => 30,
+    }
+}
+
+/// Build the tuned model + prior for a task. Returns the model (already
+/// MAP-tuned if requested), the prior, the MAP point (if tuned) and the
+/// number of likelihood queries the tuning cost (reported separately, as in
+/// the paper).
+/// Per-task default prior scale (paper: tuned on held-out performance).
+pub fn default_prior_scale(task: Task) -> f64 {
+    match task {
+        Task::LogisticMnist | Task::Toy => 1.0,
+        Task::SoftmaxCifar => 0.15,
+        Task::RobustOpv => 0.5,
+    }
+}
+
+pub fn build_model(
+    cfg: &ExperimentConfig,
+) -> (Arc<dyn XlaSource>, Arc<dyn Prior>, Option<Vec<f64>>, u64) {
+    let n = cfg.n_data.unwrap_or_else(|| default_n(cfg.task));
+    let tune = cfg.algorithm == Algorithm::MapTunedFlyMc;
+    match cfg.task {
+        Task::LogisticMnist | Task::Toy => {
+            let data = Arc::new(if cfg.task == Task::Toy {
+                synth::synth_toy2d(n, cfg.seed)
+            } else {
+                synth::synth_mnist(n, 50, cfg.seed)
+            });
+            let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task)) });
+            let mut model = LogisticJJ::new(data, cfg.untuned_xi);
+            let (map, q) = if tune {
+                let res = map_estimate(
+                    &model,
+                    prior.as_ref(),
+                    &MapConfig { steps: cfg.map_steps, seed: cfg.seed ^ 0xAD, ..Default::default() },
+                );
+                model.tune_anchors_map(&res.theta);
+                (Some(res.theta), res.lik_queries)
+            } else {
+                (None, 0)
+            };
+            (Arc::new(model), prior, map, q)
+        }
+        Task::SoftmaxCifar => {
+            let data = Arc::new(synth::synth_cifar3(n, 256, cfg.seed));
+            let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task)) });
+            let mut model = SoftmaxBohning::new(data);
+            let (map, q) = if tune {
+                let res = map_estimate(
+                    &model,
+                    prior.as_ref(),
+                    &MapConfig { steps: cfg.map_steps, seed: cfg.seed ^ 0xAD, ..Default::default() },
+                );
+                model.tune_anchors_map(&res.theta);
+                (Some(res.theta), res.lik_queries)
+            } else {
+                (None, 0)
+            };
+            (Arc::new(model), prior, map, q)
+        }
+        Task::RobustOpv => {
+            let data = Arc::new(synth::synth_opv(n, 57, cfg.seed));
+            let prior: Arc<dyn Prior> = Arc::new(Laplace { b: cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task)) });
+            let mut model = RobustT::new(data, 4.0, 0.5);
+            let (map, q) = if tune {
+                let res = map_estimate(
+                    &model,
+                    prior.as_ref(),
+                    &MapConfig {
+                        steps: cfg.map_steps,
+                        lr: 0.1,
+                        seed: cfg.seed ^ 0xAD,
+                        ..Default::default()
+                    },
+                );
+                model.tune_anchors_map(&res.theta);
+                (Some(res.theta), res.lik_queries)
+            } else {
+                (None, 0)
+            };
+            (Arc::new(model), prior, map, q)
+        }
+    }
+}
+
+/// The paper's sampler per task, with the paper's target acceptance rates.
+pub fn build_sampler(task: Task) -> Box<dyn Sampler> {
+    match task {
+        Task::LogisticMnist | Task::Toy => Box::new(RandomWalkMh::adaptive(0.02)),
+        Task::SoftmaxCifar => Box::new(Mala::adaptive(0.005)),
+        Task::RobustOpv => Box::new(SliceSampler::new(0.05)),
+    }
+}
+
+/// Assemble a ready-to-run chain target (posterior with committed initial
+/// state) + initial theta, drawing theta0 from the prior (as in the paper).
+pub fn build_chain(
+    cfg: &ExperimentConfig,
+    model: Arc<dyn XlaSource>,
+    prior: Arc<dyn Prior>,
+    chain_seed: u64,
+) -> anyhow::Result<(ChainTarget, Vec<f64>)> {
+    let counters = Counters::new();
+    let eval = make_backend(model.clone(), cfg.backend, counters, &cfg.artifacts_dir)?;
+    let mut rng = Rng::new(chain_seed ^ 0x1217);
+    let theta0 = prior.sample(model.dim(), &mut rng);
+    let model_mb: Arc<dyn ModelBound> = model;
+    Ok(match cfg.algorithm {
+        Algorithm::RegularMcmc => (
+            ChainTarget::Regular(FullPosterior::new(model_mb, prior, eval, theta0.clone())),
+            theta0,
+        ),
+        _ => {
+            let mut pp = PseudoPosterior::new(model_mb, prior, eval, theta0.clone());
+            pp.init_z(&mut rng);
+            (ChainTarget::FlyMc(pp), theta0)
+        }
+    })
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    pub config: ExperimentConfig,
+    pub chains: Vec<ChainResult>,
+    pub map_lik_queries: u64,
+    pub setup_secs: f64,
+    pub n_data: usize,
+}
+
+impl ExperimentResult {
+    /// Table-1 style summary over all chains.
+    pub fn table_row(&self) -> TableRow {
+        let burnin = self.config.burnin;
+        let queries: Vec<f64> = self
+            .chains
+            .iter()
+            .map(|c| c.avg_queries_post_burnin(burnin))
+            .collect();
+        let ess: Vec<f64> = self
+            .chains
+            .iter()
+            .map(|c| diagnostics::ess_min_components(&c.theta_trace) * 1000.0
+                / c.theta_trace.len().max(1) as f64)
+            .collect();
+        let bright: Vec<f64> = self
+            .chains
+            .iter()
+            .map(|c| c.avg_bright_post_burnin(burnin))
+            .collect();
+        TableRow {
+            algorithm: self.config.algorithm.label().to_string(),
+            avg_lik_queries_per_iter: crate::util::math::mean(&queries),
+            ess_per_1000: crate::util::math::mean(&ess),
+            avg_bright: if self.chains[0].bright.is_empty() {
+                f64::NAN
+            } else {
+                crate::util::math::mean(&bright)
+            },
+            wallclock_secs: self.chains.iter().map(|c| c.wallclock_secs).sum::<f64>()
+                / self.chains.len() as f64,
+        }
+    }
+}
+
+/// One row of the paper's Table 1 (speedup is filled in relative to the
+/// regular-MCMC row by the caller).
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub algorithm: String,
+    pub avg_lik_queries_per_iter: f64,
+    pub ess_per_1000: f64,
+    pub avg_bright: f64,
+    pub wallclock_secs: f64,
+}
+
+impl TableRow {
+    /// ESS per likelihood query — the implementation-independent efficiency
+    /// the paper's "speedup" column is the ratio of.
+    pub fn efficiency(&self) -> f64 {
+        self.ess_per_1000 / (self.avg_lik_queries_per_iter * 1000.0)
+    }
+
+    pub fn speedup_vs(&self, regular: &TableRow) -> f64 {
+        self.efficiency() / regular.efficiency()
+    }
+}
+
+/// Run all chains of one experiment (threaded when chains > 1 on the CPU
+/// backend; the XLA backend builds one PJRT client per chain thread, so
+/// multi-chain XLA runs are serialized to keep memory bounded).
+pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentResult> {
+    let timer = Timer::start();
+    let (model, prior, _map, map_queries) = build_model(cfg);
+    let setup_secs = timer.elapsed_secs();
+    let n_data = model.n();
+
+    let chain_cfg = |seed: u64| ChainConfig {
+        iters: cfg.iters,
+        burnin: cfg.burnin,
+        record_full_every: cfg.record_every,
+        thin: 1,
+        q_dark_to_bright: cfg.effective_q_db(),
+        explicit_resample: cfg.explicit_resample,
+        resample_fraction: cfg.resample_fraction,
+        seed,
+    };
+
+    let mut chains = Vec::with_capacity(cfg.chains);
+    if cfg.chains <= 1 || cfg.backend == Backend::Xla {
+        for c in 0..cfg.chains.max(1) {
+            let seed = cfg.seed.wrapping_add(c as u64 * 7919);
+            let (target, theta0) = build_chain(cfg, model.clone(), prior.clone(), seed)?;
+            chains.push(run_chain(target, build_sampler(cfg.task), theta0, &chain_cfg(seed)));
+        }
+    } else {
+        let results: Vec<anyhow::Result<ChainResult>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cfg.chains)
+                .map(|c| {
+                    let model = model.clone();
+                    let prior = prior.clone();
+                    let cfg = cfg.clone();
+                    let ccfg = chain_cfg(cfg.seed.wrapping_add(c as u64 * 7919));
+                    scope.spawn(move || {
+                        let (target, theta0) =
+                            build_chain(&cfg, model, prior, ccfg.seed)?;
+                        Ok(run_chain(target, build_sampler(cfg.task), theta0, &ccfg))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in results {
+            chains.push(r?);
+        }
+    }
+
+    Ok(ExperimentResult {
+        config: cfg.clone(),
+        chains,
+        map_lik_queries: map_queries,
+        setup_secs,
+        n_data,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(task: Task, algorithm: Algorithm) -> ExperimentConfig {
+        ExperimentConfig {
+            task,
+            algorithm,
+            n_data: Some(300),
+            iters: 60,
+            burnin: 20,
+            map_steps: 60,
+            chains: 1,
+            record_every: 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn flymc_queries_fewer_than_regular_logistic() {
+        let reg = run_experiment(&tiny_cfg(Task::LogisticMnist, Algorithm::RegularMcmc)).unwrap();
+        let fly = run_experiment(&tiny_cfg(Task::LogisticMnist, Algorithm::MapTunedFlyMc)).unwrap();
+        let rq = reg.table_row().avg_lik_queries_per_iter;
+        let fq = fly.table_row().avg_lik_queries_per_iter;
+        assert!((rq - 300.0).abs() < 1.0, "regular queries/iter {rq}");
+        assert!(fq < 150.0, "flymc queries/iter {fq}");
+    }
+
+    #[test]
+    fn all_tasks_and_algorithms_run() {
+        for task in [Task::LogisticMnist, Task::SoftmaxCifar, Task::RobustOpv, Task::Toy] {
+            for alg in [Algorithm::RegularMcmc, Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc] {
+                let mut cfg = tiny_cfg(task, alg);
+                cfg.iters = 25;
+                cfg.burnin = 10;
+                if task == Task::SoftmaxCifar {
+                    cfg.n_data = Some(120); // keep D=256 setup cheap in tests
+                    cfg.map_steps = 20;
+                }
+                let res = run_experiment(&cfg).unwrap_or_else(|e| panic!("{task:?}/{alg:?}: {e}"));
+                let row = res.table_row();
+                assert!(
+                    row.avg_lik_queries_per_iter.is_finite(),
+                    "{task:?} {alg:?} queries"
+                );
+                assert!(res.chains[0].logpost_joint.iter().all(|l| l.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn multichain_threads_give_independent_chains() {
+        let mut cfg = tiny_cfg(Task::LogisticMnist, Algorithm::UntunedFlyMc);
+        cfg.chains = 3;
+        cfg.iters = 30;
+        let res = run_experiment(&cfg).unwrap();
+        assert_eq!(res.chains.len(), 3);
+        assert_ne!(res.chains[0].logpost_joint, res.chains[1].logpost_joint);
+        assert_ne!(res.chains[1].logpost_joint, res.chains[2].logpost_joint);
+    }
+}

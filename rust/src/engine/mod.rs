@@ -1,0 +1,9 @@
+//! Chain orchestration: single-chain driver, threaded multi-chain runner,
+//! and the experiment builder that assembles data + model + bound-tuning +
+//! sampler + backend from an [`ExperimentConfig`].
+
+pub mod chain;
+pub mod experiment;
+
+pub use chain::{run_chain, ChainConfig, ChainResult, ChainTarget};
+pub use experiment::{build_chain, run_experiment, ExperimentResult, TableRow};

@@ -1,0 +1,216 @@
+//! The O(1) bright/dark index structure of paper §3.3 / Fig 3.
+//!
+//! Two arrays of length N: `arr` holds a permutation of 0..N with all bright
+//! indices before all dark ones (`nb` marks the boundary); `tab[n]` is the
+//! position of datum n inside `arr`. `brighten`/`darken` are a swap + two
+//! table updates; `ith_bright`/`ith_dark`/`is_bright` are direct lookups.
+
+#[derive(Clone, Debug)]
+pub struct BrightSet {
+    arr: Vec<u32>,
+    tab: Vec<u32>,
+    nb: usize,
+}
+
+impl BrightSet {
+    /// All-dark initial state over n data points.
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize);
+        BrightSet {
+            arr: (0..n as u32).collect(),
+            tab: (0..n as u32).collect(),
+            nb: 0,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.arr.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.arr.is_empty()
+    }
+
+    #[inline]
+    pub fn n_bright(&self) -> usize {
+        self.nb
+    }
+
+    #[inline]
+    pub fn n_dark(&self) -> usize {
+        self.arr.len() - self.nb
+    }
+
+    #[inline]
+    pub fn is_bright(&self, n: usize) -> bool {
+        (self.tab[n] as usize) < self.nb
+    }
+
+    /// The i-th bright datum (arbitrary but stable-between-mutations order).
+    #[inline]
+    pub fn ith_bright(&self, i: usize) -> usize {
+        debug_assert!(i < self.nb);
+        self.arr[i] as usize
+    }
+
+    /// The i-th dark datum.
+    #[inline]
+    pub fn ith_dark(&self, i: usize) -> usize {
+        debug_assert!(i < self.n_dark());
+        self.arr[self.nb + i] as usize
+    }
+
+    /// All bright indices (prefix of `arr`).
+    #[inline]
+    pub fn bright_slice(&self) -> &[u32] {
+        &self.arr[..self.nb]
+    }
+
+    /// Set z_n = 1. O(1). No-op if already bright.
+    pub fn brighten(&mut self, n: usize) {
+        let pos = self.tab[n] as usize;
+        if pos < self.nb {
+            return;
+        }
+        let boundary = self.nb;
+        self.swap_positions(pos, boundary);
+        self.nb += 1;
+    }
+
+    /// Set z_n = 0. O(1). No-op if already dark.
+    pub fn darken(&mut self, n: usize) {
+        let pos = self.tab[n] as usize;
+        if pos >= self.nb {
+            return;
+        }
+        let boundary = self.nb - 1;
+        self.swap_positions(pos, boundary);
+        self.nb -= 1;
+    }
+
+    #[inline]
+    fn swap_positions(&mut self, a: usize, b: usize) {
+        let (na, nbv) = (self.arr[a], self.arr[b]);
+        self.arr.swap(a, b);
+        self.tab[na as usize] = b as u32;
+        self.tab[nbv as usize] = a as u32;
+    }
+
+    /// Debug invariant check (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let n = self.arr.len();
+        if self.tab.len() != n {
+            return Err("tab length mismatch".into());
+        }
+        let mut seen = vec![false; n];
+        for (pos, &v) in self.arr.iter().enumerate() {
+            let v = v as usize;
+            if v >= n || seen[v] {
+                return Err(format!("arr is not a permutation at pos {pos}"));
+            }
+            seen[v] = true;
+            if self.tab[v] as usize != pos {
+                return Err(format!("tab[{v}] != position {pos}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::Rng;
+
+    #[test]
+    fn fig3_example() {
+        // Fig 3: data points 1 and 3 bright, rest dark (N=6).
+        let mut z = BrightSet::new(6);
+        z.brighten(1);
+        z.brighten(3);
+        assert_eq!(z.n_bright(), 2);
+        assert!(z.is_bright(1) && z.is_bright(3));
+        assert!(!z.is_bright(0) && !z.is_bright(2) && !z.is_bright(4) && !z.is_bright(5));
+        let brights: Vec<usize> = (0..2).map(|i| z.ith_bright(i)).collect();
+        let mut sorted = brights.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 3]);
+        z.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn brighten_darken_idempotent() {
+        let mut z = BrightSet::new(4);
+        z.brighten(2);
+        z.brighten(2);
+        assert_eq!(z.n_bright(), 1);
+        z.darken(2);
+        z.darken(2);
+        assert_eq!(z.n_bright(), 0);
+        z.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn random_ops_preserve_invariants_and_match_reference() {
+        testing::check_msg(
+            "bright_set vs naive reference",
+            30,
+            |r| {
+                let n = 1 + r.below(200);
+                let ops: Vec<(bool, usize)> =
+                    (0..500).map(|_| (r.bernoulli(0.5), r.below(n))).collect();
+                (n, ops)
+            },
+            |(n, ops)| {
+                let mut z = BrightSet::new(*n);
+                let mut reference = vec![false; *n];
+                for &(brighten, idx) in ops {
+                    if brighten {
+                        z.brighten(idx);
+                        reference[idx] = true;
+                    } else {
+                        z.darken(idx);
+                        reference[idx] = false;
+                    }
+                    z.check_invariants()?;
+                }
+                let want: usize = reference.iter().filter(|&&b| b).count();
+                if z.n_bright() != want {
+                    return Err(format!("count {} vs {}", z.n_bright(), want));
+                }
+                for i in 0..*n {
+                    if z.is_bright(i) != reference[i] {
+                        return Err(format!("membership mismatch at {i}"));
+                    }
+                }
+                // bright_slice enumerates exactly the bright set
+                let mut got: Vec<u32> = z.bright_slice().to_vec();
+                got.sort_unstable();
+                let mut expect: Vec<u32> = (0..*n as u32)
+                    .filter(|&i| reference[i as usize])
+                    .collect();
+                expect.sort_unstable();
+                if got != expect {
+                    return Err("bright_slice mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ith_dark_enumerates_dark_set() {
+        let mut rng = Rng::new(3);
+        let mut z = BrightSet::new(50);
+        for _ in 0..20 {
+            z.brighten(rng.below(50));
+        }
+        let mut darks: Vec<usize> = (0..z.n_dark()).map(|i| z.ith_dark(i)).collect();
+        darks.sort_unstable();
+        let expect: Vec<usize> = (0..50).filter(|&i| !z.is_bright(i)).collect();
+        assert_eq!(darks, expect);
+    }
+}

@@ -1,0 +1,7 @@
+//! Firefly Monte Carlo core: the auxiliary-variable machinery of the paper.
+
+pub mod bright_set;
+pub mod pseudo;
+
+pub use bright_set::BrightSet;
+pub use pseudo::{FullPosterior, PseudoPosterior, ZStats};

@@ -1,0 +1,608 @@
+//! The FlyMC augmented posterior and the regular full-data posterior.
+//!
+//! [`PseudoPosterior`] is the paper's Eq. (2): conditioned on the brightness
+//! vector z, the θ-density is
+//!
+//!   log p(θ | z, x) = log p(θ) + Σ_n log B_n(θ)   [collapsed, O(dim²)]
+//!                   + Σ_{n bright} log[(L_n-B_n)/B_n]   [M likelihoods]
+//!
+//! It owns the [`BrightSet`], the per-bright-point likelihood cache, and the
+//! two z-resampling schemes (explicit Alg 1, implicit Alg 2). The cache is
+//! what makes `q_{b→d} = 1` free: bright points' pseudo-likelihoods at the
+//! committed θ are always in `ll`/`lb`.
+//!
+//! [`FullPosterior`] is the regular-MCMC baseline: log p(θ) + Σ_n log L_n
+//! evaluated over all N data at every query.
+
+use std::sync::Arc;
+
+use super::bright_set::BrightSet;
+use crate::models::{log_pseudo_lik, ModelBound, Prior};
+use crate::runtime::evaluator::BatchEval;
+use crate::samplers::target::Target;
+
+/// Outcome of one z-resampling sweep.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ZStats {
+    pub proposals: usize,
+    pub brightened: usize,
+    pub darkened: usize,
+}
+
+pub struct PseudoPosterior {
+    pub model: Arc<dyn ModelBound>,
+    pub prior: Arc<dyn Prior>,
+    pub eval: Box<dyn BatchEval>,
+    pub bright: BrightSet,
+    theta: Vec<f64>,
+    /// per-datum cached log L / log B at the committed theta (valid where bright)
+    ll: Vec<f64>,
+    lb: Vec<f64>,
+    pseudo_sum: f64,
+    base: f64, // prior + collapsed bound product at committed theta
+    // memo of the last off-state evaluation (same bright set)
+    memo_theta: Vec<f64>,
+    memo_ll: Vec<f64>,
+    memo_lb: Vec<f64>,
+    memo_pseudo_sum: f64,
+    memo_base: f64,
+    memo_valid: bool,
+    scratch_idx: Vec<usize>,
+    scratch_ll: Vec<f64>,
+    scratch_lb: Vec<f64>,
+    version: u64,
+}
+
+impl PseudoPosterior {
+    /// Start at `theta0` with an all-dark z (call [`Self::init_z`] next, or
+    /// let burn-in brighten points through resampling).
+    pub fn new(
+        model: Arc<dyn ModelBound>,
+        prior: Arc<dyn Prior>,
+        eval: Box<dyn BatchEval>,
+        theta0: Vec<f64>,
+    ) -> Self {
+        let n = model.n();
+        assert_eq!(theta0.len(), model.dim());
+        let base = prior.log_density(&theta0) + model.log_bound_product(&theta0);
+        PseudoPosterior {
+            model,
+            prior,
+            eval,
+            bright: BrightSet::new(n),
+            theta: theta0,
+            ll: vec![0.0; n],
+            lb: vec![0.0; n],
+            pseudo_sum: 0.0,
+            base,
+            memo_theta: Vec::new(),
+            memo_ll: Vec::new(),
+            memo_lb: Vec::new(),
+            memo_pseudo_sum: 0.0,
+            memo_base: 0.0,
+            memo_valid: false,
+            scratch_idx: Vec::new(),
+            scratch_ll: Vec::new(),
+            scratch_lb: Vec::new(),
+            version: 0,
+        }
+    }
+
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    pub fn n_bright(&self) -> usize {
+        self.bright.n_bright()
+    }
+
+    /// Gibbs-initialize z from its exact conditional at the current theta —
+    /// one full pass (N likelihood queries, counted; one-time setup).
+    pub fn init_z(&mut self, rng: &mut crate::util::Rng) {
+        let n = self.model.n();
+        self.scratch_idx.clear();
+        self.scratch_idx.extend(0..n);
+        let idx = std::mem::take(&mut self.scratch_idx);
+        let mut tll = std::mem::take(&mut self.scratch_ll);
+        let mut tlb = std::mem::take(&mut self.scratch_lb);
+        self.eval.eval(&self.theta, &idx, &mut tll, &mut tlb);
+        self.pseudo_sum = 0.0;
+        for i in 0..n {
+            // p(z=1 | theta) = (L - B)/L = 1 - e^{lb - ll}
+            let p_bright = 1.0 - (tlb[i] - tll[i]).exp();
+            if rng.bernoulli(p_bright) {
+                self.bright.brighten(i);
+                self.ll[i] = tll[i];
+                self.lb[i] = tlb[i];
+                self.pseudo_sum += log_pseudo_lik(tll[i], tlb[i]);
+            } else {
+                self.bright.darken(i);
+            }
+        }
+        self.scratch_idx = idx;
+        self.scratch_ll = tll;
+        self.scratch_lb = tlb;
+        self.memo_valid = false;
+        self.version += 1;
+    }
+
+    fn bright_indices(&self) -> Vec<usize> {
+        self.bright.bright_slice().iter().map(|&i| i as usize).collect()
+    }
+
+    fn base_at(&self, theta: &[f64]) -> f64 {
+        self.eval.counters().add_collapsed(1);
+        self.prior.log_density(theta) + self.model.log_bound_product(theta)
+    }
+
+    /// Evaluate at `theta` and memoize. Costs n_bright likelihood queries.
+    fn eval_and_memo(&mut self, theta: &[f64]) -> f64 {
+        let idx = self.bright_indices();
+        let mut tll = std::mem::take(&mut self.memo_ll);
+        let mut tlb = std::mem::take(&mut self.memo_lb);
+        self.eval.eval(theta, &idx, &mut tll, &mut tlb);
+        let pseudo: f64 = tll
+            .iter()
+            .zip(&tlb)
+            .map(|(&l, &b)| log_pseudo_lik(l, b))
+            .sum();
+        let base = self.base_at(theta);
+        self.memo_theta.clear();
+        self.memo_theta.extend_from_slice(theta);
+        self.memo_ll = tll;
+        self.memo_lb = tlb;
+        self.memo_pseudo_sum = pseudo;
+        self.memo_base = base;
+        self.memo_valid = true;
+        base + pseudo
+    }
+
+    fn promote_memo(&mut self) {
+        debug_assert!(self.memo_valid);
+        let idx = self.bright_indices();
+        debug_assert_eq!(idx.len(), self.memo_ll.len());
+        for (i, &n) in idx.iter().enumerate() {
+            self.ll[n] = self.memo_ll[i];
+            self.lb[n] = self.memo_lb[i];
+        }
+        self.pseudo_sum = self.memo_pseudo_sum;
+        self.base = self.memo_base;
+        self.theta.clear();
+        self.theta.extend_from_slice(&self.memo_theta);
+        self.memo_valid = false;
+    }
+
+    /// Full-data log posterior (instrumentation only: NOT counted as
+    /// queries, used for the Fig-4 convergence traces).
+    pub fn true_log_posterior(&self, theta: &[f64]) -> f64 {
+        let mut acc = self.prior.log_density(theta);
+        for n in 0..self.model.n() {
+            acc += self.model.log_lik(theta, n);
+        }
+        acc
+    }
+
+    // -- z updates ---------------------------------------------------------
+
+    /// Implicit MH resampling of z (paper Alg 2) with q_{b→d} = 1 and the
+    /// given q_{d→b}. Bright→dark uses only cached values (no queries);
+    /// dark→bright proposes a geometric-skip subset and evaluates just those.
+    pub fn implicit_resample(&mut self, q_db: f64, rng: &mut crate::util::Rng) -> ZStats {
+        let mut stats = ZStats::default();
+        let ln_q = q_db.ln();
+
+        // Every point gets AT MOST ONE proposal per sweep (paper Alg 2's
+        // single pass over n): snapshot the dark candidates BEFORE the
+        // bright->dark phase, otherwise a point darkened below would receive
+        // a second (dark->bright) proposal in the same sweep — that composed
+        // kernel is not stationary for p(z | theta) and biases the chain.
+        let nd = self.bright.n_dark();
+        self.scratch_idx.clear();
+        let mut pos = rng.geometric_skip(q_db);
+        while pos < nd {
+            self.scratch_idx.push(self.bright.ith_dark(pos));
+            pos = pos.saturating_add(1 + rng.geometric_skip(q_db));
+        }
+
+        // bright -> dark: accept with min(1, q_db / L~_n)
+        let brights = self.bright_indices();
+        for n in brights {
+            stats.proposals += 1;
+            let lt = log_pseudo_lik(self.ll[n], self.lb[n]);
+            if rng.f64_open().ln() < ln_q - lt {
+                self.bright.darken(n);
+                self.pseudo_sum -= lt;
+                stats.darkened += 1;
+            }
+        }
+
+        // dark -> bright over the pre-phase snapshot (all still dark: the
+        // phase above only darkens): accept with min(1, L~_n / q_db).
+        let idx = std::mem::take(&mut self.scratch_idx);
+        let mut tll = std::mem::take(&mut self.scratch_ll);
+        let mut tlb = std::mem::take(&mut self.scratch_lb);
+        self.eval.eval(&self.theta, &idx, &mut tll, &mut tlb);
+        for (i, &n) in idx.iter().enumerate() {
+            stats.proposals += 1;
+            let lt = log_pseudo_lik(tll[i], tlb[i]);
+            if rng.f64_open().ln() < lt - ln_q {
+                self.bright.brighten(n);
+                self.ll[n] = tll[i];
+                self.lb[n] = tlb[i];
+                self.pseudo_sum += lt;
+                stats.brightened += 1;
+            }
+        }
+        self.scratch_idx = idx;
+        self.scratch_ll = tll;
+        self.scratch_lb = tlb;
+        self.memo_valid = false;
+        self.version += 1;
+        stats
+    }
+
+    /// Explicit Gibbs resampling (paper Alg 1 lines 3–6): `fraction·N`
+    /// uniform draws with replacement, each z_n redrawn from its exact
+    /// conditional. Every draw costs one likelihood query.
+    pub fn explicit_resample(&mut self, fraction: f64, rng: &mut crate::util::Rng) -> ZStats {
+        let n = self.model.n();
+        let k = ((fraction * n as f64).ceil() as usize).min(n.max(1));
+        self.scratch_idx.clear();
+        for _ in 0..k {
+            self.scratch_idx.push(rng.below(n));
+        }
+        let idx = std::mem::take(&mut self.scratch_idx);
+        let mut tll = std::mem::take(&mut self.scratch_ll);
+        let mut tlb = std::mem::take(&mut self.scratch_lb);
+        self.eval.eval(&self.theta, &idx, &mut tll, &mut tlb);
+        let mut stats = ZStats { proposals: k, ..Default::default() };
+        for (i, &ni) in idx.iter().enumerate() {
+            let p_bright = 1.0 - (tlb[i] - tll[i]).exp();
+            let want_bright = rng.bernoulli(p_bright);
+            let is_bright = self.bright.is_bright(ni);
+            if want_bright && !is_bright {
+                self.bright.brighten(ni);
+                self.ll[ni] = tll[i];
+                self.lb[ni] = tlb[i];
+                self.pseudo_sum += log_pseudo_lik(tll[i], tlb[i]);
+                stats.brightened += 1;
+            } else if !want_bright && is_bright {
+                self.bright.darken(ni);
+                self.pseudo_sum -= log_pseudo_lik(self.ll[ni], self.lb[ni]);
+                stats.darkened += 1;
+            }
+        }
+        self.scratch_idx = idx;
+        self.scratch_ll = tll;
+        self.scratch_lb = tlb;
+        self.memo_valid = false;
+        self.version += 1;
+        stats
+    }
+
+    /// Recompute state sums from scratch (test hook: verifies the
+    /// incremental bookkeeping).
+    pub fn recompute_state(&mut self) -> f64 {
+        let idx = self.bright_indices();
+        let mut tll = Vec::new();
+        let mut tlb = Vec::new();
+        self.eval.eval(&self.theta, &idx, &mut tll, &mut tlb);
+        let pseudo: f64 = tll
+            .iter()
+            .zip(&tlb)
+            .map(|(&l, &b)| log_pseudo_lik(l, b))
+            .sum();
+        let base = self.base_at(&self.theta);
+        self.pseudo_sum = pseudo;
+        self.base = base;
+        base + pseudo
+    }
+}
+
+impl Target for PseudoPosterior {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn log_density(&mut self, theta: &[f64]) -> f64 {
+        if theta == self.theta.as_slice() {
+            return self.current_log_density();
+        }
+        if self.memo_valid && theta == self.memo_theta.as_slice() {
+            return self.memo_base + self.memo_pseudo_sum;
+        }
+        self.eval_and_memo(theta)
+    }
+
+    fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        grad.fill(0.0);
+        let idx = self.bright_indices();
+        let mut tll = std::mem::take(&mut self.memo_ll);
+        let mut tlb = std::mem::take(&mut self.memo_lb);
+        self.eval
+            .eval_pseudo_grad(theta, &idx, &mut tll, &mut tlb, grad);
+        let pseudo: f64 = tll
+            .iter()
+            .zip(&tlb)
+            .map(|(&l, &b)| log_pseudo_lik(l, b))
+            .sum();
+        let base = self.base_at(theta);
+        self.prior.grad_acc(theta, grad);
+        self.model.grad_log_bound_product_acc(theta, grad);
+        self.memo_theta.clear();
+        self.memo_theta.extend_from_slice(theta);
+        self.memo_ll = tll;
+        self.memo_lb = tlb;
+        self.memo_pseudo_sum = pseudo;
+        self.memo_base = base;
+        self.memo_valid = true;
+        base + pseudo
+    }
+
+    fn commit(&mut self, theta: &[f64]) {
+        if theta == self.theta.as_slice() {
+            return;
+        }
+        if !(self.memo_valid && theta == self.memo_theta.as_slice()) {
+            self.eval_and_memo(theta);
+        }
+        self.promote_memo();
+    }
+
+    fn current_log_density(&self) -> f64 {
+        self.base + self.pseudo_sum
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Regular full-data posterior (the paper's baseline): every evaluation
+/// queries all N likelihoods.
+pub struct FullPosterior {
+    pub model: Arc<dyn ModelBound>,
+    pub prior: Arc<dyn Prior>,
+    pub eval: Box<dyn BatchEval>,
+    idx_all: Vec<usize>,
+    theta: Vec<f64>,
+    cur_logp: f64,
+    memo_theta: Vec<f64>,
+    memo_logp: f64,
+    memo_valid: bool,
+    scratch_ll: Vec<f64>,
+}
+
+impl FullPosterior {
+    pub fn new(
+        model: Arc<dyn ModelBound>,
+        prior: Arc<dyn Prior>,
+        mut eval: Box<dyn BatchEval>,
+        theta0: Vec<f64>,
+    ) -> Self {
+        let n = model.n();
+        let idx_all: Vec<usize> = (0..n).collect();
+        let mut ll = Vec::new();
+        eval.eval_lik(&theta0, &idx_all, &mut ll);
+        let cur_logp = prior.log_density(&theta0) + ll.iter().sum::<f64>();
+        FullPosterior {
+            model,
+            prior,
+            eval,
+            idx_all,
+            theta: theta0,
+            cur_logp,
+            memo_theta: Vec::new(),
+            memo_logp: 0.0,
+            memo_valid: false,
+            scratch_ll: ll,
+        }
+    }
+
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    pub fn true_log_posterior(&self, theta: &[f64]) -> f64 {
+        let mut acc = self.prior.log_density(theta);
+        for n in 0..self.model.n() {
+            acc += self.model.log_lik(theta, n);
+        }
+        acc
+    }
+}
+
+impl Target for FullPosterior {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn log_density(&mut self, theta: &[f64]) -> f64 {
+        if theta == self.theta.as_slice() {
+            return self.cur_logp;
+        }
+        if self.memo_valid && theta == self.memo_theta.as_slice() {
+            return self.memo_logp;
+        }
+        let mut ll = std::mem::take(&mut self.scratch_ll);
+        self.eval.eval_lik(theta, &self.idx_all, &mut ll);
+        let logp = self.prior.log_density(theta) + ll.iter().sum::<f64>();
+        self.scratch_ll = ll;
+        self.memo_theta.clear();
+        self.memo_theta.extend_from_slice(theta);
+        self.memo_logp = logp;
+        self.memo_valid = true;
+        logp
+    }
+
+    fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        grad.fill(0.0);
+        let mut ll = std::mem::take(&mut self.scratch_ll);
+        self.eval.eval_lik_grad(theta, &self.idx_all, &mut ll, grad);
+        let logp = self.prior.log_density(theta) + ll.iter().sum::<f64>();
+        self.prior.grad_acc(theta, grad);
+        self.scratch_ll = ll;
+        self.memo_theta.clear();
+        self.memo_theta.extend_from_slice(theta);
+        self.memo_logp = logp;
+        self.memo_valid = true;
+        logp
+    }
+
+    fn commit(&mut self, theta: &[f64]) {
+        if theta == self.theta.as_slice() {
+            return;
+        }
+        let logp = if self.memo_valid && theta == self.memo_theta.as_slice() {
+            self.memo_logp
+        } else {
+            self.log_density(theta)
+        };
+        self.theta.clear();
+        self.theta.extend_from_slice(theta);
+        self.cur_logp = logp;
+        self.memo_valid = false;
+    }
+
+    fn current_log_density(&self) -> f64 {
+        self.cur_logp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::metrics::Counters;
+    use crate::models::{IsoGaussian, LogisticJJ};
+    use crate::runtime::cpu_backend::CpuBackend;
+    use crate::util::Rng;
+
+    fn setup(n: usize, seed: u64) -> (PseudoPosterior, Counters) {
+        let data = Arc::new(synth::synth_mnist(n, 8, seed));
+        let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
+        let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 1.0 });
+        let counters = Counters::new();
+        let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+        let mut rng = Rng::new(seed);
+        let theta0: Vec<f64> = (0..model.dim()).map(|_| rng.normal() * 0.3).collect();
+        (PseudoPosterior::new(model, prior, eval, theta0), counters)
+    }
+
+    #[test]
+    fn incremental_state_matches_recompute_after_resampling() {
+        let (mut pp, _) = setup(300, 1);
+        let mut rng = Rng::new(42);
+        pp.init_z(&mut rng);
+        for it in 0..20 {
+            if it % 2 == 0 {
+                pp.implicit_resample(0.05, &mut rng);
+            } else {
+                pp.explicit_resample(0.1, &mut rng);
+            }
+            let cached = pp.current_log_density();
+            let fresh = pp.recompute_state();
+            assert!(
+                (cached - fresh).abs() < 1e-8 * (1.0 + fresh.abs()),
+                "iter {it}: cached {cached} vs fresh {fresh}"
+            );
+        }
+    }
+
+    #[test]
+    fn commit_after_eval_is_query_free() {
+        let (mut pp, counters) = setup(200, 2);
+        let mut rng = Rng::new(7);
+        pp.init_z(&mut rng);
+        let m = pp.n_bright();
+        let theta2: Vec<f64> = pp.theta().iter().map(|t| t + 0.01).collect();
+        let before = counters.lik_queries();
+        let lp = pp.log_density(&theta2);
+        assert_eq!(counters.lik_queries() - before, m as u64);
+        let mid = counters.lik_queries();
+        pp.commit(&theta2); // memo hit: no new queries
+        assert_eq!(counters.lik_queries(), mid);
+        assert!((pp.current_log_density() - lp).abs() < 1e-12);
+        // and the cache is consistent
+        let fresh = pp.recompute_state();
+        assert!((fresh - lp).abs() < 1e-8 * (1.0 + lp.abs()));
+    }
+
+    #[test]
+    fn marginal_bright_probability_matches_conditional() {
+        // After many implicit sweeps at fixed theta, the empirical bright
+        // frequency of each datum must match p(z=1|theta) = 1 - B/L.
+        let (mut pp, _) = setup(60, 3);
+        let mut rng = Rng::new(9);
+        pp.init_z(&mut rng);
+        let sweeps = 4000;
+        let mut freq = vec![0usize; 60];
+        for _ in 0..sweeps {
+            pp.implicit_resample(0.3, &mut rng);
+            for n in 0..60 {
+                if pp.bright.is_bright(n) {
+                    freq[n] += 1;
+                }
+            }
+        }
+        let theta = pp.theta().to_vec();
+        let mut max_err: f64 = 0.0;
+        for n in 0..60 {
+            let (ll, lb) = pp.model.log_both(&theta, n);
+            let p = 1.0 - (lb - ll).exp();
+            let emp = freq[n] as f64 / sweeps as f64;
+            max_err = max_err.max((emp - p).abs());
+        }
+        assert!(max_err < 0.05, "max |emp - exact| = {max_err}");
+    }
+
+    #[test]
+    fn explicit_resample_counts_fraction_of_n_queries() {
+        let (mut pp, counters) = setup(500, 4);
+        let mut rng = Rng::new(11);
+        pp.init_z(&mut rng);
+        let before = counters.lik_queries();
+        pp.explicit_resample(0.1, &mut rng);
+        assert_eq!(counters.lik_queries() - before, 50);
+    }
+
+    #[test]
+    fn implicit_resample_queries_scale_with_q() {
+        let (mut pp, counters) = setup(2000, 5);
+        let mut rng = Rng::new(13);
+        pp.init_z(&mut rng);
+        let before = counters.lik_queries();
+        let mut proposals = 0;
+        let reps = 50;
+        for _ in 0..reps {
+            let s = pp.implicit_resample(0.01, &mut rng);
+            proposals += s.proposals;
+        }
+        let queries = (counters.lik_queries() - before) as f64 / reps as f64;
+        // ~ q * n_dark per sweep; n_dark ~ 2000 - M
+        assert!(queries < 60.0, "queries/sweep {queries}");
+        assert!(proposals > 0);
+    }
+
+    #[test]
+    fn full_posterior_counts_n_per_eval_and_matches_direct() {
+        let data = Arc::new(synth::synth_mnist(150, 6, 6));
+        let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
+        let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 2.0 });
+        let counters = Counters::new();
+        let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+        let theta0 = vec![0.05; model.dim()];
+        let mut fp = FullPosterior::new(model, prior, eval, theta0.clone());
+        assert_eq!(counters.lik_queries(), 150);
+        let direct = fp.true_log_posterior(&theta0);
+        assert!((fp.current_log_density() - direct).abs() < 1e-9);
+        let theta1 = vec![0.1; fp.dim()];
+        let lp = fp.log_density(&theta1);
+        assert_eq!(counters.lik_queries(), 300);
+        fp.commit(&theta1);
+        assert_eq!(counters.lik_queries(), 300); // memo hit
+        assert!((fp.current_log_density() - lp).abs() < 1e-12);
+    }
+}

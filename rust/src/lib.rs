@@ -1,0 +1,58 @@
+//! # firefly — Firefly Monte Carlo
+//!
+//! A production-grade reproduction of *“Firefly Monte Carlo: Exact MCMC with
+//! Subsets of Data”* (Maclaurin & Adams, 2015) as a three-layer Rust + JAX +
+//! Pallas system: the MCMC coordinator, data structures, samplers and
+//! diagnostics live in Rust; the likelihood/bound hot spot is a Pallas
+//! kernel inside a JAX graph, AOT-lowered to HLO and executed through
+//! PJRT (`runtime::XlaBackend`) with a pure-Rust fallback
+//! (`runtime::CpuBackend`). Python never runs on the sampling path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use firefly::configx::{Algorithm, ExperimentConfig, Task};
+//! use firefly::engine::run_experiment;
+//!
+//! let cfg = ExperimentConfig {
+//!     task: Task::LogisticMnist,
+//!     algorithm: Algorithm::MapTunedFlyMc,
+//!     iters: 2000,
+//!     burnin: 500,
+//!     ..Default::default()
+//! };
+//! let result = run_experiment(&cfg).unwrap();
+//! let row = result.table_row();
+//! println!("lik queries/iter: {:.0}", row.avg_lik_queries_per_iter);
+//! ```
+//!
+//! See `examples/` for the three paper experiments and DESIGN.md for the
+//! architecture and experiment index.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod configx;
+pub mod data;
+pub mod diagnostics;
+pub mod engine;
+pub mod flymc;
+pub mod linalg;
+pub mod map_estimate;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod samplers;
+pub mod testing;
+pub mod util;
+
+/// Convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::configx::{Algorithm, Backend, ExperimentConfig, Task};
+    pub use crate::engine::{run_experiment, ExperimentResult, TableRow};
+    pub use crate::flymc::{BrightSet, FullPosterior, PseudoPosterior};
+    pub use crate::models::{
+        IsoGaussian, Laplace, LogisticJJ, ModelBound, Prior, RobustT, SoftmaxBohning,
+    };
+    pub use crate::samplers::{Mala, RandomWalkMh, Sampler, SliceSampler, Target};
+    pub use crate::util::Rng;
+}

@@ -1,0 +1,324 @@
+//! Dense linear-algebra substrate (no external crates in the offline build).
+//!
+//! Row-major `Matrix` plus the handful of kernels the sampler hot path and
+//! the bound sufficient-statistics collapse need: `y = A x`, `y = A^T x`,
+//! symmetric rank-1 accumulation `S += w x x^T`, quadratic forms
+//! `x^T S x`, and a Cholesky factorization used by tests and by the
+//! Gaussian-proposal machinery.
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = self @ x  (rows x cols) @ (cols) -> (rows)
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// y = self^T @ x  (cols) <- (rows)
+    pub fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            axpy(x[i], self.row(i), y);
+        }
+    }
+
+    /// C = self @ other.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut c = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let crow = c.row_mut(i);
+                axpy(a, orow, crow);
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// S += w * x x^T (full square update; S must be cols==rows==x.len()).
+    pub fn add_weighted_outer(&mut self, w: f64, x: &[f64]) {
+        let n = x.len();
+        assert_eq!(self.rows, n);
+        assert_eq!(self.cols, n);
+        for i in 0..n {
+            let wxi = w * x[i];
+            if wxi == 0.0 {
+                continue;
+            }
+            let row = self.row_mut(i);
+            axpy(wxi, x, row);
+        }
+    }
+
+    /// x^T self x for square self.
+    pub fn quad_form(&self, x: &[f64]) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(x.len(), self.rows);
+        let mut acc = 0.0;
+        for i in 0..self.rows {
+            acc += x[i] * dot(self.row(i), x);
+        }
+        acc
+    }
+
+    /// Cholesky factor L (lower) with self = L L^T. Errors if not SPD.
+    pub fn cholesky(&self) -> Result<Matrix, String> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(format!("not SPD at pivot {i}: {sum}"));
+                    }
+                    l[(i, i)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Frobenius-norm distance to another matrix (test helper).
+    pub fn frob_dist(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product. The single hottest scalar kernel in the CPU backend
+/// (every likelihood evaluation is one of these per datum); unrolled 4-wide
+/// so LLVM vectorizes it.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut rest = 0.0;
+    for i in chunks * 4..a.len() {
+        rest += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + rest
+}
+
+/// y += alpha * x.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut r = Rng::new(1);
+        for len in [0, 1, 3, 4, 7, 51, 256] {
+            let a: Vec<f64> = (0..len).map(|_| r.normal()).collect();
+            let b: Vec<f64> = (0..len).map(|_| r.normal()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-10, "len {len}");
+        }
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let m = Matrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let mut y = vec![0.0; 3];
+        m.matvec(&[1.0, -1.0], &mut y);
+        assert_eq!(y, vec![-1.0, -1.0, -1.0]);
+        let mut z = vec![0.0; 2];
+        m.matvec_t(&[1.0, 1.0, 1.0], &mut z);
+        assert_eq!(z, vec![9.0, 12.0]);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(2);
+        let data: Vec<f64> = (0..12).map(|_| r.normal()).collect();
+        let m = Matrix::from_vec(3, 4, data);
+        let i3 = Matrix::identity(3);
+        assert!(i3.matmul(&m).frob_dist(&m) < 1e-14);
+    }
+
+    #[test]
+    fn outer_accumulation_matches_matmul() {
+        let mut r = Rng::new(3);
+        let rows: Vec<Vec<f64>> = (0..10)
+            .map(|_| (0..5).map(|_| r.normal()).collect())
+            .collect();
+        let w: Vec<f64> = (0..10).map(|_| r.f64() + 0.1).collect();
+        let mut s = Matrix::zeros(5, 5);
+        for (row, &wi) in rows.iter().zip(&w) {
+            s.add_weighted_outer(wi, row);
+        }
+        // compare with X^T diag(w) X
+        let x = Matrix::from_rows(rows);
+        let mut wx = x.clone();
+        for i in 0..10 {
+            let wi = w[i];
+            for v in wx.row_mut(i) {
+                *v *= wi;
+            }
+        }
+        let expect = x.transpose().matmul(&wx);
+        assert!(s.frob_dist(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn quad_form_matches_matvec() {
+        let mut r = Rng::new(4);
+        let mut s = Matrix::zeros(6, 6);
+        for _ in 0..8 {
+            let v: Vec<f64> = (0..6).map(|_| r.normal()).collect();
+            s.add_weighted_outer(1.0, &v);
+        }
+        let x: Vec<f64> = (0..6).map(|_| r.normal()).collect();
+        let mut sx = vec![0.0; 6];
+        s.matvec(&x, &mut sx);
+        assert!((s.quad_form(&x) - dot(&x, &sx)).abs() < 1e-10);
+        assert!(s.quad_form(&x) >= 0.0); // PSD by construction
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut r = Rng::new(5);
+        let mut s = Matrix::identity(5);
+        for _ in 0..10 {
+            let v: Vec<f64> = (0..5).map(|_| r.normal()).collect();
+            s.add_weighted_outer(0.5, &v);
+        }
+        let l = s.cholesky().unwrap();
+        let recon = l.matmul(&l.transpose());
+        assert!(recon.frob_dist(&s) < 1e-10);
+        // strictly upper entries are zero
+        for i in 0..5 {
+            for j in i + 1..5 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let m = Matrix::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(m.cholesky().is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! `firefly` CLI — run the paper's experiments from the command line.
+//!
+//! Subcommands:
+//!   run        — run one experiment (flags or --config TOML), print summary
+//!   table1     — run all three algorithms for a task, print the Table-1 rows
+//!   map        — run the MAP estimation alone, print the objective
+//!   artifacts  — list the XLA artifacts the runtime can see
+//!
+//! Examples:
+//!   firefly run --task mnist --algorithm map --iters 2000
+//!   firefly table1 --task mnist --n 12214 --iters 1500 --chains 2
+//!   firefly run --config my_experiment.toml --backend xla
+
+use firefly::bench_harness::Report;
+use firefly::cli::Args;
+use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use firefly::engine::{run_experiment, ExperimentResult};
+use firefly::runtime::Manifest;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: firefly <run|table1|map|artifacts> [flags]
+  common flags:
+    --task mnist|cifar|opv|toy     workload (default mnist)
+    --algorithm regular|untuned|map  (default map)
+    --backend cpu|xla              likelihood backend (default cpu)
+    --n <int>                      dataset size (default: paper scale)
+    --iters / --burnin <int>
+    --chains <int>                 replicas (threads on cpu backend)
+    --seed <int>
+    --q <float>                    q_dark->bright override
+    --explicit                     use explicit (Alg 1) z-resampling
+    --config <file.toml>           load config file first, flags override
+    --artifacts <dir>              artifact directory (default artifacts)"
+    );
+    std::process::exit(2);
+}
+
+fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        ExperimentConfig::from_str_toml(&text)?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(t) = args.get("task") {
+        cfg.task = Task::parse(t)?;
+    }
+    if let Some(a) = args.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(a)?;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = match b {
+            "cpu" => Backend::Cpu,
+            "xla" => Backend::Xla,
+            other => return Err(format!("unknown backend {other}")),
+        };
+    }
+    if let Some(n) = args.get("n") {
+        cfg.n_data = Some(n.parse().map_err(|_| "bad --n")?);
+    }
+    cfg.iters = args.get_usize("iters", cfg.iters);
+    cfg.burnin = args.get_usize("burnin", cfg.burnin);
+    cfg.chains = args.get_usize("chains", cfg.chains);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    if let Some(q) = args.get("q") {
+        cfg.q_dark_to_bright = Some(q.parse().map_err(|_| "bad --q")?);
+    }
+    if args.has("explicit") {
+        cfg.explicit_resample = true;
+    }
+    cfg.map_steps = args.get_usize("map-steps", cfg.map_steps);
+    cfg.artifacts_dir = args.get_str("artifacts", &cfg.artifacts_dir);
+    Ok(cfg)
+}
+
+fn print_summary(res: &ExperimentResult) {
+    let row = res.table_row();
+    println!("\n=== {} / {:?} ===", row.algorithm, res.config.task);
+    println!("data points (N):             {}", res.n_data);
+    println!("iterations x chains:         {} x {}", res.config.iters, res.chains.len());
+    println!("avg lik queries / iter:      {:.1}", row.avg_lik_queries_per_iter);
+    if row.avg_bright.is_finite() {
+        println!("avg bright points (M):       {:.1}", row.avg_bright);
+    }
+    println!("ESS / 1000 iters (min dim):  {:.2}", row.ess_per_1000);
+    println!("MAP tuning lik queries:      {}", res.map_lik_queries);
+    println!("wallclock per chain:         {:.2}s", row.wallclock_secs);
+}
+
+fn main() {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| usage());
+    match sub.as_str() {
+        "run" => {
+            let cfg = config_from_args(&args).unwrap_or_else(|e| {
+                eprintln!("config error: {e}");
+                std::process::exit(2)
+            });
+            match run_experiment(&cfg) {
+                Ok(res) => print_summary(&res),
+                Err(e) => {
+                    eprintln!("experiment failed: {e:#}");
+                    std::process::exit(1)
+                }
+            }
+        }
+        "table1" => {
+            let base = config_from_args(&args).unwrap_or_else(|e| {
+                eprintln!("config error: {e}");
+                std::process::exit(2)
+            });
+            let mut report = Report::new(
+                &format!("Table 1 — {:?}", base.task),
+                &[
+                    "Algorithm",
+                    "Avg lik queries/iter",
+                    "ESS per 1000 iters",
+                    "Speedup vs regular",
+                ],
+            );
+            let mut regular_row = None;
+            for alg in [Algorithm::RegularMcmc, Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc]
+            {
+                let mut cfg = base.clone();
+                cfg.algorithm = alg;
+                let res = run_experiment(&cfg).unwrap_or_else(|e| {
+                    eprintln!("{alg:?} failed: {e:#}");
+                    std::process::exit(1)
+                });
+                let row = res.table_row();
+                let speedup = match &regular_row {
+                    None => {
+                        regular_row = Some(row.clone());
+                        "(1)".to_string()
+                    }
+                    Some(reg) => format!("{:.1}", row.speedup_vs(reg)),
+                };
+                report.row(&[
+                    row.algorithm.clone(),
+                    format!("{:.0}", row.avg_lik_queries_per_iter),
+                    format!("{:.2}", row.ess_per_1000),
+                    speedup,
+                ]);
+                print_summary(&res);
+            }
+            report.print();
+        }
+        "map" => {
+            let cfg = config_from_args(&args).unwrap_or_else(|e| {
+                eprintln!("config error: {e}");
+                std::process::exit(2)
+            });
+            let (model, prior, _, _) = firefly::engine::experiment::build_model(&cfg);
+            let res = firefly::map_estimate::map_estimate(
+                model.as_ref(),
+                prior.as_ref(),
+                &firefly::map_estimate::MapConfig {
+                    steps: cfg.map_steps,
+                    seed: cfg.seed,
+                    ..Default::default()
+                },
+            );
+            println!("MAP objective estimate: {:.3}", res.final_log_post_estimate);
+            println!("lik queries: {}", res.lik_queries);
+            println!("theta[0..5]: {:?}", &res.theta[..res.theta.len().min(5)]);
+        }
+        "artifacts" => {
+            let dir = args.get_str("artifacts", "artifacts");
+            match Manifest::load(&dir) {
+                Ok(m) => {
+                    println!("{} artifacts in {dir}:", m.entries.len());
+                    for e in &m.entries {
+                        println!(
+                            "  {:<28} kind={:<8} d={:<4} k={} bucket={}",
+                            e.name,
+                            e.kind.as_str(),
+                            e.d,
+                            e.k,
+                            e.bucket
+                        );
+                    }
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(1)
+                }
+            }
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,216 @@
+//! Instrumentation counters.
+//!
+//! The paper reports computational cost in *likelihood evaluations per
+//! iteration* — an implementation-independent unit. `Counters` is threaded
+//! through every evaluator so both backends (CPU and XLA) account queries
+//! identically: one "likelihood query" per datum whose `L_n` is computed,
+//! one "bound query" per datum whose `B_n` is computed pointwise (the
+//! collapsed product is O(1) in N and is tracked separately).
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// Shared counters (single chain = single thread, so `Cell` suffices; each
+/// chain owns its own `Counters` and the multichain runner aggregates).
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    inner: Rc<CounterCells>,
+}
+
+#[derive(Debug, Default)]
+struct CounterCells {
+    lik_queries: Cell<u64>,
+    bound_queries: Cell<u64>,
+    collapsed_bound_evals: Cell<u64>,
+    xla_executions: Cell<u64>,
+    padded_lanes: Cell<u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add_lik(&self, n: u64) {
+        self.inner.lik_queries.set(self.inner.lik_queries.get() + n);
+    }
+    #[inline]
+    pub fn add_bound(&self, n: u64) {
+        self.inner.bound_queries.set(self.inner.bound_queries.get() + n);
+    }
+    #[inline]
+    pub fn add_collapsed(&self, n: u64) {
+        self.inner
+            .collapsed_bound_evals
+            .set(self.inner.collapsed_bound_evals.get() + n);
+    }
+    #[inline]
+    pub fn add_xla_exec(&self, n: u64) {
+        self.inner.xla_executions.set(self.inner.xla_executions.get() + n);
+    }
+    #[inline]
+    pub fn add_padded(&self, n: u64) {
+        self.inner.padded_lanes.set(self.inner.padded_lanes.get() + n);
+    }
+
+    pub fn lik_queries(&self) -> u64 {
+        self.inner.lik_queries.get()
+    }
+    pub fn bound_queries(&self) -> u64 {
+        self.inner.bound_queries.get()
+    }
+    pub fn collapsed_bound_evals(&self) -> u64 {
+        self.inner.collapsed_bound_evals.get()
+    }
+    pub fn xla_executions(&self) -> u64 {
+        self.inner.xla_executions.get()
+    }
+    pub fn padded_lanes(&self) -> u64 {
+        self.inner.padded_lanes.get()
+    }
+
+    /// Snapshot for per-iteration deltas.
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            lik_queries: self.lik_queries(),
+            bound_queries: self.bound_queries(),
+            collapsed_bound_evals: self.collapsed_bound_evals(),
+            xla_executions: self.xla_executions(),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.inner.lik_queries.set(0);
+        self.inner.bound_queries.set(0);
+        self.inner.collapsed_bound_evals.set(0);
+        self.inner.xla_executions.set(0);
+        self.inner.padded_lanes.set(0);
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub lik_queries: u64,
+    pub bound_queries: u64,
+    pub collapsed_bound_evals: u64,
+    pub xla_executions: u64,
+}
+
+impl CounterSnapshot {
+    pub fn delta(&self, later: &CounterSnapshot) -> CounterSnapshot {
+        CounterSnapshot {
+            lik_queries: later.lik_queries - self.lik_queries,
+            bound_queries: later.bound_queries - self.bound_queries,
+            collapsed_bound_evals: later.collapsed_bound_evals - self.collapsed_bound_evals,
+            xla_executions: later.xla_executions - self.xla_executions,
+        }
+    }
+}
+
+/// Simple streaming histogram for per-iteration quantities (bright counts,
+/// queries). Fixed-width bins; used by the bench reports.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub count: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let nbins = self.bins.len();
+            let b = ((x - self.lo) / (self.hi - self.lo) * nbins as f64) as usize;
+            self.bins[b.min(nbins - 1)] += 1;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.count < 2 {
+            return f64::NAN;
+        }
+        let m = self.mean();
+        ((self.sum_sq / self.count as f64 - m * m).max(0.0)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let c = Counters::new();
+        c.add_lik(10);
+        c.add_bound(3);
+        let snap = c.snapshot();
+        c.add_lik(5);
+        c.add_xla_exec(1);
+        let d = snap.delta(&c.snapshot());
+        assert_eq!(d.lik_queries, 5);
+        assert_eq!(d.bound_queries, 0);
+        assert_eq!(d.xla_executions, 1);
+        assert_eq!(c.lik_queries(), 15);
+        c.reset();
+        assert_eq!(c.lik_queries(), 0);
+    }
+
+    #[test]
+    fn counters_are_shared_clones() {
+        let a = Counters::new();
+        let b = a.clone();
+        b.add_lik(7);
+        assert_eq!(a.lik_queries(), 7);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 + 0.5);
+        }
+        h.record(-1.0);
+        h.record(42.0);
+        assert_eq!(h.count, 12);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.bins.iter().sum::<u64>(), 10);
+        // sum = (0.5+...+9.5) + (-1) + 42 = 50 + 41 = 91
+        assert!((h.mean() - 91.0 / 12.0).abs() < 1e-12);
+    }
+}

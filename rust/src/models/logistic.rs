@@ -1,0 +1,307 @@
+//! Logistic regression + Jaakkola–Jordan bound (paper §3.1, MNIST experiment).
+//!
+//! Likelihood  : L_n = sigmoid(t_n theta^T x_n)
+//! Bound       : log B_n(s) = a(xi_n) s^2 + s/2 + c(xi_n), s = t_n theta^T x_n
+//!               a = -tanh(xi/2)/(4 xi), c = -a xi^2 + xi/2 - log(e^xi + 1),
+//!               tight at s = ±xi.
+//! Collapse    : sum_n log B_n = theta^T A theta + b^T theta + c0 with
+//!               A = sum a_n x_n x_n^T,  b = 1/2 sum t_n x_n,  c0 = sum c_n —
+//!               O(D^2) per evaluation after O(N D^2) setup.
+
+use std::sync::Arc;
+
+use super::{bright_coeff, ModelBound, ModelKind};
+use crate::data::LogisticData;
+use crate::linalg::{axpy, dot, Matrix};
+use crate::util::math::{log1p_exp, log_sigmoid, sigmoid};
+
+/// JJ coefficients for a given xi (mirrors `jj_coeffs` in ref.py).
+#[inline]
+pub fn jj_coeffs(xi: f64) -> (f64, f64, f64) {
+    let axi = xi.abs();
+    let a = if axi < 1e-6 {
+        -0.125 + axi * axi / 96.0
+    } else {
+        -(axi / 2.0).tanh() / (4.0 * axi)
+    };
+    let c = -a * axi * axi + axi / 2.0 - log1p_exp(axi);
+    (a, 0.5, c)
+}
+
+pub struct LogisticJJ {
+    pub data: Arc<LogisticData>,
+    /// per-datum bound anchor xi_n (paper: 1.5 untuned; |theta_MAP^T x_n| tuned)
+    pub xi: Vec<f64>,
+    // collapsed sufficient statistics
+    a_mat: Matrix,
+    b_vec: Vec<f64>,
+    c_sum: f64,
+}
+
+impl LogisticJJ {
+    /// Build with a constant anchor xi (paper's untuned variant uses 1.5).
+    pub fn new(data: Arc<LogisticData>, xi_const: f64) -> Self {
+        let n = data.n();
+        let mut m = LogisticJJ {
+            data,
+            xi: vec![xi_const; n],
+            a_mat: Matrix::zeros(0, 0),
+            b_vec: Vec::new(),
+            c_sum: 0.0,
+        };
+        m.rebuild_stats();
+        m
+    }
+
+    /// Recompute the collapsed sufficient statistics — O(N D^2).
+    pub fn rebuild_stats(&mut self) {
+        let d = self.data.d();
+        let mut a_mat = Matrix::zeros(d, d);
+        let mut b_vec = vec![0.0; d];
+        let mut c_sum = 0.0;
+        for i in 0..self.data.n() {
+            let (a, _, c) = jj_coeffs(self.xi[i]);
+            let row = self.data.x.row(i);
+            a_mat.add_weighted_outer(a, row);
+            axpy(0.5 * self.data.t[i], row, &mut b_vec);
+            c_sum += c;
+        }
+        self.a_mat = a_mat;
+        self.b_vec = b_vec;
+        self.c_sum = c_sum;
+    }
+
+    #[inline]
+    fn s(&self, theta: &[f64], n: usize) -> f64 {
+        self.data.t[n] * dot(self.data.x.row(n), theta)
+    }
+}
+
+impl ModelBound for LogisticJJ {
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+    fn dim(&self) -> usize {
+        self.data.d()
+    }
+    fn kind(&self) -> ModelKind {
+        ModelKind::Logistic
+    }
+
+    fn log_lik(&self, theta: &[f64], n: usize) -> f64 {
+        log_sigmoid(self.s(theta, n))
+    }
+
+    fn log_lik_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+        let s = self.s(theta, n);
+        let coeff = sigmoid(-s) * self.data.t[n];
+        axpy(coeff, self.data.x.row(n), grad);
+    }
+
+    fn log_both(&self, theta: &[f64], n: usize) -> (f64, f64) {
+        let s = self.s(theta, n);
+        let ll = log_sigmoid(s);
+        let (a, b, c) = jj_coeffs(self.xi[n]);
+        let lb = (a * s * s + b * s + c).min(ll);
+        (ll, lb)
+    }
+
+    fn pseudo_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+        let s = self.s(theta, n);
+        let ll = log_sigmoid(s);
+        let (a, b, c) = jj_coeffs(self.xi[n]);
+        let lb = (a * s * s + b * s + c).min(ll);
+        let dll = sigmoid(-s);
+        let dlb = 2.0 * a * s + b;
+        let coeff = bright_coeff(dll, dlb, lb - ll) * self.data.t[n];
+        axpy(coeff, self.data.x.row(n), grad);
+    }
+
+    fn log_both_pseudo_grad(&self, theta: &[f64], n: usize, grad: &mut [f64]) -> (f64, f64) {
+        let s = self.s(theta, n);
+        let ll = log_sigmoid(s);
+        let (a, b, c) = jj_coeffs(self.xi[n]);
+        let lb = (a * s * s + b * s + c).min(ll);
+        let dll = sigmoid(-s);
+        let dlb = 2.0 * a * s + b;
+        let coeff = bright_coeff(dll, dlb, lb - ll) * self.data.t[n];
+        axpy(coeff, self.data.x.row(n), grad);
+        (ll, lb)
+    }
+
+    fn log_bound_product(&self, theta: &[f64]) -> f64 {
+        self.a_mat.quad_form(theta) + dot(&self.b_vec, theta) + self.c_sum
+    }
+
+    fn grad_log_bound_product_acc(&self, theta: &[f64], grad: &mut [f64]) {
+        // d/dtheta [theta^T A theta + b^T theta] = 2 A theta + b (A symmetric)
+        let d = theta.len();
+        let mut ax = vec![0.0; d];
+        self.a_mat.matvec(theta, &mut ax);
+        for i in 0..d {
+            grad[i] += 2.0 * ax[i] + self.b_vec[i];
+        }
+    }
+
+    fn tune_anchors_map(&mut self, theta_map: &[f64]) {
+        for n in 0..self.data.n() {
+            self.xi[n] = self.s(theta_map, n).abs();
+        }
+        self.rebuild_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn small() -> LogisticJJ {
+        let data = Arc::new(synth::synth_mnist(200, 10, 1));
+        LogisticJJ::new(data, 1.5)
+    }
+
+    #[test]
+    fn bound_below_likelihood_everywhere() {
+        let m = small();
+        testing::check(
+            "jj bound <= lik",
+            200,
+            |r| {
+                let theta = testing::gen::vec_normal(r, m.dim(), 2.0);
+                let n = r.below(m.n());
+                (theta, n)
+            },
+            |(theta, n)| {
+                let (ll, lb) = m.log_both(theta, *n);
+                lb <= ll && lb.is_finite()
+            },
+        );
+    }
+
+    #[test]
+    fn bound_tight_at_anchor_after_map_tuning() {
+        let mut m = small();
+        let mut rng = Rng::new(2);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
+        m.tune_anchors_map(&theta);
+        for n in 0..m.n() {
+            let (ll, lb) = m.log_both(&theta, n);
+            assert!((ll - lb).abs() < 1e-10, "n={n}: {ll} vs {lb}");
+        }
+    }
+
+    #[test]
+    fn collapsed_product_matches_pointwise_sum() {
+        let m = small();
+        testing::check_msg(
+            "collapse == sum of bounds",
+            25,
+            |r| testing::gen::vec_normal(r, m.dim(), 1.0),
+            |theta| {
+                // pointwise sum without the min() clamp (collapse can't clamp)
+                let mut sum = 0.0;
+                for n in 0..m.n() {
+                    let s = m.s(theta, n);
+                    let (a, b, c) = jj_coeffs(m.xi[n]);
+                    sum += a * s * s + b * s + c;
+                }
+                let col = m.log_bound_product(theta);
+                if (sum - col).abs() < 1e-8 * (1.0 + sum.abs()) {
+                    Ok(())
+                } else {
+                    Err(format!("sum {sum} vs collapsed {col}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn collapsed_grad_matches_fd() {
+        let m = small();
+        let mut rng = Rng::new(3);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
+        let mut g = vec![0.0; m.dim()];
+        m.grad_log_bound_product_acc(&theta, &mut g);
+        let h = 1e-6;
+        let mut tp = theta.clone();
+        for i in 0..m.dim() {
+            tp[i] = theta[i] + h;
+            let fp = m.log_bound_product(&tp);
+            tp[i] = theta[i] - h;
+            let fm = m.log_bound_product(&tp);
+            tp[i] = theta[i];
+            let fd = (fp - fm) / (2.0 * h);
+            assert!((g[i] - fd).abs() < 1e-4 * (1.0 + fd.abs()), "i={i}: {} vs {fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn lik_grad_matches_fd() {
+        let m = small();
+        let mut rng = Rng::new(4);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
+        for n in [0, 7, 100] {
+            let mut g = vec![0.0; m.dim()];
+            m.log_lik_grad_acc(&theta, n, &mut g);
+            let h = 1e-6;
+            let mut tp = theta.clone();
+            for i in 0..m.dim() {
+                tp[i] = theta[i] + h;
+                let fp = m.log_lik(&tp, n);
+                tp[i] = theta[i] - h;
+                let fm = m.log_lik(&tp, n);
+                tp[i] = theta[i];
+                let fd = (fp - fm) / (2.0 * h);
+                assert!((g[i] - fd).abs() < 1e-5, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pseudo_grad_matches_fd() {
+        let m = small();
+        let mut rng = Rng::new(5);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
+        for n in [1, 13, 55] {
+            let mut g = vec![0.0; m.dim()];
+            m.pseudo_grad_acc(&theta, n, &mut g);
+            let f = |t: &[f64]| {
+                let (ll, lb) = m.log_both(t, n);
+                super::super::log_pseudo_lik(ll, lb)
+            };
+            let h = 1e-6;
+            let mut tp = theta.clone();
+            for i in 0..m.dim() {
+                tp[i] = theta[i] + h;
+                let fp = f(&tp);
+                tp[i] = theta[i] - h;
+                let fm = f(&tp);
+                tp[i] = theta[i];
+                let fd = (fp - fm) / (2.0 * h);
+                assert!(
+                    (g[i] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                    "n={n} i={i}: {} vs {fd}",
+                    g[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn untuned_xi_15_bright_probability_small_in_confident_region() {
+        // Paper: with xi = 1.5, P(bright) < 0.02 where 0.1 < L < 0.9.
+        let (a, b, c) = jj_coeffs(1.5);
+        for s in [-2.0f64, -1.0, 0.0, 1.0, 2.0] {
+            let ll = log_sigmoid(s);
+            let l = ll.exp();
+            if l > 0.1 && l < 0.9 {
+                let lb = a * s * s + b * s + c;
+                let p_bright = 1.0 - (lb - ll).exp();
+                assert!(p_bright < 0.02, "s={s}: p_bright={p_bright}");
+            }
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Priors over the flattened parameter vector.
+
+use crate::util::Rng;
+
+pub trait Prior: Send + Sync {
+    fn log_density(&self, theta: &[f64]) -> f64;
+    /// grad += d log p / d theta.
+    fn grad_acc(&self, theta: &[f64], grad: &mut [f64]);
+    /// Draw from the prior (chain initialization, as in the paper).
+    fn sample(&self, dim: usize, rng: &mut Rng) -> Vec<f64>;
+}
+
+/// Isotropic Gaussian N(0, scale^2 I). Used for the MNIST and CIFAR weights.
+#[derive(Clone, Debug)]
+pub struct IsoGaussian {
+    pub scale: f64,
+}
+
+impl Prior for IsoGaussian {
+    fn log_density(&self, theta: &[f64]) -> f64 {
+        let s2 = self.scale * self.scale;
+        let d = theta.len() as f64;
+        let ss: f64 = theta.iter().map(|t| t * t).sum();
+        -0.5 * d * (2.0 * std::f64::consts::PI * s2).ln() - 0.5 * ss / s2
+    }
+
+    fn grad_acc(&self, theta: &[f64], grad: &mut [f64]) {
+        let inv_s2 = 1.0 / (self.scale * self.scale);
+        for (g, t) in grad.iter_mut().zip(theta) {
+            *g -= t * inv_s2;
+        }
+    }
+
+    fn sample(&self, dim: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..dim).map(|_| rng.normal() * self.scale).collect()
+    }
+}
+
+/// Laplace(0, b) per component — the sparsity-inducing prior of the OPV
+/// experiment. Sub-gradient 0 at the (measure-zero) kink.
+#[derive(Clone, Debug)]
+pub struct Laplace {
+    pub b: f64,
+}
+
+impl Prior for Laplace {
+    fn log_density(&self, theta: &[f64]) -> f64 {
+        let d = theta.len() as f64;
+        let l1: f64 = theta.iter().map(|t| t.abs()).sum();
+        -d * (2.0 * self.b).ln() - l1 / self.b
+    }
+
+    fn grad_acc(&self, theta: &[f64], grad: &mut [f64]) {
+        let inv_b = 1.0 / self.b;
+        for (g, t) in grad.iter_mut().zip(theta) {
+            *g -= t.signum() * inv_b * if *t == 0.0 { 0.0 } else { 1.0 };
+        }
+    }
+
+    fn sample(&self, dim: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..dim).map(|_| rng.laplace(self.b)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_grad(f: impl Fn(&[f64]) -> f64, theta: &[f64]) -> Vec<f64> {
+        let h = 1e-6;
+        let mut g = vec![0.0; theta.len()];
+        let mut tp = theta.to_vec();
+        for i in 0..theta.len() {
+            tp[i] = theta[i] + h;
+            let fp = f(&tp);
+            tp[i] = theta[i] - h;
+            let fm = f(&tp);
+            tp[i] = theta[i];
+            g[i] = (fp - fm) / (2.0 * h);
+        }
+        g
+    }
+
+    #[test]
+    fn gaussian_normalization_and_grad() {
+        let p = IsoGaussian { scale: 2.0 };
+        // at theta=0, density integrates: check logp(0) = -d/2 log(2 pi s^2)
+        let lp0 = p.log_density(&[0.0, 0.0]);
+        assert!((lp0 + (2.0 * std::f64::consts::PI * 4.0).ln()).abs() < 1e-12);
+        let theta = [0.3, -1.7, 2.2];
+        let mut g = vec![0.0; 3];
+        p.grad_acc(&theta, &mut g);
+        let fd = fd_grad(|t| p.log_density(t), &theta);
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn laplace_grad_matches_fd_away_from_kink() {
+        let p = Laplace { b: 0.7 };
+        let theta = [0.5, -0.4, 1.1];
+        let mut g = vec![0.0; 3];
+        p.grad_acc(&theta, &mut g);
+        let fd = fd_grad(|t| p.log_density(t), &theta);
+        for (a, b) in g.iter().zip(&fd) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn samples_match_scale() {
+        let mut rng = Rng::new(0);
+        let p = IsoGaussian { scale: 3.0 };
+        let s = p.sample(10_000, &mut rng);
+        let var = s.iter().map(|x| x * x).sum::<f64>() / s.len() as f64;
+        assert!((var - 9.0).abs() < 0.5, "var {var}");
+        let l = Laplace { b: 2.0 };
+        let s = l.sample(10_000, &mut rng);
+        let mean_abs = s.iter().map(|x| x.abs()).sum::<f64>() / s.len() as f64;
+        assert!((mean_abs - 2.0).abs() < 0.1, "mean|x| {mean_abs}");
+    }
+}

@@ -1,0 +1,304 @@
+//! Robust (student-t) regression + tangent Gaussian bound (paper §4.3, OPV).
+//!
+//! Likelihood : log L_n = C(nu, sigma) - (nu+1)/2 log(1 + u/(nu sigma^2)),
+//!              u = r^2, r = y_n - theta^T x_n.
+//! Bound      : tangent to the (convex in u) log-density at u = u0_n:
+//!              log B_n = f(u0_n) + f'(u0_n)(u - u0_n) — a scaled Gaussian
+//!              in r, tight at r^2 = u0_n (u0 = 0 untuned; residual^2 at
+//!              theta_MAP tuned — paper's xi = theta_MAP^T x choice).
+//! Collapse   : sum_n log B_n = theta^T A theta + b^T theta + c0 with
+//!              A = sum fp_n x x^T, b = -2 sum fp_n y_n x_n,
+//!              c0 = sum [f(u0_n) - fp_n u0_n + fp_n y_n^2].
+
+use std::sync::Arc;
+
+use super::{bright_coeff, ModelBound, ModelKind};
+use crate::data::RegressionData;
+use crate::linalg::{axpy, dot, Matrix};
+use crate::util::math::t_logconst;
+
+pub struct RobustT {
+    pub data: Arc<RegressionData>,
+    pub nu: f64,
+    pub sigma: f64,
+    /// per-datum tangent location u0_n (in u = r^2 space)
+    pub u0: Vec<f64>,
+    logc: f64,
+    // collapsed sufficient statistics
+    a_mat: Matrix,
+    b_vec: Vec<f64>,
+    c_sum: f64,
+}
+
+impl RobustT {
+    /// Untuned: u0_n = 0 for all n (paper's xi = 0 case).
+    pub fn new(data: Arc<RegressionData>, nu: f64, sigma: f64) -> Self {
+        let n = data.n();
+        let mut m = RobustT {
+            data,
+            nu,
+            sigma,
+            u0: vec![0.0; n],
+            logc: t_logconst(nu, sigma),
+            a_mat: Matrix::zeros(0, 0),
+            b_vec: Vec::new(),
+            c_sum: 0.0,
+        };
+        m.rebuild_stats();
+        m
+    }
+
+    #[inline]
+    fn c2(&self) -> f64 {
+        self.nu * self.sigma * self.sigma
+    }
+
+    #[inline]
+    fn resid(&self, theta: &[f64], n: usize) -> f64 {
+        self.data.y[n] - dot(self.data.x.row(n), theta)
+    }
+
+    /// f(u0) and f'(u0) of the log-density as a function of u.
+    #[inline]
+    fn tangent(&self, u0: f64) -> (f64, f64) {
+        let c2 = self.c2();
+        let f0 = self.logc - (self.nu + 1.0) / 2.0 * (u0 / c2).ln_1p();
+        let fp0 = -(self.nu + 1.0) / 2.0 / (c2 + u0);
+        (f0, fp0)
+    }
+
+    /// Recompute the collapsed sufficient statistics — O(N D^2).
+    pub fn rebuild_stats(&mut self) {
+        let d = self.data.d();
+        let mut a_mat = Matrix::zeros(d, d);
+        let mut b_vec = vec![0.0; d];
+        let mut c_sum = 0.0;
+        for i in 0..self.data.n() {
+            let (f0, fp0) = self.tangent(self.u0[i]);
+            let row = self.data.x.row(i);
+            let y = self.data.y[i];
+            a_mat.add_weighted_outer(fp0, row);
+            axpy(-2.0 * fp0 * y, row, &mut b_vec);
+            c_sum += f0 - fp0 * self.u0[i] + fp0 * y * y;
+        }
+        self.a_mat = a_mat;
+        self.b_vec = b_vec;
+        self.c_sum = c_sum;
+    }
+}
+
+impl ModelBound for RobustT {
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+    fn dim(&self) -> usize {
+        self.data.d()
+    }
+    fn kind(&self) -> ModelKind {
+        ModelKind::Robust
+    }
+
+    fn log_lik(&self, theta: &[f64], n: usize) -> f64 {
+        let r = self.resid(theta, n);
+        self.logc - (self.nu + 1.0) / 2.0 * (r * r / self.c2()).ln_1p()
+    }
+
+    fn log_lik_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+        let r = self.resid(theta, n);
+        // d logL / d r = -(nu+1) r / (c2 + r^2); d r / d theta = -x
+        let coeff = (self.nu + 1.0) * r / (self.c2() + r * r);
+        axpy(coeff, self.data.x.row(n), grad);
+    }
+
+    fn log_both(&self, theta: &[f64], n: usize) -> (f64, f64) {
+        let r = self.resid(theta, n);
+        let u = r * r;
+        let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / self.c2()).ln_1p();
+        let (f0, fp0) = self.tangent(self.u0[n]);
+        let lb = (f0 + fp0 * (u - self.u0[n])).min(ll);
+        (ll, lb)
+    }
+
+    fn pseudo_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+        let r = self.resid(theta, n);
+        let u = r * r;
+        let c2 = self.c2();
+        let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / c2).ln_1p();
+        let (f0, fp0) = self.tangent(self.u0[n]);
+        let lb = (f0 + fp0 * (u - self.u0[n])).min(ll);
+        let dll = -(self.nu + 1.0) * r / (c2 + u);
+        let dlb = 2.0 * fp0 * r;
+        let coeff = bright_coeff(dll, dlb, lb - ll);
+        axpy(-coeff, self.data.x.row(n), grad);
+    }
+
+    fn log_both_pseudo_grad(&self, theta: &[f64], n: usize, grad: &mut [f64]) -> (f64, f64) {
+        let r = self.resid(theta, n);
+        let u = r * r;
+        let c2 = self.c2();
+        let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / c2).ln_1p();
+        let (f0, fp0) = self.tangent(self.u0[n]);
+        let lb = (f0 + fp0 * (u - self.u0[n])).min(ll);
+        let dll = -(self.nu + 1.0) * r / (c2 + u);
+        let dlb = 2.0 * fp0 * r;
+        let coeff = bright_coeff(dll, dlb, lb - ll);
+        axpy(-coeff, self.data.x.row(n), grad);
+        (ll, lb)
+    }
+
+    fn log_bound_product(&self, theta: &[f64]) -> f64 {
+        self.a_mat.quad_form(theta) + dot(&self.b_vec, theta) + self.c_sum
+    }
+
+    fn grad_log_bound_product_acc(&self, theta: &[f64], grad: &mut [f64]) {
+        let d = theta.len();
+        let mut ax = vec![0.0; d];
+        self.a_mat.matvec(theta, &mut ax);
+        for i in 0..d {
+            grad[i] += 2.0 * ax[i] + self.b_vec[i];
+        }
+    }
+
+    fn tune_anchors_map(&mut self, theta_map: &[f64]) {
+        for n in 0..self.data.n() {
+            let r = self.resid(theta_map, n);
+            self.u0[n] = r * r;
+        }
+        self.rebuild_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn small() -> RobustT {
+        let data = Arc::new(synth::synth_opv(300, 9, 3));
+        RobustT::new(data, 4.0, 0.8)
+    }
+
+    #[test]
+    fn bound_below_likelihood_everywhere() {
+        let mut m = small();
+        let mut rng = Rng::new(21);
+        let anchor: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
+        m.tune_anchors_map(&anchor);
+        testing::check(
+            "t bound <= lik",
+            200,
+            |r| {
+                let theta = testing::gen::vec_normal(r, m.dim(), 1.5);
+                let n = r.below(m.n());
+                (theta, n)
+            },
+            |(theta, n)| {
+                let (ll, lb) = m.log_both(theta, *n);
+                lb <= ll && lb.is_finite()
+            },
+        );
+    }
+
+    #[test]
+    fn bound_tight_at_anchor() {
+        let mut m = small();
+        let mut rng = Rng::new(22);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
+        m.tune_anchors_map(&theta);
+        for n in 0..m.n() {
+            let (ll, lb) = m.log_both(&theta, n);
+            assert!((ll - lb).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn collapsed_product_matches_pointwise_sum() {
+        let mut m = small();
+        let mut rng = Rng::new(23);
+        let anchor: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.3).collect();
+        m.tune_anchors_map(&anchor);
+        testing::check_msg(
+            "t collapse == sum",
+            20,
+            |r| testing::gen::vec_normal(r, m.dim(), 1.0),
+            |theta| {
+                let mut sum = 0.0;
+                for n in 0..m.n() {
+                    let r = m.resid(theta, n);
+                    let (f0, fp0) = m.tangent(m.u0[n]);
+                    sum += f0 + fp0 * (r * r - m.u0[n]);
+                }
+                let col = m.log_bound_product(theta);
+                if (sum - col).abs() < 1e-7 * (1.0 + sum.abs()) {
+                    Ok(())
+                } else {
+                    Err(format!("sum {sum} vs collapsed {col}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn grads_match_fd() {
+        let m = small();
+        let mut rng = Rng::new(24);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
+        let h = 1e-6;
+        // collapsed grad
+        let mut g = vec![0.0; m.dim()];
+        m.grad_log_bound_product_acc(&theta, &mut g);
+        let mut tp = theta.clone();
+        for i in 0..m.dim() {
+            tp[i] = theta[i] + h;
+            let fp = m.log_bound_product(&tp);
+            tp[i] = theta[i] - h;
+            let fm = m.log_bound_product(&tp);
+            tp[i] = theta[i];
+            let fd = (fp - fm) / (2.0 * h);
+            assert!((g[i] - fd).abs() < 1e-3 * (1.0 + fd.abs()), "collapse i={i}");
+        }
+        // per-point lik + pseudo grads
+        for n in [2, 41] {
+            let mut gl = vec![0.0; m.dim()];
+            m.log_lik_grad_acc(&theta, n, &mut gl);
+            let mut gp = vec![0.0; m.dim()];
+            m.pseudo_grad_acc(&theta, n, &mut gp);
+            for i in 0..m.dim() {
+                tp[i] = theta[i] + h;
+                let lp = m.log_lik(&tp, n);
+                let (lla, lba) = m.log_both(&tp, n);
+                let pa = super::super::log_pseudo_lik(lla, lba);
+                tp[i] = theta[i] - h;
+                let lm = m.log_lik(&tp, n);
+                let (llb, lbb) = m.log_both(&tp, n);
+                let pb = super::super::log_pseudo_lik(llb, lbb);
+                tp[i] = theta[i];
+                assert!((gl[i] - (lp - lm) / (2.0 * h)).abs() < 1e-5, "lik n={n} i={i}");
+                let fd = (pa - pb) / (2.0 * h);
+                assert!(
+                    (gp[i] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                    "pseudo n={n} i={i}: {} vs {fd}",
+                    gp[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heavier_tail_than_gaussian_bound() {
+        // Far from the anchor the t-likelihood dominates the Gaussian bound
+        // by a growing margin — that's exactly why outliers go bright.
+        let m = small();
+        let theta = vec![0.0; m.dim()];
+        let mut last_gap: f64 = 0.0;
+        for n in 0..5 {
+            let (ll, lb) = m.log_both(&theta, n);
+            let gap = ll - lb;
+            assert!(gap >= 0.0);
+            last_gap = last_gap.max(gap);
+        }
+        assert!(last_gap.is_finite());
+    }
+}

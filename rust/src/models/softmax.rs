@@ -1,0 +1,410 @@
+//! Softmax classification + Böhning bound (paper §4.2, CIFAR experiment).
+//!
+//! Likelihood  : log L_n = eta_{t_n} - lse(eta),  eta = Theta x_n (K logits)
+//! Bound       : log B_n = f(psi_n) + g_n^T (eta - psi_n)
+//!               - 1/2 (eta-psi_n)^T A (eta-psi_n),
+//!               A = 1/2 (I - 11^T/K), g_n = onehot(t_n) - softmax(psi_n).
+//!               Tight (value + gradient) at eta = psi_n.
+//! Collapse    : sum_n log B_n = c0 + sum_k <G_k, theta_k>
+//!               - 1/2 sum_n eta_n^T A eta_n, the quadratic collapsing via
+//!               S = sum_n x_n x_n^T:
+//!               sum_n eta^T A eta = 1/2 [ sum_k theta_k^T S theta_k
+//!                                         - (1/K) v^T S v ],  v = sum_k theta_k.
+//!
+//! `theta` is flattened row-major [K, D].
+
+use std::sync::Arc;
+
+use super::{ModelBound, ModelKind};
+use crate::data::SoftmaxData;
+use crate::linalg::{axpy, dot, Matrix};
+use crate::util::math::logsumexp;
+
+pub struct SoftmaxBohning {
+    pub data: Arc<SoftmaxData>,
+    /// per-datum anchor logits psi_n, flattened [N, K] (zeros = untuned)
+    pub psi: Vec<f64>,
+    // collapsed sufficient statistics
+    s_mat: Matrix,    // sum x x^T, anchor-independent
+    g_mat: Matrix,    // [K, D]: sum (g_n + A psi_n) x_n^T
+    c0: f64,
+    // scratch for logit computation (avoid per-call alloc)
+    k: usize,
+}
+
+impl SoftmaxBohning {
+    /// Untuned: anchors psi_n = 0.
+    pub fn new(data: Arc<SoftmaxData>) -> Self {
+        let k = data.k;
+        let n = data.n();
+        let d = data.d();
+        let mut s_mat = Matrix::zeros(d, d);
+        for i in 0..n {
+            s_mat.add_weighted_outer(1.0, data.x.row(i));
+        }
+        let mut m = SoftmaxBohning {
+            data,
+            psi: vec![0.0; n * k],
+            s_mat,
+            g_mat: Matrix::zeros(k, d),
+            c0: 0.0,
+            k,
+        };
+        m.rebuild_stats();
+        m
+    }
+
+    /// logits eta = Theta x_n into `out` (len K).
+    #[inline]
+    pub fn logits(&self, theta: &[f64], n: usize, out: &mut [f64]) {
+        let d = self.data.d();
+        let row = self.data.x.row(n);
+        for (kk, o) in out.iter_mut().enumerate() {
+            *o = dot(&theta[kk * d..(kk + 1) * d], row);
+        }
+    }
+
+    #[inline]
+    fn psi_of(&self, n: usize) -> &[f64] {
+        &self.psi[n * self.k..(n + 1) * self.k]
+    }
+
+    /// (f(psi), g + A psi) for datum n; g = onehot - softmax(psi).
+    fn anchor_terms(&self, n: usize) -> (f64, Vec<f64>) {
+        let k = self.k;
+        let psi = self.psi_of(n);
+        let lse = logsumexp(psi);
+        let label = self.data.labels[n];
+        let f_psi = psi[label] - lse;
+        let psi_mean: f64 = psi.iter().sum::<f64>() / k as f64;
+        let mut ga = vec![0.0; k];
+        for kk in 0..k {
+            let g = (if kk == label { 1.0 } else { 0.0 }) - (psi[kk] - lse).exp();
+            // A psi = 1/2 (psi - mean(psi))
+            ga[kk] = g + 0.5 * (psi[kk] - psi_mean);
+        }
+        (f_psi, ga)
+    }
+
+    /// Rebuild G and c0 (S is anchor-independent) — O(N K D).
+    pub fn rebuild_stats(&mut self) {
+        let (k, d, n) = (self.k, self.data.d(), self.data.n());
+        let mut g_mat = Matrix::zeros(k, d);
+        let mut c0 = 0.0;
+        for i in 0..n {
+            let (f_psi, ga) = self.anchor_terms(i);
+            let psi = self.psi_of(i);
+            // c0_n = f(psi) - (g + A psi)^T psi + 1/2 psi^T A psi
+            let psi_mean: f64 = psi.iter().sum::<f64>() / k as f64;
+            let quad: f64 = psi
+                .iter()
+                .map(|&p| 0.5 * (p - psi_mean) * p)
+                .sum();
+            c0 += f_psi - dot(&ga, psi) + 0.5 * quad;
+            let row = self.data.x.row(i);
+            for kk in 0..k {
+                axpy(ga[kk], row, g_mat.row_mut(kk));
+            }
+        }
+        self.g_mat = g_mat;
+        self.c0 = c0;
+    }
+
+    /// log B_n (unclamped) and d logB/d eta into `dlb`.
+    fn log_bound_and_deta(&self, eta: &[f64], n: usize, dlb: Option<&mut [f64]>) -> f64 {
+        let k = self.k;
+        let psi = self.psi_of(n);
+        let lse_psi = logsumexp(psi);
+        let label = self.data.labels[n];
+        let f_psi = psi[label] - lse_psi;
+        let mut lin = 0.0;
+        let mut dsum = 0.0;
+        let mut dsq = 0.0;
+        for kk in 0..k {
+            let dkk = eta[kk] - psi[kk];
+            let g = (if kk == label { 1.0 } else { 0.0 }) - (psi[kk] - lse_psi).exp();
+            lin += g * dkk;
+            dsum += dkk;
+            dsq += dkk * dkk;
+        }
+        let quad = 0.5 * (dsq - dsum * dsum / k as f64);
+        let lb = f_psi + lin - 0.5 * quad;
+        if let Some(out) = dlb {
+            let dmean = dsum / k as f64;
+            for kk in 0..k {
+                let dkk = eta[kk] - psi[kk];
+                let g = (if kk == label { 1.0 } else { 0.0 }) - (psi[kk] - lse_psi).exp();
+                out[kk] = g - 0.5 * (dkk - dmean);
+            }
+        }
+        lb
+    }
+}
+
+impl ModelBound for SoftmaxBohning {
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+    fn dim(&self) -> usize {
+        self.k * self.data.d()
+    }
+    fn kind(&self) -> ModelKind {
+        ModelKind::Softmax
+    }
+
+    fn log_lik(&self, theta: &[f64], n: usize) -> f64 {
+        let mut eta = vec![0.0; self.k];
+        self.logits(theta, n, &mut eta);
+        eta[self.data.labels[n]] - logsumexp(&eta)
+    }
+
+    fn log_lik_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+        let (k, d) = (self.k, self.data.d());
+        let mut eta = vec![0.0; k];
+        self.logits(theta, n, &mut eta);
+        let lse = logsumexp(&eta);
+        let row = self.data.x.row(n);
+        for kk in 0..k {
+            let coeff =
+                (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
+            axpy(coeff, row, &mut grad[kk * d..(kk + 1) * d]);
+        }
+    }
+
+    fn log_both(&self, theta: &[f64], n: usize) -> (f64, f64) {
+        let mut eta = vec![0.0; self.k];
+        self.logits(theta, n, &mut eta);
+        let ll = eta[self.data.labels[n]] - logsumexp(&eta);
+        let lb = self.log_bound_and_deta(&eta, n, None).min(ll);
+        (ll, lb)
+    }
+
+    fn pseudo_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+        let (k, d) = (self.k, self.data.d());
+        let mut eta = vec![0.0; k];
+        self.logits(theta, n, &mut eta);
+        let lse = logsumexp(&eta);
+        let ll = eta[self.data.labels[n]] - lse;
+        let mut dlb = vec![0.0; k];
+        let lb = self.log_bound_and_deta(&eta, n, Some(&mut dlb)).min(ll);
+        let ed = (lb - ll).min(-1e-12).exp();
+        let row = self.data.x.row(n);
+        for kk in 0..k {
+            let dll =
+                (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
+            let coeff = (dll - ed * dlb[kk]) / (1.0 - ed) - dlb[kk];
+            axpy(coeff, row, &mut grad[kk * d..(kk + 1) * d]);
+        }
+    }
+
+    fn log_both_pseudo_grad(&self, theta: &[f64], n: usize, grad: &mut [f64]) -> (f64, f64) {
+        let (k, d) = (self.k, self.data.d());
+        let mut eta = vec![0.0; k];
+        self.logits(theta, n, &mut eta);
+        let lse = logsumexp(&eta);
+        let ll = eta[self.data.labels[n]] - lse;
+        let mut dlb = vec![0.0; k];
+        let lb = self.log_bound_and_deta(&eta, n, Some(&mut dlb)).min(ll);
+        let ed = (lb - ll).min(-1e-12).exp();
+        let row = self.data.x.row(n);
+        for kk in 0..k {
+            let dll =
+                (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
+            let coeff = (dll - ed * dlb[kk]) / (1.0 - ed) - dlb[kk];
+            axpy(coeff, row, &mut grad[kk * d..(kk + 1) * d]);
+        }
+        (ll, lb)
+    }
+
+    fn log_bound_product(&self, theta: &[f64]) -> f64 {
+        let (k, d) = (self.k, self.data.d());
+        // linear term + c0
+        let mut acc = self.c0;
+        for kk in 0..k {
+            acc += dot(self.g_mat.row(kk), &theta[kk * d..(kk + 1) * d]);
+        }
+        // quadratic: -1/2 sum_n eta^T A eta
+        //          = -1/4 [ sum_k theta_k^T S theta_k - (1/K) v^T S v ]
+        let mut v = vec![0.0; d];
+        let mut quad_k = 0.0;
+        for kk in 0..k {
+            let tk = &theta[kk * d..(kk + 1) * d];
+            quad_k += self.s_mat.quad_form(tk);
+            axpy(1.0, tk, &mut v);
+        }
+        let quad_v = self.s_mat.quad_form(&v);
+        acc - 0.25 * (quad_k - quad_v / k as f64)
+    }
+
+    fn grad_log_bound_product_acc(&self, theta: &[f64], grad: &mut [f64]) {
+        let (k, d) = (self.k, self.data.d());
+        // grad = G - A Theta S with (A W)_k = 1/2 (W_k - mean_j W_j)
+        let mut w = Matrix::zeros(k, d); // Theta S
+        for kk in 0..k {
+            let mut sv = vec![0.0; d];
+            self.s_mat.matvec(&theta[kk * d..(kk + 1) * d], &mut sv);
+            w.row_mut(kk).copy_from_slice(&sv);
+        }
+        let mut colmean = vec![0.0; d];
+        for kk in 0..k {
+            axpy(1.0 / k as f64, w.row(kk), &mut colmean);
+        }
+        for kk in 0..k {
+            let gk = &mut grad[kk * d..(kk + 1) * d];
+            for j in 0..d {
+                gk[j] += self.g_mat[(kk, j)] - 0.5 * (w[(kk, j)] - colmean[j]);
+            }
+        }
+    }
+
+    fn tune_anchors_map(&mut self, theta_map: &[f64]) {
+        let k = self.k;
+        let mut eta = vec![0.0; k];
+        for n in 0..self.data.n() {
+            self.logits(theta_map, n, &mut eta);
+            self.psi[n * k..(n + 1) * k].copy_from_slice(&eta);
+        }
+        self.rebuild_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn small() -> SoftmaxBohning {
+        let data = Arc::new(synth::synth_cifar3(150, 12, 2));
+        SoftmaxBohning::new(data)
+    }
+
+    #[test]
+    fn bound_below_likelihood_everywhere() {
+        let mut m = small();
+        let mut anchor_rng = Rng::new(77);
+        let anchor: Vec<f64> = (0..m.dim()).map(|_| anchor_rng.normal() * 0.3).collect();
+        m.tune_anchors_map(&anchor); // non-trivial anchors
+        testing::check(
+            "bohning bound <= lik",
+            200,
+            |r| {
+                let theta = testing::gen::vec_normal(r, m.dim(), 1.0);
+                let n = r.below(m.n());
+                (theta, n)
+            },
+            |(theta, n)| {
+                let (ll, lb) = m.log_both(theta, *n);
+                lb <= ll && lb.is_finite()
+            },
+        );
+    }
+
+    #[test]
+    fn bound_tight_at_anchor() {
+        let mut m = small();
+        let mut rng = Rng::new(8);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
+        m.tune_anchors_map(&theta);
+        for n in 0..m.n() {
+            let (ll, lb) = m.log_both(&theta, n);
+            assert!((ll - lb).abs() < 1e-10, "n={n}: {ll} vs {lb}");
+        }
+    }
+
+    #[test]
+    fn collapsed_product_matches_pointwise_sum() {
+        let mut m = small();
+        let mut anchor_rng = Rng::new(9);
+        let anchor: Vec<f64> = (0..m.dim()).map(|_| anchor_rng.normal() * 0.4).collect();
+        m.tune_anchors_map(&anchor);
+        testing::check_msg(
+            "softmax collapse == sum",
+            15,
+            |r| testing::gen::vec_normal(r, m.dim(), 0.8),
+            |theta| {
+                let mut sum = 0.0;
+                let mut eta = vec![0.0; m.k];
+                for n in 0..m.n() {
+                    m.logits(theta, n, &mut eta);
+                    sum += m.log_bound_and_deta(&eta, n, None);
+                }
+                let col = m.log_bound_product(theta);
+                if (sum - col).abs() < 1e-7 * (1.0 + sum.abs()) {
+                    Ok(())
+                } else {
+                    Err(format!("sum {sum} vs collapsed {col}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn collapsed_grad_matches_fd() {
+        let mut m = small();
+        let mut rng = Rng::new(10);
+        let anchor: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.3).collect();
+        m.tune_anchors_map(&anchor);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
+        let mut g = vec![0.0; m.dim()];
+        m.grad_log_bound_product_acc(&theta, &mut g);
+        let h = 1e-5;
+        let mut tp = theta.clone();
+        for i in (0..m.dim()).step_by(7) {
+            tp[i] = theta[i] + h;
+            let fp = m.log_bound_product(&tp);
+            tp[i] = theta[i] - h;
+            let fm = m.log_bound_product(&tp);
+            tp[i] = theta[i];
+            let fd = (fp - fm) / (2.0 * h);
+            assert!((g[i] - fd).abs() < 1e-3 * (1.0 + fd.abs()), "i={i}: {} vs {fd}", g[i]);
+        }
+    }
+
+    #[test]
+    fn lik_and_pseudo_grads_match_fd() {
+        let m = small();
+        let mut rng = Rng::new(11);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.4).collect();
+        for n in [0, 33] {
+            let mut g = vec![0.0; m.dim()];
+            m.log_lik_grad_acc(&theta, n, &mut g);
+            let mut gp = vec![0.0; m.dim()];
+            m.pseudo_grad_acc(&theta, n, &mut gp);
+            let h = 1e-6;
+            let mut tp = theta.clone();
+            for i in (0..m.dim()).step_by(5) {
+                tp[i] = theta[i] + h;
+                let fp = m.log_lik(&tp, n);
+                let (llp, lbp) = m.log_both(&tp, n);
+                let pp = super::super::log_pseudo_lik(llp, lbp);
+                tp[i] = theta[i] - h;
+                let fm = m.log_lik(&tp, n);
+                let (llm, lbm) = m.log_both(&tp, n);
+                let pm = super::super::log_pseudo_lik(llm, lbm);
+                tp[i] = theta[i];
+                assert!((g[i] - (fp - fm) / (2.0 * h)).abs() < 1e-5, "lik n={n} i={i}");
+                let fd = (pp - pm) / (2.0 * h);
+                assert!(
+                    (gp[i] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                    "pseudo n={n} i={i}: {} vs {fd}",
+                    gp[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loglik_is_proper_distribution() {
+        // sum over classes of exp(loglik with label=k) = 1
+        let m = small();
+        let mut rng = Rng::new(12);
+        let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
+        let mut eta = vec![0.0; m.k];
+        m.logits(&theta, 3, &mut eta);
+        let lse = logsumexp(&eta);
+        let total: f64 = (0..m.k).map(|k| (eta[k] - lse).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,115 @@
+//! Pure-Rust likelihood backend.
+//!
+//! Reference implementation of [`BatchEval`] over any [`ModelBound`]; used
+//! for baselines, tests (numerics cross-check against the XLA artifacts),
+//! and as the default when no artifact matches the model's shape.
+
+use std::sync::Arc;
+
+use super::evaluator::BatchEval;
+use crate::metrics::Counters;
+use crate::models::ModelBound;
+
+pub struct CpuBackend {
+    pub model: Arc<dyn ModelBound>,
+    counters: Counters,
+}
+
+impl CpuBackend {
+    pub fn new(model: Arc<dyn ModelBound>, counters: Counters) -> Self {
+        CpuBackend { model, counters }
+    }
+}
+
+impl BatchEval for CpuBackend {
+    fn n(&self) -> usize {
+        self.model.n()
+    }
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
+        self.counters.add_lik(idx.len() as u64);
+        self.counters.add_bound(idx.len() as u64);
+        ll.clear();
+        lb.clear();
+        ll.reserve(idx.len());
+        lb.reserve(idx.len());
+        for &n in idx {
+            let (l, b) = self.model.log_both(theta, n);
+            ll.push(l);
+            lb.push(b);
+        }
+    }
+
+    fn eval_pseudo_grad(
+        &mut self,
+        theta: &[f64],
+        idx: &[usize],
+        ll: &mut Vec<f64>,
+        lb: &mut Vec<f64>,
+        grad: &mut [f64],
+    ) {
+        self.counters.add_lik(idx.len() as u64);
+        self.counters.add_bound(idx.len() as u64);
+        ll.clear();
+        lb.clear();
+        ll.reserve(idx.len());
+        lb.reserve(idx.len());
+        for &n in idx {
+            let (l, b) = self.model.log_both_pseudo_grad(theta, n, grad);
+            ll.push(l);
+            lb.push(b);
+        }
+    }
+
+    fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>) {
+        self.counters.add_lik(idx.len() as u64);
+        ll.clear();
+        ll.reserve(idx.len());
+        for &n in idx {
+            ll.push(self.model.log_lik(theta, n));
+        }
+    }
+
+    fn eval_lik_grad(
+        &mut self,
+        theta: &[f64],
+        idx: &[usize],
+        ll: &mut Vec<f64>,
+        grad: &mut [f64],
+    ) {
+        self.eval_lik(theta, idx, ll);
+        for &n in idx {
+            self.model.log_lik_grad_acc(theta, n, grad);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::models::LogisticJJ;
+
+    #[test]
+    fn counts_queries_per_point() {
+        let data = Arc::new(synth::synth_mnist(100, 5, 1));
+        let model = Arc::new(LogisticJJ::new(data, 1.5));
+        let counters = Counters::new();
+        let mut be = CpuBackend::new(model, counters.clone());
+        let theta = vec![0.1; be.dim()];
+        let (mut ll, mut lb) = (Vec::new(), Vec::new());
+        be.eval(&theta, &[0, 5, 9], &mut ll, &mut lb);
+        assert_eq!(counters.lik_queries(), 3);
+        assert_eq!(ll.len(), 3);
+        be.eval_lik(&theta, &[1, 2], &mut ll);
+        assert_eq!(counters.lik_queries(), 5);
+        assert!(ll.iter().all(|l| l.is_finite() && *l < 0.0));
+        assert!(lb.iter().zip(&ll) .all(|(b, _)| b.is_finite()));
+    }
+}

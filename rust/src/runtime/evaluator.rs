@@ -1,0 +1,44 @@
+//! The batch-evaluation interface both backends implement.
+//!
+//! Everything the samplers need from the likelihood layer goes through
+//! [`BatchEval`]: per-point (log L, log B) over an index set, plus summed
+//! gradients. The CPU backend computes directly; the XLA backend pads the
+//! index set to a bucket and executes the AOT-compiled artifact. Query
+//! counting happens here so both backends account identically.
+
+use crate::metrics::Counters;
+
+// Note: deliberately NOT `Send` — each chain thread constructs its own
+// backend (the XLA client and the query counters are thread-local).
+pub trait BatchEval {
+    fn n(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn counters(&self) -> &Counters;
+
+    /// Per-point (log L_n, log B_n) for `idx` at `theta`. Outputs are
+    /// cleared and resized to `idx.len()`. Counts `idx.len()` likelihood +
+    /// bound queries.
+    fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>);
+
+    /// [`BatchEval::eval`] plus `grad += sum_n d[log(L_n - B_n) - log B_n]`.
+    fn eval_pseudo_grad(
+        &mut self,
+        theta: &[f64],
+        idx: &[usize],
+        ll: &mut Vec<f64>,
+        lb: &mut Vec<f64>,
+        grad: &mut [f64],
+    );
+
+    /// Per-point log L_n only (regular MCMC; still counts queries).
+    fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>);
+
+    /// [`BatchEval::eval_lik`] plus `grad += sum_n d log L_n`.
+    fn eval_lik_grad(
+        &mut self,
+        theta: &[f64],
+        idx: &[usize],
+        ll: &mut Vec<f64>,
+        grad: &mut [f64],
+    );
+}

@@ -1,0 +1,136 @@
+//! `artifacts/manifest.txt` parsing — the contract between `python -m
+//! compile.aot` and the Rust runtime. One line per artifact:
+//!
+//! ```text
+//! name=logistic.d51.b2048 kind=logistic d=51 k=1 bucket=2048 path=logistic.d51.b2048.hlo.txt
+//! ```
+
+use crate::models::ModelKind;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ModelKind,
+    pub d: usize,
+    pub k: usize,
+    pub bucket: usize,
+    pub path: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: String,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &str) -> Result<Manifest, String> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut kind = None;
+            let mut d = None;
+            let mut k = None;
+            let mut bucket = None;
+            let mut path = None;
+            for field in line.split_whitespace() {
+                let (key, val) = field
+                    .split_once('=')
+                    .ok_or_else(|| format!("line {}: bad field {field:?}", lineno + 1))?;
+                match key {
+                    "name" => name = Some(val.to_string()),
+                    "kind" => {
+                        kind = Some(match val {
+                            "logistic" => ModelKind::Logistic,
+                            "softmax" => ModelKind::Softmax,
+                            "robust" => ModelKind::Robust,
+                            other => {
+                                return Err(format!("line {}: unknown kind {other}", lineno + 1))
+                            }
+                        })
+                    }
+                    "d" => d = val.parse().ok(),
+                    "k" => k = val.parse().ok(),
+                    "bucket" => bucket = val.parse().ok(),
+                    "path" => path = Some(val.to_string()),
+                    _ => {} // forward-compatible: ignore unknown keys
+                }
+            }
+            entries.push(ArtifactEntry {
+                name: name.ok_or_else(|| format!("line {}: missing name", lineno + 1))?,
+                kind: kind.ok_or_else(|| format!("line {}: missing kind", lineno + 1))?,
+                d: d.ok_or_else(|| format!("line {}: missing d", lineno + 1))?,
+                k: k.unwrap_or(1),
+                bucket: bucket.ok_or_else(|| format!("line {}: missing bucket", lineno + 1))?,
+                path: path.ok_or_else(|| format!("line {}: missing path", lineno + 1))?,
+            });
+        }
+        Ok(Manifest { entries, dir: dir.to_string() })
+    }
+
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = format!("{dir}/manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {path}: {e} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Ascending bucket sizes available for a (kind, d, k) triple.
+    pub fn buckets_for(&self, kind: ModelKind, d: usize, k: usize) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind && e.d == d && e.k == k)
+            .collect();
+        v.sort_by_key(|e| e.bucket);
+        v
+    }
+
+    pub fn full_path(&self, entry: &ArtifactEntry) -> String {
+        format!("{}/{}", self.dir, entry.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_filters() {
+        let text = "\
+name=logistic.d51.b256 kind=logistic d=51 k=1 bucket=256 path=a.hlo.txt
+name=logistic.d51.b2048 kind=logistic d=51 k=1 bucket=2048 path=b.hlo.txt
+name=softmax.k3.d256.b256 kind=softmax d=256 k=3 bucket=256 path=c.hlo.txt
+";
+        let m = Manifest::parse(text, "artifacts").unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let logi = m.buckets_for(ModelKind::Logistic, 51, 1);
+        assert_eq!(logi.len(), 2);
+        assert_eq!(logi[0].bucket, 256);
+        assert_eq!(logi[1].bucket, 2048);
+        assert!(m.buckets_for(ModelKind::Robust, 57, 1).is_empty());
+        assert_eq!(m.full_path(logi[0]), "artifacts/a.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("name=x kind=banana d=1 bucket=2 path=p", "d").is_err());
+        assert!(Manifest::parse("kind=logistic d=1 bucket=2 path=p", "d").is_err());
+        assert!(Manifest::parse("name=x kind=logistic bucket=2 path=p", "d").is_err());
+    }
+
+    #[test]
+    fn ignores_comments_and_unknown_keys() {
+        let m = Manifest::parse(
+            "# comment\nname=x kind=robust d=57 k=1 bucket=256 path=p extra=42\n",
+            "d",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].kind, ModelKind::Robust);
+    }
+}

@@ -1,0 +1,33 @@
+//! Likelihood evaluation runtime: the [`evaluator::BatchEval`] interface and
+//! its two implementations — pure-Rust [`cpu_backend::CpuBackend`] and the
+//! PJRT-based [`xla_backend::XlaBackend`] that executes the AOT artifacts
+//! from `make artifacts`. Python never runs on the sampling path.
+
+pub mod cpu_backend;
+pub mod evaluator;
+pub mod manifest;
+pub mod xla_backend;
+pub mod xla_source;
+
+pub use cpu_backend::CpuBackend;
+pub use evaluator::BatchEval;
+pub use manifest::Manifest;
+pub use xla_backend::XlaBackend;
+pub use xla_source::XlaSource;
+
+use crate::configx::Backend;
+use crate::metrics::Counters;
+use std::sync::Arc;
+
+/// Build the configured backend for a model that can feed the XLA artifacts.
+pub fn make_backend(
+    source: Arc<dyn XlaSource>,
+    backend: Backend,
+    counters: Counters,
+    artifacts_dir: &str,
+) -> anyhow::Result<Box<dyn BatchEval>> {
+    Ok(match backend {
+        Backend::Cpu => Box::new(CpuBackend::new(source, counters)),
+        Backend::Xla => Box::new(XlaBackend::new(source, counters, artifacts_dir)?),
+    })
+}

@@ -1,0 +1,178 @@
+//! How each model feeds the fixed-shape XLA artifacts.
+//!
+//! The AOT graphs (python/compile/aot.py) take `(theta, x, aux1, aux2, mask)`
+//! with model-specific aux buffers; [`XlaSource`] produces those buffers for
+//! a padded index chunk. The robust model uses the sigma-rescaling identity
+//! (feed x/σ, y/σ, u0/σ² into the σ=1 artifact; shift log-densities by
+//! -log σ — gradients come out exact, see python/tests/test_kernels.py
+//! `test_t_sigma_rescale_identity`).
+
+use crate::models::{LogisticJJ, ModelBound, ModelKind, RobustT, SoftmaxBohning};
+
+/// Input buffers for one padded chunk, in artifact argument order after
+/// theta: `x` then aux1, aux2, mask (flattened row-major).
+#[derive(Debug, Default)]
+pub struct BatchBufs {
+    pub x: Vec<f64>,
+    pub aux1: Vec<f64>,
+    pub aux2: Vec<f64>,
+    pub mask: Vec<f64>,
+}
+
+pub trait XlaSource: ModelBound {
+    /// (kind, d, k) used to look up artifacts in the manifest.
+    fn artifact_key(&self) -> (ModelKind, usize, usize);
+
+    /// Fill `bufs` for `idx`, padded to `bucket` rows (mask 0 on padding).
+    fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs);
+
+    /// Dims of aux1/aux2 per row (1 for vectors, K for [B,K] buffers).
+    fn aux_width(&self) -> usize {
+        1
+    }
+
+    /// Constant subtracted from each live lane of the returned log L / log B
+    /// (sigma rescaling for the robust model; 0 otherwise).
+    fn output_shift(&self) -> f64 {
+        0.0
+    }
+}
+
+fn pad_common(bufs: &mut BatchBufs, d: usize, aux_w: usize, bucket: usize) {
+    bufs.x.clear();
+    bufs.x.reserve(bucket * d);
+    bufs.aux1.clear();
+    bufs.aux1.reserve(bucket * aux_w);
+    bufs.aux2.clear();
+    bufs.aux2.reserve(bucket * aux_w);
+    bufs.mask.clear();
+    bufs.mask.reserve(bucket);
+}
+
+impl XlaSource for LogisticJJ {
+    fn artifact_key(&self) -> (ModelKind, usize, usize) {
+        (ModelKind::Logistic, self.data.d(), 1)
+    }
+
+    fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs) {
+        let d = self.data.d();
+        pad_common(bufs, d, 1, bucket);
+        for &n in idx {
+            bufs.x.extend_from_slice(self.data.x.row(n));
+            bufs.aux1.push(self.data.t[n]);
+            bufs.aux2.push(self.xi[n]);
+            bufs.mask.push(1.0);
+        }
+        for _ in idx.len()..bucket {
+            bufs.x.extend(std::iter::repeat(0.0).take(d));
+            bufs.aux1.push(1.0);
+            bufs.aux2.push(1.0);
+            bufs.mask.push(0.0);
+        }
+    }
+}
+
+impl XlaSource for SoftmaxBohning {
+    fn artifact_key(&self) -> (ModelKind, usize, usize) {
+        (ModelKind::Softmax, self.data.d(), self.data.k)
+    }
+
+    fn aux_width(&self) -> usize {
+        self.data.k
+    }
+
+    fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs) {
+        let d = self.data.d();
+        let k = self.data.k;
+        pad_common(bufs, d, k, bucket);
+        for &n in idx {
+            bufs.x.extend_from_slice(self.data.x.row(n));
+            for kk in 0..k {
+                bufs.aux1
+                    .push(if kk == self.data.labels[n] { 1.0 } else { 0.0 });
+            }
+            bufs.aux2.extend_from_slice(&self.psi[n * k..(n + 1) * k]);
+            bufs.mask.push(1.0);
+        }
+        for _ in idx.len()..bucket {
+            bufs.x.extend(std::iter::repeat(0.0).take(d));
+            bufs.aux1.push(1.0);
+            bufs.aux1.extend(std::iter::repeat(0.0).take(k - 1));
+            bufs.aux2.extend(std::iter::repeat(0.0).take(k));
+            bufs.mask.push(0.0);
+        }
+    }
+}
+
+impl XlaSource for RobustT {
+    fn artifact_key(&self) -> (ModelKind, usize, usize) {
+        (ModelKind::Robust, self.data.d(), 1)
+    }
+
+    fn output_shift(&self) -> f64 {
+        self.sigma.ln()
+    }
+
+    fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs) {
+        let d = self.data.d();
+        let inv_s = 1.0 / self.sigma;
+        pad_common(bufs, d, 1, bucket);
+        for &n in idx {
+            bufs.x
+                .extend(self.data.x.row(n).iter().map(|&v| v * inv_s));
+            bufs.aux1.push(self.data.y[n] * inv_s);
+            bufs.aux2.push(self.u0[n] * inv_s * inv_s);
+            bufs.mask.push(1.0);
+        }
+        for _ in idx.len()..bucket {
+            bufs.x.extend(std::iter::repeat(0.0).take(d));
+            bufs.aux1.push(0.0);
+            bufs.aux2.push(1.0);
+            bufs.mask.push(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use std::sync::Arc;
+
+    #[test]
+    fn logistic_fill_pads_correctly() {
+        let data = Arc::new(synth::synth_mnist(20, 4, 1));
+        let m = LogisticJJ::new(data, 1.5);
+        let mut bufs = BatchBufs::default();
+        m.fill_inputs(&[3, 7], 8, &mut bufs);
+        assert_eq!(bufs.x.len(), 8 * 5);
+        assert_eq!(bufs.mask, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(bufs.aux1[0], m.data.t[3]);
+        assert_eq!(&bufs.x[..5], m.data.x.row(3));
+    }
+
+    #[test]
+    fn softmax_onehot_rows() {
+        let data = Arc::new(synth::synth_cifar3(30, 6, 2));
+        let m = SoftmaxBohning::new(data.clone());
+        let mut bufs = BatchBufs::default();
+        m.fill_inputs(&[0, 1, 2], 4, &mut bufs);
+        assert_eq!(bufs.aux1.len(), 4 * 3);
+        for (i, &n) in [0usize, 1, 2].iter().enumerate() {
+            let row = &bufs.aux1[i * 3..(i + 1) * 3];
+            assert_eq!(row.iter().sum::<f64>(), 1.0);
+            assert_eq!(row[data.labels[n]], 1.0);
+        }
+    }
+
+    #[test]
+    fn robust_rescales_by_sigma() {
+        let data = Arc::new(synth::synth_opv(25, 5, 3));
+        let m = RobustT::new(data.clone(), 4.0, 2.0);
+        let mut bufs = BatchBufs::default();
+        m.fill_inputs(&[4], 2, &mut bufs);
+        assert!((bufs.aux1[0] - data.y[4] / 2.0).abs() < 1e-15);
+        assert!((bufs.x[0] - data.x.row(4)[0] / 2.0).abs() < 1e-15);
+        assert!((m.output_shift() - 2.0f64.ln()).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,68 @@
+//! Robbins–Monro step-size adaptation toward a target acceptance rate
+//! (0.234 for random-walk MH, 0.574 for MALA — Roberts et al. 1997 / Roberts
+//! & Rosenthal 1998, as the paper tunes). Adaptation decays and is frozen
+//! after burn-in so the chain is asymptotically exact.
+
+#[derive(Clone, Debug)]
+pub struct StepSizeAdapter {
+    pub target_accept: f64,
+    pub gamma0: f64,
+    count: usize,
+    frozen: bool,
+}
+
+impl StepSizeAdapter {
+    pub fn new(target_accept: f64) -> Self {
+        StepSizeAdapter { target_accept, gamma0: 1.0, count: 0, frozen: false }
+    }
+
+    /// Stop adapting (call at the end of burn-in).
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// Update `log step` after observing an accept/reject; returns the new
+    /// step size.
+    pub fn update(&mut self, step: f64, accepted: bool) -> f64 {
+        if self.frozen {
+            return step;
+        }
+        self.count += 1;
+        let gamma = self.gamma0 / (self.count as f64).powf(0.6);
+        let a = if accepted { 1.0 } else { 0.0 };
+        (step.ln() + gamma * (a - self.target_accept)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_toward_target_acceptance() {
+        // Accept iff step < 1 with prob ~ sigmoid-like: simulate a toy
+        // environment where acceptance probability = exp(-step).
+        let mut adapter = StepSizeAdapter::new(0.234);
+        let mut step: f64 = 10.0;
+        let mut rng = crate::util::Rng::new(0);
+        for _ in 0..20_000 {
+            let p_acc = (-step).exp();
+            let acc = rng.bernoulli(p_acc);
+            step = adapter.update(step, acc);
+        }
+        let p_final = (-step).exp();
+        assert!((p_final - 0.234).abs() < 0.05, "p_final {p_final}");
+    }
+
+    #[test]
+    fn frozen_adapter_is_identity() {
+        let mut a = StepSizeAdapter::new(0.5);
+        a.freeze();
+        assert_eq!(a.update(0.7, true), 0.7);
+        assert_eq!(a.update(0.7, false), 0.7);
+    }
+}

@@ -1,0 +1,120 @@
+//! Symmetric random-walk Metropolis–Hastings (paper Alg 1's θ-update; used
+//! for the MNIST experiment, tuned to acceptance 0.234).
+
+use super::{Sampler, StepInfo, StepSizeAdapter, Target};
+use crate::util::Rng;
+
+pub struct RandomWalkMh {
+    pub step: f64,
+    pub adapter: Option<StepSizeAdapter>,
+    proposal: Vec<f64>,
+    accepts: u64,
+    steps: u64,
+}
+
+impl RandomWalkMh {
+    pub fn new(step: f64) -> Self {
+        RandomWalkMh { step, adapter: None, proposal: Vec::new(), accepts: 0, steps: 0 }
+    }
+
+    /// Enable Robbins–Monro adaptation toward 0.234 (freeze after burn-in).
+    pub fn adaptive(step: f64) -> Self {
+        let mut s = Self::new(step);
+        s.adapter = Some(StepSizeAdapter::new(0.234));
+        s
+    }
+
+    pub fn freeze_adaptation(&mut self) {
+        if let Some(a) = &mut self.adapter {
+            a.freeze();
+        }
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.steps == 0 {
+            return f64::NAN;
+        }
+        self.accepts as f64 / self.steps as f64
+    }
+}
+
+impl Sampler for RandomWalkMh {
+    fn step(
+        &mut self,
+        target: &mut dyn Target,
+        theta: &mut Vec<f64>,
+        rng: &mut Rng,
+    ) -> StepInfo {
+        debug_assert_eq!(theta.len(), target.dim());
+        let logp_cur = target.current_log_density();
+        self.proposal.clear();
+        self.proposal
+            .extend(theta.iter().map(|&t| t + self.step * rng.normal()));
+        let logp_new = target.log_density(&self.proposal);
+        let accepted = rng.f64_open().ln() < logp_new - logp_cur;
+        self.steps += 1;
+        let logp = if accepted {
+            self.accepts += 1;
+            theta.clear();
+            theta.extend_from_slice(&self.proposal);
+            target.commit(theta);
+            logp_new
+        } else {
+            logp_cur
+        };
+        if let Some(a) = &mut self.adapter {
+            self.step = a.update(self.step, accepted);
+        }
+        StepInfo { accepted, evals: 1, log_density: logp }
+    }
+
+    fn name(&self) -> &'static str {
+        "random-walk MH"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_targets::GaussTarget;
+    use super::*;
+    use crate::util::math::variance;
+
+    #[test]
+    fn samples_standard_gaussian() {
+        let mut target = GaussTarget::new(2, 1.0);
+        let mut mh = RandomWalkMh::new(1.2);
+        let mut theta = vec![0.0; 2];
+        target.commit(&theta);
+        let mut rng = Rng::new(1);
+        let mut draws = Vec::new();
+        for i in 0..30_000 {
+            mh.step(&mut target, &mut theta, &mut rng);
+            if i > 2000 {
+                draws.push(theta[0]);
+            }
+        }
+        let m = draws.iter().sum::<f64>() / draws.len() as f64;
+        let v = variance(&draws);
+        assert!(m.abs() < 0.08, "mean {m}");
+        assert!((v - 1.0).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn adaptation_reaches_0234() {
+        let mut target = GaussTarget::new(5, 1.0);
+        let mut mh = RandomWalkMh::adaptive(10.0); // far-off initial step
+        let mut theta = vec![0.0; 5];
+        target.commit(&theta);
+        let mut rng = Rng::new(2);
+        for _ in 0..5000 {
+            mh.step(&mut target, &mut theta, &mut rng);
+        }
+        mh.freeze_adaptation();
+        let (a0, s0) = (mh.accepts, mh.steps);
+        for _ in 0..10_000 {
+            mh.step(&mut target, &mut theta, &mut rng);
+        }
+        let rate = (mh.accepts - a0) as f64 / (mh.steps - s0) as f64;
+        assert!((rate - 0.234).abs() < 0.08, "acceptance {rate}");
+    }
+}

@@ -1,0 +1,37 @@
+//! The target-distribution interface the θ-samplers drive.
+//!
+//! A `Target` is a (possibly augmented) log-density with *state*: FlyMC's
+//! pseudo-posterior caches per-bright-point likelihoods at the committed
+//! point, so the protocol is evaluate-then-commit:
+//!
+//! 1. the sampler calls `log_density` / `grad_log_density` at proposals
+//!    (the target memoizes the last evaluation);
+//! 2. the sampler calls `commit(theta)` on the point it accepted — a memo
+//!    hit promotes the cached evaluation to state with no new likelihood
+//!    queries (both MH outcomes, the MALA outcomes, and slice sampling's
+//!    final point are always the last evaluation or the unchanged state).
+
+pub trait Target {
+    fn dim(&self) -> usize;
+
+    /// Log density at `theta` (up to a constant). May memoize.
+    fn log_density(&mut self, theta: &[f64]) -> f64;
+
+    /// Fills `grad` (overwriting) with d log p / d theta; returns log p.
+    fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64;
+
+    /// Declare `theta` the chain's new current state.
+    fn commit(&mut self, theta: &[f64]);
+
+    /// Log density at the committed state (cached; no queries).
+    fn current_log_density(&self) -> f64;
+
+    /// Monotone counter bumped whenever the target distribution itself
+    /// changes under the sampler's feet (FlyMC bumps it on every z-update).
+    /// Lets gradient samplers (MALA) reuse the current-point gradient across
+    /// iterations when the target is unchanged — regular MCMC then costs one
+    /// evaluation per iteration, matching the paper's Table-1 accounting.
+    fn version(&self) -> u64 {
+        0
+    }
+}

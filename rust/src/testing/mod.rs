@@ -1,0 +1,102 @@
+//! Mini property-based testing substrate (offline stand-in for `proptest`).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` random inputs from
+//! `gen`; on failure it reports the seed and the failing case, so the run is
+//! reproducible with `FIREFLY_PROP_SEED=<seed>`. Generators are plain
+//! closures over [`crate::util::Rng`], composable with ordinary Rust.
+
+use crate::util::Rng;
+
+/// Run a property over `cases` generated inputs. Panics with seed + debug
+/// dump of the first failing case.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut generator: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> bool,
+) {
+    let seed = std::env::var("FIREFLY_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF1EF_17u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = generator(&mut rng);
+        if !property(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}).\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` for richer
+/// failure messages.
+pub fn check_msg<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut generator: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("FIREFLY_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF1EF_17u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = generator(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::Rng;
+
+    pub fn vec_normal(rng: &mut Rng, len: usize, scale: f64) -> Vec<f64> {
+        (0..len).map(|_| rng.normal() * scale).collect()
+    }
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo)
+    }
+
+    pub fn signs(rng: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |r| (r.f64(), r.f64()), |&(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_panics_with_name() {
+        check("always-false", 10, |r| r.f64(), |_| false);
+    }
+
+    #[test]
+    fn generators_cover_range() {
+        let mut r = crate::util::Rng::new(0);
+        for _ in 0..100 {
+            let k = gen::usize_in(&mut r, 3, 10);
+            assert!((3..10).contains(&k));
+        }
+        let s = gen::signs(&mut r, 1000);
+        assert!(s.iter().all(|&x| x == 1.0 || x == -1.0));
+        let pos = s.iter().filter(|&&x| x > 0.0).count();
+        assert!((300..700).contains(&pos));
+    }
+}

@@ -1,0 +1,196 @@
+//! Scalar special functions and numerically-careful log-space helpers.
+//!
+//! These mirror the jnp primitives used by the L1/L2 Python layers so that
+//! the Rust `CpuBackend` reproduces the XLA artifacts bit-for-bit at f64
+//! tolerance (verified in `rust/tests/integration_backend.rs`).
+
+/// log(1 + e^x) (softplus), stable for large |x|.
+#[inline]
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// log(e^a + e^b).
+#[inline]
+pub fn logaddexp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// log(sigmoid(x)) = -softplus(-x).
+#[inline]
+pub fn log_sigmoid(x: f64) -> f64 {
+    -log1p_exp(-x)
+}
+
+/// sigmoid(x), stable in both tails.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// log(1 - e^x) for x < 0, stable near 0 and -inf (Mächler 2012).
+#[inline]
+pub fn log1mexp(x: f64) -> f64 {
+    debug_assert!(x <= 0.0);
+    if x > -std::f64::consts::LN_2 {
+        (-x.exp_m1()).ln()
+    } else {
+        (-x.exp()).ln_1p()
+    }
+}
+
+/// log-sum-exp over a slice.
+pub fn logsumexp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return m;
+    }
+    m + xs.iter().map(|&x| (x - m).exp()).sum::<f64>().ln()
+}
+
+/// ln Γ(x) via the Lanczos approximation (g=7, n=9), |err| < 1e-13 for x > 0.
+pub fn lgamma(x: f64) -> f64 {
+    const COEFFS: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection: Γ(x)Γ(1-x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEFFS[0];
+    let t = x + 7.5;
+    for (i, &c) in COEFFS.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Student-t log normalizing constant: lgamma((nu+1)/2) - lgamma(nu/2)
+/// - 0.5 log(nu pi sigma^2).
+#[inline]
+pub fn t_logconst(nu: f64, sigma: f64) -> f64 {
+    lgamma((nu + 1.0) / 2.0)
+        - lgamma(nu / 2.0)
+        - 0.5 * (nu * std::f64::consts::PI * sigma * sigma).ln()
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn log1p_exp_matches_naive_and_is_stable() {
+        for &x in &[-30.0, -1.0, 0.0, 1.0, 30.0] {
+            assert!(close(log1p_exp(x), (1.0 + x.exp()).ln().max(x), 1e-12));
+        }
+        assert_eq!(log1p_exp(1000.0), 1000.0); // no overflow
+        assert!(log1p_exp(-1000.0).abs() < 1e-300);
+    }
+
+    #[test]
+    fn sigmoid_and_log_sigmoid_consistent() {
+        for &x in &[-20.0, -3.0, 0.0, 0.7, 15.0] {
+            assert!(close(sigmoid(x).ln(), log_sigmoid(x), 1e-12));
+            assert!(close(sigmoid(x) + sigmoid(-x), 1.0, 1e-14));
+        }
+    }
+
+    #[test]
+    fn log1mexp_stable() {
+        assert!(close(log1mexp(-1e-10), (1e-10f64).ln(), 1e-4));
+        assert!(close(log1mexp(-50.0), -(50.0f64.exp()).recip(), 1e-10));
+        // identity: log(1 - e^x) with x = ln(0.5) = ln 0.5
+        assert!(close(log1mexp((0.5f64).ln()), (0.5f64).ln(), 1e-14));
+    }
+
+    #[test]
+    fn logsumexp_matches_naive() {
+        let xs = [0.3f64, -2.0, 1.7, 0.0];
+        let naive = xs.iter().map(|x| x.exp()).sum::<f64>().ln();
+        assert!(close(logsumexp(&xs), naive, 1e-13));
+        // huge values don't overflow
+        let big = [700.0, 701.0];
+        assert!(close(logsumexp(&big), 701.0 + (1.0f64 + (-1.0f64).exp()).ln(), 1e-12));
+        assert_eq!(logsumexp(&[]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn lgamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(3)=2, Γ(4)=6, Γ(0.5)=sqrt(pi)
+        assert!(close(lgamma(1.0), 0.0, 1e-12));
+        assert!(close(lgamma(2.0), 0.0, 1e-12));
+        assert!(close(lgamma(3.0), 2.0f64.ln(), 1e-12));
+        assert!(close(lgamma(4.0), 6.0f64.ln(), 1e-12));
+        assert!(close(lgamma(0.5), std::f64::consts::PI.sqrt().ln(), 1e-12));
+        assert!(close(lgamma(2.5), (1.329_340_388_179_137f64).ln(), 1e-12));
+    }
+
+    #[test]
+    fn lgamma_recurrence() {
+        // Γ(x+1) = x Γ(x)
+        for &x in &[0.3, 1.7, 4.2, 9.9] {
+            assert!(close(lgamma(x + 1.0), lgamma(x) + x.ln(), 1e-12), "x={x}");
+        }
+    }
+
+    #[test]
+    fn t_logconst_nu4() {
+        // scipy.stats.t(df=4).logpdf(0) = log Γ(2.5)/Γ(2) - 0.5 log(4π)
+        let expect = -0.980_829_253_011_726_2;
+        assert!(close(t_logconst(4.0, 1.0), expect, 1e-10));
+    }
+
+    #[test]
+    fn moments_helpers() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!(close(mean(&xs), 2.5, 1e-15));
+        assert!(close(variance(&xs), 5.0 / 3.0, 1e-15));
+    }
+}

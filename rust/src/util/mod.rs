@@ -1,0 +1,22 @@
+//! Shared substrates: PRNG and scalar math.
+
+pub mod math;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Wall-clock timer for §Perf instrumentation.
+#[derive(Debug)]
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}

@@ -1,0 +1,345 @@
+//! Deterministic pseudo-random generation substrate.
+//!
+//! The offline build has no `rand` crate, so this module provides the
+//! generator the whole framework uses: xoshiro256++ seeded through
+//! splitmix64, plus the distributions MCMC needs (uniform, normal via
+//! Box–Muller, exponential, gamma via Marsaglia–Tsang, student-t,
+//! Bernoulli, geometric, categorical, shuffling).
+//!
+//! Everything is reproducible: a chain is fully determined by its seed, which
+//! is what lets the experiment harness re-run the paper's 5-replica protocol
+//! bit-identically.
+
+/// splitmix64 — used to expand a single `u64` seed into generator state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG. Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal from Box–Muller
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Different seeds give independent
+    /// streams for all practical purposes (seeded via splitmix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive a child generator (for per-chain streams) without correlation.
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe as a log() argument.
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's method without bias for our n << 2^64 use-cases.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (caches the spare draw).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Fill a slice with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Exponential(1).
+    #[inline]
+    pub fn exponential(&mut self) -> f64 {
+        -self.f64_open().ln()
+    }
+
+    /// Laplace(0, b).
+    pub fn laplace(&mut self, b: f64) -> f64 {
+        let e = self.exponential() * b;
+        if self.bernoulli(0.5) {
+            e
+        } else {
+            -e
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (shape >= 0 handled via boost).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        debug_assert!(shape > 0.0);
+        if shape < 1.0 {
+            // boost: G(a) = G(a+1) * U^{1/a}
+            let g = self.gamma(shape + 1.0);
+            return g * self.f64_open().powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64_open();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Student-t with `nu` degrees of freedom (normal / sqrt(chi2/nu)).
+    pub fn student_t(&mut self, nu: f64) -> f64 {
+        let z = self.normal();
+        let g = self.gamma(nu / 2.0) * 2.0; // chi^2_nu
+        z / (g / nu).sqrt()
+    }
+
+    /// Number of dark points skipped before the next d->b proposal when each
+    /// is proposed independently with probability p (geometric skip used by
+    /// implicit z-resampling; returns usize::MAX when p ~ 0).
+    pub fn geometric_skip(&mut self, p: f64) -> usize {
+        if p >= 1.0 {
+            return 0;
+        }
+        if p <= 0.0 {
+            return usize::MAX;
+        }
+        let u = self.f64_open();
+        let k = (u.ln() / (1.0 - p).ln()).floor();
+        if k >= usize::MAX as f64 {
+            usize::MAX
+        } else {
+            k as usize
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.below(i + 1);
+            slice.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(4);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let (mut s1, mut s2, mut s4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+            s4 += z * z * z * z;
+        }
+        let nf = n as f64;
+        assert!((s1 / nf).abs() < 0.02, "mean {}", s1 / nf);
+        assert!((s2 / nf - 1.0).abs() < 0.03, "var {}", s2 / nf);
+        assert!((s4 / nf - 3.0).abs() < 0.15, "kurt {}", s4 / nf);
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut r = Rng::new(6);
+        for &shape in &[0.5, 1.0, 2.5, 7.0] {
+            let n = 100_000;
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            for _ in 0..n {
+                let g = r.gamma(shape);
+                assert!(g > 0.0);
+                s1 += g;
+                s2 += g * g;
+            }
+            let mean = s1 / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            assert!((mean - shape).abs() / shape < 0.05, "shape {shape} mean {mean}");
+            assert!((var - shape).abs() / shape < 0.12, "shape {shape} var {var}");
+        }
+    }
+
+    #[test]
+    fn student_t_symmetric_heavy_tail() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut mean = 0.0;
+        let mut beyond3 = 0usize;
+        for _ in 0..n {
+            let t = r.student_t(4.0);
+            mean += t;
+            if t.abs() > 3.0 {
+                beyond3 += 1;
+            }
+        }
+        mean /= n as f64;
+        assert!(mean.abs() < 0.03);
+        // P(|t4| > 3) ~ 0.02 >> P(|z| > 3) ~ 0.0027
+        let frac = beyond3 as f64 / n as f64;
+        assert!(frac > 0.01 && frac < 0.06, "tail frac {frac}");
+    }
+
+    #[test]
+    fn geometric_skip_mean() {
+        let mut r = Rng::new(8);
+        let p = 0.1;
+        let n = 50_000;
+        let total: usize = (0..n).map(|_| r.geometric_skip(p)).sum();
+        let mean = total as f64 / n as f64;
+        // E[skips] = (1-p)/p = 9
+        assert!((mean - 9.0).abs() < 0.35, "mean {mean}");
+        assert_eq!(r.geometric_skip(1.0), 0);
+        assert_eq!(r.geometric_skip(0.0), usize::MAX);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(10);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+}

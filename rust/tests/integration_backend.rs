@@ -1,0 +1,158 @@
+//! Cross-layer numerics: the XLA backend (executing the AOT artifacts that
+//! came from the Pallas kernels through `make artifacts`) must agree with
+//! the pure-Rust CpuBackend to f64 tolerance, for all three models, across
+//! batch sizes that exercise padding and multi-chunk execution.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); each test is a no-op
+//! with a notice if the artifacts are missing.
+
+use std::sync::Arc;
+
+use firefly::data::synth;
+use firefly::metrics::Counters;
+use firefly::models::{LogisticJJ, ModelBound, RobustT, SoftmaxBohning};
+use firefly::runtime::{BatchEval, CpuBackend, XlaBackend, XlaSource};
+use firefly::util::Rng;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn compare_backends(source: Arc<dyn XlaSource>, theta_scale: f64, seed: u64) {
+    let dim = source.dim();
+    let n = source.n();
+    let mut rng = Rng::new(seed);
+    let theta: Vec<f64> = (0..dim).map(|_| rng.normal() * theta_scale).collect();
+
+    let mut cpu = CpuBackend::new(source.clone(), Counters::new());
+    let mut xla = XlaBackend::new(source.clone(), Counters::new(), "artifacts")
+        .expect("artifact lookup");
+
+    // batch sizes: tiny (padding-dominated), bucket-boundary, multi-chunk
+    for &bs in &[1usize, 3, 255, 256, 257, 300] {
+        let idx: Vec<usize> = (0..bs).map(|_| rng.below(n)).collect();
+        let (mut cll, mut clb) = (Vec::new(), Vec::new());
+        let (mut xll, mut xlb) = (Vec::new(), Vec::new());
+        let mut cgrad = vec![0.0; dim];
+        let mut xgrad = vec![0.0; dim];
+        cpu.eval_pseudo_grad(&theta, &idx, &mut cll, &mut clb, &mut cgrad);
+        xla.eval_pseudo_grad(&theta, &idx, &mut xll, &mut xlb, &mut xgrad);
+        assert_eq!(xll.len(), bs);
+        for i in 0..bs {
+            assert!(
+                (cll[i] - xll[i]).abs() < 1e-9 * (1.0 + cll[i].abs()),
+                "ll mismatch bs={bs} i={i}: cpu {} xla {}",
+                cll[i],
+                xll[i]
+            );
+            assert!(
+                (clb[i] - xlb[i]).abs() < 1e-9 * (1.0 + clb[i].abs()),
+                "lb mismatch bs={bs} i={i}: cpu {} xla {}",
+                clb[i],
+                xlb[i]
+            );
+        }
+        for j in 0..dim {
+            assert!(
+                (cgrad[j] - xgrad[j]).abs() < 1e-5 * (1.0 + cgrad[j].abs()),
+                "pseudo-grad mismatch bs={bs} j={j}: cpu {} xla {}",
+                cgrad[j],
+                xgrad[j]
+            );
+        }
+
+        // lik-grad path
+        let mut cll2 = Vec::new();
+        let mut xll2 = Vec::new();
+        let mut cg2 = vec![0.0; dim];
+        let mut xg2 = vec![0.0; dim];
+        cpu.eval_lik_grad(&theta, &idx, &mut cll2, &mut cg2);
+        xla.eval_lik_grad(&theta, &idx, &mut xll2, &mut xg2);
+        for j in 0..dim {
+            assert!(
+                (cg2[j] - xg2[j]).abs() < 1e-5 * (1.0 + cg2[j].abs()),
+                "lik-grad mismatch bs={bs} j={j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_matches_cpu_logistic_d51() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let data = Arc::new(synth::synth_mnist(600, 50, 7));
+    let mut model = LogisticJJ::new(data, 1.5);
+    // non-trivial anchors
+    let mut rng = Rng::new(1);
+    let anchor: Vec<f64> = (0..model.dim()).map(|_| rng.normal() * 0.2).collect();
+    model.tune_anchors_map(&anchor);
+    compare_backends(Arc::new(model), 0.5, 11);
+}
+
+#[test]
+fn xla_matches_cpu_softmax_k3_d256() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let data = Arc::new(synth::synth_cifar3(500, 256, 8));
+    let mut model = SoftmaxBohning::new(data);
+    let mut rng = Rng::new(2);
+    let anchor: Vec<f64> = (0..model.dim()).map(|_| rng.normal() * 0.1).collect();
+    model.tune_anchors_map(&anchor);
+    compare_backends(Arc::new(model), 0.2, 12);
+}
+
+#[test]
+fn xla_matches_cpu_robust_d57_with_sigma_rescale() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let data = Arc::new(synth::synth_opv(700, 57, 9));
+    // sigma != 1 exercises the rescaling identity against the sigma=1 artifact
+    let mut model = RobustT::new(data, 4.0, 0.7);
+    let mut rng = Rng::new(3);
+    let anchor: Vec<f64> = (0..model.dim()).map(|_| rng.normal() * 0.3).collect();
+    model.tune_anchors_map(&anchor);
+    compare_backends(Arc::new(model), 0.4, 13);
+}
+
+#[test]
+fn xla_backend_pads_and_buckets() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let data = Arc::new(synth::synth_mnist(400, 50, 17));
+    let model = Arc::new(LogisticJJ::new(data, 1.5));
+    let counters = Counters::new();
+    let mut xla = XlaBackend::new(model.clone(), counters.clone(), "artifacts").unwrap();
+    assert!(xla.available_buckets().contains(&256));
+    let theta = vec![0.1; model.dim()];
+    let (mut ll, mut lb) = (Vec::new(), Vec::new());
+    xla.eval(&theta, &[1, 2, 3], &mut ll, &mut lb);
+    assert_eq!(ll.len(), 3);
+    assert_eq!(counters.lik_queries(), 3);
+    assert_eq!(counters.padded_lanes(), 253); // padded up to the 256 bucket
+    assert_eq!(counters.xla_executions(), 1);
+}
+
+#[test]
+fn missing_artifact_shape_is_a_clean_error() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // d=13 logistic has no artifact
+    let data = Arc::new(synth::synth_mnist(50, 12, 1)); // d = 13 with bias
+    let model = Arc::new(LogisticJJ::new(data, 1.5));
+    let msg = match XlaBackend::new(model, Counters::new(), "artifacts") {
+        Ok(_) => panic!("expected missing-artifact error"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("no artifact"), "{msg}");
+}

@@ -1,0 +1,105 @@
+//! End-to-end chain integration over the engine: every (task × algorithm ×
+//! backend) combination runs, produces finite traces, and the FlyMC variants
+//! query fewer likelihoods than regular MCMC. XLA-backed runs require
+//! `make artifacts`.
+
+use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use firefly::engine::run_experiment;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+fn cfg(task: Task, algorithm: Algorithm, backend: Backend, n: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        task,
+        algorithm,
+        backend,
+        n_data: Some(n),
+        iters: 40,
+        burnin: 15,
+        map_steps: 40,
+        record_every: 0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn cpu_experiments_all_combinations() {
+    for task in [Task::LogisticMnist, Task::RobustOpv] {
+        for alg in [
+            Algorithm::RegularMcmc,
+            Algorithm::UntunedFlyMc,
+            Algorithm::MapTunedFlyMc,
+        ] {
+            let res = run_experiment(&cfg(task, alg, Backend::Cpu, 400))
+                .unwrap_or_else(|e| panic!("{task:?}/{alg:?}: {e:#}"));
+            let row = res.table_row();
+            assert!(row.avg_lik_queries_per_iter.is_finite());
+            if alg == Algorithm::RegularMcmc && task == Task::LogisticMnist {
+                assert!((row.avg_lik_queries_per_iter - 400.0).abs() < 1e-9);
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_backend_runs_logistic_experiment_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // d must match an artifact: synth_mnist(_, 50) -> d=51
+    let mut c = cfg(Task::LogisticMnist, Algorithm::MapTunedFlyMc, Backend::Xla, 500);
+    c.iters = 25;
+    c.burnin = 10;
+    let res = run_experiment(&c).expect("xla experiment");
+    let row = res.table_row();
+    assert!(row.avg_lik_queries_per_iter < 500.0);
+    assert!(res.chains[0].logpost_joint.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn xla_and_cpu_chains_are_statistically_consistent() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // identical seeds => identical chains (backends agree to f64 rounding;
+    // the MH accept decisions compare the same numbers)
+    let mut a = cfg(Task::LogisticMnist, Algorithm::UntunedFlyMc, Backend::Cpu, 600);
+    a.iters = 30;
+    let mut b = a.clone();
+    b.backend = Backend::Xla;
+    let ra = run_experiment(&a).unwrap();
+    let rb = run_experiment(&b).unwrap();
+    let la = &ra.chains[0].logpost_joint;
+    let lb = &rb.chains[0].logpost_joint;
+    assert_eq!(la.len(), lb.len());
+    for (x, y) in la.iter().zip(lb) {
+        assert!(
+            (x - y).abs() < 1e-6 * (1.0 + x.abs()),
+            "trace diverged: {x} vs {y}"
+        );
+    }
+    assert_eq!(&ra.chains[0].bright, &rb.chains[0].bright);
+}
+
+#[test]
+fn explicit_resampling_chain_runs() {
+    let mut c = cfg(Task::LogisticMnist, Algorithm::UntunedFlyMc, Backend::Cpu, 300);
+    c.explicit_resample = true;
+    c.resample_fraction = 0.2;
+    let res = run_experiment(&c).unwrap();
+    // explicit: ~fraction * N queries per iter for the z-step + M for θ
+    let q = res.table_row().avg_lik_queries_per_iter;
+    assert!(q >= 60.0, "explicit resampling should cost ≥ fraction·N, got {q}");
+}
+
+#[test]
+fn toy_task_fig2_style_run() {
+    let c = cfg(Task::Toy, Algorithm::UntunedFlyMc, Backend::Cpu, 30);
+    let res = run_experiment(&c).unwrap();
+    assert_eq!(res.n_data, 30);
+    assert!(res.chains[0].bright.iter().all(|&b| b <= 30));
+}
