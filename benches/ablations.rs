@@ -110,7 +110,7 @@ fn main() {
     rep.write_csv("target/bench_ablation_resampling.csv").unwrap();
 
     // --- 4. XLA bucket padding overhead -------------------------------------
-    if std::path::Path::new("artifacts/manifest.txt").exists() {
+    if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.txt").exists() {
         use firefly::data::synth;
         use firefly::metrics::Counters;
         use firefly::models::LogisticJJ;

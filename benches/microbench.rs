@@ -1,7 +1,7 @@
 //! Hot-path microbenchmarks (§Perf instrumentation): per-datum CPU
 //! evaluation, collapsed bound product, BrightSet ops, the implicit
 //! z-resampling sweep, and XLA execution per bucket. These are the numbers
-//! the EXPERIMENTS.md §Perf before/after table tracks.
+//! the DESIGN.md §Perf before/after table tracks.
 //!
 //!     cargo bench --bench microbench
 
@@ -110,7 +110,7 @@ fn main() {
         });
 
     // --- XLA execution per bucket ---------------------------------------------
-    if std::path::Path::new("artifacts/manifest.txt").exists() {
+    if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.txt").exists() {
         use firefly::runtime::XlaBackend;
         let data = Arc::new(synth::synth_mnist(20_000, 50, 1));
         let model = Arc::new(LogisticJJ::new(data, 1.5));

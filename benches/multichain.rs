@@ -1,0 +1,71 @@
+//! Multi-chain engine bench: R replica chains of each algorithm on the
+//! serial (`cpu`) and sharded (`parcpu`) backends — split-R̂ (worst θ
+//! component and joint log-density), pooled ESS, queries/iter, and
+//! wallclock, so backend sharding and chain-level threading can be compared
+//! at identical statistical output (the chains are bit-identical across
+//! backends and thread caps by construction).
+//!
+//!     cargo bench --bench multichain [-- --n 4000 --iters 400 --chains 4 --threads 0]
+
+use firefly::bench_harness::Report;
+use firefly::cli::Args;
+use firefly::engine::multi_chain;
+use firefly::prelude::*;
+use firefly::util::Timer;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 4000);
+    let chains = args.get_usize("chains", 4);
+    let mut report = Report::new(
+        &format!("Multi-chain engine (N={n}, R={chains} replicas)"),
+        &[
+            "backend",
+            "algorithm",
+            "queries/iter",
+            "split-Rhat (worst dim)",
+            "split-Rhat (logpost)",
+            "pooled ESS",
+            "total lik queries",
+            "wallclock (s)",
+        ],
+    );
+    for backend in [Backend::Cpu, Backend::ParCpu] {
+        for algorithm in [Algorithm::RegularMcmc, Algorithm::MapTunedFlyMc] {
+            let cfg = ExperimentConfig {
+                task: Task::LogisticMnist,
+                algorithm,
+                backend,
+                n_data: Some(n),
+                iters: args.get_usize("iters", 400),
+                burnin: args.get_usize("burnin", 100),
+                chains,
+                threads: args.get_usize("threads", 0),
+                map_steps: args.get_usize("map-steps", 200),
+                seed: args.get_u64("seed", 0),
+                record_every: 0,
+                ..Default::default()
+            };
+            let timer = Timer::start();
+            let (_result, summary) = multi_chain::run_multi_chain(&cfg).expect("run");
+            let secs = timer.elapsed_secs();
+            report.row(&[
+                format!("{backend:?}"),
+                algorithm.label().to_string(),
+                format!("{:.1}", summary.avg_queries_per_iter),
+                format!("{:.3}", summary.split_rhat_max),
+                format!("{:.3}", summary.split_rhat_logpost),
+                format!("{:.1}", summary.pooled_ess),
+                summary.total_lik_queries.to_string(),
+                format!("{secs:.2}"),
+            ]);
+        }
+    }
+    report.print();
+    report.write_csv("target/bench_multichain.csv").unwrap();
+    println!("wrote target/bench_multichain.csv");
+    println!(
+        "(identical seeds give bit-identical chains on cpu and parcpu; \
+         the wallclock column is the only one allowed to differ)"
+    );
+}

@@ -8,7 +8,7 @@
 //! This is the repository's END-TO-END DRIVER: it exercises data synthesis,
 //! MAP tuning, bound collapse, the implicit z-resampler, the sampler,
 //! diagnostics, and (with --backend xla) the full AOT artifact path, and
-//! prints the paper-format rows. Results are recorded in EXPERIMENTS.md.
+//! prints the paper-format rows. Results are recorded in DESIGN.md §Perf.
 
 use firefly::bench_harness::{ascii_plot, Report};
 use firefly::cli::Args;
@@ -22,7 +22,7 @@ fn main() {
         iters: args.get_usize("iters", 2000),
         burnin: args.get_usize("burnin", 500),
         chains: args.get_usize("chains", 1),
-        backend: if args.get_str("backend", "cpu") == "xla" { Backend::Xla } else { Backend::Cpu },
+        backend: Backend::parse_or_exit(&args.get_str("backend", "cpu")),
         seed: args.get_u64("seed", 0),
         record_every: args.get_usize("record-every", 10),
         ..Default::default()

@@ -18,7 +18,7 @@ fn main() {
         iters: args.get_usize("iters", 3000),
         burnin: args.get_usize("burnin", 1500),
         chains: args.get_usize("chains", 1),
-        backend: if args.get_str("backend", "cpu") == "xla" { Backend::Xla } else { Backend::Cpu },
+        backend: Backend::parse_or_exit(&args.get_str("backend", "cpu")),
         seed: args.get_u64("seed", 0),
         record_every: args.get_usize("record-every", 25),
         map_steps: args.get_usize("map-steps", 800),

@@ -230,8 +230,32 @@ impl Algorithm {
 /// Likelihood evaluation backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
+    /// Serial pure-Rust reference backend.
     Cpu,
+    /// Sharded data-parallel CPU backend (bit-identical to `Cpu`).
+    ParCpu,
+    /// PJRT/XLA execution of the AOT artifacts (needs the `xla` feature).
     Xla,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "cpu" => Ok(Backend::Cpu),
+            "parcpu" | "par_cpu" | "par" => Ok(Backend::ParCpu),
+            "xla" => Ok(Backend::Xla),
+            other => Err(format!("unknown backend {other:?}")),
+        }
+    }
+
+    /// [`Backend::parse`] for CLI front-ends (benches/examples): print the
+    /// error and exit(2) instead of returning it.
+    pub fn parse_or_exit(s: &str) -> Backend {
+        Backend::parse(s).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        })
+    }
 }
 
 /// Full experiment description with paper-faithful defaults.
@@ -244,7 +268,14 @@ pub struct ExperimentConfig {
     pub iters: usize,
     pub burnin: usize,
     pub n_data: Option<usize>, // None = paper-scale default for the task
+    /// replica chains (run concurrently on the CPU backends)
     pub chains: usize,
+    /// worker-thread cap: bounds how many replica chains run concurrently,
+    /// and sizes the sharded backend's dedicated pool for single-chain runs
+    /// (multi-chain runs share rayon's global pool so total workers stay
+    /// bounded by the machine, not chains × threads). 0 = one thread per
+    /// replica / rayon's default pool.
+    pub threads: usize,
     /// q_{d->b} for implicit z-resampling (paper: 0.1 untuned, 0.01 tuned)
     pub q_dark_to_bright: Option<f64>,
     /// fixed JJ xi for untuned bounds (paper: 1.5)
@@ -272,6 +303,7 @@ impl Default for ExperimentConfig {
             burnin: 500,
             n_data: None,
             chains: 1,
+            threads: 0,
             q_dark_to_bright: None,
             untuned_xi: 1.5,
             explicit_resample: false,
@@ -289,11 +321,7 @@ impl ExperimentConfig {
         let mut c = ExperimentConfig::default();
         c.task = Task::parse(&doc.str_or("experiment", "task", "logistic"))?;
         c.algorithm = Algorithm::parse(&doc.str_or("experiment", "algorithm", "map_tuned"))?;
-        c.backend = match doc.str_or("experiment", "backend", "cpu").as_str() {
-            "cpu" => Backend::Cpu,
-            "xla" => Backend::Xla,
-            other => return Err(format!("unknown backend {other:?}")),
-        };
+        c.backend = Backend::parse(&doc.str_or("experiment", "backend", "cpu"))?;
         c.seed = doc.usize_or("experiment", "seed", 0) as u64;
         c.iters = doc.usize_or("experiment", "iters", c.iters);
         c.burnin = doc.usize_or("experiment", "burnin", c.burnin);
@@ -301,6 +329,7 @@ impl ExperimentConfig {
             c.n_data = Some(v as usize);
         }
         c.chains = doc.usize_or("experiment", "chains", c.chains);
+        c.threads = doc.usize_or("experiment", "threads", c.threads);
         if let Some(v) = doc.get("flymc", "q_dark_to_bright").and_then(|v| v.as_f64()) {
             c.q_dark_to_bright = Some(v);
         }
@@ -401,5 +430,26 @@ mod tests {
         assert!(Task::parse("nope").is_err());
         assert_eq!(Algorithm::parse("map").unwrap(), Algorithm::MapTunedFlyMc);
         assert!(Algorithm::parse("zzz").is_err());
+    }
+
+    #[test]
+    fn backend_parse_and_parallel_plumbing() {
+        assert_eq!(Backend::parse("cpu").unwrap(), Backend::Cpu);
+        assert_eq!(Backend::parse("parcpu").unwrap(), Backend::ParCpu);
+        assert_eq!(Backend::parse("par").unwrap(), Backend::ParCpu);
+        assert_eq!(Backend::parse("xla").unwrap(), Backend::Xla);
+        assert!(Backend::parse("gpu").is_err());
+
+        let c = ExperimentConfig::from_str_toml(
+            "[experiment]\nbackend = \"parcpu\"\nchains = 4\nthreads = 2",
+        )
+        .unwrap();
+        assert_eq!(c.backend, Backend::ParCpu);
+        assert_eq!(c.chains, 4);
+        assert_eq!(c.threads, 2);
+        // defaults
+        let c = ExperimentConfig::from_str_toml("").unwrap();
+        assert_eq!(c.backend, Backend::Cpu);
+        assert_eq!(c.threads, 0);
     }
 }

@@ -22,7 +22,7 @@ fn parse_rows(text: &str) -> Result<Vec<Vec<f64>>, String> {
             line.split(',').map(|c| c.trim().parse::<f64>()).collect();
         match cells {
             Ok(v) => {
-                if let Some(first) = rows.first() as Option<&Vec<f64>> {
+                if let Some(first) = rows.first() {
                     if v.len() != first.len() {
                         return Err(format!(
                             "line {}: ragged row ({} vs {} cols)",

@@ -118,6 +118,40 @@ pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
     (var_plus / w).sqrt()
 }
 
+/// Worst-case (max over θ components) split-R̂ across replica chains.
+/// `traces[r]` is replica r's post-burnin θ trace (rows = iterations).
+/// Returns NaN with fewer than 2 chains, traces too short to halve, or no
+/// component with positive within-chain variance.
+pub fn split_rhat_max_components(traces: &[&[Vec<f64>]]) -> f64 {
+    if traces.len() < 2 || traces.iter().any(|t| t.len() < 4) {
+        return f64::NAN;
+    }
+    let d = traces[0][0].len();
+    let mut worst = f64::NEG_INFINITY;
+    for j in 0..d {
+        let comp: Vec<Vec<f64>> = traces
+            .iter()
+            .map(|t| t.iter().map(|row| row[j]).collect())
+            .collect();
+        let r = split_rhat(&comp);
+        if r.is_finite() {
+            worst = worst.max(r);
+        }
+    }
+    if worst == f64::NEG_INFINITY {
+        f64::NAN
+    } else {
+        worst
+    }
+}
+
+/// Pooled effective sample size across independent replicas: the per-chain
+/// minimum-component ESS summed over chains (independent chains contribute
+/// additive information).
+pub fn pooled_ess_min_components(traces: &[&[Vec<f64>]]) -> f64 {
+    traces.iter().map(|t| ess_min_components(t)).sum()
+}
+
 /// Summary of a scalar trace.
 #[derive(Clone, Debug)]
 pub struct Summary {
@@ -213,6 +247,34 @@ mod tests {
         let c2: Vec<f64> = (0..2000).map(|_| rng.normal() + 10.0).collect();
         let r = split_rhat(&[c1, c2]);
         assert!(r > 3.0, "rhat {r}");
+    }
+
+    #[test]
+    fn rhat_max_components_and_pooled_ess() {
+        let mut rng = Rng::new(7);
+        let well_mixed: Vec<Vec<Vec<f64>>> = (0..4)
+            .map(|_| (0..3000).map(|_| vec![rng.normal(), rng.normal()]).collect())
+            .collect();
+        let refs: Vec<&[Vec<f64>]> = well_mixed.iter().map(|t| t.as_slice()).collect();
+        let r = split_rhat_max_components(&refs);
+        assert!((r - 1.0).abs() < 0.05, "rhat {r}");
+        let pooled = pooled_ess_min_components(&refs);
+        let singles: f64 = refs.iter().map(|t| ess_min_components(t)).sum();
+        assert!((pooled - singles).abs() < 1e-9);
+        assert!(pooled > 6000.0, "pooled ESS {pooled}");
+
+        // one component disagrees across chains -> large max-R̂
+        let mut shifted = well_mixed.clone();
+        for row in shifted[0].iter_mut() {
+            row[1] += 8.0;
+        }
+        let refs: Vec<&[Vec<f64>]> = shifted.iter().map(|t| t.as_slice()).collect();
+        assert!(split_rhat_max_components(&refs) > 2.0);
+
+        // degenerate inputs
+        assert!(split_rhat_max_components(&refs[..1]).is_nan());
+        let tiny: Vec<Vec<f64>> = vec![vec![1.0]; 3];
+        assert!(split_rhat_max_components(&[&tiny, &tiny]).is_nan());
     }
 
     #[test]

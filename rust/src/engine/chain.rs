@@ -5,6 +5,7 @@
 use crate::flymc::{FullPosterior, PseudoPosterior, ZStats};
 use crate::metrics::CounterSnapshot;
 use crate::samplers::{Sampler, Target};
+use crate::util::rng::splitmix64;
 use crate::util::{Rng, Timer};
 
 /// Either posterior, so the chain driver is shared between the baseline and
@@ -83,6 +84,26 @@ impl Default for ChainConfig {
             seed: 0,
         }
     }
+}
+
+impl ChainConfig {
+    /// The replica-`i` configuration: identical settings, statistically
+    /// independent seed stream derived from (base seed, replica id).
+    pub fn for_replica(&self, replica: usize) -> ChainConfig {
+        let mut c = self.clone();
+        c.seed = derive_replica_seed(self.seed, replica);
+        c
+    }
+}
+
+/// Derive a per-replica seed. Injective in `replica` for a fixed base —
+/// `base ^ replica·odd` is injective and each splitmix64 output is a
+/// bijection of its input state — and scrambled so nearby bases and replica
+/// ids give uncorrelated xoshiro streams.
+pub fn derive_replica_seed(base: u64, replica: usize) -> u64 {
+    let mut s = base ^ (replica as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let _ = splitmix64(&mut s); // extra scramble round; state advance is bijective
+    splitmix64(&mut s)
 }
 
 #[derive(Clone, Debug, Default)]
@@ -173,6 +194,57 @@ pub fn run_chain(
     out
 }
 
+/// Replica-spawn path: run `replicas` seeded chains, each constructed inside
+/// its worker thread by `build` (targets own non-`Send` backends, so they
+/// must be born where they run), with at most `threads` chains in flight
+/// (0 = all at once). Workers pull replica ids from a shared queue, so a
+/// slow chain never idles the other workers; results come back in replica
+/// order and each replica's output depends only on (base, replica id),
+/// never on scheduling.
+pub fn run_chain_replicas<F>(
+    replicas: usize,
+    threads: usize,
+    base: &ChainConfig,
+    build: F,
+) -> anyhow::Result<Vec<ChainResult>>
+where
+    F: Fn(&ChainConfig) -> anyhow::Result<(ChainTarget, Box<dyn Sampler>, Vec<f64>)> + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let replicas = replicas.max(1);
+    let workers = if threads == 0 { replicas } else { threads.max(1).min(replicas) };
+    let build = &build;
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    let mut collected: Vec<(usize, anyhow::Result<ChainResult>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut done = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= replicas {
+                                break;
+                            }
+                            let ccfg = base.for_replica(i);
+                            let res = build(&ccfg)
+                                .map(|(target, sampler, theta0)| {
+                                    run_chain(target, sampler, theta0, &ccfg)
+                                });
+                            done.push((i, res));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+    collected.sort_by_key(|(i, _)| *i);
+    collected.into_iter().map(|(_, r)| r).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,5 +301,45 @@ mod tests {
         assert_eq!(r1.logpost_joint, r2.logpost_joint);
         assert_eq!(r1.bright, r2.bright);
         assert_eq!(r1.queries_per_iter, r2.queries_per_iter);
+    }
+
+    #[test]
+    fn replica_seeds_are_distinct_and_stable() {
+        let a: Vec<u64> = (0..16).map(|i| derive_replica_seed(7, i)).collect();
+        let b: Vec<u64> = (0..16).map(|i| derive_replica_seed(7, i)).collect();
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 16);
+        assert_ne!(derive_replica_seed(7, 0), derive_replica_seed(8, 0));
+        let cfg = ChainConfig { seed: 7, ..Default::default() };
+        assert_eq!(cfg.for_replica(3).seed, derive_replica_seed(7, 3));
+        assert_eq!(cfg.for_replica(3).iters, cfg.iters);
+    }
+
+    #[test]
+    fn replica_spawn_path_is_ordered_and_reproducible() {
+        let run_all = |threads: usize| {
+            let base = ChainConfig { iters: 30, burnin: 10, seed: 5, ..Default::default() };
+            run_chain_replicas(4, threads, &base, |ccfg: &ChainConfig| {
+                let (target, theta0) = flymc_target(150, 9);
+                let sampler: Box<dyn crate::samplers::Sampler> =
+                    Box::new(RandomWalkMh::new(0.05));
+                let _ = ccfg;
+                Ok((target, sampler, theta0))
+            })
+            .unwrap()
+        };
+        let serial = run_all(1);
+        let parallel = run_all(4);
+        assert_eq!(serial.len(), 4);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.logpost_joint, b.logpost_joint);
+            assert_eq!(a.queries_per_iter, b.queries_per_iter);
+        }
+        // distinct replica seeds drive distinct chains
+        assert_ne!(serial[0].logpost_joint, serial[1].logpost_joint);
     }
 }

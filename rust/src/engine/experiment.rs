@@ -3,10 +3,10 @@
 
 use std::sync::Arc;
 
-use crate::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use crate::configx::{Algorithm, ExperimentConfig, Task};
 use crate::data::synth;
 use crate::diagnostics;
-use crate::engine::chain::{run_chain, ChainConfig, ChainResult, ChainTarget};
+use crate::engine::chain::{ChainConfig, ChainResult, ChainTarget};
 use crate::flymc::{FullPosterior, PseudoPosterior};
 use crate::map_estimate::{map_estimate, MapConfig};
 use crate::metrics::Counters;
@@ -53,13 +53,18 @@ pub fn build_model(
             } else {
                 synth::synth_mnist(n, 50, cfg.seed)
             });
-            let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task)) });
+            let scale = cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task));
+            let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale });
             let mut model = LogisticJJ::new(data, cfg.untuned_xi);
             let (map, q) = if tune {
                 let res = map_estimate(
                     &model,
                     prior.as_ref(),
-                    &MapConfig { steps: cfg.map_steps, seed: cfg.seed ^ 0xAD, ..Default::default() },
+                    &MapConfig {
+                        steps: cfg.map_steps,
+                        seed: cfg.seed ^ 0xAD,
+                        ..Default::default()
+                    },
                 );
                 model.tune_anchors_map(&res.theta);
                 (Some(res.theta), res.lik_queries)
@@ -70,13 +75,18 @@ pub fn build_model(
         }
         Task::SoftmaxCifar => {
             let data = Arc::new(synth::synth_cifar3(n, 256, cfg.seed));
-            let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task)) });
+            let scale = cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task));
+            let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale });
             let mut model = SoftmaxBohning::new(data);
             let (map, q) = if tune {
                 let res = map_estimate(
                     &model,
                     prior.as_ref(),
-                    &MapConfig { steps: cfg.map_steps, seed: cfg.seed ^ 0xAD, ..Default::default() },
+                    &MapConfig {
+                        steps: cfg.map_steps,
+                        seed: cfg.seed ^ 0xAD,
+                        ..Default::default()
+                    },
                 );
                 model.tune_anchors_map(&res.theta);
                 (Some(res.theta), res.lik_queries)
@@ -87,7 +97,8 @@ pub fn build_model(
         }
         Task::RobustOpv => {
             let data = Arc::new(synth::synth_opv(n, 57, cfg.seed));
-            let prior: Arc<dyn Prior> = Arc::new(Laplace { b: cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task)) });
+            let b = cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task));
+            let prior: Arc<dyn Prior> = Arc::new(Laplace { b });
             let mut model = RobustT::new(data, 4.0, 0.5);
             let (map, q) = if tune {
                 let res = map_estimate(
@@ -128,10 +139,15 @@ pub fn build_chain(
     chain_seed: u64,
 ) -> anyhow::Result<(ChainTarget, Vec<f64>)> {
     let counters = Counters::new();
-    let eval = make_backend(model.clone(), cfg.backend, counters, &cfg.artifacts_dir)?;
+    // Shard pool: a dedicated `threads`-sized pool only when this chain runs
+    // alone; concurrent replicas share rayon's global pool so the total
+    // worker count stays bounded by the machine, not chains × threads.
+    let shard_threads = if cfg.chains > 1 { 0 } else { cfg.threads };
+    let eval =
+        make_backend(model.clone(), cfg.backend, counters, &cfg.artifacts_dir, shard_threads)?;
     let mut rng = Rng::new(chain_seed ^ 0x1217);
     let theta0 = prior.sample(model.dim(), &mut rng);
-    let model_mb: Arc<dyn ModelBound> = model;
+    let model_mb: Arc<dyn ModelBound> = model.as_model_bound();
     Ok(match cfg.algorithm {
         Algorithm::RegularMcmc => (
             ChainTarget::Regular(FullPosterior::new(model_mb, prior, eval, theta0.clone())),
@@ -174,6 +190,8 @@ impl ExperimentResult {
             .iter()
             .map(|c| c.avg_bright_post_burnin(burnin))
             .collect();
+        let traces: Vec<&[Vec<f64>]> =
+            self.chains.iter().map(|c| c.theta_trace.as_slice()).collect();
         TableRow {
             algorithm: self.config.algorithm.label().to_string(),
             avg_lik_queries_per_iter: crate::util::math::mean(&queries),
@@ -183,6 +201,7 @@ impl ExperimentResult {
             } else {
                 crate::util::math::mean(&bright)
             },
+            split_rhat: diagnostics::split_rhat_max_components(&traces),
             wallclock_secs: self.chains.iter().map(|c| c.wallclock_secs).sum::<f64>()
                 / self.chains.len() as f64,
         }
@@ -197,6 +216,8 @@ pub struct TableRow {
     pub avg_lik_queries_per_iter: f64,
     pub ess_per_1000: f64,
     pub avg_bright: f64,
+    /// worst-component split-R̂ across replica chains (NaN for 1 chain)
+    pub split_rhat: f64,
     pub wallclock_secs: f64,
 }
 
@@ -212,16 +233,10 @@ impl TableRow {
     }
 }
 
-/// Run all chains of one experiment (threaded when chains > 1 on the CPU
-/// backend; the XLA backend builds one PJRT client per chain thread, so
-/// multi-chain XLA runs are serialized to keep memory bounded).
-pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentResult> {
-    let timer = Timer::start();
-    let (model, prior, _map, map_queries) = build_model(cfg);
-    let setup_secs = timer.elapsed_secs();
-    let n_data = model.n();
-
-    let chain_cfg = |seed: u64| ChainConfig {
+/// The per-chain driver configuration for an experiment; `seed` is the base
+/// seed (replicas derive their own via [`ChainConfig::for_replica`]).
+pub fn chain_config(cfg: &ExperimentConfig, seed: u64) -> ChainConfig {
+    ChainConfig {
         iters: cfg.iters,
         burnin: cfg.burnin,
         record_full_every: cfg.record_every,
@@ -230,37 +245,19 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentResult
         explicit_resample: cfg.explicit_resample,
         resample_fraction: cfg.resample_fraction,
         seed,
-    };
-
-    let mut chains = Vec::with_capacity(cfg.chains);
-    if cfg.chains <= 1 || cfg.backend == Backend::Xla {
-        for c in 0..cfg.chains.max(1) {
-            let seed = cfg.seed.wrapping_add(c as u64 * 7919);
-            let (target, theta0) = build_chain(cfg, model.clone(), prior.clone(), seed)?;
-            chains.push(run_chain(target, build_sampler(cfg.task), theta0, &chain_cfg(seed)));
-        }
-    } else {
-        let results: Vec<anyhow::Result<ChainResult>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..cfg.chains)
-                .map(|c| {
-                    let model = model.clone();
-                    let prior = prior.clone();
-                    let cfg = cfg.clone();
-                    let ccfg = chain_cfg(cfg.seed.wrapping_add(c as u64 * 7919));
-                    scope.spawn(move || {
-                        let (target, theta0) =
-                            build_chain(&cfg, model, prior, ccfg.seed)?;
-                        Ok(run_chain(target, build_sampler(cfg.task), theta0, &ccfg))
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for r in results {
-            chains.push(r?);
-        }
     }
+}
 
+/// Run all chains of one experiment. Replicas fan out across worker threads
+/// through [`crate::engine::multi_chain::run_replica_chains`] (capped by
+/// `cfg.threads`; XLA runs are serialized there — one PJRT client per chain
+/// keeps memory bounded).
+pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentResult> {
+    let timer = Timer::start();
+    let (model, prior, _map, map_queries) = build_model(cfg);
+    let setup_secs = timer.elapsed_secs();
+    let n_data = model.n();
+    let chains = crate::engine::multi_chain::run_replica_chains(cfg, model, prior)?;
     Ok(ExperimentResult {
         config: cfg.clone(),
         chains,

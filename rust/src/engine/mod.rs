@@ -1,9 +1,16 @@
-//! Chain orchestration: single-chain driver, threaded multi-chain runner,
-//! and the experiment builder that assembles data + model + bound-tuning +
-//! sampler + backend from an [`ExperimentConfig`].
+//! Chain orchestration: single-chain driver, the threaded multi-chain
+//! replica engine (per-replica seed derivation, split-R̂ / pooled-ESS
+//! reporting), and the experiment builder that assembles data + model +
+//! bound-tuning + sampler + backend from an [`ExperimentConfig`].
+//!
+//! [`ExperimentConfig`]: crate::configx::ExperimentConfig
 
 pub mod chain;
 pub mod experiment;
+pub mod multi_chain;
 
-pub use chain::{run_chain, ChainConfig, ChainResult, ChainTarget};
+pub use chain::{
+    derive_replica_seed, run_chain, run_chain_replicas, ChainConfig, ChainResult, ChainTarget,
+};
 pub use experiment::{build_chain, run_experiment, ExperimentResult, TableRow};
+pub use multi_chain::{run_multi_chain, summarize_chains, MultiChainSummary};

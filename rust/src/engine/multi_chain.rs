@@ -1,0 +1,143 @@
+//! Threaded multi-chain replica engine + cross-chain convergence reporting.
+//!
+//! `run_replica_chains` fans an experiment's R replica chains across worker
+//! threads (each chain builds its own backend and RNG stream in-thread via
+//! [`crate::engine::chain::run_chain_replicas`], with per-replica seeds from
+//! [`crate::engine::chain::derive_replica_seed`]). `summarize_chains` then
+//! feeds the replica traces to the cross-chain machinery in
+//! [`crate::diagnostics`] — split-R̂ (worst θ component and joint
+//! log-density) and pooled ESS — which a single chain can never exercise.
+//!
+//! Determinism: replica r's chain depends only on (config, base seed, r),
+//! never on the thread cap or scheduling, so a multi-chain run is bit-for-
+//! bit reproducible at any `--threads` setting (verified in
+//! `rust/tests/integration_parallel.rs`).
+
+use std::sync::Arc;
+
+use crate::configx::{Backend, ExperimentConfig};
+use crate::diagnostics;
+use crate::engine::chain::{run_chain_replicas, ChainConfig, ChainResult};
+use crate::engine::experiment::{
+    build_chain, build_sampler, chain_config, run_experiment, ExperimentResult,
+};
+use crate::models::Prior;
+use crate::runtime::XlaSource;
+use crate::samplers::Sampler;
+
+/// Cross-chain summary computed from R replica chains.
+#[derive(Clone, Debug)]
+pub struct MultiChainSummary {
+    pub replicas: usize,
+    /// worst (max over θ components) split-R̂ across replicas
+    pub split_rhat_max: f64,
+    /// split-R̂ of the post-burnin joint log-density trace
+    pub split_rhat_logpost: f64,
+    /// pooled (summed over replicas) minimum-component ESS
+    pub pooled_ess: f64,
+    /// post-burnin likelihood queries per iteration, averaged over replicas
+    pub avg_queries_per_iter: f64,
+    /// total likelihood queries across all replicas (setup + sampling)
+    pub total_lik_queries: u64,
+}
+
+/// Run all replica chains of one experiment concurrently.
+///
+/// The thread cap is `cfg.threads` (0 = one thread per replica). XLA-backed
+/// runs are serialized — each chain holds its own PJRT client, so running
+/// them one at a time keeps memory bounded.
+pub fn run_replica_chains(
+    cfg: &ExperimentConfig,
+    model: Arc<dyn XlaSource>,
+    prior: Arc<dyn Prior>,
+) -> anyhow::Result<Vec<ChainResult>> {
+    let threads = if cfg.backend == Backend::Xla { 1 } else { cfg.threads };
+    let base = chain_config(cfg, cfg.seed);
+    run_chain_replicas(cfg.chains.max(1), threads, &base, |ccfg: &ChainConfig| {
+        let (target, theta0) = build_chain(cfg, model.clone(), prior.clone(), ccfg.seed)?;
+        let sampler: Box<dyn Sampler> = build_sampler(cfg.task);
+        Ok((target, sampler, theta0))
+    })
+}
+
+/// Cross-chain diagnostics over finished replicas. `burnin` indexes the raw
+/// per-iteration series (`logpost_joint`, `queries_per_iter`); the θ traces
+/// are already post-burnin.
+pub fn summarize_chains(chains: &[ChainResult], burnin: usize) -> MultiChainSummary {
+    let traces: Vec<&[Vec<f64>]> = chains.iter().map(|c| c.theta_trace.as_slice()).collect();
+    let logpost: Vec<Vec<f64>> = chains
+        .iter()
+        .map(|c| c.logpost_joint[burnin.min(c.logpost_joint.len())..].to_vec())
+        .collect();
+    let queries: Vec<f64> = chains.iter().map(|c| c.avg_queries_post_burnin(burnin)).collect();
+    MultiChainSummary {
+        replicas: chains.len(),
+        split_rhat_max: diagnostics::split_rhat_max_components(&traces),
+        split_rhat_logpost: diagnostics::split_rhat(&logpost),
+        pooled_ess: diagnostics::pooled_ess_min_components(&traces),
+        avg_queries_per_iter: crate::util::math::mean(&queries),
+        total_lik_queries: chains.iter().map(|c| c.final_counters.lik_queries).sum(),
+    }
+}
+
+/// Run an experiment's replicas concurrently and report convergence: the
+/// one-call entry point for R ≥ 2 chains with split-R̂ / pooled-ESS output.
+pub fn run_multi_chain(
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<(ExperimentResult, MultiChainSummary)> {
+    let result = run_experiment(cfg)?;
+    let summary = summarize_chains(&result.chains, cfg.burnin);
+    Ok((result, summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configx::{Algorithm, Task};
+
+    fn cfg(chains: usize, threads: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            task: Task::LogisticMnist,
+            algorithm: Algorithm::MapTunedFlyMc,
+            n_data: Some(300),
+            iters: 60,
+            burnin: 20,
+            map_steps: 50,
+            chains,
+            threads,
+            record_every: 0,
+            seed: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn four_replicas_report_rhat_and_flymc_cost() {
+        let (result, summary) = run_multi_chain(&cfg(4, 0)).unwrap();
+        assert_eq!(result.chains.len(), 4);
+        assert_eq!(summary.replicas, 4);
+        assert!(summary.split_rhat_max.is_finite(), "rhat {}", summary.split_rhat_max);
+        assert!(summary.split_rhat_logpost.is_finite());
+        assert!(summary.pooled_ess > 0.0);
+        // FlyMC's defining property must survive the multi-chain engine:
+        // queries/iter far below N for every replica, not just on average.
+        for c in &result.chains {
+            let q = c.avg_queries_post_burnin(20);
+            assert!(q < 150.0, "N=300 but {q} q/iter");
+        }
+        assert!(summary.avg_queries_per_iter < 150.0);
+        assert!(summary.total_lik_queries > 0);
+    }
+
+    #[test]
+    fn thread_cap_does_not_change_results() {
+        let (serial, _) = run_multi_chain(&cfg(3, 1)).unwrap();
+        let (parallel, _) = run_multi_chain(&cfg(3, 3)).unwrap();
+        for (a, b) in serial.chains.iter().zip(&parallel.chains) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.logpost_joint, b.logpost_joint);
+            assert_eq!(a.bright, b.bright);
+            assert_eq!(a.queries_per_iter, b.queries_per_iter);
+        }
+    }
+}

@@ -5,8 +5,12 @@
 //! Pallas system: the MCMC coordinator, data structures, samplers and
 //! diagnostics live in Rust; the likelihood/bound hot spot is a Pallas
 //! kernel inside a JAX graph, AOT-lowered to HLO and executed through
-//! PJRT (`runtime::XlaBackend`) with a pure-Rust fallback
-//! (`runtime::CpuBackend`). Python never runs on the sampling path.
+//! PJRT (`runtime::XlaBackend`, behind the `xla` feature) with pure-Rust
+//! fallbacks: the serial reference `runtime::CpuBackend` and the sharded
+//! data-parallel `runtime::ParBackend` (bit-identical outputs, identical
+//! query counts). Python never runs on the sampling path. R replica chains
+//! run concurrently through `engine::multi_chain`, which reports split-R̂
+//! and pooled ESS across replicas (`--chains`/`--threads` on the CLI).
 //!
 //! ## Quick start
 //!
@@ -48,7 +52,9 @@ pub mod util;
 /// Convenience prelude for examples and benches.
 pub mod prelude {
     pub use crate::configx::{Algorithm, Backend, ExperimentConfig, Task};
-    pub use crate::engine::{run_experiment, ExperimentResult, TableRow};
+    pub use crate::engine::{
+        run_experiment, run_multi_chain, ExperimentResult, MultiChainSummary, TableRow,
+    };
     pub use crate::flymc::{BrightSet, FullPosterior, PseudoPosterior};
     pub use crate::models::{
         IsoGaussian, Laplace, LogisticJJ, ModelBound, Prior, RobustT, SoftmaxBohning,

@@ -23,10 +23,14 @@ fn usage() -> ! {
   common flags:
     --task mnist|cifar|opv|toy     workload (default mnist)
     --algorithm regular|untuned|map  (default map)
-    --backend cpu|xla              likelihood backend (default cpu)
+    --backend cpu|parcpu|xla       likelihood backend (default cpu;
+                                   parcpu shards batches across threads)
     --n <int>                      dataset size (default: paper scale)
     --iters / --burnin <int>
-    --chains <int>                 replicas (threads on cpu backend)
+    --chains <int>                 replica chains, run concurrently on the
+                                   cpu backends (split-R-hat reported for >= 2)
+    --threads <int>                worker-thread cap for replicas and the
+                                   parcpu shards (default 0 = automatic)
     --seed <int>
     --q <float>                    q_dark->bright override
     --explicit                     use explicit (Alg 1) z-resampling
@@ -50,11 +54,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
         cfg.algorithm = Algorithm::parse(a)?;
     }
     if let Some(b) = args.get("backend") {
-        cfg.backend = match b {
-            "cpu" => Backend::Cpu,
-            "xla" => Backend::Xla,
-            other => return Err(format!("unknown backend {other}")),
-        };
+        cfg.backend = Backend::parse(b)?;
     }
     if let Some(n) = args.get("n") {
         cfg.n_data = Some(n.parse().map_err(|_| "bad --n")?);
@@ -62,6 +62,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.iters = args.get_usize("iters", cfg.iters);
     cfg.burnin = args.get_usize("burnin", cfg.burnin);
     cfg.chains = args.get_usize("chains", cfg.chains);
+    cfg.threads = args.get_usize("threads", cfg.threads);
     cfg.seed = args.get_u64("seed", cfg.seed);
     if let Some(q) = args.get("q") {
         cfg.q_dark_to_bright = Some(q.parse().map_err(|_| "bad --q")?);
@@ -84,6 +85,9 @@ fn print_summary(res: &ExperimentResult) {
         println!("avg bright points (M):       {:.1}", row.avg_bright);
     }
     println!("ESS / 1000 iters (min dim):  {:.2}", row.ess_per_1000);
+    if row.split_rhat.is_finite() {
+        println!("split-R-hat (worst dim):     {:.3}", row.split_rhat);
+    }
     println!("MAP tuning lik queries:      {}", res.map_lik_queries);
     println!("wallclock per chain:         {:.2}s", row.wallclock_secs);
 }
@@ -116,6 +120,7 @@ fn main() {
                     "Algorithm",
                     "Avg lik queries/iter",
                     "ESS per 1000 iters",
+                    "split-R-hat",
                     "Speedup vs regular",
                 ],
             );
@@ -136,10 +141,16 @@ fn main() {
                     }
                     Some(reg) => format!("{:.1}", row.speedup_vs(reg)),
                 };
+                let rhat = if row.split_rhat.is_finite() {
+                    format!("{:.3}", row.split_rhat)
+                } else {
+                    "-".to_string()
+                };
                 report.row(&[
                     row.algorithm.clone(),
                     format!("{:.0}", row.avg_lik_queries_per_iter),
                     format!("{:.2}", row.ess_per_1000),
+                    rhat,
                     speedup,
                 ]);
                 print_summary(&res);

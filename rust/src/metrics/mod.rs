@@ -7,23 +7,28 @@
 //! one "bound query" per datum whose `B_n` is computed pointwise (the
 //! collapsed product is O(1) in N and is tracked separately).
 
-use std::cell::Cell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Arc;
 
-/// Shared counters (single chain = single thread, so `Cell` suffices; each
-/// chain owns its own `Counters` and the multichain runner aggregates).
+/// Shared counters. `Send + Sync`: a chain's backend may shard one batch
+/// across worker threads (`runtime::ParBackend`) and the multi-chain runner
+/// spawns replicas on a pool, so the cells are relaxed atomics — each chain
+/// still owns its own `Counters` and only totals are ever read, so relaxed
+/// ordering preserves the exact snapshot/delta semantics the per-iteration
+/// query accounting relies on (deltas are read between evaluations, never
+/// concurrently with them).
 #[derive(Clone, Debug, Default)]
 pub struct Counters {
-    inner: Rc<CounterCells>,
+    inner: Arc<CounterCells>,
 }
 
 #[derive(Debug, Default)]
 struct CounterCells {
-    lik_queries: Cell<u64>,
-    bound_queries: Cell<u64>,
-    collapsed_bound_evals: Cell<u64>,
-    xla_executions: Cell<u64>,
-    padded_lanes: Cell<u64>,
+    lik_queries: AtomicU64,
+    bound_queries: AtomicU64,
+    collapsed_bound_evals: AtomicU64,
+    xla_executions: AtomicU64,
+    padded_lanes: AtomicU64,
 }
 
 impl Counters {
@@ -33,41 +38,39 @@ impl Counters {
 
     #[inline]
     pub fn add_lik(&self, n: u64) {
-        self.inner.lik_queries.set(self.inner.lik_queries.get() + n);
+        self.inner.lik_queries.fetch_add(n, Relaxed);
     }
     #[inline]
     pub fn add_bound(&self, n: u64) {
-        self.inner.bound_queries.set(self.inner.bound_queries.get() + n);
+        self.inner.bound_queries.fetch_add(n, Relaxed);
     }
     #[inline]
     pub fn add_collapsed(&self, n: u64) {
-        self.inner
-            .collapsed_bound_evals
-            .set(self.inner.collapsed_bound_evals.get() + n);
+        self.inner.collapsed_bound_evals.fetch_add(n, Relaxed);
     }
     #[inline]
     pub fn add_xla_exec(&self, n: u64) {
-        self.inner.xla_executions.set(self.inner.xla_executions.get() + n);
+        self.inner.xla_executions.fetch_add(n, Relaxed);
     }
     #[inline]
     pub fn add_padded(&self, n: u64) {
-        self.inner.padded_lanes.set(self.inner.padded_lanes.get() + n);
+        self.inner.padded_lanes.fetch_add(n, Relaxed);
     }
 
     pub fn lik_queries(&self) -> u64 {
-        self.inner.lik_queries.get()
+        self.inner.lik_queries.load(Relaxed)
     }
     pub fn bound_queries(&self) -> u64 {
-        self.inner.bound_queries.get()
+        self.inner.bound_queries.load(Relaxed)
     }
     pub fn collapsed_bound_evals(&self) -> u64 {
-        self.inner.collapsed_bound_evals.get()
+        self.inner.collapsed_bound_evals.load(Relaxed)
     }
     pub fn xla_executions(&self) -> u64 {
-        self.inner.xla_executions.get()
+        self.inner.xla_executions.load(Relaxed)
     }
     pub fn padded_lanes(&self) -> u64 {
-        self.inner.padded_lanes.get()
+        self.inner.padded_lanes.load(Relaxed)
     }
 
     /// Snapshot for per-iteration deltas.
@@ -81,11 +84,11 @@ impl Counters {
     }
 
     pub fn reset(&self) {
-        self.inner.lik_queries.set(0);
-        self.inner.bound_queries.set(0);
-        self.inner.collapsed_bound_evals.set(0);
-        self.inner.xla_executions.set(0);
-        self.inner.padded_lanes.set(0);
+        self.inner.lik_queries.store(0, Relaxed);
+        self.inner.bound_queries.store(0, Relaxed);
+        self.inner.collapsed_bound_evals.store(0, Relaxed);
+        self.inner.xla_executions.store(0, Relaxed);
+        self.inner.padded_lanes.store(0, Relaxed);
     }
 }
 
@@ -196,6 +199,24 @@ mod tests {
         let b = a.clone();
         b.add_lik(7);
         assert_eq!(a.lik_queries(), 7);
+    }
+
+    #[test]
+    fn counters_accumulate_across_threads() {
+        let c = Counters::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let c = c.clone();
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        c.add_lik(1);
+                        c.add_bound(2);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.lik_queries(), 4000);
+        assert_eq!(c.bound_queries(), 8000);
     }
 
     #[test]

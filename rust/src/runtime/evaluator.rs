@@ -9,7 +9,8 @@
 use crate::metrics::Counters;
 
 // Note: deliberately NOT `Send` — each chain thread constructs its own
-// backend (the XLA client and the query counters are thread-local).
+// backend inside `run_chain_replicas` (the XLA client must stay on its
+// thread; the sharded ParBackend parallelizes internally instead).
 pub trait BatchEval {
     fn n(&self) -> usize;
     fn dim(&self) -> usize;

@@ -1,17 +1,22 @@
 //! Likelihood evaluation runtime: the [`evaluator::BatchEval`] interface and
-//! its two implementations — pure-Rust [`cpu_backend::CpuBackend`] and the
+//! its implementations — serial pure-Rust [`cpu_backend::CpuBackend`], the
+//! sharded data-parallel [`par_backend::ParBackend`] (bit-identical outputs
+//! and identical query counts, fanned across a rayon pool), and the
 //! PJRT-based [`xla_backend::XlaBackend`] that executes the AOT artifacts
-//! from `make artifacts`. Python never runs on the sampling path.
+//! from `make artifacts` (requires the `xla` cargo feature; the default
+//! offline build ships a stub). Python never runs on the sampling path.
 
 pub mod cpu_backend;
 pub mod evaluator;
 pub mod manifest;
+pub mod par_backend;
 pub mod xla_backend;
 pub mod xla_source;
 
 pub use cpu_backend::CpuBackend;
 pub use evaluator::BatchEval;
 pub use manifest::Manifest;
+pub use par_backend::ParBackend;
 pub use xla_backend::XlaBackend;
 pub use xla_source::XlaSource;
 
@@ -20,14 +25,20 @@ use crate::metrics::Counters;
 use std::sync::Arc;
 
 /// Build the configured backend for a model that can feed the XLA artifacts.
+/// `threads` caps the sharded backend's worker pool (0 = rayon's default);
+/// the serial and XLA backends ignore it.
 pub fn make_backend(
     source: Arc<dyn XlaSource>,
     backend: Backend,
     counters: Counters,
     artifacts_dir: &str,
+    threads: usize,
 ) -> anyhow::Result<Box<dyn BatchEval>> {
     Ok(match backend {
-        Backend::Cpu => Box::new(CpuBackend::new(source, counters)),
+        Backend::Cpu => Box::new(CpuBackend::new(source.as_model_bound(), counters)),
+        Backend::ParCpu => {
+            Box::new(ParBackend::with_threads(source.as_model_bound(), counters, threads))
+        }
         Backend::Xla => Box::new(XlaBackend::new(source, counters, artifacts_dir)?),
     })
 }

@@ -1,0 +1,331 @@
+//! Sharded data-parallel CPU likelihood backend.
+//!
+//! [`ParBackend`] serves the same [`BatchEval`] contract as the serial
+//! [`crate::runtime::CpuBackend`], but splits each index batch into
+//! fixed-size shards and fans the shards out across a rayon thread pool.
+//!
+//! Determinism contract (verified by the property tests below and by
+//! `rust/tests/integration_parallel.rs`):
+//!
+//! * `ll` / `lb` outputs are **bit-identical** to `CpuBackend` for any batch
+//!   and any thread count: every datum is evaluated by exactly the same
+//!   scalar code on one thread, and each shard writes a disjoint slice of
+//!   the output buffers, so no floating-point reduction order changes.
+//! * Gradient accumulations reduce shard-local sums **in shard order**, so
+//!   they are deterministic for a fixed shard size regardless of thread
+//!   count or scheduling (they may differ from the serial sum in the last
+//!   ulps, as any re-associated float sum does; the exactness-relevant
+//!   `ll`/`lb` path has no such freedom).
+//! * Query accounting is identical to `CpuBackend` — `idx.len()` likelihood
+//!   (+ bound) queries per call — so the paper's cost unit does not drift
+//!   when the backend goes parallel.
+
+use std::sync::Arc;
+
+use rayon::prelude::*;
+
+use super::evaluator::BatchEval;
+use crate::linalg::axpy;
+use crate::metrics::Counters;
+use crate::models::ModelBound;
+
+/// Default shard size: large enough to amortize task dispatch, small enough
+/// to load-balance bright sets of a few hundred points.
+pub const DEFAULT_SHARD: usize = 64;
+
+pub struct ParBackend {
+    pub model: Arc<dyn ModelBound>,
+    counters: Counters,
+    /// `None` = the global rayon pool.
+    pool: Option<rayon::ThreadPool>,
+    shard: usize,
+}
+
+impl ParBackend {
+    /// Shard across the global rayon pool.
+    pub fn new(model: Arc<dyn ModelBound>, counters: Counters) -> Self {
+        Self::with_threads(model, counters, 0)
+    }
+
+    /// Shard across a dedicated pool of `threads` workers (0 = global pool).
+    pub fn with_threads(model: Arc<dyn ModelBound>, counters: Counters, threads: usize) -> Self {
+        let pool = if threads == 0 {
+            None
+        } else {
+            Some(
+                rayon::ThreadPoolBuilder::new()
+                    .num_threads(threads)
+                    .build()
+                    .expect("build rayon thread pool"),
+            )
+        };
+        ParBackend { model, counters, pool, shard: DEFAULT_SHARD }
+    }
+
+    /// Override the shard size (gradient reduction order is a function of
+    /// the shard size, so fixing it fixes the output bits).
+    pub fn with_shard(mut self, shard: usize) -> Self {
+        self.shard = shard.max(1);
+        self
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    fn install<R: Send>(&self, f: impl FnOnce() -> R + Send) -> R {
+        match &self.pool {
+            Some(p) => p.install(f),
+            None => f(),
+        }
+    }
+}
+
+impl BatchEval for ParBackend {
+    fn n(&self) -> usize {
+        self.model.n()
+    }
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
+        self.counters.add_lik(idx.len() as u64);
+        self.counters.add_bound(idx.len() as u64);
+        ll.clear();
+        lb.clear();
+        ll.resize(idx.len(), 0.0);
+        lb.resize(idx.len(), 0.0);
+        let model = &self.model;
+        let shard = self.shard;
+        let (ll_s, lb_s) = (ll.as_mut_slice(), lb.as_mut_slice());
+        self.install(|| {
+            idx.par_chunks(shard)
+                .zip(ll_s.par_chunks_mut(shard).zip(lb_s.par_chunks_mut(shard)))
+                .for_each(|(ids, (lls, lbs))| {
+                    for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut()) {
+                        let (lv, bv) = model.log_both(theta, n);
+                        *l = lv;
+                        *b = bv;
+                    }
+                });
+        });
+    }
+
+    fn eval_pseudo_grad(
+        &mut self,
+        theta: &[f64],
+        idx: &[usize],
+        ll: &mut Vec<f64>,
+        lb: &mut Vec<f64>,
+        grad: &mut [f64],
+    ) {
+        self.counters.add_lik(idx.len() as u64);
+        self.counters.add_bound(idx.len() as u64);
+        ll.clear();
+        lb.clear();
+        ll.resize(idx.len(), 0.0);
+        lb.resize(idx.len(), 0.0);
+        let dim = self.model.dim();
+        let model = &self.model;
+        let shard = self.shard;
+        let (ll_s, lb_s) = (ll.as_mut_slice(), lb.as_mut_slice());
+        let shard_grads: Vec<Vec<f64>> = self.install(|| {
+            idx.par_chunks(shard)
+                .zip(ll_s.par_chunks_mut(shard).zip(lb_s.par_chunks_mut(shard)))
+                .map(|(ids, (lls, lbs))| {
+                    let mut g = vec![0.0; dim];
+                    for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut()) {
+                        let (lv, bv) = model.log_both_pseudo_grad(theta, n, &mut g);
+                        *l = lv;
+                        *b = bv;
+                    }
+                    g
+                })
+                .collect()
+        });
+        // shard-order reduction: deterministic for a fixed shard size
+        for g in &shard_grads {
+            axpy(1.0, g, grad);
+        }
+    }
+
+    fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>) {
+        self.counters.add_lik(idx.len() as u64);
+        ll.clear();
+        ll.resize(idx.len(), 0.0);
+        let model = &self.model;
+        let shard = self.shard;
+        let ll_s = ll.as_mut_slice();
+        self.install(|| {
+            idx.par_chunks(shard)
+                .zip(ll_s.par_chunks_mut(shard))
+                .for_each(|(ids, lls)| {
+                    for (&n, l) in ids.iter().zip(lls.iter_mut()) {
+                        *l = model.log_lik(theta, n);
+                    }
+                });
+        });
+    }
+
+    fn eval_lik_grad(
+        &mut self,
+        theta: &[f64],
+        idx: &[usize],
+        ll: &mut Vec<f64>,
+        grad: &mut [f64],
+    ) {
+        self.counters.add_lik(idx.len() as u64);
+        ll.clear();
+        ll.resize(idx.len(), 0.0);
+        let dim = self.model.dim();
+        let model = &self.model;
+        let shard = self.shard;
+        let ll_s = ll.as_mut_slice();
+        let shard_grads: Vec<Vec<f64>> = self.install(|| {
+            idx.par_chunks(shard)
+                .zip(ll_s.par_chunks_mut(shard))
+                .map(|(ids, lls)| {
+                    let mut g = vec![0.0; dim];
+                    for (&n, l) in ids.iter().zip(lls.iter_mut()) {
+                        *l = model.log_lik(theta, n);
+                        model.log_lik_grad_acc(theta, n, &mut g);
+                    }
+                    g
+                })
+                .collect()
+        });
+        for g in &shard_grads {
+            axpy(1.0, g, grad);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::models::{LogisticJJ, RobustT, SoftmaxBohning};
+    use crate::runtime::cpu_backend::CpuBackend;
+    use crate::testing;
+    use crate::util::Rng;
+
+    fn models(seed: u64) -> Vec<Arc<dyn ModelBound>> {
+        vec![
+            Arc::new(LogisticJJ::new(Arc::new(synth::synth_mnist(300, 7, seed)), 1.5)),
+            Arc::new(SoftmaxBohning::new(Arc::new(synth::synth_cifar3(210, 10, seed)))),
+            Arc::new(RobustT::new(Arc::new(synth::synth_opv(260, 9, seed)), 4.0, 0.7)),
+        ]
+    }
+
+    #[test]
+    fn bitwise_identical_to_cpu_backend_on_random_batches() {
+        for model in models(11) {
+            let cpu_counters = Counters::new();
+            let par_counters = Counters::new();
+            let mut cpu = CpuBackend::new(model.clone(), cpu_counters.clone());
+            let mut par =
+                ParBackend::with_threads(model.clone(), par_counters.clone(), 4).with_shard(16);
+            let dim = model.dim();
+            let n = model.n();
+            testing::check_msg(
+                "par backend == cpu backend (bitwise ll/lb, equal counters)",
+                12,
+                |r| {
+                    let theta = testing::gen::vec_normal(r, dim, 0.4);
+                    let len = r.below(200) + 1; // duplicates allowed
+                    let idx: Vec<usize> = (0..len).map(|_| r.below(n)).collect();
+                    (theta, idx)
+                },
+                |(theta, idx)| {
+                    let cpu_before = cpu_counters.snapshot();
+                    let par_before = par_counters.snapshot();
+                    let (mut cll, mut clb) = (Vec::new(), Vec::new());
+                    let (mut pll, mut plb) = (Vec::new(), Vec::new());
+                    cpu.eval(theta, idx, &mut cll, &mut clb);
+                    par.eval(theta, idx, &mut pll, &mut plb);
+                    for i in 0..idx.len() {
+                        if cll[i].to_bits() != pll[i].to_bits() {
+                            return Err(format!("ll bits differ at {i}"));
+                        }
+                        if clb[i].to_bits() != plb[i].to_bits() {
+                            return Err(format!("lb bits differ at {i}"));
+                        }
+                    }
+                    let mut cg = vec![0.0; dim];
+                    let mut pg = vec![0.0; dim];
+                    cpu.eval_pseudo_grad(theta, idx, &mut cll, &mut clb, &mut cg);
+                    par.eval_pseudo_grad(theta, idx, &mut pll, &mut plb, &mut pg);
+                    if cll.iter().zip(&pll).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                        return Err("pseudo-grad ll bits differ".into());
+                    }
+                    for j in 0..dim {
+                        if (cg[j] - pg[j]).abs() > 1e-9 * (1.0 + cg[j].abs()) {
+                            return Err(format!("grad {j}: {} vs {}", cg[j], pg[j]));
+                        }
+                    }
+                    cpu.eval_lik(theta, idx, &mut cll);
+                    par.eval_lik(theta, idx, &mut pll);
+                    if cll.iter().zip(&pll).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                        return Err("eval_lik bits differ".into());
+                    }
+                    let cpu_delta = cpu_before.delta(&cpu_counters.snapshot());
+                    let par_delta = par_before.delta(&par_counters.snapshot());
+                    if cpu_delta != par_delta {
+                        return Err(format!("counters {cpu_delta:?} vs {par_delta:?}"));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_deterministic_across_thread_counts() {
+        let model: Arc<dyn ModelBound> =
+            Arc::new(LogisticJJ::new(Arc::new(synth::synth_mnist(400, 9, 3)), 1.5));
+        let mut one = ParBackend::with_threads(model.clone(), Counters::new(), 1).with_shard(32);
+        let mut four = ParBackend::with_threads(model.clone(), Counters::new(), 4).with_shard(32);
+        let mut rng = Rng::new(5);
+        let dim = model.dim();
+        let theta: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.3).collect();
+        let idx: Vec<usize> = (0..333).map(|_| rng.below(model.n())).collect();
+        let (mut ll1, mut lb1) = (Vec::new(), Vec::new());
+        let (mut ll4, mut lb4) = (Vec::new(), Vec::new());
+        let mut g1 = vec![0.0; dim];
+        let mut g4 = vec![0.0; dim];
+        one.eval_pseudo_grad(&theta, &idx, &mut ll1, &mut lb1, &mut g1);
+        four.eval_pseudo_grad(&theta, &idx, &mut ll4, &mut lb4, &mut g4);
+        // identical shard size => identical reduction order => identical bits
+        for (a, b) in g1.iter().zip(&g4) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut gl1 = vec![0.0; dim];
+        let mut gl4 = vec![0.0; dim];
+        one.eval_lik_grad(&theta, &idx, &mut ll1, &mut gl1);
+        four.eval_lik_grad(&theta, &idx, &mut ll4, &mut gl4);
+        for (a, b) in gl1.iter().zip(&gl4) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_batches() {
+        let model: Arc<dyn ModelBound> =
+            Arc::new(LogisticJJ::new(Arc::new(synth::synth_mnist(50, 4, 7)), 1.5));
+        let counters = Counters::new();
+        let mut par = ParBackend::new(model.clone(), counters.clone());
+        let theta = vec![0.1; model.dim()];
+        let (mut ll, mut lb) = (Vec::new(), Vec::new());
+        par.eval(&theta, &[], &mut ll, &mut lb);
+        assert!(ll.is_empty() && lb.is_empty());
+        assert_eq!(counters.lik_queries(), 0);
+        par.eval(&theta, &[3], &mut ll, &mut lb);
+        assert_eq!(ll.len(), 1);
+        assert_eq!(counters.lik_queries(), 1);
+        assert!(ll[0].is_finite() && lb[0] <= ll[0]);
+    }
+}

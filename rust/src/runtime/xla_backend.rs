@@ -1,229 +1,330 @@
 //! XLA/PJRT likelihood backend: loads the AOT HLO-text artifacts produced by
 //! `python -m compile.aot`, compiles them on the PJRT CPU client once per
-//! batch bucket, and serves [`BatchEval`] by padding each index chunk to the
-//! smallest bucket that fits (largest bucket used for full-data chunking).
+//! batch bucket, and serves [`BatchEval`](super::evaluator::BatchEval) by
+//! padding each index chunk to the smallest bucket that fits (largest bucket
+//! used for full-data chunking).
 //!
 //! Python never runs here — the artifacts are self-contained HLO.
+//!
+//! The PJRT bindings (`xla` crate) are not part of the offline build, so the
+//! real implementation is gated behind the `xla` cargo feature. The default
+//! build compiles a stub whose constructor performs the same manifest/shape
+//! validation and then fails with a clear error, keeping every caller (CLI,
+//! benches, integration tests) compiling and their artifact-skip logic
+//! working unchanged.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+#[cfg(feature = "xla")]
+pub use enabled::XlaBackend;
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(not(feature = "xla"))]
+pub use disabled::XlaBackend;
 
-use super::evaluator::BatchEval;
-use super::manifest::Manifest;
-use super::xla_source::{BatchBufs, XlaSource};
-use crate::metrics::Counters;
+#[cfg(feature = "xla")]
+mod enabled {
+    use std::collections::HashMap;
+    use std::sync::Arc;
 
-pub struct XlaBackend {
-    source: Arc<dyn XlaSource>,
-    counters: Counters,
-    client: xla::PjRtClient,
-    /// bucket size -> compiled executable (lazy)
-    executables: HashMap<usize, xla::PjRtLoadedExecutable>,
-    /// bucket size -> artifact path (from the manifest)
-    bucket_paths: Vec<(usize, String)>,
-    bufs: BatchBufs,
-    theta_dims: Vec<i64>,
-}
+    use anyhow::{anyhow, Context, Result};
 
-impl XlaBackend {
-    pub fn new(
+    use crate::metrics::Counters;
+    use crate::runtime::evaluator::BatchEval;
+    use crate::runtime::manifest::Manifest;
+    use crate::runtime::xla_source::{BatchBufs, XlaSource};
+
+    pub struct XlaBackend {
         source: Arc<dyn XlaSource>,
         counters: Counters,
-        artifacts_dir: &str,
-    ) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
-        let (kind, d, k) = source.artifact_key();
-        let entries = manifest.buckets_for(kind, d, k);
-        if entries.is_empty() {
-            return Err(anyhow!(
-                "no artifact for kind={} d={d} k={k} in {artifacts_dir} — \
-                 add the shape to python/compile/aot.py and re-run `make artifacts`",
-                kind.as_str()
-            ));
-        }
-        let bucket_paths: Vec<(usize, String)> = entries
-            .iter()
-            .map(|e| (e.bucket, manifest.full_path(e)))
-            .collect();
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let theta_dims = if k > 1 {
-            vec![k as i64, d as i64]
-        } else {
-            vec![d as i64]
-        };
-        Ok(XlaBackend {
-            source,
-            counters,
-            client,
-            executables: HashMap::new(),
-            bucket_paths,
-            bufs: BatchBufs::default(),
-            theta_dims,
-        })
+        client: xla::PjRtClient,
+        /// bucket size -> compiled executable (lazy)
+        executables: HashMap<usize, xla::PjRtLoadedExecutable>,
+        /// bucket size -> artifact path (from the manifest)
+        bucket_paths: Vec<(usize, String)>,
+        bufs: BatchBufs,
+        theta_dims: Vec<i64>,
     }
 
-    pub fn available_buckets(&self) -> Vec<usize> {
-        self.bucket_paths.iter().map(|(b, _)| *b).collect()
-    }
-
-    fn max_bucket(&self) -> usize {
-        self.bucket_paths.last().map(|(b, _)| *b).unwrap()
-    }
-
-    /// Smallest bucket >= len (or the largest available).
-    fn pick_bucket(&self, len: usize) -> usize {
-        for (b, _) in &self.bucket_paths {
-            if *b >= len {
-                return *b;
+    impl XlaBackend {
+        pub fn new(
+            source: Arc<dyn XlaSource>,
+            counters: Counters,
+            artifacts_dir: &str,
+        ) -> Result<Self> {
+            let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+            let (kind, d, k) = source.artifact_key();
+            let entries = manifest.buckets_for(kind, d, k);
+            if entries.is_empty() {
+                return Err(anyhow!(
+                    "no artifact for kind={} d={d} k={k} in {artifacts_dir} — \
+                     add the shape to python/compile/aot.py and re-run `make artifacts`",
+                    kind.as_str()
+                ));
             }
-        }
-        self.max_bucket()
-    }
-
-    fn executable(&mut self, bucket: usize) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.executables.contains_key(&bucket) {
-            let path = &self
-                .bucket_paths
+            let bucket_paths: Vec<(usize, String)> = entries
                 .iter()
-                .find(|(b, _)| *b == bucket)
-                .ok_or_else(|| anyhow!("no artifact for bucket {bucket}"))?
-                .1;
-            let proto = xla::HloModuleProto::from_text_file(path)
-                .with_context(|| format!("parse {path}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).with_context(|| format!("compile {path}"))?;
-            self.executables.insert(bucket, exe);
+                .map(|e| (e.bucket, manifest.full_path(e)))
+                .collect();
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let theta_dims = if k > 1 {
+                vec![k as i64, d as i64]
+            } else {
+                vec![d as i64]
+            };
+            Ok(XlaBackend {
+                source,
+                counters,
+                client,
+                executables: HashMap::new(),
+                bucket_paths,
+                bufs: BatchBufs::default(),
+                theta_dims,
+            })
         }
-        Ok(self.executables.get(&bucket).unwrap())
-    }
 
-    /// Execute one padded chunk; returns (ll[bucket], lb[bucket],
-    /// grad_pseudo[dim], grad_lik[dim]).
-    fn run_chunk(
-        &mut self,
-        theta: &[f64],
-        idx: &[usize],
-    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> {
-        let bucket = self.pick_bucket(idx.len());
-        let (_, d, _) = self.source.artifact_key();
-        let aux_w = self.source.aux_width();
-        let mut bufs = std::mem::take(&mut self.bufs);
-        self.source.fill_inputs(idx, bucket, &mut bufs);
-        self.counters.add_padded((bucket - idx.len()) as u64);
-
-        let theta_lit = xla::Literal::vec1(theta).reshape(&self.theta_dims)?;
-        let x_lit = xla::Literal::vec1(&bufs.x).reshape(&[bucket as i64, d as i64])?;
-        let (aux1_lit, aux2_lit) = if aux_w > 1 {
-            (
-                xla::Literal::vec1(&bufs.aux1).reshape(&[bucket as i64, aux_w as i64])?,
-                xla::Literal::vec1(&bufs.aux2).reshape(&[bucket as i64, aux_w as i64])?,
-            )
-        } else {
-            (
-                xla::Literal::vec1(&bufs.aux1),
-                xla::Literal::vec1(&bufs.aux2),
-            )
-        };
-        let mask_lit = xla::Literal::vec1(&bufs.mask);
-        self.bufs = bufs;
-
-        let exe = self.executable(bucket)?;
-        let result = exe
-            .execute::<xla::Literal>(&[theta_lit, x_lit, aux1_lit, aux2_lit, mask_lit])?[0][0]
-            .to_literal_sync()?;
-        self.counters.add_xla_exec(1);
-        let (ll, lb, gp, gl) = result.to_tuple4()?;
-        Ok((
-            ll.to_vec::<f64>()?,
-            lb.to_vec::<f64>()?,
-            gp.to_vec::<f64>()?,
-            gl.to_vec::<f64>()?,
-        ))
-    }
-
-    fn eval_impl(
-        &mut self,
-        theta: &[f64],
-        idx: &[usize],
-        ll: &mut Vec<f64>,
-        lb: Option<&mut Vec<f64>>,
-        grad_pseudo: Option<&mut [f64]>,
-        grad_lik: Option<&mut [f64]>,
-    ) {
-        self.counters.add_lik(idx.len() as u64);
-        let shift = self.source.output_shift();
-        ll.clear();
-        ll.reserve(idx.len());
-        let mut lb = lb;
-        if let Some(lb) = lb.as_deref_mut() {
-            self.counters.add_bound(idx.len() as u64);
-            lb.clear();
-            lb.reserve(idx.len());
+        pub fn available_buckets(&self) -> Vec<usize> {
+            self.bucket_paths.iter().map(|(b, _)| *b).collect()
         }
-        let mut grad_pseudo = grad_pseudo;
-        let mut grad_lik = grad_lik;
-        let max_bucket = self.max_bucket();
-        for chunk in idx.chunks(max_bucket.max(1)) {
-            let (cll, clb, cgp, cgl) = self
-                .run_chunk(theta, chunk)
-                .expect("XLA execution failed");
-            ll.extend(cll[..chunk.len()].iter().map(|v| v - shift));
+
+        fn max_bucket(&self) -> usize {
+            self.bucket_paths.last().map(|(b, _)| *b).unwrap()
+        }
+
+        /// Smallest bucket >= len (or the largest available).
+        fn pick_bucket(&self, len: usize) -> usize {
+            for (b, _) in &self.bucket_paths {
+                if *b >= len {
+                    return *b;
+                }
+            }
+            self.max_bucket()
+        }
+
+        fn executable(&mut self, bucket: usize) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.executables.contains_key(&bucket) {
+                let path = &self
+                    .bucket_paths
+                    .iter()
+                    .find(|(b, _)| *b == bucket)
+                    .ok_or_else(|| anyhow!("no artifact for bucket {bucket}"))?
+                    .1;
+                let proto = xla::HloModuleProto::from_text_file(path)
+                    .with_context(|| format!("parse {path}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {path}"))?;
+                self.executables.insert(bucket, exe);
+            }
+            Ok(self.executables.get(&bucket).unwrap())
+        }
+
+        /// Execute one padded chunk; returns (ll[bucket], lb[bucket],
+        /// grad_pseudo[dim], grad_lik[dim]).
+        fn run_chunk(
+            &mut self,
+            theta: &[f64],
+            idx: &[usize],
+        ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> {
+            let bucket = self.pick_bucket(idx.len());
+            let (_, d, _) = self.source.artifact_key();
+            let aux_w = self.source.aux_width();
+            let mut bufs = std::mem::take(&mut self.bufs);
+            self.source.fill_inputs(idx, bucket, &mut bufs);
+            self.counters.add_padded((bucket - idx.len()) as u64);
+
+            let theta_lit = xla::Literal::vec1(theta).reshape(&self.theta_dims)?;
+            let x_lit = xla::Literal::vec1(&bufs.x).reshape(&[bucket as i64, d as i64])?;
+            let (aux1_lit, aux2_lit) = if aux_w > 1 {
+                (
+                    xla::Literal::vec1(&bufs.aux1).reshape(&[bucket as i64, aux_w as i64])?,
+                    xla::Literal::vec1(&bufs.aux2).reshape(&[bucket as i64, aux_w as i64])?,
+                )
+            } else {
+                (
+                    xla::Literal::vec1(&bufs.aux1),
+                    xla::Literal::vec1(&bufs.aux2),
+                )
+            };
+            let mask_lit = xla::Literal::vec1(&bufs.mask);
+            self.bufs = bufs;
+
+            let exe = self.executable(bucket)?;
+            let result = exe
+                .execute::<xla::Literal>(&[theta_lit, x_lit, aux1_lit, aux2_lit, mask_lit])?[0][0]
+                .to_literal_sync()?;
+            self.counters.add_xla_exec(1);
+            let (ll, lb, gp, gl) = result.to_tuple4()?;
+            Ok((
+                ll.to_vec::<f64>()?,
+                lb.to_vec::<f64>()?,
+                gp.to_vec::<f64>()?,
+                gl.to_vec::<f64>()?,
+            ))
+        }
+
+        fn eval_impl(
+            &mut self,
+            theta: &[f64],
+            idx: &[usize],
+            ll: &mut Vec<f64>,
+            lb: Option<&mut Vec<f64>>,
+            grad_pseudo: Option<&mut [f64]>,
+            grad_lik: Option<&mut [f64]>,
+        ) {
+            self.counters.add_lik(idx.len() as u64);
+            let shift = self.source.output_shift();
+            ll.clear();
+            ll.reserve(idx.len());
+            let mut lb = lb;
             if let Some(lb) = lb.as_deref_mut() {
-                lb.extend(clb[..chunk.len()].iter().map(|v| v - shift));
+                self.counters.add_bound(idx.len() as u64);
+                lb.clear();
+                lb.reserve(idx.len());
             }
-            if let Some(g) = grad_pseudo.as_deref_mut() {
-                for (gi, &c) in g.iter_mut().zip(&cgp) {
-                    *gi += c;
+            let mut grad_pseudo = grad_pseudo;
+            let mut grad_lik = grad_lik;
+            let max_bucket = self.max_bucket();
+            for chunk in idx.chunks(max_bucket.max(1)) {
+                let (cll, clb, cgp, cgl) = self
+                    .run_chunk(theta, chunk)
+                    .expect("XLA execution failed");
+                ll.extend(cll[..chunk.len()].iter().map(|v| v - shift));
+                if let Some(lb) = lb.as_deref_mut() {
+                    lb.extend(clb[..chunk.len()].iter().map(|v| v - shift));
+                }
+                if let Some(g) = grad_pseudo.as_deref_mut() {
+                    for (gi, &c) in g.iter_mut().zip(&cgp) {
+                        *gi += c;
+                    }
+                }
+                if let Some(g) = grad_lik.as_deref_mut() {
+                    for (gi, &c) in g.iter_mut().zip(&cgl) {
+                        *gi += c;
+                    }
                 }
             }
-            if let Some(g) = grad_lik.as_deref_mut() {
-                for (gi, &c) in g.iter_mut().zip(&cgl) {
-                    *gi += c;
-                }
-            }
+        }
+    }
+
+    impl BatchEval for XlaBackend {
+        fn n(&self) -> usize {
+            self.source.n()
+        }
+        fn dim(&self) -> usize {
+            self.source.dim()
+        }
+        fn counters(&self) -> &Counters {
+            &self.counters
+        }
+
+        fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
+            self.eval_impl(theta, idx, ll, Some(lb), None, None);
+        }
+
+        fn eval_pseudo_grad(
+            &mut self,
+            theta: &[f64],
+            idx: &[usize],
+            ll: &mut Vec<f64>,
+            lb: &mut Vec<f64>,
+            grad: &mut [f64],
+        ) {
+            self.eval_impl(theta, idx, ll, Some(lb), Some(grad), None);
+        }
+
+        fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>) {
+            self.eval_impl(theta, idx, ll, None, None, None);
+        }
+
+        fn eval_lik_grad(
+            &mut self,
+            theta: &[f64],
+            idx: &[usize],
+            ll: &mut Vec<f64>,
+            grad: &mut [f64],
+        ) {
+            self.eval_impl(theta, idx, ll, None, None, Some(grad));
         }
     }
 }
 
-impl BatchEval for XlaBackend {
-    fn n(&self) -> usize {
-        self.source.n()
-    }
-    fn dim(&self) -> usize {
-        self.source.dim()
-    }
-    fn counters(&self) -> &Counters {
-        &self.counters
+#[cfg(not(feature = "xla"))]
+mod disabled {
+    use std::sync::Arc;
+
+    use anyhow::{anyhow, Result};
+
+    use crate::metrics::Counters;
+    use crate::runtime::evaluator::BatchEval;
+    use crate::runtime::xla_source::XlaSource;
+
+    /// Stub compiled when the `xla` feature is off (the default offline
+    /// build). `new` refuses to construct with the decisive error up front
+    /// (no point validating artifacts a build without PJRT bindings could
+    /// never execute); the type itself is uninhabited, so the `BatchEval`
+    /// methods are unreachable.
+    pub struct XlaBackend {
+        _unconstructable: std::convert::Infallible,
     }
 
-    fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
-        self.eval_impl(theta, idx, ll, Some(lb), None, None);
+    impl XlaBackend {
+        pub fn new(
+            _source: Arc<dyn XlaSource>,
+            _counters: Counters,
+            _artifacts_dir: &str,
+        ) -> Result<Self> {
+            Err(anyhow!(
+                "XLA backend disabled: this build has no PJRT bindings (rebuild with \
+                 `--features xla` after vendoring the `xla` bindings crate — see \
+                 Cargo.toml [features]); use `--backend cpu` or `--backend parcpu` instead"
+            ))
+        }
+
+        pub fn available_buckets(&self) -> Vec<usize> {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
     }
 
-    fn eval_pseudo_grad(
-        &mut self,
-        theta: &[f64],
-        idx: &[usize],
-        ll: &mut Vec<f64>,
-        lb: &mut Vec<f64>,
-        grad: &mut [f64],
-    ) {
-        self.eval_impl(theta, idx, ll, Some(lb), Some(grad), None);
-    }
-
-    fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>) {
-        self.eval_impl(theta, idx, ll, None, None, None);
-    }
-
-    fn eval_lik_grad(
-        &mut self,
-        theta: &[f64],
-        idx: &[usize],
-        ll: &mut Vec<f64>,
-        grad: &mut [f64],
-    ) {
-        self.eval_impl(theta, idx, ll, None, None, Some(grad));
+    impl BatchEval for XlaBackend {
+        fn n(&self) -> usize {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+        fn dim(&self) -> usize {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+        fn counters(&self) -> &Counters {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+        fn eval(
+            &mut self,
+            _theta: &[f64],
+            _idx: &[usize],
+            _ll: &mut Vec<f64>,
+            _lb: &mut Vec<f64>,
+        ) {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+        fn eval_pseudo_grad(
+            &mut self,
+            _theta: &[f64],
+            _idx: &[usize],
+            _ll: &mut Vec<f64>,
+            _lb: &mut Vec<f64>,
+            _grad: &mut [f64],
+        ) {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+        fn eval_lik(&mut self, _theta: &[f64], _idx: &[usize], _ll: &mut Vec<f64>) {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+        fn eval_lik_grad(
+            &mut self,
+            _theta: &[f64],
+            _idx: &[usize],
+            _ll: &mut Vec<f64>,
+            _grad: &mut [f64],
+        ) {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
     }
 }

@@ -7,6 +7,8 @@
 //! -log σ — gradients come out exact, see python/tests/test_kernels.py
 //! `test_t_sigma_rescale_identity`).
 
+use std::sync::Arc;
+
 use crate::models::{LogisticJJ, ModelBound, ModelKind, RobustT, SoftmaxBohning};
 
 /// Input buffers for one padded chunk, in artifact argument order after
@@ -22,6 +24,13 @@ pub struct BatchBufs {
 pub trait XlaSource: ModelBound {
     /// (kind, d, k) used to look up artifacts in the manifest.
     fn artifact_key(&self) -> (ModelKind, usize, usize);
+
+    /// Upcast to the plain model interface. Implemented as `self` by every
+    /// concrete model (where the unsize coercion is always available);
+    /// callers holding an `Arc<dyn XlaSource>` go through this instead of a
+    /// dyn-to-dyn upcast so the crate does not depend on trait-upcasting
+    /// toolchain support.
+    fn as_model_bound(self: Arc<Self>) -> Arc<dyn ModelBound>;
 
     /// Fill `bufs` for `idx`, padded to `bucket` rows (mask 0 on padding).
     fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs);
@@ -54,6 +63,10 @@ impl XlaSource for LogisticJJ {
         (ModelKind::Logistic, self.data.d(), 1)
     }
 
+    fn as_model_bound(self: Arc<Self>) -> Arc<dyn ModelBound> {
+        self
+    }
+
     fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs) {
         let d = self.data.d();
         pad_common(bufs, d, 1, bucket);
@@ -75,6 +88,10 @@ impl XlaSource for LogisticJJ {
 impl XlaSource for SoftmaxBohning {
     fn artifact_key(&self) -> (ModelKind, usize, usize) {
         (ModelKind::Softmax, self.data.d(), self.data.k)
+    }
+
+    fn as_model_bound(self: Arc<Self>) -> Arc<dyn ModelBound> {
+        self
     }
 
     fn aux_width(&self) -> usize {
@@ -107,6 +124,10 @@ impl XlaSource for SoftmaxBohning {
 impl XlaSource for RobustT {
     fn artifact_key(&self) -> (ModelKind, usize, usize) {
         (ModelKind::Robust, self.data.d(), 1)
+    }
+
+    fn as_model_bound(self: Arc<Self>) -> Arc<dyn ModelBound> {
+        self
     }
 
     fn output_shift(&self) -> f64 {

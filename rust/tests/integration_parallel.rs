@@ -1,0 +1,83 @@
+//! End-to-end parallel engine integration: the sharded `parcpu` backend must
+//! be bit-identical to the serial `cpu` backend through the full chain loop
+//! (θ-steps, z-resampling, query accounting), and the multi-chain replica
+//! runner must be reproducible at any thread cap while reporting the
+//! cross-chain diagnostics a single chain cannot produce.
+
+use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use firefly::engine::{multi_chain, run_experiment};
+
+fn cfg(chains: usize, backend: Backend, threads: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::MapTunedFlyMc,
+        backend,
+        n_data: Some(400),
+        iters: 60,
+        burnin: 20,
+        map_steps: 60,
+        chains,
+        threads,
+        record_every: 0,
+        seed: 3,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn sharded_backend_bit_identical_through_full_chains() {
+    let serial = run_experiment(&cfg(2, Backend::Cpu, 0)).unwrap();
+    let sharded = run_experiment(&cfg(2, Backend::ParCpu, 0)).unwrap();
+    assert_eq!(serial.chains.len(), sharded.chains.len());
+    for (a, b) in serial.chains.iter().zip(&sharded.chains) {
+        // exact equality: ll/lb are bitwise identical between backends, so
+        // every accept/reject and z-flip decision is identical too
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.logpost_joint, b.logpost_joint);
+        assert_eq!(a.bright, b.bright);
+        assert_eq!(a.accepted, b.accepted);
+        // the paper's cost unit must not drift when the backend goes parallel
+        assert_eq!(a.queries_per_iter, b.queries_per_iter);
+        assert_eq!(a.final_counters, b.final_counters);
+    }
+}
+
+#[test]
+fn replica_runner_reproducible_across_thread_caps() {
+    let one = run_experiment(&cfg(4, Backend::Cpu, 1)).unwrap();
+    let four = run_experiment(&cfg(4, Backend::Cpu, 4)).unwrap();
+    for (a, b) in one.chains.iter().zip(&four.chains) {
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.logpost_joint, b.logpost_joint);
+        assert_eq!(a.bright, b.bright);
+        assert_eq!(a.queries_per_iter, b.queries_per_iter);
+    }
+}
+
+#[test]
+fn multi_chain_reports_diagnostics_with_flymc_cost() {
+    let (result, summary) = multi_chain::run_multi_chain(&cfg(4, Backend::ParCpu, 0)).unwrap();
+    assert_eq!(summary.replicas, 4);
+    assert!(summary.split_rhat_max.is_finite(), "split-R̂ {}", summary.split_rhat_max);
+    assert!(summary.split_rhat_logpost.is_finite());
+    assert!(summary.pooled_ess > 0.0);
+    // FlyMC's queries/iter stay far below N = 400 under the parallel engine
+    assert!(
+        summary.avg_queries_per_iter < 200.0,
+        "queries/iter {}",
+        summary.avg_queries_per_iter
+    );
+    let row = result.table_row();
+    assert!(row.split_rhat.is_finite());
+    assert!((row.split_rhat - summary.split_rhat_max).abs() < 1e-12);
+}
+
+#[test]
+fn regular_mcmc_full_cost_preserved_on_sharded_backend() {
+    let mut c = cfg(1, Backend::ParCpu, 2);
+    c.algorithm = Algorithm::RegularMcmc;
+    let res = run_experiment(&c).unwrap();
+    let q = res.table_row().avg_lik_queries_per_iter;
+    // regular MCMC queries all N likelihoods once per MH iteration
+    assert!((q - 400.0).abs() < 1e-9, "regular queries/iter {q}");
+}
