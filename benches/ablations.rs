@@ -127,7 +127,7 @@ fn main() {
             &["batch", "bucket used", "padded lanes", "execs", "time/call (us)"],
         );
         for &bs in &[10usize, 200, 256, 1000, 2048, 5000, 20000] {
-            let idx: Vec<usize> = (0..bs).collect();
+            let idx: Vec<u32> = (0..bs as u32).collect();
             let (mut ll, mut lb) = (Vec::new(), Vec::new());
             counters.reset();
             let reps = 20;

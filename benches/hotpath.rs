@@ -1,0 +1,193 @@
+//! FlyMC hot-path macro-benchmark: the first perf trajectory point.
+//!
+//! Runs regular MCMC, untuned FlyMC, and MAP-tuned FlyMC on the logistic
+//! task over the serial CPU backend with a hand-rolled chain loop, and
+//! reports — per steady-state iteration, measured *after* warm-up —
+//!
+//! * wallclock seconds,
+//! * likelihood queries (the paper's cost unit),
+//! * heap allocations (via a counting global allocator; the FlyMC hot path
+//!   must report 0 — the invariant `rust/tests/integration_hotpath.rs`
+//!   enforces),
+//!
+//! and emits `BENCH_hotpath.json` so future PRs have a trajectory to beat.
+//!
+//!     cargo bench --bench hotpath [-- --n 5000 --iters 2000 --warmup 500]
+//!     cargo bench --bench hotpath -- --smoke     # CI smoke mode
+//!
+//! Record before/after numbers in DESIGN.md §Perf when touching the hot path.
+
+use std::sync::Arc;
+
+use firefly::bench_harness::{fmt_time, Report};
+use firefly::cli::Args;
+use firefly::engine::experiment::build_model;
+use firefly::flymc::{FullPosterior, PseudoPosterior};
+use firefly::metrics::Counters;
+use firefly::models::ModelBound;
+use firefly::prelude::*;
+use firefly::runtime::{CpuBackend, XlaSource};
+use firefly::util::alloc_count::CountingAlloc;
+use firefly::util::Timer;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+struct AlgoStats {
+    label: &'static str,
+    wallclock_per_iter: f64,
+    queries_per_iter: f64,
+    allocs_per_iter: f64,
+    avg_bright: f64,
+}
+
+/// Advance the chain `k` iterations: θ-step, then (FlyMC only) a z-sweep.
+/// Hand-rolled rather than `run_chain` so the measured window contains
+/// exactly the sampling transitions, with no trace recording.
+#[allow(clippy::too_many_arguments)]
+fn run_iters(
+    k: usize,
+    q_db: f64,
+    mh: &mut RandomWalkMh,
+    pseudo: &mut Option<PseudoPosterior>,
+    full: &mut Option<FullPosterior>,
+    theta: &mut Vec<f64>,
+    rng: &mut Rng,
+    bright_sum: &mut usize,
+) {
+    for _ in 0..k {
+        if let Some(pp) = pseudo.as_mut() {
+            mh.step(pp, theta, rng);
+            pp.implicit_resample(q_db, rng);
+            *bright_sum += pp.n_bright();
+        } else if let Some(fp) = full.as_mut() {
+            mh.step(fp, theta, rng);
+        }
+    }
+}
+
+fn run_algo(
+    algorithm: Algorithm,
+    n: usize,
+    warmup: usize,
+    iters: usize,
+    seed: u64,
+) -> AlgoStats {
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm,
+        n_data: Some(n),
+        record_every: 0,
+        seed,
+        ..Default::default()
+    };
+    let (source, prior, _map, _tuning_queries) = build_model(&cfg);
+    let model: Arc<dyn ModelBound> = source.as_model_bound();
+    let counters = Counters::new();
+    let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+    let mut rng = Rng::new(seed ^ 0x1217);
+    let theta0 = prior.sample(model.dim(), &mut rng);
+    let q_db = cfg.effective_q_db();
+    let flymc = algorithm != Algorithm::RegularMcmc;
+
+    let mut theta = theta0.clone();
+    let mut mh = RandomWalkMh::adaptive(0.05);
+    let mut pseudo: Option<PseudoPosterior> = None;
+    let mut full: Option<FullPosterior> = None;
+    if flymc {
+        let mut pp = PseudoPosterior::new(model, prior, eval, theta0);
+        pp.init_z(&mut rng);
+        pseudo = Some(pp);
+    } else {
+        full = Some(FullPosterior::new(model, prior, eval, theta0));
+    }
+
+    let mut bright_sum: usize = 0;
+    run_iters(warmup, q_db, &mut mh, &mut pseudo, &mut full, &mut theta, &mut rng, &mut bright_sum);
+    mh.freeze_adaptation();
+    bright_sum = 0;
+
+    let allocs_before = ALLOC.allocations();
+    let queries_before = counters.lik_queries();
+    let timer = Timer::start();
+    run_iters(iters, q_db, &mut mh, &mut pseudo, &mut full, &mut theta, &mut rng, &mut bright_sum);
+    let secs = timer.elapsed_secs();
+    let queries = counters.lik_queries() - queries_before;
+    let allocs = ALLOC.allocations() - allocs_before;
+
+    AlgoStats {
+        label: algorithm.label(),
+        wallclock_per_iter: secs / iters as f64,
+        queries_per_iter: queries as f64 / iters as f64,
+        allocs_per_iter: allocs as f64 / iters as f64,
+        avg_bright: if flymc { bright_sum as f64 / iters as f64 } else { f64::NAN },
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let n = args.get_usize("n", if smoke { 400 } else { 5000 });
+    let iters = args.get_usize("iters", if smoke { 150 } else { 2000 });
+    let warmup = args.get_usize("warmup", if smoke { 50 } else { 500 });
+    let seed = args.get_u64("seed", 0);
+
+    println!(
+        "hotpath bench: logistic N={n}, {warmup} warmup + {iters} measured iterations{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let mut report = Report::new(
+        &format!("FlyMC hot path (logistic, N={n})"),
+        &["algorithm", "wallclock/iter", "queries/iter", "allocs/iter", "avg bright"],
+    );
+    let mut results = Vec::new();
+    for algorithm in [
+        Algorithm::RegularMcmc,
+        Algorithm::UntunedFlyMc,
+        Algorithm::MapTunedFlyMc,
+    ] {
+        let r = run_algo(algorithm, n, warmup, iters, seed);
+        report.row(&[
+            r.label.to_string(),
+            fmt_time(r.wallclock_per_iter),
+            format!("{:.1}", r.queries_per_iter),
+            format!("{:.2}", r.allocs_per_iter),
+            if r.avg_bright.is_nan() { "-".into() } else { format!("{:.1}", r.avg_bright) },
+        ]);
+        results.push(r);
+    }
+    report.print();
+
+    // JSON trajectory point (no serde in the offline build: hand-formatted).
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"hotpath\",\n  \"task\": \"logistic\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n},\n  \"warmup_iters\": {warmup},\n  \"measured_iters\": {iters},\n  \"smoke\": {smoke},\n"
+    ));
+    json.push_str("  \"algorithms\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"algorithm\": \"{}\", \"wallclock_per_iter_secs\": {:e}, \
+             \"queries_per_iter\": {:.3}, \"allocs_per_iter\": {:.3}, \"avg_bright\": {}}}{}\n",
+            r.label,
+            r.wallclock_per_iter,
+            r.queries_per_iter,
+            r.allocs_per_iter,
+            if r.avg_bright.is_nan() { "null".to_string() } else { format!("{:.2}", r.avg_bright) },
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json");
+
+    let fly_allocs: f64 = results[1].allocs_per_iter + results[2].allocs_per_iter;
+    if fly_allocs > 0.0 {
+        println!(
+            "WARNING: FlyMC hot path allocated ({fly_allocs:.2} allocs/iter) — \
+             the zero-alloc invariant regressed (see DESIGN.md §Perf)"
+        );
+    }
+}

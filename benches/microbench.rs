@@ -23,7 +23,7 @@ fn main() {
     let logi: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
     let mut cpu = CpuBackend::new(logi.clone(), Counters::new());
     let theta: Vec<f64> = (0..logi.dim()).map(|_| rng.normal() * 0.3).collect();
-    let idx: Vec<usize> = (0..256).collect();
+    let idx: Vec<u32> = (0..256).collect();
     let (mut ll, mut lb) = (Vec::new(), Vec::new());
     Bench::new("cpu eval 256x logistic d51 (ll+lb)")
         .samples(30)
@@ -116,7 +116,7 @@ fn main() {
         let model = Arc::new(LogisticJJ::new(data, 1.5));
         let mut xla = XlaBackend::new(model.clone(), Counters::new(), "artifacts").unwrap();
         for bs in [256usize, 2048] {
-            let idx: Vec<usize> = (0..bs).collect();
+            let idx: Vec<u32> = (0..bs as u32).collect();
             let name = format!("xla exec logistic d51 bucket {bs}");
             let (mut ll2, mut lb2) = (Vec::new(), Vec::new());
             Bench::new(&name).samples(20).iters_per_sample(10).run(|| {

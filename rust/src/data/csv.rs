@@ -12,6 +12,10 @@ use crate::linalg::Matrix;
 
 fn parse_rows(text: &str) -> Result<Vec<Vec<f64>>, String> {
     let mut rows = Vec::new();
+    // The header is the first *non-empty, non-comment* line, wherever it
+    // sits — keying on the raw line number rejected files whose header
+    // follows a `#` comment or blank line.
+    let mut header_candidate = true;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -20,6 +24,8 @@ fn parse_rows(text: &str) -> Result<Vec<Vec<f64>>, String> {
         // skip a header line of non-numeric tokens
         let cells: Result<Vec<f64>, _> =
             line.split(',').map(|c| c.trim().parse::<f64>()).collect();
+        let is_header_slot = header_candidate;
+        header_candidate = false;
         match cells {
             Ok(v) => {
                 if let Some(first) = rows.first() {
@@ -34,7 +40,7 @@ fn parse_rows(text: &str) -> Result<Vec<Vec<f64>>, String> {
                 }
                 rows.push(v);
             }
-            Err(_) if lineno == 0 => continue, // header
+            Err(_) if is_header_slot => continue, // header
             Err(e) => return Err(format!("line {}: {}", lineno + 1, e)),
         }
     }
@@ -112,6 +118,22 @@ mod tests {
         assert_eq!(d.d(), 3);
         assert_eq!(d.t, vec![1.0, -1.0]);
         assert_eq!(d.x[(0, 2)], 1.0);
+    }
+
+    #[test]
+    fn header_after_comment_and_blank_lines() {
+        // Regression: the header used to be tolerated only at raw line 0,
+        // so a leading comment or blank line failed the whole load.
+        let text = "# exported by tool\n\nf1,f2,label\n0.5,1.0,1\n-0.5,2.0,0\n";
+        let d = load_logistic(text, true).unwrap();
+        assert_eq!(d.n(), 2);
+        assert_eq!(d.t, vec![1.0, -1.0]);
+        // a second non-numeric line is NOT a header — it is an error
+        let bad = "# c\nf1,f2,label\noops,1.0,1\n";
+        assert!(load_logistic(bad, true).is_err());
+        // comment-interleaved data still loads without a header
+        let plain = "# c\n1.0,2.0,1\n# mid\n3.0,4.0,0\n";
+        assert_eq!(load_logistic(plain, false).unwrap().n(), 2);
     }
 
     #[test]

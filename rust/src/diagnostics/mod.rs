@@ -1,8 +1,81 @@
 //! MCMC output analysis: autocovariance, effective sample size (Geyer's
 //! initial monotone positive sequence — the estimator family R-CODA's
-//! `effectiveSize` uses, which the paper reports), and split-R̂.
+//! `effectiveSize` uses, which the paper reports), split-R̂, and the flat
+//! [`TraceMatrix`] θ-trace storage the chain driver records into.
 
 use crate::util::math::{mean, variance};
+
+/// Flat row-major θ-trace: `n_rows × dim` samples in one contiguous
+/// allocation. Replaces the old `Vec<Vec<f64>>` trace (one boxed row per
+/// recorded iteration): the chain driver reserves the whole trace once and
+/// `push_row` is a plain `memcpy` into the tail — no per-iteration
+/// allocation — while the diagnostics read columns through [`Self::column_iter`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceMatrix {
+    dim: usize,
+    data: Vec<f64>,
+}
+
+impl TraceMatrix {
+    /// Empty trace over `dim`-vectors.
+    pub fn new(dim: usize) -> Self {
+        TraceMatrix { dim, data: Vec::new() }
+    }
+
+    /// Empty trace with room for `rows` samples (no reallocation until then).
+    pub fn with_capacity(dim: usize, rows: usize) -> Self {
+        TraceMatrix { dim, data: Vec::with_capacity(dim * rows) }
+    }
+
+    /// Append one θ sample. The first row fixes `dim` when the trace was
+    /// default-constructed.
+    pub fn push_row(&mut self, row: &[f64]) {
+        if self.dim == 0 && self.data.is_empty() {
+            self.dim = row.len();
+        }
+        assert_eq!(row.len(), self.dim, "trace row length mismatch");
+        self.data.extend_from_slice(row);
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_rows(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.data.len() / self.dim
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// The i-th recorded sample.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Iterate over samples (rows).
+    pub fn rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.data.chunks_exact(self.dim.max(1))
+    }
+
+    /// Strided view of component `j` across all samples.
+    pub fn column_iter(&self, j: usize) -> impl Iterator<Item = f64> + '_ {
+        assert!(j < self.dim);
+        self.data.iter().skip(j).step_by(self.dim).copied()
+    }
+
+    /// Copy component `j` into `out` (cleared first) — the contiguous buffer
+    /// the scalar ESS/R̂ estimators need.
+    pub fn column_into(&self, j: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.column_iter(j));
+    }
+}
 
 /// Autocovariance at lags 0..maxlag (biased, 1/T normalization, standard for
 /// ESS estimation).
@@ -77,20 +150,27 @@ pub fn ess_per_1000(x: &[f64]) -> f64 {
 }
 
 /// Minimum component-wise ESS of a θ-trace (rows = iterations).
-pub fn ess_min_components(trace: &[Vec<f64>]) -> f64 {
+pub fn ess_min_components(trace: &TraceMatrix) -> f64 {
     if trace.is_empty() {
         return 0.0;
     }
-    let d = trace[0].len();
     let mut min_ess = f64::INFINITY;
-    let mut comp = vec![0.0; trace.len()];
-    for j in 0..d {
-        for (i, row) in trace.iter().enumerate() {
-            comp[i] = row[j];
-        }
+    let mut comp = Vec::with_capacity(trace.n_rows());
+    for j in 0..trace.dim() {
+        trace.column_into(j, &mut comp);
         min_ess = min_ess.min(ess_geyer(&comp));
     }
     min_ess
+}
+
+/// Minimum component-wise ESS per 1000 recorded iterations — the θ-trace
+/// analogue of [`ess_per_1000`], and the single source of truth for the
+/// Table-1 ESS column (`engine::experiment::TableRow` routes through this).
+pub fn ess_per_1000_min_components(trace: &TraceMatrix) -> f64 {
+    if trace.is_empty() {
+        return 0.0;
+    }
+    ess_min_components(trace) * 1000.0 / trace.n_rows() as f64
 }
 
 /// Split-R̂ (Gelman–Rubin with halved chains) over one scalar per chain.
@@ -122,16 +202,16 @@ pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
 /// `traces[r]` is replica r's post-burnin θ trace (rows = iterations).
 /// Returns NaN with fewer than 2 chains, traces too short to halve, or no
 /// component with positive within-chain variance.
-pub fn split_rhat_max_components(traces: &[&[Vec<f64>]]) -> f64 {
-    if traces.len() < 2 || traces.iter().any(|t| t.len() < 4) {
+pub fn split_rhat_max_components(traces: &[&TraceMatrix]) -> f64 {
+    if traces.len() < 2 || traces.iter().any(|t| t.n_rows() < 4) {
         return f64::NAN;
     }
-    let d = traces[0][0].len();
+    let d = traces[0].dim();
     let mut worst = f64::NEG_INFINITY;
     for j in 0..d {
         let comp: Vec<Vec<f64>> = traces
             .iter()
-            .map(|t| t.iter().map(|row| row[j]).collect())
+            .map(|t| t.column_iter(j).collect())
             .collect();
         let r = split_rhat(&comp);
         if r.is_finite() {
@@ -148,7 +228,7 @@ pub fn split_rhat_max_components(traces: &[&[Vec<f64>]]) -> f64 {
 /// Pooled effective sample size across independent replicas: the per-chain
 /// minimum-component ESS summed over chains (independent chains contribute
 /// additive information).
-pub fn pooled_ess_min_components(traces: &[&[Vec<f64>]]) -> f64 {
+pub fn pooled_ess_min_components(traces: &[&TraceMatrix]) -> f64 {
     traces.iter().map(|t| ess_min_components(t)).sum()
 }
 
@@ -249,13 +329,61 @@ mod tests {
         assert!(r > 3.0, "rhat {r}");
     }
 
+    fn trace_from_rows(rows: &[Vec<f64>]) -> TraceMatrix {
+        let mut t = TraceMatrix::new(rows.first().map_or(0, |r| r.len()));
+        for r in rows {
+            t.push_row(r);
+        }
+        t
+    }
+
+    #[test]
+    fn trace_matrix_rows_and_columns() {
+        let mut t = TraceMatrix::with_capacity(3, 2);
+        t.push_row(&[1.0, 2.0, 3.0]);
+        t.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(t.dim(), 3);
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(t.column_iter(1).collect::<Vec<f64>>(), vec![2.0, 5.0]);
+        let mut col = Vec::new();
+        t.column_into(2, &mut col);
+        assert_eq!(col, vec![3.0, 6.0]);
+        let rows: Vec<&[f64]> = t.rows().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], &[1.0, 2.0, 3.0]);
+        // default-constructed trace learns dim from the first row
+        let mut d = TraceMatrix::default();
+        assert!(d.is_empty());
+        assert_eq!(d.n_rows(), 0);
+        d.push_row(&[7.0, 8.0]);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.n_rows(), 1);
+    }
+
+    #[test]
+    fn ess_per_1000_min_components_matches_inline_formula() {
+        // Pins agreement between the shared helper and the computation
+        // TableRow used to inline (ess_min_components * 1000 / rows).
+        let mut rng = Rng::new(8);
+        let rows: Vec<Vec<f64>> = (0..2000).map(|_| vec![rng.normal(), rng.normal()]).collect();
+        let t = trace_from_rows(&rows);
+        let inline = ess_min_components(&t) * 1000.0 / t.n_rows() as f64;
+        let helper = ess_per_1000_min_components(&t);
+        assert!((inline - helper).abs() < 1e-12, "{inline} vs {helper}");
+        // empty-trace guard: 0, not NaN
+        assert_eq!(ess_per_1000_min_components(&TraceMatrix::default()), 0.0);
+        assert_eq!(ess_min_components(&TraceMatrix::new(3)), 0.0);
+    }
+
     #[test]
     fn rhat_max_components_and_pooled_ess() {
         let mut rng = Rng::new(7);
         let well_mixed: Vec<Vec<Vec<f64>>> = (0..4)
             .map(|_| (0..3000).map(|_| vec![rng.normal(), rng.normal()]).collect())
             .collect();
-        let refs: Vec<&[Vec<f64>]> = well_mixed.iter().map(|t| t.as_slice()).collect();
+        let mats: Vec<TraceMatrix> = well_mixed.iter().map(|t| trace_from_rows(t)).collect();
+        let refs: Vec<&TraceMatrix> = mats.iter().collect();
         let r = split_rhat_max_components(&refs);
         assert!((r - 1.0).abs() < 0.05, "rhat {r}");
         let pooled = pooled_ess_min_components(&refs);
@@ -268,12 +396,13 @@ mod tests {
         for row in shifted[0].iter_mut() {
             row[1] += 8.0;
         }
-        let refs: Vec<&[Vec<f64>]> = shifted.iter().map(|t| t.as_slice()).collect();
+        let mats: Vec<TraceMatrix> = shifted.iter().map(|t| trace_from_rows(t)).collect();
+        let refs: Vec<&TraceMatrix> = mats.iter().collect();
         assert!(split_rhat_max_components(&refs) > 2.0);
 
         // degenerate inputs
         assert!(split_rhat_max_components(&refs[..1]).is_nan());
-        let tiny: Vec<Vec<f64>> = vec![vec![1.0]; 3];
+        let tiny = trace_from_rows(&vec![vec![1.0]; 3]);
         assert!(split_rhat_max_components(&[&tiny, &tiny]).is_nan());
     }
 

@@ -2,6 +2,7 @@
 //! alternate a θ-update (any sampler) with a z-update (FlyMC only), recording
 //! the traces the paper's figures and tables need.
 
+use crate::diagnostics::TraceMatrix;
 use crate::flymc::{FullPosterior, PseudoPosterior, ZStats};
 use crate::metrics::CounterSnapshot;
 use crate::samplers::{Sampler, Target};
@@ -108,8 +109,8 @@ pub fn derive_replica_seed(base: u64, replica: usize) -> u64 {
 
 #[derive(Clone, Debug, Default)]
 pub struct ChainResult {
-    /// post-burnin θ samples (thinned)
-    pub theta_trace: Vec<Vec<f64>>,
+    /// post-burnin θ samples (thinned), flat row-major
+    pub theta_trace: TraceMatrix,
     /// joint (pseudo-)posterior log density at every iteration
     pub logpost_joint: Vec<f64>,
     /// (iter, full-data log posterior) instrumentation points
@@ -158,8 +159,17 @@ pub fn run_chain(
     let counters = target.counters();
     let timer = Timer::start();
     let mut out = ChainResult { seed: cfg.seed, ..Default::default() };
+    // Reserve every per-iteration series up front: recording must not
+    // allocate inside the sampling loop (the zero-alloc hot-path invariant,
+    // see DESIGN.md §Perf).
     out.logpost_joint.reserve(cfg.iters);
     out.queries_per_iter.reserve(cfg.iters);
+    out.bright.reserve(cfg.iters);
+    if cfg.record_full_every > 0 {
+        out.full_logpost.reserve(cfg.iters / cfg.record_full_every + 1);
+    }
+    let trace_rows = cfg.iters.saturating_sub(cfg.burnin) / cfg.thin.max(1) + 1;
+    out.theta_trace = TraceMatrix::with_capacity(theta.len(), trace_rows);
 
     // Make sure the target state is committed at theta.
     target.as_target().commit(&theta);
@@ -186,7 +196,7 @@ pub fn run_chain(
             out.full_logpost.push((it, target.true_log_posterior(&theta)));
         }
         if it >= cfg.burnin && (it - cfg.burnin) % cfg.thin.max(1) == 0 {
-            out.theta_trace.push(theta.clone());
+            out.theta_trace.push_row(&theta);
         }
     }
     out.wallclock_secs = timer.elapsed_secs();
@@ -282,7 +292,7 @@ mod tests {
         assert_eq!(res.logpost_joint.len(), 100);
         assert_eq!(res.bright.len(), 100);
         assert_eq!(res.queries_per_iter.len(), 100);
-        assert_eq!(res.theta_trace.len(), 80);
+        assert_eq!(res.theta_trace.n_rows(), 80);
         assert_eq!(res.full_logpost.len(), 10);
         assert!(res.logpost_joint.iter().all(|l| l.is_finite()));
         // FlyMC must query far fewer than N per iteration once burned in

@@ -182,16 +182,15 @@ impl ExperimentResult {
         let ess: Vec<f64> = self
             .chains
             .iter()
-            .map(|c| diagnostics::ess_min_components(&c.theta_trace) * 1000.0
-                / c.theta_trace.len().max(1) as f64)
+            .map(|c| diagnostics::ess_per_1000_min_components(&c.theta_trace))
             .collect();
         let bright: Vec<f64> = self
             .chains
             .iter()
             .map(|c| c.avg_bright_post_burnin(burnin))
             .collect();
-        let traces: Vec<&[Vec<f64>]> =
-            self.chains.iter().map(|c| c.theta_trace.as_slice()).collect();
+        let traces: Vec<&diagnostics::TraceMatrix> =
+            self.chains.iter().map(|c| &c.theta_trace).collect();
         TableRow {
             algorithm: self.config.algorithm.label().to_string(),
             avg_lik_queries_per_iter: crate::util::math::mean(&queries),
@@ -315,6 +314,21 @@ mod tests {
                 assert!(res.chains[0].logpost_joint.iter().all(|l| l.is_finite()));
             }
         }
+    }
+
+    #[test]
+    fn table_row_ess_routes_through_shared_helper() {
+        // TableRow's ESS column must be exactly the shared diagnostics
+        // helper (it used to reimplement the formula inline with a
+        // different empty-trace guard).
+        let res = run_experiment(&tiny_cfg(Task::LogisticMnist, Algorithm::UntunedFlyMc)).unwrap();
+        let row = res.table_row();
+        let expect = diagnostics::ess_per_1000_min_components(&res.chains[0].theta_trace);
+        assert!(
+            (row.ess_per_1000 - expect).abs() < 1e-12,
+            "{} vs {expect}",
+            row.ess_per_1000
+        );
     }
 
     #[test]

@@ -64,7 +64,8 @@ pub fn run_replica_chains(
 /// per-iteration series (`logpost_joint`, `queries_per_iter`); the θ traces
 /// are already post-burnin.
 pub fn summarize_chains(chains: &[ChainResult], burnin: usize) -> MultiChainSummary {
-    let traces: Vec<&[Vec<f64>]> = chains.iter().map(|c| c.theta_trace.as_slice()).collect();
+    let traces: Vec<&diagnostics::TraceMatrix> =
+        chains.iter().map(|c| &c.theta_trace).collect();
     let logpost: Vec<Vec<f64>> = chains
         .iter()
         .map(|c| c.logpost_joint[burnin.min(c.logpost_joint.len())..].to_vec())

@@ -11,13 +11,34 @@
 //! what makes `q_{b→d} = 1` free: bright points' pseudo-likelihoods at the
 //! committed θ are always in `ll`/`lb`.
 //!
+//! ## Zero-allocation hot path
+//!
+//! Steady-state iterations with a gradient-free θ-sampler (random-walk MH)
+//! perform no heap allocation (the gradient path still allocates inside
+//! the models' `grad_log_bound_product_acc` — see DESIGN.md §Perf):
+//!
+//! * the bright index set reaches the backend as
+//!   [`BrightSet::bright_slice`] — the `u32` prefix of the set's own
+//!   permutation array, never a widened copy;
+//! * every buffer the θ-eval and z-resampling paths write (`memo_*`,
+//!   `scratch_*`) is owned by the posterior and reserved to its worst-case
+//!   size (N elements) at construction, so `clear`/`extend` never reallocate;
+//! * the base density (prior + collapsed bound product) is one pass over a
+//!   cached [`PackedQuadForm`] whenever the model exposes its collapse as a
+//!   quadratic and the prior is an isotropic Gaussian (logistic/robust +
+//!   IsoGaussian); otherwise it falls back to the two-call form.
+//!
+//! The invariant is enforced by a counting-allocator test in
+//! `rust/tests/integration_hotpath.rs` and tracked by `benches/hotpath.rs`.
+//!
 //! [`FullPosterior`] is the regular-MCMC baseline: log p(θ) + Σ_n log L_n
 //! evaluated over all N data at every query.
 
 use std::sync::Arc;
 
 use super::bright_set::BrightSet;
-use crate::models::{log_pseudo_lik, ModelBound, Prior};
+use crate::linalg::PackedQuadForm;
+use crate::models::{log_pseudo_lik, p_bright, ModelBound, Prior};
 use crate::runtime::evaluator::BatchEval;
 use crate::samplers::target::Target;
 
@@ -40,6 +61,9 @@ pub struct PseudoPosterior {
     lb: Vec<f64>,
     pseudo_sum: f64,
     base: f64, // prior + collapsed bound product at committed theta
+    /// fused prior + collapsed-bound quadratic, cached at construction
+    /// (sufficient statistics cannot change behind the `Arc`)
+    base_quad: Option<PackedQuadForm>,
     // memo of the last off-state evaluation (same bright set)
     memo_theta: Vec<f64>,
     memo_ll: Vec<f64>,
@@ -47,7 +71,9 @@ pub struct PseudoPosterior {
     memo_pseudo_sum: f64,
     memo_base: f64,
     memo_valid: bool,
-    scratch_idx: Vec<usize>,
+    // reusable scratch arena for the z-resampling sweeps (reserved to N)
+    scratch_idx: Vec<u32>,
+    scratch_bright: Vec<u32>,
     scratch_ll: Vec<f64>,
     scratch_lb: Vec<f64>,
     version: u64,
@@ -63,8 +89,19 @@ impl PseudoPosterior {
         theta0: Vec<f64>,
     ) -> Self {
         let n = model.n();
-        assert_eq!(theta0.len(), model.dim());
-        let base = prior.log_density(&theta0) + model.log_bound_product(&theta0);
+        let dim = model.dim();
+        assert_eq!(theta0.len(), dim);
+        let base_quad = model.collapsed_quadratic().and_then(|(a, b, c)| {
+            prior.iso_quadratic(dim).map(|(pa, pc)| {
+                let mut q = PackedQuadForm::from_symmetric(a, b, c + pc);
+                q.add_diag(pa);
+                q
+            })
+        });
+        let base = match &base_quad {
+            Some(q) => q.eval(&theta0),
+            None => prior.log_density(&theta0) + model.log_bound_product(&theta0),
+        };
         PseudoPosterior {
             model,
             prior,
@@ -75,15 +112,17 @@ impl PseudoPosterior {
             lb: vec![0.0; n],
             pseudo_sum: 0.0,
             base,
-            memo_theta: Vec::new(),
-            memo_ll: Vec::new(),
-            memo_lb: Vec::new(),
+            base_quad,
+            memo_theta: Vec::with_capacity(dim),
+            memo_ll: Vec::with_capacity(n),
+            memo_lb: Vec::with_capacity(n),
             memo_pseudo_sum: 0.0,
             memo_base: 0.0,
             memo_valid: false,
-            scratch_idx: Vec::new(),
-            scratch_ll: Vec::new(),
-            scratch_lb: Vec::new(),
+            scratch_idx: Vec::with_capacity(n),
+            scratch_bright: Vec::with_capacity(n),
+            scratch_ll: Vec::with_capacity(n),
+            scratch_lb: Vec::with_capacity(n),
             version: 0,
         }
     }
@@ -101,56 +140,57 @@ impl PseudoPosterior {
     pub fn init_z(&mut self, rng: &mut crate::util::Rng) {
         let n = self.model.n();
         self.scratch_idx.clear();
-        self.scratch_idx.extend(0..n);
-        let idx = std::mem::take(&mut self.scratch_idx);
-        let mut tll = std::mem::take(&mut self.scratch_ll);
-        let mut tlb = std::mem::take(&mut self.scratch_lb);
-        self.eval.eval(&self.theta, &idx, &mut tll, &mut tlb);
+        self.scratch_idx.extend(0..n as u32);
+        self.eval.eval(
+            &self.theta,
+            &self.scratch_idx,
+            &mut self.scratch_ll,
+            &mut self.scratch_lb,
+        );
         self.pseudo_sum = 0.0;
         for i in 0..n {
-            // p(z=1 | theta) = (L - B)/L = 1 - e^{lb - ll}
-            let p_bright = 1.0 - (tlb[i] - tll[i]).exp();
-            if rng.bernoulli(p_bright) {
+            // p(z=1 | theta) = (L - B)/L = -expm1(lb - ll)
+            if rng.bernoulli(p_bright(self.scratch_ll[i], self.scratch_lb[i])) {
                 self.bright.brighten(i);
-                self.ll[i] = tll[i];
-                self.lb[i] = tlb[i];
-                self.pseudo_sum += log_pseudo_lik(tll[i], tlb[i]);
+                self.ll[i] = self.scratch_ll[i];
+                self.lb[i] = self.scratch_lb[i];
+                self.pseudo_sum += log_pseudo_lik(self.scratch_ll[i], self.scratch_lb[i]);
             } else {
                 self.bright.darken(i);
             }
         }
-        self.scratch_idx = idx;
-        self.scratch_ll = tll;
-        self.scratch_lb = tlb;
         self.memo_valid = false;
         self.version += 1;
     }
 
-    fn bright_indices(&self) -> Vec<usize> {
-        self.bright.bright_slice().iter().map(|&i| i as usize).collect()
-    }
-
+    /// Prior + collapsed-bound log density at `theta` — a single pass over
+    /// the cached packed quadratic when available.
     fn base_at(&self, theta: &[f64]) -> f64 {
         self.eval.counters().add_collapsed(1);
-        self.prior.log_density(theta) + self.model.log_bound_product(theta)
+        match &self.base_quad {
+            Some(q) => q.eval(theta),
+            None => self.prior.log_density(theta) + self.model.log_bound_product(theta),
+        }
     }
 
-    /// Evaluate at `theta` and memoize. Costs n_bright likelihood queries.
+    /// Evaluate at `theta` and memoize. Costs n_bright likelihood queries;
+    /// the bright index set is the `BrightSet`'s own u32 prefix (no copy).
     fn eval_and_memo(&mut self, theta: &[f64]) -> f64 {
-        let idx = self.bright_indices();
-        let mut tll = std::mem::take(&mut self.memo_ll);
-        let mut tlb = std::mem::take(&mut self.memo_lb);
-        self.eval.eval(theta, &idx, &mut tll, &mut tlb);
-        let pseudo: f64 = tll
+        self.eval.eval(
+            theta,
+            self.bright.bright_slice(),
+            &mut self.memo_ll,
+            &mut self.memo_lb,
+        );
+        let pseudo: f64 = self
+            .memo_ll
             .iter()
-            .zip(&tlb)
+            .zip(&self.memo_lb)
             .map(|(&l, &b)| log_pseudo_lik(l, b))
             .sum();
         let base = self.base_at(theta);
         self.memo_theta.clear();
         self.memo_theta.extend_from_slice(theta);
-        self.memo_ll = tll;
-        self.memo_lb = tlb;
         self.memo_pseudo_sum = pseudo;
         self.memo_base = base;
         self.memo_valid = true;
@@ -159,11 +199,11 @@ impl PseudoPosterior {
 
     fn promote_memo(&mut self) {
         debug_assert!(self.memo_valid);
-        let idx = self.bright_indices();
-        debug_assert_eq!(idx.len(), self.memo_ll.len());
-        for (i, &n) in idx.iter().enumerate() {
-            self.ll[n] = self.memo_ll[i];
-            self.lb[n] = self.memo_lb[i];
+        let brights = self.bright.bright_slice();
+        debug_assert_eq!(brights.len(), self.memo_ll.len());
+        for (i, &n) in brights.iter().enumerate() {
+            self.ll[n as usize] = self.memo_ll[i];
+            self.lb[n as usize] = self.memo_lb[i];
         }
         self.pseudo_sum = self.memo_pseudo_sum;
         self.base = self.memo_base;
@@ -200,13 +240,16 @@ impl PseudoPosterior {
         self.scratch_idx.clear();
         let mut pos = rng.geometric_skip(q_db);
         while pos < nd {
-            self.scratch_idx.push(self.bright.ith_dark(pos));
+            self.scratch_idx.push(self.bright.ith_dark(pos) as u32);
             pos = pos.saturating_add(1 + rng.geometric_skip(q_db));
         }
 
-        // bright -> dark: accept with min(1, q_db / L~_n)
-        let brights = self.bright_indices();
-        for n in brights {
+        // bright -> dark: accept with min(1, q_db / L~_n). The bright prefix
+        // is snapshotted into the scratch arena because darken() permutes it.
+        self.scratch_bright.clear();
+        self.scratch_bright.extend_from_slice(self.bright.bright_slice());
+        for &n in &self.scratch_bright {
+            let n = n as usize;
             stats.proposals += 1;
             let lt = log_pseudo_lik(self.ll[n], self.lb[n]);
             if rng.f64_open().ln() < ln_q - lt {
@@ -218,24 +261,24 @@ impl PseudoPosterior {
 
         // dark -> bright over the pre-phase snapshot (all still dark: the
         // phase above only darkens): accept with min(1, L~_n / q_db).
-        let idx = std::mem::take(&mut self.scratch_idx);
-        let mut tll = std::mem::take(&mut self.scratch_ll);
-        let mut tlb = std::mem::take(&mut self.scratch_lb);
-        self.eval.eval(&self.theta, &idx, &mut tll, &mut tlb);
-        for (i, &n) in idx.iter().enumerate() {
+        self.eval.eval(
+            &self.theta,
+            &self.scratch_idx,
+            &mut self.scratch_ll,
+            &mut self.scratch_lb,
+        );
+        for i in 0..self.scratch_idx.len() {
+            let n = self.scratch_idx[i] as usize;
             stats.proposals += 1;
-            let lt = log_pseudo_lik(tll[i], tlb[i]);
+            let lt = log_pseudo_lik(self.scratch_ll[i], self.scratch_lb[i]);
             if rng.f64_open().ln() < lt - ln_q {
                 self.bright.brighten(n);
-                self.ll[n] = tll[i];
-                self.lb[n] = tlb[i];
+                self.ll[n] = self.scratch_ll[i];
+                self.lb[n] = self.scratch_lb[i];
                 self.pseudo_sum += lt;
                 stats.brightened += 1;
             }
         }
-        self.scratch_idx = idx;
-        self.scratch_ll = tll;
-        self.scratch_lb = tlb;
         self.memo_valid = false;
         self.version += 1;
         stats
@@ -249,22 +292,25 @@ impl PseudoPosterior {
         let k = ((fraction * n as f64).ceil() as usize).min(n.max(1));
         self.scratch_idx.clear();
         for _ in 0..k {
-            self.scratch_idx.push(rng.below(n));
+            self.scratch_idx.push(rng.below(n) as u32);
         }
-        let idx = std::mem::take(&mut self.scratch_idx);
-        let mut tll = std::mem::take(&mut self.scratch_ll);
-        let mut tlb = std::mem::take(&mut self.scratch_lb);
-        self.eval.eval(&self.theta, &idx, &mut tll, &mut tlb);
+        self.eval.eval(
+            &self.theta,
+            &self.scratch_idx,
+            &mut self.scratch_ll,
+            &mut self.scratch_lb,
+        );
         let mut stats = ZStats { proposals: k, ..Default::default() };
-        for (i, &ni) in idx.iter().enumerate() {
-            let p_bright = 1.0 - (tlb[i] - tll[i]).exp();
-            let want_bright = rng.bernoulli(p_bright);
+        for i in 0..self.scratch_idx.len() {
+            let ni = self.scratch_idx[i] as usize;
+            let want_bright =
+                rng.bernoulli(p_bright(self.scratch_ll[i], self.scratch_lb[i]));
             let is_bright = self.bright.is_bright(ni);
             if want_bright && !is_bright {
                 self.bright.brighten(ni);
-                self.ll[ni] = tll[i];
-                self.lb[ni] = tlb[i];
-                self.pseudo_sum += log_pseudo_lik(tll[i], tlb[i]);
+                self.ll[ni] = self.scratch_ll[i];
+                self.lb[ni] = self.scratch_lb[i];
+                self.pseudo_sum += log_pseudo_lik(self.scratch_ll[i], self.scratch_lb[i]);
                 stats.brightened += 1;
             } else if !want_bright && is_bright {
                 self.bright.darken(ni);
@@ -272,9 +318,6 @@ impl PseudoPosterior {
                 stats.darkened += 1;
             }
         }
-        self.scratch_idx = idx;
-        self.scratch_ll = tll;
-        self.scratch_lb = tlb;
         self.memo_valid = false;
         self.version += 1;
         stats
@@ -283,13 +326,16 @@ impl PseudoPosterior {
     /// Recompute state sums from scratch (test hook: verifies the
     /// incremental bookkeeping).
     pub fn recompute_state(&mut self) -> f64 {
-        let idx = self.bright_indices();
-        let mut tll = Vec::new();
-        let mut tlb = Vec::new();
-        self.eval.eval(&self.theta, &idx, &mut tll, &mut tlb);
-        let pseudo: f64 = tll
+        self.eval.eval(
+            &self.theta,
+            self.bright.bright_slice(),
+            &mut self.scratch_ll,
+            &mut self.scratch_lb,
+        );
+        let pseudo: f64 = self
+            .scratch_ll
             .iter()
-            .zip(&tlb)
+            .zip(&self.scratch_lb)
             .map(|(&l, &b)| log_pseudo_lik(l, b))
             .sum();
         let base = self.base_at(&self.theta);
@@ -316,14 +362,17 @@ impl Target for PseudoPosterior {
 
     fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
         grad.fill(0.0);
-        let idx = self.bright_indices();
-        let mut tll = std::mem::take(&mut self.memo_ll);
-        let mut tlb = std::mem::take(&mut self.memo_lb);
-        self.eval
-            .eval_pseudo_grad(theta, &idx, &mut tll, &mut tlb, grad);
-        let pseudo: f64 = tll
+        self.eval.eval_pseudo_grad(
+            theta,
+            self.bright.bright_slice(),
+            &mut self.memo_ll,
+            &mut self.memo_lb,
+            grad,
+        );
+        let pseudo: f64 = self
+            .memo_ll
             .iter()
-            .zip(&tlb)
+            .zip(&self.memo_lb)
             .map(|(&l, &b)| log_pseudo_lik(l, b))
             .sum();
         let base = self.base_at(theta);
@@ -331,8 +380,6 @@ impl Target for PseudoPosterior {
         self.model.grad_log_bound_product_acc(theta, grad);
         self.memo_theta.clear();
         self.memo_theta.extend_from_slice(theta);
-        self.memo_ll = tll;
-        self.memo_lb = tlb;
         self.memo_pseudo_sum = pseudo;
         self.memo_base = base;
         self.memo_valid = true;
@@ -366,7 +413,7 @@ pub struct FullPosterior {
     pub model: Arc<dyn ModelBound>,
     pub prior: Arc<dyn Prior>,
     pub eval: Box<dyn BatchEval>,
-    idx_all: Vec<usize>,
+    idx_all: Vec<u32>,
     theta: Vec<f64>,
     cur_logp: f64,
     memo_theta: Vec<f64>,
@@ -383,7 +430,7 @@ impl FullPosterior {
         theta0: Vec<f64>,
     ) -> Self {
         let n = model.n();
-        let idx_all: Vec<usize> = (0..n).collect();
+        let idx_all: Vec<u32> = (0..n as u32).collect();
         let mut ll = Vec::new();
         eval.eval_lik(&theta0, &idx_all, &mut ll);
         let cur_logp = prior.log_density(&theta0) + ll.iter().sum::<f64>();
@@ -426,10 +473,8 @@ impl Target for FullPosterior {
         if self.memo_valid && theta == self.memo_theta.as_slice() {
             return self.memo_logp;
         }
-        let mut ll = std::mem::take(&mut self.scratch_ll);
-        self.eval.eval_lik(theta, &self.idx_all, &mut ll);
-        let logp = self.prior.log_density(theta) + ll.iter().sum::<f64>();
-        self.scratch_ll = ll;
+        self.eval.eval_lik(theta, &self.idx_all, &mut self.scratch_ll);
+        let logp = self.prior.log_density(theta) + self.scratch_ll.iter().sum::<f64>();
         self.memo_theta.clear();
         self.memo_theta.extend_from_slice(theta);
         self.memo_logp = logp;
@@ -439,11 +484,10 @@ impl Target for FullPosterior {
 
     fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
         grad.fill(0.0);
-        let mut ll = std::mem::take(&mut self.scratch_ll);
-        self.eval.eval_lik_grad(theta, &self.idx_all, &mut ll, grad);
-        let logp = self.prior.log_density(theta) + ll.iter().sum::<f64>();
+        self.eval
+            .eval_lik_grad(theta, &self.idx_all, &mut self.scratch_ll, grad);
+        let logp = self.prior.log_density(theta) + self.scratch_ll.iter().sum::<f64>();
         self.prior.grad_acc(theta, grad);
-        self.scratch_ll = ll;
         self.memo_theta.clear();
         self.memo_theta.extend_from_slice(theta);
         self.memo_logp = logp;
@@ -476,7 +520,7 @@ mod tests {
     use super::*;
     use crate::data::synth;
     use crate::metrics::Counters;
-    use crate::models::{IsoGaussian, LogisticJJ};
+    use crate::models::{IsoGaussian, Laplace, LogisticJJ};
     use crate::runtime::cpu_backend::CpuBackend;
     use crate::util::Rng;
 
@@ -512,6 +556,40 @@ mod tests {
     }
 
     #[test]
+    fn fused_base_matches_two_call_form() {
+        // The cached packed quadratic must agree with
+        // prior.log_density + model.log_bound_product to float tolerance,
+        // and the non-quadratic (Laplace) prior must take the fallback and
+        // agree trivially.
+        let data = Arc::new(synth::synth_mnist(200, 10, 17));
+        let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
+        let mut rng = Rng::new(3);
+        for gaussian in [true, false] {
+            let prior: Arc<dyn Prior> = if gaussian {
+                Arc::new(IsoGaussian { scale: 0.8 })
+            } else {
+                Arc::new(Laplace { b: 0.8 })
+            };
+            let counters = Counters::new();
+            let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+            let theta0: Vec<f64> = (0..model.dim()).map(|_| rng.normal() * 0.3).collect();
+            let pp = PseudoPosterior::new(model.clone(), prior.clone(), eval, theta0);
+            assert_eq!(pp.base_quad.is_some(), gaussian);
+            for _ in 0..10 {
+                let theta: Vec<f64> =
+                    (0..model.dim()).map(|_| rng.normal() * 0.5).collect();
+                let fused = pp.base_at(&theta);
+                let direct =
+                    prior.log_density(&theta) + model.log_bound_product(&theta);
+                assert!(
+                    (fused - direct).abs() < 1e-8 * (1.0 + direct.abs()),
+                    "fused {fused} vs direct {direct}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn commit_after_eval_is_query_free() {
         let (mut pp, counters) = setup(200, 2);
         let mut rng = Rng::new(7);
@@ -530,32 +608,59 @@ mod tests {
         assert!((fresh - lp).abs() < 1e-8 * (1.0 + lp.abs()));
     }
 
-    #[test]
-    fn marginal_bright_probability_matches_conditional() {
-        // After many implicit sweeps at fixed theta, the empirical bright
-        // frequency of each datum must match p(z=1|theta) = 1 - B/L.
-        let (mut pp, _) = setup(60, 3);
-        let mut rng = Rng::new(9);
+    /// Shared harness: after many implicit sweeps at fixed theta, the
+    /// empirical bright frequency of each datum must match the exact
+    /// conditional p(z=1|theta) = 1 - B/L.
+    fn check_marginal_matches_conditional(pp: &mut PseudoPosterior, seed: u64, tol: f64) {
+        let n = pp.model.n();
+        let mut rng = Rng::new(seed);
         pp.init_z(&mut rng);
         let sweeps = 4000;
-        let mut freq = vec![0usize; 60];
+        let mut freq = vec![0usize; n];
         for _ in 0..sweeps {
             pp.implicit_resample(0.3, &mut rng);
-            for n in 0..60 {
-                if pp.bright.is_bright(n) {
-                    freq[n] += 1;
+            for i in 0..n {
+                if pp.bright.is_bright(i) {
+                    freq[i] += 1;
                 }
             }
         }
         let theta = pp.theta().to_vec();
         let mut max_err: f64 = 0.0;
-        for n in 0..60 {
-            let (ll, lb) = pp.model.log_both(&theta, n);
-            let p = 1.0 - (lb - ll).exp();
-            let emp = freq[n] as f64 / sweeps as f64;
+        for i in 0..n {
+            let (ll, lb) = pp.model.log_both(&theta, i);
+            let p = p_bright(ll, lb);
+            let emp = freq[i] as f64 / sweeps as f64;
             max_err = max_err.max((emp - p).abs());
         }
-        assert!(max_err < 0.05, "max |emp - exact| = {max_err}");
+        assert!(max_err < tol, "max |emp - exact| = {max_err}");
+    }
+
+    #[test]
+    fn marginal_bright_probability_matches_conditional() {
+        let (mut pp, _) = setup(60, 3);
+        check_marginal_matches_conditional(&mut pp, 9, 0.05);
+    }
+
+    #[test]
+    fn marginal_bright_probability_matches_conditional_map_tuned() {
+        // MAP-tuned bounds are tight near the committed theta, exercising
+        // the p_bright cancellation fix and the u32/scratch resampling path
+        // in the near-zero-probability regime: the stationary distribution
+        // must still match the conditional.
+        let data = Arc::new(synth::synth_mnist(60, 8, 4));
+        let mut raw = LogisticJJ::new(data, 1.5);
+        let mut rng = Rng::new(31);
+        let theta0: Vec<f64> = (0..raw.dim()).map(|_| rng.normal() * 0.3).collect();
+        // anchor slightly off the committed point: p_bright small but nonzero
+        let anchor: Vec<f64> = theta0.iter().map(|t| t + 0.05).collect();
+        raw.tune_anchors_map(&anchor);
+        let model: Arc<dyn ModelBound> = Arc::new(raw);
+        let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 1.0 });
+        let counters = Counters::new();
+        let eval = Box::new(CpuBackend::new(model.clone(), counters));
+        let mut pp = PseudoPosterior::new(model, prior, eval, theta0);
+        check_marginal_matches_conditional(&mut pp, 33, 0.03);
     }
 
     #[test]

@@ -178,6 +178,81 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     }
 }
 
+/// Packed symmetric quadratic form `q(x) = x^T A x + b^T x + c`, evaluated
+/// in a single pass over a lower-triangular layout.
+///
+/// Row `i` stores `[A_i0 + A_0i, ..., A_i(i-1) + A_(i-1)i, A_ii]` (off-
+/// diagonal pairs pre-folded via symmetry), so
+///
+///   q(x) = c + Σ_i x_i · (dot(row_i, x[..=i]) + b_i)
+///
+/// touches each of the n(n+1)/2 packed coefficients exactly once — half the
+/// memory traffic of `Matrix::quad_form` on the dense square — and fuses the
+/// linear term and constant into the same sweep. `PseudoPosterior` caches one
+/// of these per chain for the collapsed-bound + Gaussian-prior base density,
+/// making the FlyMC base evaluation a single allocation-free pass.
+#[derive(Clone, Debug)]
+pub struct PackedQuadForm {
+    n: usize,
+    /// packed lower-triangular rows, row-major: lengths 1, 2, ..., n
+    tri: Vec<f64>,
+    /// linear coefficients b
+    lin: Vec<f64>,
+    /// constant offset c
+    c: f64,
+}
+
+impl PackedQuadForm {
+    /// Build from a dense (symmetric up to storage) matrix `a`, linear term
+    /// `b`, and constant `c`. Off-diagonal pairs are folded as `A_ij + A_ji`,
+    /// so a non-symmetric `a` still yields the correct quadratic form.
+    pub fn from_symmetric(a: &Matrix, b: &[f64], c: f64) -> Self {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        assert_eq!(b.len(), n);
+        let mut tri = Vec::with_capacity(n * (n + 1) / 2);
+        for i in 0..n {
+            for j in 0..i {
+                tri.push(a[(i, j)] + a[(j, i)]);
+            }
+            tri.push(a[(i, i)]);
+        }
+        PackedQuadForm { n, tri, lin: b.to_vec(), c }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Add `w` to every diagonal coefficient (folds an isotropic quadratic
+    /// such as a Gaussian prior's `-||x||^2 / 2s^2` into the form).
+    pub fn add_diag(&mut self, w: f64) {
+        let mut off = 0;
+        for i in 0..self.n {
+            off += i + 1;
+            self.tri[off - 1] += w;
+        }
+    }
+
+    /// Add to the constant offset.
+    pub fn add_const(&mut self, c: f64) {
+        self.c += c;
+    }
+
+    /// Evaluate `x^T A x + b^T x + c` — one pass, no allocation.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.n);
+        let mut acc = self.c;
+        let mut off = 0;
+        for i in 0..self.n {
+            let row = &self.tri[off..off + i + 1];
+            off += i + 1;
+            acc += x[i] * (dot(row, &x[..=i]) + self.lin[i]);
+        }
+        acc
+    }
+}
+
 /// Dot product. The single hottest scalar kernel in the CPU backend
 /// (every likelihood evaluation is one of these per datum); unrolled 4-wide
 /// so LLVM vectorizes it.
@@ -314,6 +389,45 @@ mod tests {
                 assert_eq!(l[(i, j)], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn packed_quad_form_matches_dense_evaluation() {
+        let mut r = Rng::new(6);
+        for n in [1usize, 2, 5, 13] {
+            // symmetric PSD-ish A from rank-1 accumulation
+            let mut a = Matrix::zeros(n, n);
+            for _ in 0..n + 2 {
+                let v: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                a.add_weighted_outer(r.normal(), &v);
+            }
+            let b: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let c = r.normal();
+            let q = PackedQuadForm::from_symmetric(&a, &b, c);
+            assert_eq!(q.dim(), n);
+            for _ in 0..10 {
+                let x: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                let dense = a.quad_form(&x) + dot(&b, &x) + c;
+                let packed = q.eval(&x);
+                assert!(
+                    (dense - packed).abs() < 1e-10 * (1.0 + dense.abs()),
+                    "n={n}: dense {dense} vs packed {packed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_quad_form_diag_and_const_folding() {
+        let a = Matrix::from_rows(vec![vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let mut q = PackedQuadForm::from_symmetric(&a, &[0.5, -1.0], 4.0);
+        q.add_diag(-0.25);
+        q.add_const(1.5);
+        let x = [1.0, 2.0];
+        // x^T A x = 2 + 2*2 + 4*3 = 18; diag adds -0.25*(1+4) = -1.25
+        // b^T x = 0.5 - 2 = -1.5; c = 5.5
+        let expect = 18.0 - 1.25 - 1.5 + 5.5;
+        assert!((q.eval(&x) - expect).abs() < 1e-12, "{}", q.eval(&x));
     }
 
     #[test]

@@ -83,6 +83,19 @@ pub trait ModelBound: Send + Sync {
     /// Re-anchor the bounds to be tight at `theta_map` (paper §4: MAP-tuned)
     /// and rebuild the sufficient statistics.
     fn tune_anchors_map(&mut self, theta_map: &[f64]);
+
+    /// The collapsed bound as an explicit quadratic form
+    /// `theta^T A theta + b^T theta + c` (A row-major dim×dim), when the
+    /// model's collapse has that shape. Lets `PseudoPosterior` cache a fused
+    /// packed lower-triangular layout for its base density
+    /// ([`crate::linalg::PackedQuadForm`]); `None` (softmax, whose collapse
+    /// factors through S and v instead) falls back to
+    /// [`Self::log_bound_product`]. The returned statistics must stay valid
+    /// until the next [`Self::tune_anchors_map`] — callers behind `Arc` can
+    /// never observe a rebuild.
+    fn collapsed_quadratic(&self) -> Option<(&crate::linalg::Matrix, &[f64], f64)> {
+        None
+    }
 }
 
 /// d/ds [log(L-B) - log B] from dlogL/ds, dlogB/ds and delta = logB - logL.
@@ -100,6 +113,19 @@ pub fn log_pseudo_lik(ll: f64, lb: f64) -> f64 {
     // log(e^ll - e^lb) - lb = ll + log1mexp(lb - ll) - lb
     let delta = (lb - ll).min(-1e-12);
     ll + crate::util::math::log1mexp(delta) - lb
+}
+
+/// Exact brightness conditional `p(z=1 | theta) = 1 - B/L` from
+/// (log L, log B), computed as `-expm1(lb - ll)`.
+///
+/// The naive `1.0 - (lb - ll).exp()` cancels catastrophically for tight
+/// (MAP-tuned) bounds: at `lb - ll = -1e-15` it returns a value with no
+/// correct digits, while `exp_m1` keeps full relative precision. Used by
+/// `init_z` and the explicit Gibbs z-resampler, which draw Bernoulli(p)
+/// directly from this conditional.
+#[inline]
+pub fn p_bright(ll: f64, lb: f64) -> f64 {
+    -(lb - ll).exp_m1()
 }
 
 #[cfg(test)]
@@ -129,5 +155,30 @@ mod tests {
         let v = log_pseudo_lik(-0.5, -0.5);
         assert!(v.is_finite());
         assert!(v < -20.0); // essentially "never bright"
+    }
+
+    #[test]
+    fn p_bright_matches_direct_formula_at_moderate_gaps() {
+        for &(ll, lb) in &[(-0.2f64, -1.4f64), (-3.0, -3.7), (-0.01, -0.02)] {
+            let direct = 1.0 - (lb - ll).exp();
+            let ours = p_bright(ll, lb);
+            assert!((direct - ours).abs() < 1e-14, "{direct} vs {ours}");
+        }
+    }
+
+    #[test]
+    fn p_bright_keeps_precision_for_tight_bounds() {
+        // For delta = lb - ll -> 0-, p = 1 - e^delta = -delta + O(delta^2).
+        // The naive form loses all significant digits below ~1e-16; exp_m1
+        // keeps full relative precision.
+        for &delta in &[-1e-10f64, -1e-13, -1e-15] {
+            let (ll, lb) = (-0.5, -0.5 + delta);
+            let p = p_bright(ll, lb);
+            assert!(p > 0.0, "delta={delta}: p={p}");
+            let rel = (p - (-delta)).abs() / (-delta);
+            assert!(rel < 1e-9, "delta={delta}: p={p}, rel err {rel}");
+        }
+        // exactly tight bound: p must be exactly 0, never negative
+        assert_eq!(p_bright(-0.5, -0.5), 0.0);
     }
 }

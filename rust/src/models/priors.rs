@@ -8,6 +8,15 @@ pub trait Prior: Send + Sync {
     fn grad_acc(&self, theta: &[f64], grad: &mut [f64]);
     /// Draw from the prior (chain initialization, as in the paper).
     fn sample(&self, dim: usize, rng: &mut Rng) -> Vec<f64>;
+
+    /// `(a, c)` such that `log_density(theta) == a * ||theta||^2 + c` for
+    /// every `dim`-vector, when the prior is an isotropic quadratic
+    /// (Gaussian). Lets `PseudoPosterior` fold the prior into its cached
+    /// collapsed-bound quadratic and evaluate the whole base density in one
+    /// pass. Non-quadratic priors (Laplace) return `None`.
+    fn iso_quadratic(&self, _dim: usize) -> Option<(f64, f64)> {
+        None
+    }
 }
 
 /// Isotropic Gaussian N(0, scale^2 I). Used for the MNIST and CIFAR weights.
@@ -33,6 +42,15 @@ impl Prior for IsoGaussian {
 
     fn sample(&self, dim: usize, rng: &mut Rng) -> Vec<f64> {
         (0..dim).map(|_| rng.normal() * self.scale).collect()
+    }
+
+    fn iso_quadratic(&self, dim: usize) -> Option<(f64, f64)> {
+        let s2 = self.scale * self.scale;
+        let d = dim as f64;
+        Some((
+            -0.5 / s2,
+            -0.5 * d * (2.0 * std::f64::consts::PI * s2).ln(),
+        ))
     }
 }
 
@@ -106,6 +124,16 @@ mod tests {
         for (a, b) in g.iter().zip(&fd) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn iso_quadratic_reproduces_log_density() {
+        let p = IsoGaussian { scale: 1.7 };
+        let theta = [0.3, -1.7, 2.2, 0.0];
+        let (a, c) = p.iso_quadratic(theta.len()).unwrap();
+        let ss: f64 = theta.iter().map(|t| t * t).sum();
+        assert!((a * ss + c - p.log_density(&theta)).abs() < 1e-12);
+        assert!(Laplace { b: 1.0 }.iso_quadratic(4).is_none());
     }
 
     #[test]

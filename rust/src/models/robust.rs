@@ -166,6 +166,10 @@ impl ModelBound for RobustT {
         }
         self.rebuild_stats();
     }
+
+    fn collapsed_quadratic(&self) -> Option<(&Matrix, &[f64], f64)> {
+        Some((&self.a_mat, &self.b_vec, self.c_sum))
+    }
 }
 
 #[cfg(test)]

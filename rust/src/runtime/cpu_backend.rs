@@ -32,7 +32,7 @@ impl BatchEval for CpuBackend {
         &self.counters
     }
 
-    fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
+    fn eval(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
         self.counters.add_lik(idx.len() as u64);
         self.counters.add_bound(idx.len() as u64);
         ll.clear();
@@ -40,7 +40,7 @@ impl BatchEval for CpuBackend {
         ll.reserve(idx.len());
         lb.reserve(idx.len());
         for &n in idx {
-            let (l, b) = self.model.log_both(theta, n);
+            let (l, b) = self.model.log_both(theta, n as usize);
             ll.push(l);
             lb.push(b);
         }
@@ -49,7 +49,7 @@ impl BatchEval for CpuBackend {
     fn eval_pseudo_grad(
         &mut self,
         theta: &[f64],
-        idx: &[usize],
+        idx: &[u32],
         ll: &mut Vec<f64>,
         lb: &mut Vec<f64>,
         grad: &mut [f64],
@@ -61,31 +61,31 @@ impl BatchEval for CpuBackend {
         ll.reserve(idx.len());
         lb.reserve(idx.len());
         for &n in idx {
-            let (l, b) = self.model.log_both_pseudo_grad(theta, n, grad);
+            let (l, b) = self.model.log_both_pseudo_grad(theta, n as usize, grad);
             ll.push(l);
             lb.push(b);
         }
     }
 
-    fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>) {
+    fn eval_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
         self.counters.add_lik(idx.len() as u64);
         ll.clear();
         ll.reserve(idx.len());
         for &n in idx {
-            ll.push(self.model.log_lik(theta, n));
+            ll.push(self.model.log_lik(theta, n as usize));
         }
     }
 
     fn eval_lik_grad(
         &mut self,
         theta: &[f64],
-        idx: &[usize],
+        idx: &[u32],
         ll: &mut Vec<f64>,
         grad: &mut [f64],
     ) {
         self.eval_lik(theta, idx, ll);
         for &n in idx {
-            self.model.log_lik_grad_acc(theta, n, grad);
+            self.model.log_lik_grad_acc(theta, n as usize, grad);
         }
     }
 }

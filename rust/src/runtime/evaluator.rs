@@ -5,6 +5,13 @@
 //! gradients. The CPU backend computes directly; the XLA backend pads the
 //! index set to a bucket and executes the AOT-compiled artifact. Query
 //! counting happens here so both backends account identically.
+//!
+//! Index sets are `&[u32]` — the same element type `BrightSet` stores — so
+//! the FlyMC hot path hands `BrightSet::bright_slice()` straight to the
+//! backend without materializing a widened copy (datasets are bounded to
+//! `u32::MAX` points at `BrightSet` construction). Steady-state sampling
+//! performs no heap allocation anywhere on this interface: callers own
+//! reusable output buffers and backends only `clear`/`reserve` them.
 
 use crate::metrics::Counters;
 
@@ -19,26 +26,26 @@ pub trait BatchEval {
     /// Per-point (log L_n, log B_n) for `idx` at `theta`. Outputs are
     /// cleared and resized to `idx.len()`. Counts `idx.len()` likelihood +
     /// bound queries.
-    fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>);
+    fn eval(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>, lb: &mut Vec<f64>);
 
     /// [`BatchEval::eval`] plus `grad += sum_n d[log(L_n - B_n) - log B_n]`.
     fn eval_pseudo_grad(
         &mut self,
         theta: &[f64],
-        idx: &[usize],
+        idx: &[u32],
         ll: &mut Vec<f64>,
         lb: &mut Vec<f64>,
         grad: &mut [f64],
     );
 
     /// Per-point log L_n only (regular MCMC; still counts queries).
-    fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>);
+    fn eval_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>);
 
     /// [`BatchEval::eval_lik`] plus `grad += sum_n d log L_n`.
     fn eval_lik_grad(
         &mut self,
         theta: &[f64],
-        idx: &[usize],
+        idx: &[u32],
         ll: &mut Vec<f64>,
         grad: &mut [f64],
     );

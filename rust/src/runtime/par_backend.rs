@@ -92,7 +92,7 @@ impl BatchEval for ParBackend {
         &self.counters
     }
 
-    fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
+    fn eval(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
         self.counters.add_lik(idx.len() as u64);
         self.counters.add_bound(idx.len() as u64);
         ll.clear();
@@ -107,7 +107,7 @@ impl BatchEval for ParBackend {
                 .zip(ll_s.par_chunks_mut(shard).zip(lb_s.par_chunks_mut(shard)))
                 .for_each(|(ids, (lls, lbs))| {
                     for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut()) {
-                        let (lv, bv) = model.log_both(theta, n);
+                        let (lv, bv) = model.log_both(theta, n as usize);
                         *l = lv;
                         *b = bv;
                     }
@@ -118,7 +118,7 @@ impl BatchEval for ParBackend {
     fn eval_pseudo_grad(
         &mut self,
         theta: &[f64],
-        idx: &[usize],
+        idx: &[u32],
         ll: &mut Vec<f64>,
         lb: &mut Vec<f64>,
         grad: &mut [f64],
@@ -139,7 +139,7 @@ impl BatchEval for ParBackend {
                 .map(|(ids, (lls, lbs))| {
                     let mut g = vec![0.0; dim];
                     for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut()) {
-                        let (lv, bv) = model.log_both_pseudo_grad(theta, n, &mut g);
+                        let (lv, bv) = model.log_both_pseudo_grad(theta, n as usize, &mut g);
                         *l = lv;
                         *b = bv;
                     }
@@ -153,7 +153,7 @@ impl BatchEval for ParBackend {
         }
     }
 
-    fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>) {
+    fn eval_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
         self.counters.add_lik(idx.len() as u64);
         ll.clear();
         ll.resize(idx.len(), 0.0);
@@ -165,7 +165,7 @@ impl BatchEval for ParBackend {
                 .zip(ll_s.par_chunks_mut(shard))
                 .for_each(|(ids, lls)| {
                     for (&n, l) in ids.iter().zip(lls.iter_mut()) {
-                        *l = model.log_lik(theta, n);
+                        *l = model.log_lik(theta, n as usize);
                     }
                 });
         });
@@ -174,7 +174,7 @@ impl BatchEval for ParBackend {
     fn eval_lik_grad(
         &mut self,
         theta: &[f64],
-        idx: &[usize],
+        idx: &[u32],
         ll: &mut Vec<f64>,
         grad: &mut [f64],
     ) {
@@ -191,8 +191,8 @@ impl BatchEval for ParBackend {
                 .map(|(ids, lls)| {
                     let mut g = vec![0.0; dim];
                     for (&n, l) in ids.iter().zip(lls.iter_mut()) {
-                        *l = model.log_lik(theta, n);
-                        model.log_lik_grad_acc(theta, n, &mut g);
+                        *l = model.log_lik(theta, n as usize);
+                        model.log_lik_grad_acc(theta, n as usize, &mut g);
                     }
                     g
                 })
@@ -237,7 +237,7 @@ mod tests {
                 |r| {
                     let theta = testing::gen::vec_normal(r, dim, 0.4);
                     let len = r.below(200) + 1; // duplicates allowed
-                    let idx: Vec<usize> = (0..len).map(|_| r.below(n)).collect();
+                    let idx: Vec<u32> = (0..len).map(|_| r.below(n) as u32).collect();
                     (theta, idx)
                 },
                 |(theta, idx)| {
@@ -292,7 +292,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let dim = model.dim();
         let theta: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.3).collect();
-        let idx: Vec<usize> = (0..333).map(|_| rng.below(model.n())).collect();
+        let idx: Vec<u32> = (0..333).map(|_| rng.below(model.n()) as u32).collect();
         let (mut ll1, mut lb1) = (Vec::new(), Vec::new());
         let (mut ll4, mut lb4) = (Vec::new(), Vec::new());
         let mut g1 = vec![0.0; dim];

@@ -123,7 +123,7 @@ mod enabled {
         fn run_chunk(
             &mut self,
             theta: &[f64],
-            idx: &[usize],
+            idx: &[u32],
         ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> {
             let bucket = self.pick_bucket(idx.len());
             let (_, d, _) = self.source.artifact_key();
@@ -165,7 +165,7 @@ mod enabled {
         fn eval_impl(
             &mut self,
             theta: &[f64],
-            idx: &[usize],
+            idx: &[u32],
             ll: &mut Vec<f64>,
             lb: Option<&mut Vec<f64>>,
             grad_pseudo: Option<&mut [f64]>,
@@ -217,14 +217,14 @@ mod enabled {
             &self.counters
         }
 
-        fn eval(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
+        fn eval(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
             self.eval_impl(theta, idx, ll, Some(lb), None, None);
         }
 
         fn eval_pseudo_grad(
             &mut self,
             theta: &[f64],
-            idx: &[usize],
+            idx: &[u32],
             ll: &mut Vec<f64>,
             lb: &mut Vec<f64>,
             grad: &mut [f64],
@@ -232,14 +232,14 @@ mod enabled {
             self.eval_impl(theta, idx, ll, Some(lb), Some(grad), None);
         }
 
-        fn eval_lik(&mut self, theta: &[f64], idx: &[usize], ll: &mut Vec<f64>) {
+        fn eval_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
             self.eval_impl(theta, idx, ll, None, None, None);
         }
 
         fn eval_lik_grad(
             &mut self,
             theta: &[f64],
-            idx: &[usize],
+            idx: &[u32],
             ll: &mut Vec<f64>,
             grad: &mut [f64],
         ) {
@@ -298,7 +298,7 @@ mod disabled {
         fn eval(
             &mut self,
             _theta: &[f64],
-            _idx: &[usize],
+            _idx: &[u32],
             _ll: &mut Vec<f64>,
             _lb: &mut Vec<f64>,
         ) {
@@ -307,20 +307,20 @@ mod disabled {
         fn eval_pseudo_grad(
             &mut self,
             _theta: &[f64],
-            _idx: &[usize],
+            _idx: &[u32],
             _ll: &mut Vec<f64>,
             _lb: &mut Vec<f64>,
             _grad: &mut [f64],
         ) {
             unreachable!("stub XlaBackend cannot be constructed")
         }
-        fn eval_lik(&mut self, _theta: &[f64], _idx: &[usize], _ll: &mut Vec<f64>) {
+        fn eval_lik(&mut self, _theta: &[f64], _idx: &[u32], _ll: &mut Vec<f64>) {
             unreachable!("stub XlaBackend cannot be constructed")
         }
         fn eval_lik_grad(
             &mut self,
             _theta: &[f64],
-            _idx: &[usize],
+            _idx: &[u32],
             _ll: &mut Vec<f64>,
             _grad: &mut [f64],
         ) {

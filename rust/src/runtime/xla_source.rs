@@ -32,8 +32,9 @@ pub trait XlaSource: ModelBound {
     /// toolchain support.
     fn as_model_bound(self: Arc<Self>) -> Arc<dyn ModelBound>;
 
-    /// Fill `bufs` for `idx`, padded to `bucket` rows (mask 0 on padding).
-    fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs);
+    /// Fill `bufs` for `idx` (u32, as handed through [`crate::runtime::evaluator::BatchEval`]),
+    /// padded to `bucket` rows (mask 0 on padding).
+    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs);
 
     /// Dims of aux1/aux2 per row (1 for vectors, K for [B,K] buffers).
     fn aux_width(&self) -> usize {
@@ -67,10 +68,11 @@ impl XlaSource for LogisticJJ {
         self
     }
 
-    fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs) {
+    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs) {
         let d = self.data.d();
         pad_common(bufs, d, 1, bucket);
         for &n in idx {
+            let n = n as usize;
             bufs.x.extend_from_slice(self.data.x.row(n));
             bufs.aux1.push(self.data.t[n]);
             bufs.aux2.push(self.xi[n]);
@@ -98,11 +100,12 @@ impl XlaSource for SoftmaxBohning {
         self.data.k
     }
 
-    fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs) {
+    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs) {
         let d = self.data.d();
         let k = self.data.k;
         pad_common(bufs, d, k, bucket);
         for &n in idx {
+            let n = n as usize;
             bufs.x.extend_from_slice(self.data.x.row(n));
             for kk in 0..k {
                 bufs.aux1
@@ -134,11 +137,12 @@ impl XlaSource for RobustT {
         self.sigma.ln()
     }
 
-    fn fill_inputs(&self, idx: &[usize], bucket: usize, bufs: &mut BatchBufs) {
+    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs) {
         let d = self.data.d();
         let inv_s = 1.0 / self.sigma;
         pad_common(bufs, d, 1, bucket);
         for &n in idx {
+            let n = n as usize;
             bufs.x
                 .extend(self.data.x.row(n).iter().map(|&v| v * inv_s));
             bufs.aux1.push(self.data.y[n] * inv_s);

@@ -1,0 +1,74 @@
+//! Counting global allocator for the zero-allocation hot-path invariant.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! `alloc` / `alloc_zeroed` / `realloc` call (the events the hot-path
+//! invariant forbids; `dealloc` is tracked separately). Install it per
+//! binary — benches and integration tests are separate crates, so each can
+//! carry its own:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: firefly::util::alloc_count::CountingAlloc = CountingAlloc::new();
+//! ...
+//! let before = ALLOC.allocations();
+//! run_hot_loop();
+//! assert_eq!(ALLOC.allocations() - before, 0);
+//! ```
+//!
+//! Counters are relaxed atomics: the measured windows are single-threaded
+//! (the FlyMC chain loop on the serial CPU backend), so exact deltas are
+//! well-defined; under concurrency the counts are still total, just not
+//! attributable.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+pub struct CountingAlloc {
+    allocs: AtomicU64,
+    deallocs: AtomicU64,
+}
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc { allocs: AtomicU64::new(0), deallocs: AtomicU64::new(0) }
+    }
+
+    /// Total alloc + alloc_zeroed + realloc calls since process start.
+    pub fn allocations(&self) -> u64 {
+        self.allocs.load(Relaxed)
+    }
+
+    pub fn deallocations(&self) -> u64 {
+        self.deallocs.load(Relaxed)
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// SAFETY: delegates verbatim to `System`; the counters have no effect on
+// allocation behavior.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.allocs.fetch_add(1, Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        self.deallocs.fetch_add(1, Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}

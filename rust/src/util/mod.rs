@@ -1,5 +1,7 @@
-//! Shared substrates: PRNG and scalar math.
+//! Shared substrates: PRNG, scalar math, and the counting allocator used by
+//! the zero-allocation hot-path tests/benches.
 
+pub mod alloc_count;
 pub mod math;
 pub mod rng;
 

@@ -76,10 +76,13 @@ impl Rng {
         ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n). Panics if `n == 0` — in release builds a
+    /// `debug_assert` would vanish and Lemire's multiply-shift silently
+    /// returns 0, handing callers an out-of-bounds index into an empty
+    /// collection.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
+        assert!(n > 0, "Rng::below(0): empty range");
         // Lemire's method without bias for our n << 2^64 use-cases.
         ((self.next_u64() as u128 * n as u128) >> 64) as usize
     }
@@ -235,6 +238,12 @@ mod tests {
             let y = r.f64_open();
             assert!(y > 0.0 && y <= 1.0);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::below(0)")]
+    fn below_zero_panics_in_all_builds() {
+        Rng::new(1).below(0);
     }
 
     #[test]

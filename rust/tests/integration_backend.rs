@@ -32,7 +32,7 @@ fn compare_backends(source: Arc<dyn XlaSource>, theta_scale: f64, seed: u64) {
 
     // batch sizes: tiny (padding-dominated), bucket-boundary, multi-chunk
     for &bs in &[1usize, 3, 255, 256, 257, 300] {
-        let idx: Vec<usize> = (0..bs).map(|_| rng.below(n)).collect();
+        let idx: Vec<u32> = (0..bs).map(|_| rng.below(n) as u32).collect();
         let (mut cll, mut clb) = (Vec::new(), Vec::new());
         let (mut xll, mut xlb) = (Vec::new(), Vec::new());
         let mut cgrad = vec![0.0; dim];

@@ -19,17 +19,17 @@ use firefly::runtime::CpuBackend;
 use firefly::samplers::{RandomWalkMh, Target};
 use firefly::util::Rng;
 
-fn posterior_moments(trace: &[Vec<f64>]) -> (Vec<f64>, Vec<f64>) {
-    let d = trace[0].len();
-    let t = trace.len() as f64;
+fn posterior_moments(trace: &firefly::diagnostics::TraceMatrix) -> (Vec<f64>, Vec<f64>) {
+    let d = trace.dim();
+    let t = trace.n_rows() as f64;
     let mut mean = vec![0.0; d];
-    for row in trace {
+    for row in trace.rows() {
         for j in 0..d {
             mean[j] += row[j] / t;
         }
     }
     let mut var = vec![0.0; d];
-    for row in trace {
+    for row in trace.rows() {
         for j in 0..d {
             var[j] += (row[j] - mean[j]) * (row[j] - mean[j]) / t;
         }

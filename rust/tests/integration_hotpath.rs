@@ -1,0 +1,85 @@
+//! Zero-allocation hot-path invariant of the u32/scratch/flat-trace
+//! refactor, enforced with a counting global allocator: steady-state FlyMC
+//! iterations on the logistic task (serial CPU backend) must perform **zero**
+//! heap allocations — every buffer on the θ-eval and z-resampling paths is
+//! owned and pre-reserved by `PseudoPosterior`, the bright index set is
+//! handed to the backend as the `BrightSet`'s own u32 prefix, and the base
+//! density is one pass over a cached packed quadratic (DESIGN.md §Perf).
+//!
+//! This binary deliberately contains a SINGLE test: the allocator counter is
+//! process-global, so a sibling test allocating concurrently would corrupt
+//! the measurement window. The cross-backend golden (byte-identical traces
+//! on cpu vs parcpu) lives in `integration_parallel.rs`.
+
+use std::sync::Arc;
+
+use firefly::data::synth;
+use firefly::flymc::PseudoPosterior;
+use firefly::metrics::Counters;
+use firefly::models::{IsoGaussian, LogisticJJ, ModelBound, Prior};
+use firefly::runtime::CpuBackend;
+use firefly::samplers::{RandomWalkMh, Sampler};
+use firefly::util::alloc_count::CountingAlloc;
+use firefly::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+fn build(n: usize, seed: u64) -> (PseudoPosterior, Counters, Vec<f64>, Rng) {
+    let data = Arc::new(synth::synth_mnist(n, 20, seed));
+    let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
+    let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 1.0 });
+    let counters = Counters::new();
+    let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+    let mut rng = Rng::new(seed + 100);
+    let theta0 = prior.sample(model.dim(), &mut rng);
+    let theta = theta0.clone();
+    let mut pp = PseudoPosterior::new(model, prior, eval, theta0);
+    pp.init_z(&mut rng);
+    (pp, counters, theta, rng)
+}
+
+/// Measure allocations over `iters` steady-state iterations (after
+/// `warmup`), with either z-resampling scheme.
+fn measure(explicit: bool, warmup: usize, iters: usize) -> (u64, u64, usize) {
+    let (mut pp, counters, mut theta, mut rng) = build(400, 5);
+    let mut mh = RandomWalkMh::new(0.05);
+    let mut z_step = |pp: &mut PseudoPosterior, rng: &mut Rng| {
+        if explicit {
+            pp.explicit_resample(0.1, rng);
+        } else {
+            pp.implicit_resample(0.1, rng);
+        }
+    };
+    for _ in 0..warmup {
+        mh.step(&mut pp, &mut theta, &mut rng);
+        z_step(&mut pp, &mut rng);
+    }
+    let allocs_before = ALLOC.allocations();
+    let queries_before = counters.lik_queries();
+    for _ in 0..iters {
+        mh.step(&mut pp, &mut theta, &mut rng);
+        z_step(&mut pp, &mut rng);
+    }
+    (
+        ALLOC.allocations() - allocs_before,
+        counters.lik_queries() - queries_before,
+        pp.n_bright(),
+    )
+}
+
+#[test]
+fn steady_state_flymc_iterations_allocate_nothing() {
+    for explicit in [false, true] {
+        let (allocs, queries, n_bright) = measure(explicit, 100, 300);
+        // the window must have done real work (θ evals + z sweeps)...
+        assert!(queries > 0, "explicit={explicit}: no likelihood queries");
+        assert!(n_bright > 0, "explicit={explicit}: degenerate chain, nothing bright");
+        // ...with ZERO heap allocations
+        assert_eq!(
+            allocs, 0,
+            "explicit={explicit}: steady-state FlyMC iterations performed {allocs} \
+             heap allocations (zero-alloc hot-path invariant, DESIGN.md §Perf)"
+        );
+    }
+}

@@ -26,19 +26,31 @@ fn cfg(chains: usize, backend: Backend, threads: usize) -> ExperimentConfig {
 
 #[test]
 fn sharded_backend_bit_identical_through_full_chains() {
-    let serial = run_experiment(&cfg(2, Backend::Cpu, 0)).unwrap();
-    let sharded = run_experiment(&cfg(2, Backend::ParCpu, 0)).unwrap();
-    assert_eq!(serial.chains.len(), sharded.chains.len());
-    for (a, b) in serial.chains.iter().zip(&sharded.chains) {
-        // exact equality: ll/lb are bitwise identical between backends, so
-        // every accept/reject and z-flip decision is identical too
-        assert_eq!(a.seed, b.seed);
-        assert_eq!(a.logpost_joint, b.logpost_joint);
-        assert_eq!(a.bright, b.bright);
-        assert_eq!(a.accepted, b.accepted);
-        // the paper's cost unit must not drift when the backend goes parallel
-        assert_eq!(a.queries_per_iter, b.queries_per_iter);
-        assert_eq!(a.final_counters, b.final_counters);
+    // Fixed-seed golden across backends, for both FlyMC variants: the serial
+    // and sharded backends run the same scalar kernels through the same
+    // u32-index hot path, so every recorded series must be byte-identical.
+    for algorithm in [Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc] {
+        let mut c_cpu = cfg(2, Backend::Cpu, 0);
+        let mut c_par = cfg(2, Backend::ParCpu, 0);
+        c_cpu.algorithm = algorithm;
+        c_par.algorithm = algorithm;
+        let serial = run_experiment(&c_cpu).unwrap();
+        let sharded = run_experiment(&c_par).unwrap();
+        assert_eq!(serial.chains.len(), sharded.chains.len());
+        for (a, b) in serial.chains.iter().zip(&sharded.chains) {
+            // exact equality: ll/lb are bitwise identical between backends,
+            // so every accept/reject and z-flip decision is identical too
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.logpost_joint, b.logpost_joint, "{algorithm:?}");
+            assert_eq!(a.bright, b.bright, "{algorithm:?}");
+            assert_eq!(a.accepted, b.accepted, "{algorithm:?}");
+            assert_eq!(a.theta_trace, b.theta_trace, "{algorithm:?}");
+            // the paper's cost unit must not drift when the backend goes
+            // parallel
+            assert_eq!(a.queries_per_iter, b.queries_per_iter, "{algorithm:?}");
+            assert_eq!(a.final_counters, b.final_counters, "{algorithm:?}");
+            assert!(a.logpost_joint.iter().all(|l| l.is_finite()));
+        }
     }
 }
 
