@@ -1,19 +1,26 @@
-//! FlyMC hot-path macro-benchmark: the first perf trajectory point.
+//! FlyMC hot-path macro-benchmark: the per-PR perf trajectory.
 //!
-//! Runs regular MCMC, untuned FlyMC, and MAP-tuned FlyMC on the logistic
-//! task over the serial CPU backend with a hand-rolled chain loop, and
-//! reports — per steady-state iteration, measured *after* warm-up —
+//! Runs regular MCMC, untuned FlyMC, and MAP-tuned FlyMC for **every paper
+//! task** — logistic + random-walk MH, softmax + MALA (the gradient path),
+//! robust + slice — on the serial CPU backend with a hand-rolled chain
+//! loop, and reports, per steady-state iteration (measured *after*
+//! warm-up):
 //!
 //! * wallclock seconds,
 //! * likelihood queries (the paper's cost unit),
-//! * heap allocations (via a counting global allocator; the FlyMC hot path
-//!   must report 0 — the invariant `rust/tests/integration_hotpath.rs`
-//!   enforces),
+//! * heap allocations (via a counting global allocator; every FlyMC row
+//!   must report 0 — the invariant the `integration_hotpath*` test
+//!   binaries enforce, now including the gradient path),
 //!
 //! and emits `BENCH_hotpath.json` so future PRs have a trajectory to beat.
 //!
-//!     cargo bench --bench hotpath [-- --n 5000 --iters 2000 --warmup 500]
+//!     cargo bench --bench hotpath                # full per-task sizes
 //!     cargo bench --bench hotpath -- --smoke     # CI smoke mode
+//!
+//! Sizes are fixed per task (the regular-MCMC baselines bound the runtime:
+//! slice costs ~10·N likelihood queries per iteration), so trajectory
+//! points stay comparable across PRs; `--seed`/`--map-steps` are the only
+//! knobs besides `--smoke`.
 //!
 //! Record before/after numbers in DESIGN.md §Perf when touching the hot path.
 
@@ -21,7 +28,7 @@ use std::sync::Arc;
 
 use firefly::bench_harness::{fmt_time, Report};
 use firefly::cli::Args;
-use firefly::engine::experiment::build_model;
+use firefly::engine::experiment::{build_model, build_sampler};
 use firefly::flymc::{FullPosterior, PseudoPosterior};
 use firefly::metrics::Counters;
 use firefly::models::ModelBound;
@@ -32,6 +39,15 @@ use firefly::util::Timer;
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc::new();
+
+struct Scenario {
+    task: Task,
+    task_label: &'static str,
+    sampler_label: &'static str,
+    n: usize,
+    iters: usize,
+    warmup: usize,
+}
 
 struct AlgoStats {
     label: &'static str,
@@ -48,7 +64,7 @@ struct AlgoStats {
 fn run_iters(
     k: usize,
     q_db: f64,
-    mh: &mut RandomWalkMh,
+    sampler: &mut dyn Sampler,
     pseudo: &mut Option<PseudoPosterior>,
     full: &mut Option<FullPosterior>,
     theta: &mut Vec<f64>,
@@ -57,27 +73,22 @@ fn run_iters(
 ) {
     for _ in 0..k {
         if let Some(pp) = pseudo.as_mut() {
-            mh.step(pp, theta, rng);
+            sampler.step(pp, theta, rng);
             pp.implicit_resample(q_db, rng);
             *bright_sum += pp.n_bright();
         } else if let Some(fp) = full.as_mut() {
-            mh.step(fp, theta, rng);
+            sampler.step(fp, theta, rng);
         }
     }
 }
 
-fn run_algo(
-    algorithm: Algorithm,
-    n: usize,
-    warmup: usize,
-    iters: usize,
-    seed: u64,
-) -> AlgoStats {
+fn run_algo(scenario: &Scenario, algorithm: Algorithm, seed: u64, map_steps: usize) -> AlgoStats {
     let cfg = ExperimentConfig {
-        task: Task::LogisticMnist,
+        task: scenario.task,
         algorithm,
-        n_data: Some(n),
+        n_data: Some(scenario.n),
         record_every: 0,
+        map_steps,
         seed,
         ..Default::default()
     };
@@ -91,7 +102,9 @@ fn run_algo(
     let flymc = algorithm != Algorithm::RegularMcmc;
 
     let mut theta = theta0.clone();
-    let mut mh = RandomWalkMh::adaptive(0.05);
+    // the paper's sampler for the task, from the same builder the engine
+    // uses — one source of truth for sampler choice and tuning
+    let mut sampler = build_sampler(scenario.task);
     let mut pseudo: Option<PseudoPosterior> = None;
     let mut full: Option<FullPosterior> = None;
     if flymc {
@@ -102,15 +115,34 @@ fn run_algo(
         full = Some(FullPosterior::new(model, prior, eval, theta0));
     }
 
+    let (iters, warmup) = (scenario.iters, scenario.warmup);
     let mut bright_sum: usize = 0;
-    run_iters(warmup, q_db, &mut mh, &mut pseudo, &mut full, &mut theta, &mut rng, &mut bright_sum);
-    mh.freeze_adaptation();
+    run_iters(
+        warmup,
+        q_db,
+        &mut *sampler,
+        &mut pseudo,
+        &mut full,
+        &mut theta,
+        &mut rng,
+        &mut bright_sum,
+    );
+    sampler.freeze_adaptation();
     bright_sum = 0;
 
     let allocs_before = ALLOC.allocations();
     let queries_before = counters.lik_queries();
     let timer = Timer::start();
-    run_iters(iters, q_db, &mut mh, &mut pseudo, &mut full, &mut theta, &mut rng, &mut bright_sum);
+    run_iters(
+        iters,
+        q_db,
+        &mut *sampler,
+        &mut pseudo,
+        &mut full,
+        &mut theta,
+        &mut rng,
+        &mut bright_sum,
+    );
     let secs = timer.elapsed_secs();
     let queries = counters.lik_queries() - queries_before;
     let allocs = ALLOC.allocations() - allocs_before;
@@ -127,67 +159,120 @@ fn run_algo(
 fn main() {
     let args = Args::from_env();
     let smoke = args.has("smoke");
-    let n = args.get_usize("n", if smoke { 400 } else { 5000 });
-    let iters = args.get_usize("iters", if smoke { 150 } else { 2000 });
-    let warmup = args.get_usize("warmup", if smoke { 50 } else { 500 });
     let seed = args.get_u64("seed", 0);
+    let map_steps = args.get_usize("map-steps", if smoke { 60 } else { 400 });
 
-    println!(
-        "hotpath bench: logistic N={n}, {warmup} warmup + {iters} measured iterations{}",
-        if smoke { " (smoke)" } else { "" }
-    );
+    // Per-task sizes: regular MCMC pays N (slice: ~10·N) likelihood queries
+    // per iteration, so the softmax/robust baselines bound the runtime.
+    // Deliberately NOT overridable per run — fixed sizes keep the JSON
+    // trajectory comparable across PRs.
+    let scenarios = [
+        Scenario {
+            task: Task::LogisticMnist,
+            task_label: "logistic",
+            sampler_label: "rwmh",
+            n: if smoke { 400 } else { 5000 },
+            iters: if smoke { 150 } else { 2000 },
+            warmup: if smoke { 50 } else { 500 },
+        },
+        Scenario {
+            task: Task::SoftmaxCifar,
+            task_label: "softmax",
+            sampler_label: "mala",
+            n: if smoke { 240 } else { 1500 },
+            iters: if smoke { 60 } else { 500 },
+            warmup: if smoke { 20 } else { 150 },
+        },
+        Scenario {
+            task: Task::RobustOpv,
+            task_label: "robust",
+            sampler_label: "slice",
+            n: if smoke { 400 } else { 2000 },
+            iters: if smoke { 60 } else { 500 },
+            warmup: if smoke { 20 } else { 150 },
+        },
+    ];
 
-    let mut report = Report::new(
-        &format!("FlyMC hot path (logistic, N={n})"),
-        &["algorithm", "wallclock/iter", "queries/iter", "allocs/iter", "avg bright"],
-    );
-    let mut results = Vec::new();
-    for algorithm in [
-        Algorithm::RegularMcmc,
-        Algorithm::UntunedFlyMc,
-        Algorithm::MapTunedFlyMc,
-    ] {
-        let r = run_algo(algorithm, n, warmup, iters, seed);
-        report.row(&[
-            r.label.to_string(),
-            fmt_time(r.wallclock_per_iter),
-            format!("{:.1}", r.queries_per_iter),
-            format!("{:.2}", r.allocs_per_iter),
-            if r.avg_bright.is_nan() { "-".into() } else { format!("{:.1}", r.avg_bright) },
-        ]);
-        results.push(r);
-    }
-    report.print();
-
-    // JSON trajectory point (no serde in the offline build: hand-formatted).
     let mut json = String::new();
-    json.push_str("{\n");
-    json.push_str("  \"bench\": \"hotpath\",\n  \"task\": \"logistic\",\n");
-    json.push_str(&format!(
-        "  \"n\": {n},\n  \"warmup_iters\": {warmup},\n  \"measured_iters\": {iters},\n  \"smoke\": {smoke},\n"
-    ));
-    json.push_str("  \"algorithms\": [\n");
-    for (i, r) in results.iter().enumerate() {
+    json.push_str("{\n  \"bench\": \"hotpath\",\n");
+    json.push_str(&format!("  \"smoke\": {smoke},\n"));
+    json.push_str("  \"scenarios\": [\n");
+    let mut fly_allocs = 0.0f64;
+
+    for (si, scenario) in scenarios.iter().enumerate() {
+        println!(
+            "hotpath bench: {} + {} N={}, {} warmup + {} measured iterations{}",
+            scenario.task_label,
+            scenario.sampler_label,
+            scenario.n,
+            scenario.warmup,
+            scenario.iters,
+            if smoke { " (smoke)" } else { "" }
+        );
+        let mut report = Report::new(
+            &format!(
+                "FlyMC hot path ({} + {}, N={})",
+                scenario.task_label, scenario.sampler_label, scenario.n
+            ),
+            &["algorithm", "wallclock/iter", "queries/iter", "allocs/iter", "avg bright"],
+        );
+        let mut results = Vec::new();
+        for algorithm in [
+            Algorithm::RegularMcmc,
+            Algorithm::UntunedFlyMc,
+            Algorithm::MapTunedFlyMc,
+        ] {
+            let r = run_algo(scenario, algorithm, seed, map_steps);
+            report.row(&[
+                r.label.to_string(),
+                fmt_time(r.wallclock_per_iter),
+                format!("{:.1}", r.queries_per_iter),
+                format!("{:.2}", r.allocs_per_iter),
+                if r.avg_bright.is_nan() { "-".into() } else { format!("{:.1}", r.avg_bright) },
+            ]);
+            if algorithm != Algorithm::RegularMcmc {
+                fly_allocs += r.allocs_per_iter;
+            }
+            results.push(r);
+        }
+        report.print();
+
+        // JSON trajectory point (no serde in the offline build).
         json.push_str(&format!(
-            "    {{\"algorithm\": \"{}\", \"wallclock_per_iter_secs\": {:e}, \
-             \"queries_per_iter\": {:.3}, \"allocs_per_iter\": {:.3}, \"avg_bright\": {}}}{}\n",
-            r.label,
-            r.wallclock_per_iter,
-            r.queries_per_iter,
-            r.allocs_per_iter,
-            if r.avg_bright.is_nan() { "null".to_string() } else { format!("{:.2}", r.avg_bright) },
-            if i + 1 < results.len() { "," } else { "" },
+            "    {{\"task\": \"{}\", \"sampler\": \"{}\", \"n\": {}, \
+             \"warmup_iters\": {}, \"measured_iters\": {},\n     \"algorithms\": [\n",
+            scenario.task_label, scenario.sampler_label, scenario.n, scenario.warmup,
+            scenario.iters,
+        ));
+        for (i, r) in results.iter().enumerate() {
+            json.push_str(&format!(
+                "      {{\"algorithm\": \"{}\", \"wallclock_per_iter_secs\": {:e}, \
+                 \"queries_per_iter\": {:.3}, \"allocs_per_iter\": {:.3}, \"avg_bright\": {}}}{}\n",
+                r.label,
+                r.wallclock_per_iter,
+                r.queries_per_iter,
+                r.allocs_per_iter,
+                if r.avg_bright.is_nan() {
+                    "null".to_string()
+                } else {
+                    format!("{:.2}", r.avg_bright)
+                },
+                if i + 1 < results.len() { "," } else { "" },
+            ));
+        }
+        json.push_str(&format!(
+            "     ]}}{}\n",
+            if si + 1 < scenarios.len() { "," } else { "" }
         ));
     }
     json.push_str("  ]\n}\n");
     std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
     println!("wrote BENCH_hotpath.json");
 
-    let fly_allocs: f64 = results[1].allocs_per_iter + results[2].allocs_per_iter;
     if fly_allocs > 0.0 {
         println!(
-            "WARNING: FlyMC hot path allocated ({fly_allocs:.2} allocs/iter) — \
-             the zero-alloc invariant regressed (see DESIGN.md §Perf)"
+            "WARNING: a FlyMC hot path allocated ({fly_allocs:.2} allocs/iter summed over \
+             scenarios) — the zero-alloc invariant regressed (see DESIGN.md §Perf)"
         );
     }
 }

@@ -68,17 +68,28 @@ fn main() {
         });
 
     // --- collapsed bound product (the O(D^2) pseudo-prior step) --------------
+    let mut lsc = logi.new_scratch();
     Bench::new("collapsed bound product logistic d51")
         .samples(30)
         .iters_per_sample(2000)
         .run(|| {
-            std::hint::black_box(logi.log_bound_product(&theta));
+            std::hint::black_box(logi.log_bound_product(&theta, &mut lsc));
         });
+    let mut ssc = soft.new_scratch();
     Bench::new("collapsed bound product softmax k3 d256")
         .samples(20)
         .iters_per_sample(200)
         .run(|| {
-            std::hint::black_box(soft.log_bound_product(&stheta));
+            std::hint::black_box(soft.log_bound_product(&stheta, &mut ssc));
+        });
+    let mut sgrad = vec![0.0; soft.dim()];
+    Bench::new("collapsed bound grad softmax k3 d256")
+        .samples(20)
+        .iters_per_sample(200)
+        .run(|| {
+            sgrad.fill(0.0);
+            soft.grad_log_bound_product_acc(&stheta, &mut sgrad, &mut ssc);
+            std::hint::black_box(&sgrad);
         });
 
     // --- BrightSet ops --------------------------------------------------------

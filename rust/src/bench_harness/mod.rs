@@ -8,31 +8,39 @@
 
 use crate::util::Timer;
 
+/// Timing samples of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// benchmark name
     pub name: String,
-    pub samples: Vec<f64>, // seconds per iteration
+    /// seconds per iteration, one entry per sample
+    pub samples: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Median seconds per iteration.
     pub fn median_s(&self) -> f64 {
         let mut v = self.samples.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         v[v.len() / 2]
     }
+    /// Mean seconds per iteration.
     pub fn mean_s(&self) -> f64 {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
+    /// Standard deviation of the samples.
     pub fn std_s(&self) -> f64 {
         let m = self.mean_s();
         (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
             / self.samples.len() as f64)
             .sqrt()
     }
+    /// Fastest sample.
     pub fn min_s(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Print the criterion-style one-liner.
     pub fn report(&self) {
         println!(
             "{:<44} median {:>12} mean {:>12} ± {:>10} min {:>12}",
@@ -45,6 +53,7 @@ impl BenchResult {
     }
 }
 
+/// Format seconds with an auto-selected unit (ns/µs/ms/s).
 pub fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1} ns", s * 1e9)
@@ -57,6 +66,7 @@ pub fn fmt_time(s: f64) -> String {
     }
 }
 
+/// Builder for one warm-up + timed-samples benchmark run.
 pub struct Bench {
     name: String,
     warmup_iters: usize,
@@ -65,17 +75,21 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Benchmark with defaults: 3 warm-up iters, 10 samples, 1 iter/sample.
     pub fn new(name: &str) -> Self {
         Bench { name: name.to_string(), warmup_iters: 3, samples: 10, iters_per_sample: 1 }
     }
+    /// Set the warm-up iteration count.
     pub fn warmup(mut self, n: usize) -> Self {
         self.warmup_iters = n;
         self
     }
+    /// Set the number of timed samples (min 1).
     pub fn samples(mut self, n: usize) -> Self {
         self.samples = n.max(1);
         self
     }
+    /// Set how many iterations each timed sample averages over (min 1).
     pub fn iters_per_sample(mut self, n: usize) -> Self {
         self.iters_per_sample = n.max(1);
         self
@@ -108,6 +122,7 @@ pub struct Report {
 }
 
 impl Report {
+    /// Empty table with the given title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Self {
         Report {
             title: title.to_string(),
@@ -116,11 +131,13 @@ impl Report {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells.to_vec());
     }
 
+    /// Print the table with aligned columns.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

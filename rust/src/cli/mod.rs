@@ -1,10 +1,14 @@
 //! CLI substrate (offline stand-in for `clap`): subcommands + `--flag value`
 //! / `--flag=value` / boolean flags, with generated usage text.
 
+/// Parsed command line: subcommand + flags + positionals.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// the first non-flag token
     pub subcommand: Option<String>,
+    /// `--key [value]` flag pairs in order of appearance
     pub flags: Vec<(String, Option<String>)>,
+    /// non-flag tokens after the subcommand
     pub positional: Vec<String>,
 }
 
@@ -38,10 +42,12 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (argv[0] skipped).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Last value given for `--key` (None if absent or bare).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags
             .iter()
@@ -50,22 +56,27 @@ impl Args {
             .and_then(|(_, v)| v.as_deref())
     }
 
+    /// Whether `--key` appeared at all (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.iter().any(|(k, _)| k == key)
     }
 
+    /// Float flag with a default.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Unsigned-integer flag with a default.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// u64 flag with a default.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// String flag with a default.
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }

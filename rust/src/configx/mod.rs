@@ -8,16 +8,23 @@
 
 use std::collections::BTreeMap;
 
+/// A parsed TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// double-quoted string
     Str(String),
+    /// float literal (or int in a float context via [`Value::as_f64`])
     Float(f64),
+    /// integer literal
     Int(i64),
+    /// `true` / `false`
     Bool(bool),
+    /// homogeneous-or-not bracketed array
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// Numeric value as f64 (ints widen; None otherwise).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -25,18 +32,21 @@ impl Value {
             _ => None,
         }
     }
+    /// Integer value (None otherwise).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// String value (None otherwise).
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Boolean value (None otherwise).
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -48,10 +58,12 @@ impl Value {
 /// Parsed document: section -> key -> value ("" = top-level section).
 #[derive(Clone, Debug, Default)]
 pub struct Doc {
+    /// section name -> key -> value ("" = top-level)
     pub sections: BTreeMap<String, BTreeMap<String, Value>>,
 }
 
 impl Doc {
+    /// Parse a TOML-subset document (see the module docs for the grammar).
     pub fn parse(text: &str) -> Result<Doc, String> {
         let mut doc = Doc::default();
         let mut section = String::new();
@@ -79,25 +91,30 @@ impl Doc {
         Ok(doc)
     }
 
+    /// Look up `key` in `section` ("" = top level).
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section)?.get(key)
     }
 
+    /// Numeric lookup with a default.
     pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
+    /// Unsigned-integer lookup with a default.
     pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
         self.get(section, key)
             .and_then(|v| v.as_i64())
             .map(|i| i as usize)
             .unwrap_or(default)
     }
+    /// String lookup with a default.
     pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
         self.get(section, key)
             .and_then(|v| v.as_str())
             .unwrap_or(default)
             .to_string()
     }
+    /// Boolean lookup with a default.
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
@@ -190,6 +207,7 @@ pub enum Task {
 }
 
 impl Task {
+    /// Parse a CLI/TOML task name (accepts the aliases shown in `--help`).
     pub fn parse(s: &str) -> Result<Task, String> {
         match s {
             "logistic" | "mnist" | "logistic_mnist" => Ok(Task::LogisticMnist),
@@ -204,12 +222,16 @@ impl Task {
 /// The three algorithms compared in every experiment (Table 1 / Fig 4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
+    /// full-data MCMC baseline (N likelihood queries per evaluation)
     RegularMcmc,
+    /// FlyMC with fixed bound anchors (paper: xi = 1.5, q = 0.1)
     UntunedFlyMc,
+    /// FlyMC with bounds tightened at an approximate MAP (paper: q = 0.01)
     MapTunedFlyMc,
 }
 
 impl Algorithm {
+    /// Parse a CLI/TOML algorithm name.
     pub fn parse(s: &str) -> Result<Algorithm, String> {
         match s {
             "regular" | "mcmc" => Ok(Algorithm::RegularMcmc),
@@ -218,6 +240,7 @@ impl Algorithm {
             _ => Err(format!("unknown algorithm {s:?}")),
         }
     }
+    /// Human-readable label used in Table-1 rows and reports.
     pub fn label(&self) -> &'static str {
         match self {
             Algorithm::RegularMcmc => "Regular MCMC",
@@ -239,6 +262,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Parse a CLI/TOML backend name.
     pub fn parse(s: &str) -> Result<Backend, String> {
         match s {
             "cpu" => Ok(Backend::Cpu),
@@ -261,13 +285,20 @@ impl Backend {
 /// Full experiment description with paper-faithful defaults.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// which experiment stack to run
     pub task: Task,
+    /// which of the three compared algorithms
     pub algorithm: Algorithm,
+    /// likelihood evaluation backend
     pub backend: Backend,
+    /// base seed (replicas derive their own)
     pub seed: u64,
+    /// total MCMC iterations per chain
     pub iters: usize,
+    /// burn-in iterations (excluded from traces/averages)
     pub burnin: usize,
-    pub n_data: Option<usize>, // None = paper-scale default for the task
+    /// dataset size; None = paper-scale default for the task
+    pub n_data: Option<usize>,
     /// replica chains (run concurrently on the CPU backends)
     pub chains: usize,
     /// worker-thread cap: bounds how many replica chains run concurrently,
@@ -287,8 +318,11 @@ pub struct ExperimentConfig {
     /// None = per-task default (MNIST 1.0, CIFAR 0.15, OPV 0.5 — the paper
     /// chooses the scale by out-of-sample performance per experiment)
     pub prior_scale: Option<f64>,
+    /// Adam steps for the MAP-tuning pre-pass
     pub map_steps: usize,
+    /// record the full-data log posterior every k iterations (0 = never)
     pub record_every: usize,
+    /// directory holding the XLA artifact manifest
     pub artifacts_dir: String,
 }
 
@@ -317,6 +351,7 @@ impl Default for ExperimentConfig {
 }
 
 impl ExperimentConfig {
+    /// Typed config from a parsed document (missing keys keep defaults).
     pub fn from_doc(doc: &Doc) -> Result<Self, String> {
         let mut c = ExperimentConfig::default();
         c.task = Task::parse(&doc.str_or("experiment", "task", "logistic"))?;
@@ -345,6 +380,7 @@ impl ExperimentConfig {
         Ok(c)
     }
 
+    /// Typed config straight from TOML-subset text.
     pub fn from_str_toml(text: &str) -> Result<Self, String> {
         Self::from_doc(&Doc::parse(text)?)
     }

@@ -66,6 +66,8 @@ fn to_features(rows: &[Vec<f64>], bias: bool) -> (Matrix, Vec<f64>) {
     (x, last)
 }
 
+/// Parse binary-classification CSV text (`f_1,...,f_D,label`, label in
+/// {-1,1} or {0,1}); appends a bias column of ones when `bias`.
 pub fn load_logistic(text: &str, bias: bool) -> Result<LogisticData, String> {
     let rows = parse_rows(text)?;
     let (x, labels) = to_features(&rows, bias);
@@ -84,6 +86,8 @@ pub fn load_logistic(text: &str, bias: bool) -> Result<LogisticData, String> {
     Ok(LogisticData { x, t })
 }
 
+/// Parse multi-class CSV text (`f_1,...,f_D,label`, integer label ≥ 0;
+/// K inferred as max label + 1); appends a bias column when `bias`.
 pub fn load_softmax(text: &str, bias: bool) -> Result<SoftmaxData, String> {
     let rows = parse_rows(text)?;
     let (x, labels) = to_features(&rows, bias);
@@ -100,6 +104,8 @@ pub fn load_softmax(text: &str, bias: bool) -> Result<SoftmaxData, String> {
     Ok(SoftmaxData { x, labels: ints, k })
 }
 
+/// Parse regression CSV text (`f_1,...,f_D,y`); appends a bias column when
+/// `bias`.
 pub fn load_regression(text: &str, bias: bool) -> Result<RegressionData, String> {
     let rows = parse_rows(text)?;
     let (x, y) = to_features(&rows, bias);

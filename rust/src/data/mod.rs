@@ -18,14 +18,18 @@ use crate::linalg::Matrix;
 /// the bias column when the generator appends one.
 #[derive(Clone, Debug)]
 pub struct LogisticData {
+    /// N x D feature matrix
     pub x: Matrix,
+    /// labels in {-1, +1}
     pub t: Vec<f64>,
 }
 
 impl LogisticData {
+    /// Number of data points.
     pub fn n(&self) -> usize {
         self.x.rows
     }
+    /// Feature dimension (bias column included when present).
     pub fn d(&self) -> usize {
         self.x.cols
     }
@@ -34,15 +38,20 @@ impl LogisticData {
 /// Multi-class classification data; `labels[n]` in [0, k).
 #[derive(Clone, Debug)]
 pub struct SoftmaxData {
+    /// N x D feature matrix
     pub x: Matrix,
+    /// integer class labels in [0, k)
     pub labels: Vec<usize>,
+    /// number of classes K
     pub k: usize,
 }
 
 impl SoftmaxData {
+    /// Number of data points.
     pub fn n(&self) -> usize {
         self.x.rows
     }
+    /// Feature dimension.
     pub fn d(&self) -> usize {
         self.x.cols
     }
@@ -51,14 +60,18 @@ impl SoftmaxData {
 /// Regression data.
 #[derive(Clone, Debug)]
 pub struct RegressionData {
+    /// N x D feature matrix
     pub x: Matrix,
+    /// regression targets
     pub y: Vec<f64>,
 }
 
 impl RegressionData {
+    /// Number of data points.
     pub fn n(&self) -> usize {
         self.x.rows
     }
+    /// Feature dimension (bias column included when present).
     pub fn d(&self) -> usize {
         self.x.cols
     }

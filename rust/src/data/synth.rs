@@ -4,10 +4,13 @@ use super::{LogisticData, RegressionData, SoftmaxData};
 use crate::linalg::Matrix;
 use crate::util::{math, Rng};
 
-/// Paper sizes for the three experiments.
+/// Paper-scale N for the MNIST 7v9 logistic experiment.
 pub const MNIST_N: usize = 12_214;
+/// Paper-scale N for the CIFAR-3 softmax experiment.
 pub const CIFAR_N: usize = 18_000;
+/// Full paper-scale N for the OPV robust-regression experiment.
 pub const OPV_N_FULL: usize = 1_800_000;
+/// Default OPV N (scaled down; see DESIGN.md §Scaling-defaults).
 pub const OPV_N_DEFAULT: usize = 200_000;
 
 /// MNIST-7v9-like task: `d` PCA-like features (decaying spectrum) + bias,
@@ -105,6 +108,7 @@ pub fn synth_opv(n: usize, d: usize, seed: u64) -> RegressionData {
     synth_opv_with_truth(n, d, seed).0
 }
 
+/// Same as [`synth_opv`], returning the generating weights for tests.
 pub fn synth_opv_with_truth(n: usize, d_total: usize, seed: u64) -> (RegressionData, Vec<f64>) {
     assert!(d_total >= 2);
     let d = d_total - 1; // raw features; the last column is the bias

@@ -37,10 +37,12 @@ impl TraceMatrix {
         self.data.extend_from_slice(row);
     }
 
+    /// Number of components per sample.
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    /// Number of recorded samples.
     pub fn n_rows(&self) -> usize {
         if self.dim == 0 {
             0
@@ -49,6 +51,7 @@ impl TraceMatrix {
         }
     }
 
+    /// Whether no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -235,12 +238,17 @@ pub fn pooled_ess_min_components(traces: &[&TraceMatrix]) -> f64 {
 /// Summary of a scalar trace.
 #[derive(Clone, Debug)]
 pub struct Summary {
+    /// sample mean
     pub mean: f64,
+    /// sample standard deviation
     pub std: f64,
+    /// Geyer effective sample size
     pub ess: f64,
+    /// ESS per 1000 iterations (Table-1 unit)
     pub ess_per_1000: f64,
 }
 
+/// Mean / std / ESS summary of a scalar trace.
 pub fn summarize(x: &[f64]) -> Summary {
     Summary {
         mean: mean(x),

@@ -12,11 +12,14 @@ use crate::util::{Rng, Timer};
 /// Either posterior, so the chain driver is shared between the baseline and
 /// FlyMC (z-updates are a no-op for the regular posterior).
 pub enum ChainTarget {
+    /// the augmented FlyMC pseudo-posterior (z-updates active)
     FlyMc(PseudoPosterior),
+    /// the regular full-data posterior (z-updates are a no-op)
     Regular(FullPosterior),
 }
 
 impl ChainTarget {
+    /// The θ-density the sampler drives.
     pub fn as_target(&mut self) -> &mut dyn Target {
         match self {
             ChainTarget::FlyMc(p) => p,
@@ -24,6 +27,7 @@ impl ChainTarget {
         }
     }
 
+    /// Current bright count (None for the regular posterior).
     pub fn n_bright(&self) -> Option<usize> {
         match self {
             ChainTarget::FlyMc(p) => Some(p.n_bright()),
@@ -31,6 +35,7 @@ impl ChainTarget {
         }
     }
 
+    /// The query counters of the underlying backend (shared handle).
     pub fn counters(&self) -> crate::metrics::Counters {
         match self {
             ChainTarget::FlyMc(p) => p.eval.counters().clone(),
@@ -38,6 +43,7 @@ impl ChainTarget {
         }
     }
 
+    /// Full-data log posterior (uncounted Fig-4 instrumentation).
     pub fn true_log_posterior(&self, theta: &[f64]) -> f64 {
         match self {
             ChainTarget::FlyMc(p) => p.true_log_posterior(theta),
@@ -57,18 +63,25 @@ impl ChainTarget {
     }
 }
 
+/// Per-chain driver configuration.
 #[derive(Clone, Debug)]
 pub struct ChainConfig {
+    /// total iterations
     pub iters: usize,
+    /// burn-in iterations (excluded from the θ trace)
     pub burnin: usize,
     /// record the (expensive, uncounted) full-data log posterior every k
     /// iterations; 0 disables
     pub record_full_every: usize,
     /// thinning for the θ trace used by ESS
     pub thin: usize,
+    /// q_{d->b} for implicit (Alg 2) z-resampling
     pub q_dark_to_bright: f64,
+    /// use explicit (Alg 1) instead of implicit z-resampling
     pub explicit_resample: bool,
+    /// fraction of N redrawn per explicit sweep
     pub resample_fraction: f64,
+    /// RNG seed for this chain
     pub seed: u64,
 }
 
@@ -101,12 +114,26 @@ impl ChainConfig {
 /// `base ^ replica·odd` is injective and each splitmix64 output is a
 /// bijection of its input state — and scrambled so nearby bases and replica
 /// ids give uncorrelated xoshiro streams.
+///
+/// Deterministic: a replica's seed is a pure function of (base, replica),
+/// so multi-chain runs are reproducible at any thread cap.
+///
+/// ```
+/// use firefly::engine::derive_replica_seed;
+///
+/// // stable across calls ...
+/// assert_eq!(derive_replica_seed(7, 3), derive_replica_seed(7, 3));
+/// // ... distinct across replicas and bases
+/// assert_ne!(derive_replica_seed(7, 0), derive_replica_seed(7, 1));
+/// assert_ne!(derive_replica_seed(7, 0), derive_replica_seed(8, 0));
+/// ```
 pub fn derive_replica_seed(base: u64, replica: usize) -> u64 {
     let mut s = base ^ (replica as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
     let _ = splitmix64(&mut s); // extra scramble round; state advance is bijective
     splitmix64(&mut s)
 }
 
+/// Everything one chain records (see [`run_chain`]).
 #[derive(Clone, Debug, Default)]
 pub struct ChainResult {
     /// post-burnin θ samples (thinned), flat row-major
@@ -119,11 +146,17 @@ pub struct ChainResult {
     pub bright: Vec<usize>,
     /// likelihood queries per iteration
     pub queries_per_iter: Vec<u64>,
+    /// accepted θ-proposals
     pub accepted: usize,
+    /// total dark→bright z-flips
     pub z_brightened: usize,
+    /// total bright→dark z-flips
     pub z_darkened: usize,
+    /// wall-clock duration of the chain loop
     pub wallclock_secs: f64,
+    /// counter totals at chain end
     pub final_counters: CounterSnapshot,
+    /// the seed this chain ran with
     pub seed: u64,
 }
 

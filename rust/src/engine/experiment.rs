@@ -28,10 +28,6 @@ pub fn default_n(task: Task) -> usize {
     }
 }
 
-/// Build the tuned model + prior for a task. Returns the model (already
-/// MAP-tuned if requested), the prior, the MAP point (if tuned) and the
-/// number of likelihood queries the tuning cost (reported separately, as in
-/// the paper).
 /// Per-task default prior scale (paper: tuned on held-out performance).
 pub fn default_prior_scale(task: Task) -> f64 {
     match task {
@@ -41,6 +37,10 @@ pub fn default_prior_scale(task: Task) -> f64 {
     }
 }
 
+/// Build the tuned model + prior for a task. Returns the model (already
+/// MAP-tuned if requested), the prior, the MAP point (if tuned) and the
+/// number of likelihood queries the tuning cost (reported separately, as in
+/// the paper).
 pub fn build_model(
     cfg: &ExperimentConfig,
 ) -> (Arc<dyn XlaSource>, Arc<dyn Prior>, Option<Vec<f64>>, u64) {
@@ -161,12 +161,18 @@ pub fn build_chain(
     })
 }
 
+/// All chains of one experiment plus its setup costs.
 #[derive(Clone, Debug)]
 pub struct ExperimentResult {
+    /// the configuration the experiment ran with
     pub config: ExperimentConfig,
+    /// per-replica chain outputs (replica order)
     pub chains: Vec<ChainResult>,
+    /// likelihood queries spent on MAP tuning (one-time setup)
     pub map_lik_queries: u64,
+    /// wall-clock seconds of data/model/tuning setup
     pub setup_secs: f64,
+    /// dataset size N actually used
     pub n_data: usize,
 }
 
@@ -211,12 +217,17 @@ impl ExperimentResult {
 /// regular-MCMC row by the caller).
 #[derive(Clone, Debug)]
 pub struct TableRow {
+    /// algorithm label
     pub algorithm: String,
+    /// mean post-burnin likelihood queries per iteration (Table 1 col 1)
     pub avg_lik_queries_per_iter: f64,
+    /// minimum component-wise ESS per 1000 iterations
     pub ess_per_1000: f64,
+    /// mean post-burnin bright count M (NaN for regular MCMC)
     pub avg_bright: f64,
     /// worst-component split-R̂ across replica chains (NaN for 1 chain)
     pub split_rhat: f64,
+    /// mean wall-clock seconds per chain
     pub wallclock_secs: f64,
 }
 
@@ -227,6 +238,7 @@ impl TableRow {
         self.ess_per_1000 / (self.avg_lik_queries_per_iter * 1000.0)
     }
 
+    /// Efficiency ratio against the regular-MCMC row (the paper's speedup).
     pub fn speedup_vs(&self, regular: &TableRow) -> f64 {
         self.efficiency() / regular.efficiency()
     }

@@ -28,6 +28,7 @@ use crate::samplers::Sampler;
 /// Cross-chain summary computed from R replica chains.
 #[derive(Clone, Debug)]
 pub struct MultiChainSummary {
+    /// number of replica chains summarized
     pub replicas: usize,
     /// worst (max over θ components) split-R̂ across replicas
     pub split_rhat_max: f64,

@@ -5,6 +5,25 @@
 //! position of datum n inside `arr`. `brighten`/`darken` are a swap + two
 //! table updates; `ith_bright`/`ith_dark`/`is_bright` are direct lookups.
 
+/// O(1) bright/dark membership structure over data indices 0..N (see the
+/// module docs for the permutation/table layout).
+///
+/// `brighten`/`darken` are idempotent O(1) flips, and the bright set is
+/// always readable as a contiguous `u32` prefix without copying:
+///
+/// ```
+/// use firefly::flymc::BrightSet;
+///
+/// let mut z = BrightSet::new(5); // all dark
+/// z.brighten(3);
+/// z.brighten(3); // idempotent
+/// assert!(z.is_bright(3));
+/// assert_eq!(z.n_bright(), 1);
+/// assert_eq!(z.bright_slice(), &[3]); // the u32 prefix, no copy
+/// z.darken(3);
+/// assert_eq!(z.n_bright(), 0);
+/// assert_eq!(z.n_dark(), 5);
+/// ```
 #[derive(Clone, Debug)]
 pub struct BrightSet {
     arr: Vec<u32>,
@@ -23,26 +42,31 @@ impl BrightSet {
         }
     }
 
+    /// Total number of data points N.
     #[inline]
     pub fn len(&self) -> usize {
         self.arr.len()
     }
 
+    /// Whether the structure tracks zero data points.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.arr.is_empty()
     }
 
+    /// Number of bright points M.
     #[inline]
     pub fn n_bright(&self) -> usize {
         self.nb
     }
 
+    /// Number of dark points N - M.
     #[inline]
     pub fn n_dark(&self) -> usize {
         self.arr.len() - self.nb
     }
 
+    /// Whether datum `n` is currently bright (z_n = 1).
     #[inline]
     pub fn is_bright(&self, n: usize) -> bool {
         (self.tab[n] as usize) < self.nb

@@ -13,9 +13,9 @@
 //!
 //! ## Zero-allocation hot path
 //!
-//! Steady-state iterations with a gradient-free θ-sampler (random-walk MH)
-//! perform no heap allocation (the gradient path still allocates inside
-//! the models' `grad_log_bound_product_acc` — see DESIGN.md §Perf):
+//! Steady-state iterations with **any** of the paper's θ-samplers —
+//! gradient-free (random-walk MH, slice) *and* gradient-based (MALA) —
+//! perform no heap allocation:
 //!
 //! * the bright index set reaches the backend as
 //!   [`BrightSet::bright_slice`] — the `u32` prefix of the set's own
@@ -23,13 +23,21 @@
 //! * every buffer the θ-eval and z-resampling paths write (`memo_*`,
 //!   `scratch_*`) is owned by the posterior and reserved to its worst-case
 //!   size (N elements) at construction, so `clear`/`extend` never reallocate;
+//! * the gradient path writes into caller-owned buffers end to end:
+//!   [`Target::grad_log_density`](crate::samplers::Target::grad_log_density)
+//!   fills the sampler-owned `grad` slice, the backends accumulate per-datum
+//!   gradients through their own [`EvalScratch`] arenas, and the collapsed
+//!   bound-product gradient uses the posterior-owned scratch instead of a
+//!   dim-sized temporary;
 //! * the base density (prior + collapsed bound product) is one pass over a
 //!   cached [`PackedQuadForm`] whenever the model exposes its collapse as a
 //!   quadratic and the prior is an isotropic Gaussian (logistic/robust +
-//!   IsoGaussian); otherwise it falls back to the two-call form.
+//!   IsoGaussian); otherwise it falls back to the two-call form, which is
+//!   also allocation-free (softmax evaluates through the same scratch).
 //!
-//! The invariant is enforced by a counting-allocator test in
-//! `rust/tests/integration_hotpath.rs` and tracked by `benches/hotpath.rs`.
+//! The invariant is enforced per paper task by counting-allocator tests
+//! (`rust/tests/integration_hotpath*.rs`, one binary per scenario because
+//! the counter is process-global) and tracked by `benches/hotpath.rs`.
 //!
 //! [`FullPosterior`] is the regular-MCMC baseline: log p(θ) + Σ_n log L_n
 //! evaluated over all N data at every query.
@@ -38,22 +46,31 @@ use std::sync::Arc;
 
 use super::bright_set::BrightSet;
 use crate::linalg::PackedQuadForm;
-use crate::models::{log_pseudo_lik, p_bright, ModelBound, Prior};
+use crate::models::{log_pseudo_lik, p_bright, EvalScratch, ModelBound, Prior};
 use crate::runtime::evaluator::BatchEval;
 use crate::samplers::target::Target;
 
 /// Outcome of one z-resampling sweep.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ZStats {
+    /// z-flips proposed this sweep
     pub proposals: usize,
+    /// dark→bright transitions accepted
     pub brightened: usize,
+    /// bright→dark transitions accepted
     pub darkened: usize,
 }
 
+/// The FlyMC augmented posterior over θ conditioned on the brightness
+/// vector z (paper Eq. 2) — see the module docs for the invariants.
 pub struct PseudoPosterior {
+    /// likelihood + collapsible bound
     pub model: Arc<dyn ModelBound>,
+    /// prior over the flattened parameter vector
     pub prior: Arc<dyn Prior>,
+    /// likelihood evaluation backend
     pub eval: Box<dyn BatchEval>,
+    /// the O(1) bright/dark index structure
     pub bright: BrightSet,
     theta: Vec<f64>,
     /// per-datum cached log L / log B at the committed theta (valid where bright)
@@ -76,6 +93,10 @@ pub struct PseudoPosterior {
     scratch_bright: Vec<u32>,
     scratch_ll: Vec<f64>,
     scratch_lb: Vec<f64>,
+    /// model-evaluation scratch for the posterior's own direct model calls
+    /// (collapsed bound-product value/gradient on the non-quadratic base
+    /// path) — allocated once here so the gradient path never allocates
+    model_scratch: EvalScratch,
     version: u64,
 }
 
@@ -91,6 +112,7 @@ impl PseudoPosterior {
         let n = model.n();
         let dim = model.dim();
         assert_eq!(theta0.len(), dim);
+        let mut model_scratch = model.new_scratch();
         let base_quad = model.collapsed_quadratic().and_then(|(a, b, c)| {
             prior.iso_quadratic(dim).map(|(pa, pc)| {
                 let mut q = PackedQuadForm::from_symmetric(a, b, c + pc);
@@ -100,7 +122,9 @@ impl PseudoPosterior {
         });
         let base = match &base_quad {
             Some(q) => q.eval(&theta0),
-            None => prior.log_density(&theta0) + model.log_bound_product(&theta0),
+            None => {
+                prior.log_density(&theta0) + model.log_bound_product(&theta0, &mut model_scratch)
+            }
         };
         PseudoPosterior {
             model,
@@ -123,14 +147,17 @@ impl PseudoPosterior {
             scratch_bright: Vec::with_capacity(n),
             scratch_ll: Vec::with_capacity(n),
             scratch_lb: Vec::with_capacity(n),
+            model_scratch,
             version: 0,
         }
     }
 
+    /// The committed chain state.
     pub fn theta(&self) -> &[f64] {
         &self.theta
     }
 
+    /// Current number of bright points M (the paper's per-iteration cost).
     pub fn n_bright(&self) -> usize {
         self.bright.n_bright()
     }
@@ -164,12 +191,31 @@ impl PseudoPosterior {
     }
 
     /// Prior + collapsed-bound log density at `theta` — a single pass over
-    /// the cached packed quadratic when available.
-    fn base_at(&self, theta: &[f64]) -> f64 {
+    /// the cached packed quadratic when available, and the allocation-free
+    /// two-call form (through the posterior-owned scratch) otherwise.
+    fn base_at(&mut self, theta: &[f64]) -> f64 {
         self.eval.counters().add_collapsed(1);
-        match &self.base_quad {
+        Self::base_density(
+            &self.base_quad,
+            &*self.prior,
+            &*self.model,
+            &mut self.model_scratch,
+            theta,
+        )
+    }
+
+    /// [`Self::base_at`] over explicitly-borrowed fields, so callers holding
+    /// other borrows of `self` (e.g. `&self.theta`) can still evaluate.
+    fn base_density(
+        base_quad: &Option<PackedQuadForm>,
+        prior: &dyn Prior,
+        model: &dyn ModelBound,
+        scratch: &mut EvalScratch,
+        theta: &[f64],
+    ) -> f64 {
+        match base_quad {
             Some(q) => q.eval(theta),
-            None => self.prior.log_density(theta) + self.model.log_bound_product(theta),
+            None => prior.log_density(theta) + model.log_bound_product(theta, scratch),
         }
     }
 
@@ -213,11 +259,13 @@ impl PseudoPosterior {
     }
 
     /// Full-data log posterior (instrumentation only: NOT counted as
-    /// queries, used for the Fig-4 convergence traces).
+    /// queries, used for the Fig-4 convergence traces; allocates its own
+    /// scratch, so it is deliberately NOT part of the zero-alloc hot path).
     pub fn true_log_posterior(&self, theta: &[f64]) -> f64 {
+        let mut scratch = self.model.new_scratch();
         let mut acc = self.prior.log_density(theta);
         for n in 0..self.model.n() {
-            acc += self.model.log_lik(theta, n);
+            acc += self.model.log_lik(theta, n, &mut scratch);
         }
         acc
     }
@@ -338,7 +386,14 @@ impl PseudoPosterior {
             .zip(&self.scratch_lb)
             .map(|(&l, &b)| log_pseudo_lik(l, b))
             .sum();
-        let base = self.base_at(&self.theta);
+        self.eval.counters().add_collapsed(1);
+        let base = Self::base_density(
+            &self.base_quad,
+            &*self.prior,
+            &*self.model,
+            &mut self.model_scratch,
+            &self.theta,
+        );
         self.pseudo_sum = pseudo;
         self.base = base;
         base + pseudo
@@ -377,7 +432,7 @@ impl Target for PseudoPosterior {
             .sum();
         let base = self.base_at(theta);
         self.prior.grad_acc(theta, grad);
-        self.model.grad_log_bound_product_acc(theta, grad);
+        self.model.grad_log_bound_product_acc(theta, grad, &mut self.model_scratch);
         self.memo_theta.clear();
         self.memo_theta.extend_from_slice(theta);
         self.memo_pseudo_sum = pseudo;
@@ -410,8 +465,11 @@ impl Target for PseudoPosterior {
 /// Regular full-data posterior (the paper's baseline): every evaluation
 /// queries all N likelihoods.
 pub struct FullPosterior {
+    /// the likelihood model (bounds unused on this baseline)
     pub model: Arc<dyn ModelBound>,
+    /// prior over the flattened parameter vector
     pub prior: Arc<dyn Prior>,
+    /// likelihood evaluation backend
     pub eval: Box<dyn BatchEval>,
     idx_all: Vec<u32>,
     theta: Vec<f64>,
@@ -423,6 +481,8 @@ pub struct FullPosterior {
 }
 
 impl FullPosterior {
+    /// Build the baseline posterior and evaluate it at `theta0` (costs N
+    /// likelihood queries).
     pub fn new(
         model: Arc<dyn ModelBound>,
         prior: Arc<dyn Prior>,
@@ -448,14 +508,17 @@ impl FullPosterior {
         }
     }
 
+    /// The committed chain state.
     pub fn theta(&self) -> &[f64] {
         &self.theta
     }
 
+    /// Full-data log posterior (instrumentation; allocates its own scratch).
     pub fn true_log_posterior(&self, theta: &[f64]) -> f64 {
+        let mut scratch = self.model.new_scratch();
         let mut acc = self.prior.log_density(theta);
         for n in 0..self.model.n() {
-            acc += self.model.log_lik(theta, n);
+            acc += self.model.log_lik(theta, n, &mut scratch);
         }
         acc
     }
@@ -573,14 +636,15 @@ mod tests {
             let counters = Counters::new();
             let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
             let theta0: Vec<f64> = (0..model.dim()).map(|_| rng.normal() * 0.3).collect();
-            let pp = PseudoPosterior::new(model.clone(), prior.clone(), eval, theta0);
+            let mut pp = PseudoPosterior::new(model.clone(), prior.clone(), eval, theta0);
             assert_eq!(pp.base_quad.is_some(), gaussian);
+            let mut sc = model.new_scratch();
             for _ in 0..10 {
                 let theta: Vec<f64> =
                     (0..model.dim()).map(|_| rng.normal() * 0.5).collect();
                 let fused = pp.base_at(&theta);
                 let direct =
-                    prior.log_density(&theta) + model.log_bound_product(&theta);
+                    prior.log_density(&theta) + model.log_bound_product(&theta, &mut sc);
                 assert!(
                     (fused - direct).abs() < 1e-8 * (1.0 + direct.abs()),
                     "fused {fused} vs direct {direct}"
@@ -626,9 +690,10 @@ mod tests {
             }
         }
         let theta = pp.theta().to_vec();
+        let mut sc = pp.model.new_scratch();
         let mut max_err: f64 = 0.0;
         for i in 0..n {
-            let (ll, lb) = pp.model.log_both(&theta, i);
+            let (ll, lb) = pp.model.log_both(&theta, i, &mut sc);
             let p = p_bright(ll, lb);
             let emp = freq[i] as f64 / sweeps as f64;
             max_err = max_err.max((emp - p).abs());

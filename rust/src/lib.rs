@@ -5,33 +5,51 @@
 //! Pallas system: the MCMC coordinator, data structures, samplers and
 //! diagnostics live in Rust; the likelihood/bound hot spot is a Pallas
 //! kernel inside a JAX graph, AOT-lowered to HLO and executed through
-//! PJRT (`runtime::XlaBackend`, behind the `xla` feature) with pure-Rust
-//! fallbacks: the serial reference `runtime::CpuBackend` and the sharded
-//! data-parallel `runtime::ParBackend` (bit-identical outputs, identical
+//! PJRT ([`runtime::XlaBackend`], behind the `xla` feature) with pure-Rust
+//! fallbacks: the serial reference [`runtime::CpuBackend`] and the sharded
+//! data-parallel [`runtime::ParBackend`] (bit-identical outputs, identical
 //! query counts). Python never runs on the sampling path. R replica chains
-//! run concurrently through `engine::multi_chain`, which reports split-R̂
+//! run concurrently through [`engine::multi_chain`], which reports split-R̂
 //! and pooled ESS across replicas (`--chains`/`--threads` on the CLI).
+//!
+//! Steady-state FlyMC iterations — every paper sampler (random-walk MH,
+//! MALA, slice) on every model (logistic, softmax, robust) — perform
+//! **zero heap allocations** on the CPU backends: samplers, posterior and
+//! backends own reusable buffers reserved up front, and the model
+//! evaluation contract threads a caller-owned scratch arena
+//! ([`models::EvalScratch`]) through every per-datum call (DESIGN.md
+//! §Perf; enforced by counting-allocator tests and tracked by
+//! `benches/hotpath.rs`).
 //!
 //! ## Quick start
 //!
-//! ```no_run
+//! A complete (tiny) experiment runs in milliseconds:
+//!
+//! ```
 //! use firefly::configx::{Algorithm, ExperimentConfig, Task};
 //! use firefly::engine::run_experiment;
 //!
 //! let cfg = ExperimentConfig {
-//!     task: Task::LogisticMnist,
-//!     algorithm: Algorithm::MapTunedFlyMc,
-//!     iters: 2000,
-//!     burnin: 500,
+//!     task: Task::Toy,             // 2-d synthetic logistic task
+//!     algorithm: Algorithm::UntunedFlyMc,
+//!     n_data: Some(60),
+//!     iters: 30,
+//!     burnin: 10,
+//!     record_every: 0,
 //!     ..Default::default()
 //! };
 //! let result = run_experiment(&cfg).unwrap();
 //! let row = result.table_row();
-//! println!("lik queries/iter: {:.0}", row.avg_lik_queries_per_iter);
+//! // FlyMC queries the bright subset (plus the z-sweep), never a fixed N
+//! // per evaluation — the per-iteration cost is data-dependent but finite.
+//! assert!(row.avg_lik_queries_per_iter.is_finite());
+//! assert!(row.avg_bright.is_finite());
 //! ```
 //!
-//! See `examples/` for the three paper experiments and DESIGN.md for the
-//! architecture and experiment index.
+//! See `examples/` for the three paper experiments at real scale and
+//! DESIGN.md for the architecture and experiment index.
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod cli;
@@ -57,7 +75,8 @@ pub mod prelude {
     };
     pub use crate::flymc::{BrightSet, FullPosterior, PseudoPosterior};
     pub use crate::models::{
-        IsoGaussian, Laplace, LogisticJJ, ModelBound, Prior, RobustT, SoftmaxBohning,
+        EvalScratch, IsoGaussian, Laplace, LogisticJJ, ModelBound, Prior, RobustT,
+        SoftmaxBohning,
     };
     pub use crate::samplers::{Mala, RandomWalkMh, Sampler, SliceSampler, Target};
     pub use crate::util::Rng;

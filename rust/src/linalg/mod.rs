@@ -9,16 +9,21 @@
 /// Row-major dense matrix of f64.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
+    /// number of rows
     pub rows: usize,
+    /// number of columns
     pub cols: usize,
+    /// row-major storage, `rows * cols` elements
     pub data: Vec<f64>,
 }
 
 impl Matrix {
+    /// All-zero `rows x cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Matrix from a list of equal-length rows.
     pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
         let r = rows.len();
         let c = if r > 0 { rows[0].len() } else { 0 };
@@ -30,11 +35,13 @@ impl Matrix {
         Matrix { rows: r, cols: c, data }
     }
 
+    /// Matrix over pre-flattened row-major storage.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Matrix { rows, cols, data }
     }
 
+    /// The n x n identity.
     pub fn identity(n: usize) -> Self {
         let mut m = Matrix::zeros(n, n);
         for i in 0..n {
@@ -43,11 +50,13 @@ impl Matrix {
         m
     }
 
+    /// Row `i` as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
@@ -90,6 +99,7 @@ impl Matrix {
         c
     }
 
+    /// The transposed matrix (new allocation).
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -220,6 +230,7 @@ impl PackedQuadForm {
         PackedQuadForm { n, tri, lin: b.to_vec(), c }
     }
 
+    /// Dimension n of the quadratic form.
     pub fn dim(&self) -> usize {
         self.n
     }

@@ -9,14 +9,22 @@
 use crate::models::{ModelBound, Prior};
 use crate::util::Rng;
 
+/// Minibatch-Adam configuration for the MAP pre-pass.
 #[derive(Clone, Debug)]
 pub struct MapConfig {
+    /// number of Adam steps
     pub steps: usize,
+    /// minibatch size (clamped to N)
     pub batch: usize,
+    /// base learning rate (decays as 1/sqrt(t))
     pub lr: f64,
+    /// Adam first-moment decay
     pub beta1: f64,
+    /// Adam second-moment decay
     pub beta2: f64,
+    /// Adam denominator stabilizer
     pub eps: f64,
+    /// minibatch-sampling seed
     pub seed: u64,
 }
 
@@ -34,10 +42,14 @@ impl Default for MapConfig {
     }
 }
 
+/// Output of [`map_estimate`].
 #[derive(Clone, Debug)]
 pub struct MapResult {
+    /// the approximate MAP point
     pub theta: Vec<f64>,
+    /// likelihood queries spent (one-time setup cost, reported separately)
     pub lik_queries: u64,
+    /// last minibatch estimate of the log posterior
     pub final_log_post_estimate: f64,
 }
 
@@ -46,6 +58,7 @@ pub fn map_estimate(model: &dyn ModelBound, prior: &dyn Prior, cfg: &MapConfig) 
     let dim = model.dim();
     let n = model.n();
     let mut rng = Rng::new(cfg.seed);
+    let mut scratch = model.new_scratch();
     let mut theta = vec![0.0; dim];
     let mut m = vec![0.0; dim];
     let mut v = vec![0.0; dim];
@@ -60,8 +73,8 @@ pub fn map_estimate(model: &dyn ModelBound, prior: &dyn Prior, cfg: &MapConfig) 
         let mut batch_ll = 0.0;
         for _ in 0..batch {
             let i = rng.below(n);
-            model.log_lik_grad_acc(&theta, i, &mut grad);
-            batch_ll += model.log_lik(&theta, i);
+            model.log_lik_grad_acc(&theta, i, &mut grad, &mut scratch);
+            batch_ll += model.log_lik(&theta, i, &mut scratch);
             queries += 1;
         }
         for g in grad.iter_mut() {
@@ -100,10 +113,11 @@ mod tests {
         let prior = IsoGaussian { scale: 2.0 };
         let cfg = MapConfig { steps: 300, ..Default::default() };
         let res = map_estimate(&model, &prior, &cfg);
-        let full = |theta: &[f64]| {
+        let mut sc = crate::models::ModelBound::new_scratch(&model);
+        let mut full = |theta: &[f64]| {
             let mut acc = prior.log_density(theta);
             for i in 0..2000 {
-                acc += crate::models::ModelBound::log_lik(&model, theta, i);
+                acc += crate::models::ModelBound::log_lik(&model, theta, i, &mut sc);
             }
             acc
         };

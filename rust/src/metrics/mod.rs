@@ -32,43 +32,54 @@ struct CounterCells {
 }
 
 impl Counters {
+    /// Fresh zeroed counters (clones share the same cells).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count `n` likelihood queries.
     #[inline]
     pub fn add_lik(&self, n: u64) {
         self.inner.lik_queries.fetch_add(n, Relaxed);
     }
+    /// Count `n` pointwise bound queries.
     #[inline]
     pub fn add_bound(&self, n: u64) {
         self.inner.bound_queries.fetch_add(n, Relaxed);
     }
+    /// Count `n` collapsed bound-product evaluations (O(1) in N).
     #[inline]
     pub fn add_collapsed(&self, n: u64) {
         self.inner.collapsed_bound_evals.fetch_add(n, Relaxed);
     }
+    /// Count `n` XLA executable launches.
     #[inline]
     pub fn add_xla_exec(&self, n: u64) {
         self.inner.xla_executions.fetch_add(n, Relaxed);
     }
+    /// Count `n` padded (masked-out) batch lanes.
     #[inline]
     pub fn add_padded(&self, n: u64) {
         self.inner.padded_lanes.fetch_add(n, Relaxed);
     }
 
+    /// Total likelihood queries so far.
     pub fn lik_queries(&self) -> u64 {
         self.inner.lik_queries.load(Relaxed)
     }
+    /// Total pointwise bound queries so far.
     pub fn bound_queries(&self) -> u64 {
         self.inner.bound_queries.load(Relaxed)
     }
+    /// Total collapsed bound-product evaluations so far.
     pub fn collapsed_bound_evals(&self) -> u64 {
         self.inner.collapsed_bound_evals.load(Relaxed)
     }
+    /// Total XLA executable launches so far.
     pub fn xla_executions(&self) -> u64 {
         self.inner.xla_executions.load(Relaxed)
     }
+    /// Total padded batch lanes so far.
     pub fn padded_lanes(&self) -> u64 {
         self.inner.padded_lanes.load(Relaxed)
     }
@@ -83,6 +94,7 @@ impl Counters {
         }
     }
 
+    /// Zero every counter (shared across clones).
     pub fn reset(&self) {
         self.inner.lik_queries.store(0, Relaxed);
         self.inner.bound_queries.store(0, Relaxed);
@@ -92,15 +104,21 @@ impl Counters {
     }
 }
 
+/// Point-in-time copy of the counters, for per-iteration deltas.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CounterSnapshot {
+    /// likelihood queries at snapshot time
     pub lik_queries: u64,
+    /// pointwise bound queries at snapshot time
     pub bound_queries: u64,
+    /// collapsed bound-product evaluations at snapshot time
     pub collapsed_bound_evals: u64,
+    /// XLA executable launches at snapshot time
     pub xla_executions: u64,
 }
 
 impl CounterSnapshot {
+    /// Counter increments between `self` and the `later` snapshot.
     pub fn delta(&self, later: &CounterSnapshot) -> CounterSnapshot {
         CounterSnapshot {
             lik_queries: later.lik_queries - self.lik_queries,
@@ -115,17 +133,26 @@ impl CounterSnapshot {
 /// queries). Fixed-width bins; used by the bench reports.
 #[derive(Clone, Debug)]
 pub struct Histogram {
+    /// inclusive lower edge of the binned range
     pub lo: f64,
+    /// exclusive upper edge of the binned range
     pub hi: f64,
+    /// fixed-width bin counts over [lo, hi)
     pub bins: Vec<u64>,
+    /// samples below `lo`
     pub underflow: u64,
+    /// samples at or above `hi`
     pub overflow: u64,
+    /// total samples recorded (including under/overflow)
     pub count: u64,
+    /// running sum of samples
     pub sum: f64,
+    /// running sum of squared samples
     pub sum_sq: f64,
 }
 
 impl Histogram {
+    /// Histogram with `nbins` equal bins over [lo, hi).
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
         assert!(hi > lo && nbins > 0);
         Histogram {
@@ -140,6 +167,7 @@ impl Histogram {
         }
     }
 
+    /// Record one sample.
     pub fn record(&mut self, x: f64) {
         self.count += 1;
         self.sum += x;
@@ -155,6 +183,7 @@ impl Histogram {
         }
     }
 
+    /// Mean of all recorded samples (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             f64::NAN
@@ -163,6 +192,7 @@ impl Histogram {
         }
     }
 
+    /// Population standard deviation (NaN with < 2 samples).
     pub fn std(&self) -> f64 {
         if self.count < 2 {
             return f64::NAN;

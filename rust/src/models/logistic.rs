@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use super::{bright_coeff, ModelBound, ModelKind};
+use super::{bright_coeff, EvalScratch, ModelBound, ModelKind};
 use crate::data::LogisticData;
 use crate::linalg::{axpy, dot, Matrix};
 use crate::util::math::{log1p_exp, log_sigmoid, sigmoid};
@@ -28,7 +28,10 @@ pub fn jj_coeffs(xi: f64) -> (f64, f64, f64) {
     (a, 0.5, c)
 }
 
+/// Logistic-regression likelihood with the Jaakkola–Jordan lower bound
+/// (the paper's MNIST experiment model).
 pub struct LogisticJJ {
+    /// the binary-classification dataset (features + ±1 labels)
     pub data: Arc<LogisticData>,
     /// per-datum bound anchor xi_n (paper: 1.5 untuned; |theta_MAP^T x_n| tuned)
     pub xi: Vec<f64>,
@@ -88,17 +91,23 @@ impl ModelBound for LogisticJJ {
         ModelKind::Logistic
     }
 
-    fn log_lik(&self, theta: &[f64], n: usize) -> f64 {
+    fn log_lik(&self, theta: &[f64], n: usize, _scratch: &mut EvalScratch) -> f64 {
         log_sigmoid(self.s(theta, n))
     }
 
-    fn log_lik_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+    fn log_lik_grad_acc(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        _scratch: &mut EvalScratch,
+    ) {
         let s = self.s(theta, n);
         let coeff = sigmoid(-s) * self.data.t[n];
         axpy(coeff, self.data.x.row(n), grad);
     }
 
-    fn log_both(&self, theta: &[f64], n: usize) -> (f64, f64) {
+    fn log_both(&self, theta: &[f64], n: usize, _scratch: &mut EvalScratch) -> (f64, f64) {
         let s = self.s(theta, n);
         let ll = log_sigmoid(s);
         let (a, b, c) = jj_coeffs(self.xi[n]);
@@ -106,7 +115,13 @@ impl ModelBound for LogisticJJ {
         (ll, lb)
     }
 
-    fn pseudo_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+    fn pseudo_grad_acc(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        _scratch: &mut EvalScratch,
+    ) {
         let s = self.s(theta, n);
         let ll = log_sigmoid(s);
         let (a, b, c) = jj_coeffs(self.xi[n]);
@@ -117,7 +132,13 @@ impl ModelBound for LogisticJJ {
         axpy(coeff, self.data.x.row(n), grad);
     }
 
-    fn log_both_pseudo_grad(&self, theta: &[f64], n: usize, grad: &mut [f64]) -> (f64, f64) {
+    fn log_both_pseudo_grad(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        _scratch: &mut EvalScratch,
+    ) -> (f64, f64) {
         let s = self.s(theta, n);
         let ll = log_sigmoid(s);
         let (a, b, c) = jj_coeffs(self.xi[n]);
@@ -129,15 +150,20 @@ impl ModelBound for LogisticJJ {
         (ll, lb)
     }
 
-    fn log_bound_product(&self, theta: &[f64]) -> f64 {
+    fn log_bound_product(&self, theta: &[f64], _scratch: &mut EvalScratch) -> f64 {
         self.a_mat.quad_form(theta) + dot(&self.b_vec, theta) + self.c_sum
     }
 
-    fn grad_log_bound_product_acc(&self, theta: &[f64], grad: &mut [f64]) {
+    fn grad_log_bound_product_acc(
+        &self,
+        theta: &[f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
         // d/dtheta [theta^T A theta + b^T theta] = 2 A theta + b (A symmetric)
         let d = theta.len();
-        let mut ax = vec![0.0; d];
-        self.a_mat.matvec(theta, &mut ax);
+        let ax = &mut scratch.acc[..d];
+        self.a_mat.matvec(theta, ax);
         for i in 0..d {
             grad[i] += 2.0 * ax[i] + self.b_vec[i];
         }
@@ -170,6 +196,7 @@ mod tests {
     #[test]
     fn bound_below_likelihood_everywhere() {
         let m = small();
+        let mut sc = m.new_scratch();
         testing::check(
             "jj bound <= lik",
             200,
@@ -179,7 +206,7 @@ mod tests {
                 (theta, n)
             },
             |(theta, n)| {
-                let (ll, lb) = m.log_both(theta, *n);
+                let (ll, lb) = m.log_both(theta, *n, &mut sc);
                 lb <= ll && lb.is_finite()
             },
         );
@@ -191,8 +218,9 @@ mod tests {
         let mut rng = Rng::new(2);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
         m.tune_anchors_map(&theta);
+        let mut sc = m.new_scratch();
         for n in 0..m.n() {
-            let (ll, lb) = m.log_both(&theta, n);
+            let (ll, lb) = m.log_both(&theta, n, &mut sc);
             assert!((ll - lb).abs() < 1e-10, "n={n}: {ll} vs {lb}");
         }
     }
@@ -200,6 +228,7 @@ mod tests {
     #[test]
     fn collapsed_product_matches_pointwise_sum() {
         let m = small();
+        let mut sc = m.new_scratch();
         testing::check_msg(
             "collapse == sum of bounds",
             25,
@@ -212,7 +241,7 @@ mod tests {
                     let (a, b, c) = jj_coeffs(m.xi[n]);
                     sum += a * s * s + b * s + c;
                 }
-                let col = m.log_bound_product(theta);
+                let col = m.log_bound_product(theta, &mut sc);
                 if (sum - col).abs() < 1e-8 * (1.0 + sum.abs()) {
                     Ok(())
                 } else {
@@ -225,17 +254,18 @@ mod tests {
     #[test]
     fn collapsed_grad_matches_fd() {
         let m = small();
+        let mut sc = m.new_scratch();
         let mut rng = Rng::new(3);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
         let mut g = vec![0.0; m.dim()];
-        m.grad_log_bound_product_acc(&theta, &mut g);
+        m.grad_log_bound_product_acc(&theta, &mut g, &mut sc);
         let h = 1e-6;
         let mut tp = theta.clone();
         for i in 0..m.dim() {
             tp[i] = theta[i] + h;
-            let fp = m.log_bound_product(&tp);
+            let fp = m.log_bound_product(&tp, &mut sc);
             tp[i] = theta[i] - h;
-            let fm = m.log_bound_product(&tp);
+            let fm = m.log_bound_product(&tp, &mut sc);
             tp[i] = theta[i];
             let fd = (fp - fm) / (2.0 * h);
             assert!((g[i] - fd).abs() < 1e-4 * (1.0 + fd.abs()), "i={i}: {} vs {fd}", g[i]);
@@ -245,18 +275,19 @@ mod tests {
     #[test]
     fn lik_grad_matches_fd() {
         let m = small();
+        let mut sc = m.new_scratch();
         let mut rng = Rng::new(4);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
         for n in [0, 7, 100] {
             let mut g = vec![0.0; m.dim()];
-            m.log_lik_grad_acc(&theta, n, &mut g);
+            m.log_lik_grad_acc(&theta, n, &mut g, &mut sc);
             let h = 1e-6;
             let mut tp = theta.clone();
             for i in 0..m.dim() {
                 tp[i] = theta[i] + h;
-                let fp = m.log_lik(&tp, n);
+                let fp = m.log_lik(&tp, n, &mut sc);
                 tp[i] = theta[i] - h;
-                let fm = m.log_lik(&tp, n);
+                let fm = m.log_lik(&tp, n, &mut sc);
                 tp[i] = theta[i];
                 let fd = (fp - fm) / (2.0 * h);
                 assert!((g[i] - fd).abs() < 1e-5, "n={n} i={i}");
@@ -267,22 +298,23 @@ mod tests {
     #[test]
     fn pseudo_grad_matches_fd() {
         let m = small();
+        let mut sc = m.new_scratch();
         let mut rng = Rng::new(5);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
         for n in [1, 13, 55] {
             let mut g = vec![0.0; m.dim()];
-            m.pseudo_grad_acc(&theta, n, &mut g);
-            let f = |t: &[f64]| {
-                let (ll, lb) = m.log_both(t, n);
+            m.pseudo_grad_acc(&theta, n, &mut g, &mut sc);
+            let mut f = |t: &[f64], sc: &mut crate::models::EvalScratch| {
+                let (ll, lb) = m.log_both(t, n, sc);
                 super::super::log_pseudo_lik(ll, lb)
             };
             let h = 1e-6;
             let mut tp = theta.clone();
             for i in 0..m.dim() {
                 tp[i] = theta[i] + h;
-                let fp = f(&tp);
+                let fp = f(&tp, &mut sc);
                 tp[i] = theta[i] - h;
-                let fm = f(&tp);
+                let fm = f(&tp, &mut sc);
                 tp[i] = theta[i];
                 let fd = (fp - fm) / (2.0 * h);
                 assert!(

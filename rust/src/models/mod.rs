@@ -26,17 +26,60 @@ pub use softmax::SoftmaxBohning;
 /// Which XLA artifact family a model maps to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelKind {
+    /// Logistic regression + Jaakkola–Jordan bound ([`LogisticJJ`]).
     Logistic,
+    /// Softmax classification + Böhning bound ([`SoftmaxBohning`]).
     Softmax,
+    /// Student-t regression + tangent bound ([`RobustT`]).
     Robust,
 }
 
 impl ModelKind {
+    /// The manifest / artifact-name spelling of the kind.
     pub fn as_str(&self) -> &'static str {
         match self {
             ModelKind::Logistic => "logistic",
             ModelKind::Softmax => "softmax",
             ModelKind::Robust => "robust",
+        }
+    }
+}
+
+/// Reusable scratch buffers for model evaluations, owned by the caller
+/// (backends allocate one per evaluator/shard at construction; samplers and
+/// the pseudo-posterior own their own).
+///
+/// Every per-datum and collapsed evaluation method on [`ModelBound`] takes a
+/// `&mut EvalScratch` instead of allocating temporaries, which is what makes
+/// steady-state FlyMC iterations — including the gradient path (MALA on
+/// softmax) — perform **zero heap allocations** (DESIGN.md §Perf). Buffer
+/// contents are unspecified on entry: implementations must overwrite before
+/// reading, and callers must not rely on contents across calls.
+///
+/// The buffers are sized for the worst consumer at construction
+/// ([`EvalScratch::sized`] / [`ModelBound::new_scratch`]); methods only
+/// slice into them, so no call ever reallocates.
+#[derive(Clone, Debug)]
+pub struct EvalScratch {
+    /// per-class logit buffer (softmax η), length `n_classes`
+    pub(crate) eta: Vec<f64>,
+    /// per-class bound-gradient buffer (softmax d log B / d η), length `n_classes`
+    pub(crate) dlb: Vec<f64>,
+    /// dim-sized accumulator (`A·θ` matvecs; softmax `Θ·S` rows)
+    pub(crate) acc: Vec<f64>,
+    /// dim-sized column buffer (softmax class-sum / column-mean vectors)
+    pub(crate) col: Vec<f64>,
+}
+
+impl EvalScratch {
+    /// Scratch sized for a model of `dim` flattened parameters and
+    /// `classes` softmax classes (1 for non-softmax models).
+    pub fn sized(dim: usize, classes: usize) -> Self {
+        EvalScratch {
+            eta: vec![0.0; classes],
+            dlb: vec![0.0; classes],
+            acc: vec![0.0; dim],
+            col: vec![0.0; dim],
         }
     }
 }
@@ -47,41 +90,88 @@ impl ModelKind {
 /// `theta` is always the flattened parameter vector (`K*D` row-major for
 /// softmax). Gradient methods *accumulate* into `grad` so callers can sum
 /// over data points without temporaries.
+///
+/// ## Allocation contract
+///
+/// Every evaluation method takes a caller-owned [`EvalScratch`] (create one
+/// per evaluator/thread with [`Self::new_scratch`]) and must not allocate:
+/// these methods sit inside the per-datum hot loop of the
+/// [`BatchEval`](crate::runtime::BatchEval) backends, and the zero-alloc
+/// hot-path invariant (DESIGN.md §Perf) covers them. Only the setup methods
+/// ([`Self::tune_anchors_map`] and constructors) may allocate.
 pub trait ModelBound: Send + Sync {
+    /// Number of data points N.
     fn n(&self) -> usize;
+    /// Flattened parameter dimension (`K*D` for softmax).
     fn dim(&self) -> usize;
+    /// Which XLA artifact family this model maps to.
     fn kind(&self) -> ModelKind;
 
+    /// Number of softmax classes K (1 for non-softmax models); sizes the
+    /// per-class buffers of [`Self::new_scratch`].
+    fn n_classes(&self) -> usize {
+        1
+    }
+
+    /// Allocate an [`EvalScratch`] sized for this model. One-time setup per
+    /// evaluator/shard; the evaluation methods then never allocate.
+    fn new_scratch(&self) -> EvalScratch {
+        EvalScratch::sized(self.dim(), self.n_classes())
+    }
+
     /// log L_n(theta).
-    fn log_lik(&self, theta: &[f64], n: usize) -> f64;
+    fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64;
 
     /// grad += d log L_n / d theta.
-    fn log_lik_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]);
+    fn log_lik_grad_acc(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    );
 
     /// (log L_n, log B_n), with log B clamped to log L at the tangent point
     /// (matches the L1 kernel's `min(lb, ll)` guard).
-    fn log_both(&self, theta: &[f64], n: usize) -> (f64, f64);
+    fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64);
 
     /// grad += d [log(L_n - B_n) - log B_n] / d theta (bright-point term of
     /// the pseudo-posterior gradient).
-    fn pseudo_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]);
+    fn pseudo_grad_acc(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    );
 
     /// Fused [`Self::log_both`] + [`Self::pseudo_grad_acc`] — one feature-dot
     /// pass per datum instead of two (the CPU backend's gradient hot path).
-    fn log_both_pseudo_grad(&self, theta: &[f64], n: usize, grad: &mut [f64]) -> (f64, f64) {
-        let out = self.log_both(theta, n);
-        self.pseudo_grad_acc(theta, n, grad);
+    fn log_both_pseudo_grad(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) -> (f64, f64) {
+        let out = self.log_both(theta, n, scratch);
+        self.pseudo_grad_acc(theta, n, grad, scratch);
         out
     }
 
     /// Collapsed `sum_n log B_n(theta)` — O(dim^2), independent of N.
-    fn log_bound_product(&self, theta: &[f64]) -> f64;
+    fn log_bound_product(&self, theta: &[f64], scratch: &mut EvalScratch) -> f64;
 
     /// grad += d log_bound_product / d theta.
-    fn grad_log_bound_product_acc(&self, theta: &[f64], grad: &mut [f64]);
+    fn grad_log_bound_product_acc(
+        &self,
+        theta: &[f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    );
 
     /// Re-anchor the bounds to be tight at `theta_map` (paper §4: MAP-tuned)
-    /// and rebuild the sufficient statistics.
+    /// and rebuild the sufficient statistics. Setup-time; may allocate.
     fn tune_anchors_map(&mut self, theta_map: &[f64]);
 
     /// The collapsed bound as an explicit quadratic form
@@ -123,6 +213,21 @@ pub fn log_pseudo_lik(ll: f64, lb: f64) -> f64 {
 /// correct digits, while `exp_m1` keeps full relative precision. Used by
 /// `init_z` and the explicit Gibbs z-resampler, which draw Bernoulli(p)
 /// directly from this conditional.
+///
+/// ```
+/// use firefly::models::p_bright;
+///
+/// // moderately loose bound: agrees with the direct 1 - B/L
+/// assert!((p_bright(-0.2, -1.4) - (1.0 - (-1.2f64).exp())).abs() < 1e-14);
+///
+/// // tight (MAP-tuned) bound: full relative precision where 1 - exp(..)
+/// // would cancel to garbage
+/// let (ll, lb) = (-0.5, -0.5 + -1e-15);
+/// let delta = lb - ll; // the representable gap
+/// let p = p_bright(ll, lb);
+/// assert!(p > 0.0);
+/// assert!(((p - (-delta)) / -delta).abs() < 1e-9);
+/// ```
 #[inline]
 pub fn p_bright(ll: f64, lb: f64) -> f64 {
     -(lb - ll).exp_m1()

@@ -2,7 +2,9 @@
 
 use crate::util::Rng;
 
+/// A prior density over the flattened parameter vector.
 pub trait Prior: Send + Sync {
+    /// log p(theta), normalized.
     fn log_density(&self, theta: &[f64]) -> f64;
     /// grad += d log p / d theta.
     fn grad_acc(&self, theta: &[f64], grad: &mut [f64]);
@@ -22,6 +24,7 @@ pub trait Prior: Send + Sync {
 /// Isotropic Gaussian N(0, scale^2 I). Used for the MNIST and CIFAR weights.
 #[derive(Clone, Debug)]
 pub struct IsoGaussian {
+    /// standard deviation of every component
     pub scale: f64,
 }
 
@@ -58,6 +61,7 @@ impl Prior for IsoGaussian {
 /// experiment. Sub-gradient 0 at the (measure-zero) kink.
 #[derive(Clone, Debug)]
 pub struct Laplace {
+    /// Laplace scale parameter b
     pub b: f64,
 }
 

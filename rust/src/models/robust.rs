@@ -12,14 +12,19 @@
 
 use std::sync::Arc;
 
-use super::{bright_coeff, ModelBound, ModelKind};
+use super::{bright_coeff, EvalScratch, ModelBound, ModelKind};
 use crate::data::RegressionData;
 use crate::linalg::{axpy, dot, Matrix};
 use crate::util::math::t_logconst;
 
+/// Student-t regression likelihood with the tangent scaled-Gaussian lower
+/// bound (the paper's OPV experiment model).
 pub struct RobustT {
+    /// the regression dataset (features + targets)
     pub data: Arc<RegressionData>,
+    /// student-t degrees of freedom (paper: 4)
     pub nu: f64,
+    /// noise scale σ
     pub sigma: f64,
     /// per-datum tangent location u0_n (in u = r^2 space)
     pub u0: Vec<f64>,
@@ -98,19 +103,25 @@ impl ModelBound for RobustT {
         ModelKind::Robust
     }
 
-    fn log_lik(&self, theta: &[f64], n: usize) -> f64 {
+    fn log_lik(&self, theta: &[f64], n: usize, _scratch: &mut EvalScratch) -> f64 {
         let r = self.resid(theta, n);
         self.logc - (self.nu + 1.0) / 2.0 * (r * r / self.c2()).ln_1p()
     }
 
-    fn log_lik_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+    fn log_lik_grad_acc(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        _scratch: &mut EvalScratch,
+    ) {
         let r = self.resid(theta, n);
         // d logL / d r = -(nu+1) r / (c2 + r^2); d r / d theta = -x
         let coeff = (self.nu + 1.0) * r / (self.c2() + r * r);
         axpy(coeff, self.data.x.row(n), grad);
     }
 
-    fn log_both(&self, theta: &[f64], n: usize) -> (f64, f64) {
+    fn log_both(&self, theta: &[f64], n: usize, _scratch: &mut EvalScratch) -> (f64, f64) {
         let r = self.resid(theta, n);
         let u = r * r;
         let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / self.c2()).ln_1p();
@@ -119,7 +130,13 @@ impl ModelBound for RobustT {
         (ll, lb)
     }
 
-    fn pseudo_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+    fn pseudo_grad_acc(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        _scratch: &mut EvalScratch,
+    ) {
         let r = self.resid(theta, n);
         let u = r * r;
         let c2 = self.c2();
@@ -132,7 +149,13 @@ impl ModelBound for RobustT {
         axpy(-coeff, self.data.x.row(n), grad);
     }
 
-    fn log_both_pseudo_grad(&self, theta: &[f64], n: usize, grad: &mut [f64]) -> (f64, f64) {
+    fn log_both_pseudo_grad(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        _scratch: &mut EvalScratch,
+    ) -> (f64, f64) {
         let r = self.resid(theta, n);
         let u = r * r;
         let c2 = self.c2();
@@ -146,14 +169,19 @@ impl ModelBound for RobustT {
         (ll, lb)
     }
 
-    fn log_bound_product(&self, theta: &[f64]) -> f64 {
+    fn log_bound_product(&self, theta: &[f64], _scratch: &mut EvalScratch) -> f64 {
         self.a_mat.quad_form(theta) + dot(&self.b_vec, theta) + self.c_sum
     }
 
-    fn grad_log_bound_product_acc(&self, theta: &[f64], grad: &mut [f64]) {
+    fn grad_log_bound_product_acc(
+        &self,
+        theta: &[f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
         let d = theta.len();
-        let mut ax = vec![0.0; d];
-        self.a_mat.matvec(theta, &mut ax);
+        let ax = &mut scratch.acc[..d];
+        self.a_mat.matvec(theta, ax);
         for i in 0..d {
             grad[i] += 2.0 * ax[i] + self.b_vec[i];
         }
@@ -190,6 +218,7 @@ mod tests {
         let mut rng = Rng::new(21);
         let anchor: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
         m.tune_anchors_map(&anchor);
+        let mut sc = m.new_scratch();
         testing::check(
             "t bound <= lik",
             200,
@@ -199,7 +228,7 @@ mod tests {
                 (theta, n)
             },
             |(theta, n)| {
-                let (ll, lb) = m.log_both(theta, *n);
+                let (ll, lb) = m.log_both(theta, *n, &mut sc);
                 lb <= ll && lb.is_finite()
             },
         );
@@ -211,8 +240,9 @@ mod tests {
         let mut rng = Rng::new(22);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
         m.tune_anchors_map(&theta);
+        let mut sc = m.new_scratch();
         for n in 0..m.n() {
-            let (ll, lb) = m.log_both(&theta, n);
+            let (ll, lb) = m.log_both(&theta, n, &mut sc);
             assert!((ll - lb).abs() < 1e-10, "n={n}");
         }
     }
@@ -223,6 +253,7 @@ mod tests {
         let mut rng = Rng::new(23);
         let anchor: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.3).collect();
         m.tune_anchors_map(&anchor);
+        let mut sc = m.new_scratch();
         testing::check_msg(
             "t collapse == sum",
             20,
@@ -234,7 +265,7 @@ mod tests {
                     let (f0, fp0) = m.tangent(m.u0[n]);
                     sum += f0 + fp0 * (r * r - m.u0[n]);
                 }
-                let col = m.log_bound_product(theta);
+                let col = m.log_bound_product(theta, &mut sc);
                 if (sum - col).abs() < 1e-7 * (1.0 + sum.abs()) {
                     Ok(())
                 } else {
@@ -247,18 +278,19 @@ mod tests {
     #[test]
     fn grads_match_fd() {
         let m = small();
+        let mut sc = m.new_scratch();
         let mut rng = Rng::new(24);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
         let h = 1e-6;
         // collapsed grad
         let mut g = vec![0.0; m.dim()];
-        m.grad_log_bound_product_acc(&theta, &mut g);
+        m.grad_log_bound_product_acc(&theta, &mut g, &mut sc);
         let mut tp = theta.clone();
         for i in 0..m.dim() {
             tp[i] = theta[i] + h;
-            let fp = m.log_bound_product(&tp);
+            let fp = m.log_bound_product(&tp, &mut sc);
             tp[i] = theta[i] - h;
-            let fm = m.log_bound_product(&tp);
+            let fm = m.log_bound_product(&tp, &mut sc);
             tp[i] = theta[i];
             let fd = (fp - fm) / (2.0 * h);
             assert!((g[i] - fd).abs() < 1e-3 * (1.0 + fd.abs()), "collapse i={i}");
@@ -266,17 +298,17 @@ mod tests {
         // per-point lik + pseudo grads
         for n in [2, 41] {
             let mut gl = vec![0.0; m.dim()];
-            m.log_lik_grad_acc(&theta, n, &mut gl);
+            m.log_lik_grad_acc(&theta, n, &mut gl, &mut sc);
             let mut gp = vec![0.0; m.dim()];
-            m.pseudo_grad_acc(&theta, n, &mut gp);
+            m.pseudo_grad_acc(&theta, n, &mut gp, &mut sc);
             for i in 0..m.dim() {
                 tp[i] = theta[i] + h;
-                let lp = m.log_lik(&tp, n);
-                let (lla, lba) = m.log_both(&tp, n);
+                let lp = m.log_lik(&tp, n, &mut sc);
+                let (lla, lba) = m.log_both(&tp, n, &mut sc);
                 let pa = super::super::log_pseudo_lik(lla, lba);
                 tp[i] = theta[i] - h;
-                let lm = m.log_lik(&tp, n);
-                let (llb, lbb) = m.log_both(&tp, n);
+                let lm = m.log_lik(&tp, n, &mut sc);
+                let (llb, lbb) = m.log_both(&tp, n, &mut sc);
                 let pb = super::super::log_pseudo_lik(llb, lbb);
                 tp[i] = theta[i];
                 assert!((gl[i] - (lp - lm) / (2.0 * h)).abs() < 1e-5, "lik n={n} i={i}");
@@ -295,10 +327,11 @@ mod tests {
         // Far from the anchor the t-likelihood dominates the Gaussian bound
         // by a growing margin — that's exactly why outliers go bright.
         let m = small();
+        let mut sc = m.new_scratch();
         let theta = vec![0.0; m.dim()];
         let mut last_gap: f64 = 0.0;
         for n in 0..5 {
-            let (ll, lb) = m.log_both(&theta, n);
+            let (ll, lb) = m.log_both(&theta, n, &mut sc);
             let gap = ll - lb;
             assert!(gap >= 0.0);
             last_gap = last_gap.max(gap);

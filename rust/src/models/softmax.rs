@@ -15,12 +15,15 @@
 
 use std::sync::Arc;
 
-use super::{ModelBound, ModelKind};
+use super::{EvalScratch, ModelBound, ModelKind};
 use crate::data::SoftmaxData;
 use crate::linalg::{axpy, dot, Matrix};
 use crate::util::math::logsumexp;
 
+/// Softmax-classification likelihood with the Böhning lower bound (the
+/// paper's CIFAR-3 experiment model). `theta` is flattened row-major [K, D].
 pub struct SoftmaxBohning {
+    /// the multi-class dataset (features + integer labels)
     pub data: Arc<SoftmaxData>,
     /// per-datum anchor logits psi_n, flattened [N, K] (zeros = untuned)
     pub psi: Vec<f64>,
@@ -28,7 +31,7 @@ pub struct SoftmaxBohning {
     s_mat: Matrix,    // sum x x^T, anchor-independent
     g_mat: Matrix,    // [K, D]: sum (g_n + A psi_n) x_n^T
     c0: f64,
-    // scratch for logit computation (avoid per-call alloc)
+    /// number of classes K (cached from the data)
     k: usize,
 }
 
@@ -152,17 +155,27 @@ impl ModelBound for SoftmaxBohning {
         ModelKind::Softmax
     }
 
-    fn log_lik(&self, theta: &[f64], n: usize) -> f64 {
-        let mut eta = vec![0.0; self.k];
-        self.logits(theta, n, &mut eta);
-        eta[self.data.labels[n]] - logsumexp(&eta)
+    fn n_classes(&self) -> usize {
+        self.k
     }
 
-    fn log_lik_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+    fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
+        let eta = &mut scratch.eta[..self.k];
+        self.logits(theta, n, eta);
+        eta[self.data.labels[n]] - logsumexp(eta)
+    }
+
+    fn log_lik_grad_acc(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
         let (k, d) = (self.k, self.data.d());
-        let mut eta = vec![0.0; k];
-        self.logits(theta, n, &mut eta);
-        let lse = logsumexp(&eta);
+        let eta = &mut scratch.eta[..k];
+        self.logits(theta, n, eta);
+        let lse = logsumexp(eta);
         let row = self.data.x.row(n);
         for kk in 0..k {
             let coeff =
@@ -171,22 +184,28 @@ impl ModelBound for SoftmaxBohning {
         }
     }
 
-    fn log_both(&self, theta: &[f64], n: usize) -> (f64, f64) {
-        let mut eta = vec![0.0; self.k];
-        self.logits(theta, n, &mut eta);
-        let ll = eta[self.data.labels[n]] - logsumexp(&eta);
-        let lb = self.log_bound_and_deta(&eta, n, None).min(ll);
+    fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
+        self.logits(theta, n, &mut scratch.eta[..self.k]);
+        let eta = &scratch.eta[..self.k];
+        let ll = eta[self.data.labels[n]] - logsumexp(eta);
+        let lb = self.log_bound_and_deta(eta, n, None).min(ll);
         (ll, lb)
     }
 
-    fn pseudo_grad_acc(&self, theta: &[f64], n: usize, grad: &mut [f64]) {
+    fn pseudo_grad_acc(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
         let (k, d) = (self.k, self.data.d());
-        let mut eta = vec![0.0; k];
-        self.logits(theta, n, &mut eta);
-        let lse = logsumexp(&eta);
+        self.logits(theta, n, &mut scratch.eta[..k]);
+        let eta = &scratch.eta[..k];
+        let dlb = &mut scratch.dlb[..k];
+        let lse = logsumexp(eta);
         let ll = eta[self.data.labels[n]] - lse;
-        let mut dlb = vec![0.0; k];
-        let lb = self.log_bound_and_deta(&eta, n, Some(&mut dlb)).min(ll);
+        let lb = self.log_bound_and_deta(eta, n, Some(&mut *dlb)).min(ll);
         let ed = (lb - ll).min(-1e-12).exp();
         let row = self.data.x.row(n);
         for kk in 0..k {
@@ -197,14 +216,20 @@ impl ModelBound for SoftmaxBohning {
         }
     }
 
-    fn log_both_pseudo_grad(&self, theta: &[f64], n: usize, grad: &mut [f64]) -> (f64, f64) {
+    fn log_both_pseudo_grad(
+        &self,
+        theta: &[f64],
+        n: usize,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) -> (f64, f64) {
         let (k, d) = (self.k, self.data.d());
-        let mut eta = vec![0.0; k];
-        self.logits(theta, n, &mut eta);
-        let lse = logsumexp(&eta);
+        self.logits(theta, n, &mut scratch.eta[..k]);
+        let eta = &scratch.eta[..k];
+        let dlb = &mut scratch.dlb[..k];
+        let lse = logsumexp(eta);
         let ll = eta[self.data.labels[n]] - lse;
-        let mut dlb = vec![0.0; k];
-        let lb = self.log_bound_and_deta(&eta, n, Some(&mut dlb)).min(ll);
+        let lb = self.log_bound_and_deta(eta, n, Some(&mut *dlb)).min(ll);
         let ed = (lb - ll).min(-1e-12).exp();
         let row = self.data.x.row(n);
         for kk in 0..k {
@@ -216,7 +241,7 @@ impl ModelBound for SoftmaxBohning {
         (ll, lb)
     }
 
-    fn log_bound_product(&self, theta: &[f64]) -> f64 {
+    fn log_bound_product(&self, theta: &[f64], scratch: &mut EvalScratch) -> f64 {
         let (k, d) = (self.k, self.data.d());
         // linear term + c0
         let mut acc = self.c0;
@@ -225,34 +250,43 @@ impl ModelBound for SoftmaxBohning {
         }
         // quadratic: -1/2 sum_n eta^T A eta
         //          = -1/4 [ sum_k theta_k^T S theta_k - (1/K) v^T S v ]
-        let mut v = vec![0.0; d];
+        let v = &mut scratch.col[..d];
+        v.fill(0.0);
         let mut quad_k = 0.0;
         for kk in 0..k {
             let tk = &theta[kk * d..(kk + 1) * d];
             quad_k += self.s_mat.quad_form(tk);
-            axpy(1.0, tk, &mut v);
+            axpy(1.0, tk, v);
         }
-        let quad_v = self.s_mat.quad_form(&v);
+        let quad_v = self.s_mat.quad_form(v);
         acc - 0.25 * (quad_k - quad_v / k as f64)
     }
 
-    fn grad_log_bound_product_acc(&self, theta: &[f64], grad: &mut [f64]) {
+    fn grad_log_bound_product_acc(
+        &self,
+        theta: &[f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
         let (k, d) = (self.k, self.data.d());
-        // grad = G - A Theta S with (A W)_k = 1/2 (W_k - mean_j W_j)
-        let mut w = Matrix::zeros(k, d); // Theta S
+        // grad = G - A Theta S with (A W)_k = 1/2 (W_k - mean_j W_j);
+        // W = Theta S lives in scratch.acc ([K, D] row-major), the column
+        // means in scratch.col[..d].
         for kk in 0..k {
-            let mut sv = vec![0.0; d];
-            self.s_mat.matvec(&theta[kk * d..(kk + 1) * d], &mut sv);
-            w.row_mut(kk).copy_from_slice(&sv);
+            self.s_mat.matvec(
+                &theta[kk * d..(kk + 1) * d],
+                &mut scratch.acc[kk * d..(kk + 1) * d],
+            );
         }
-        let mut colmean = vec![0.0; d];
+        let colmean = &mut scratch.col[..d];
+        colmean.fill(0.0);
         for kk in 0..k {
-            axpy(1.0 / k as f64, w.row(kk), &mut colmean);
+            axpy(1.0 / k as f64, &scratch.acc[kk * d..(kk + 1) * d], colmean);
         }
         for kk in 0..k {
             let gk = &mut grad[kk * d..(kk + 1) * d];
             for j in 0..d {
-                gk[j] += self.g_mat[(kk, j)] - 0.5 * (w[(kk, j)] - colmean[j]);
+                gk[j] += self.g_mat[(kk, j)] - 0.5 * (scratch.acc[kk * d + j] - scratch.col[j]);
             }
         }
     }
@@ -286,6 +320,7 @@ mod tests {
         let mut anchor_rng = Rng::new(77);
         let anchor: Vec<f64> = (0..m.dim()).map(|_| anchor_rng.normal() * 0.3).collect();
         m.tune_anchors_map(&anchor); // non-trivial anchors
+        let mut sc = m.new_scratch();
         testing::check(
             "bohning bound <= lik",
             200,
@@ -295,7 +330,7 @@ mod tests {
                 (theta, n)
             },
             |(theta, n)| {
-                let (ll, lb) = m.log_both(theta, *n);
+                let (ll, lb) = m.log_both(theta, *n, &mut sc);
                 lb <= ll && lb.is_finite()
             },
         );
@@ -307,8 +342,9 @@ mod tests {
         let mut rng = Rng::new(8);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
         m.tune_anchors_map(&theta);
+        let mut sc = m.new_scratch();
         for n in 0..m.n() {
-            let (ll, lb) = m.log_both(&theta, n);
+            let (ll, lb) = m.log_both(&theta, n, &mut sc);
             assert!((ll - lb).abs() < 1e-10, "n={n}: {ll} vs {lb}");
         }
     }
@@ -319,6 +355,7 @@ mod tests {
         let mut anchor_rng = Rng::new(9);
         let anchor: Vec<f64> = (0..m.dim()).map(|_| anchor_rng.normal() * 0.4).collect();
         m.tune_anchors_map(&anchor);
+        let mut sc = m.new_scratch();
         testing::check_msg(
             "softmax collapse == sum",
             15,
@@ -330,7 +367,7 @@ mod tests {
                     m.logits(theta, n, &mut eta);
                     sum += m.log_bound_and_deta(&eta, n, None);
                 }
-                let col = m.log_bound_product(theta);
+                let col = m.log_bound_product(theta, &mut sc);
                 if (sum - col).abs() < 1e-7 * (1.0 + sum.abs()) {
                     Ok(())
                 } else {
@@ -346,16 +383,17 @@ mod tests {
         let mut rng = Rng::new(10);
         let anchor: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.3).collect();
         m.tune_anchors_map(&anchor);
+        let mut sc = m.new_scratch();
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.5).collect();
         let mut g = vec![0.0; m.dim()];
-        m.grad_log_bound_product_acc(&theta, &mut g);
+        m.grad_log_bound_product_acc(&theta, &mut g, &mut sc);
         let h = 1e-5;
         let mut tp = theta.clone();
         for i in (0..m.dim()).step_by(7) {
             tp[i] = theta[i] + h;
-            let fp = m.log_bound_product(&tp);
+            let fp = m.log_bound_product(&tp, &mut sc);
             tp[i] = theta[i] - h;
-            let fm = m.log_bound_product(&tp);
+            let fm = m.log_bound_product(&tp, &mut sc);
             tp[i] = theta[i];
             let fd = (fp - fm) / (2.0 * h);
             assert!((g[i] - fd).abs() < 1e-3 * (1.0 + fd.abs()), "i={i}: {} vs {fd}", g[i]);
@@ -365,23 +403,24 @@ mod tests {
     #[test]
     fn lik_and_pseudo_grads_match_fd() {
         let m = small();
+        let mut sc = m.new_scratch();
         let mut rng = Rng::new(11);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.4).collect();
         for n in [0, 33] {
             let mut g = vec![0.0; m.dim()];
-            m.log_lik_grad_acc(&theta, n, &mut g);
+            m.log_lik_grad_acc(&theta, n, &mut g, &mut sc);
             let mut gp = vec![0.0; m.dim()];
-            m.pseudo_grad_acc(&theta, n, &mut gp);
+            m.pseudo_grad_acc(&theta, n, &mut gp, &mut sc);
             let h = 1e-6;
             let mut tp = theta.clone();
             for i in (0..m.dim()).step_by(5) {
                 tp[i] = theta[i] + h;
-                let fp = m.log_lik(&tp, n);
-                let (llp, lbp) = m.log_both(&tp, n);
+                let fp = m.log_lik(&tp, n, &mut sc);
+                let (llp, lbp) = m.log_both(&tp, n, &mut sc);
                 let pp = super::super::log_pseudo_lik(llp, lbp);
                 tp[i] = theta[i] - h;
-                let fm = m.log_lik(&tp, n);
-                let (llm, lbm) = m.log_both(&tp, n);
+                let fm = m.log_lik(&tp, n, &mut sc);
+                let (llm, lbm) = m.log_both(&tp, n, &mut sc);
                 let pm = super::super::log_pseudo_lik(llm, lbm);
                 tp[i] = theta[i];
                 assert!((g[i] - (fp - fm) / (2.0 * h)).abs() < 1e-5, "lik n={n} i={i}");

@@ -8,16 +8,24 @@ use std::sync::Arc;
 
 use super::evaluator::BatchEval;
 use crate::metrics::Counters;
-use crate::models::ModelBound;
+use crate::models::{EvalScratch, ModelBound};
 
+/// Serial pure-Rust [`BatchEval`] backend — the reference implementation
+/// every other backend is checked against.
 pub struct CpuBackend {
+    /// the model whose likelihoods/bounds this backend evaluates
     pub model: Arc<dyn ModelBound>,
     counters: Counters,
+    /// reusable per-datum evaluation scratch (allocated once here, so the
+    /// per-datum model calls never allocate — DESIGN.md §Perf)
+    scratch: EvalScratch,
 }
 
 impl CpuBackend {
+    /// Build a backend over `model`, reporting queries into `counters`.
     pub fn new(model: Arc<dyn ModelBound>, counters: Counters) -> Self {
-        CpuBackend { model, counters }
+        let scratch = model.new_scratch();
+        CpuBackend { model, counters, scratch }
     }
 }
 
@@ -40,7 +48,7 @@ impl BatchEval for CpuBackend {
         ll.reserve(idx.len());
         lb.reserve(idx.len());
         for &n in idx {
-            let (l, b) = self.model.log_both(theta, n as usize);
+            let (l, b) = self.model.log_both(theta, n as usize, &mut self.scratch);
             ll.push(l);
             lb.push(b);
         }
@@ -61,7 +69,9 @@ impl BatchEval for CpuBackend {
         ll.reserve(idx.len());
         lb.reserve(idx.len());
         for &n in idx {
-            let (l, b) = self.model.log_both_pseudo_grad(theta, n as usize, grad);
+            let (l, b) = self
+                .model
+                .log_both_pseudo_grad(theta, n as usize, grad, &mut self.scratch);
             ll.push(l);
             lb.push(b);
         }
@@ -72,7 +82,7 @@ impl BatchEval for CpuBackend {
         ll.clear();
         ll.reserve(idx.len());
         for &n in idx {
-            ll.push(self.model.log_lik(theta, n as usize));
+            ll.push(self.model.log_lik(theta, n as usize, &mut self.scratch));
         }
     }
 
@@ -85,7 +95,7 @@ impl BatchEval for CpuBackend {
     ) {
         self.eval_lik(theta, idx, ll);
         for &n in idx {
-            self.model.log_lik_grad_acc(theta, n as usize, grad);
+            self.model.log_lik_grad_acc(theta, n as usize, grad, &mut self.scratch);
         }
     }
 }

@@ -15,12 +15,23 @@
 
 use crate::metrics::Counters;
 
+/// Batched per-datum likelihood/bound evaluation over a `&[u32]` index set.
+///
+/// This is the whole contract between the MCMC layer and the likelihood
+/// layer; see the module docs for the index convention and the
+/// cost-accounting rules (DESIGN.md §Cost-accounting). Backends own any
+/// scratch their evaluation needs ([`crate::models::EvalScratch`]) and only
+/// `clear`/`reserve` the caller-owned output buffers, so steady-state
+/// sampling performs no heap allocation on this interface.
 // Note: deliberately NOT `Send` — each chain thread constructs its own
 // backend inside `run_chain_replicas` (the XLA client must stay on its
 // thread; the sharded ParBackend parallelizes internally instead).
 pub trait BatchEval {
+    /// Number of data points the backing model holds.
     fn n(&self) -> usize;
+    /// Flattened parameter dimension.
     fn dim(&self) -> usize;
+    /// The query counters this backend reports into.
     fn counters(&self) -> &Counters;
 
     /// Per-point (log L_n, log B_n) for `idx` at `theta`. Outputs are

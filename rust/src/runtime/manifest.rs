@@ -7,23 +7,34 @@
 
 use crate::models::ModelKind;
 
+/// One line of `manifest.txt`: a compiled artifact for a model shape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactEntry {
+    /// artifact name (e.g. `logistic.d51.b2048`)
     pub name: String,
+    /// model family
     pub kind: ModelKind,
+    /// feature dimension
     pub d: usize,
+    /// softmax classes (1 for non-softmax)
     pub k: usize,
+    /// padded batch size
     pub bucket: usize,
+    /// artifact file path relative to the manifest directory
     pub path: String,
 }
 
+/// Parsed artifact manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// all artifacts, in file order
     pub entries: Vec<ArtifactEntry>,
+    /// the directory the manifest was loaded from
     pub dir: String,
 }
 
 impl Manifest {
+    /// Parse manifest text; `dir` is recorded for [`Manifest::full_path`].
     pub fn parse(text: &str, dir: &str) -> Result<Manifest, String> {
         let mut entries = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -72,6 +83,7 @@ impl Manifest {
         Ok(Manifest { entries, dir: dir.to_string() })
     }
 
+    /// Load and parse `<dir>/manifest.txt`.
     pub fn load(dir: &str) -> Result<Manifest, String> {
         let path = format!("{dir}/manifest.txt");
         let text = std::fs::read_to_string(&path)
@@ -90,6 +102,7 @@ impl Manifest {
         v
     }
 
+    /// Absolute-ish path of an entry (manifest dir + relative path).
     pub fn full_path(&self, entry: &ArtifactEntry) -> String {
         format!("{}/{}", self.dir, entry.path)
     }

@@ -27,18 +27,30 @@ use rayon::prelude::*;
 use super::evaluator::BatchEval;
 use crate::linalg::axpy;
 use crate::metrics::Counters;
-use crate::models::ModelBound;
+use crate::models::{EvalScratch, ModelBound};
 
 /// Default shard size: large enough to amortize task dispatch, small enough
 /// to load-balance bright sets of a few hundred points.
 pub const DEFAULT_SHARD: usize = 64;
 
+/// Sharded data-parallel CPU [`BatchEval`] backend (see the module docs for
+/// the determinism contract).
 pub struct ParBackend {
+    /// the model whose likelihoods/bounds this backend evaluates
     pub model: Arc<dyn ModelBound>,
     counters: Counters,
     /// `None` = the global rayon pool.
     pool: Option<rayon::ThreadPool>,
     shard: usize,
+    /// per-shard model-evaluation scratch, one entry per shard of the
+    /// largest batch seen (grown lazily in `ensure_shards`; FlyMC hits its
+    /// maximum during the full-pass `init_z` setup, so steady-state
+    /// sampling calls never grow it)
+    shard_scratch: Vec<EvalScratch>,
+    /// flat per-shard gradient partials, `nshards × dim` row-major — the
+    /// shard-order reduction reads rows in order, so the sum is
+    /// deterministic for a fixed shard size (and allocation-free)
+    shard_grads: Vec<f64>,
 }
 
 impl ParBackend {
@@ -59,7 +71,14 @@ impl ParBackend {
                     .expect("build rayon thread pool"),
             )
         };
-        ParBackend { model, counters, pool, shard: DEFAULT_SHARD }
+        ParBackend {
+            model,
+            counters,
+            pool,
+            shard: DEFAULT_SHARD,
+            shard_scratch: Vec::new(),
+            shard_grads: Vec::new(),
+        }
     }
 
     /// Override the shard size (gradient reduction order is a function of
@@ -69,15 +88,33 @@ impl ParBackend {
         self
     }
 
+    /// The configured shard size.
     pub fn shard(&self) -> usize {
         self.shard
     }
 
-    fn install<R: Send>(&self, f: impl FnOnce() -> R + Send) -> R {
-        match &self.pool {
-            Some(p) => p.install(f),
-            None => f(),
+    /// Grow the per-shard arenas to cover `nshards`. Growth happens only
+    /// when a batch larger than anything seen before arrives — for FlyMC
+    /// that is the one-time full-N `init_z` pass, so steady-state sampling
+    /// never allocates here (and construction stays O(1) regardless of N).
+    fn ensure_shards(&mut self, nshards: usize) {
+        while self.shard_scratch.len() < nshards {
+            self.shard_scratch.push(self.model.new_scratch());
         }
+        let need = nshards * self.model.dim();
+        if self.shard_grads.len() < need {
+            self.shard_grads.resize(need, 0.0);
+        }
+    }
+}
+
+/// Dispatch `f` on the dedicated pool when one exists, inline otherwise —
+/// a free function so callers can keep disjoint `&mut` borrows of the
+/// backend's arenas while handing the pool reference over.
+fn run_in<R: Send>(pool: &Option<rayon::ThreadPool>, f: impl FnOnce() -> R + Send) -> R {
+    match pool {
+        Some(p) => p.install(f),
+        None => f(),
     }
 }
 
@@ -99,20 +136,26 @@ impl BatchEval for ParBackend {
         lb.clear();
         ll.resize(idx.len(), 0.0);
         lb.resize(idx.len(), 0.0);
-        let model = &self.model;
+        let nshards = idx.len().div_ceil(self.shard);
+        self.ensure_shards(nshards);
         let shard = self.shard;
+        let model = &*self.model;
+        let pool = &self.pool;
+        let scratch = &mut self.shard_scratch[..nshards];
         let (ll_s, lb_s) = (ll.as_mut_slice(), lb.as_mut_slice());
-        self.install(|| {
+        let run = || {
             idx.par_chunks(shard)
                 .zip(ll_s.par_chunks_mut(shard).zip(lb_s.par_chunks_mut(shard)))
-                .for_each(|(ids, (lls, lbs))| {
+                .zip(scratch.par_iter_mut())
+                .for_each(|((ids, (lls, lbs)), sc)| {
                     for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut()) {
-                        let (lv, bv) = model.log_both(theta, n as usize);
+                        let (lv, bv) = model.log_both(theta, n as usize, sc);
                         *l = lv;
                         *b = bv;
                     }
                 });
-        });
+        };
+        run_in(pool, run);
     }
 
     fn eval_pseudo_grad(
@@ -130,25 +173,36 @@ impl BatchEval for ParBackend {
         ll.resize(idx.len(), 0.0);
         lb.resize(idx.len(), 0.0);
         let dim = self.model.dim();
-        let model = &self.model;
+        let nshards = idx.len().div_ceil(self.shard);
+        self.ensure_shards(nshards);
         let shard = self.shard;
+        let model = &*self.model;
+        let pool = &self.pool;
+        let scratch = &mut self.shard_scratch[..nshards];
+        let grads = &mut self.shard_grads[..nshards * dim];
+        grads.fill(0.0);
         let (ll_s, lb_s) = (ll.as_mut_slice(), lb.as_mut_slice());
-        let shard_grads: Vec<Vec<f64>> = self.install(|| {
-            idx.par_chunks(shard)
-                .zip(ll_s.par_chunks_mut(shard).zip(lb_s.par_chunks_mut(shard)))
-                .map(|(ids, (lls, lbs))| {
-                    let mut g = vec![0.0; dim];
-                    for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut()) {
-                        let (lv, bv) = model.log_both_pseudo_grad(theta, n as usize, &mut g);
-                        *l = lv;
-                        *b = bv;
-                    }
-                    g
-                })
-                .collect()
-        });
+        {
+            let grads_par = &mut *grads;
+            let run = || {
+                idx.par_chunks(shard)
+                    .zip(ll_s.par_chunks_mut(shard).zip(lb_s.par_chunks_mut(shard)))
+                    .zip(grads_par.par_chunks_mut(dim))
+                    .zip(scratch.par_iter_mut())
+                    .for_each(|(((ids, (lls, lbs)), g), sc)| {
+                        for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut())
+                        {
+                            let (lv, bv) =
+                                model.log_both_pseudo_grad(theta, n as usize, g, sc);
+                            *l = lv;
+                            *b = bv;
+                        }
+                    });
+            };
+            run_in(pool, run);
+        }
         // shard-order reduction: deterministic for a fixed shard size
-        for g in &shard_grads {
+        for g in grads.chunks_exact(dim) {
             axpy(1.0, g, grad);
         }
     }
@@ -157,18 +211,24 @@ impl BatchEval for ParBackend {
         self.counters.add_lik(idx.len() as u64);
         ll.clear();
         ll.resize(idx.len(), 0.0);
-        let model = &self.model;
+        let nshards = idx.len().div_ceil(self.shard);
+        self.ensure_shards(nshards);
         let shard = self.shard;
+        let model = &*self.model;
+        let pool = &self.pool;
+        let scratch = &mut self.shard_scratch[..nshards];
         let ll_s = ll.as_mut_slice();
-        self.install(|| {
+        let run = || {
             idx.par_chunks(shard)
                 .zip(ll_s.par_chunks_mut(shard))
-                .for_each(|(ids, lls)| {
+                .zip(scratch.par_iter_mut())
+                .for_each(|((ids, lls), sc)| {
                     for (&n, l) in ids.iter().zip(lls.iter_mut()) {
-                        *l = model.log_lik(theta, n as usize);
+                        *l = model.log_lik(theta, n as usize, sc);
                     }
                 });
-        });
+        };
+        run_in(pool, run);
     }
 
     fn eval_lik_grad(
@@ -182,23 +242,32 @@ impl BatchEval for ParBackend {
         ll.clear();
         ll.resize(idx.len(), 0.0);
         let dim = self.model.dim();
-        let model = &self.model;
+        let nshards = idx.len().div_ceil(self.shard);
+        self.ensure_shards(nshards);
         let shard = self.shard;
+        let model = &*self.model;
+        let pool = &self.pool;
+        let scratch = &mut self.shard_scratch[..nshards];
+        let grads = &mut self.shard_grads[..nshards * dim];
+        grads.fill(0.0);
         let ll_s = ll.as_mut_slice();
-        let shard_grads: Vec<Vec<f64>> = self.install(|| {
-            idx.par_chunks(shard)
-                .zip(ll_s.par_chunks_mut(shard))
-                .map(|(ids, lls)| {
-                    let mut g = vec![0.0; dim];
-                    for (&n, l) in ids.iter().zip(lls.iter_mut()) {
-                        *l = model.log_lik(theta, n as usize);
-                        model.log_lik_grad_acc(theta, n as usize, &mut g);
-                    }
-                    g
-                })
-                .collect()
-        });
-        for g in &shard_grads {
+        {
+            let grads_par = &mut *grads;
+            let run = || {
+                idx.par_chunks(shard)
+                    .zip(ll_s.par_chunks_mut(shard))
+                    .zip(grads_par.par_chunks_mut(dim))
+                    .zip(scratch.par_iter_mut())
+                    .for_each(|(((ids, lls), g), sc)| {
+                        for (&n, l) in ids.iter().zip(lls.iter_mut()) {
+                            *l = model.log_lik(theta, n as usize, sc);
+                            model.log_lik_grad_acc(theta, n as usize, g, sc);
+                        }
+                    });
+            };
+            run_in(pool, run);
+        }
+        for g in grads.chunks_exact(dim) {
             axpy(1.0, g, grad);
         }
     }

@@ -31,6 +31,7 @@ mod enabled {
     use crate::runtime::manifest::Manifest;
     use crate::runtime::xla_source::{BatchBufs, XlaSource};
 
+    /// PJRT-backed [`BatchEval`] executing the AOT HLO artifacts.
     pub struct XlaBackend {
         source: Arc<dyn XlaSource>,
         counters: Counters,
@@ -44,6 +45,8 @@ mod enabled {
     }
 
     impl XlaBackend {
+        /// Load the manifest for this model's shape and connect a PJRT CPU
+        /// client; executables compile lazily per bucket.
         pub fn new(
             source: Arc<dyn XlaSource>,
             counters: Counters,
@@ -80,6 +83,7 @@ mod enabled {
             })
         }
 
+        /// The padded batch sizes the manifest provides for this shape.
         pub fn available_buckets(&self) -> Vec<usize> {
             self.bucket_paths.iter().map(|(b, _)| *b).collect()
         }
@@ -268,6 +272,7 @@ mod disabled {
     }
 
     impl XlaBackend {
+        /// Always fails: this build has no PJRT bindings (`xla` feature off).
         pub fn new(
             _source: Arc<dyn XlaSource>,
             _counters: Counters,
@@ -280,6 +285,7 @@ mod disabled {
             ))
         }
 
+        /// Unreachable (the stub cannot be constructed).
         pub fn available_buckets(&self) -> Vec<usize> {
             unreachable!("stub XlaBackend cannot be constructed")
         }

@@ -15,12 +15,17 @@ use crate::models::{LogisticJJ, ModelBound, ModelKind, RobustT, SoftmaxBohning};
 /// theta: `x` then aux1, aux2, mask (flattened row-major).
 #[derive(Debug, Default)]
 pub struct BatchBufs {
+    /// `[bucket, D]` features, flattened
     pub x: Vec<f64>,
+    /// first aux buffer (`[bucket]` or `[bucket, K]`)
     pub aux1: Vec<f64>,
+    /// second aux buffer (`[bucket]` or `[bucket, K]`)
     pub aux2: Vec<f64>,
+    /// 1.0 for live lanes, 0.0 for padding
     pub mask: Vec<f64>,
 }
 
+/// A model that can feed the fixed-shape XLA artifacts (see module docs).
 pub trait XlaSource: ModelBound {
     /// (kind, d, k) used to look up artifacts in the manifest.
     fn artifact_key(&self) -> (ModelKind, usize, usize);

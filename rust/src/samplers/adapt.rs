@@ -3,15 +3,19 @@
 //! & Rosenthal 1998, as the paper tunes). Adaptation decays and is frozen
 //! after burn-in so the chain is asymptotically exact.
 
+/// Robbins–Monro step-size adapter toward a target acceptance rate.
 #[derive(Clone, Debug)]
 pub struct StepSizeAdapter {
+    /// acceptance rate the adaptation drives toward
     pub target_accept: f64,
+    /// base adaptation gain (decays as count^-0.6)
     pub gamma0: f64,
     count: usize,
     frozen: bool,
 }
 
 impl StepSizeAdapter {
+    /// Adapter driving toward `target_accept`.
     pub fn new(target_accept: f64) -> Self {
         StepSizeAdapter { target_accept, gamma0: 1.0, count: 0, frozen: false }
     }
@@ -21,6 +25,7 @@ impl StepSizeAdapter {
         self.frozen = true;
     }
 
+    /// Whether adaptation has been frozen.
     pub fn is_frozen(&self) -> bool {
         self.frozen
     }

@@ -5,11 +5,19 @@
 //! MH correction using the asymmetric Gaussian proposal densities.
 
 use super::{Sampler, StepInfo, StepSizeAdapter, Target};
-use crate::linalg::dist2;
 use crate::util::Rng;
 
+/// Metropolis-adjusted Langevin sampler.
+///
+/// Owns every buffer a step touches (current/proposal gradients, the
+/// proposal point, the current-point cache), all sized to the target's
+/// dimension on first use — steady-state steps perform zero heap
+/// allocations, completing the gradient half of the zero-alloc hot-path
+/// invariant (DESIGN.md §Perf).
 pub struct Mala {
-    pub step: f64, // ε
+    /// proposal step size ε
+    pub step: f64,
+    /// Robbins–Monro acceptance-rate adaptation (None = fixed step)
     pub adapter: Option<StepSizeAdapter>,
     grad_cur: Vec<f64>,
     grad_new: Vec<f64>,
@@ -26,6 +34,7 @@ pub struct Mala {
 }
 
 impl Mala {
+    /// Fixed-step sampler with the given ε.
     pub fn new(step: f64) -> Self {
         Mala {
             step,
@@ -49,12 +58,14 @@ impl Mala {
         s
     }
 
+    /// Stop step-size adaptation (call at the end of burn-in).
     pub fn freeze_adaptation(&mut self) {
         if let Some(a) = &mut self.adapter {
             a.freeze();
         }
     }
 
+    /// Lifetime acceptance rate (NaN before the first step).
     pub fn acceptance_rate(&self) -> f64 {
         if self.steps == 0 {
             return f64::NAN;
@@ -62,15 +73,19 @@ impl Mala {
         self.accepts as f64 / self.steps as f64
     }
 
-    /// log q(to | from) for drift-mean Gaussian proposal.
+    /// log q(to | from) for the drift-mean Gaussian proposal, fused into one
+    /// allocation-free pass (same accumulation order as summing
+    /// `(to - mean)^2` over a materialized mean vector, so the values are
+    /// bit-identical to the pre-fusion form).
     fn log_q(step: f64, from: &[f64], grad_from: &[f64], to: &[f64]) -> f64 {
         let e2 = step * step;
-        let mean: Vec<f64> = from
-            .iter()
-            .zip(grad_from)
-            .map(|(&t, &g)| t + 0.5 * e2 * g)
-            .collect();
-        -dist2(to, &mean) / (2.0 * e2)
+        let mut d2 = 0.0;
+        for ((&f, &g), &t) in from.iter().zip(grad_from).zip(to) {
+            let mean_i = f + 0.5 * e2 * g;
+            let d = t - mean_i;
+            d2 += d * d;
+        }
+        -d2 / (2.0 * e2)
     }
 }
 
@@ -87,13 +102,15 @@ impl Sampler for Mala {
         // gradient at the current point: reuse the cached one from the last
         // step when the target is unchanged (version match) and theta is the
         // same point; otherwise (first step, or FlyMC resampled z) recompute.
+        let mut evals = 1; // the proposal evaluation below is unconditional
         let logp_cur = if self.cache_valid
             && self.cache_version == target.version()
             && self.cache_theta == *theta
         {
             self.cache_logp
         } else {
-            let lp = target.grad_log_density(&theta.clone(), &mut self.grad_cur);
+            evals += 1;
+            let lp = target.grad_log_density(theta, &mut self.grad_cur);
             self.cache_theta.clear();
             self.cache_theta.extend_from_slice(theta);
             self.cache_logp = lp;
@@ -107,7 +124,7 @@ impl Sampler for Mala {
             self.proposal
                 .push(theta[i] + 0.5 * e2 * self.grad_cur[i] + self.step * rng.normal());
         }
-        let logp_new = target.grad_log_density(&self.proposal.clone(), &mut self.grad_new);
+        let logp_new = target.grad_log_density(&self.proposal, &mut self.grad_new);
         let log_fwd = Self::log_q(self.step, theta, &self.grad_cur, &self.proposal);
         let log_rev = Self::log_q(self.step, &self.proposal, &self.grad_new, theta);
         let log_alpha = logp_new - logp_cur + log_rev - log_fwd;
@@ -132,11 +149,15 @@ impl Sampler for Mala {
         if let Some(a) = &mut self.adapter {
             self.step = a.update(self.step, accepted);
         }
-        StepInfo { accepted, evals: 2, log_density: logp }
+        StepInfo { accepted, evals, log_density: logp }
     }
 
     fn name(&self) -> &'static str {
         "MALA"
+    }
+
+    fn freeze_adaptation(&mut self) {
+        Mala::freeze_adaptation(self);
     }
 }
 

@@ -4,8 +4,11 @@
 use super::{Sampler, StepInfo, StepSizeAdapter, Target};
 use crate::util::Rng;
 
+/// Symmetric random-walk Metropolis–Hastings sampler.
 pub struct RandomWalkMh {
+    /// isotropic Gaussian proposal step size
     pub step: f64,
+    /// Robbins–Monro acceptance-rate adaptation (None = fixed step)
     pub adapter: Option<StepSizeAdapter>,
     proposal: Vec<f64>,
     accepts: u64,
@@ -13,6 +16,7 @@ pub struct RandomWalkMh {
 }
 
 impl RandomWalkMh {
+    /// Fixed-step sampler with the given proposal scale.
     pub fn new(step: f64) -> Self {
         RandomWalkMh { step, adapter: None, proposal: Vec::new(), accepts: 0, steps: 0 }
     }
@@ -24,12 +28,14 @@ impl RandomWalkMh {
         s
     }
 
+    /// Stop step-size adaptation (call at the end of burn-in).
     pub fn freeze_adaptation(&mut self) {
         if let Some(a) = &mut self.adapter {
             a.freeze();
         }
     }
 
+    /// Lifetime acceptance rate (NaN before the first step).
     pub fn acceptance_rate(&self) -> f64 {
         if self.steps == 0 {
             return f64::NAN;
@@ -70,6 +76,10 @@ impl Sampler for RandomWalkMh {
 
     fn name(&self) -> &'static str {
         "random-walk MH"
+    }
+
+    fn freeze_adaptation(&mut self) {
+        RandomWalkMh::freeze_adaptation(self);
     }
 }
 

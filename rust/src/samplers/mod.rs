@@ -17,9 +17,11 @@ pub use target::Target;
 /// Outcome of one θ-update.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepInfo {
+    /// whether the proposal was accepted (always true for slice sampling)
     pub accepted: bool,
     /// number of target evaluations performed
     pub evals: usize,
+    /// target log density at the post-step state
     pub log_density: f64,
 }
 
@@ -79,5 +81,11 @@ pub trait Sampler {
         rng: &mut crate::util::Rng,
     ) -> StepInfo;
 
+    /// Human-readable sampler name for reports.
     fn name(&self) -> &'static str;
+
+    /// Stop any step-size adaptation (default no-op for non-adaptive
+    /// samplers). Call at the end of burn-in so the chain is asymptotically
+    /// exact, and before any timed measurement window.
+    fn freeze_adaptation(&mut self) {}
 }

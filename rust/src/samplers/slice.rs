@@ -10,6 +10,10 @@
 use super::{Sampler, StepInfo, Target};
 use crate::util::Rng;
 
+/// Univariate slice sampler with stepping-out and shrinkage.
+///
+/// Allocation-free at steady state: every slice update mutates `theta` in
+/// place and reads the target through `log_density`/`commit` memo hits.
 pub struct SliceSampler {
     /// initial bracket width w (Neal 2003)
     pub w: f64,
@@ -22,15 +26,18 @@ pub struct SliceSampler {
 }
 
 impl SliceSampler {
+    /// Sampler with bracket width `w`, 8 step-out expansions, 1 coord/iter.
     pub fn new(w: f64) -> Self {
         SliceSampler { w, max_stepout: 8, coords_per_iter: 1, evals_total: 0, steps: 0 }
     }
 
+    /// Update `c` randomly-chosen coordinates per iteration (min 1).
     pub fn with_coords_per_iter(mut self, c: usize) -> Self {
         self.coords_per_iter = c.max(1);
         self
     }
 
+    /// Mean target evaluations per step so far (NaN before the first step).
     pub fn mean_evals_per_step(&self) -> f64 {
         if self.steps == 0 {
             return f64::NAN;

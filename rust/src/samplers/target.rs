@@ -10,14 +10,29 @@
 //!    hit promotes the cached evaluation to state with no new likelihood
 //!    queries (both MH outcomes, the MALA outcomes, and slice sampling's
 //!    final point are always the last evaluation or the unchanged state).
+//!
+//! ## Buffer-based gradient contract
+//!
+//! Gradient evaluation never returns a fresh vector: the sampler owns a
+//! reusable dim-sized `grad` buffer and [`Target::grad_log_density`]
+//! overwrites it. Implementations must not allocate on this path — the
+//! FlyMC pseudo-posterior routes the per-datum sum through the backend's
+//! scratch arena and its own accumulators, so steady-state gradient steps
+//! (MALA) are as allocation-free as the gradient-free ones (the zero-alloc
+//! invariant of DESIGN.md §Perf, enforced by the `integration_hotpath*`
+//! test binaries).
 
+/// The (possibly augmented) log-density a θ-sampler drives — see the module
+/// docs for the evaluate-then-commit protocol.
 pub trait Target {
+    /// Dimension of the flattened parameter vector.
     fn dim(&self) -> usize;
 
     /// Log density at `theta` (up to a constant). May memoize.
     fn log_density(&mut self, theta: &[f64]) -> f64;
 
-    /// Fills `grad` (overwriting) with d log p / d theta; returns log p.
+    /// Fills the caller-owned `grad` (overwriting, `dim` elements) with
+    /// d log p / d theta; returns log p. Must not allocate.
     fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64;
 
     /// Declare `theta` the chain's new current state.

@@ -57,14 +57,17 @@ pub fn check_msg<T: std::fmt::Debug>(
 pub mod gen {
     use crate::util::Rng;
 
+    /// `len` iid N(0, scale²) draws.
     pub fn vec_normal(rng: &mut Rng, len: usize, scale: f64) -> Vec<f64> {
         (0..len).map(|_| rng.normal() * scale).collect()
     }
 
+    /// Uniform integer in [lo, hi).
     pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
         lo + rng.below(hi - lo)
     }
 
+    /// `len` iid uniform ±1 values.
     pub fn signs(rng: &mut Rng, len: usize) -> Vec<f64> {
         (0..len)
             .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })

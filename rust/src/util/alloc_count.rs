@@ -23,12 +23,14 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 
+/// Counting wrapper around the system allocator (see module docs).
 pub struct CountingAlloc {
     allocs: AtomicU64,
     deallocs: AtomicU64,
 }
 
 impl CountingAlloc {
+    /// A zeroed counter pair (const: usable in `#[global_allocator]` statics).
     pub const fn new() -> Self {
         CountingAlloc { allocs: AtomicU64::new(0), deallocs: AtomicU64::new(0) }
     }
@@ -38,6 +40,7 @@ impl CountingAlloc {
         self.allocs.load(Relaxed)
     }
 
+    /// Total dealloc calls since process start.
     pub fn deallocations(&self) -> u64 {
         self.deallocs.load(Relaxed)
     }

@@ -12,12 +12,15 @@ pub use rng::Rng;
 pub struct Timer(std::time::Instant);
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Self {
         Timer(std::time::Instant::now())
     }
+    /// Seconds since [`Timer::start`].
     pub fn elapsed_secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
+    /// Milliseconds since [`Timer::start`].
     pub fn elapsed_ms(&self) -> f64 {
         self.0.elapsed().as_secs_f64() * 1e3
     }

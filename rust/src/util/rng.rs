@@ -47,6 +47,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -93,6 +94,7 @@ impl Rng {
         lo + (hi - lo) * self.f64()
     }
 
+    /// Bernoulli(p) draw.
     #[inline]
     pub fn bernoulli(&mut self, p: f64) -> bool {
         self.f64() < p

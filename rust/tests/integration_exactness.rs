@@ -121,12 +121,13 @@ fn one_dim_posterior_mean_matches_quadrature_all_z_schemes() {
     // quadrature ground truth
     let mut num = 0.0;
     let mut den = 0.0;
+    let mut sc = model.new_scratch();
     let mut g = -8.0;
     while g < 8.0 {
         let th = [g];
         let mut lp = prior.log_density(&th);
         for n in 0..6 {
-            lp += model.log_lik(&th, n);
+            lp += model.log_lik(&th, n, &mut sc);
         }
         let w = lp.exp();
         num += g * w;
@@ -187,8 +188,9 @@ fn augmented_joint_consistency_under_fixed_theta_gibbs() {
     }
     // expected M = sum_n (1 - B_n/L_n) at theta0
     let mut expected = 0.0;
+    let mut sc = model.new_scratch();
     for n in 0..model.n() {
-        let (ll, lb) = model.log_both(&theta0, n);
+        let (ll, lb) = model.log_both(&theta0, n, &mut sc);
         expected += 1.0 - (lb - ll).exp();
     }
     let rel = (avg_bright - expected).abs() / expected.max(1.0);

@@ -8,8 +8,11 @@
 //!
 //! This binary deliberately contains a SINGLE test: the allocator counter is
 //! process-global, so a sibling test allocating concurrently would corrupt
-//! the measurement window. The cross-backend golden (byte-identical traces
-//! on cpu vs parcpu) lives in `integration_parallel.rs`.
+//! the measurement window. The other paper scenarios live in their own
+//! single-test binaries for the same reason — `integration_hotpath_mala.rs`
+//! (MALA + softmax, the gradient path) and `integration_hotpath_slice.rs`
+//! (slice + robust). The cross-backend goldens (byte-identical traces on
+//! cpu vs parcpu) live in `integration_parallel.rs`.
 
 use std::sync::Arc;
 

@@ -1,0 +1,69 @@
+//! Zero-allocation invariant for the **gradient** hot path: steady-state
+//! FlyMC iterations on the softmax task with MALA (the paper's CIFAR-3
+//! configuration, Table 1 rows 4–6) must perform **zero** heap allocations
+//! on the serial CPU backend. This is the path PR 2 left open — MALA used
+//! to clone θ per step and the models allocated per-datum logit/gradient
+//! temporaries plus a dim-sized collapsed-gradient buffer; all of it now
+//! runs through caller-owned buffers (`EvalScratch`, sampler-owned
+//! gradients, the posterior's `model_scratch` — DESIGN.md §Perf).
+//!
+//! This binary deliberately contains a SINGLE test: the allocator counter
+//! is process-global, so a sibling test allocating concurrently would
+//! corrupt the measurement window. Siblings: `integration_hotpath.rs`
+//! (RW-MH + logistic) and `integration_hotpath_slice.rs` (slice + robust).
+
+use std::sync::Arc;
+
+use firefly::data::synth;
+use firefly::flymc::PseudoPosterior;
+use firefly::metrics::Counters;
+use firefly::models::{IsoGaussian, ModelBound, Prior, SoftmaxBohning};
+use firefly::runtime::CpuBackend;
+use firefly::samplers::{Mala, Sampler};
+use firefly::util::alloc_count::CountingAlloc;
+use firefly::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn steady_state_mala_softmax_iterations_allocate_nothing() {
+    let data = Arc::new(synth::synth_cifar3(240, 16, 7));
+    let model: Arc<dyn ModelBound> = Arc::new(SoftmaxBohning::new(data));
+    let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 0.5 });
+    let counters = Counters::new();
+    let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+    let mut rng = Rng::new(11);
+    let theta0 = prior.sample(model.dim(), &mut rng);
+    let mut theta = theta0.clone();
+    let mut pp = PseudoPosterior::new(model, prior, eval, theta0);
+    pp.init_z(&mut rng);
+    let mut mala = Mala::new(0.01);
+
+    for _ in 0..100 {
+        mala.step(&mut pp, &mut theta, &mut rng);
+        pp.implicit_resample(0.1, &mut rng);
+    }
+
+    let allocs_before = ALLOC.allocations();
+    let queries_before = counters.lik_queries();
+    let mut bright_sum: usize = 0;
+    for _ in 0..300 {
+        mala.step(&mut pp, &mut theta, &mut rng);
+        pp.implicit_resample(0.1, &mut rng);
+        bright_sum += pp.n_bright();
+    }
+    let allocs = ALLOC.allocations() - allocs_before;
+    let queries = counters.lik_queries() - queries_before;
+
+    // the window must have exercised the gradient path for real ...
+    assert!(queries > 0, "no likelihood queries in the measured window");
+    assert!(bright_sum > 0, "degenerate chain: nothing ever bright");
+    assert!(mala.acceptance_rate().is_finite());
+    // ... with ZERO heap allocations (gradient half of the invariant)
+    assert_eq!(
+        allocs, 0,
+        "steady-state MALA+softmax FlyMC iterations performed {allocs} heap \
+         allocations (zero-alloc hot-path invariant, DESIGN.md §Perf)"
+    );
+}

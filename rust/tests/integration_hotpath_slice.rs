@@ -1,0 +1,69 @@
+//! Zero-allocation invariant for the slice-sampling hot path: steady-state
+//! FlyMC iterations on the robust-regression task with univariate slice
+//! sampling (the paper's OPV configuration, Table 1 rows 7–9) must perform
+//! **zero** heap allocations on the serial CPU backend. The Laplace prior
+//! is deliberately used so the base density takes the non-quadratic
+//! fallback (prior + collapsed bound product as two calls), covering the
+//! scratch-based `log_bound_product` path rather than the fused
+//! `PackedQuadForm` one.
+//!
+//! This binary deliberately contains a SINGLE test: the allocator counter
+//! is process-global, so a sibling test allocating concurrently would
+//! corrupt the measurement window. Siblings: `integration_hotpath.rs`
+//! (RW-MH + logistic) and `integration_hotpath_mala.rs` (MALA + softmax).
+
+use std::sync::Arc;
+
+use firefly::data::synth;
+use firefly::flymc::PseudoPosterior;
+use firefly::metrics::Counters;
+use firefly::models::{Laplace, ModelBound, Prior, RobustT};
+use firefly::runtime::CpuBackend;
+use firefly::samplers::{Sampler, SliceSampler};
+use firefly::util::alloc_count::CountingAlloc;
+use firefly::util::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn steady_state_slice_robust_iterations_allocate_nothing() {
+    let data = Arc::new(synth::synth_opv(400, 12, 9));
+    let model: Arc<dyn ModelBound> = Arc::new(RobustT::new(data, 4.0, 0.5));
+    let prior: Arc<dyn Prior> = Arc::new(Laplace { b: 0.5 });
+    let counters = Counters::new();
+    let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+    let mut rng = Rng::new(13);
+    let theta0 = prior.sample(model.dim(), &mut rng);
+    let mut theta = theta0.clone();
+    let mut pp = PseudoPosterior::new(model, prior, eval, theta0);
+    pp.init_z(&mut rng);
+    let mut slice = SliceSampler::new(0.05).with_coords_per_iter(2);
+
+    for _ in 0..100 {
+        slice.step(&mut pp, &mut theta, &mut rng);
+        pp.implicit_resample(0.1, &mut rng);
+    }
+
+    let allocs_before = ALLOC.allocations();
+    let queries_before = counters.lik_queries();
+    let mut bright_sum: usize = 0;
+    for _ in 0..300 {
+        slice.step(&mut pp, &mut theta, &mut rng);
+        pp.implicit_resample(0.1, &mut rng);
+        bright_sum += pp.n_bright();
+    }
+    let allocs = ALLOC.allocations() - allocs_before;
+    let queries = counters.lik_queries() - queries_before;
+
+    // the window must have done real slice work (variable evals/update) ...
+    assert!(queries > 0, "no likelihood queries in the measured window");
+    assert!(bright_sum > 0, "degenerate chain: nothing ever bright");
+    assert!(slice.mean_evals_per_step() >= 3.0);
+    // ... with ZERO heap allocations
+    assert_eq!(
+        allocs, 0,
+        "steady-state slice+robust FlyMC iterations performed {allocs} heap \
+         allocations (zero-alloc hot-path invariant, DESIGN.md §Perf)"
+    );
+}

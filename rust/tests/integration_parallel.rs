@@ -85,6 +85,65 @@ fn multi_chain_reports_diagnostics_with_flymc_cost() {
 }
 
 #[test]
+fn buffer_based_gradient_path_byte_identical_cpu_vs_parcpu() {
+    // The scratch-arena gradient refactor must not change a single bit:
+    // with the shard sized to cover the whole batch, the sharded backend
+    // accumulates the per-datum pseudo-gradients in exactly the serial
+    // order (one shard, reduced onto a zeroed accumulator), so a full
+    // MALA+softmax FlyMC chain — gradients drive every accept/reject —
+    // must be byte-identical between cpu and parcpu.
+    use std::sync::Arc;
+
+    use firefly::data::synth;
+    use firefly::flymc::PseudoPosterior;
+    use firefly::metrics::Counters;
+    use firefly::models::{IsoGaussian, ModelBound, Prior, SoftmaxBohning};
+    use firefly::runtime::{BatchEval, CpuBackend, ParBackend};
+    use firefly::samplers::{Mala, Sampler, Target};
+    use firefly::util::Rng;
+
+    let n = 200;
+    let data = Arc::new(synth::synth_cifar3(n, 12, 17));
+    let model: Arc<dyn ModelBound> = Arc::new(SoftmaxBohning::new(data));
+    let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 0.5 });
+
+    let run_chain = |eval: Box<dyn BatchEval>| -> (Vec<f64>, Vec<u64>, Vec<usize>) {
+        let mut rng = Rng::new(23);
+        let theta0 = prior.sample(model.dim(), &mut rng);
+        let mut theta = theta0.clone();
+        let mut pp = PseudoPosterior::new(model.clone(), prior.clone(), eval, theta0);
+        pp.init_z(&mut rng);
+        let mut mala = Mala::new(0.01);
+        let mut logpost = Vec::new();
+        let mut bright = Vec::new();
+        for _ in 0..120 {
+            mala.step(&mut pp, &mut theta, &mut rng);
+            pp.implicit_resample(0.1, &mut rng);
+            logpost.push(pp.current_log_density());
+            bright.push(pp.n_bright());
+        }
+        let bits = theta.iter().map(|t| t.to_bits()).collect();
+        (logpost, bits, bright)
+    };
+
+    let cpu_counters = Counters::new();
+    let (lp_cpu, th_cpu, br_cpu) =
+        run_chain(Box::new(CpuBackend::new(model.clone(), cpu_counters.clone())));
+    let par_counters = Counters::new();
+    let (lp_par, th_par, br_par) = run_chain(Box::new(
+        ParBackend::with_threads(model.clone(), par_counters.clone(), 4).with_shard(n),
+    ));
+
+    assert_eq!(th_cpu, th_par, "final theta bits differ");
+    assert_eq!(br_cpu, br_par, "bright trajectories differ");
+    for (i, (a, b)) in lp_cpu.iter().zip(&lp_par).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logpost bits differ at iter {i}");
+    }
+    // identical query accounting through the gradient path too
+    assert_eq!(cpu_counters.snapshot(), par_counters.snapshot());
+}
+
+#[test]
 fn regular_mcmc_full_cost_preserved_on_sharded_backend() {
     let mut c = cfg(1, Backend::ParCpu, 2);
     c.algorithm = Algorithm::RegularMcmc;
