@@ -1,0 +1,211 @@
+//! Data-plane macro-benchmark: dense in-RAM vs `.fbin` block-cached reads.
+//!
+//! Measures what the `DataStore` layer costs (and saves) per likelihood
+//! evaluation on the logistic task:
+//!
+//! * batched random-subset `BatchEval::eval` (the FlyMC bright-set access
+//!   pattern) through the serial CPU backend, dense vs block-cached at two
+//!   cache budgets — reporting ns/row and the measured cache hit rate from
+//!   the new `metrics` counters;
+//! * a sequential full pass (the `init_z` / `rebuild_stats` pattern);
+//! * a short FlyMC chain dense vs block with a deliberately tiny cache,
+//!   **asserting byte-identity** of the θ/logpost traces (the out-of-core
+//!   smoke gate CI runs via `--smoke`).
+//!
+//! Emits `BENCH_dataio.json` so the data-plane trajectory is tracked across
+//! PRs next to `BENCH_hotpath.json`.
+//!
+//!     cargo bench --bench dataio             # full sizes
+//!     cargo bench --bench dataio -- --smoke  # CI smoke mode
+
+use std::sync::Arc;
+
+use firefly::bench_harness::{fmt_time, Report};
+use firefly::cli::Args;
+use firefly::configx::{Algorithm, ExperimentConfig, Task};
+use firefly::data::fbin::{open_fbin, write_fbin};
+use firefly::data::store::BlockCacheConfig;
+use firefly::data::{AnyData, LogisticData};
+use firefly::engine::{run_experiment, synth_dataset};
+use firefly::metrics::Counters;
+use firefly::models::{LogisticJJ, ModelBound};
+use firefly::runtime::{BatchEval, CpuBackend};
+use firefly::util::{Rng, Timer};
+
+struct IoStats {
+    label: String,
+    ns_per_row_random: f64,
+    ns_per_row_sequential: f64,
+    hit_rate: f64,
+}
+
+fn bench_store(label: &str, data: Arc<LogisticData>, n: usize, reps: usize) -> IoStats {
+    let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
+    let counters = Counters::new();
+    let mut cpu = CpuBackend::new(model.clone(), counters.clone());
+    let theta = vec![0.1; model.dim()];
+    let mut rng = Rng::new(17);
+    // FlyMC-shaped access: a "bright set" of 500 scattered rows, re-drawn
+    // occasionally (brightness churn), evaluated repeatedly
+    let mut idx: Vec<u32> = (0..500).map(|_| rng.below(n) as u32).collect();
+    let (mut ll, mut lb) = (Vec::new(), Vec::new());
+    cpu.eval(&theta, &idx, &mut ll, &mut lb); // warm
+    counters.reset();
+    let timer = Timer::start();
+    for rep in 0..reps {
+        if rep % 10 == 9 {
+            for v in idx.iter_mut().step_by(20) {
+                *v = rng.below(n) as u32;
+            }
+        }
+        cpu.eval(&theta, &idx, &mut ll, &mut lb);
+        std::hint::black_box(&ll);
+    }
+    let random_secs = timer.elapsed_secs();
+    let rows_touched = (reps * idx.len()) as f64;
+    let (hits, misses) = (counters.data_cache_hits(), counters.data_cache_misses());
+    let hit_rate = if hits + misses == 0 {
+        1.0 // dense: every read is a direct borrow
+    } else {
+        hits as f64 / (hits + misses) as f64
+    };
+
+    // sequential full pass (init_z shape)
+    let all: Vec<u32> = (0..n as u32).collect();
+    cpu.eval(&theta, &all, &mut ll, &mut lb); // warm
+    let seq_reps = (reps / 10).max(1);
+    let timer = Timer::start();
+    for _ in 0..seq_reps {
+        cpu.eval(&theta, &all, &mut ll, &mut lb);
+        std::hint::black_box(&ll);
+    }
+    let seq_secs = timer.elapsed_secs();
+
+    IoStats {
+        label: label.to_string(),
+        ns_per_row_random: random_secs / rows_touched * 1e9,
+        ns_per_row_sequential: seq_secs / (seq_reps * n) as f64 * 1e9,
+        hit_rate,
+    }
+}
+
+/// Short dense-vs-block chains through the real engine; panics unless the
+/// traces are byte-identical (the acceptance criterion CI smoke enforces).
+/// Writes its own `.fbin` from the exact dataset the dense run synthesizes
+/// (same task/n/seed), as `integration_store.rs` does.
+fn verify_trace_identity(n: usize, iters: usize, cache_rows: usize) {
+    let mut cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(n),
+        iters,
+        burnin: iters / 4,
+        record_every: 0,
+        seed: 3,
+        ..Default::default()
+    };
+    let path = std::env::temp_dir()
+        .join(format!("firefly_dataio_verify_{}.fbin", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    write_fbin(&path, &synth_dataset(cfg.task, n, cfg.seed)).expect("write verify fbin");
+    let dense = run_experiment(&cfg).expect("dense run");
+    cfg.data_path = Some(path.clone());
+    cfg.cache_rows = cache_rows;
+    let block = run_experiment(&cfg).expect("block run");
+    let (d, b) = (&dense.chains[0], &block.chains[0]);
+    assert_eq!(d.queries_per_iter, b.queries_per_iter, "query accounting drifted");
+    for (i, (x, y)) in d.logpost_joint.iter().zip(&b.logpost_joint).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "logpost differs at iter {i}");
+    }
+    for i in 0..d.theta_trace.n_rows() {
+        for (x, y) in d.theta_trace.row(i).iter().zip(b.theta_trace.row(i)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "theta differs at row {i}");
+        }
+    }
+    println!(
+        "trace identity: dense vs block (cache {cache_rows} rows < N={n}) byte-identical \
+         over {iters} iterations"
+    );
+    let _ = std::fs::remove_file(path);
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 0);
+    let n = args.get_usize("n", if smoke { 4_000 } else { 50_000 });
+    let reps = if smoke { 40 } else { 400 };
+
+    let data = match synth_dataset(Task::LogisticMnist, n, seed) {
+        AnyData::Logistic(dd) => dd,
+        _ => unreachable!(),
+    };
+    let d = data.d();
+    println!("dataio bench: logistic N={n} D={d}{}", if smoke { " (smoke)" } else { "" });
+    let path = std::env::temp_dir()
+        .join(format!("firefly_dataio_{}.fbin", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    write_fbin(&path, &AnyData::Logistic(data.clone())).expect("write fbin");
+
+    let open_block = |budget: usize| -> Arc<LogisticData> {
+        match open_fbin(&path, BlockCacheConfig::with_budget(budget)).expect("open fbin") {
+            AnyData::Logistic(dd) => Arc::new(dd),
+            _ => unreachable!(),
+        }
+    };
+
+    let configs: Vec<(String, Arc<LogisticData>)> = vec![
+        ("dense".to_string(), Arc::new(data)),
+        (format!("block cache {} rows (25% of N)", n / 4), open_block(n / 4)),
+        (format!("block cache {} rows (5% of N)", n / 20), open_block(n / 20)),
+    ];
+
+    let mut report = Report::new(
+        "DataStore read cost (logistic, CPU backend)",
+        &["store", "random eval ns/row", "sequential ns/row", "cache hit rate"],
+    );
+    let mut rows = Vec::new();
+    for (label, dd) in configs {
+        let s = bench_store(&label, dd, n, reps);
+        report.row(&[
+            s.label.clone(),
+            fmt_time(s.ns_per_row_random * 1e-9),
+            fmt_time(s.ns_per_row_sequential * 1e-9),
+            format!("{:.3}", s.hit_rate),
+        ]);
+        rows.push(s);
+    }
+    report.print();
+
+    // correctness gate: tiny cache, real chain, byte-identical traces
+    verify_trace_identity(
+        if smoke { 1_000 } else { 4_000 },
+        if smoke { 120 } else { 400 },
+        if smoke { 64 } else { 256 },
+    );
+
+    // JSON trajectory point (no serde in the offline build).
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"dataio\",\n");
+    json.push_str(&format!(
+        "  \"smoke\": {smoke},\n  \"n\": {n}, \"d\": {d}, \"reps\": {reps},\n"
+    ));
+    json.push_str("  \"trace_identity_dense_vs_block\": true,\n  \"stores\": [\n");
+    for (i, s) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"store\": \"{}\", \"random_ns_per_row\": {:.2}, \
+             \"sequential_ns_per_row\": {:.2}, \"cache_hit_rate\": {:.4}}}{}\n",
+            s.label,
+            s.ns_per_row_random,
+            s.ns_per_row_sequential,
+            s.hit_rate,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_dataio.json", &json).expect("write BENCH_dataio.json");
+    println!("wrote BENCH_dataio.json");
+    let _ = std::fs::remove_file(path);
+}

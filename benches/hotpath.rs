@@ -92,7 +92,7 @@ fn run_algo(scenario: &Scenario, algorithm: Algorithm, seed: u64, map_steps: usi
         seed,
         ..Default::default()
     };
-    let (source, prior, _map, _tuning_queries) = build_model(&cfg);
+    let (source, prior, _map, _tuning_queries) = build_model(&cfg).expect("build model");
     let model: Arc<dyn ModelBound> = source.as_model_bound();
     let counters = Counters::new();
     let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));

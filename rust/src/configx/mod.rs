@@ -324,6 +324,13 @@ pub struct ExperimentConfig {
     pub record_every: usize,
     /// directory holding the XLA artifact manifest
     pub artifacts_dir: String,
+    /// `.fbin` dataset to sample out of core (None = synthesize the task's
+    /// workload in RAM); the file's label kind must match the task, and
+    /// `n_data` is ignored (the file defines N)
+    pub data_path: Option<String>,
+    /// per-reader block-cache budget in rows for `.fbin` data (0 = default;
+    /// see DESIGN.md §Storage for sizing)
+    pub cache_rows: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -346,6 +353,8 @@ impl Default for ExperimentConfig {
             map_steps: 400,
             record_every: 1,
             artifacts_dir: "artifacts".to_string(),
+            data_path: None,
+            cache_rows: 0,
         }
     }
 }
@@ -377,6 +386,10 @@ impl ExperimentConfig {
         c.map_steps = doc.usize_or("flymc", "map_steps", c.map_steps);
         c.record_every = doc.usize_or("experiment", "record_every", c.record_every);
         c.artifacts_dir = doc.str_or("experiment", "artifacts_dir", &c.artifacts_dir);
+        if let Some(p) = doc.get("data", "path").and_then(|v| v.as_str()) {
+            c.data_path = Some(p.to_string());
+        }
+        c.cache_rows = doc.usize_or("data", "cache_rows", c.cache_rows);
         Ok(c)
     }
 
@@ -487,5 +500,18 @@ mod tests {
         let c = ExperimentConfig::from_str_toml("").unwrap();
         assert_eq!(c.backend, Backend::Cpu);
         assert_eq!(c.threads, 0);
+    }
+
+    #[test]
+    fn data_section_parses_path_and_cache_budget() {
+        let c = ExperimentConfig::from_str_toml(
+            "[data]\npath = \"mnist.fbin\"\ncache_rows = 4096",
+        )
+        .unwrap();
+        assert_eq!(c.data_path.as_deref(), Some("mnist.fbin"));
+        assert_eq!(c.cache_rows, 4096);
+        let c = ExperimentConfig::from_str_toml("").unwrap();
+        assert!(c.data_path.is_none());
+        assert_eq!(c.cache_rows, 0);
     }
 }

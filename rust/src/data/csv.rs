@@ -6,94 +6,153 @@
 //! - regression: each row `f_1,...,f_D,y`.
 //!
 //! A bias column of ones is appended unless `bias=false`.
+//!
+//! Parsing goes directly into one flat row-major buffer (plus a reused
+//! per-line cell buffer): the old `Vec<Vec<f64>>` intermediate boxed every
+//! row and roughly doubled peak RSS before flattening. The same line-level
+//! parser also backs [`stream_to_fbin`], which converts CSV to the `.fbin`
+//! out-of-core format without ever materializing the feature matrix.
 
+use std::io;
+
+use super::fbin::{FbinHeader, FbinWriter, LabelKind};
 use super::{LogisticData, RegressionData, SoftmaxData};
 use crate::linalg::Matrix;
 
-fn parse_rows(text: &str) -> Result<Vec<Vec<f64>>, String> {
-    let mut rows = Vec::new();
+/// Parse the data lines yielded by `lines`, calling `f(row_values)` for
+/// each — only one line's cells are ever resident, so the same machinery
+/// backs the in-RAM loaders and the streaming `.fbin` converter.
+///
+/// Semantics shared by every loader: blank lines and `#` comments are
+/// skipped anywhere; the first non-empty, non-comment line may be a header
+/// of non-numeric tokens; later non-numeric lines are errors; all data rows
+/// must have the same column count as the first. Returns the column count.
+fn parse_lines_from<S, I, F>(lines: I, mut f: F) -> Result<usize, String>
+where
+    S: AsRef<str>,
+    I: Iterator<Item = io::Result<S>>,
+    F: FnMut(&[f64]) -> Result<(), String>,
+{
+    let mut cells: Vec<f64> = Vec::new();
+    let mut cols = 0usize;
+    let mut nrows = 0usize;
     // The header is the first *non-empty, non-comment* line, wherever it
     // sits — keying on the raw line number rejected files whose header
     // follows a `#` comment or blank line.
     let mut header_candidate = true;
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
+    for (lineno, line) in lines.enumerate() {
+        let line = line.map_err(|e| format!("line {}: read error: {e}", lineno + 1))?;
+        let line = line.as_ref().trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        // skip a header line of non-numeric tokens
-        let cells: Result<Vec<f64>, _> =
-            line.split(',').map(|c| c.trim().parse::<f64>()).collect();
         let is_header_slot = header_candidate;
         header_candidate = false;
-        match cells {
-            Ok(v) => {
-                if let Some(first) = rows.first() {
-                    if v.len() != first.len() {
-                        return Err(format!(
-                            "line {}: ragged row ({} vs {} cols)",
-                            lineno + 1,
-                            v.len(),
-                            first.len()
-                        ));
-                    }
+        cells.clear();
+        let mut bad: Option<String> = None;
+        for cell in line.split(',') {
+            match cell.trim().parse::<f64>() {
+                Ok(v) => cells.push(v),
+                Err(e) => {
+                    bad = Some(e.to_string());
+                    break;
                 }
-                rows.push(v);
             }
-            Err(_) if is_header_slot => continue, // header
-            Err(e) => return Err(format!("line {}: {}", lineno + 1, e)),
         }
+        if let Some(e) = bad {
+            if is_header_slot {
+                continue; // header
+            }
+            return Err(format!("line {}: {}", lineno + 1, e));
+        }
+        if nrows > 0 && cells.len() != cols {
+            return Err(format!(
+                "line {}: ragged row ({} vs {} cols)",
+                lineno + 1,
+                cells.len(),
+                cols
+            ));
+        }
+        cols = cells.len();
+        nrows += 1;
+        f(&cells)?;
     }
-    if rows.is_empty() {
+    if nrows == 0 {
         return Err("no data rows".to_string());
     }
-    Ok(rows)
+    Ok(cols)
 }
 
-fn to_features(rows: &[Vec<f64>], bias: bool) -> (Matrix, Vec<f64>) {
-    let n = rows.len();
-    let d = rows[0].len() - 1;
-    let cols = if bias { d + 1 } else { d };
-    let mut x = Matrix::zeros(n, cols);
-    let mut last = vec![0.0; n];
-    for (i, row) in rows.iter().enumerate() {
-        x.row_mut(i)[..d].copy_from_slice(&row[..d]);
+/// [`parse_lines_from`] over in-memory text.
+fn parse_lines<F>(text: &str, f: F) -> Result<usize, String>
+where
+    F: FnMut(&[f64]) -> Result<(), String>,
+{
+    parse_lines_from(text.lines().map(Ok::<&str, io::Error>), f)
+}
+
+/// Parse into one flat row-major buffer; returns (flat, rows, cols).
+fn parse_flat(text: &str) -> Result<(Vec<f64>, usize, usize), String> {
+    let mut flat: Vec<f64> = Vec::new();
+    let cols = parse_lines(text, |row| {
+        flat.extend_from_slice(row);
+        Ok(())
+    })?;
+    let rows = flat.len() / cols;
+    Ok((flat, rows, cols))
+}
+
+/// Split the trailing label column off `flat` **in place** (rows move
+/// forward, never backward, so no second full-size buffer is needed) and
+/// optionally overwrite the label slot with a bias 1.0 column.
+fn split_features(mut flat: Vec<f64>, rows: usize, cols: usize, bias: bool) -> (Matrix, Vec<f64>) {
+    let d = cols - 1;
+    let out_cols = if bias { d + 1 } else { d };
+    let mut labels = vec![0.0; rows];
+    for i in 0..rows {
+        let src = i * cols;
+        labels[i] = flat[src + d];
+        let dst = i * out_cols;
+        debug_assert!(dst <= src);
+        flat.copy_within(src..src + d, dst);
         if bias {
-            x[(i, d)] = 1.0;
+            flat[dst + d] = 1.0;
         }
-        last[i] = row[d];
     }
-    (x, last)
+    flat.truncate(rows * out_cols);
+    (Matrix::from_vec(rows, out_cols, flat), labels)
+}
+
+fn binary_label(l: f64) -> Result<f64, String> {
+    if l == 1.0 || l == -1.0 {
+        Ok(l)
+    } else if l == 0.0 {
+        Ok(-1.0)
+    } else {
+        Err(format!("bad binary label {l}"))
+    }
 }
 
 /// Parse binary-classification CSV text (`f_1,...,f_D,label`, label in
 /// {-1,1} or {0,1}); appends a bias column of ones when `bias`.
 pub fn load_logistic(text: &str, bias: bool) -> Result<LogisticData, String> {
-    let rows = parse_rows(text)?;
-    let (x, labels) = to_features(&rows, bias);
+    let (flat, rows, cols) = parse_flat(text)?;
+    let (x, labels) = split_features(flat, rows, cols, bias);
     let t = labels
-        .iter()
-        .map(|&l| {
-            if l == 1.0 || l == -1.0 {
-                Ok(l)
-            } else if l == 0.0 {
-                Ok(-1.0)
-            } else {
-                Err(format!("bad binary label {l}"))
-            }
-        })
+        .into_iter()
+        .map(binary_label)
         .collect::<Result<Vec<f64>, String>>()?;
-    Ok(LogisticData { x, t })
+    Ok(LogisticData { x: x.into(), t })
 }
 
 /// Parse multi-class CSV text (`f_1,...,f_D,label`, integer label ≥ 0;
 /// K inferred as max label + 1); appends a bias column when `bias`.
 pub fn load_softmax(text: &str, bias: bool) -> Result<SoftmaxData, String> {
-    let rows = parse_rows(text)?;
-    let (x, labels) = to_features(&rows, bias);
+    let (flat, rows, cols) = parse_flat(text)?;
+    let (x, labels) = split_features(flat, rows, cols, bias);
     let mut ints = Vec::with_capacity(labels.len());
     let mut k = 0usize;
-    for &l in &labels {
+    for l in labels {
         if l < 0.0 || l.fract() != 0.0 {
             return Err(format!("bad class label {l}"));
         }
@@ -101,20 +160,80 @@ pub fn load_softmax(text: &str, bias: bool) -> Result<SoftmaxData, String> {
         k = k.max(li + 1);
         ints.push(li);
     }
-    Ok(SoftmaxData { x, labels: ints, k })
+    Ok(SoftmaxData { x: x.into(), labels: ints, k })
 }
 
 /// Parse regression CSV text (`f_1,...,f_D,y`); appends a bias column when
 /// `bias`.
 pub fn load_regression(text: &str, bias: bool) -> Result<RegressionData, String> {
-    let rows = parse_rows(text)?;
-    let (x, y) = to_features(&rows, bias);
-    Ok(RegressionData { x, y })
+    let (flat, rows, cols) = parse_flat(text)?;
+    let (x, y) = split_features(flat, rows, cols, bias);
+    Ok(RegressionData { x: x.into(), y })
+}
+
+/// Stream CSV from any buffered reader straight into a `.fbin` dataset at
+/// `out_path` — lines parse one at a time and feature rows go to disk as
+/// they arrive, so only one row plus the O(N) label buffer is ever
+/// resident and the source CSV may be (much) larger than RAM. Same
+/// header/comment/label semantics as the in-RAM loaders. Returns the
+/// written header.
+pub fn stream_reader_to_fbin<R: io::BufRead>(
+    reader: R,
+    kind: LabelKind,
+    bias: bool,
+    out_path: &str,
+) -> Result<FbinHeader, String> {
+    let mut writer: Option<FbinWriter> = None;
+    let mut row_buf: Vec<f64> = Vec::new();
+    parse_lines_from(reader.lines(), |cells| {
+        if cells.len() < 2 {
+            return Err(format!("need at least 1 feature + label, got {} cols", cells.len()));
+        }
+        let d = cells.len() - 1;
+        if writer.is_none() {
+            let out_d = if bias { d + 1 } else { d };
+            writer = Some(
+                FbinWriter::create(out_path, out_d, kind)
+                    .map_err(|e| format!("{out_path}: {e}"))?,
+            );
+        }
+        let label = match kind {
+            LabelKind::Binary => binary_label(cells[d])?,
+            _ => cells[d],
+        };
+        row_buf.clear();
+        row_buf.extend_from_slice(&cells[..d]);
+        if bias {
+            row_buf.push(1.0);
+        }
+        writer
+            .as_mut()
+            .unwrap()
+            .push_row(&row_buf, label)
+            .map_err(|e| format!("{out_path}: {e}"))
+    })?;
+    writer
+        .expect("parse_lines_from guarantees at least one data row")
+        .finish()
+        .map_err(|e| format!("{out_path}: {e}"))
+}
+
+/// [`stream_reader_to_fbin`] over in-memory CSV text.
+pub fn stream_to_fbin(
+    text: &str,
+    kind: LabelKind,
+    bias: bool,
+    out_path: &str,
+) -> Result<FbinHeader, String> {
+    stream_reader_to_fbin(text.as_bytes(), kind, bias, out_path)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::fbin::open_fbin;
+    use crate::data::store::BlockCacheConfig;
+    use crate::data::AnyData;
 
     #[test]
     fn logistic_roundtrip_with_header_and_zero_labels() {
@@ -123,7 +242,7 @@ mod tests {
         assert_eq!(d.n(), 2);
         assert_eq!(d.d(), 3);
         assert_eq!(d.t, vec![1.0, -1.0]);
-        assert_eq!(d.x[(0, 2)], 1.0);
+        assert_eq!(d.x.get(0, 2), 1.0);
     }
 
     #[test]
@@ -140,6 +259,31 @@ mod tests {
         // comment-interleaved data still loads without a header
         let plain = "# c\n1.0,2.0,1\n# mid\n3.0,4.0,0\n";
         assert_eq!(load_logistic(plain, false).unwrap().n(), 2);
+    }
+
+    #[test]
+    fn flat_parse_preserves_row_and_column_order() {
+        // Regression for the Vec<Vec<f64>> → flat-buffer rewrite: values
+        // land at exactly the same (row, col) positions, with the header and
+        // interleaved comments ignored, both with and without a bias column.
+        let text = "a,b,c,y\n# note\n1.0,2.0,3.0,10.0\n\n4.0,5.0,6.0,20.0\n7.0,8.0,9.0,30.0\n";
+        for bias in [false, true] {
+            let d = load_regression(text, bias).unwrap();
+            assert_eq!(d.n(), 3);
+            assert_eq!(d.d(), if bias { 4 } else { 3 });
+            assert_eq!(d.y, vec![10.0, 20.0, 30.0]);
+            let m = d.x.as_dense().unwrap();
+            for i in 0..3 {
+                for j in 0..3 {
+                    assert_eq!(m[(i, j)], (3 * i + j) as f64 + 1.0, "({i},{j})");
+                }
+                if bias {
+                    assert_eq!(m[(i, 3)], 1.0);
+                }
+            }
+            // the flat storage is contiguous row-major with no slack
+            assert_eq!(m.data.len(), 3 * d.d());
+        }
     }
 
     #[test]
@@ -164,5 +308,33 @@ mod tests {
         assert!(load_logistic("1,2,5\n", false).is_err());
         assert!(load_softmax("1,2,-1\n", false).is_err());
         assert!(load_regression("", false).is_err());
+    }
+
+    #[test]
+    fn stream_to_fbin_matches_in_ram_loader() {
+        let text = "f1,f2,label\n0.5,1.0,1\n-0.5,2.0,0\n0.25,-3.0,1\n";
+        let path = std::env::temp_dir()
+            .join(format!("firefly_csv_stream_{}.fbin", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let header = stream_to_fbin(text, LabelKind::Binary, true, &path).unwrap();
+        assert_eq!(header.n, 3);
+        assert_eq!(header.d, 3);
+        let in_ram = load_logistic(text, true).unwrap();
+        match open_fbin(&path, BlockCacheConfig::default()).unwrap() {
+            AnyData::Logistic(got) => {
+                assert_eq!(got.t, in_ram.t);
+                let dense = in_ram.x.as_dense().unwrap();
+                for i in 0..3 {
+                    for j in 0..3 {
+                        assert_eq!(got.x.get(i, j).to_bits(), dense[(i, j)].to_bits());
+                    }
+                }
+            }
+            other => panic!("wrong kind {}", other.kind_name()),
+        }
+        // streaming applies the same label validation
+        assert!(stream_to_fbin("1,2,7\n", LabelKind::Binary, false, &path).is_err());
+        let _ = std::fs::remove_file(path);
     }
 }

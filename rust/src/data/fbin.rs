@@ -1,0 +1,451 @@
+//! The versioned `.fbin` binary dataset format and its reader/writer.
+//!
+//! Layout (all integers little-endian; spec in DESIGN.md §Storage):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"FFLYFBIN"
+//! 8       4     format version (u32, currently 1)
+//! 12      4     label kind (u32: 0 binary ±1, 1 class, 2 regression target)
+//! 16      8     N (u64, number of rows; bounded to u32::MAX on read)
+//! 24      8     D (u64, feature columns, bias included if the writer added one)
+//! 32      8     K (u64, class count; 1 for non-class label kinds)
+//! 40      8·N·D feature block, row-major f64
+//! 40+8ND  8·N   label block, f64 (class labels stored as exact integers)
+//! ```
+//!
+//! The feature block — the O(N·D) part — is what [`super::store::BlockStore`]
+//! serves out of core; labels are O(N) and stay resident (every model indexes
+//! them per datum and the z-resamplers touch arbitrary subsets).
+//!
+//! [`FbinWriter`] streams: the header is written with placeholder N/K,
+//! feature rows are appended as they arrive (so a CSV→fbin conversion never
+//! materializes the matrix), labels are buffered (8 bytes/row) and written
+//! at [`FbinWriter::finish`], which then patches the header.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
+
+use super::store::{BlockCacheConfig, BlockStore, DataStore};
+use super::{AnyData, LogisticData, RegressionData, SoftmaxData};
+
+/// The 8-byte magic prefix of every `.fbin` file.
+pub const FBIN_MAGIC: [u8; 8] = *b"FFLYFBIN";
+/// Current format version.
+pub const FBIN_VERSION: u32 = 1;
+/// Total header length in bytes (the feature block starts here).
+pub const FBIN_HEADER_LEN: u64 = 40;
+
+/// What the label block means — selects which model family the dataset
+/// feeds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LabelKind {
+    /// binary classification labels in {-1, +1} ([`LogisticData`])
+    Binary,
+    /// integer class labels in [0, K) ([`SoftmaxData`])
+    Class,
+    /// regression targets ([`RegressionData`])
+    Target,
+}
+
+impl LabelKind {
+    /// The on-disk u32 tag.
+    pub fn as_u32(self) -> u32 {
+        match self {
+            LabelKind::Binary => 0,
+            LabelKind::Class => 1,
+            LabelKind::Target => 2,
+        }
+    }
+
+    fn from_u32(v: u32) -> Option<LabelKind> {
+        match v {
+            0 => Some(LabelKind::Binary),
+            1 => Some(LabelKind::Class),
+            2 => Some(LabelKind::Target),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI spelling (`logistic`/`binary`, `softmax`/`class`,
+    /// `regression`/`target`).
+    pub fn parse(s: &str) -> Result<LabelKind, String> {
+        match s {
+            "logistic" | "binary" => Ok(LabelKind::Binary),
+            "softmax" | "class" => Ok(LabelKind::Class),
+            "regression" | "target" | "robust" => Ok(LabelKind::Target),
+            _ => Err(format!("unknown label kind {s:?}")),
+        }
+    }
+
+    /// Human-readable name (matches the model family).
+    pub fn name(self) -> &'static str {
+        match self {
+            LabelKind::Binary => "logistic",
+            LabelKind::Class => "softmax",
+            LabelKind::Target => "regression",
+        }
+    }
+}
+
+/// Decoded `.fbin` header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FbinHeader {
+    /// label block semantics
+    pub label_kind: LabelKind,
+    /// number of rows
+    pub n: u64,
+    /// feature columns
+    pub d: u64,
+    /// class count (1 unless `label_kind` is `Class`)
+    pub k: u64,
+}
+
+fn encode_header(h: &FbinHeader) -> [u8; FBIN_HEADER_LEN as usize] {
+    let mut buf = [0u8; FBIN_HEADER_LEN as usize];
+    buf[..8].copy_from_slice(&FBIN_MAGIC);
+    buf[8..12].copy_from_slice(&FBIN_VERSION.to_le_bytes());
+    buf[12..16].copy_from_slice(&h.label_kind.as_u32().to_le_bytes());
+    buf[16..24].copy_from_slice(&h.n.to_le_bytes());
+    buf[24..32].copy_from_slice(&h.d.to_le_bytes());
+    buf[32..40].copy_from_slice(&h.k.to_le_bytes());
+    buf
+}
+
+fn decode_header(buf: &[u8; FBIN_HEADER_LEN as usize]) -> Result<FbinHeader, String> {
+    if buf[..8] != FBIN_MAGIC {
+        return Err("not an .fbin file (bad magic)".to_string());
+    }
+    let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    if version != FBIN_VERSION {
+        return Err(format!(
+            "unsupported .fbin version {version} (this build reads version {FBIN_VERSION})"
+        ));
+    }
+    let kind_raw = u32::from_le_bytes(buf[12..16].try_into().unwrap());
+    let label_kind = LabelKind::from_u32(kind_raw)
+        .ok_or_else(|| format!("bad label-kind tag {kind_raw}"))?;
+    Ok(FbinHeader {
+        label_kind,
+        n: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+        d: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+        k: u64::from_le_bytes(buf[32..40].try_into().unwrap()),
+    })
+}
+
+/// Streaming `.fbin` writer: create, [`push_row`](Self::push_row) N times,
+/// [`finish`](Self::finish). Feature rows go straight to disk; labels are
+/// buffered (8 bytes/row) and the header N/K are patched at the end.
+pub struct FbinWriter {
+    out: BufWriter<File>,
+    d: usize,
+    kind: LabelKind,
+    labels: Vec<f64>,
+    max_class: u64,
+}
+
+impl FbinWriter {
+    /// Start a new dataset file with `d` feature columns.
+    pub fn create(path: &str, d: usize, kind: LabelKind) -> io::Result<FbinWriter> {
+        if d == 0 {
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "d must be positive"));
+        }
+        let file = File::create(path)?;
+        let mut out = BufWriter::new(file);
+        let placeholder =
+            FbinHeader { label_kind: kind, n: 0, d: d as u64, k: 1 };
+        out.write_all(&encode_header(&placeholder))?;
+        Ok(FbinWriter { out, d, kind, labels: Vec::new(), max_class: 0 })
+    }
+
+    /// Append one data row. Labels are validated per kind: binary must be
+    /// ±1 (map {0,1} inputs before calling), class must be a non-negative
+    /// integer, targets are any finite f64.
+    pub fn push_row(&mut self, features: &[f64], label: f64) -> io::Result<()> {
+        if features.len() != self.d {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("row has {} features, expected {}", features.len(), self.d),
+            ));
+        }
+        match self.kind {
+            LabelKind::Binary if label != 1.0 && label != -1.0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("bad binary label {label} (want -1 or 1)"),
+                ));
+            }
+            LabelKind::Class if label < 0.0 || label.fract() != 0.0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("bad class label {label}"),
+                ));
+            }
+            _ => {}
+        }
+        if self.kind == LabelKind::Class {
+            self.max_class = self.max_class.max(label as u64);
+        }
+        for v in features {
+            self.out.write_all(&v.to_le_bytes())?;
+        }
+        self.labels.push(label);
+        Ok(())
+    }
+
+    /// Write the label block, patch the header, and flush. Returns the
+    /// final header. Zero-row datasets are rejected.
+    pub fn finish(mut self) -> io::Result<FbinHeader> {
+        if self.labels.is_empty() {
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "no data rows"));
+        }
+        for v in &self.labels {
+            self.out.write_all(&v.to_le_bytes())?;
+        }
+        let header = FbinHeader {
+            label_kind: self.kind,
+            n: self.labels.len() as u64,
+            d: self.d as u64,
+            k: if self.kind == LabelKind::Class { self.max_class + 1 } else { 1 },
+        };
+        self.out.flush()?;
+        let mut file = self.out.into_inner().map_err(|e| e.into_error())?;
+        file.seek(SeekFrom::Start(0))?;
+        file.write_all(&encode_header(&header))?;
+        file.flush()?;
+        Ok(header)
+    }
+}
+
+/// Write any loaded/synthesized dataset to `path` (streams the feature
+/// store row by row, so an out-of-core source is never materialized).
+pub fn write_fbin(path: &str, data: &AnyData) -> io::Result<FbinHeader> {
+    let (store, kind): (&DataStore, LabelKind) = match data {
+        AnyData::Logistic(d) => (&d.x, LabelKind::Binary),
+        AnyData::Softmax(d) => (&d.x, LabelKind::Class),
+        AnyData::Regression(d) => (&d.x, LabelKind::Target),
+    };
+    let mut w = FbinWriter::create(path, store.d(), kind)?;
+    store.try_for_each_row(|i, row| {
+        let label = match data {
+            AnyData::Logistic(d) => d.t[i],
+            AnyData::Softmax(d) => d.labels[i] as f64,
+            AnyData::Regression(d) => d.y[i],
+        };
+        w.push_row(row, label)
+    })?;
+    w.finish()
+}
+
+/// Open a `.fbin` dataset for out-of-core sampling: validates the header
+/// and file length, loads the label block (O(N) resident), and wraps the
+/// feature block in a [`BlockStore`] whose per-reader caches use `cache`.
+pub fn open_fbin(path: &str, cache: BlockCacheConfig) -> Result<AnyData, String> {
+    let mut file = File::open(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut hbuf = [0u8; FBIN_HEADER_LEN as usize];
+    file.read_exact(&mut hbuf)
+        .map_err(|e| format!("{path}: truncated header: {e}"))?;
+    let header = decode_header(&hbuf).map_err(|e| format!("{path}: {e}"))?;
+    if header.n == 0 || header.d == 0 {
+        return Err(format!("{path}: empty dataset (n={}, d={})", header.n, header.d));
+    }
+    if header.n > u32::MAX as u64 {
+        return Err(format!(
+            "{path}: n={} exceeds the u32 index limit of the sampling engine",
+            header.n
+        ));
+    }
+    let (n, d) = (header.n as usize, header.d as usize);
+    let feat_bytes = header
+        .n
+        .checked_mul(header.d)
+        .and_then(|nd| nd.checked_mul(8))
+        .ok_or_else(|| format!("{path}: n*d overflows"))?;
+    let expect_len = FBIN_HEADER_LEN + feat_bytes + header.n * 8;
+    let actual_len = file
+        .metadata()
+        .map_err(|e| format!("{path}: {e}"))?
+        .len();
+    if actual_len != expect_len {
+        return Err(format!(
+            "{path}: file is {actual_len} bytes, header implies {expect_len} \
+             (truncated or corrupt)"
+        ));
+    }
+
+    // label block: resident, one pass
+    file.seek(SeekFrom::Start(FBIN_HEADER_LEN + feat_bytes))
+        .map_err(|e| format!("{path}: {e}"))?;
+    let mut lbytes = vec![0u8; n * 8];
+    file.read_exact(&mut lbytes)
+        .map_err(|e| format!("{path}: label block: {e}"))?;
+    let labels: Vec<f64> = lbytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    drop(lbytes);
+
+    let store = DataStore::Block(BlockStore::new(file, n, d, FBIN_HEADER_LEN, cache));
+    match header.label_kind {
+        LabelKind::Binary => {
+            for (i, &l) in labels.iter().enumerate() {
+                if l != 1.0 && l != -1.0 {
+                    return Err(format!("{path}: row {i}: bad binary label {l}"));
+                }
+            }
+            Ok(AnyData::Logistic(LogisticData { x: store, t: labels }))
+        }
+        LabelKind::Class => {
+            let k = header.k as usize;
+            if k == 0 {
+                return Err(format!("{path}: class dataset with k=0"));
+            }
+            let mut ints = Vec::with_capacity(n);
+            for (i, &l) in labels.iter().enumerate() {
+                if l < 0.0 || l.fract() != 0.0 || (l as usize) >= k {
+                    return Err(format!(
+                        "{path}: row {i}: bad class label {l} (header k={k})"
+                    ));
+                }
+                ints.push(l as usize);
+            }
+            Ok(AnyData::Softmax(SoftmaxData { x: store, labels: ints, k }))
+        }
+        LabelKind::Target => Ok(AnyData::Regression(RegressionData { x: store, y: labels })),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("firefly_fbin_{}_{name}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_logistic() {
+        let path = tmp("rt_logistic.fbin");
+        let d = synth::synth_mnist(200, 6, 1);
+        let header = write_fbin(&path, &AnyData::Logistic(d.clone())).unwrap();
+        assert_eq!(header.n, 200);
+        assert_eq!(header.d, 7); // 6 features + bias
+        assert_eq!(header.label_kind, LabelKind::Binary);
+        let cache = BlockCacheConfig { rows_per_block: 16, cached_rows: 32 };
+        match open_fbin(&path, cache).unwrap() {
+            AnyData::Logistic(got) => {
+                assert_eq!(got.t, d.t);
+                assert!(got.x.is_out_of_core());
+                let dense = d.x.as_dense().unwrap();
+                let mut rc = got.x.new_cache();
+                for i in (0..200).rev() {
+                    // reverse order: defeats sequential prefetch luck
+                    let row = got.x.row(i, &mut rc);
+                    for (a, b) in row.iter().zip(dense.row(i)) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+            }
+            other => panic!("wrong kind: {}", other.kind_name()),
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_softmax_and_regression() {
+        let spath = tmp("rt_softmax.fbin");
+        let sd = synth::synth_cifar3(90, 10, 2);
+        let h = write_fbin(&spath, &AnyData::Softmax(sd.clone())).unwrap();
+        assert_eq!(h.k, 3);
+        match open_fbin(&spath, BlockCacheConfig::default()).unwrap() {
+            AnyData::Softmax(got) => {
+                assert_eq!(got.k, 3);
+                assert_eq!(got.labels, sd.labels);
+            }
+            other => panic!("wrong kind: {}", other.kind_name()),
+        }
+        let rpath = tmp("rt_regression.fbin");
+        let rd = synth::synth_opv(120, 5, 3);
+        write_fbin(&rpath, &AnyData::Regression(rd.clone())).unwrap();
+        match open_fbin(&rpath, BlockCacheConfig::default()).unwrap() {
+            AnyData::Regression(got) => {
+                assert_eq!(got.y.len(), 120);
+                for (a, b) in got.y.iter().zip(&rd.y) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong kind: {}", other.kind_name()),
+        }
+        let _ = std::fs::remove_file(spath);
+        let _ = std::fs::remove_file(rpath);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_files_are_rejected() {
+        let path = tmp("corrupt.fbin");
+        let d = synth::synth_mnist(50, 4, 7);
+        write_fbin(&path, &AnyData::Logistic(d)).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = open_fbin(&path, BlockCacheConfig::default()).unwrap_err();
+        assert!(err.contains("magic"), "{err}");
+
+        // unsupported version
+        let mut bad = good.clone();
+        bad[8] = 99;
+        std::fs::write(&path, &bad).unwrap();
+        let err = open_fbin(&path, BlockCacheConfig::default()).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+
+        // bad label-kind tag
+        let mut bad = good.clone();
+        bad[12] = 7;
+        std::fs::write(&path, &bad).unwrap();
+        let err = open_fbin(&path, BlockCacheConfig::default()).unwrap_err();
+        assert!(err.contains("label-kind"), "{err}");
+
+        // truncated feature block
+        let mut bad = good.clone();
+        bad.truncate(good.len() - 100);
+        std::fs::write(&path, &bad).unwrap();
+        let err = open_fbin(&path, BlockCacheConfig::default()).unwrap_err();
+        assert!(err.contains("truncated"), "{err}");
+
+        // header shorter than 40 bytes
+        std::fs::write(&path, &good[..20]).unwrap();
+        let err = open_fbin(&path, BlockCacheConfig::default()).unwrap_err();
+        assert!(err.contains("header"), "{err}");
+
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn writer_validates_labels_and_shapes() {
+        let path = tmp("validate.fbin");
+        let mut w = FbinWriter::create(&path, 2, LabelKind::Binary).unwrap();
+        assert!(w.push_row(&[1.0, 2.0], 0.5).is_err()); // bad binary label
+        assert!(w.push_row(&[1.0], 1.0).is_err()); // wrong width
+        w.push_row(&[1.0, 2.0], -1.0).unwrap();
+        w.finish().unwrap();
+
+        let mut w = FbinWriter::create(&path, 2, LabelKind::Class).unwrap();
+        assert!(w.push_row(&[0.0, 0.0], -1.0).is_err());
+        assert!(w.push_row(&[0.0, 0.0], 1.5).is_err());
+        w.push_row(&[0.0, 0.0], 2.0).unwrap();
+        let h = w.finish().unwrap();
+        assert_eq!(h.k, 3);
+
+        // empty dataset rejected at finish
+        let w = FbinWriter::create(&path, 2, LabelKind::Target).unwrap();
+        assert!(w.finish().is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

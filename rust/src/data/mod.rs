@@ -1,5 +1,6 @@
-//! Datasets: synthetic generators matching the paper's three workloads, plus
-//! a CSV loader for user-supplied real data.
+//! Datasets: synthetic generators matching the paper's three workloads, a
+//! CSV loader for user-supplied real data, and the storage layer that feeds
+//! them to the models.
 //!
 //! The paper's datasets (MNIST 7v9 PCA features, CIFAR-10 3-class binary
 //! autoencoder features, Harvard CEP OPV molecules) are not redistributable
@@ -8,18 +9,26 @@
 //! logit-spread / residual-tail distribution that controls bound tightness —
 //! through the identical code path. All generators are seeded and
 //! deterministic.
+//!
+//! Feature matrices are held behind [`store::DataStore`]: either resident
+//! ([`store::DenseStore`], today's behaviour, bit-identical) or out-of-core
+//! over a `.fbin` file ([`store::BlockStore`] + [`fbin`]), so datasets
+//! larger than RAM sample through the same models and backends. Labels are
+//! O(N) and stay resident in every case (DESIGN.md §Storage).
 
 pub mod csv;
+pub mod fbin;
+pub mod store;
 pub mod synth;
 
-use crate::linalg::Matrix;
+use self::store::DataStore;
 
 /// Binary classification data; `t[n]` in {-1, +1}. Feature matrix includes
 /// the bias column when the generator appends one.
 #[derive(Clone, Debug)]
 pub struct LogisticData {
-    /// N x D feature matrix
-    pub x: Matrix,
+    /// N x D feature store
+    pub x: DataStore,
     /// labels in {-1, +1}
     pub t: Vec<f64>,
 }
@@ -27,19 +36,19 @@ pub struct LogisticData {
 impl LogisticData {
     /// Number of data points.
     pub fn n(&self) -> usize {
-        self.x.rows
+        self.x.n_rows()
     }
     /// Feature dimension (bias column included when present).
     pub fn d(&self) -> usize {
-        self.x.cols
+        self.x.d()
     }
 }
 
 /// Multi-class classification data; `labels[n]` in [0, k).
 #[derive(Clone, Debug)]
 pub struct SoftmaxData {
-    /// N x D feature matrix
-    pub x: Matrix,
+    /// N x D feature store
+    pub x: DataStore,
     /// integer class labels in [0, k)
     pub labels: Vec<usize>,
     /// number of classes K
@@ -49,19 +58,19 @@ pub struct SoftmaxData {
 impl SoftmaxData {
     /// Number of data points.
     pub fn n(&self) -> usize {
-        self.x.rows
+        self.x.n_rows()
     }
     /// Feature dimension.
     pub fn d(&self) -> usize {
-        self.x.cols
+        self.x.d()
     }
 }
 
 /// Regression data.
 #[derive(Clone, Debug)]
 pub struct RegressionData {
-    /// N x D feature matrix
-    pub x: Matrix,
+    /// N x D feature store
+    pub x: DataStore,
     /// regression targets
     pub y: Vec<f64>,
 }
@@ -69,11 +78,54 @@ pub struct RegressionData {
 impl RegressionData {
     /// Number of data points.
     pub fn n(&self) -> usize {
-        self.x.rows
+        self.x.n_rows()
     }
     /// Feature dimension (bias column included when present).
     pub fn d(&self) -> usize {
-        self.x.cols
+        self.x.d()
+    }
+}
+
+/// A dataset of any of the three workload families — what the `.fbin`
+/// reader returns (the file's label kind selects the variant) and the
+/// `convert` pipeline consumes.
+#[derive(Clone, Debug)]
+pub enum AnyData {
+    /// binary classification ([`LogisticData`])
+    Logistic(LogisticData),
+    /// multi-class classification ([`SoftmaxData`])
+    Softmax(SoftmaxData),
+    /// regression ([`RegressionData`])
+    Regression(RegressionData),
+}
+
+impl AnyData {
+    /// Number of data points.
+    pub fn n(&self) -> usize {
+        match self {
+            AnyData::Logistic(d) => d.n(),
+            AnyData::Softmax(d) => d.n(),
+            AnyData::Regression(d) => d.n(),
+        }
+    }
+
+    /// Feature dimension.
+    pub fn d(&self) -> usize {
+        match self {
+            AnyData::Logistic(d) => d.d(),
+            AnyData::Softmax(d) => d.d(),
+            AnyData::Regression(d) => d.d(),
+        }
+    }
+
+    /// The model-family name of the variant (`logistic`/`softmax`/
+    /// `regression`).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            AnyData::Logistic(_) => "logistic",
+            AnyData::Softmax(_) => "softmax",
+            AnyData::Regression(_) => "regression",
+        }
     }
 }
 
@@ -90,11 +142,11 @@ mod tests {
         assert!((700..1300).contains(&pos), "class balance {pos}");
         // bias column is all ones
         for i in 0..d.n() {
-            assert_eq!(d.x[(i, 50)], 1.0);
+            assert_eq!(d.x.get(i, 50), 1.0);
         }
         // deterministic
         let d2 = synth::synth_mnist(2000, 50, 7);
-        assert_eq!(d.x.data, d2.x.data);
+        assert_eq!(d.x.as_dense().unwrap().data, d2.x.as_dense().unwrap().data);
         assert_eq!(d.t, d2.t);
     }
 
@@ -104,12 +156,12 @@ mod tests {
         // weights classify >= 90% correctly (the paper's 7v9 task is ~97%).
         let (d, w) = synth::synth_mnist_with_truth(5000, 50, 3);
         let mut correct = 0;
-        for i in 0..d.n() {
-            let s: f64 = d.x.row(i).iter().zip(&w).map(|(a, b)| a * b).sum();
+        d.x.for_each_row(|i, row| {
+            let s: f64 = row.iter().zip(&w).map(|(a, b)| a * b).sum();
             if s * d.t[i] > 0.0 {
                 correct += 1;
             }
-        }
+        });
         let acc = correct as f64 / d.n() as f64;
         assert!(acc > 0.90, "generator accuracy {acc}");
         // ... but not trivially separable (some hard points near the margin)
@@ -122,12 +174,11 @@ mod tests {
         assert_eq!(d.n(), 1500);
         assert_eq!(d.d(), 256); // exactly the artifact's feature dim
         assert_eq!(d.k, 3);
-        for i in 0..d.n() {
-            for j in 0..256 {
-                let v = d.x[(i, j)];
+        d.x.for_each_row(|_, row| {
+            for &v in row {
                 assert!(v == 0.0 || v == 1.0);
             }
-        }
+        });
         let mut counts = [0usize; 3];
         for &l in &d.labels {
             counts[l] += 1;
@@ -145,12 +196,11 @@ mod tests {
         let nonzero = w.iter().filter(|&&v| v != 0.0).count();
         assert!(nonzero < 58 / 2, "truth should be sparse, got {nonzero} nonzero");
         // residuals under the truth have heavier-than-gaussian tails
-        let mut resid: Vec<f64> = (0..d.n())
-            .map(|i| {
-                let pred: f64 = d.x.row(i).iter().zip(&w).map(|(a, b)| a * b).sum();
-                d.y[i] - pred
-            })
-            .collect();
+        let mut resid = vec![0.0f64; d.n()];
+        d.x.for_each_row(|i, row| {
+            let pred: f64 = row.iter().zip(&w).map(|(a, b)| a * b).sum();
+            resid[i] = d.y[i] - pred;
+        });
         let n = resid.len() as f64;
         let mean = resid.iter().sum::<f64>() / n;
         for r in &mut resid {

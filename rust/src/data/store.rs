@@ -1,0 +1,509 @@
+//! Unified feature-matrix storage: in-RAM [`DenseStore`] and out-of-core
+//! [`BlockStore`] behind one statically-dispatched [`DataStore`] enum.
+//!
+//! Every model reads its N×D feature matrix through `DataStore`, so the
+//! whole stack — models, backends, FlyMC, engine, CLI — is agnostic to
+//! whether the dataset is resident (today's behaviour, bit-identical) or
+//! served from a versioned `.fbin` file (see [`crate::data::fbin`]) through
+//! a direct-mapped block cache of row blocks. Steady-state FlyMC touches
+//! only the O(|bright|) rows the bright set names, so the cache working set
+//! is a few blocks — not the O(N·D) matrix — and the paper's "larger
+//! datasets than previously feasible" claim stops being gated on RAM.
+//!
+//! ## Ownership and the zero-alloc contract (DESIGN.md §Storage)
+//!
+//! The store itself is shared (inside the model's `Arc`) and immutable; the
+//! mutable state a cached read needs — block slots, tags, the staging byte
+//! buffer, hit/miss tallies — lives in a caller-owned [`RowCache`], carried
+//! by [`crate::models::EvalScratch`] exactly like the per-datum evaluation
+//! buffers. Backends allocate one cache per evaluator (serial) or per
+//! worker group (sharded) at construction; [`DataStore::row`] then never
+//! allocates: a miss is a positioned `read_exact_at` into the preallocated
+//! staging buffer plus an in-place little-endian decode into the slot.
+//! Dense reads ignore the cache entirely and return the resident row, so
+//! the `DenseStore` path is byte-for-byte the pre-refactor behaviour.
+
+use std::fs::File;
+use std::io;
+
+use crate::linalg::Matrix;
+
+/// Sizing for a [`BlockStore`]'s per-reader row caches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockCacheConfig {
+    /// rows per cached block (the positioned-read granularity)
+    pub rows_per_block: usize,
+    /// total cache budget in rows per [`RowCache`] (rounded down to whole
+    /// blocks, minimum one block)
+    pub cached_rows: usize,
+}
+
+impl Default for BlockCacheConfig {
+    fn default() -> Self {
+        BlockCacheConfig { rows_per_block: 64, cached_rows: 8192 }
+    }
+}
+
+impl BlockCacheConfig {
+    /// Config with a `cached_rows` budget (0 = keep the default budget).
+    pub fn with_budget(cached_rows: usize) -> Self {
+        let mut c = BlockCacheConfig::default();
+        if cached_rows > 0 {
+            c.cached_rows = cached_rows;
+        }
+        c
+    }
+
+    fn slots(&self) -> usize {
+        (self.cached_rows / self.rows_per_block.max(1)).max(1)
+    }
+}
+
+/// Caller-owned direct-mapped cache of feature-row blocks.
+///
+/// All storage is allocated at construction ([`DataStore::new_cache`]);
+/// lookups and fills never allocate. `hits`/`misses` are plain (non-atomic)
+/// tallies the owning backend drains into [`crate::metrics::Counters`]
+/// after each batch via [`RowCache::take_stats`].
+#[derive(Clone, Debug, Default)]
+pub struct RowCache {
+    rows_per_block: usize,
+    d: usize,
+    /// slot -> cached block id (`u64::MAX` = empty)
+    tags: Vec<u64>,
+    /// slot-major decoded rows: `slots × rows_per_block × d`
+    data: Vec<f64>,
+    /// staging buffer for one block's raw bytes
+    bytes: Vec<u8>,
+    hits: u64,
+    misses: u64,
+}
+
+impl RowCache {
+    /// A zero-capacity cache: what dense stores hand out (their reads never
+    /// consult it). Feeding it to a [`BlockStore`] read panics.
+    pub fn empty() -> Self {
+        RowCache::default()
+    }
+
+    fn sized(d: usize, cfg: BlockCacheConfig) -> Self {
+        let rpb = cfg.rows_per_block.max(1);
+        let slots = cfg.slots();
+        RowCache {
+            rows_per_block: rpb,
+            d,
+            tags: vec![u64::MAX; slots],
+            data: vec![0.0; slots * rpb * d],
+            bytes: vec![0; rpb * d * 8],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Number of block slots (0 for the dense/empty cache).
+    pub fn slots(&self) -> usize {
+        self.tags.len()
+    }
+
+    /// Drain and zero the (hits, misses) tallies accumulated since the last
+    /// call — the backend flushes these into its shared counters.
+    pub fn take_stats(&mut self) -> (u64, u64) {
+        let out = (self.hits, self.misses);
+        self.hits = 0;
+        self.misses = 0;
+        out
+    }
+}
+
+/// Today's storage: the resident row-major [`Matrix`]. Reads are direct
+/// slice borrows — bit-identical to the pre-`DataStore` code.
+#[derive(Clone, Debug)]
+pub struct DenseStore {
+    /// the resident N×D feature matrix
+    pub x: Matrix,
+}
+
+/// Out-of-core reader over the feature block of a `.fbin` dataset file
+/// (format: [`crate::data::fbin`]), serving rows through caller-owned
+/// [`RowCache`]s with pure-`std` positioned reads.
+#[derive(Debug)]
+pub struct BlockStore {
+    file: File,
+    n: usize,
+    d: usize,
+    /// byte offset of the row-major f64 feature block within the file
+    feat_off: u64,
+    cache_cfg: BlockCacheConfig,
+}
+
+impl Clone for BlockStore {
+    fn clone(&self) -> Self {
+        BlockStore {
+            file: self.file.try_clone().expect("duplicate BlockStore file handle"),
+            n: self.n,
+            d: self.d,
+            feat_off: self.feat_off,
+            cache_cfg: self.cache_cfg,
+        }
+    }
+}
+
+#[cfg(unix)]
+fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, off)
+}
+
+#[cfg(windows)]
+fn read_exact_at(file: &File, buf: &mut [u8], mut off: u64) -> io::Result<()> {
+    use std::os::windows::fs::FileExt;
+    let mut buf = buf;
+    while !buf.is_empty() {
+        match file.seek_read(buf, off) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "unexpected end of file",
+                ))
+            }
+            Ok(k) => {
+                let tmp = buf;
+                buf = &mut tmp[k..];
+                off += k as u64;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(any(unix, windows)))]
+fn read_exact_at(_file: &File, _buf: &mut [u8], _off: u64) -> io::Result<()> {
+    Err(io::Error::new(
+        io::ErrorKind::Unsupported,
+        "positioned file reads are not supported on this platform",
+    ))
+}
+
+impl BlockStore {
+    /// Wrap an open dataset file whose feature block (`n × d` row-major f64,
+    /// little-endian) starts at byte `feat_off`. The caller (the `.fbin`
+    /// reader) has already validated the header and file length.
+    pub fn new(
+        file: File,
+        n: usize,
+        d: usize,
+        feat_off: u64,
+        cache_cfg: BlockCacheConfig,
+    ) -> Self {
+        BlockStore { file, n, d, feat_off, cache_cfg }
+    }
+
+    /// The per-reader cache sizing this store hands out.
+    pub fn cache_config(&self) -> BlockCacheConfig {
+        self.cache_cfg
+    }
+
+    /// Read row `i` through `cache`, filling the row's block on a miss.
+    fn row<'a>(&self, i: usize, cache: &'a mut RowCache) -> &'a [f64] {
+        assert!(i < self.n, "row {i} out of range (n={})", self.n);
+        assert!(
+            cache.slots() > 0 && cache.d == self.d,
+            "BlockStore read through an unsized RowCache — build it with \
+             DataStore::new_cache()"
+        );
+        let rpb = cache.rows_per_block;
+        let block = i / rpb;
+        let slot = block % cache.tags.len();
+        let slot_base = slot * rpb * self.d;
+        if cache.tags[slot] != block as u64 {
+            cache.misses += 1;
+            let rows = rpb.min(self.n - block * rpb);
+            let nbytes = rows * self.d * 8;
+            let off = self.feat_off + (block * rpb * self.d) as u64 * 8;
+            read_exact_at(&self.file, &mut cache.bytes[..nbytes], off)
+                .expect("BlockStore positioned read failed");
+            for (v, chunk) in cache.data[slot_base..slot_base + rows * self.d]
+                .iter_mut()
+                .zip(cache.bytes[..nbytes].chunks_exact(8))
+            {
+                *v = f64::from_le_bytes(chunk.try_into().unwrap());
+            }
+            cache.tags[slot] = block as u64;
+        } else {
+            cache.hits += 1;
+        }
+        let base = slot_base + (i - block * rpb) * self.d;
+        &cache.data[base..base + self.d]
+    }
+
+    /// Single-element positioned read (test/tool convenience; slow).
+    fn get(&self, i: usize, j: usize) -> f64 {
+        assert!(i < self.n && j < self.d);
+        let mut buf = [0u8; 8];
+        let off = self.feat_off + (i * self.d + j) as u64 * 8;
+        read_exact_at(&self.file, &mut buf, off).expect("BlockStore positioned read failed");
+        f64::from_le_bytes(buf)
+    }
+
+    /// Sequential full pass with early exit (setup-time; allocates one
+    /// block buffer). Stops reading at the first `Err`.
+    fn try_for_each_row<E>(
+        &self,
+        mut f: impl FnMut(usize, &[f64]) -> Result<(), E>,
+    ) -> Result<(), E> {
+        let rpb = self.cache_cfg.rows_per_block.max(1);
+        let mut bytes = vec![0u8; rpb * self.d * 8];
+        let mut rows_buf = vec![0.0f64; rpb * self.d];
+        let nblocks = self.n.div_ceil(rpb);
+        for block in 0..nblocks {
+            let rows = rpb.min(self.n - block * rpb);
+            let nbytes = rows * self.d * 8;
+            let off = self.feat_off + (block * rpb * self.d) as u64 * 8;
+            read_exact_at(&self.file, &mut bytes[..nbytes], off)
+                .expect("BlockStore positioned read failed");
+            for (v, chunk) in rows_buf[..rows * self.d]
+                .iter_mut()
+                .zip(bytes[..nbytes].chunks_exact(8))
+            {
+                *v = f64::from_le_bytes(chunk.try_into().unwrap());
+            }
+            for r in 0..rows {
+                f(block * rpb + r, &rows_buf[r * self.d..(r + 1) * self.d])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The unified feature-matrix storage every model reads through.
+///
+/// An enum (static dispatch, no `dyn`) with the resident [`DenseStore`] and
+/// the out-of-core [`BlockStore`]; see the module docs for the ownership
+/// model and the zero-allocation contract.
+#[derive(Clone, Debug)]
+pub enum DataStore {
+    /// resident row-major matrix (bit-identical to pre-refactor behaviour)
+    Dense(DenseStore),
+    /// block-cached out-of-core `.fbin` reader
+    Block(BlockStore),
+}
+
+impl From<Matrix> for DataStore {
+    fn from(x: Matrix) -> Self {
+        DataStore::Dense(DenseStore { x })
+    }
+}
+
+impl DataStore {
+    /// Resident storage over `x` (the default everywhere data is synthesized
+    /// or parsed in RAM).
+    pub fn dense(x: Matrix) -> Self {
+        x.into()
+    }
+
+    /// Number of data rows N.
+    pub fn n_rows(&self) -> usize {
+        match self {
+            DataStore::Dense(s) => s.x.rows,
+            DataStore::Block(s) => s.n,
+        }
+    }
+
+    /// Feature dimension D (columns).
+    pub fn d(&self) -> usize {
+        match self {
+            DataStore::Dense(s) => s.x.cols,
+            DataStore::Block(s) => s.d,
+        }
+    }
+
+    /// Whether rows are served from disk rather than resident memory.
+    pub fn is_out_of_core(&self) -> bool {
+        matches!(self, DataStore::Block(_))
+    }
+
+    /// A row cache sized for this store: zero-capacity for dense storage,
+    /// the store's [`BlockCacheConfig`] budget for block storage. One-time
+    /// setup (owned by [`crate::models::EvalScratch`]); reads through it
+    /// never allocate.
+    pub fn new_cache(&self) -> RowCache {
+        match self {
+            DataStore::Dense(_) => RowCache::empty(),
+            DataStore::Block(s) => RowCache::sized(s.d, s.cache_cfg),
+        }
+    }
+
+    /// Row `i` as a slice — the hot-path read. Dense: a direct borrow of the
+    /// resident matrix (`cache` untouched). Block: served from `cache`,
+    /// filling the row's block with one positioned read on a miss.
+    /// Allocation-free in both arms.
+    #[inline]
+    pub fn row<'a>(&'a self, i: usize, cache: &'a mut RowCache) -> &'a [f64] {
+        match self {
+            DataStore::Dense(s) => s.x.row(i),
+            DataStore::Block(s) => s.row(i, cache),
+        }
+    }
+
+    /// Scalar element read (tests/tools; slow for block stores).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        match self {
+            DataStore::Dense(s) => s.x[(i, j)],
+            DataStore::Block(s) => s.get(i, j),
+        }
+    }
+
+    /// Visit every row in order — the setup-time streaming pass
+    /// (`rebuild_stats`, anchor tuning). May allocate a block buffer for
+    /// block stores; not part of the sampling hot path.
+    pub fn for_each_row(&self, mut f: impl FnMut(usize, &[f64])) {
+        let done: Result<(), std::convert::Infallible> = self.try_for_each_row(|i, row| {
+            f(i, row);
+            Ok(())
+        });
+        done.unwrap();
+    }
+
+    /// [`Self::for_each_row`] with early exit: stops visiting (and, for
+    /// block stores, stops reading blocks) at the first `Err`. Used by the
+    /// `.fbin` writer so a row rejected up front does not cost a full
+    /// streaming pass over a tall source.
+    pub fn try_for_each_row<E>(
+        &self,
+        mut f: impl FnMut(usize, &[f64]) -> Result<(), E>,
+    ) -> Result<(), E> {
+        match self {
+            DataStore::Dense(s) => {
+                for i in 0..s.x.rows {
+                    f(i, s.x.row(i))?;
+                }
+                Ok(())
+            }
+            DataStore::Block(s) => s.try_for_each_row(f),
+        }
+    }
+
+    /// The resident matrix, when this store is dense (tests/benches).
+    pub fn as_dense(&self) -> Option<&Matrix> {
+        match self {
+            DataStore::Dense(s) => Some(&s.x),
+            DataStore::Block(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        Matrix::from_vec(n, d, data)
+    }
+
+    fn block_store_over(m: &Matrix, cfg: BlockCacheConfig) -> (BlockStore, std::path::PathBuf) {
+        // raw feature block only (offset 0) — header handling is fbin's job
+        let path = std::env::temp_dir().join(format!(
+            "firefly_store_test_{}_{}x{}.bin",
+            std::process::id(),
+            m.rows,
+            m.cols
+        ));
+        let mut bytes = Vec::with_capacity(m.data.len() * 8);
+        for v in &m.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let file = File::open(&path).unwrap();
+        (BlockStore::new(file, m.rows, m.cols, 0, cfg), path)
+    }
+
+    #[test]
+    fn dense_rows_are_direct_borrows() {
+        let m = random_matrix(10, 4, 1);
+        let store = DataStore::dense(m.clone());
+        let mut cache = store.new_cache();
+        assert_eq!(cache.slots(), 0);
+        for i in 0..10 {
+            assert_eq!(store.row(i, &mut cache), m.row(i));
+        }
+        assert_eq!(cache.take_stats(), (0, 0));
+        assert!(!store.is_out_of_core());
+        assert_eq!(store.as_dense().unwrap().data, m.data);
+    }
+
+    #[test]
+    fn block_rows_bit_identical_to_dense_under_eviction() {
+        let m = random_matrix(103, 7, 2); // deliberately not block-aligned
+        // cache of 2 blocks × 8 rows — far smaller than N, forcing eviction
+        let cfg = BlockCacheConfig { rows_per_block: 8, cached_rows: 16 };
+        let (bs, path) = block_store_over(&m, cfg);
+        let store = DataStore::Block(bs);
+        assert_eq!(store.n_rows(), 103);
+        assert_eq!(store.d(), 7);
+        assert!(store.is_out_of_core());
+        assert!(store.as_dense().is_none());
+        let mut cache = store.new_cache();
+        assert_eq!(cache.slots(), 2);
+        // random access pattern with duplicates
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            let i = rng.below(103);
+            let got = store.row(i, &mut cache);
+            for (a, b) in got.iter().zip(m.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+            }
+        }
+        let (hits, misses) = cache.take_stats();
+        assert_eq!(hits + misses, 500);
+        assert!(misses > 2, "eviction never happened: {misses} misses");
+        // scalar reads and streaming agree too
+        assert_eq!(store.get(50, 3).to_bits(), m[(50, 3)].to_bits());
+        let mut seen = 0;
+        store.for_each_row(|i, row| {
+            assert_eq!(row, m.row(i));
+            seen += 1;
+        });
+        assert_eq!(seen, 103);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn repeated_reads_within_a_block_hit() {
+        let m = random_matrix(64, 3, 4);
+        let cfg = BlockCacheConfig { rows_per_block: 32, cached_rows: 32 };
+        let (bs, path) = block_store_over(&m, cfg);
+        let store = DataStore::Block(bs);
+        let mut cache = store.new_cache();
+        for _ in 0..10 {
+            store.row(5, &mut cache);
+            store.row(6, &mut cache);
+        }
+        let (hits, misses) = cache.take_stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 19);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsized RowCache")]
+    fn block_read_through_empty_cache_panics() {
+        let m = random_matrix(8, 2, 5);
+        let (bs, _path) = block_store_over(&m, BlockCacheConfig::default());
+        let store = DataStore::Block(bs);
+        let mut cache = RowCache::empty();
+        store.row(0, &mut cache);
+    }
+
+    #[test]
+    fn cache_config_budget_rounding() {
+        let c = BlockCacheConfig { rows_per_block: 64, cached_rows: 100 };
+        assert_eq!(c.slots(), 1); // rounds down, min one block
+        assert_eq!(BlockCacheConfig::with_budget(0).cached_rows, 8192);
+        assert_eq!(BlockCacheConfig::with_budget(256).cached_rows, 256);
+    }
+}

@@ -52,7 +52,7 @@ pub fn synth_mnist_with_truth(n: usize, d: usize, seed: u64) -> (LogisticData, V
         let logit: f64 = crate::linalg::dot(x.row(i), &w);
         t[i] = if rng.bernoulli(math::sigmoid(logit)) { 1.0 } else { -1.0 };
     }
-    (LogisticData { x, t }, w)
+    (LogisticData { x: x.into(), t }, w)
 }
 
 /// CIFAR-3-like task: exactly `d` binary features (matching the paper's 256
@@ -96,7 +96,7 @@ pub fn synth_cifar3(n: usize, d: usize, seed: u64) -> SoftmaxData {
         xs.row_mut(dst).copy_from_slice(x.row(src));
         ls[dst] = labels[src];
     }
-    SoftmaxData { x: xs, labels: ls, k }
+    SoftmaxData { x: xs.into(), labels: ls, k }
 }
 
 /// OPV-like robust-regression task: `d` total columns — `d-1` correlated
@@ -146,7 +146,7 @@ pub fn synth_opv_with_truth(n: usize, d_total: usize, seed: u64) -> (RegressionD
         };
         y[i] = mean + noise;
     }
-    (RegressionData { x, y }, w)
+    (RegressionData { x: x.into(), y }, w)
 }
 
 /// Tiny 2-d (+bias) two-class problem for Fig 2 / quickstart.
@@ -161,5 +161,5 @@ pub fn synth_toy2d(n: usize, seed: u64) -> LogisticData {
         x[(i, 2)] = 1.0;
         t[i] = c;
     }
-    LogisticData { x, t }
+    LogisticData { x: x.into(), t }
 }

@@ -176,8 +176,9 @@ pub fn ess_per_1000_min_components(trace: &TraceMatrix) -> f64 {
     ess_min_components(trace) * 1000.0 / trace.n_rows() as f64
 }
 
-/// Split-R̂ (Gelman–Rubin with halved chains) over one scalar per chain.
-pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
+/// Split-R̂ (Gelman–Rubin with halved chains) over borrowed per-chain
+/// scalar series — the core implementation; nothing is copied.
+pub fn split_rhat_slices(chains: &[&[f64]]) -> f64 {
     let mut halves: Vec<&[f64]> = Vec::new();
     for c in chains {
         let h = c.len() / 2;
@@ -201,22 +202,41 @@ pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
     (var_plus / w).sqrt()
 }
 
+/// [`split_rhat_slices`] over owned per-chain series (convenience wrapper).
+pub fn split_rhat(chains: &[Vec<f64>]) -> f64 {
+    let refs: Vec<&[f64]> = chains.iter().map(|c| c.as_slice()).collect();
+    split_rhat_slices(&refs)
+}
+
 /// Worst-case (max over θ components) split-R̂ across replica chains.
 /// `traces[r]` is replica r's post-burnin θ trace (rows = iterations).
 /// Returns NaN with fewer than 2 chains, traces too short to halve, or no
 /// component with positive within-chain variance.
+///
+/// Component columns are gathered into ONE flat `chains × rows` buffer
+/// reused across components (finishing the PR 2 trace flattening: the old
+/// assembly boxed a fresh `Vec<Vec<f64>>` of full columns per component).
+/// Traces of unequal length are truncated to the shortest (replicas always
+/// record equal lengths).
 pub fn split_rhat_max_components(traces: &[&TraceMatrix]) -> f64 {
     if traces.len() < 2 || traces.iter().any(|t| t.n_rows() < 4) {
         return f64::NAN;
     }
+    let rows = traces.iter().map(|t| t.n_rows()).min().unwrap();
     let d = traces[0].dim();
+    let mut flat = vec![0.0; traces.len() * rows];
     let mut worst = f64::NEG_INFINITY;
     for j in 0..d {
-        let comp: Vec<Vec<f64>> = traces
-            .iter()
-            .map(|t| t.column_iter(j).collect())
-            .collect();
-        let r = split_rhat(&comp);
+        for (c, t) in traces.iter().enumerate() {
+            for (dst, v) in flat[c * rows..(c + 1) * rows]
+                .iter_mut()
+                .zip(t.column_iter(j))
+            {
+                *dst = v;
+            }
+        }
+        let refs: Vec<&[f64]> = flat.chunks_exact(rows).collect();
+        let r = split_rhat_slices(&refs);
         if r.is_finite() {
             worst = worst.max(r);
         }
@@ -326,6 +346,9 @@ mod tests {
             .collect();
         let r = split_rhat(&chains);
         assert!((r - 1.0).abs() < 0.02, "rhat {r}");
+        // the borrowed-slice core is the same computation, bit for bit
+        let refs: Vec<&[f64]> = chains.iter().map(|c| c.as_slice()).collect();
+        assert_eq!(split_rhat_slices(&refs).to_bits(), r.to_bits());
     }
 
     #[test]

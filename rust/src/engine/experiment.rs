@@ -4,7 +4,8 @@
 use std::sync::Arc;
 
 use crate::configx::{Algorithm, ExperimentConfig, Task};
-use crate::data::synth;
+use crate::data::store::BlockCacheConfig;
+use crate::data::{fbin, synth, AnyData};
 use crate::diagnostics;
 use crate::engine::chain::{ChainConfig, ChainResult, ChainTarget};
 use crate::flymc::{FullPosterior, PseudoPosterior};
@@ -37,88 +38,84 @@ pub fn default_prior_scale(task: Task) -> f64 {
     }
 }
 
+/// Synthesize the task's workload at size `n` — the single source of truth
+/// for the per-task generator and its feature dimensions, shared by
+/// [`build_model`] and the CLI `convert` subcommand (so a converted `.fbin`
+/// holds exactly the dataset the in-RAM path would have synthesized).
+pub fn synth_dataset(task: Task, n: usize, seed: u64) -> AnyData {
+    match task {
+        Task::Toy => AnyData::Logistic(synth::synth_toy2d(n, seed)),
+        Task::LogisticMnist => AnyData::Logistic(synth::synth_mnist(n, 50, seed)),
+        Task::SoftmaxCifar => AnyData::Softmax(synth::synth_cifar3(n, 256, seed)),
+        Task::RobustOpv => AnyData::Regression(synth::synth_opv(n, 57, seed)),
+    }
+}
+
+/// MAP-tune (when the algorithm asks for it) and wrap a freshly built model.
+fn tune_and_wrap<M: XlaSource + 'static>(
+    mut model: M,
+    prior: Arc<dyn Prior>,
+    cfg: &ExperimentConfig,
+    lr: Option<f64>,
+) -> (Arc<dyn XlaSource>, Arc<dyn Prior>, Option<Vec<f64>>, u64) {
+    let (map, q) = if cfg.algorithm == Algorithm::MapTunedFlyMc {
+        let mut mc = MapConfig {
+            steps: cfg.map_steps,
+            seed: cfg.seed ^ 0xAD,
+            ..Default::default()
+        };
+        if let Some(lr) = lr {
+            mc.lr = lr;
+        }
+        let res = map_estimate(&model, prior.as_ref(), &mc);
+        model.tune_anchors_map(&res.theta);
+        (Some(res.theta), res.lik_queries)
+    } else {
+        (None, 0)
+    };
+    (Arc::new(model), prior, map, q)
+}
+
 /// Build the tuned model + prior for a task. Returns the model (already
 /// MAP-tuned if requested), the prior, the MAP point (if tuned) and the
 /// number of likelihood queries the tuning cost (reported separately, as in
 /// the paper).
+///
+/// With `cfg.data_path` set, the dataset is read out of core from the
+/// `.fbin` file (its label kind must match the task; `n_data` is ignored —
+/// the file defines N) and sampled through block-cached reads sized by
+/// `cfg.cache_rows`; otherwise the task's workload is synthesized in RAM.
 pub fn build_model(
     cfg: &ExperimentConfig,
-) -> (Arc<dyn XlaSource>, Arc<dyn Prior>, Option<Vec<f64>>, u64) {
-    let n = cfg.n_data.unwrap_or_else(|| default_n(cfg.task));
-    let tune = cfg.algorithm == Algorithm::MapTunedFlyMc;
-    match cfg.task {
-        Task::LogisticMnist | Task::Toy => {
-            let data = Arc::new(if cfg.task == Task::Toy {
-                synth::synth_toy2d(n, cfg.seed)
-            } else {
-                synth::synth_mnist(n, 50, cfg.seed)
-            });
-            let scale = cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task));
+) -> anyhow::Result<(Arc<dyn XlaSource>, Arc<dyn Prior>, Option<Vec<f64>>, u64)> {
+    let data = match &cfg.data_path {
+        Some(path) => fbin::open_fbin(path, BlockCacheConfig::with_budget(cfg.cache_rows))
+            .map_err(|e| anyhow::anyhow!(e))?,
+        None => {
+            let n = cfg.n_data.unwrap_or_else(|| default_n(cfg.task));
+            synth_dataset(cfg.task, n, cfg.seed)
+        }
+    };
+    let scale = cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task));
+    Ok(match (cfg.task, data) {
+        (Task::LogisticMnist | Task::Toy, AnyData::Logistic(d)) => {
             let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale });
-            let mut model = LogisticJJ::new(data, cfg.untuned_xi);
-            let (map, q) = if tune {
-                let res = map_estimate(
-                    &model,
-                    prior.as_ref(),
-                    &MapConfig {
-                        steps: cfg.map_steps,
-                        seed: cfg.seed ^ 0xAD,
-                        ..Default::default()
-                    },
-                );
-                model.tune_anchors_map(&res.theta);
-                (Some(res.theta), res.lik_queries)
-            } else {
-                (None, 0)
-            };
-            (Arc::new(model), prior, map, q)
+            tune_and_wrap(LogisticJJ::new(Arc::new(d), cfg.untuned_xi), prior, cfg, None)
         }
-        Task::SoftmaxCifar => {
-            let data = Arc::new(synth::synth_cifar3(n, 256, cfg.seed));
-            let scale = cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task));
+        (Task::SoftmaxCifar, AnyData::Softmax(d)) => {
             let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale });
-            let mut model = SoftmaxBohning::new(data);
-            let (map, q) = if tune {
-                let res = map_estimate(
-                    &model,
-                    prior.as_ref(),
-                    &MapConfig {
-                        steps: cfg.map_steps,
-                        seed: cfg.seed ^ 0xAD,
-                        ..Default::default()
-                    },
-                );
-                model.tune_anchors_map(&res.theta);
-                (Some(res.theta), res.lik_queries)
-            } else {
-                (None, 0)
-            };
-            (Arc::new(model), prior, map, q)
+            tune_and_wrap(SoftmaxBohning::new(Arc::new(d)), prior, cfg, None)
         }
-        Task::RobustOpv => {
-            let data = Arc::new(synth::synth_opv(n, 57, cfg.seed));
-            let b = cfg.prior_scale.unwrap_or_else(|| default_prior_scale(cfg.task));
-            let prior: Arc<dyn Prior> = Arc::new(Laplace { b });
-            let mut model = RobustT::new(data, 4.0, 0.5);
-            let (map, q) = if tune {
-                let res = map_estimate(
-                    &model,
-                    prior.as_ref(),
-                    &MapConfig {
-                        steps: cfg.map_steps,
-                        lr: 0.1,
-                        seed: cfg.seed ^ 0xAD,
-                        ..Default::default()
-                    },
-                );
-                model.tune_anchors_map(&res.theta);
-                (Some(res.theta), res.lik_queries)
-            } else {
-                (None, 0)
-            };
-            (Arc::new(model), prior, map, q)
+        (Task::RobustOpv, AnyData::Regression(d)) => {
+            let prior: Arc<dyn Prior> = Arc::new(Laplace { b: scale });
+            tune_and_wrap(RobustT::new(Arc::new(d), 4.0, 0.5), prior, cfg, Some(0.1))
         }
-    }
+        (task, data) => anyhow::bail!(
+            "{} holds a {} dataset, which does not feed task {task:?}",
+            cfg.data_path.as_deref().unwrap_or("dataset"),
+            data.kind_name()
+        ),
+    })
 }
 
 /// The paper's sampler per task, with the paper's target acceptance rates.
@@ -265,7 +262,7 @@ pub fn chain_config(cfg: &ExperimentConfig, seed: u64) -> ChainConfig {
 /// keeps memory bounded).
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentResult> {
     let timer = Timer::start();
-    let (model, prior, _map, map_queries) = build_model(cfg);
+    let (model, prior, _map, map_queries) = build_model(cfg)?;
     let setup_secs = timer.elapsed_secs();
     let n_data = model.n();
     let chains = crate::engine::multi_chain::run_replica_chains(cfg, model, prior)?;

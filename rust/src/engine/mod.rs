@@ -12,5 +12,5 @@ pub mod multi_chain;
 pub use chain::{
     derive_replica_seed, run_chain, run_chain_replicas, ChainConfig, ChainResult, ChainTarget,
 };
-pub use experiment::{build_chain, run_experiment, ExperimentResult, TableRow};
+pub use experiment::{build_chain, run_experiment, synth_dataset, ExperimentResult, TableRow};
 pub use multi_chain::{run_multi_chain, summarize_chains, MultiChainSummary};

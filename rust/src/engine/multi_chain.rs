@@ -67,15 +67,17 @@ pub fn run_replica_chains(
 pub fn summarize_chains(chains: &[ChainResult], burnin: usize) -> MultiChainSummary {
     let traces: Vec<&diagnostics::TraceMatrix> =
         chains.iter().map(|c| &c.theta_trace).collect();
-    let logpost: Vec<Vec<f64>> = chains
+    // post-burnin log-posterior series are borrowed in place — the old
+    // collection copied every chain's tail into a Vec<Vec<f64>>
+    let logpost: Vec<&[f64]> = chains
         .iter()
-        .map(|c| c.logpost_joint[burnin.min(c.logpost_joint.len())..].to_vec())
+        .map(|c| &c.logpost_joint[burnin.min(c.logpost_joint.len())..])
         .collect();
     let queries: Vec<f64> = chains.iter().map(|c| c.avg_queries_post_burnin(burnin)).collect();
     MultiChainSummary {
         replicas: chains.len(),
         split_rhat_max: diagnostics::split_rhat_max_components(&traces),
-        split_rhat_logpost: diagnostics::split_rhat(&logpost),
+        split_rhat_logpost: diagnostics::split_rhat_slices(&logpost),
         pooled_ess: diagnostics::pooled_ess_min_components(&traces),
         avg_queries_per_iter: crate::util::math::mean(&queries),
         total_lik_queries: chains.iter().map(|c| c.final_counters.lik_queries).sum(),

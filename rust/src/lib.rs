@@ -21,6 +21,14 @@
 //! §Perf; enforced by counting-allocator tests and tracked by
 //! `benches/hotpath.rs`).
 //!
+//! Datasets feed the models through the unified
+//! [`data::store::DataStore`] layer: resident (`DenseStore`,
+//! bit-identical to in-RAM behaviour) or out-of-core over the versioned
+//! `.fbin` format (`BlockStore` + [`data::fbin`]) with preallocated
+//! block-cached reads, so datasets larger than RAM sample through the
+//! same engine — byte-identical chains, still allocation-free (DESIGN.md
+//! §Storage; CLI `convert` / `--data`).
+//!
 //! ## Quick start
 //!
 //! A complete (tiny) experiment runs in milliseconds:

@@ -4,22 +4,27 @@
 //!   run        — run one experiment (flags or --config TOML), print summary
 //!   table1     — run all three algorithms for a task, print the Table-1 rows
 //!   map        — run the MAP estimation alone, print the objective
+//!   convert    — write a CSV file or a synthetic workload as a `.fbin`
+//!                out-of-core dataset
 //!   artifacts  — list the XLA artifacts the runtime can see
 //!
 //! Examples:
 //!   firefly run --task mnist --algorithm map --iters 2000
 //!   firefly table1 --task mnist --n 12214 --iters 1500 --chains 2
-//!   firefly run --config my_experiment.toml --backend xla
+//!   firefly convert --task opv --n 1800000 --out opv.fbin
+//!   firefly convert --csv data.csv --kind logistic --out data.fbin
+//!   firefly run --task opv --data opv.fbin --cache-rows 65536
 
 use firefly::bench_harness::Report;
 use firefly::cli::Args;
 use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
-use firefly::engine::{run_experiment, ExperimentResult};
+use firefly::data::fbin::LabelKind;
+use firefly::engine::{run_experiment, synth_dataset, ExperimentResult};
 use firefly::runtime::Manifest;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: firefly <run|table1|map|artifacts> [flags]
+        "usage: firefly <run|table1|map|convert|artifacts> [flags]
   common flags:
     --task mnist|cifar|opv|toy     workload (default mnist)
     --algorithm regular|untuned|map  (default map)
@@ -34,8 +39,20 @@ fn usage() -> ! {
     --seed <int>
     --q <float>                    q_dark->bright override
     --explicit                     use explicit (Alg 1) z-resampling
+    --data <file.fbin>             sample this out-of-core dataset instead of
+                                   synthesizing (label kind must match --task;
+                                   --n is ignored)
+    --cache-rows <int>             block-cache budget in rows per reader for
+                                   --data (0 = default)
     --config <file.toml>           load config file first, flags override
-    --artifacts <dir>              artifact directory (default artifacts)"
+    --artifacts <dir>              artifact directory (default artifacts)
+  convert flags:
+    --out <file.fbin>              output path (required)
+    --csv <file.csv>               convert a CSV file (streamed row by row)
+    --kind logistic|softmax|regression  CSV label kind (default logistic)
+    --no-bias                      do not append a bias column to CSV rows
+    --task/--n/--seed              without --csv: write the task's synthetic
+                                   workload (paper-scale N by default)"
     );
     std::process::exit(2);
 }
@@ -72,7 +89,48 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     }
     cfg.map_steps = args.get_usize("map-steps", cfg.map_steps);
     cfg.artifacts_dir = args.get_str("artifacts", &cfg.artifacts_dir);
+    if let Some(p) = args.get("data") {
+        cfg.data_path = Some(p.to_string());
+    }
+    cfg.cache_rows = args.get_usize("cache-rows", cfg.cache_rows);
     Ok(cfg)
+}
+
+/// `firefly convert`: CSV or synthetic workload → `.fbin`.
+fn run_convert(args: &Args) -> Result<(), String> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| "convert requires --out <file.fbin>".to_string())?
+        .to_string();
+    let header = if let Some(csv_path) = args.get("csv") {
+        let kind = LabelKind::parse(&args.get_str("kind", "logistic"))?;
+        let bias = !args.has("no-bias");
+        // streamed line by line: the source CSV may be larger than RAM
+        let file = std::fs::File::open(csv_path).map_err(|e| format!("{csv_path}: {e}"))?;
+        let reader = std::io::BufReader::new(file);
+        firefly::data::csv::stream_reader_to_fbin(reader, kind, bias, &out)?
+    } else {
+        let task = Task::parse(&args.get_str("task", "mnist"))?;
+        let n = args.get_usize(
+            "n",
+            firefly::engine::experiment::default_n(task),
+        );
+        let seed = args.get_u64("seed", 0);
+        let data = synth_dataset(task, n, seed);
+        firefly::data::fbin::write_fbin(&out, &data).map_err(|e| format!("{out}: {e}"))?
+    };
+    println!(
+        "wrote {out}: kind={} N={} D={}{}",
+        header.label_kind.name(),
+        header.n,
+        header.d,
+        if header.label_kind == LabelKind::Class {
+            format!(" K={}", header.k)
+        } else {
+            String::new()
+        }
+    );
+    Ok(())
 }
 
 fn print_summary(res: &ExperimentResult) {
@@ -162,7 +220,11 @@ fn main() {
                 eprintln!("config error: {e}");
                 std::process::exit(2)
             });
-            let (model, prior, _, _) = firefly::engine::experiment::build_model(&cfg);
+            let (model, prior, _, _) =
+                firefly::engine::experiment::build_model(&cfg).unwrap_or_else(|e| {
+                    eprintln!("model error: {e:#}");
+                    std::process::exit(1)
+                });
             let res = firefly::map_estimate::map_estimate(
                 model.as_ref(),
                 prior.as_ref(),
@@ -175,6 +237,12 @@ fn main() {
             println!("MAP objective estimate: {:.3}", res.final_log_post_estimate);
             println!("lik queries: {}", res.lik_queries);
             println!("theta[0..5]: {:?}", &res.theta[..res.theta.len().min(5)]);
+        }
+        "convert" => {
+            if let Err(e) = run_convert(&args) {
+                eprintln!("convert error: {e}");
+                std::process::exit(1)
+            }
         }
         "artifacts" => {
             let dir = args.get_str("artifacts", "artifacts");

@@ -29,6 +29,8 @@ struct CounterCells {
     collapsed_bound_evals: AtomicU64,
     xla_executions: AtomicU64,
     padded_lanes: AtomicU64,
+    data_cache_hits: AtomicU64,
+    data_cache_misses: AtomicU64,
 }
 
 impl Counters {
@@ -62,6 +64,21 @@ impl Counters {
     pub fn add_padded(&self, n: u64) {
         self.inner.padded_lanes.fetch_add(n, Relaxed);
     }
+    /// Record feature-row block-cache hits and misses (drained from the
+    /// backends' [`crate::data::store::RowCache`]s once per batch; both
+    /// zero for dense stores). Deliberately NOT part of
+    /// [`Counters::snapshot`]: hit patterns depend on cache topology (one
+    /// cache serially vs one per worker group), so they are excluded from
+    /// the cross-backend counter-equality contract.
+    #[inline]
+    pub fn add_data_cache(&self, hits: u64, misses: u64) {
+        if hits > 0 {
+            self.inner.data_cache_hits.fetch_add(hits, Relaxed);
+        }
+        if misses > 0 {
+            self.inner.data_cache_misses.fetch_add(misses, Relaxed);
+        }
+    }
 
     /// Total likelihood queries so far.
     pub fn lik_queries(&self) -> u64 {
@@ -83,6 +100,14 @@ impl Counters {
     pub fn padded_lanes(&self) -> u64 {
         self.inner.padded_lanes.load(Relaxed)
     }
+    /// Total feature-row block-cache hits so far.
+    pub fn data_cache_hits(&self) -> u64 {
+        self.inner.data_cache_hits.load(Relaxed)
+    }
+    /// Total feature-row block-cache misses so far.
+    pub fn data_cache_misses(&self) -> u64 {
+        self.inner.data_cache_misses.load(Relaxed)
+    }
 
     /// Snapshot for per-iteration deltas.
     pub fn snapshot(&self) -> CounterSnapshot {
@@ -101,6 +126,8 @@ impl Counters {
         self.inner.collapsed_bound_evals.store(0, Relaxed);
         self.inner.xla_executions.store(0, Relaxed);
         self.inner.padded_lanes.store(0, Relaxed);
+        self.inner.data_cache_hits.store(0, Relaxed);
+        self.inner.data_cache_misses.store(0, Relaxed);
     }
 }
 
@@ -221,6 +248,23 @@ mod tests {
         assert_eq!(c.lik_queries(), 15);
         c.reset();
         assert_eq!(c.lik_queries(), 0);
+    }
+
+    #[test]
+    fn data_cache_counters_accumulate_outside_snapshots() {
+        let c = Counters::new();
+        c.add_data_cache(10, 3);
+        c.add_data_cache(0, 0); // no-op fast path
+        assert_eq!(c.data_cache_hits(), 10);
+        assert_eq!(c.data_cache_misses(), 3);
+        // cache stats are deliberately not part of the snapshot equality
+        // contract (hit patterns are cache-topology-dependent)
+        let a = c.snapshot();
+        c.add_data_cache(5, 5);
+        assert_eq!(a, c.snapshot());
+        c.reset();
+        assert_eq!(c.data_cache_hits(), 0);
+        assert_eq!(c.data_cache_misses(), 0);
     }
 
     #[test]

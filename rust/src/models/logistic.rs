@@ -7,10 +7,16 @@
 //! Collapse    : sum_n log B_n = theta^T A theta + b^T theta + c0 with
 //!               A = sum a_n x_n x_n^T,  b = 1/2 sum t_n x_n,  c0 = sum c_n —
 //!               O(D^2) per evaluation after O(N D^2) setup.
+//!
+//! Feature rows are read through the dataset's [`crate::data::store::DataStore`]
+//! (resident or block-cached out-of-core) via the scratch-owned row cache;
+//! the per-datum arithmetic is unchanged, so dense-backed chains are
+//! bit-identical to the pre-`DataStore` code.
 
 use std::sync::Arc;
 
 use super::{bright_coeff, EvalScratch, ModelBound, ModelKind};
+use crate::data::store::RowCache;
 use crate::data::LogisticData;
 use crate::linalg::{axpy, dot, Matrix};
 use crate::util::math::{log1p_exp, log_sigmoid, sigmoid};
@@ -56,27 +62,29 @@ impl LogisticJJ {
         m
     }
 
-    /// Recompute the collapsed sufficient statistics — O(N D^2).
+    /// Recompute the collapsed sufficient statistics — one streaming pass
+    /// over the feature store, O(N D^2) (setup-time; may allocate).
     pub fn rebuild_stats(&mut self) {
         let d = self.data.d();
         let mut a_mat = Matrix::zeros(d, d);
         let mut b_vec = vec![0.0; d];
         let mut c_sum = 0.0;
-        for i in 0..self.data.n() {
-            let (a, _, c) = jj_coeffs(self.xi[i]);
-            let row = self.data.x.row(i);
+        let xi = &self.xi;
+        let t = &self.data.t;
+        self.data.x.for_each_row(|i, row| {
+            let (a, _, c) = jj_coeffs(xi[i]);
             a_mat.add_weighted_outer(a, row);
-            axpy(0.5 * self.data.t[i], row, &mut b_vec);
+            axpy(0.5 * t[i], row, &mut b_vec);
             c_sum += c;
-        }
+        });
         self.a_mat = a_mat;
         self.b_vec = b_vec;
         self.c_sum = c_sum;
     }
 
     #[inline]
-    fn s(&self, theta: &[f64], n: usize) -> f64 {
-        self.data.t[n] * dot(self.data.x.row(n), theta)
+    fn s(&self, theta: &[f64], n: usize, rows: &mut RowCache) -> f64 {
+        self.data.t[n] * dot(self.data.x.row(n, rows), theta)
     }
 }
 
@@ -91,8 +99,12 @@ impl ModelBound for LogisticJJ {
         ModelKind::Logistic
     }
 
-    fn log_lik(&self, theta: &[f64], n: usize, _scratch: &mut EvalScratch) -> f64 {
-        log_sigmoid(self.s(theta, n))
+    fn new_scratch(&self) -> EvalScratch {
+        EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
+    }
+
+    fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
+        log_sigmoid(self.s(theta, n, &mut scratch.rows))
     }
 
     fn log_lik_grad_acc(
@@ -100,15 +112,16 @@ impl ModelBound for LogisticJJ {
         theta: &[f64],
         n: usize,
         grad: &mut [f64],
-        _scratch: &mut EvalScratch,
+        scratch: &mut EvalScratch,
     ) {
-        let s = self.s(theta, n);
+        let row = self.data.x.row(n, &mut scratch.rows);
+        let s = self.data.t[n] * dot(row, theta);
         let coeff = sigmoid(-s) * self.data.t[n];
-        axpy(coeff, self.data.x.row(n), grad);
+        axpy(coeff, row, grad);
     }
 
-    fn log_both(&self, theta: &[f64], n: usize, _scratch: &mut EvalScratch) -> (f64, f64) {
-        let s = self.s(theta, n);
+    fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
+        let s = self.s(theta, n, &mut scratch.rows);
         let ll = log_sigmoid(s);
         let (a, b, c) = jj_coeffs(self.xi[n]);
         let lb = (a * s * s + b * s + c).min(ll);
@@ -120,16 +133,17 @@ impl ModelBound for LogisticJJ {
         theta: &[f64],
         n: usize,
         grad: &mut [f64],
-        _scratch: &mut EvalScratch,
+        scratch: &mut EvalScratch,
     ) {
-        let s = self.s(theta, n);
+        let row = self.data.x.row(n, &mut scratch.rows);
+        let s = self.data.t[n] * dot(row, theta);
         let ll = log_sigmoid(s);
         let (a, b, c) = jj_coeffs(self.xi[n]);
         let lb = (a * s * s + b * s + c).min(ll);
         let dll = sigmoid(-s);
         let dlb = 2.0 * a * s + b;
         let coeff = bright_coeff(dll, dlb, lb - ll) * self.data.t[n];
-        axpy(coeff, self.data.x.row(n), grad);
+        axpy(coeff, row, grad);
     }
 
     fn log_both_pseudo_grad(
@@ -137,16 +151,17 @@ impl ModelBound for LogisticJJ {
         theta: &[f64],
         n: usize,
         grad: &mut [f64],
-        _scratch: &mut EvalScratch,
+        scratch: &mut EvalScratch,
     ) -> (f64, f64) {
-        let s = self.s(theta, n);
+        let row = self.data.x.row(n, &mut scratch.rows);
+        let s = self.data.t[n] * dot(row, theta);
         let ll = log_sigmoid(s);
         let (a, b, c) = jj_coeffs(self.xi[n]);
         let lb = (a * s * s + b * s + c).min(ll);
         let dll = sigmoid(-s);
         let dlb = 2.0 * a * s + b;
         let coeff = bright_coeff(dll, dlb, lb - ll) * self.data.t[n];
-        axpy(coeff, self.data.x.row(n), grad);
+        axpy(coeff, row, grad);
         (ll, lb)
     }
 
@@ -170,9 +185,11 @@ impl ModelBound for LogisticJJ {
     }
 
     fn tune_anchors_map(&mut self, theta_map: &[f64]) {
-        for n in 0..self.data.n() {
-            self.xi[n] = self.s(theta_map, n).abs();
-        }
+        let t = &self.data.t;
+        let xi = &mut self.xi;
+        self.data.x.for_each_row(|n, row| {
+            xi[n] = (t[n] * dot(row, theta_map)).abs();
+        });
         self.rebuild_stats();
     }
 
@@ -229,6 +246,7 @@ mod tests {
     fn collapsed_product_matches_pointwise_sum() {
         let m = small();
         let mut sc = m.new_scratch();
+        let mut rows = m.data.x.new_cache();
         testing::check_msg(
             "collapse == sum of bounds",
             25,
@@ -237,7 +255,7 @@ mod tests {
                 // pointwise sum without the min() clamp (collapse can't clamp)
                 let mut sum = 0.0;
                 for n in 0..m.n() {
-                    let s = m.s(theta, n);
+                    let s = m.s(theta, n, &mut rows);
                     let (a, b, c) = jj_coeffs(m.xi[n]);
                     sum += a * s * s + b * s + c;
                 }

@@ -23,6 +23,8 @@ pub use priors::{IsoGaussian, Laplace, Prior};
 pub use robust::RobustT;
 pub use softmax::SoftmaxBohning;
 
+use crate::data::store::RowCache;
+
 /// Which XLA artifact family a model maps to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelKind {
@@ -46,8 +48,8 @@ impl ModelKind {
 }
 
 /// Reusable scratch buffers for model evaluations, owned by the caller
-/// (backends allocate one per evaluator/shard at construction; samplers and
-/// the pseudo-posterior own their own).
+/// (backends allocate one per evaluator/worker group at construction;
+/// samplers and the pseudo-posterior own their own).
 ///
 /// Every per-datum and collapsed evaluation method on [`ModelBound`] takes a
 /// `&mut EvalScratch` instead of allocating temporaries, which is what makes
@@ -56,9 +58,16 @@ impl ModelKind {
 /// contents are unspecified on entry: implementations must overwrite before
 /// reading, and callers must not rely on contents across calls.
 ///
-/// The buffers are sized for the worst consumer at construction
+/// The scratch also carries the [`RowCache`] through which the model reads
+/// its feature rows from the [`crate::data::store::DataStore`]: zero-sized
+/// for resident data, a preallocated direct-mapped block cache for
+/// out-of-core `.fbin` data (DESIGN.md §Storage). Cache state, like the
+/// buffers, only affects *where* a row is served from — never its bits.
+///
+/// Everything is sized for the worst consumer at construction
 /// ([`EvalScratch::sized`] / [`ModelBound::new_scratch`]); methods only
-/// slice into them, so no call ever reallocates.
+/// slice into the buffers and block fills reuse the cache's staging arena,
+/// so no call ever allocates.
 #[derive(Clone, Debug)]
 pub struct EvalScratch {
     /// per-class logit buffer (softmax η), length `n_classes`
@@ -69,18 +78,37 @@ pub struct EvalScratch {
     pub(crate) acc: Vec<f64>,
     /// dim-sized column buffer (softmax class-sum / column-mean vectors)
     pub(crate) col: Vec<f64>,
+    /// feature-row cache for the model's `DataStore` reads (zero-sized when
+    /// the store is dense)
+    pub(crate) rows: RowCache,
 }
 
 impl EvalScratch {
     /// Scratch sized for a model of `dim` flattened parameters and
-    /// `classes` softmax classes (1 for non-softmax models).
+    /// `classes` softmax classes (1 for non-softmax models), with a
+    /// zero-sized row cache (resident data). Models over an out-of-core
+    /// store attach a real cache via [`EvalScratch::with_rows`].
     pub fn sized(dim: usize, classes: usize) -> Self {
         EvalScratch {
             eta: vec![0.0; classes],
             dlb: vec![0.0; classes],
             acc: vec![0.0; dim],
             col: vec![0.0; dim],
+            rows: RowCache::empty(),
         }
+    }
+
+    /// Attach a feature-row cache (from
+    /// [`crate::data::store::DataStore::new_cache`]).
+    pub fn with_rows(mut self, rows: RowCache) -> Self {
+        self.rows = rows;
+        self
+    }
+
+    /// Drain the row cache's (hits, misses) tallies — backends flush these
+    /// into [`crate::metrics::Counters`] after each batch.
+    pub fn take_cache_stats(&mut self) -> (u64, u64) {
+        self.rows.take_stats()
     }
 }
 
@@ -114,7 +142,10 @@ pub trait ModelBound: Send + Sync {
     }
 
     /// Allocate an [`EvalScratch`] sized for this model. One-time setup per
-    /// evaluator/shard; the evaluation methods then never allocate.
+    /// evaluator/worker group; the evaluation methods then never allocate.
+    /// Models whose feature store can be out-of-core MUST override this to
+    /// attach a row cache (`EvalScratch::sized(..).with_rows(store.new_cache())`)
+    /// — the three paper models all do.
     fn new_scratch(&self) -> EvalScratch {
         EvalScratch::sized(self.dim(), self.n_classes())
     }

@@ -9,10 +9,15 @@
 //! Collapse   : sum_n log B_n = theta^T A theta + b^T theta + c0 with
 //!              A = sum fp_n x x^T, b = -2 sum fp_n y_n x_n,
 //!              c0 = sum [f(u0_n) - fp_n u0_n + fp_n y_n^2].
+//!
+//! Feature rows are read through the dataset's [`crate::data::store::DataStore`]
+//! via the scratch-owned row cache; dense-backed chains are bit-identical
+//! to the pre-`DataStore` code.
 
 use std::sync::Arc;
 
 use super::{bright_coeff, EvalScratch, ModelBound, ModelKind};
+use crate::data::store::RowCache;
 use crate::data::RegressionData;
 use crate::linalg::{axpy, dot, Matrix};
 use crate::util::math::t_logconst;
@@ -59,8 +64,8 @@ impl RobustT {
     }
 
     #[inline]
-    fn resid(&self, theta: &[f64], n: usize) -> f64 {
-        self.data.y[n] - dot(self.data.x.row(n), theta)
+    fn resid(&self, theta: &[f64], n: usize, rows: &mut RowCache) -> f64 {
+        self.data.y[n] - dot(self.data.x.row(n, rows), theta)
     }
 
     /// f(u0) and f'(u0) of the log-density as a function of u.
@@ -72,20 +77,20 @@ impl RobustT {
         (f0, fp0)
     }
 
-    /// Recompute the collapsed sufficient statistics — O(N D^2).
+    /// Recompute the collapsed sufficient statistics — one streaming pass
+    /// over the feature store, O(N D^2) (setup-time; may allocate).
     pub fn rebuild_stats(&mut self) {
         let d = self.data.d();
         let mut a_mat = Matrix::zeros(d, d);
         let mut b_vec = vec![0.0; d];
         let mut c_sum = 0.0;
-        for i in 0..self.data.n() {
+        let y = &self.data.y;
+        self.data.x.for_each_row(|i, row| {
             let (f0, fp0) = self.tangent(self.u0[i]);
-            let row = self.data.x.row(i);
-            let y = self.data.y[i];
             a_mat.add_weighted_outer(fp0, row);
-            axpy(-2.0 * fp0 * y, row, &mut b_vec);
-            c_sum += f0 - fp0 * self.u0[i] + fp0 * y * y;
-        }
+            axpy(-2.0 * fp0 * y[i], row, &mut b_vec);
+            c_sum += f0 - fp0 * self.u0[i] + fp0 * y[i] * y[i];
+        });
         self.a_mat = a_mat;
         self.b_vec = b_vec;
         self.c_sum = c_sum;
@@ -103,8 +108,12 @@ impl ModelBound for RobustT {
         ModelKind::Robust
     }
 
-    fn log_lik(&self, theta: &[f64], n: usize, _scratch: &mut EvalScratch) -> f64 {
-        let r = self.resid(theta, n);
+    fn new_scratch(&self) -> EvalScratch {
+        EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
+    }
+
+    fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
+        let r = self.resid(theta, n, &mut scratch.rows);
         self.logc - (self.nu + 1.0) / 2.0 * (r * r / self.c2()).ln_1p()
     }
 
@@ -113,16 +122,17 @@ impl ModelBound for RobustT {
         theta: &[f64],
         n: usize,
         grad: &mut [f64],
-        _scratch: &mut EvalScratch,
+        scratch: &mut EvalScratch,
     ) {
-        let r = self.resid(theta, n);
+        let row = self.data.x.row(n, &mut scratch.rows);
+        let r = self.data.y[n] - dot(row, theta);
         // d logL / d r = -(nu+1) r / (c2 + r^2); d r / d theta = -x
         let coeff = (self.nu + 1.0) * r / (self.c2() + r * r);
-        axpy(coeff, self.data.x.row(n), grad);
+        axpy(coeff, row, grad);
     }
 
-    fn log_both(&self, theta: &[f64], n: usize, _scratch: &mut EvalScratch) -> (f64, f64) {
-        let r = self.resid(theta, n);
+    fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
+        let r = self.resid(theta, n, &mut scratch.rows);
         let u = r * r;
         let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / self.c2()).ln_1p();
         let (f0, fp0) = self.tangent(self.u0[n]);
@@ -135,9 +145,10 @@ impl ModelBound for RobustT {
         theta: &[f64],
         n: usize,
         grad: &mut [f64],
-        _scratch: &mut EvalScratch,
+        scratch: &mut EvalScratch,
     ) {
-        let r = self.resid(theta, n);
+        let row = self.data.x.row(n, &mut scratch.rows);
+        let r = self.data.y[n] - dot(row, theta);
         let u = r * r;
         let c2 = self.c2();
         let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / c2).ln_1p();
@@ -146,7 +157,7 @@ impl ModelBound for RobustT {
         let dll = -(self.nu + 1.0) * r / (c2 + u);
         let dlb = 2.0 * fp0 * r;
         let coeff = bright_coeff(dll, dlb, lb - ll);
-        axpy(-coeff, self.data.x.row(n), grad);
+        axpy(-coeff, row, grad);
     }
 
     fn log_both_pseudo_grad(
@@ -154,9 +165,10 @@ impl ModelBound for RobustT {
         theta: &[f64],
         n: usize,
         grad: &mut [f64],
-        _scratch: &mut EvalScratch,
+        scratch: &mut EvalScratch,
     ) -> (f64, f64) {
-        let r = self.resid(theta, n);
+        let row = self.data.x.row(n, &mut scratch.rows);
+        let r = self.data.y[n] - dot(row, theta);
         let u = r * r;
         let c2 = self.c2();
         let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / c2).ln_1p();
@@ -165,7 +177,7 @@ impl ModelBound for RobustT {
         let dll = -(self.nu + 1.0) * r / (c2 + u);
         let dlb = 2.0 * fp0 * r;
         let coeff = bright_coeff(dll, dlb, lb - ll);
-        axpy(-coeff, self.data.x.row(n), grad);
+        axpy(-coeff, row, grad);
         (ll, lb)
     }
 
@@ -188,10 +200,12 @@ impl ModelBound for RobustT {
     }
 
     fn tune_anchors_map(&mut self, theta_map: &[f64]) {
-        for n in 0..self.data.n() {
-            let r = self.resid(theta_map, n);
-            self.u0[n] = r * r;
-        }
+        let y = &self.data.y;
+        let u0 = &mut self.u0;
+        self.data.x.for_each_row(|n, row| {
+            let r = y[n] - dot(row, theta_map);
+            u0[n] = r * r;
+        });
         self.rebuild_stats();
     }
 
@@ -254,6 +268,7 @@ mod tests {
         let anchor: Vec<f64> = (0..m.dim()).map(|_| rng.normal() * 0.3).collect();
         m.tune_anchors_map(&anchor);
         let mut sc = m.new_scratch();
+        let mut rows = m.data.x.new_cache();
         testing::check_msg(
             "t collapse == sum",
             20,
@@ -261,7 +276,7 @@ mod tests {
             |theta| {
                 let mut sum = 0.0;
                 for n in 0..m.n() {
-                    let r = m.resid(theta, n);
+                    let r = m.resid(theta, n, &mut rows);
                     let (f0, fp0) = m.tangent(m.u0[n]);
                     sum += f0 + fp0 * (r * r - m.u0[n]);
                 }

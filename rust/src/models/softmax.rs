@@ -11,11 +11,16 @@
 //!               sum_n eta^T A eta = 1/2 [ sum_k theta_k^T S theta_k
 //!                                         - (1/K) v^T S v ],  v = sum_k theta_k.
 //!
-//! `theta` is flattened row-major [K, D].
+//! `theta` is flattened row-major [K, D]. Feature rows are read through the
+//! dataset's [`crate::data::store::DataStore`] via the scratch-owned row
+//! cache (the per-datum methods split the scratch so the row borrow and the
+//! η/∂B buffers coexist); dense-backed chains are bit-identical to the
+//! pre-`DataStore` code.
 
 use std::sync::Arc;
 
 use super::{EvalScratch, ModelBound, ModelKind};
+use crate::data::store::RowCache;
 use crate::data::SoftmaxData;
 use crate::linalg::{axpy, dot, Matrix};
 use crate::util::math::logsumexp;
@@ -42,9 +47,9 @@ impl SoftmaxBohning {
         let n = data.n();
         let d = data.d();
         let mut s_mat = Matrix::zeros(d, d);
-        for i in 0..n {
-            s_mat.add_weighted_outer(1.0, data.x.row(i));
-        }
+        data.x.for_each_row(|_, row| {
+            s_mat.add_weighted_outer(1.0, row);
+        });
         let mut m = SoftmaxBohning {
             data,
             psi: vec![0.0; n * k],
@@ -57,11 +62,12 @@ impl SoftmaxBohning {
         m
     }
 
-    /// logits eta = Theta x_n into `out` (len K).
+    /// logits eta = Theta x_n into `out` (len K), reading the feature row
+    /// through `rows`.
     #[inline]
-    pub fn logits(&self, theta: &[f64], n: usize, out: &mut [f64]) {
+    pub fn logits(&self, theta: &[f64], n: usize, rows: &mut RowCache, out: &mut [f64]) {
         let d = self.data.d();
-        let row = self.data.x.row(n);
+        let row = self.data.x.row(n, rows);
         for (kk, o) in out.iter_mut().enumerate() {
             *o = dot(&theta[kk * d..(kk + 1) * d], row);
         }
@@ -72,7 +78,7 @@ impl SoftmaxBohning {
         &self.psi[n * self.k..(n + 1) * self.k]
     }
 
-    /// (f(psi), g + A psi) for datum n; g = onehot - softmax(psi).
+    /// (f(psi), g + A psi) for datum n; g = onehot(t_n) - softmax(psi).
     fn anchor_terms(&self, n: usize) -> (f64, Vec<f64>) {
         let k = self.k;
         let psi = self.psi_of(n);
@@ -89,12 +95,13 @@ impl SoftmaxBohning {
         (f_psi, ga)
     }
 
-    /// Rebuild G and c0 (S is anchor-independent) — O(N K D).
+    /// Rebuild G and c0 (S is anchor-independent) — one streaming pass over
+    /// the feature store, O(N K D) (setup-time; may allocate).
     pub fn rebuild_stats(&mut self) {
-        let (k, d, n) = (self.k, self.data.d(), self.data.n());
+        let (k, d) = (self.k, self.data.d());
         let mut g_mat = Matrix::zeros(k, d);
         let mut c0 = 0.0;
-        for i in 0..n {
+        self.data.x.for_each_row(|i, row| {
             let (f_psi, ga) = self.anchor_terms(i);
             let psi = self.psi_of(i);
             // c0_n = f(psi) - (g + A psi)^T psi + 1/2 psi^T A psi
@@ -104,11 +111,10 @@ impl SoftmaxBohning {
                 .map(|&p| 0.5 * (p - psi_mean) * p)
                 .sum();
             c0 += f_psi - dot(&ga, psi) + 0.5 * quad;
-            let row = self.data.x.row(i);
             for kk in 0..k {
                 axpy(ga[kk], row, g_mat.row_mut(kk));
             }
-        }
+        });
         self.g_mat = g_mat;
         self.c0 = c0;
     }
@@ -159,9 +165,14 @@ impl ModelBound for SoftmaxBohning {
         self.k
     }
 
+    fn new_scratch(&self) -> EvalScratch {
+        EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
+    }
+
     fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
-        let eta = &mut scratch.eta[..self.k];
-        self.logits(theta, n, eta);
+        let EvalScratch { rows, eta, .. } = scratch;
+        let eta = &mut eta[..self.k];
+        self.logits(theta, n, rows, eta);
         eta[self.data.labels[n]] - logsumexp(eta)
     }
 
@@ -173,10 +184,13 @@ impl ModelBound for SoftmaxBohning {
         scratch: &mut EvalScratch,
     ) {
         let (k, d) = (self.k, self.data.d());
-        let eta = &mut scratch.eta[..k];
-        self.logits(theta, n, eta);
+        let EvalScratch { rows, eta, .. } = scratch;
+        let eta = &mut eta[..k];
+        let row = self.data.x.row(n, rows);
+        for (kk, o) in eta.iter_mut().enumerate() {
+            *o = dot(&theta[kk * d..(kk + 1) * d], row);
+        }
         let lse = logsumexp(eta);
-        let row = self.data.x.row(n);
         for kk in 0..k {
             let coeff =
                 (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
@@ -185,8 +199,9 @@ impl ModelBound for SoftmaxBohning {
     }
 
     fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
-        self.logits(theta, n, &mut scratch.eta[..self.k]);
-        let eta = &scratch.eta[..self.k];
+        let EvalScratch { rows, eta, .. } = scratch;
+        let eta = &mut eta[..self.k];
+        self.logits(theta, n, rows, eta);
         let ll = eta[self.data.labels[n]] - logsumexp(eta);
         let lb = self.log_bound_and_deta(eta, n, None).min(ll);
         (ll, lb)
@@ -200,14 +215,17 @@ impl ModelBound for SoftmaxBohning {
         scratch: &mut EvalScratch,
     ) {
         let (k, d) = (self.k, self.data.d());
-        self.logits(theta, n, &mut scratch.eta[..k]);
-        let eta = &scratch.eta[..k];
-        let dlb = &mut scratch.dlb[..k];
+        let EvalScratch { rows, eta, dlb, .. } = scratch;
+        let eta = &mut eta[..k];
+        let dlb = &mut dlb[..k];
+        let row = self.data.x.row(n, rows);
+        for (kk, o) in eta.iter_mut().enumerate() {
+            *o = dot(&theta[kk * d..(kk + 1) * d], row);
+        }
         let lse = logsumexp(eta);
         let ll = eta[self.data.labels[n]] - lse;
         let lb = self.log_bound_and_deta(eta, n, Some(&mut *dlb)).min(ll);
         let ed = (lb - ll).min(-1e-12).exp();
-        let row = self.data.x.row(n);
         for kk in 0..k {
             let dll =
                 (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
@@ -224,14 +242,17 @@ impl ModelBound for SoftmaxBohning {
         scratch: &mut EvalScratch,
     ) -> (f64, f64) {
         let (k, d) = (self.k, self.data.d());
-        self.logits(theta, n, &mut scratch.eta[..k]);
-        let eta = &scratch.eta[..k];
-        let dlb = &mut scratch.dlb[..k];
+        let EvalScratch { rows, eta, dlb, .. } = scratch;
+        let eta = &mut eta[..k];
+        let dlb = &mut dlb[..k];
+        let row = self.data.x.row(n, rows);
+        for (kk, o) in eta.iter_mut().enumerate() {
+            *o = dot(&theta[kk * d..(kk + 1) * d], row);
+        }
         let lse = logsumexp(eta);
         let ll = eta[self.data.labels[n]] - lse;
         let lb = self.log_bound_and_deta(eta, n, Some(&mut *dlb)).min(ll);
         let ed = (lb - ll).min(-1e-12).exp();
-        let row = self.data.x.row(n);
         for kk in 0..k {
             let dll =
                 (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
@@ -292,12 +313,13 @@ impl ModelBound for SoftmaxBohning {
     }
 
     fn tune_anchors_map(&mut self, theta_map: &[f64]) {
-        let k = self.k;
-        let mut eta = vec![0.0; k];
-        for n in 0..self.data.n() {
-            self.logits(theta_map, n, &mut eta);
-            self.psi[n * k..(n + 1) * k].copy_from_slice(&eta);
-        }
+        let (k, d) = (self.k, self.data.d());
+        let psi = &mut self.psi;
+        self.data.x.for_each_row(|n, row| {
+            for kk in 0..k {
+                psi[n * k + kk] = dot(&theta_map[kk * d..(kk + 1) * d], row);
+            }
+        });
         self.rebuild_stats();
     }
 }
@@ -356,6 +378,7 @@ mod tests {
         let anchor: Vec<f64> = (0..m.dim()).map(|_| anchor_rng.normal() * 0.4).collect();
         m.tune_anchors_map(&anchor);
         let mut sc = m.new_scratch();
+        let mut rows = m.data.x.new_cache();
         testing::check_msg(
             "softmax collapse == sum",
             15,
@@ -364,7 +387,7 @@ mod tests {
                 let mut sum = 0.0;
                 let mut eta = vec![0.0; m.k];
                 for n in 0..m.n() {
-                    m.logits(theta, n, &mut eta);
+                    m.logits(theta, n, &mut rows, &mut eta);
                     sum += m.log_bound_and_deta(&eta, n, None);
                 }
                 let col = m.log_bound_product(theta, &mut sc);
@@ -440,8 +463,9 @@ mod tests {
         let m = small();
         let mut rng = Rng::new(12);
         let theta: Vec<f64> = (0..m.dim()).map(|_| rng.normal()).collect();
+        let mut rows = m.data.x.new_cache();
         let mut eta = vec![0.0; m.k];
-        m.logits(&theta, 3, &mut eta);
+        m.logits(&theta, 3, &mut rows, &mut eta);
         let lse = logsumexp(&eta);
         let total: f64 = (0..m.k).map(|k| (eta[k] - lse).exp()).sum();
         assert!((total - 1.0).abs() < 1e-12);

@@ -27,6 +27,15 @@ impl CpuBackend {
         let scratch = model.new_scratch();
         CpuBackend { model, counters, scratch }
     }
+
+    /// Drain the scratch's row-cache tallies into the shared counters
+    /// (no-op with zero atomics touched for dense stores).
+    fn flush_cache_stats(&mut self) {
+        let (hits, misses) = self.scratch.take_cache_stats();
+        if hits != 0 || misses != 0 {
+            self.counters.add_data_cache(hits, misses);
+        }
+    }
 }
 
 impl BatchEval for CpuBackend {
@@ -52,6 +61,7 @@ impl BatchEval for CpuBackend {
             ll.push(l);
             lb.push(b);
         }
+        self.flush_cache_stats();
     }
 
     fn eval_pseudo_grad(
@@ -75,6 +85,7 @@ impl BatchEval for CpuBackend {
             ll.push(l);
             lb.push(b);
         }
+        self.flush_cache_stats();
     }
 
     fn eval_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
@@ -84,6 +95,7 @@ impl BatchEval for CpuBackend {
         for &n in idx {
             ll.push(self.model.log_lik(theta, n as usize, &mut self.scratch));
         }
+        self.flush_cache_stats();
     }
 
     fn eval_lik_grad(
@@ -97,6 +109,7 @@ impl BatchEval for CpuBackend {
         for &n in idx {
             self.model.log_lik_grad_acc(theta, n as usize, grad, &mut self.scratch);
         }
+        self.flush_cache_stats();
     }
 }
 

@@ -2,23 +2,32 @@
 //!
 //! [`ParBackend`] serves the same [`BatchEval`] contract as the serial
 //! [`crate::runtime::CpuBackend`], but splits each index batch into
-//! fixed-size shards and fans the shards out across a rayon thread pool.
+//! fixed-size shards and fans contiguous *groups* of shards out across a
+//! rayon thread pool — one [`EvalScratch`] (including its feature-row
+//! cache, see DESIGN.md §Storage) per worker group, one gradient partial
+//! per shard.
 //!
 //! Determinism contract (verified by the property tests below and by
 //! `rust/tests/integration_parallel.rs`):
 //!
 //! * `ll` / `lb` outputs are **bit-identical** to `CpuBackend` for any batch
 //!   and any thread count: every datum is evaluated by exactly the same
-//!   scalar code on one thread, and each shard writes a disjoint slice of
+//!   scalar code on one thread, and each task writes a disjoint slice of
 //!   the output buffers, so no floating-point reduction order changes.
-//! * Gradient accumulations reduce shard-local sums **in shard order**, so
+//! * Gradient accumulations still produce one partial sum **per shard**
+//!   (never per group or per thread) and reduce them **in shard order**, so
 //!   they are deterministic for a fixed shard size regardless of thread
-//!   count or scheduling (they may differ from the serial sum in the last
-//!   ulps, as any re-associated float sum does; the exactness-relevant
-//!   `ll`/`lb` path has no such freedom).
+//!   count or scheduling — grouping only decides which worker computes a
+//!   shard's partial, never its bits or its place in the reduction.
 //! * Query accounting is identical to `CpuBackend` — `idx.len()` likelihood
 //!   (+ bound) queries per call — so the paper's cost unit does not drift
 //!   when the backend goes parallel.
+//!
+//! Scratch memory is bounded by the worker count, not the batch size: the
+//! old one-scratch-per-shard layout was fine when a scratch was a few
+//! dim-sized buffers, but a scratch now carries a block cache for
+//! out-of-core stores, and a full-N `init_z` pass over a tall dataset would
+//! have materialized thousands of caches.
 
 use std::sync::Arc;
 
@@ -42,11 +51,11 @@ pub struct ParBackend {
     /// `None` = the global rayon pool.
     pool: Option<rayon::ThreadPool>,
     shard: usize,
-    /// per-shard model-evaluation scratch, one entry per shard of the
-    /// largest batch seen (grown lazily in `ensure_shards`; FlyMC hits its
-    /// maximum during the full-pass `init_z` setup, so steady-state
-    /// sampling calls never grow it)
-    shard_scratch: Vec<EvalScratch>,
+    /// per-worker-group model-evaluation scratch (row cache included), at
+    /// most one per pool thread; grown lazily in `ensure_arenas` — FlyMC
+    /// hits its maximum during the full-pass `init_z` setup, so
+    /// steady-state sampling calls never grow it
+    group_scratch: Vec<EvalScratch>,
     /// flat per-shard gradient partials, `nshards × dim` row-major — the
     /// shard-order reduction reads rows in order, so the sum is
     /// deterministic for a fixed shard size (and allocation-free)
@@ -76,7 +85,7 @@ impl ParBackend {
             counters,
             pool,
             shard: DEFAULT_SHARD,
-            shard_scratch: Vec::new(),
+            group_scratch: Vec::new(),
             shard_grads: Vec::new(),
         }
     }
@@ -93,17 +102,47 @@ impl ParBackend {
         self.shard
     }
 
-    /// Grow the per-shard arenas to cover `nshards`. Growth happens only
-    /// when a batch larger than anything seen before arrives — for FlyMC
-    /// that is the one-time full-N `init_z` pass, so steady-state sampling
-    /// never allocates here (and construction stays O(1) regardless of N).
-    fn ensure_shards(&mut self, nshards: usize) {
-        while self.shard_scratch.len() < nshards {
-            self.shard_scratch.push(self.model.new_scratch());
+    /// Worker count of the serving pool.
+    fn workers(&self) -> usize {
+        match &self.pool {
+            Some(p) => p.current_num_threads().max(1),
+            None => rayon::current_num_threads().max(1),
+        }
+    }
+
+    /// Partition `nshards` into contiguous worker groups: (ngroups, shards
+    /// per group). Outputs never depend on this split — only which worker
+    /// computes what.
+    fn grouping(&self, nshards: usize) -> (usize, usize) {
+        let ngroups = nshards.min(self.workers()).max(1);
+        (ngroups, nshards.div_ceil(ngroups))
+    }
+
+    /// Grow the per-group scratch pool and the per-shard gradient arena.
+    /// Growth happens only when a batch larger than anything seen before
+    /// arrives — for FlyMC that is the one-time full-N `init_z` pass, so
+    /// steady-state sampling never allocates here. Scratch count is capped
+    /// by the pool's worker count regardless of N.
+    fn ensure_arenas(&mut self, ngroups: usize, nshards: usize) {
+        while self.group_scratch.len() < ngroups {
+            self.group_scratch.push(self.model.new_scratch());
         }
         let need = nshards * self.model.dim();
         if self.shard_grads.len() < need {
             self.shard_grads.resize(need, 0.0);
+        }
+    }
+
+    /// Drain every group scratch's row-cache tallies into the counters.
+    fn flush_cache_stats(&mut self) {
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for sc in &mut self.group_scratch {
+            let (h, m) = sc.take_cache_stats();
+            hits += h;
+            misses += m;
+        }
+        if hits != 0 || misses != 0 {
+            self.counters.add_data_cache(hits, misses);
         }
     }
 }
@@ -137,15 +176,16 @@ impl BatchEval for ParBackend {
         ll.resize(idx.len(), 0.0);
         lb.resize(idx.len(), 0.0);
         let nshards = idx.len().div_ceil(self.shard);
-        self.ensure_shards(nshards);
-        let shard = self.shard;
+        let (ngroups, group_shards) = self.grouping(nshards);
+        self.ensure_arenas(ngroups, 0);
+        let sup = (self.shard * group_shards).max(1);
         let model = &*self.model;
         let pool = &self.pool;
-        let scratch = &mut self.shard_scratch[..nshards];
+        let scratch = &mut self.group_scratch[..ngroups];
         let (ll_s, lb_s) = (ll.as_mut_slice(), lb.as_mut_slice());
         let run = || {
-            idx.par_chunks(shard)
-                .zip(ll_s.par_chunks_mut(shard).zip(lb_s.par_chunks_mut(shard)))
+            idx.par_chunks(sup)
+                .zip(ll_s.par_chunks_mut(sup).zip(lb_s.par_chunks_mut(sup)))
                 .zip(scratch.par_iter_mut())
                 .for_each(|((ids, (lls, lbs)), sc)| {
                     for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut()) {
@@ -156,6 +196,7 @@ impl BatchEval for ParBackend {
                 });
         };
         run_in(pool, run);
+        self.flush_cache_stats();
     }
 
     fn eval_pseudo_grad(
@@ -173,29 +214,41 @@ impl BatchEval for ParBackend {
         ll.resize(idx.len(), 0.0);
         lb.resize(idx.len(), 0.0);
         let dim = self.model.dim();
-        let nshards = idx.len().div_ceil(self.shard);
-        self.ensure_shards(nshards);
         let shard = self.shard;
+        let nshards = idx.len().div_ceil(shard);
+        let (ngroups, group_shards) = self.grouping(nshards);
+        self.ensure_arenas(ngroups, nshards);
+        let sup = (shard * group_shards).max(1);
         let model = &*self.model;
         let pool = &self.pool;
-        let scratch = &mut self.shard_scratch[..nshards];
+        let scratch = &mut self.group_scratch[..ngroups];
         let grads = &mut self.shard_grads[..nshards * dim];
         grads.fill(0.0);
         let (ll_s, lb_s) = (ll.as_mut_slice(), lb.as_mut_slice());
         {
             let grads_par = &mut *grads;
             let run = || {
-                idx.par_chunks(shard)
-                    .zip(ll_s.par_chunks_mut(shard).zip(lb_s.par_chunks_mut(shard)))
-                    .zip(grads_par.par_chunks_mut(dim))
+                idx.par_chunks(sup)
+                    .zip(ll_s.par_chunks_mut(sup).zip(lb_s.par_chunks_mut(sup)))
+                    .zip(grads_par.par_chunks_mut((dim * group_shards).max(1)))
                     .zip(scratch.par_iter_mut())
-                    .for_each(|(((ids, (lls, lbs)), g), sc)| {
-                        for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut())
+                    .for_each(|(((ids, (lls, lbs)), gslab), sc)| {
+                        // one gradient partial per shard WITHIN the group:
+                        // the reduction below walks shards globally in order
+                        for (((sids, slls), slbs), g) in ids
+                            .chunks(shard)
+                            .zip(lls.chunks_mut(shard))
+                            .zip(lbs.chunks_mut(shard))
+                            .zip(gslab.chunks_mut(dim))
                         {
-                            let (lv, bv) =
-                                model.log_both_pseudo_grad(theta, n as usize, g, sc);
-                            *l = lv;
-                            *b = bv;
+                            for ((&n, l), b) in
+                                sids.iter().zip(slls.iter_mut()).zip(slbs.iter_mut())
+                            {
+                                let (lv, bv) =
+                                    model.log_both_pseudo_grad(theta, n as usize, g, sc);
+                                *l = lv;
+                                *b = bv;
+                            }
                         }
                     });
             };
@@ -205,6 +258,7 @@ impl BatchEval for ParBackend {
         for g in grads.chunks_exact(dim) {
             axpy(1.0, g, grad);
         }
+        self.flush_cache_stats();
     }
 
     fn eval_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
@@ -212,15 +266,16 @@ impl BatchEval for ParBackend {
         ll.clear();
         ll.resize(idx.len(), 0.0);
         let nshards = idx.len().div_ceil(self.shard);
-        self.ensure_shards(nshards);
-        let shard = self.shard;
+        let (ngroups, group_shards) = self.grouping(nshards);
+        self.ensure_arenas(ngroups, 0);
+        let sup = (self.shard * group_shards).max(1);
         let model = &*self.model;
         let pool = &self.pool;
-        let scratch = &mut self.shard_scratch[..nshards];
+        let scratch = &mut self.group_scratch[..ngroups];
         let ll_s = ll.as_mut_slice();
         let run = || {
-            idx.par_chunks(shard)
-                .zip(ll_s.par_chunks_mut(shard))
+            idx.par_chunks(sup)
+                .zip(ll_s.par_chunks_mut(sup))
                 .zip(scratch.par_iter_mut())
                 .for_each(|((ids, lls), sc)| {
                     for (&n, l) in ids.iter().zip(lls.iter_mut()) {
@@ -229,6 +284,7 @@ impl BatchEval for ParBackend {
                 });
         };
         run_in(pool, run);
+        self.flush_cache_stats();
     }
 
     fn eval_lik_grad(
@@ -242,26 +298,34 @@ impl BatchEval for ParBackend {
         ll.clear();
         ll.resize(idx.len(), 0.0);
         let dim = self.model.dim();
-        let nshards = idx.len().div_ceil(self.shard);
-        self.ensure_shards(nshards);
         let shard = self.shard;
+        let nshards = idx.len().div_ceil(shard);
+        let (ngroups, group_shards) = self.grouping(nshards);
+        self.ensure_arenas(ngroups, nshards);
+        let sup = (shard * group_shards).max(1);
         let model = &*self.model;
         let pool = &self.pool;
-        let scratch = &mut self.shard_scratch[..nshards];
+        let scratch = &mut self.group_scratch[..ngroups];
         let grads = &mut self.shard_grads[..nshards * dim];
         grads.fill(0.0);
         let ll_s = ll.as_mut_slice();
         {
             let grads_par = &mut *grads;
             let run = || {
-                idx.par_chunks(shard)
-                    .zip(ll_s.par_chunks_mut(shard))
-                    .zip(grads_par.par_chunks_mut(dim))
+                idx.par_chunks(sup)
+                    .zip(ll_s.par_chunks_mut(sup))
+                    .zip(grads_par.par_chunks_mut((dim * group_shards).max(1)))
                     .zip(scratch.par_iter_mut())
-                    .for_each(|(((ids, lls), g), sc)| {
-                        for (&n, l) in ids.iter().zip(lls.iter_mut()) {
-                            *l = model.log_lik(theta, n as usize, sc);
-                            model.log_lik_grad_acc(theta, n as usize, g, sc);
+                    .for_each(|(((ids, lls), gslab), sc)| {
+                        for ((sids, slls), g) in ids
+                            .chunks(shard)
+                            .zip(lls.chunks_mut(shard))
+                            .zip(gslab.chunks_mut(dim))
+                        {
+                            for (&n, l) in sids.iter().zip(slls.iter_mut()) {
+                                *l = model.log_lik(theta, n as usize, sc);
+                                model.log_lik_grad_acc(theta, n as usize, g, sc);
+                            }
                         }
                     });
             };
@@ -270,6 +334,7 @@ impl BatchEval for ParBackend {
         for g in grads.chunks_exact(dim) {
             axpy(1.0, g, grad);
         }
+        self.flush_cache_stats();
     }
 }
 
@@ -379,6 +444,26 @@ mod tests {
         for (a, b) in gl1.iter().zip(&gl4) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn scratch_pool_is_bounded_by_workers_not_batch_size() {
+        // A batch of many shards must not materialize one scratch (and one
+        // row cache) per shard — that made full-N init_z passes explode on
+        // out-of-core stores.
+        let model: Arc<dyn ModelBound> =
+            Arc::new(LogisticJJ::new(Arc::new(synth::synth_mnist(2000, 5, 8)), 1.5));
+        let counters = Counters::new();
+        let mut par = ParBackend::with_threads(model.clone(), counters, 3).with_shard(8);
+        let idx: Vec<u32> = (0..2000).collect(); // 250 shards
+        let theta = vec![0.1; model.dim()];
+        let (mut ll, mut lb) = (Vec::new(), Vec::new());
+        par.eval(&theta, &idx, &mut ll, &mut lb);
+        assert!(par.group_scratch.len() <= 3, "{} scratches", par.group_scratch.len());
+        // ...while gradient partials stay per-shard (determinism anchor)
+        let mut g = vec![0.0; model.dim()];
+        par.eval_pseudo_grad(&theta, &idx, &mut ll, &mut lb, &mut g);
+        assert_eq!(par.shard_grads.len(), 250 * model.dim());
     }
 
     #[test]

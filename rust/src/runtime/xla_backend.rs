@@ -26,6 +26,7 @@ mod enabled {
 
     use anyhow::{anyhow, Context, Result};
 
+    use crate::data::store::RowCache;
     use crate::metrics::Counters;
     use crate::runtime::evaluator::BatchEval;
     use crate::runtime::manifest::Manifest;
@@ -41,6 +42,8 @@ mod enabled {
         /// bucket size -> artifact path (from the manifest)
         bucket_paths: Vec<(usize, String)>,
         bufs: BatchBufs,
+        /// feature-row cache for `fill_inputs` (zero-sized for dense data)
+        row_cache: RowCache,
         theta_dims: Vec<i64>,
     }
 
@@ -72,6 +75,7 @@ mod enabled {
             } else {
                 vec![d as i64]
             };
+            let row_cache = source.new_row_cache();
             Ok(XlaBackend {
                 source,
                 counters,
@@ -79,6 +83,7 @@ mod enabled {
                 executables: HashMap::new(),
                 bucket_paths,
                 bufs: BatchBufs::default(),
+                row_cache,
                 theta_dims,
             })
         }
@@ -133,7 +138,8 @@ mod enabled {
             let (_, d, _) = self.source.artifact_key();
             let aux_w = self.source.aux_width();
             let mut bufs = std::mem::take(&mut self.bufs);
-            self.source.fill_inputs(idx, bucket, &mut bufs);
+            self.source
+                .fill_inputs(idx, bucket, &mut bufs, &mut self.row_cache);
             self.counters.add_padded((bucket - idx.len()) as u64);
 
             let theta_lit = xla::Literal::vec1(theta).reshape(&self.theta_dims)?;

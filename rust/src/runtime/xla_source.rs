@@ -9,6 +9,7 @@
 
 use std::sync::Arc;
 
+use crate::data::store::RowCache;
 use crate::models::{LogisticJJ, ModelBound, ModelKind, RobustT, SoftmaxBohning};
 
 /// Input buffers for one padded chunk, in artifact argument order after
@@ -37,9 +38,15 @@ pub trait XlaSource: ModelBound {
     /// toolchain support.
     fn as_model_bound(self: Arc<Self>) -> Arc<dyn ModelBound>;
 
+    /// A feature-row cache sized for this model's [`crate::data::store::DataStore`]
+    /// (zero-sized for resident data); the XLA backend owns one and threads
+    /// it through [`Self::fill_inputs`].
+    fn new_row_cache(&self) -> RowCache;
+
     /// Fill `bufs` for `idx` (u32, as handed through [`crate::runtime::evaluator::BatchEval`]),
-    /// padded to `bucket` rows (mask 0 on padding).
-    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs);
+    /// padded to `bucket` rows (mask 0 on padding). Feature rows are read
+    /// through the caller-owned `rows` cache.
+    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs, rows: &mut RowCache);
 
     /// Dims of aux1/aux2 per row (1 for vectors, K for [B,K] buffers).
     fn aux_width(&self) -> usize {
@@ -73,12 +80,16 @@ impl XlaSource for LogisticJJ {
         self
     }
 
-    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs) {
+    fn new_row_cache(&self) -> RowCache {
+        self.data.x.new_cache()
+    }
+
+    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs, rows: &mut RowCache) {
         let d = self.data.d();
         pad_common(bufs, d, 1, bucket);
         for &n in idx {
             let n = n as usize;
-            bufs.x.extend_from_slice(self.data.x.row(n));
+            bufs.x.extend_from_slice(self.data.x.row(n, rows));
             bufs.aux1.push(self.data.t[n]);
             bufs.aux2.push(self.xi[n]);
             bufs.mask.push(1.0);
@@ -105,13 +116,17 @@ impl XlaSource for SoftmaxBohning {
         self.data.k
     }
 
-    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs) {
+    fn new_row_cache(&self) -> RowCache {
+        self.data.x.new_cache()
+    }
+
+    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs, rows: &mut RowCache) {
         let d = self.data.d();
         let k = self.data.k;
         pad_common(bufs, d, k, bucket);
         for &n in idx {
             let n = n as usize;
-            bufs.x.extend_from_slice(self.data.x.row(n));
+            bufs.x.extend_from_slice(self.data.x.row(n, rows));
             for kk in 0..k {
                 bufs.aux1
                     .push(if kk == self.data.labels[n] { 1.0 } else { 0.0 });
@@ -142,14 +157,18 @@ impl XlaSource for RobustT {
         self.sigma.ln()
     }
 
-    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs) {
+    fn new_row_cache(&self) -> RowCache {
+        self.data.x.new_cache()
+    }
+
+    fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs, rows: &mut RowCache) {
         let d = self.data.d();
         let inv_s = 1.0 / self.sigma;
         pad_common(bufs, d, 1, bucket);
         for &n in idx {
             let n = n as usize;
             bufs.x
-                .extend(self.data.x.row(n).iter().map(|&v| v * inv_s));
+                .extend(self.data.x.row(n, rows).iter().map(|&v| v * inv_s));
             bufs.aux1.push(self.data.y[n] * inv_s);
             bufs.aux2.push(self.u0[n] * inv_s * inv_s);
             bufs.mask.push(1.0);
@@ -174,11 +193,12 @@ mod tests {
         let data = Arc::new(synth::synth_mnist(20, 4, 1));
         let m = LogisticJJ::new(data, 1.5);
         let mut bufs = BatchBufs::default();
-        m.fill_inputs(&[3, 7], 8, &mut bufs);
+        let mut rows = m.new_row_cache();
+        m.fill_inputs(&[3, 7], 8, &mut bufs, &mut rows);
         assert_eq!(bufs.x.len(), 8 * 5);
         assert_eq!(bufs.mask, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
         assert_eq!(bufs.aux1[0], m.data.t[3]);
-        assert_eq!(&bufs.x[..5], m.data.x.row(3));
+        assert_eq!(&bufs.x[..5], m.data.x.as_dense().unwrap().row(3));
     }
 
     #[test]
@@ -186,7 +206,8 @@ mod tests {
         let data = Arc::new(synth::synth_cifar3(30, 6, 2));
         let m = SoftmaxBohning::new(data.clone());
         let mut bufs = BatchBufs::default();
-        m.fill_inputs(&[0, 1, 2], 4, &mut bufs);
+        let mut rows = m.new_row_cache();
+        m.fill_inputs(&[0, 1, 2], 4, &mut bufs, &mut rows);
         assert_eq!(bufs.aux1.len(), 4 * 3);
         for (i, &n) in [0usize, 1, 2].iter().enumerate() {
             let row = &bufs.aux1[i * 3..(i + 1) * 3];
@@ -200,9 +221,10 @@ mod tests {
         let data = Arc::new(synth::synth_opv(25, 5, 3));
         let m = RobustT::new(data.clone(), 4.0, 2.0);
         let mut bufs = BatchBufs::default();
-        m.fill_inputs(&[4], 2, &mut bufs);
+        let mut rows = m.new_row_cache();
+        m.fill_inputs(&[4], 2, &mut bufs, &mut rows);
         assert!((bufs.aux1[0] - data.y[4] / 2.0).abs() < 1e-15);
-        assert!((bufs.x[0] - data.x.row(4)[0] / 2.0).abs() < 1e-15);
+        assert!((bufs.x[0] - data.x.get(4, 0) / 2.0).abs() < 1e-15);
         assert!((m.output_shift() - 2.0f64.ln()).abs() < 1e-15);
     }
 }

@@ -53,6 +53,31 @@ pub fn check_msg<T: std::fmt::Debug>(
     }
 }
 
+/// Round-trip a dataset through a uniquely-named temporary `.fbin` file and
+/// reopen it out of core with `cache` — test support for the hotpath /
+/// byte-identity binaries, so each doesn't hand-roll the write/open/cleanup
+/// sequence. The temp file is unlinked before returning; the open handle
+/// keeps it readable (unix semantics — the test suites run on linux CI).
+pub fn fbin_roundtrip(
+    data: &crate::data::AnyData,
+    cache: crate::data::store::BlockCacheConfig,
+) -> crate::data::AnyData {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    let path = std::env::temp_dir()
+        .join(format!(
+            "firefly_fbin_rt_{}_{}.fbin",
+            std::process::id(),
+            UNIQ.fetch_add(1, Ordering::Relaxed)
+        ))
+        .to_string_lossy()
+        .into_owned();
+    crate::data::fbin::write_fbin(&path, data).expect("write .fbin round-trip file");
+    let out = crate::data::fbin::open_fbin(&path, cache).expect("reopen .fbin round-trip file");
+    let _ = std::fs::remove_file(&path);
+    out
+}
+
 /// Common generators.
 pub mod gen {
     use crate::util::Rng;

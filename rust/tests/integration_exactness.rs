@@ -52,7 +52,8 @@ fn flymc_marginal_matches_regular_mcmc() {
         let mut cfg = base.clone();
         cfg.algorithm = algorithm;
         cfg.seed = 3; // same dataset for both
-        let (model, prior, _, _) = firefly::engine::experiment::build_model(&cfg);
+        let (model, prior, _, _) =
+            firefly::engine::experiment::build_model(&cfg).expect("build model");
         let (target, theta0) =
             build_chain(&cfg, model, prior, seed).expect("build chain");
         let ccfg = ChainConfig {
@@ -114,7 +115,7 @@ fn one_dim_posterior_mean_matches_quadrature_all_z_schemes() {
         vec![-1.0],
     ]);
     let t = vec![1.0, 1.0, -1.0, 1.0, -1.0, -1.0];
-    let data = Arc::new(LogisticData { x, t });
+    let data = Arc::new(LogisticData { x: x.into(), t });
     let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
     let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 2.0 });
 

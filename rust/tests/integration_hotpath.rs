@@ -6,17 +6,25 @@
 //! handed to the backend as the `BrightSet`'s own u32 prefix, and the base
 //! density is one pass over a cached packed quadratic (DESIGN.md §Perf).
 //!
+//! The invariant is measured over BOTH feature stores: the resident
+//! `DenseStore` and an out-of-core `.fbin` `BlockStore` whose cache is
+//! deliberately smaller than N, so the window takes real cache misses —
+//! block fills are positioned reads into preallocated staging buffers and
+//! must not allocate either (DESIGN.md §Storage).
+//!
 //! This binary deliberately contains a SINGLE test: the allocator counter is
 //! process-global, so a sibling test allocating concurrently would corrupt
 //! the measurement window. The other paper scenarios live in their own
 //! single-test binaries for the same reason — `integration_hotpath_mala.rs`
 //! (MALA + softmax, the gradient path) and `integration_hotpath_slice.rs`
 //! (slice + robust). The cross-backend goldens (byte-identical traces on
-//! cpu vs parcpu) live in `integration_parallel.rs`.
+//! cpu vs parcpu) live in `integration_parallel.rs`; dense-vs-block chain
+//! byte-identity lives in `integration_store.rs`.
 
 use std::sync::Arc;
 
-use firefly::data::synth;
+use firefly::data::store::BlockCacheConfig;
+use firefly::data::{synth, AnyData, LogisticData};
 use firefly::flymc::PseudoPosterior;
 use firefly::metrics::Counters;
 use firefly::models::{IsoGaussian, LogisticJJ, ModelBound, Prior};
@@ -28,8 +36,23 @@ use firefly::util::Rng;
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc::new();
 
-fn build(n: usize, seed: u64) -> (PseudoPosterior, Counters, Vec<f64>, Rng) {
-    let data = Arc::new(synth::synth_mnist(n, 20, seed));
+/// Synthesize the dataset; with `block`, round-trip it through a `.fbin`
+/// file read back with a cache of 64 rows (N=400 → constant eviction).
+fn dataset(n: usize, seed: u64, block: bool) -> LogisticData {
+    let data = synth::synth_mnist(n, 20, seed);
+    if !block {
+        return data;
+    }
+    let cache = BlockCacheConfig { rows_per_block: 16, cached_rows: 64 };
+    match firefly::testing::fbin_roundtrip(&AnyData::Logistic(data), cache) {
+        AnyData::Logistic(d) => d,
+        other => panic!("wrong kind {}", other.kind_name()),
+    }
+}
+
+fn build(n: usize, seed: u64, block: bool) -> (PseudoPosterior, Counters, Vec<f64>, Rng) {
+    let data = Arc::new(dataset(n, seed, block));
+    assert_eq!(data.x.is_out_of_core(), block);
     let model: Arc<dyn ModelBound> = Arc::new(LogisticJJ::new(data, 1.5));
     let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 1.0 });
     let counters = Counters::new();
@@ -43,9 +66,9 @@ fn build(n: usize, seed: u64) -> (PseudoPosterior, Counters, Vec<f64>, Rng) {
 }
 
 /// Measure allocations over `iters` steady-state iterations (after
-/// `warmup`), with either z-resampling scheme.
-fn measure(explicit: bool, warmup: usize, iters: usize) -> (u64, u64, usize) {
-    let (mut pp, counters, mut theta, mut rng) = build(400, 5);
+/// `warmup`), with either z-resampling scheme and either store.
+fn measure(explicit: bool, block: bool, warmup: usize, iters: usize) -> (u64, u64, usize, u64) {
+    let (mut pp, counters, mut theta, mut rng) = build(400, 5, block);
     let mut mh = RandomWalkMh::new(0.05);
     let mut z_step = |pp: &mut PseudoPosterior, rng: &mut Rng| {
         if explicit {
@@ -60,6 +83,7 @@ fn measure(explicit: bool, warmup: usize, iters: usize) -> (u64, u64, usize) {
     }
     let allocs_before = ALLOC.allocations();
     let queries_before = counters.lik_queries();
+    let misses_before = counters.data_cache_misses();
     for _ in 0..iters {
         mh.step(&mut pp, &mut theta, &mut rng);
         z_step(&mut pp, &mut rng);
@@ -68,21 +92,32 @@ fn measure(explicit: bool, warmup: usize, iters: usize) -> (u64, u64, usize) {
         ALLOC.allocations() - allocs_before,
         counters.lik_queries() - queries_before,
         pp.n_bright(),
+        counters.data_cache_misses() - misses_before,
     )
 }
 
 #[test]
 fn steady_state_flymc_iterations_allocate_nothing() {
-    for explicit in [false, true] {
-        let (allocs, queries, n_bright) = measure(explicit, 100, 300);
-        // the window must have done real work (θ evals + z sweeps)...
-        assert!(queries > 0, "explicit={explicit}: no likelihood queries");
-        assert!(n_bright > 0, "explicit={explicit}: degenerate chain, nothing bright");
-        // ...with ZERO heap allocations
-        assert_eq!(
-            allocs, 0,
-            "explicit={explicit}: steady-state FlyMC iterations performed {allocs} \
-             heap allocations (zero-alloc hot-path invariant, DESIGN.md §Perf)"
-        );
+    for block in [false, true] {
+        for explicit in [false, true] {
+            let (allocs, queries, n_bright, misses) = measure(explicit, block, 100, 300);
+            // the window must have done real work (θ evals + z sweeps)...
+            assert!(queries > 0, "block={block} explicit={explicit}: no likelihood queries");
+            assert!(
+                n_bright > 0,
+                "block={block} explicit={explicit}: degenerate chain, nothing bright"
+            );
+            if block {
+                // ...and, out of core, real cache misses (cache 64 < N=400)
+                assert!(misses > 0, "explicit={explicit}: block cache never missed");
+            }
+            // ...with ZERO heap allocations
+            assert_eq!(
+                allocs, 0,
+                "block={block} explicit={explicit}: steady-state FlyMC iterations \
+                 performed {allocs} heap allocations (zero-alloc hot-path invariant, \
+                 DESIGN.md §Perf/§Storage)"
+            );
+        }
     }
 }

@@ -7,6 +7,10 @@
 //! runs through caller-owned buffers (`EvalScratch`, sampler-owned
 //! gradients, the posterior's `model_scratch` — DESIGN.md §Perf).
 //!
+//! Measured over BOTH stores: resident `DenseStore` and an out-of-core
+//! `.fbin` `BlockStore` with a cache smaller than N (misses inside the
+//! measured window must not allocate — DESIGN.md §Storage).
+//!
 //! This binary deliberately contains a SINGLE test: the allocator counter
 //! is process-global, so a sibling test allocating concurrently would
 //! corrupt the measurement window. Siblings: `integration_hotpath.rs`
@@ -14,7 +18,8 @@
 
 use std::sync::Arc;
 
-use firefly::data::synth;
+use firefly::data::store::BlockCacheConfig;
+use firefly::data::{synth, AnyData, SoftmaxData};
 use firefly::flymc::PseudoPosterior;
 use firefly::metrics::Counters;
 use firefly::models::{IsoGaussian, ModelBound, Prior, SoftmaxBohning};
@@ -26,44 +31,64 @@ use firefly::util::Rng;
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc::new();
 
+fn dataset(block: bool) -> SoftmaxData {
+    let data = synth::synth_cifar3(240, 16, 7);
+    if !block {
+        return data;
+    }
+    let cache = BlockCacheConfig { rows_per_block: 16, cached_rows: 48 }; // << N=240
+    match firefly::testing::fbin_roundtrip(&AnyData::Softmax(data), cache) {
+        AnyData::Softmax(d) => d,
+        other => panic!("wrong kind {}", other.kind_name()),
+    }
+}
+
 #[test]
 fn steady_state_mala_softmax_iterations_allocate_nothing() {
-    let data = Arc::new(synth::synth_cifar3(240, 16, 7));
-    let model: Arc<dyn ModelBound> = Arc::new(SoftmaxBohning::new(data));
-    let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 0.5 });
-    let counters = Counters::new();
-    let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
-    let mut rng = Rng::new(11);
-    let theta0 = prior.sample(model.dim(), &mut rng);
-    let mut theta = theta0.clone();
-    let mut pp = PseudoPosterior::new(model, prior, eval, theta0);
-    pp.init_z(&mut rng);
-    let mut mala = Mala::new(0.01);
+    for block in [false, true] {
+        let data = Arc::new(dataset(block));
+        let model: Arc<dyn ModelBound> = Arc::new(SoftmaxBohning::new(data));
+        let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 0.5 });
+        let counters = Counters::new();
+        let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+        let mut rng = Rng::new(11);
+        let theta0 = prior.sample(model.dim(), &mut rng);
+        let mut theta = theta0.clone();
+        let mut pp = PseudoPosterior::new(model, prior, eval, theta0);
+        pp.init_z(&mut rng);
+        let mut mala = Mala::new(0.01);
 
-    for _ in 0..100 {
-        mala.step(&mut pp, &mut theta, &mut rng);
-        pp.implicit_resample(0.1, &mut rng);
+        for _ in 0..100 {
+            mala.step(&mut pp, &mut theta, &mut rng);
+            pp.implicit_resample(0.1, &mut rng);
+        }
+
+        let allocs_before = ALLOC.allocations();
+        let queries_before = counters.lik_queries();
+        let misses_before = counters.data_cache_misses();
+        let mut bright_sum: usize = 0;
+        for _ in 0..300 {
+            mala.step(&mut pp, &mut theta, &mut rng);
+            pp.implicit_resample(0.1, &mut rng);
+            bright_sum += pp.n_bright();
+        }
+        let allocs = ALLOC.allocations() - allocs_before;
+        let queries = counters.lik_queries() - queries_before;
+
+        // the window must have exercised the gradient path for real ...
+        assert!(queries > 0, "block={block}: no likelihood queries in the window");
+        assert!(bright_sum > 0, "block={block}: degenerate chain, nothing ever bright");
+        assert!(mala.acceptance_rate().is_finite());
+        if block {
+            let misses = counters.data_cache_misses() - misses_before;
+            assert!(misses > 0, "block cache never missed (cache 48 < N=240)");
+        }
+        // ... with ZERO heap allocations (gradient half of the invariant)
+        assert_eq!(
+            allocs, 0,
+            "block={block}: steady-state MALA+softmax FlyMC iterations performed \
+             {allocs} heap allocations (zero-alloc hot-path invariant, DESIGN.md \
+             §Perf/§Storage)"
+        );
     }
-
-    let allocs_before = ALLOC.allocations();
-    let queries_before = counters.lik_queries();
-    let mut bright_sum: usize = 0;
-    for _ in 0..300 {
-        mala.step(&mut pp, &mut theta, &mut rng);
-        pp.implicit_resample(0.1, &mut rng);
-        bright_sum += pp.n_bright();
-    }
-    let allocs = ALLOC.allocations() - allocs_before;
-    let queries = counters.lik_queries() - queries_before;
-
-    // the window must have exercised the gradient path for real ...
-    assert!(queries > 0, "no likelihood queries in the measured window");
-    assert!(bright_sum > 0, "degenerate chain: nothing ever bright");
-    assert!(mala.acceptance_rate().is_finite());
-    // ... with ZERO heap allocations (gradient half of the invariant)
-    assert_eq!(
-        allocs, 0,
-        "steady-state MALA+softmax FlyMC iterations performed {allocs} heap \
-         allocations (zero-alloc hot-path invariant, DESIGN.md §Perf)"
-    );
 }

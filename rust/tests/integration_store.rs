@@ -1,0 +1,199 @@
+//! End-to-end acceptance tests for the unified `DataStore` layer: a chain
+//! sampled from a `.fbin` `BlockStore` — through the real engine, including
+//! MAP tuning, bound collapse, z-resampling and both CPU backends — must be
+//! **byte-identical** to the same chain over the resident `DenseStore`,
+//! even when the block cache is far smaller than the dataset (constant
+//! eviction). Format-level round-trip, corruption and truncation cases live
+//! in `rust/src/data/fbin.rs`; the zero-allocation guarantee for block-
+//! cached sampling lives in the `integration_hotpath*` binaries.
+
+use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use firefly::data::fbin::{open_fbin, write_fbin};
+use firefly::data::store::BlockCacheConfig;
+use firefly::data::AnyData;
+use firefly::engine::{run_experiment, synth_dataset, ChainResult};
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("firefly_itstore_{}_{name}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn assert_chains_byte_identical(dense: &ChainResult, block: &ChainResult, label: &str) {
+    assert_eq!(
+        dense.logpost_joint.len(),
+        block.logpost_joint.len(),
+        "{label}: iteration counts differ"
+    );
+    for (i, (a, b)) in dense.logpost_joint.iter().zip(&block.logpost_joint).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: logpost differs at iter {i}");
+    }
+    assert_eq!(dense.bright, block.bright, "{label}: bright trajectories differ");
+    assert_eq!(
+        dense.queries_per_iter, block.queries_per_iter,
+        "{label}: query accounting differs"
+    );
+    assert_eq!(dense.theta_trace.n_rows(), block.theta_trace.n_rows(), "{label}");
+    for i in 0..dense.theta_trace.n_rows() {
+        for (a, b) in dense.theta_trace.row(i).iter().zip(block.theta_trace.row(i)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{label}: theta differs at row {i}");
+        }
+    }
+    assert_eq!(dense.accepted, block.accepted, "{label}");
+    assert_eq!(dense.z_brightened, block.z_brightened, "{label}");
+    assert_eq!(dense.z_darkened, block.z_darkened, "{label}");
+}
+
+/// One experiment twice — dense synth vs the same data via `.fbin` with a
+/// deliberately tiny cache — and byte-compare the chains.
+fn run_dense_vs_block(mut cfg: ExperimentConfig, path: &str, cache_rows: usize) {
+    let n = cfg.n_data.expect("test configs pin n");
+    let data = synth_dataset(cfg.task, n, cfg.seed);
+    write_fbin(path, &data).expect("write .fbin");
+
+    let dense = run_experiment(&cfg).expect("dense run");
+    cfg.data_path = Some(path.to_string());
+    cfg.cache_rows = cache_rows;
+    let block = run_experiment(&cfg).expect("block run");
+
+    assert!(cache_rows < n, "test must force eviction");
+    for (d, b) in dense.chains.iter().zip(&block.chains) {
+        assert_chains_byte_identical(d, b, &format!("{:?}/{:?}", cfg.task, cfg.backend));
+    }
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn logistic_map_tuned_block_chain_matches_dense_on_cpu() {
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::MapTunedFlyMc,
+        n_data: Some(400),
+        iters: 120,
+        burnin: 30,
+        map_steps: 60,
+        record_every: 0,
+        seed: 5,
+        ..Default::default()
+    };
+    run_dense_vs_block(cfg, &tmp("logistic_cpu.fbin"), 64);
+}
+
+#[test]
+fn logistic_block_chain_matches_dense_on_parcpu() {
+    // the sharded backend reads through per-worker-group caches — identical
+    // bits regardless of cache topology
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(500),
+        iters: 100,
+        burnin: 20,
+        backend: Backend::ParCpu,
+        threads: 3,
+        record_every: 0,
+        seed: 11,
+        ..Default::default()
+    };
+    run_dense_vs_block(cfg, &tmp("logistic_parcpu.fbin"), 48);
+}
+
+#[test]
+fn softmax_and_robust_block_chains_match_dense() {
+    let softmax = ExperimentConfig {
+        task: Task::SoftmaxCifar,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(150),
+        iters: 50,
+        burnin: 10,
+        record_every: 0,
+        seed: 7,
+        ..Default::default()
+    };
+    run_dense_vs_block(softmax, &tmp("softmax.fbin"), 32);
+
+    let robust = ExperimentConfig {
+        task: Task::RobustOpv,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(300),
+        iters: 50,
+        burnin: 10,
+        record_every: 0,
+        seed: 9,
+        ..Default::default()
+    };
+    run_dense_vs_block(robust, &tmp("robust.fbin"), 40);
+}
+
+#[test]
+fn multi_replica_block_chains_match_dense() {
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(300),
+        iters: 60,
+        burnin: 20,
+        chains: 3,
+        record_every: 0,
+        seed: 21,
+        ..Default::default()
+    };
+    run_dense_vs_block(cfg, &tmp("replicas.fbin"), 50);
+}
+
+#[test]
+fn mismatched_task_and_label_kind_is_rejected() {
+    let path = tmp("mismatch.fbin");
+    let data = synth_dataset(Task::RobustOpv, 60, 1);
+    write_fbin(&path, &data).unwrap();
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        n_data: Some(60),
+        iters: 10,
+        burnin: 2,
+        data_path: Some(path.clone()),
+        ..Default::default()
+    };
+    let err = run_experiment(&cfg).unwrap_err().to_string();
+    assert!(err.contains("regression"), "{err}");
+    assert!(err.contains("LogisticMnist"), "{err}");
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn fbin_random_shapes_roundtrip_bitwise_under_tiny_caches() {
+    // Property-style sweep: assorted (n, d, cache) shapes, including caches
+    // of a single block and block sizes that do not divide n.
+    use firefly::util::Rng;
+    let mut rng = Rng::new(77);
+    for (case, &(n, d)) in [(33usize, 3usize), (64, 8), (129, 5), (200, 12)].iter().enumerate() {
+        let path = tmp(&format!("prop_{case}.fbin"));
+        let data = AnyData::Regression(firefly::data::synth::synth_opv(n, d, case as u64));
+        write_fbin(&path, &data).unwrap();
+        let dense = match &data {
+            AnyData::Regression(r) => r,
+            _ => unreachable!(),
+        };
+        let dm = dense.x.as_dense().unwrap();
+        for &(rpb, budget) in &[(7usize, 7usize), (16, 32), (64, 64)] {
+            let cache = BlockCacheConfig { rows_per_block: rpb, cached_rows: budget };
+            let got = match open_fbin(&path, cache).unwrap() {
+                AnyData::Regression(r) => r,
+                other => panic!("wrong kind {}", other.kind_name()),
+            };
+            let mut rc = got.x.new_cache();
+            for _ in 0..4 * n {
+                let i = rng.below(n);
+                let row = got.x.row(i, &mut rc);
+                for (a, b) in row.iter().zip(dm.row(i)) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} d={d} rpb={rpb} row={i}");
+                }
+            }
+            for (a, b) in got.y.iter().zip(&dense.y) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let _ = std::fs::remove_file(path);
+    }
+}
