@@ -1,0 +1,218 @@
+//! Checkpoint-layer macro-benchmark: what durability costs.
+//!
+//! For each paper task, runs the same FlyMC chain twice — without
+//! checkpointing and with a periodic `.fckpt` writer — and reports:
+//!
+//! * wallclock per iteration for both runs and the implied **write
+//!   overhead per iteration** (the amortized cost of durability),
+//! * seconds per checkpoint write and the serialized checkpoint size,
+//! * **resume latency**: the time to read + validate + restore the final
+//!   checkpoint into a freshly built chain (model/backend construction is
+//!   excluded — a resuming process pays that to start sampling at all).
+//!
+//! Emits `BENCH_checkpoint.json` so future PRs have a trajectory to beat.
+//!
+//!     cargo bench --bench checkpoint             # full sizes
+//!     cargo bench --bench checkpoint -- --smoke  # CI smoke mode
+//!
+//! The two runs are also byte-compared (traces, counters): a checkpoint
+//! writer that perturbs the chain would invalidate every number here.
+
+use firefly::bench_harness::{fmt_time, Report};
+use firefly::cli::Args;
+use firefly::engine::experiment::{build_chain, build_model, build_sampler, chain_config};
+use firefly::engine::observer::ChainObserver;
+use firefly::engine::{
+    read_checkpoint, replica_checkpoint_path, run_chain_segments, ChainCheckpointSpec,
+    ChainResult, ChainState, CheckpointObserver, RecordingObserver, StreamingObserver,
+};
+use firefly::prelude::*;
+use firefly::util::Timer;
+
+struct Scenario {
+    task: Task,
+    label: &'static str,
+    n: usize,
+    iters: usize,
+    every: usize,
+}
+
+struct Numbers {
+    base_per_iter: f64,
+    ckpt_per_iter: f64,
+    writes: u64,
+    ckpt_bytes: u64,
+    resume_restore_secs: f64,
+}
+
+fn build(cfg: &ExperimentConfig) -> (firefly::engine::ChainTarget, Box<dyn Sampler>, Vec<f64>) {
+    let (model, prior, _, _) = build_model(cfg).expect("build model");
+    let (target, theta0) = build_chain(cfg, model, prior, cfg.seed).expect("build chain");
+    (target, build_sampler(cfg.task), theta0)
+}
+
+fn run(cfg: &ExperimentConfig, spec: Option<&ChainCheckpointSpec>) -> (f64, ChainResult) {
+    let (target, sampler, theta0) = build(cfg);
+    let ccfg = chain_config(cfg, cfg.seed);
+    let timer = Timer::start();
+    let res = run_chain_segments(target, sampler, theta0, &ccfg, spec).expect("chain run");
+    (timer.elapsed_secs(), res)
+}
+
+fn assert_identical(a: &ChainResult, b: &ChainResult, label: &str) {
+    assert_eq!(a.logpost_joint, b.logpost_joint, "{label}: checkpointing perturbed the chain");
+    assert_eq!(a.queries_per_iter, b.queries_per_iter, "{label}: query accounting drifted");
+    assert_eq!(a.theta_trace, b.theta_trace, "{label}: θ trace drifted");
+}
+
+fn measure(scenario: &Scenario, dir: &str, seed: u64) -> Numbers {
+    let cfg = ExperimentConfig {
+        task: scenario.task,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(scenario.n),
+        iters: scenario.iters,
+        burnin: scenario.iters / 4,
+        record_every: 0,
+        seed,
+        ..Default::default()
+    };
+    let fingerprint = cfg.fingerprint();
+    let path = replica_checkpoint_path(dir, 0);
+
+    let (base_secs, base_res) = run(&cfg, None);
+    let spec = ChainCheckpointSpec {
+        path: path.clone(),
+        every: scenario.every,
+        fingerprint,
+        resume: false,
+        stop_after: None,
+    };
+    let (ckpt_secs, ckpt_res) = run(&cfg, Some(&spec));
+    assert_identical(&base_res, &ckpt_res, scenario.label);
+
+    let writes = (scenario.iters / scenario.every) as u64
+        + u64::from(scenario.iters % scenario.every != 0);
+    let ckpt_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+
+    // resume latency: read + validate + restore into a freshly built chain
+    let (target, sampler, theta0) = build(&cfg);
+    let ccfg = chain_config(&cfg, cfg.seed);
+    let dim = theta0.len();
+    let mut state = ChainState::new(target, sampler, theta0, &ccfg);
+    let mut rec = RecordingObserver::new(&ccfg, dim);
+    let mut stats = StreamingObserver::new(&ccfg, dim);
+    let mut writer = CheckpointObserver::new(&path, scenario.every, fingerprint);
+    let mut observers: [&mut dyn ChainObserver; 3] = [&mut rec, &mut stats, &mut writer];
+    let timer = Timer::start();
+    let image = read_checkpoint(&path).expect("read checkpoint");
+    assert_eq!(image.fingerprint, fingerprint);
+    state.restore(&image, &mut observers).expect("restore");
+    let resume_restore_secs = timer.elapsed_secs();
+    assert_eq!(state.completed(), scenario.iters, "final checkpoint sits at completion");
+
+    Numbers {
+        base_per_iter: base_secs / scenario.iters as f64,
+        ckpt_per_iter: ckpt_secs / scenario.iters as f64,
+        writes,
+        ckpt_bytes,
+        resume_restore_secs,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 0);
+    let dir = std::env::temp_dir()
+        .join(format!("firefly_bench_ckpt_{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    std::fs::create_dir_all(&dir).expect("bench checkpoint dir");
+
+    let scenarios = [
+        Scenario {
+            task: Task::LogisticMnist,
+            label: "logistic",
+            n: if smoke { 400 } else { 5000 },
+            iters: if smoke { 200 } else { 2000 },
+            every: if smoke { 50 } else { 200 },
+        },
+        Scenario {
+            task: Task::SoftmaxCifar,
+            label: "softmax",
+            n: if smoke { 240 } else { 1500 },
+            iters: if smoke { 80 } else { 500 },
+            every: if smoke { 20 } else { 100 },
+        },
+        Scenario {
+            task: Task::RobustOpv,
+            label: "robust",
+            n: if smoke { 400 } else { 2000 },
+            iters: if smoke { 80 } else { 500 },
+            every: if smoke { 20 } else { 100 },
+        },
+    ];
+
+    let mut report = Report::new(
+        "Checkpoint overhead (untuned FlyMC)",
+        &[
+            "task",
+            "base/iter",
+            "ckpt/iter",
+            "overhead/iter",
+            "per write",
+            "ckpt size",
+            "restore",
+        ],
+    );
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"checkpoint\",\n");
+    json.push_str(&format!("  \"smoke\": {smoke},\n  \"scenarios\": [\n"));
+
+    for (si, s) in scenarios.iter().enumerate() {
+        println!(
+            "checkpoint bench: {} N={} iters={} every={}{}",
+            s.label,
+            s.n,
+            s.iters,
+            s.every,
+            if smoke { " (smoke)" } else { "" }
+        );
+        let n = measure(s, &dir, seed);
+        let overhead = (n.ckpt_per_iter - n.base_per_iter).max(0.0);
+        let per_write = overhead * s.iters as f64 / n.writes as f64;
+        report.row(&[
+            s.label.to_string(),
+            fmt_time(n.base_per_iter),
+            fmt_time(n.ckpt_per_iter),
+            fmt_time(overhead),
+            fmt_time(per_write),
+            format!("{} B", n.ckpt_bytes),
+            fmt_time(n.resume_restore_secs),
+        ]);
+        json.push_str(&format!(
+            "    {{\"task\": \"{}\", \"n\": {}, \"iters\": {}, \"checkpoint_every\": {}, \
+             \"baseline_secs_per_iter\": {:e}, \"checkpointed_secs_per_iter\": {:e}, \
+             \"write_overhead_secs_per_iter\": {:e}, \"writes\": {}, \
+             \"secs_per_write\": {:e}, \"ckpt_bytes\": {}, \
+             \"resume_restore_secs\": {:e}}}{}\n",
+            s.label,
+            s.n,
+            s.iters,
+            s.every,
+            n.base_per_iter,
+            n.ckpt_per_iter,
+            overhead,
+            n.writes,
+            per_write,
+            n.ckpt_bytes,
+            n.resume_restore_secs,
+            if si + 1 < scenarios.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    report.print();
+    std::fs::write("BENCH_checkpoint.json", &json).expect("write BENCH_checkpoint.json");
+    println!("wrote BENCH_checkpoint.json");
+    let _ = std::fs::remove_dir_all(dir);
+}

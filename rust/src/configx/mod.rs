@@ -331,6 +331,22 @@ pub struct ExperimentConfig {
     /// per-reader block-cache budget in rows for `.fbin` data (0 = default;
     /// see DESIGN.md §Storage for sizing)
     pub cache_rows: usize,
+    /// write a `.fckpt` chain checkpoint every this many iterations
+    /// (0 = disabled unless `checkpoint_dir` is set, in which case only a
+    /// final checkpoint is written; see DESIGN.md §Checkpointing)
+    pub checkpoint_every: usize,
+    /// directory holding one `chain_NNNN.fckpt` per replica (required when
+    /// `checkpoint_every` > 0 and for the `resume` subcommand)
+    pub checkpoint_dir: Option<String>,
+    /// bound this session to at most this many iterations per chain — the
+    /// run stops mid-chain (checkpointed at the stop point, resumable)
+    /// instead of completing; None = run to completion
+    pub stop_after: Option<usize>,
+    /// keep the O(iters × dim) in-memory series; false (CLI
+    /// `--streaming-only`, TOML `[experiment] streaming_only = true`) keeps
+    /// only the O(dim) streaming summary — bounded memory and small
+    /// checkpoints for very long chains
+    pub record_trace: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -355,6 +371,10 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".to_string(),
             data_path: None,
             cache_rows: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            stop_after: None,
+            record_trace: true,
         }
     }
 }
@@ -390,6 +410,25 @@ impl ExperimentConfig {
             c.data_path = Some(p.to_string());
         }
         c.cache_rows = doc.usize_or("data", "cache_rows", c.cache_rows);
+        if let Some(v) = doc.get("checkpoint", "every").and_then(|v| v.as_i64()) {
+            if v < 0 {
+                return Err(format!("checkpoint.every must be non-negative, got {v}"));
+            }
+            c.checkpoint_every = v as usize;
+        }
+        if let Some(d) = doc.get("checkpoint", "dir").and_then(|v| v.as_str()) {
+            c.checkpoint_dir = Some(d.to_string());
+        }
+        if let Some(v) = doc.get("checkpoint", "stop_after").and_then(|v| v.as_i64()) {
+            if v <= 0 {
+                return Err(format!("checkpoint.stop_after must be positive, got {v}"));
+            }
+            c.stop_after = Some(v as usize);
+        }
+        if doc.bool_or("experiment", "streaming_only", false) {
+            c.record_trace = false;
+        }
+        c.validate()?;
         Ok(c)
     }
 
@@ -405,6 +444,99 @@ impl ExperimentConfig {
             Algorithm::MapTunedFlyMc => 0.01,
             Algorithm::RegularMcmc => 0.0,
         })
+    }
+
+    /// Reject configurations whose FlyMC parameters silently degenerate the
+    /// sampler instead of erroring at run time:
+    ///
+    /// * `q_dark_to_bright` must lie strictly inside (0, 1) — the implicit
+    ///   resampler takes `ln q`, so q = 0 makes every bright→dark test
+    ///   `-inf` and q ≥ 1 makes the geometric skip propose every dark point
+    ///   (or, at exactly 1, `ln q = 0` degenerates both acceptance tests);
+    /// * `resample_fraction` must lie in (0, 1] — 0 proposes nothing and
+    ///   > 1 would redraw more than N points per sweep;
+    /// * checkpointing needs a directory to write into, and a session
+    ///   iteration bound of 0 would run nothing.
+    ///
+    /// Called by every parse path (TOML and CLI) so invalid values are
+    /// rejected before any chain is built.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(q) = self.q_dark_to_bright {
+            if !(q > 0.0 && q < 1.0) {
+                return Err(format!(
+                    "q_dark_to_bright must lie strictly inside (0, 1), got {q}"
+                ));
+            }
+        }
+        if !(self.resample_fraction > 0.0 && self.resample_fraction <= 1.0) {
+            return Err(format!(
+                "resample_fraction must lie in (0, 1], got {}",
+                self.resample_fraction
+            ));
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_none() {
+            return Err(
+                "checkpoint_every is set but no checkpoint_dir to write into".to_string()
+            );
+        }
+        if self.stop_after == Some(0) {
+            return Err("stop_after = 0 would run no iterations".to_string());
+        }
+        if self.stop_after.is_some() && self.checkpoint_dir.is_none() {
+            return Err(
+                "stop_after bounds a session but without checkpoint_dir the partial \
+                 run could never be resumed"
+                    .to_string(),
+            );
+        }
+        Ok(())
+    }
+
+    /// FNV-1a fingerprint of every field that determines the chain's
+    /// per-iteration evolution and recorded output — stamped into `.fckpt`
+    /// headers so `resume` refuses a checkpoint written under a different
+    /// configuration. Execution-only knobs (backend, threads, cache budget,
+    /// artifacts dir, checkpoint wiring, session bounds) are deliberately
+    /// excluded: the CPU backends are bit-identical at any thread count, so
+    /// resuming a `cpu` run on `parcpu` (or with a different cache size) is
+    /// legitimate. The backend's *equivalence class* is fingerprinted,
+    /// though: `cpu` and `parcpu` share one class (byte-identical outputs,
+    /// §Parallelism), while `xla` is its own — device-side reductions have
+    /// no cross-family bit-identity guarantee, so a cpu-family checkpoint
+    /// refuses to resume under XLA and vice versa. For out-of-core runs the
+    /// fingerprint covers the `data_path` *string*, not the file's bytes —
+    /// the `.fbin` dataset is assumed immutable between sessions (shape
+    /// drift is caught at restore; content drift at the same path is not
+    /// detectable without hashing the whole file, see DESIGN.md
+    /// §Checkpointing).
+    pub fn fingerprint(&self) -> u64 {
+        let backend_family = match self.backend {
+            Backend::Cpu | Backend::ParCpu => "cpu",
+            Backend::Xla => "xla",
+        };
+        let canon = format!(
+            "task={:?};alg={:?};seed={};iters={};burnin={};n_data={:?};chains={};\
+             q={:?};xi={};explicit={};fraction={};prior_scale={:?};map_steps={};\
+             record_every={};data_path={:?};record_trace={};backend_family={}",
+            self.task,
+            self.algorithm,
+            self.seed,
+            self.iters,
+            self.burnin,
+            self.n_data,
+            self.chains,
+            self.q_dark_to_bright,
+            self.untuned_xi,
+            self.explicit_resample,
+            self.resample_fraction,
+            self.prior_scale,
+            self.map_steps,
+            self.record_every,
+            self.data_path,
+            self.record_trace,
+            backend_family,
+        );
+        crate::util::codec::fnv1a(canon.as_bytes())
     }
 }
 
@@ -500,6 +632,108 @@ mod tests {
         let c = ExperimentConfig::from_str_toml("").unwrap();
         assert_eq!(c.backend, Backend::Cpu);
         assert_eq!(c.threads, 0);
+    }
+
+    #[test]
+    fn flymc_knobs_are_validated_at_parse_time() {
+        // q_dark_to_bright outside (0, 1) is rejected
+        for bad in ["0.0", "1.0", "-0.2", "1.5", "nan"] {
+            let toml = format!("[flymc]\nq_dark_to_bright = {bad}");
+            let err = ExperimentConfig::from_str_toml(&toml)
+                .expect_err(&format!("q = {bad} must be rejected"));
+            assert!(err.contains("q_dark_to_bright") || err.contains("parse"), "{err}");
+        }
+        // boundaries just inside are accepted
+        for good in ["1e-6", "0.999"] {
+            let toml = format!("[flymc]\nq_dark_to_bright = {good}");
+            ExperimentConfig::from_str_toml(&toml).unwrap();
+        }
+        // resample_fraction outside (0, 1] is rejected; 1.0 is allowed
+        for bad in ["0.0", "-0.1", "1.01"] {
+            let toml = format!("[flymc]\nresample_fraction = {bad}");
+            let err = ExperimentConfig::from_str_toml(&toml)
+                .expect_err(&format!("fraction = {bad} must be rejected"));
+            assert!(err.contains("resample_fraction"), "{err}");
+        }
+        ExperimentConfig::from_str_toml("[flymc]\nresample_fraction = 1.0").unwrap();
+        // validate() rejects a programmatically-set bad value too
+        let c = ExperimentConfig {
+            q_dark_to_bright: Some(0.0),
+            ..ExperimentConfig::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_section_parses_and_is_validated() {
+        let c = ExperimentConfig::from_str_toml(
+            "[checkpoint]\nevery = 500\ndir = \"ckpt\"\nstop_after = 2000",
+        )
+        .unwrap();
+        assert_eq!(c.checkpoint_every, 500);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("ckpt"));
+        assert_eq!(c.stop_after, Some(2000));
+        // cadence without a directory is rejected
+        let err = ExperimentConfig::from_str_toml("[checkpoint]\nevery = 500").unwrap_err();
+        assert!(err.contains("checkpoint_dir"), "{err}");
+        // a session bound without checkpointing could never resume
+        let err = ExperimentConfig::from_str_toml("[checkpoint]\nstop_after = 10").unwrap_err();
+        assert!(err.contains("stop_after") || err.contains("checkpoint_dir"), "{err}");
+        let err =
+            ExperimentConfig::from_str_toml("[checkpoint]\ndir = \"d\"\nstop_after = 0")
+                .unwrap_err();
+        assert!(err.contains("stop_after"), "{err}");
+        // negative values must be rejected, not wrapped through `as usize`
+        let err =
+            ExperimentConfig::from_str_toml("[checkpoint]\ndir = \"d\"\nstop_after = -5")
+                .unwrap_err();
+        assert!(err.contains("positive"), "{err}");
+        let err = ExperimentConfig::from_str_toml("[checkpoint]\ndir = \"d\"\nevery = -1")
+            .unwrap_err();
+        assert!(err.contains("non-negative"), "{err}");
+        // defaults: checkpointing off
+        let c = ExperimentConfig::from_str_toml("").unwrap();
+        assert_eq!(c.checkpoint_every, 0);
+        assert!(c.checkpoint_dir.is_none());
+        assert!(c.stop_after.is_none());
+    }
+
+    #[test]
+    fn streaming_only_parses_and_marks_the_fingerprint() {
+        let c = ExperimentConfig::from_str_toml("[experiment]\nstreaming_only = true").unwrap();
+        assert!(!c.record_trace);
+        let base = ExperimentConfig::from_str_toml("").unwrap();
+        assert!(base.record_trace);
+        // recording mode changes recorded output, so it IS fingerprinted
+        assert_ne!(c.fingerprint(), base.fingerprint());
+    }
+
+    #[test]
+    fn fingerprint_tracks_evolution_fields_only() {
+        let base = ExperimentConfig::default();
+        assert_eq!(base.fingerprint(), ExperimentConfig::default().fingerprint());
+        // evolution-relevant fields change the fingerprint
+        let c = ExperimentConfig { seed: 99, ..base.clone() };
+        assert_ne!(c.fingerprint(), base.fingerprint());
+        let c = ExperimentConfig { iters: 12345, ..base.clone() };
+        assert_ne!(c.fingerprint(), base.fingerprint());
+        let c = ExperimentConfig { q_dark_to_bright: Some(0.05), ..base.clone() };
+        assert_ne!(c.fingerprint(), base.fingerprint());
+        // execution-only knobs do not (cpu/parcpu are bit-identical)
+        let c = ExperimentConfig {
+            backend: Backend::ParCpu,
+            threads: 8,
+            cache_rows: 4096,
+            checkpoint_every: 100,
+            checkpoint_dir: Some("x".into()),
+            stop_after: Some(10),
+            ..base.clone()
+        };
+        assert_eq!(c.fingerprint(), base.fingerprint());
+        // ...but crossing the backend FAMILY boundary does: XLA outputs
+        // have no bit-identity guarantee against the CPU family
+        let c = ExperimentConfig { backend: Backend::Xla, ..base.clone() };
+        assert_ne!(c.fingerprint(), base.fingerprint());
     }
 
     #[test]

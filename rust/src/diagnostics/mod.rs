@@ -2,6 +2,14 @@
 //! initial monotone positive sequence — the estimator family R-CODA's
 //! `effectiveSize` uses, which the paper reports), split-R̂, and the flat
 //! [`TraceMatrix`] θ-trace storage the chain driver records into.
+//!
+//! For chains too long to keep an O(iters × dim) trace, the [`streaming`]
+//! submodule maintains the same quantities online in O(dim) memory
+//! (Welford moments, batch-means ESS, split-R̂ half inputs).
+
+pub mod streaming;
+
+pub use streaming::{BrightStats, StreamingStats, StreamingSummary};
 
 use crate::util::math::{mean, variance};
 
@@ -77,6 +85,31 @@ impl TraceMatrix {
     pub fn column_into(&self, j: usize, out: &mut Vec<f64>) {
         out.clear();
         out.extend(self.column_iter(j));
+    }
+
+    /// The raw row-major backing slice (`n_rows × dim` values) — what the
+    /// checkpoint layer serializes.
+    pub fn raw(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Overwrite this trace with checkpointed raw contents (keeps the
+    /// existing capacity, so restoring into a pre-reserved trace does not
+    /// reallocate when the payload fits).
+    pub fn restore_raw(&mut self, dim: usize, vals: &[f64]) -> Result<(), String> {
+        if dim == 0 && !vals.is_empty() {
+            return Err("trace payload with zero dim".to_string());
+        }
+        if dim > 0 && vals.len() % dim != 0 {
+            return Err(format!(
+                "trace payload of {} values is not a multiple of dim {dim}",
+                vals.len()
+            ));
+        }
+        self.dim = dim;
+        self.data.clear();
+        self.data.extend_from_slice(vals);
+        Ok(())
     }
 }
 

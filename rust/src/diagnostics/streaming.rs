@@ -1,0 +1,648 @@
+//! Bounded-memory (O(dim)) streaming chain statistics.
+//!
+//! The trace-based estimators in [`crate::diagnostics`] need the whole
+//! O(iters × dim) θ trace in memory — fine for paper-scale runs, hopeless
+//! for `--iters 10_000_000` production chains. This module maintains the
+//! same quantities *online*, in O(dim) memory independent of chain length:
+//!
+//! * per-component **Welford moments** (mean / unbiased variance, the same
+//!   n−1 normalization as [`crate::util::math::variance`]);
+//! * **batch-means ESS** inputs: non-overlapping batches of size
+//!   ⌈√rows⌉, a Welford accumulator over the batch means, and the classic
+//!   estimator τ̂ = B·Var(batch means)/s², ESS = rows/τ̂;
+//! * **split-R̂ inputs**: separate Welford accumulators over the first and
+//!   second halves of the (known-length) post-burn-in window, combined with
+//!   the same formula as [`crate::diagnostics::split_rhat_slices`];
+//! * the per-iteration **bright-count summary** (min / mean / max / last)
+//!   the experiment report prints.
+//!
+//! Accuracy contract (asserted by `rust/tests/integration_checkpoint.rs`):
+//! streaming mean/variance agree with the batch `TraceMatrix`-derived
+//! values to ≤ 1e-8 relative error, and the halves-based split-R̂ agrees
+//! with [`crate::diagnostics::split_rhat_slices`] over the materialized
+//! halves to ≤ 1e-6 relative. The estimators are not bit-equal to their
+//! batch counterparts (different summation order); they ARE bit-reproducible
+//! run-to-run, which is what the checkpoint/resume identity guarantee needs.
+//!
+//! Everything here is checkpointable ([`StreamingStats::save_state`]) and
+//! allocation-free after construction — the streaming observer rides inside
+//! the zero-alloc steady-state window (DESIGN.md §Perf).
+
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Per-component Welford accumulator over `dim`-vectors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WelfordVec {
+    n: u64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl WelfordVec {
+    /// Zeroed accumulator over `dim` components.
+    pub fn new(dim: usize) -> Self {
+        WelfordVec { n: 0, mean: vec![0.0; dim], m2: vec![0.0; dim] }
+    }
+
+    /// Number of components.
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Number of vectors accumulated.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Fold one vector in (O(dim), no allocation).
+    pub fn update(&mut self, x: &[f64]) {
+        debug_assert_eq!(x.len(), self.mean.len());
+        self.n += 1;
+        let n = self.n as f64;
+        for j in 0..self.mean.len() {
+            let delta = x[j] - self.mean[j];
+            self.mean[j] += delta / n;
+            self.m2[j] += delta * (x[j] - self.mean[j]);
+        }
+    }
+
+    /// Running mean of component `j` (NaN before the first update).
+    pub fn mean(&self, j: usize) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean[j]
+        }
+    }
+
+    /// Running means (zeros before the first update).
+    pub fn means(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Unbiased (n−1) sample variance of component `j` (NaN below 2).
+    pub fn var(&self, j: usize) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2[j] / (self.n - 1) as f64
+        }
+    }
+
+    /// Serialize (count + mean + M2, bit-exact).
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        w.u64(self.n);
+        w.f64_slice(&self.mean);
+        w.f64_slice(&self.m2);
+    }
+
+    /// Restore [`Self::save_state`] bytes in place (keeps capacity;
+    /// dimension must match).
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let dim = self.mean.len();
+        self.n = r.u64()?;
+        r.f64_slice_into(&mut self.mean)?;
+        r.f64_slice_into(&mut self.m2)?;
+        if self.mean.len() != dim || self.m2.len() != dim {
+            return Err(format!(
+                "Welford block has {} components, expected {dim}",
+                self.mean.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Streaming min / mean / max / last summary of the per-iteration bright
+/// count (the paper's M) — what the experiment summary prints instead of
+/// only the final `n_bright`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BrightStats {
+    /// smallest observed bright count
+    pub min: usize,
+    /// largest observed bright count
+    pub max: usize,
+    /// most recently observed bright count
+    pub last: usize,
+    /// number of observations folded in
+    pub count: usize,
+    sum: u64,
+}
+
+impl Default for BrightStats {
+    fn default() -> Self {
+        BrightStats { min: usize::MAX, max: 0, last: 0, count: 0, sum: 0 }
+    }
+}
+
+impl BrightStats {
+    /// Fold one per-iteration bright count in.
+    pub fn record(&mut self, b: usize) {
+        self.min = self.min.min(b);
+        self.max = self.max.max(b);
+        self.last = b;
+        self.sum += b as u64;
+        self.count += 1;
+    }
+
+    /// Mean bright count (NaN before the first observation).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Serialize (bit-exact).
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        w.usize(self.min);
+        w.usize(self.max);
+        w.usize(self.last);
+        w.usize(self.count);
+        w.u64(self.sum);
+    }
+
+    /// Restore [`Self::save_state`] bytes.
+    pub fn load_state(r: &mut ByteReader) -> Result<Self, String> {
+        Ok(BrightStats {
+            min: r.usize()?,
+            max: r.usize()?,
+            last: r.usize()?,
+            count: r.usize()?,
+            sum: r.u64()?,
+        })
+    }
+}
+
+/// The full O(dim) streaming engine: moments + batch-means ESS inputs +
+/// split-R̂ half accumulators + bright-count summary. See the module docs
+/// for the estimator definitions and the accuracy contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamingStats {
+    dim: usize,
+    rows_expected: usize,
+    batch_size: usize,
+    half_len: usize,
+    rows_seen: usize,
+    moments: WelfordVec,
+    batch_sum: Vec<f64>,
+    batch_fill: usize,
+    batch_means: WelfordVec,
+    first_half: WelfordVec,
+    second_half: WelfordVec,
+    /// per-iteration bright-count summary (FlyMC only; empty for regular)
+    pub bright: BrightStats,
+    post_iters: usize,
+    queries_sum: u64,
+}
+
+impl StreamingStats {
+    /// Engine for a θ stream of `rows_expected` recorded `dim`-vectors
+    /// (the post-burn-in, thinned trace cadence). The batch size is fixed
+    /// at ⌈√rows_expected⌉ so the estimator is deterministic and
+    /// checkpointable; the half split point is `rows_expected / 2`.
+    pub fn new(dim: usize, rows_expected: usize) -> Self {
+        let batch_size = (rows_expected as f64).sqrt().ceil().max(1.0) as usize;
+        StreamingStats {
+            dim,
+            rows_expected,
+            batch_size,
+            half_len: rows_expected / 2,
+            rows_seen: 0,
+            moments: WelfordVec::new(dim),
+            batch_sum: vec![0.0; dim],
+            batch_fill: 0,
+            batch_means: WelfordVec::new(dim),
+            first_half: WelfordVec::new(dim),
+            second_half: WelfordVec::new(dim),
+            bright: BrightStats::default(),
+            post_iters: 0,
+            queries_sum: 0,
+        }
+    }
+
+    /// Number of θ rows folded in so far.
+    pub fn rows(&self) -> usize {
+        self.rows_seen
+    }
+
+    /// The fixed batch size B of the batch-means estimator.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Number of components per row.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Fold one recorded θ row in (O(dim), allocation-free).
+    pub fn record_row(&mut self, row: &[f64]) {
+        debug_assert_eq!(row.len(), self.dim);
+        self.moments.update(row);
+        if self.rows_seen < self.half_len {
+            self.first_half.update(row);
+        } else if self.rows_seen < 2 * self.half_len {
+            self.second_half.update(row);
+        }
+        self.rows_seen += 1;
+        for (s, &x) in self.batch_sum.iter_mut().zip(row) {
+            *s += x;
+        }
+        self.batch_fill += 1;
+        if self.batch_fill == self.batch_size {
+            let b = self.batch_size as f64;
+            for s in self.batch_sum.iter_mut() {
+                *s /= b;
+            }
+            self.batch_means.update(&self.batch_sum);
+            self.batch_sum.fill(0.0);
+            self.batch_fill = 0;
+        }
+    }
+
+    /// Fold one per-iteration bright count in.
+    pub fn record_bright(&mut self, b: usize) {
+        self.bright.record(b);
+    }
+
+    /// Fold one post-burn-in iteration's likelihood-query count in (O(1)
+    /// memory — lets the Table-1 queries/iter column survive without the
+    /// O(iters) per-iteration series).
+    pub fn record_queries(&mut self, q: u64) {
+        self.post_iters += 1;
+        self.queries_sum += q;
+    }
+
+    /// Post-burn-in iterations folded via [`Self::record_queries`].
+    pub fn post_iters(&self) -> usize {
+        self.post_iters
+    }
+
+    /// Mean likelihood queries per post-burn-in iteration (NaN before the
+    /// first observation).
+    pub fn avg_queries(&self) -> f64 {
+        if self.post_iters == 0 {
+            f64::NAN
+        } else {
+            self.queries_sum as f64 / self.post_iters as f64
+        }
+    }
+
+    /// Running mean of component `j`.
+    pub fn mean(&self, j: usize) -> f64 {
+        self.moments.mean(j)
+    }
+
+    /// Running unbiased variance of component `j`.
+    pub fn var(&self, j: usize) -> f64 {
+        self.moments.var(j)
+    }
+
+    /// Batch-means ESS of component `j`: with B the batch size, s² the
+    /// sample variance and Var(μ_B) the variance across batch means,
+    /// τ̂ = B·Var(μ_B)/s² and ESS = rows/τ̂, clamped to [1, rows]. NaN until
+    /// at least two complete batches exist or when s² is degenerate.
+    pub fn ess_batch_means(&self, j: usize) -> f64 {
+        let s2 = self.moments.var(j);
+        let bm = self.batch_means.var(j);
+        if !(s2 > 0.0) || bm.is_nan() {
+            return f64::NAN;
+        }
+        let tau = (self.batch_size as f64 * bm / s2).max(1e-12);
+        (self.rows_seen as f64 / tau).clamp(1.0, self.rows_seen as f64)
+    }
+
+    /// Minimum batch-means ESS across components (the conservative figure
+    /// the Table-1 trace estimator also reports).
+    pub fn ess_batch_means_min(&self) -> f64 {
+        let mut min = f64::INFINITY;
+        for j in 0..self.dim {
+            let e = self.ess_batch_means(j);
+            if e.is_nan() {
+                return f64::NAN;
+            }
+            min = min.min(e);
+        }
+        if min.is_infinite() {
+            f64::NAN
+        } else {
+            min
+        }
+    }
+
+    /// Single-chain split-R̂ (worst component) from the two half-window
+    /// accumulators — the same Gelman–Rubin formula as
+    /// [`crate::diagnostics::split_rhat_slices`] over m = 2 halves of
+    /// length `rows_expected / 2`. NaN until both halves are complete.
+    pub fn split_rhat_halves(&self) -> f64 {
+        let n1 = self.first_half.count();
+        let n2 = self.second_half.count();
+        if n1 < 2 || n1 != n2 {
+            return f64::NAN;
+        }
+        let n = n1 as f64;
+        let mut worst = f64::NEG_INFINITY;
+        for j in 0..self.dim {
+            let (m1, m2) = (self.first_half.mean(j), self.second_half.mean(j));
+            let w = 0.5 * (self.first_half.var(j) + self.second_half.var(j));
+            if !(w > 0.0) {
+                continue;
+            }
+            let grand = 0.5 * (m1 + m2);
+            let b = n * ((m1 - grand) * (m1 - grand) + (m2 - grand) * (m2 - grand));
+            let var_plus = (n - 1.0) / n * w + b / n;
+            let r = (var_plus / w).sqrt();
+            if r.is_finite() {
+                worst = worst.max(r);
+            }
+        }
+        if worst == f64::NEG_INFINITY {
+            f64::NAN
+        } else {
+            worst
+        }
+    }
+
+    /// Materialize the exportable summary (allocates; call once at the end
+    /// of a run, never inside the sampling loop).
+    pub fn summary(&self) -> StreamingSummary {
+        StreamingSummary {
+            rows: self.rows_seen,
+            batch_size: self.batch_size,
+            mean: (0..self.dim).map(|j| self.mean(j)).collect(),
+            var: (0..self.dim).map(|j| self.var(j)).collect(),
+            ess_bm_min: self.ess_batch_means_min(),
+            split_rhat_halves: self.split_rhat_halves(),
+            bright: self.bright,
+            iters_post_burnin: self.post_iters,
+            queries_post_burnin: self.queries_sum,
+        }
+    }
+
+    /// Serialize the full accumulator state (bit-exact).
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        w.usize(self.dim);
+        w.usize(self.rows_expected);
+        w.usize(self.batch_size);
+        w.usize(self.half_len);
+        w.usize(self.rows_seen);
+        self.moments.save_state(w);
+        w.f64_slice(&self.batch_sum);
+        w.usize(self.batch_fill);
+        self.batch_means.save_state(w);
+        self.first_half.save_state(w);
+        self.second_half.save_state(w);
+        self.bright.save_state(w);
+        w.usize(self.post_iters);
+        w.u64(self.queries_sum);
+    }
+
+    /// Restore [`Self::save_state`] bytes into an engine constructed with
+    /// the same dimension (window geometry is taken from the checkpoint).
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let dim = r.usize()?;
+        if dim != self.dim {
+            return Err(format!("stats block has dim {dim}, expected {}", self.dim));
+        }
+        self.rows_expected = r.usize()?;
+        self.batch_size = r.usize()?;
+        self.half_len = r.usize()?;
+        self.rows_seen = r.usize()?;
+        if self.batch_size == 0 {
+            return Err("zero batch size in stats block".to_string());
+        }
+        self.moments.load_state(r)?;
+        r.f64_slice_into(&mut self.batch_sum)?;
+        if self.batch_sum.len() != dim {
+            return Err("batch accumulator shape mismatch".to_string());
+        }
+        self.batch_fill = r.usize()?;
+        if self.batch_fill >= self.batch_size {
+            return Err("batch fill exceeds batch size".to_string());
+        }
+        self.batch_means.load_state(r)?;
+        self.first_half.load_state(r)?;
+        self.second_half.load_state(r)?;
+        self.bright = BrightStats::load_state(r)?;
+        self.post_iters = r.usize()?;
+        self.queries_sum = r.u64()?;
+        Ok(())
+    }
+}
+
+/// Exportable end-of-run summary of a [`StreamingStats`] engine — what
+/// [`crate::engine::ChainResult`] carries for bounded-memory runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StreamingSummary {
+    /// θ rows folded in
+    pub rows: usize,
+    /// fixed batch size B of the ESS estimator
+    pub batch_size: usize,
+    /// per-component streaming mean
+    pub mean: Vec<f64>,
+    /// per-component streaming unbiased variance
+    pub var: Vec<f64>,
+    /// minimum batch-means ESS across components (NaN if undefined)
+    pub ess_bm_min: f64,
+    /// single-chain split-R̂ over the two window halves (NaN if undefined)
+    pub split_rhat_halves: f64,
+    /// bright-count min/mean/max/last summary (count = 0 for regular MCMC)
+    pub bright: BrightStats,
+    /// post-burn-in iterations folded in (drives the queries/iter average)
+    pub iters_post_burnin: usize,
+    /// total likelihood queries over those post-burn-in iterations
+    pub queries_post_burnin: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diagnostics::{split_rhat_slices, TraceMatrix};
+    use crate::util::math::{mean, variance};
+    use crate::util::Rng;
+
+    fn feed(rows: &[Vec<f64>]) -> StreamingStats {
+        let dim = rows[0].len();
+        let mut s = StreamingStats::new(dim, rows.len());
+        for r in rows {
+            s.record_row(r);
+        }
+        s
+    }
+
+    #[test]
+    fn moments_match_batch_formulas() {
+        let mut rng = Rng::new(1);
+        let rows: Vec<Vec<f64>> = (0..5000)
+            .map(|_| vec![rng.normal() * 2.0 + 1.0, rng.normal() * 0.5 - 3.0])
+            .collect();
+        let s = feed(&rows);
+        let mut t = TraceMatrix::new(2);
+        for r in &rows {
+            t.push_row(r);
+        }
+        let mut col = Vec::new();
+        for j in 0..2 {
+            t.column_into(j, &mut col);
+            let (bm, bv) = (mean(&col), variance(&col));
+            assert!(
+                (s.mean(j) - bm).abs() <= 1e-8 * (1.0 + bm.abs()),
+                "mean[{j}] {} vs {bm}",
+                s.mean(j)
+            );
+            assert!(
+                (s.var(j) - bv).abs() <= 1e-8 * (1.0 + bv.abs()),
+                "var[{j}] {} vs {bv}",
+                s.var(j)
+            );
+        }
+    }
+
+    #[test]
+    fn batch_means_ess_tracks_autocorrelation() {
+        // iid chain: ESS ~ n; AR(1) rho=0.9: tau ~ 19, ESS ~ n/19
+        let n = 40_000;
+        let mut rng = Rng::new(2);
+        let iid: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.normal()]).collect();
+        let s = feed(&iid);
+        let e = s.ess_batch_means(0);
+        assert!(e > 0.5 * n as f64, "iid ESS {e}");
+        let rho: f64 = 0.9;
+        let mut x = 0.0;
+        let ar: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                x = rho * x + (1.0 - rho * rho).sqrt() * rng.normal();
+                vec![x]
+            })
+            .collect();
+        let s = feed(&ar);
+        let tau_est = n as f64 / s.ess_batch_means(0);
+        let tau_true = (1.0 + rho) / (1.0 - rho); // 19
+        assert!(
+            (tau_est - tau_true).abs() / tau_true < 0.35,
+            "tau {tau_est} vs {tau_true}"
+        );
+        assert_eq!(s.ess_batch_means_min(), s.ess_batch_means(0));
+    }
+
+    #[test]
+    fn split_rhat_halves_matches_trace_estimator() {
+        let n = 6000;
+        let mut rng = Rng::new(3);
+        // well-mixed: R-hat ~ 1; shifted halves: R-hat >> 1
+        for shift in [0.0, 4.0] {
+            let rows: Vec<Vec<f64>> = (0..n)
+                .map(|i| {
+                    let base = if i >= n / 2 { shift } else { 0.0 };
+                    vec![rng.normal() + base]
+                })
+                .collect();
+            let s = feed(&rows);
+            let h = n / 2;
+            let c1: Vec<f64> = rows[..h].iter().map(|r| r[0]).collect();
+            let c2: Vec<f64> = rows[h..2 * h].iter().map(|r| r[0]).collect();
+            // reference: the trace estimator over the two materialized
+            // halves as separate "chains" of length h — split_rhat_slices
+            // halves each again, so compare against the direct formula
+            let m1 = mean(&c1);
+            let m2 = mean(&c2);
+            let v1 = variance(&c1);
+            let v2 = variance(&c2);
+            let g = 0.5 * (m1 + m2);
+            let hf = h as f64;
+            let b = hf * ((m1 - g).powi(2) + (m2 - g).powi(2));
+            let w = 0.5 * (v1 + v2);
+            let expect = (((hf - 1.0) / hf * w + b / hf) / w).sqrt();
+            let got = s.split_rhat_halves();
+            assert!(
+                (got - expect).abs() <= 1e-6 * (1.0 + expect.abs()),
+                "shift {shift}: {got} vs {expect}"
+            );
+            if shift > 0.0 {
+                assert!(got > 1.5, "disjoint halves must inflate R-hat: {got}");
+            } else {
+                assert!((got - 1.0).abs() < 0.05, "well-mixed R-hat {got}");
+            }
+        }
+        // sanity against the public slice estimator on a 2-chain layout:
+        // feeding the halves as chains halved again still lands near 1
+        let mut rng = Rng::new(4);
+        let a: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let r = split_rhat_slices(&[&a, &b]);
+        assert!((r - 1.0).abs() < 0.05, "slice-estimator sanity {r}");
+    }
+
+    #[test]
+    fn bright_stats_pin_min_mean_max_last() {
+        // pins the aggregation the experiment summary prints
+        let mut b = BrightStats::default();
+        assert_eq!(b.count, 0);
+        assert!(b.mean().is_nan());
+        for v in [7usize, 3, 11, 5] {
+            b.record(v);
+        }
+        assert_eq!(b.min, 3);
+        assert_eq!(b.max, 11);
+        assert_eq!(b.last, 5);
+        assert_eq!(b.count, 4);
+        assert!((b.mean() - 6.5).abs() < 1e-12);
+        let mut w = ByteWriter::new();
+        b.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let got = BrightStats::load_state(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(got, b);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_identically() {
+        // split the stream at an arbitrary point (mid-batch, mid-half);
+        // save/restore must continue bit-identically
+        let n = 3137;
+        let cut = 1291;
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.normal(), rng.f64()]).collect();
+        let mut full = StreamingStats::new(2, n);
+        let mut partial = StreamingStats::new(2, n);
+        for r in &rows[..cut] {
+            full.record_row(r);
+            partial.record_row(r);
+        }
+        for i in 0..cut {
+            full.record_bright(i % 17);
+            partial.record_bright(i % 17);
+            full.record_queries((i % 23) as u64);
+            partial.record_queries((i % 23) as u64);
+        }
+        let mut w = ByteWriter::new();
+        partial.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut resumed = StreamingStats::new(2, n);
+        let mut r = ByteReader::new(&bytes);
+        resumed.load_state(&mut r).unwrap();
+        r.finish().unwrap();
+        for (i, row) in rows[cut..].iter().enumerate() {
+            full.record_row(row);
+            resumed.record_row(row);
+            full.record_bright((cut + i) % 17);
+            resumed.record_bright((cut + i) % 17);
+            full.record_queries(((cut + i) % 23) as u64);
+            resumed.record_queries(((cut + i) % 23) as u64);
+        }
+        assert_eq!(full, resumed);
+        assert_eq!(full.post_iters(), n);
+        assert!((full.avg_queries() - resumed.avg_queries()).abs() == 0.0);
+        let (a, b) = (full.summary(), resumed.summary());
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.var, b.var);
+        assert_eq!(a.ess_bm_min.to_bits(), b.ess_bm_min.to_bits());
+        assert_eq!(a.split_rhat_halves.to_bits(), b.split_rhat_halves.to_bits());
+        assert_eq!(a.bright, b.bright);
+
+        // dim mismatch rejected
+        let mut wrong = StreamingStats::new(3, n);
+        assert!(wrong.load_state(&mut ByteReader::new(&bytes)).is_err());
+    }
+}

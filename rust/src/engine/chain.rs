@@ -1,13 +1,34 @@
-//! The FlyMC / regular-MCMC chain loop (paper Alg 1 at the top level):
-//! alternate a θ-update (any sampler) with a z-update (FlyMC only), recording
-//! the traces the paper's figures and tables need.
+//! The FlyMC / regular-MCMC chain runtime (paper Alg 1 at the top level):
+//! alternate a θ-update (any sampler) with a z-update (FlyMC only),
+//! publishing each completed iteration to the observer pipeline
+//! ([`crate::engine::observer`]).
+//!
+//! The runtime is **resumable**: [`ChainState`] owns the complete mutable
+//! state of a running chain (target, sampler, θ, RNG, counters, tallies)
+//! and is driven in segments via [`ChainState::run_for`]; at checkpoint
+//! boundaries it assembles a [`CheckpointImage`] capturing itself plus
+//! every observer, which the checkpoint-writer observer persists as a
+//! `.fckpt` file ([`crate::engine::checkpoint`]). A chain restored from a
+//! checkpoint and run to completion produces byte-identical traces,
+//! diagnostics inputs, and query counters to the never-interrupted run.
+//!
+//! [`run_chain`] is the one-shot convenience wrapper (recording + streaming
+//! observers, no checkpointing) the examples and benches use.
 
-use crate::diagnostics::TraceMatrix;
+use crate::diagnostics::StreamingSummary;
+use crate::engine::checkpoint::{
+    read_checkpoint, ChainCheckpointSpec, CheckpointImage, CheckpointObserver,
+    ExperimentCheckpointSpec,
+};
+use crate::engine::observer::{ChainObserver, IterRecord, RecordingObserver, StreamingObserver};
 use crate::flymc::{FullPosterior, PseudoPosterior, ZStats};
-use crate::metrics::CounterSnapshot;
+use crate::metrics::{CounterSnapshot, Counters};
 use crate::samplers::{Sampler, Target};
+use crate::util::codec::{ByteReader, ByteWriter};
 use crate::util::rng::splitmix64;
 use crate::util::{Rng, Timer};
+
+use crate::diagnostics::TraceMatrix;
 
 /// Either posterior, so the chain driver is shared between the baseline and
 /// FlyMC (z-updates are a no-op for the regular posterior).
@@ -35,6 +56,14 @@ impl ChainTarget {
         }
     }
 
+    /// The committed chain state.
+    pub fn theta(&self) -> &[f64] {
+        match self {
+            ChainTarget::FlyMc(p) => p.theta(),
+            ChainTarget::Regular(p) => p.theta(),
+        }
+    }
+
     /// The query counters of the underlying backend (shared handle).
     pub fn counters(&self) -> crate::metrics::Counters {
         match self {
@@ -48,6 +77,32 @@ impl ChainTarget {
         match self {
             ChainTarget::FlyMc(p) => p.true_log_posterior(theta),
             ChainTarget::Regular(p) => p.true_log_posterior(theta),
+        }
+    }
+
+    /// Serialize the posterior's chain state (kind-tagged).
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        match self {
+            ChainTarget::FlyMc(p) => {
+                w.u8(1);
+                p.save_state(w);
+            }
+            ChainTarget::Regular(p) => {
+                w.u8(2);
+                p.save_state(w);
+            }
+        }
+    }
+
+    /// Restore [`Self::save_state`] bytes (the posterior kind must match).
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let tag = r.u8()?;
+        match (self, tag) {
+            (ChainTarget::FlyMc(p), 1) => p.load_state(r),
+            (ChainTarget::Regular(p), 2) => p.load_state(r),
+            (_, t) => Err(format!(
+                "checkpoint target kind {t} does not match this chain's posterior"
+            )),
         }
     }
 
@@ -83,6 +138,10 @@ pub struct ChainConfig {
     pub resample_fraction: f64,
     /// RNG seed for this chain
     pub seed: u64,
+    /// keep the O(iters × dim) in-memory series (θ trace, per-iteration
+    /// series); false = streaming-only bounded memory — the recording
+    /// observer is disabled and only the O(dim) streaming summary survives
+    pub record_trace: bool,
 }
 
 impl Default for ChainConfig {
@@ -96,6 +155,7 @@ impl Default for ChainConfig {
             explicit_resample: false,
             resample_fraction: 0.1,
             seed: 0,
+            record_trace: true,
         }
     }
 }
@@ -152,17 +212,30 @@ pub struct ChainResult {
     pub z_brightened: usize,
     /// total bright→dark z-flips
     pub z_darkened: usize,
-    /// wall-clock duration of the chain loop
+    /// wall-clock duration of the chain loop (accumulated across resumed
+    /// sessions; excluded from the byte-identity contract — time is not
+    /// resumable)
     pub wallclock_secs: f64,
     /// counter totals at chain end
     pub final_counters: CounterSnapshot,
     /// the seed this chain ran with
     pub seed: u64,
+    /// O(dim) streaming statistics (Welford moments, batch-means ESS,
+    /// split-R̂ halves, bright min/mean/max/last)
+    pub stats: StreamingSummary,
 }
 
 impl ChainResult {
     /// Mean likelihood queries per iteration after burn-in (Table 1 col 1).
+    /// In streaming-only mode (no per-iteration series) the streaming
+    /// observer's O(1) post-burn-in aggregate answers instead — that
+    /// aggregate is fixed to the run's configured burn-in window, so the
+    /// `burnin` argument only slices the recorded series and is ignored
+    /// when none exists.
     pub fn avg_queries_post_burnin(&self, burnin: usize) -> f64 {
+        if self.queries_per_iter.is_empty() && self.stats.iters_post_burnin > 0 {
+            return self.stats.queries_post_burnin as f64 / self.stats.iters_post_burnin as f64;
+        }
         let tail = &self.queries_per_iter[burnin.min(self.queries_per_iter.len())..];
         if tail.is_empty() {
             return f64::NAN;
@@ -170,71 +243,415 @@ impl ChainResult {
         tail.iter().sum::<u64>() as f64 / tail.len() as f64
     }
 
-    /// Mean bright count after burn-in (the paper's M).
+    /// Mean bright count after burn-in (the paper's M). Falls back to the
+    /// streaming bright summary when the per-iteration series is absent —
+    /// like [`Self::avg_queries_post_burnin`], the fallback is fixed to
+    /// the run's configured burn-in window and ignores the argument.
     pub fn avg_bright_post_burnin(&self, burnin: usize) -> f64 {
+        if self.bright.is_empty() && self.stats.bright.count > 0 {
+            return self.stats.bright.mean();
+        }
         let tail = &self.bright[burnin.min(self.bright.len())..];
         if tail.is_empty() {
             return f64::NAN;
         }
         tail.iter().sum::<usize>() as f64 / tail.len() as f64
     }
+
+    /// Minimum component-wise ESS per 1000 recorded iterations: the Geyer
+    /// trace estimator when a trace exists, the streaming batch-means
+    /// estimate otherwise (documented tolerances in
+    /// [`crate::diagnostics::streaming`]).
+    pub fn ess_per_1000(&self) -> f64 {
+        if !self.theta_trace.is_empty() {
+            return crate::diagnostics::ess_per_1000_min_components(&self.theta_trace);
+        }
+        if self.stats.rows > 0 && self.stats.ess_bm_min.is_finite() {
+            return self.stats.ess_bm_min * 1000.0 / self.stats.rows as f64;
+        }
+        f64::NAN
+    }
 }
 
-/// Run one chain: θ-step then z-step per iteration, with per-iteration query
-/// accounting and Fig-4-style instrumentation.
+// ---------------------------------------------------------------------------
+// Resumable chain state
+// ---------------------------------------------------------------------------
+
+const TAG_CORE: [u8; 4] = *b"CORE";
+const TAG_TARGET: [u8; 4] = *b"TGT0";
+const TAG_SAMPLER: [u8; 4] = *b"SMPL";
+
+/// The complete mutable state of a running chain, driven in segments.
+///
+/// Construction commits the target at `theta0` and seeds the RNG from
+/// `cfg.seed` — exactly the old monolithic loop's preamble — after which
+/// [`Self::run_for`] advances the chain while publishing [`IterRecord`]s
+/// to the observers. [`Self::restore`] overwrites every piece of state
+/// from a [`CheckpointImage`] (the chain must have been *constructed* the
+/// same way first, which rebuilds the immutable model/backend deck).
+pub struct ChainState {
+    target: ChainTarget,
+    sampler: Box<dyn Sampler>,
+    theta: Vec<f64>,
+    rng: Rng,
+    cfg: ChainConfig,
+    completed: usize,
+    accepted: usize,
+    z_brightened: usize,
+    z_darkened: usize,
+    counters: Counters,
+    snap: CounterSnapshot,
+    wallclock_secs: f64,
+}
+
+impl ChainState {
+    /// Assemble a runnable chain at iteration 0 (commits the target at
+    /// `theta0`).
+    pub fn new(
+        mut target: ChainTarget,
+        sampler: Box<dyn Sampler>,
+        theta0: Vec<f64>,
+        cfg: &ChainConfig,
+    ) -> Self {
+        let rng = Rng::new(cfg.seed);
+        let counters = target.counters();
+        target.as_target().commit(&theta0);
+        let snap = counters.snapshot();
+        ChainState {
+            target,
+            sampler,
+            theta: theta0,
+            rng,
+            cfg: cfg.clone(),
+            completed: 0,
+            accepted: 0,
+            z_brightened: 0,
+            z_darkened: 0,
+            counters,
+            snap,
+            wallclock_secs: 0.0,
+        }
+    }
+
+    /// Dimension of the chain position.
+    pub fn dim(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// Iterations completed so far (across sessions).
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Whether the configured iteration budget has been reached.
+    pub fn is_finished(&self) -> bool {
+        self.completed >= self.cfg.iters
+    }
+
+    /// The current chain position.
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    /// Advance at most `k` iterations (stopping at `cfg.iters`), publishing
+    /// each to `observers` in order and assembling a checkpoint image
+    /// whenever any observer requests one. Returns the number of
+    /// iterations actually run. Errors only from observer checkpoint I/O.
+    pub fn run_for(
+        &mut self,
+        k: usize,
+        observers: &mut [&mut dyn ChainObserver],
+    ) -> anyhow::Result<usize> {
+        let mut timer = Timer::start();
+        let end = self.cfg.iters.min(self.completed.saturating_add(k));
+        let start = self.completed;
+        let thin = self.cfg.thin.max(1);
+        while self.completed < end {
+            let it = self.completed;
+            let info = self.sampler.step(self.target.as_target(), &mut self.theta, &mut self.rng);
+            if info.accepted {
+                self.accepted += 1;
+            }
+            let z = self.target.z_step(&self.cfg, &mut self.rng);
+            if let Some(z) = z {
+                self.z_brightened += z.brightened;
+                self.z_darkened += z.darkened;
+            }
+            let now = self.counters.snapshot();
+            let queries_delta = self.snap.delta(&now).lik_queries;
+            self.snap = now;
+            let logpost_joint = self.target.as_target().current_log_density();
+            let n_bright = self.target.n_bright();
+            let full_logpost =
+                if self.cfg.record_full_every > 0 && it % self.cfg.record_full_every == 0 {
+                    Some(self.target.true_log_posterior(&self.theta))
+                } else {
+                    None
+                };
+            let record_theta = it >= self.cfg.burnin && (it - self.cfg.burnin) % thin == 0;
+            let rec = IterRecord {
+                iter: it,
+                theta: &self.theta,
+                accepted: info.accepted,
+                logpost_joint,
+                n_bright,
+                queries_delta,
+                z,
+                full_logpost,
+                record_theta,
+            };
+            for obs in observers.iter_mut() {
+                obs.on_iter(&rec);
+            }
+            self.completed += 1;
+            let finished = self.completed == self.cfg.iters;
+            if observers
+                .iter()
+                .any(|o| o.wants_checkpoint(self.completed, finished))
+            {
+                // fold the elapsed time in first so the image carries the
+                // wall-clock spent up to this boundary
+                self.wallclock_secs += timer.elapsed_secs();
+                timer = Timer::start();
+                let image = self.checkpoint_image(observers);
+                for obs in observers.iter_mut() {
+                    obs.on_checkpoint(&image).map_err(|e| {
+                        anyhow::anyhow!("checkpoint at iteration {}: {e:#}", self.completed)
+                    })?;
+                }
+            }
+        }
+        self.wallclock_secs += timer.elapsed_secs();
+        Ok(end - start)
+    }
+
+    /// Run until `cfg.iters` iterations have completed.
+    pub fn run_to_end(&mut self, observers: &mut [&mut dyn ChainObserver]) -> anyhow::Result<()> {
+        while !self.is_finished() {
+            self.run_for(self.cfg.iters - self.completed, observers)?;
+        }
+        Ok(())
+    }
+
+    /// Assemble a checkpoint image right now and deliver it to every
+    /// observer, regardless of cadence — called at voluntary session stops
+    /// (`stop_after`) so a bounded session never loses the iterations it
+    /// ran past the last cadence boundary.
+    pub fn force_checkpoint(
+        &mut self,
+        observers: &mut [&mut dyn ChainObserver],
+    ) -> anyhow::Result<()> {
+        let image = self.checkpoint_image(observers);
+        for obs in observers.iter_mut() {
+            obs.on_checkpoint(&image).map_err(|e| {
+                anyhow::anyhow!("checkpoint at iteration {}: {e:#}", self.completed)
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Assemble a checkpoint image of the entire chain: driver core (θ,
+    /// RNG, tallies, counter totals), posterior, sampler, and one section
+    /// per observer. Allocates — a boundary event, never per-iteration.
+    ///
+    /// # Panics
+    ///
+    /// Panics if two observers share a section tag (a pipeline wiring bug
+    /// — see [`CheckpointImage::push_section`]).
+    pub fn checkpoint_image(&self, observers: &[&mut dyn ChainObserver]) -> CheckpointImage {
+        let mut image = CheckpointImage::new(self.completed as u64);
+        let mut core = ByteWriter::new();
+        core.usize(self.completed);
+        core.f64(self.wallclock_secs);
+        core.usize(self.accepted);
+        core.usize(self.z_brightened);
+        core.usize(self.z_darkened);
+        core.f64_slice(&self.theta);
+        self.rng.save_state(&mut core);
+        self.counters.totals().save_state(&mut core);
+        image.push_section(TAG_CORE, core.into_bytes());
+        let mut tgt = ByteWriter::new();
+        self.target.save_state(&mut tgt);
+        image.push_section(TAG_TARGET, tgt.into_bytes());
+        let mut smp = ByteWriter::new();
+        self.sampler.save_state(&mut smp);
+        image.push_section(TAG_SAMPLER, smp.into_bytes());
+        for obs in observers {
+            let mut w = ByteWriter::new();
+            obs.save_state(&mut w);
+            image.push_section(obs.tag(), w.into_bytes());
+        }
+        image
+    }
+
+    /// Overwrite this freshly-constructed chain (and its observers) with a
+    /// checkpointed state. The chain must have been built from the same
+    /// configuration — callers validate the image fingerprint first.
+    pub fn restore(
+        &mut self,
+        image: &CheckpointImage,
+        observers: &mut [&mut dyn ChainObserver],
+    ) -> Result<(), String> {
+        let core = image
+            .section(TAG_CORE)
+            .ok_or_else(|| "missing CORE section".to_string())?;
+        let mut r = ByteReader::new(core);
+        let completed = r.usize()?;
+        if completed > self.cfg.iters {
+            return Err(format!(
+                "checkpoint is {completed} iterations deep, config runs only {}",
+                self.cfg.iters
+            ));
+        }
+        let wallclock_secs = r.f64()?;
+        let accepted = r.usize()?;
+        let z_brightened = r.usize()?;
+        let z_darkened = r.usize()?;
+        let dim = self.theta.len();
+        r.f64_slice_into(&mut self.theta)?;
+        if self.theta.len() != dim {
+            return Err(format!(
+                "checkpoint theta has {} components, this chain has {dim}",
+                self.theta.len()
+            ));
+        }
+        self.rng = Rng::load_state(&mut r)?;
+        let totals = crate::metrics::CounterTotals::load_state(&mut r)?;
+        r.finish().map_err(|e| format!("CORE section: {e}"))?;
+
+        let tgt = image
+            .section(TAG_TARGET)
+            .ok_or_else(|| "missing TGT0 section".to_string())?;
+        let mut r = ByteReader::new(tgt);
+        self.target.load_state(&mut r)?;
+        r.finish().map_err(|e| format!("TGT0 section: {e}"))?;
+        if self.target.theta() != self.theta.as_slice() {
+            return Err("posterior θ disagrees with chain θ (corrupt checkpoint)".to_string());
+        }
+
+        let smp = image
+            .section(TAG_SAMPLER)
+            .ok_or_else(|| "missing SMPL section".to_string())?;
+        let mut r = ByteReader::new(smp);
+        self.sampler.load_state(&mut r)?;
+        r.finish().map_err(|e| format!("SMPL section: {e}"))?;
+
+        for obs in observers.iter_mut() {
+            let tag = obs.tag();
+            let bytes = image.section(tag).ok_or_else(|| {
+                format!(
+                    "missing observer section {:?} (observer lineup changed?)",
+                    String::from_utf8_lossy(&tag)
+                )
+            })?;
+            let mut r = ByteReader::new(bytes);
+            obs.load_state(&mut r)
+                .map_err(|e| format!("{:?} section: {e}", String::from_utf8_lossy(&tag)))?;
+            r.finish()
+                .map_err(|e| format!("{:?} section: {e}", String::from_utf8_lossy(&tag)))?;
+        }
+
+        self.completed = completed;
+        self.accepted = accepted;
+        self.z_brightened = z_brightened;
+        self.z_darkened = z_darkened;
+        self.wallclock_secs = wallclock_secs;
+        self.counters.restore_totals(&totals);
+        self.snap = self.counters.snapshot();
+        Ok(())
+    }
+
+    /// Consume the chain and the two standard observers into the classic
+    /// [`ChainResult`].
+    pub fn into_result(self, rec: RecordingObserver, stats: StreamingObserver) -> ChainResult {
+        ChainResult {
+            theta_trace: rec.theta_trace,
+            logpost_joint: rec.logpost_joint,
+            full_logpost: rec.full_logpost,
+            bright: rec.bright,
+            queries_per_iter: rec.queries_per_iter,
+            accepted: self.accepted,
+            z_brightened: self.z_brightened,
+            z_darkened: self.z_darkened,
+            wallclock_secs: self.wallclock_secs,
+            final_counters: self.counters.snapshot(),
+            seed: self.cfg.seed,
+            stats: stats.into_summary(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers
+// ---------------------------------------------------------------------------
+
+/// Run one chain: θ-step then z-step per iteration, with per-iteration
+/// query accounting, Fig-4-style instrumentation, and streaming statistics.
+/// One-shot wrapper over [`ChainState`] with the standard recording +
+/// streaming observers and no checkpointing.
 pub fn run_chain(
-    mut target: ChainTarget,
-    mut sampler: Box<dyn Sampler>,
-    mut theta: Vec<f64>,
+    target: ChainTarget,
+    sampler: Box<dyn Sampler>,
+    theta: Vec<f64>,
     cfg: &ChainConfig,
 ) -> ChainResult {
-    let mut rng = Rng::new(cfg.seed);
-    let counters = target.counters();
-    let timer = Timer::start();
-    let mut out = ChainResult { seed: cfg.seed, ..Default::default() };
-    // Reserve every per-iteration series up front: recording must not
-    // allocate inside the sampling loop (the zero-alloc hot-path invariant,
-    // see DESIGN.md §Perf).
-    out.logpost_joint.reserve(cfg.iters);
-    out.queries_per_iter.reserve(cfg.iters);
-    out.bright.reserve(cfg.iters);
-    if cfg.record_full_every > 0 {
-        out.full_logpost.reserve(cfg.iters / cfg.record_full_every + 1);
+    run_chain_segments(target, sampler, theta, cfg, None)
+        .expect("checkpoint-free chain run cannot fail")
+}
+
+/// [`run_chain`] with optional checkpoint wiring: periodic `.fckpt` writes,
+/// resume-from-file, and a per-session iteration bound (`stop_after`) for
+/// preemptible jobs. See [`crate::engine::checkpoint`].
+pub fn run_chain_segments(
+    target: ChainTarget,
+    sampler: Box<dyn Sampler>,
+    theta0: Vec<f64>,
+    cfg: &ChainConfig,
+    spec: Option<&ChainCheckpointSpec>,
+) -> anyhow::Result<ChainResult> {
+    let dim = theta0.len();
+    let mut state = ChainState::new(target, sampler, theta0, cfg);
+    let mut rec = RecordingObserver::new(cfg, dim);
+    let mut stats = StreamingObserver::new(cfg, dim);
+    match spec {
+        None => {
+            let mut observers: [&mut dyn ChainObserver; 2] = [&mut rec, &mut stats];
+            state.run_to_end(&mut observers)?;
+        }
+        Some(spec) => {
+            let mut writer = CheckpointObserver::new(&spec.path, spec.every, spec.fingerprint);
+            let mut observers: [&mut dyn ChainObserver; 3] =
+                [&mut rec, &mut stats, &mut writer];
+            if spec.resume && std::path::Path::new(&spec.path).exists() {
+                let image = read_checkpoint(&spec.path)?;
+                if image.fingerprint != spec.fingerprint {
+                    anyhow::bail!(
+                        "{}: checkpoint was written under a different configuration \
+                         (fingerprint {:#018x}, expected {:#018x})",
+                        spec.path,
+                        image.fingerprint,
+                        spec.fingerprint
+                    );
+                }
+                state
+                    .restore(&image, &mut observers)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", spec.path))?;
+            }
+            match spec.stop_after {
+                Some(k) => {
+                    state.run_for(k, &mut observers)?;
+                    // a bounded session checkpoints at its stop point even
+                    // off-cadence (and even with every = 0), so the work
+                    // it did is never lost
+                    if !state.is_finished() {
+                        state.force_checkpoint(&mut observers)?;
+                    }
+                }
+                None => state.run_to_end(&mut observers)?,
+            }
+        }
     }
-    let trace_rows = cfg.iters.saturating_sub(cfg.burnin) / cfg.thin.max(1) + 1;
-    out.theta_trace = TraceMatrix::with_capacity(theta.len(), trace_rows);
-
-    // Make sure the target state is committed at theta.
-    target.as_target().commit(&theta);
-    let mut snap = counters.snapshot();
-
-    for it in 0..cfg.iters {
-        let info = sampler.step(target.as_target(), &mut theta, &mut rng);
-        if info.accepted {
-            out.accepted += 1;
-        }
-        if let Some(z) = target.z_step(cfg, &mut rng) {
-            out.z_brightened += z.brightened;
-            out.z_darkened += z.darkened;
-        }
-        let now = counters.snapshot();
-        out.queries_per_iter.push(snap.delta(&now).lik_queries);
-        snap = now;
-
-        out.logpost_joint.push(target.as_target().current_log_density());
-        if let Some(b) = target.n_bright() {
-            out.bright.push(b);
-        }
-        if cfg.record_full_every > 0 && it % cfg.record_full_every == 0 {
-            out.full_logpost.push((it, target.true_log_posterior(&theta)));
-        }
-        if it >= cfg.burnin && (it - cfg.burnin) % cfg.thin.max(1) == 0 {
-            out.theta_trace.push_row(&theta);
-        }
-    }
-    out.wallclock_secs = timer.elapsed_secs();
-    out.final_counters = counters.snapshot();
-    out
+    Ok(state.into_result(rec, stats))
 }
 
 /// Replica-spawn path: run `replicas` seeded chains, each constructed inside
@@ -248,6 +665,23 @@ pub fn run_chain_replicas<F>(
     replicas: usize,
     threads: usize,
     base: &ChainConfig,
+    build: F,
+) -> anyhow::Result<Vec<ChainResult>>
+where
+    F: Fn(&ChainConfig) -> anyhow::Result<(ChainTarget, Box<dyn Sampler>, Vec<f64>)> + Sync,
+{
+    run_chain_replicas_ckpt(replicas, threads, base, None, build)
+}
+
+/// [`run_chain_replicas`] with optional experiment-level checkpoint wiring:
+/// each replica writes/resumes its own `chain_NNNN.fckpt` inside the spec's
+/// directory (a replica with no checkpoint file starts fresh, so one
+/// `resume` invocation heals a partially-checkpointed experiment).
+pub fn run_chain_replicas_ckpt<F>(
+    replicas: usize,
+    threads: usize,
+    base: &ChainConfig,
+    ckpt: Option<&ExperimentCheckpointSpec>,
     build: F,
 ) -> anyhow::Result<Vec<ChainResult>>
 where
@@ -272,10 +706,10 @@ where
                                 break;
                             }
                             let ccfg = base.for_replica(i);
-                            let res = build(&ccfg)
-                                .map(|(target, sampler, theta0)| {
-                                    run_chain(target, sampler, theta0, &ccfg)
-                                });
+                            let spec = ckpt.map(|s| s.chain_spec(i));
+                            let res = build(&ccfg).and_then(|(target, sampler, theta0)| {
+                                run_chain_segments(target, sampler, theta0, &ccfg, spec.as_ref())
+                            });
                             done.push((i, res));
                         }
                         done
@@ -292,6 +726,7 @@ where
 mod tests {
     use super::*;
     use crate::data::synth;
+    use crate::engine::checkpoint::replica_checkpoint_path;
     use crate::metrics::Counters;
     use crate::models::{IsoGaussian, LogisticJJ, ModelBound, Prior};
     use crate::runtime::cpu_backend::CpuBackend;
@@ -309,6 +744,13 @@ mod tests {
         let mut pp = PseudoPosterior::new(model, prior, eval, theta0.clone());
         pp.init_z(&mut rng);
         (ChainTarget::FlyMc(pp), theta0)
+    }
+
+    fn tmp_dir(name: &str) -> String {
+        let p = std::env::temp_dir()
+            .join(format!("firefly_chain_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p.to_string_lossy().into_owned()
     }
 
     #[test]
@@ -332,6 +774,13 @@ mod tests {
         let avg = res.avg_queries_post_burnin(20);
         assert!(avg < 400.0, "avg queries {avg}");
         assert!(res.wallclock_secs > 0.0);
+        // the streaming observer rides every run: its moments cover the
+        // trace rows and its bright stats the post-burnin window
+        assert_eq!(res.stats.rows, 80);
+        assert_eq!(res.stats.bright.count, 80);
+        assert!(res.stats.bright.min <= res.stats.bright.max);
+        assert_eq!(res.stats.bright.last, *res.bright.last().unwrap());
+        assert!(res.stats.mean.iter().all(|m| m.is_finite()));
     }
 
     #[test]
@@ -344,6 +793,8 @@ mod tests {
         assert_eq!(r1.logpost_joint, r2.logpost_joint);
         assert_eq!(r1.bright, r2.bright);
         assert_eq!(r1.queries_per_iter, r2.queries_per_iter);
+        assert_eq!(r1.stats.mean, r2.stats.mean);
+        assert_eq!(r1.stats.var, r2.stats.var);
     }
 
     #[test]
@@ -384,5 +835,213 @@ mod tests {
         }
         // distinct replica seeds drive distinct chains
         assert_ne!(serial[0].logpost_joint, serial[1].logpost_joint);
+    }
+
+    #[test]
+    fn segmented_run_equals_one_shot() {
+        // driving the chain in arbitrary segments must not change anything:
+        // run_for is just a window over the same loop
+        let (t1, th1) = flymc_target(200, 13);
+        let cfg = ChainConfig { iters: 60, burnin: 15, record_full_every: 7, ..Default::default() };
+        let reference = run_chain(t1, Box::new(RandomWalkMh::adaptive(0.05)), th1, &cfg);
+
+        let (t2, th2) = flymc_target(200, 13);
+        let dim = th2.len();
+        let mut state =
+            ChainState::new(t2, Box::new(RandomWalkMh::adaptive(0.05)), th2, &cfg);
+        let mut rec = RecordingObserver::new(&cfg, dim);
+        let mut stats = StreamingObserver::new(&cfg, dim);
+        let mut observers: [&mut dyn ChainObserver; 2] = [&mut rec, &mut stats];
+        for k in [1, 7, 20, 11, 100] {
+            state.run_for(k, &mut observers).unwrap();
+        }
+        assert!(state.is_finished());
+        assert_eq!(state.completed(), 60);
+        let segmented = state.into_result(rec, stats);
+        assert_eq!(reference.logpost_joint, segmented.logpost_joint);
+        assert_eq!(reference.theta_trace, segmented.theta_trace);
+        assert_eq!(reference.full_logpost, segmented.full_logpost);
+        assert_eq!(reference.bright, segmented.bright);
+        assert_eq!(reference.queries_per_iter, segmented.queries_per_iter);
+        assert_eq!(reference.accepted, segmented.accepted);
+        assert_eq!(reference.final_counters, segmented.final_counters);
+        assert_eq!(reference.stats.mean, segmented.stats.mean);
+        assert_eq!(reference.stats.var, segmented.stats.var);
+    }
+
+    #[test]
+    fn killed_and_resumed_chain_is_byte_identical() {
+        let dir = tmp_dir("resume_unit");
+        let cfg = ChainConfig { iters: 80, burnin: 20, record_full_every: 9, ..Default::default() };
+        let fingerprint = 0xABCD;
+        let path = replica_checkpoint_path(&dir, 0);
+
+        // uninterrupted reference (no checkpointing at all)
+        let (t, th) = flymc_target(250, 31);
+        let reference = run_chain(t, Box::new(RandomWalkMh::adaptive(0.05)), th, &cfg);
+
+        // session 1: checkpoint every 25, HARD-killed after 37 iterations —
+        // drive the state directly and drop it mid-interval, so the only
+        // durable state is the cadence checkpoint at 25 (resume must then
+        // re-run 25..37 and still match bit for bit)
+        {
+            let (t, th) = flymc_target(250, 31);
+            let dim = th.len();
+            let mut state =
+                ChainState::new(t, Box::new(RandomWalkMh::adaptive(0.05)), th, &cfg);
+            let mut rec = RecordingObserver::new(&cfg, dim);
+            let mut stats = StreamingObserver::new(&cfg, dim);
+            let mut writer = CheckpointObserver::new(&path, 25, fingerprint);
+            let mut observers: [&mut dyn ChainObserver; 3] =
+                [&mut rec, &mut stats, &mut writer];
+            state.run_for(37, &mut observers).unwrap();
+            // ...process dies here: everything in memory is lost
+        }
+        assert_eq!(read_checkpoint(&path).unwrap().completed, 25);
+
+        // session 2: fresh build (same deterministic construction), resume
+        let (t, th) = flymc_target(250, 31);
+        let spec = ChainCheckpointSpec {
+            path: path.clone(),
+            every: 25,
+            fingerprint,
+            resume: true,
+            stop_after: None,
+        };
+        let resumed =
+            run_chain_segments(t, Box::new(RandomWalkMh::adaptive(0.05)), th, &cfg, Some(&spec))
+                .unwrap();
+
+        assert_eq!(reference.theta_trace, resumed.theta_trace);
+        assert_eq!(reference.logpost_joint, resumed.logpost_joint);
+        assert_eq!(reference.full_logpost, resumed.full_logpost);
+        assert_eq!(reference.bright, resumed.bright);
+        assert_eq!(reference.queries_per_iter, resumed.queries_per_iter);
+        assert_eq!(reference.accepted, resumed.accepted);
+        assert_eq!(reference.z_brightened, resumed.z_brightened);
+        assert_eq!(reference.z_darkened, resumed.z_darkened);
+        assert_eq!(reference.final_counters, resumed.final_counters);
+        assert_eq!(reference.stats.mean, resumed.stats.mean);
+        assert_eq!(reference.stats.var, resumed.stats.var);
+        assert_eq!(
+            reference.stats.ess_bm_min.to_bits(),
+            resumed.stats.ess_bm_min.to_bits()
+        );
+        assert_eq!(reference.stats.bright, resumed.stats.bright);
+        // the final checkpoint sits at completion (finished-forces-write)
+        assert_eq!(read_checkpoint(&path).unwrap().completed, 80);
+
+        // wrong fingerprint refuses to resume
+        let (t, th) = flymc_target(250, 31);
+        let bad = ChainCheckpointSpec { fingerprint: 0x9999, ..spec };
+        let err =
+            run_chain_segments(t, Box::new(RandomWalkMh::adaptive(0.05)), th, &cfg, Some(&bad))
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn bounded_session_checkpoints_at_its_stop_point() {
+        // a voluntary stop_after session must persist ALL its work, even
+        // off-cadence and even with every = 0 (final-only cadence) —
+        // otherwise the session's iterations past the last boundary would
+        // be silently re-run (or, with every = 0, entirely lost) on resume
+        let dir = tmp_dir("stop_point");
+        let cfg = ChainConfig { iters: 80, burnin: 20, record_full_every: 0, ..Default::default() };
+        for every in [0usize, 25] {
+            let path = replica_checkpoint_path(&dir, every);
+            let (t, th) = flymc_target(150, 8);
+            let spec = ChainCheckpointSpec {
+                path: path.clone(),
+                every,
+                fingerprint: 1,
+                resume: false,
+                stop_after: Some(37),
+            };
+            let partial = run_chain_segments(
+                t,
+                Box::new(RandomWalkMh::adaptive(0.05)),
+                th,
+                &cfg,
+                Some(&spec),
+            )
+            .unwrap();
+            assert_eq!(partial.logpost_joint.len(), 37);
+            assert_eq!(
+                read_checkpoint(&path).unwrap().completed,
+                37,
+                "every={every}: session stop must checkpoint at the stop point"
+            );
+            // resume runs exactly the remaining 43 iterations
+            let (t, th) = flymc_target(150, 8);
+            let resumed = run_chain_segments(
+                t,
+                Box::new(RandomWalkMh::adaptive(0.05)),
+                th,
+                &cfg,
+                Some(&ChainCheckpointSpec { resume: true, stop_after: None, ..spec }),
+            )
+            .unwrap();
+            assert_eq!(resumed.logpost_joint.len(), 80);
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn thinned_burned_trace_matches_full_trace_slice() {
+        // Property: for random (iters, burnin, thin), the recorded trace
+        // equals the corresponding slice of the full (burnin 0, thin 1)
+        // trace — burn-in and thinning only select rows, they never alter
+        // the chain's evolution.
+        crate::testing::check_msg(
+            "thin+burnin trace selection",
+            6,
+            |r| {
+                let iters = 20 + r.below(60);
+                let burnin = r.below(iters);
+                let thin = 1 + r.below(5);
+                (iters, burnin, thin)
+            },
+            |&(iters, burnin, thin)| {
+                let mk = |burnin: usize, thin: usize| ChainConfig {
+                    iters,
+                    burnin,
+                    thin,
+                    record_full_every: 0,
+                    ..Default::default()
+                };
+                let (t, th) = flymc_target(120, 77);
+                let full = run_chain(t, Box::new(RandomWalkMh::adaptive(0.05)), th, &mk(0, 1));
+                let (t, th) = flymc_target(120, 77);
+                let thinned =
+                    run_chain(t, Box::new(RandomWalkMh::adaptive(0.05)), th, &mk(burnin, thin));
+                if full.theta_trace.n_rows() != iters {
+                    return Err(format!("full trace has {} rows", full.theta_trace.n_rows()));
+                }
+                let expect_rows = (iters - burnin).div_ceil(thin);
+                if thinned.theta_trace.n_rows() != expect_rows {
+                    return Err(format!(
+                        "({iters},{burnin},{thin}): {} rows, expected {expect_rows}",
+                        thinned.theta_trace.n_rows()
+                    ));
+                }
+                for (row, it) in (burnin..iters).step_by(thin).enumerate() {
+                    let got = thinned.theta_trace.row(row);
+                    let want = full.theta_trace.row(it);
+                    if got
+                        .iter()
+                        .zip(want)
+                        .any(|(a, b)| a.to_bits() != b.to_bits())
+                    {
+                        return Err(format!(
+                            "({iters},{burnin},{thin}): row {row} (iter {it}) differs"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

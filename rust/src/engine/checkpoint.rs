@@ -1,0 +1,400 @@
+//! The versioned `.fckpt` chain-checkpoint format and its writer observer.
+//!
+//! A checkpoint is a complete snapshot of a running chain — θ, the
+//! [`crate::flymc::BrightSet`] permutation, the pseudo-posterior caches and
+//! memo, sampler adaptation (step size, decay count, MALA's current-point
+//! gradient cache), the full [`crate::util::Rng`] state, counter totals,
+//! and every attached observer's accumulators — such that a chain restored
+//! from it and run to completion produces **byte-identical** traces,
+//! diagnostics inputs, and query counters to the never-interrupted run
+//! (the resume identity guarantee, DESIGN.md §Checkpointing; enforced by
+//! `rust/tests/integration_checkpoint.rs`).
+//!
+//! ## File layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"FFLYCKPT"
+//! 8       4     format version (u32, currently 1)
+//! 12      4     section count (u32)
+//! 16      8     config fingerprint (u64, FNV-1a of the canonical config —
+//!               resume refuses a checkpoint written under a different one)
+//! 24      8     completed iterations (u64)
+//! 32      8     FNV-1a checksum of the section region
+//! 40      —     sections: [tag: 4 bytes][len: u64][payload], in order
+//! ```
+//!
+//! The header discipline mirrors `data::fbin` (magic / version / explicit
+//! lengths / reject-on-mismatch); the checksum catches torn or corrupted
+//! files before any state is deserialized, and writes go through a
+//! temp-file + rename so a crash mid-write never clobbers the previous
+//! good checkpoint.
+//!
+//! Section tags: `CORE` (chain driver state), `TGT0` (posterior), `SMPL`
+//! (sampler), then one per attached observer (`RECD` trace recorder,
+//! `STAT` streaming statistics, `CKPT` the writer itself, empty). What is
+//! deliberately **not** captured: wall-clock (time is not resumable),
+//! block-cache contents (re-warmed on use; its hit/miss counters are
+//! restored as totals but drift is possible and they are excluded from the
+//! counter-equality contract), and the model/prior/dataset themselves —
+//! those are rebuilt deterministically from the experiment config, which
+//! is why the fingerprint is part of the header.
+
+use std::io::Write;
+
+use crate::engine::observer::ChainObserver;
+use crate::util::codec::{fnv1a, ByteReader, ByteWriter};
+
+/// The 8-byte magic prefix of every `.fckpt` file.
+pub const FCKPT_MAGIC: [u8; 8] = *b"FFLYCKPT";
+/// Current checkpoint format version.
+pub const FCKPT_VERSION: u32 = 1;
+/// Header length in bytes (the section region starts here).
+pub const FCKPT_HEADER_LEN: usize = 40;
+
+/// An in-memory checkpoint: completed-iteration count plus tagged state
+/// sections (see the module docs for the on-disk layout).
+#[derive(Clone, Debug)]
+pub struct CheckpointImage {
+    /// config fingerprint the file was written under (0 until stamped by
+    /// the writer; filled from the header on read)
+    pub fingerprint: u64,
+    /// iterations completed at snapshot time
+    pub completed: u64,
+    sections: Vec<([u8; 4], Vec<u8>)>,
+}
+
+impl CheckpointImage {
+    /// Empty image at `completed` iterations.
+    pub fn new(completed: u64) -> Self {
+        CheckpointImage { fingerprint: 0, completed, sections: Vec::new() }
+    }
+
+    /// Append a tagged section (tags must be unique within an image).
+    ///
+    /// # Panics
+    ///
+    /// Panics on a duplicate tag — observer tags identify state sections,
+    /// so two same-tag observers in one chain's pipeline is a wiring bug
+    /// (e.g. two `CheckpointObserver`s both tagged `CKPT`), not a runtime
+    /// condition. Write to two paths from one observer instead.
+    pub fn push_section(&mut self, tag: [u8; 4], bytes: Vec<u8>) {
+        assert!(
+            self.section(tag).is_none(),
+            "duplicate checkpoint section {:?}",
+            String::from_utf8_lossy(&tag)
+        );
+        self.sections.push((tag, bytes));
+    }
+
+    /// Look up a section's payload by tag.
+    pub fn section(&self, tag: [u8; 4]) -> Option<&[u8]> {
+        self.sections.iter().find(|(t, _)| *t == tag).map(|(_, b)| b.as_slice())
+    }
+
+    /// Number of sections.
+    pub fn n_sections(&self) -> usize {
+        self.sections.len()
+    }
+
+    /// Serialize to the on-disk byte layout, stamping `fingerprint` into
+    /// the header.
+    pub fn to_bytes(&self, fingerprint: u64) -> Vec<u8> {
+        let mut body = ByteWriter::new();
+        for (tag, bytes) in &self.sections {
+            body.u8(tag[0]);
+            body.u8(tag[1]);
+            body.u8(tag[2]);
+            body.u8(tag[3]);
+            body.bytes(bytes);
+        }
+        let body = body.into_bytes();
+        let mut out = Vec::with_capacity(FCKPT_HEADER_LEN + body.len());
+        out.extend_from_slice(&FCKPT_MAGIC);
+        out.extend_from_slice(&FCKPT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        out.extend_from_slice(&fingerprint.to_le_bytes());
+        out.extend_from_slice(&self.completed.to_le_bytes());
+        out.extend_from_slice(&fnv1a(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Parse and validate the on-disk byte layout (magic, version,
+    /// checksum, section structure).
+    pub fn from_bytes(buf: &[u8]) -> Result<CheckpointImage, String> {
+        if buf.len() < FCKPT_HEADER_LEN {
+            return Err(format!(
+                "truncated header: {} bytes, need {FCKPT_HEADER_LEN}",
+                buf.len()
+            ));
+        }
+        if buf[..8] != FCKPT_MAGIC {
+            return Err("not an .fckpt file (bad magic)".to_string());
+        }
+        let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        if version != FCKPT_VERSION {
+            return Err(format!(
+                "unsupported .fckpt version {version} (this build reads version {FCKPT_VERSION})"
+            ));
+        }
+        let n_sections = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+        let fingerprint = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let completed = u64::from_le_bytes(buf[24..32].try_into().unwrap());
+        let checksum = u64::from_le_bytes(buf[32..40].try_into().unwrap());
+        let body = &buf[FCKPT_HEADER_LEN..];
+        if fnv1a(body) != checksum {
+            return Err("checksum mismatch (torn or corrupted checkpoint)".to_string());
+        }
+        let mut r = ByteReader::new(body);
+        let mut image = CheckpointImage { fingerprint, completed, sections: Vec::new() };
+        for _ in 0..n_sections {
+            let tag = [r.u8()?, r.u8()?, r.u8()?, r.u8()?];
+            let payload = r.bytes()?.to_vec();
+            if image.section(tag).is_some() {
+                return Err(format!(
+                    "duplicate section {:?}",
+                    String::from_utf8_lossy(&tag)
+                ));
+            }
+            image.sections.push((tag, payload));
+        }
+        r.finish()
+            .map_err(|e| format!("trailing bytes after sections: {e}"))?;
+        Ok(image)
+    }
+}
+
+/// Atomically write `image` to `path` (temp file + rename, so a crash
+/// mid-write leaves the previous checkpoint intact). Returns the
+/// serialized size in bytes.
+pub fn write_checkpoint(
+    path: &str,
+    image: &CheckpointImage,
+    fingerprint: u64,
+) -> anyhow::Result<usize> {
+    let bytes = image.to_bytes(fingerprint);
+    let tmp = format!("{path}.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("{tmp}: {e}"))?;
+        f.write_all(&bytes).map_err(|e| anyhow::anyhow!("{tmp}: {e}"))?;
+        f.sync_all().map_err(|e| anyhow::anyhow!("{tmp}: {e}"))?;
+    }
+    std::fs::rename(&tmp, path).map_err(|e| anyhow::anyhow!("{tmp} -> {path}: {e}"))?;
+    Ok(bytes.len())
+}
+
+/// Read and validate a checkpoint file.
+pub fn read_checkpoint(path: &str) -> anyhow::Result<CheckpointImage> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    CheckpointImage::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+/// The checkpoint path of replica `replica` inside a checkpoint directory.
+pub fn replica_checkpoint_path(dir: &str, replica: usize) -> String {
+    format!("{dir}/chain_{replica:04}.fckpt")
+}
+
+/// Checkpoint wiring for one chain (see [`ExperimentCheckpointSpec`] for
+/// the multi-replica form).
+#[derive(Clone, Debug)]
+pub struct ChainCheckpointSpec {
+    /// `.fckpt` file this chain writes / resumes from
+    pub path: String,
+    /// write a checkpoint every this many iterations (0 = only at the end)
+    pub every: usize,
+    /// config fingerprint stamped into the file and required on resume
+    pub fingerprint: u64,
+    /// load `path` (if it exists) before running
+    pub resume: bool,
+    /// bound this session to at most this many iterations (the chain stops
+    /// mid-run, to be resumed later); None = run to completion
+    pub stop_after: Option<usize>,
+}
+
+/// Checkpoint wiring for a whole multi-replica experiment: each replica
+/// gets its own `.fckpt` file inside `dir`.
+#[derive(Clone, Debug)]
+pub struct ExperimentCheckpointSpec {
+    /// directory holding one `chain_NNNN.fckpt` per replica
+    pub dir: String,
+    /// write a checkpoint every this many iterations (0 = only at the end)
+    pub every: usize,
+    /// config fingerprint (see [`crate::configx::ExperimentConfig::fingerprint`])
+    pub fingerprint: u64,
+    /// resume replicas whose checkpoint file exists (fresh start otherwise)
+    pub resume: bool,
+    /// per-replica session iteration bound (see [`ChainCheckpointSpec::stop_after`])
+    pub stop_after: Option<usize>,
+}
+
+impl ExperimentCheckpointSpec {
+    /// The per-chain spec of replica `replica`.
+    pub fn chain_spec(&self, replica: usize) -> ChainCheckpointSpec {
+        ChainCheckpointSpec {
+            path: replica_checkpoint_path(&self.dir, replica),
+            every: self.every,
+            fingerprint: self.fingerprint,
+            resume: self.resume,
+            stop_after: self.stop_after,
+        }
+    }
+}
+
+/// The checkpoint-writer observer: rides the chain's observer pipeline,
+/// requests a snapshot every `every` iterations (and at completion) and
+/// writes it atomically to its `.fckpt` path. Carries no chain state of
+/// its own — its section in the image is empty.
+#[derive(Clone, Debug)]
+pub struct CheckpointObserver {
+    path: String,
+    every: usize,
+    fingerprint: u64,
+    writes: u64,
+    last_write_secs: f64,
+    last_bytes: usize,
+}
+
+impl CheckpointObserver {
+    /// Writer targeting `path` with the given cadence and fingerprint.
+    pub fn new(path: &str, every: usize, fingerprint: u64) -> Self {
+        CheckpointObserver {
+            path: path.to_string(),
+            every,
+            fingerprint,
+            writes: 0,
+            last_write_secs: 0.0,
+            last_bytes: 0,
+        }
+    }
+
+    /// Checkpoints written so far this session.
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Wall-clock seconds of the most recent write (bench instrumentation).
+    pub fn last_write_secs(&self) -> f64 {
+        self.last_write_secs
+    }
+
+    /// Serialized size in bytes of the most recent write.
+    pub fn last_bytes(&self) -> usize {
+        self.last_bytes
+    }
+}
+
+impl ChainObserver for CheckpointObserver {
+    fn tag(&self) -> [u8; 4] {
+        *b"CKPT"
+    }
+
+    fn on_iter(&mut self, _rec: &crate::engine::observer::IterRecord<'_>) {}
+
+    fn save_state(&self, _w: &mut ByteWriter) {}
+
+    fn load_state(&mut self, _r: &mut ByteReader) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn wants_checkpoint(&self, completed: usize, finished: bool) -> bool {
+        finished || (self.every > 0 && completed % self.every == 0)
+    }
+
+    fn on_checkpoint(&mut self, image: &CheckpointImage) -> anyhow::Result<()> {
+        let timer = crate::util::Timer::start();
+        self.last_bytes = write_checkpoint(&self.path, image, self.fingerprint)?;
+        self.writes += 1;
+        self.last_write_secs = timer.elapsed_secs();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("firefly_fckpt_{}_{name}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn sample_image() -> CheckpointImage {
+        let mut image = CheckpointImage::new(123);
+        let mut w = ByteWriter::new();
+        w.f64_slice(&[1.0, -2.0, 3.5]);
+        image.push_section(*b"CORE", w.into_bytes());
+        image.push_section(*b"STAT", vec![9, 8, 7]);
+        image.push_section(*b"CKPT", Vec::new());
+        image
+    }
+
+    #[test]
+    fn image_roundtrips_through_bytes_and_disk() {
+        let image = sample_image();
+        let bytes = image.to_bytes(0xFEED);
+        let got = CheckpointImage::from_bytes(&bytes).unwrap();
+        assert_eq!(got.fingerprint, 0xFEED);
+        assert_eq!(got.completed, 123);
+        assert_eq!(got.n_sections(), 3);
+        assert_eq!(got.section(*b"STAT"), Some(&[9u8, 8, 7][..]));
+        assert_eq!(got.section(*b"CKPT"), Some(&[][..]));
+        assert!(got.section(*b"NOPE").is_none());
+
+        let path = tmp("roundtrip.fckpt");
+        write_checkpoint(&path, &image, 42).unwrap();
+        let got = read_checkpoint(&path).unwrap();
+        assert_eq!(got.fingerprint, 42);
+        assert_eq!(got.section(*b"CORE"), image.section(*b"CORE"));
+        // atomic write: no temp file left behind
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupt_and_truncated_checkpoints_are_rejected() {
+        let good = sample_image().to_bytes(7);
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(CheckpointImage::from_bytes(&bad).unwrap_err().contains("magic"));
+
+        let mut bad = good.clone();
+        bad[8] = 99;
+        assert!(CheckpointImage::from_bytes(&bad).unwrap_err().contains("version"));
+
+        // flip one payload byte: checksum must catch it
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(CheckpointImage::from_bytes(&bad).unwrap_err().contains("checksum"));
+
+        // truncation inside the section region
+        let bad = &good[..good.len() - 2];
+        assert!(CheckpointImage::from_bytes(bad).is_err());
+        // truncation inside the header
+        assert!(CheckpointImage::from_bytes(&good[..20]).unwrap_err().contains("header"));
+
+        // trailing garbage after the declared sections
+        let mut bad = good.clone();
+        bad.push(0);
+        let err = CheckpointImage::from_bytes(&bad).unwrap_err();
+        // (appending also breaks the checksum; either rejection is fine)
+        assert!(err.contains("checksum") || err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn writer_observer_cadence_and_final_write() {
+        let obs = CheckpointObserver::new("/dev/null", 50, 1);
+        assert!(!obs.wants_checkpoint(49, false));
+        assert!(obs.wants_checkpoint(50, false));
+        assert!(obs.wants_checkpoint(100, false));
+        assert!(obs.wants_checkpoint(123, true)); // completion forces a write
+        let end_only = CheckpointObserver::new("/dev/null", 0, 1);
+        assert!(!end_only.wants_checkpoint(1000, false));
+        assert!(end_only.wants_checkpoint(1000, true));
+    }
+}

@@ -174,6 +174,28 @@ pub struct ExperimentResult {
 }
 
 impl ExperimentResult {
+    /// Bright-count time-series summary pooled across replicas: min of the
+    /// per-chain minima, mean of the per-chain means, max of the maxima,
+    /// and the last chain's final count — all fed by the streaming
+    /// observer, so it is available even when no trace is kept. `None` for
+    /// regular MCMC (no bright set).
+    pub fn bright_stats(&self) -> Option<(usize, f64, usize, usize)> {
+        let with: Vec<&crate::diagnostics::BrightStats> = self
+            .chains
+            .iter()
+            .map(|c| &c.stats.bright)
+            .filter(|b| b.count > 0)
+            .collect();
+        if with.is_empty() {
+            return None;
+        }
+        let min = with.iter().map(|b| b.min).min().unwrap();
+        let max = with.iter().map(|b| b.max).max().unwrap();
+        let mean = with.iter().map(|b| b.mean()).sum::<f64>() / with.len() as f64;
+        let last = with.last().unwrap().last;
+        Some((min, mean, max, last))
+    }
+
     /// Table-1 style summary over all chains.
     pub fn table_row(&self) -> TableRow {
         let burnin = self.config.burnin;
@@ -182,11 +204,9 @@ impl ExperimentResult {
             .iter()
             .map(|c| c.avg_queries_post_burnin(burnin))
             .collect();
-        let ess: Vec<f64> = self
-            .chains
-            .iter()
-            .map(|c| diagnostics::ess_per_1000_min_components(&c.theta_trace))
-            .collect();
+        // ess_per_1000 falls back to the streaming batch-means estimate in
+        // streaming-only runs (no trace); same for the bright/queries means
+        let ess: Vec<f64> = self.chains.iter().map(|c| c.ess_per_1000()).collect();
         let bright: Vec<f64> = self
             .chains
             .iter()
@@ -198,11 +218,8 @@ impl ExperimentResult {
             algorithm: self.config.algorithm.label().to_string(),
             avg_lik_queries_per_iter: crate::util::math::mean(&queries),
             ess_per_1000: crate::util::math::mean(&ess),
-            avg_bright: if self.chains[0].bright.is_empty() {
-                f64::NAN
-            } else {
-                crate::util::math::mean(&bright)
-            },
+            // mean over NaNs (regular MCMC: no bright set) stays NaN
+            avg_bright: crate::util::math::mean(&bright),
             split_rhat: diagnostics::split_rhat_max_components(&traces),
             wallclock_secs: self.chains.iter().map(|c| c.wallclock_secs).sum::<f64>()
                 / self.chains.len() as f64,
@@ -253,19 +270,37 @@ pub fn chain_config(cfg: &ExperimentConfig, seed: u64) -> ChainConfig {
         explicit_resample: cfg.explicit_resample,
         resample_fraction: cfg.resample_fraction,
         seed,
+        record_trace: cfg.record_trace,
     }
 }
 
 /// Run all chains of one experiment. Replicas fan out across worker threads
 /// through [`crate::engine::multi_chain::run_replica_chains`] (capped by
 /// `cfg.threads`; XLA runs are serialized there — one PJRT client per chain
-/// keeps memory bounded).
+/// keeps memory bounded). With `cfg.checkpoint_dir` set, each replica also
+/// writes periodic `.fckpt` checkpoints (see [`run_experiment_resume`]).
 pub fn run_experiment(cfg: &ExperimentConfig) -> anyhow::Result<ExperimentResult> {
+    run_experiment_resume(cfg, false)
+}
+
+/// [`run_experiment`] with a resume switch: with `resume`, every replica
+/// whose `chain_NNNN.fckpt` exists in `cfg.checkpoint_dir` continues from
+/// it (fingerprint-checked) instead of starting over, and the completed
+/// experiment's traces, diagnostics inputs, and query counters are
+/// byte-identical to a never-interrupted run's. The model/prior deck is
+/// rebuilt deterministically from the config (including MAP tuning), so
+/// checkpoints stay small — O(N) for the bright set, not O(N·D) for data.
+pub fn run_experiment_resume(
+    cfg: &ExperimentConfig,
+    resume: bool,
+) -> anyhow::Result<ExperimentResult> {
+    cfg.validate().map_err(|e| anyhow::anyhow!("config error: {e}"))?;
     let timer = Timer::start();
     let (model, prior, _map, map_queries) = build_model(cfg)?;
     let setup_secs = timer.elapsed_secs();
     let n_data = model.n();
-    let chains = crate::engine::multi_chain::run_replica_chains(cfg, model, prior)?;
+    let chains =
+        crate::engine::multi_chain::run_replica_chains_resume(cfg, model, prior, resume)?;
     Ok(ExperimentResult {
         config: cfg.clone(),
         chains,
@@ -338,6 +373,42 @@ mod tests {
             "{} vs {expect}",
             row.ess_per_1000
         );
+    }
+
+    #[test]
+    fn bright_stats_aggregate_matches_recorded_series() {
+        // pins the experiment-level aggregation of the streaming
+        // bright-count summary against the recorded per-iteration series
+        let mut cfg = tiny_cfg(Task::LogisticMnist, Algorithm::UntunedFlyMc);
+        cfg.chains = 2;
+        let res = run_experiment(&cfg).unwrap();
+        let (min, mean, max, last) = res.bright_stats().expect("FlyMC exposes bright stats");
+        let burnin = cfg.burnin;
+        let series_min = res
+            .chains
+            .iter()
+            .map(|c| *c.bright[burnin..].iter().min().unwrap())
+            .min()
+            .unwrap();
+        let series_max = res
+            .chains
+            .iter()
+            .map(|c| *c.bright[burnin..].iter().max().unwrap())
+            .max()
+            .unwrap();
+        assert_eq!(min, series_min);
+        assert_eq!(max, series_max);
+        assert_eq!(last, *res.chains.last().unwrap().bright.last().unwrap());
+        let series_mean = res
+            .chains
+            .iter()
+            .map(|c| c.avg_bright_post_burnin(burnin))
+            .sum::<f64>()
+            / res.chains.len() as f64;
+        assert!((mean - series_mean).abs() < 1e-9, "{mean} vs {series_mean}");
+        // regular MCMC has no bright set
+        let res = run_experiment(&tiny_cfg(Task::LogisticMnist, Algorithm::RegularMcmc)).unwrap();
+        assert!(res.bright_stats().is_none());
     }
 
     #[test]

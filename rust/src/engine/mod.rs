@@ -1,16 +1,27 @@
-//! Chain orchestration: single-chain driver, the threaded multi-chain
-//! replica engine (per-replica seed derivation, split-R̂ / pooled-ESS
-//! reporting), and the experiment builder that assembles data + model +
-//! bound-tuning + sampler + backend from an [`ExperimentConfig`].
+//! Chain orchestration: the resumable single-chain runtime and its
+//! streaming observer pipeline, the `.fckpt` checkpoint layer, the threaded
+//! multi-chain replica engine (per-replica seed derivation, split-R̂ /
+//! pooled-ESS reporting), and the experiment builder that assembles data +
+//! model + bound-tuning + sampler + backend from an [`ExperimentConfig`].
 //!
 //! [`ExperimentConfig`]: crate::configx::ExperimentConfig
 
 pub mod chain;
+pub mod checkpoint;
 pub mod experiment;
 pub mod multi_chain;
+pub mod observer;
 
 pub use chain::{
-    derive_replica_seed, run_chain, run_chain_replicas, ChainConfig, ChainResult, ChainTarget,
+    derive_replica_seed, run_chain, run_chain_replicas, run_chain_replicas_ckpt,
+    run_chain_segments, ChainConfig, ChainResult, ChainState, ChainTarget,
 };
-pub use experiment::{build_chain, run_experiment, synth_dataset, ExperimentResult, TableRow};
+pub use checkpoint::{
+    read_checkpoint, replica_checkpoint_path, write_checkpoint, ChainCheckpointSpec,
+    CheckpointImage, CheckpointObserver, ExperimentCheckpointSpec,
+};
+pub use experiment::{
+    build_chain, run_experiment, run_experiment_resume, synth_dataset, ExperimentResult, TableRow,
+};
 pub use multi_chain::{run_multi_chain, summarize_chains, MultiChainSummary};
+pub use observer::{ChainObserver, IterRecord, RecordingObserver, StreamingObserver};

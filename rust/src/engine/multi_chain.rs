@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use crate::configx::{Backend, ExperimentConfig};
 use crate::diagnostics;
-use crate::engine::chain::{run_chain_replicas, ChainConfig, ChainResult};
+use crate::engine::chain::{ChainConfig, ChainResult};
 use crate::engine::experiment::{
     build_chain, build_sampler, chain_config, run_experiment, ExperimentResult,
 };
@@ -52,13 +52,60 @@ pub fn run_replica_chains(
     model: Arc<dyn XlaSource>,
     prior: Arc<dyn Prior>,
 ) -> anyhow::Result<Vec<ChainResult>> {
+    run_replica_chains_resume(cfg, model, prior, false)
+}
+
+/// Assemble the experiment's checkpoint wiring from its config: `None`
+/// when checkpointing is off, otherwise a spec over `cfg.checkpoint_dir`
+/// (created if missing) stamped with the config fingerprint.
+fn checkpoint_spec(
+    cfg: &ExperimentConfig,
+    resume: bool,
+) -> anyhow::Result<Option<crate::engine::checkpoint::ExperimentCheckpointSpec>> {
+    let Some(dir) = &cfg.checkpoint_dir else {
+        if resume {
+            anyhow::bail!(
+                "resume needs a checkpoint directory (--checkpoint-dir / [checkpoint] dir)"
+            );
+        }
+        return Ok(None);
+    };
+    std::fs::create_dir_all(dir).map_err(|e| anyhow::anyhow!("{dir}: {e}"))?;
+    Ok(Some(crate::engine::checkpoint::ExperimentCheckpointSpec {
+        dir: dir.clone(),
+        every: cfg.checkpoint_every,
+        fingerprint: cfg.fingerprint(),
+        resume,
+        stop_after: cfg.stop_after,
+    }))
+}
+
+/// [`run_replica_chains`] with checkpoint/resume wiring taken from the
+/// config: with `cfg.checkpoint_dir` set each replica writes (and, with
+/// `resume`, restores) its own `chain_NNNN.fckpt`; replicas without a
+/// checkpoint file start fresh, so one `resume` call heals a partially
+/// interrupted experiment. The resumed experiment's chains are
+/// byte-identical to a never-interrupted run's (DESIGN.md §Checkpointing).
+pub fn run_replica_chains_resume(
+    cfg: &ExperimentConfig,
+    model: Arc<dyn XlaSource>,
+    prior: Arc<dyn Prior>,
+    resume: bool,
+) -> anyhow::Result<Vec<ChainResult>> {
     let threads = if cfg.backend == Backend::Xla { 1 } else { cfg.threads };
     let base = chain_config(cfg, cfg.seed);
-    run_chain_replicas(cfg.chains.max(1), threads, &base, |ccfg: &ChainConfig| {
-        let (target, theta0) = build_chain(cfg, model.clone(), prior.clone(), ccfg.seed)?;
-        let sampler: Box<dyn Sampler> = build_sampler(cfg.task);
-        Ok((target, sampler, theta0))
-    })
+    let spec = checkpoint_spec(cfg, resume)?;
+    crate::engine::chain::run_chain_replicas_ckpt(
+        cfg.chains.max(1),
+        threads,
+        &base,
+        spec.as_ref(),
+        |ccfg: &ChainConfig| {
+            let (target, theta0) = build_chain(cfg, model.clone(), prior.clone(), ccfg.seed)?;
+            let sampler: Box<dyn Sampler> = build_sampler(cfg.task);
+            Ok((target, sampler, theta0))
+        },
+    )
 }
 
 /// Cross-chain diagnostics over finished replicas. `burnin` indexes the raw

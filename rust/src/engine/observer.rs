@@ -1,0 +1,355 @@
+//! The streaming chain-observer pipeline.
+//!
+//! The chain driver ([`crate::engine::chain::ChainState`]) no longer owns
+//! its recording logic: each completed iteration is published as an
+//! [`IterRecord`] to a pluggable list of [`ChainObserver`]s. The built-ins:
+//!
+//! * [`RecordingObserver`] — the classic in-memory series (θ trace, joint
+//!   log-posterior, bright counts, per-iteration queries, full-log-posterior
+//!   instrumentation points), O(iters × dim) memory;
+//! * [`StreamingObserver`] — Welford moments, batch-means ESS and split-R̂
+//!   inputs, and the bright-count summary in O(dim) memory
+//!   ([`crate::diagnostics::streaming`]), so ten-million-iteration chains
+//!   don't need a trace;
+//! * [`crate::engine::checkpoint::CheckpointObserver`] — periodic `.fckpt`
+//!   snapshots for bit-identical resume.
+//!
+//! Observers are checkpointable: each contributes a tagged state section to
+//! the [`CheckpointImage`] and restores from it on resume, so a resumed
+//! chain's recorded output is byte-identical to an uninterrupted run's.
+//! `on_iter` runs inside the zero-allocation steady-state window — the
+//! built-ins only write into buffers reserved at construction (checkpoint
+//! writes are boundary events, excluded from that window).
+
+use crate::diagnostics::streaming::StreamingStats;
+use crate::diagnostics::{StreamingSummary, TraceMatrix};
+use crate::engine::chain::ChainConfig;
+use crate::engine::checkpoint::CheckpointImage;
+use crate::flymc::ZStats;
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Everything one completed chain iteration publishes to the observers.
+#[derive(Clone, Copy, Debug)]
+pub struct IterRecord<'a> {
+    /// 0-based index of the iteration just completed
+    pub iter: usize,
+    /// the chain position after the θ- and z-updates
+    pub theta: &'a [f64],
+    /// whether the θ-proposal was accepted
+    pub accepted: bool,
+    /// joint (pseudo-)posterior log density at the post-step state
+    pub logpost_joint: f64,
+    /// bright count (None for the regular posterior)
+    pub n_bright: Option<usize>,
+    /// likelihood queries spent by this iteration
+    pub queries_delta: u64,
+    /// z-resampling sweep outcome (None for the regular posterior)
+    pub z: Option<ZStats>,
+    /// full-data log posterior, present only on `record_full_every` ticks
+    pub full_logpost: Option<f64>,
+    /// whether this iteration is on the θ-trace cadence (post-burn-in,
+    /// thinned) — precomputed by the driver so every observer agrees
+    pub record_theta: bool,
+}
+
+/// A consumer of per-iteration chain records, checkpointable alongside the
+/// chain (see the module docs).
+pub trait ChainObserver {
+    /// 4-byte section tag identifying this observer's state inside a
+    /// [`CheckpointImage`] (unique within one chain's observer list).
+    fn tag(&self) -> [u8; 4];
+
+    /// Consume one completed iteration. Runs on the hot path: must not
+    /// allocate (write only into buffers reserved at construction).
+    fn on_iter(&mut self, rec: &IterRecord<'_>);
+
+    /// Serialize this observer's accumulated state (bit-exact).
+    fn save_state(&self, w: &mut ByteWriter);
+
+    /// Restore [`ChainObserver::save_state`] bytes into an observer
+    /// constructed for the same chain configuration.
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String>;
+
+    /// Whether the driver should assemble a checkpoint image after the
+    /// iteration that brought the chain to `completed` total iterations
+    /// (`finished` marks the final one). Default: never.
+    fn wants_checkpoint(&self, _completed: usize, _finished: bool) -> bool {
+        false
+    }
+
+    /// Receive an assembled checkpoint image (all observers see every
+    /// image; only writers act on it). Default: no-op.
+    fn on_checkpoint(&mut self, _image: &CheckpointImage) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The classic in-memory recorder: everything [`crate::engine::ChainResult`]
+/// reports, reserved up front so recording never allocates mid-chain. Can
+/// be constructed **disabled** (`ChainConfig::record_trace = false`, the
+/// CLI's `--streaming-only`): it then records nothing and holds no
+/// reservations, so very long chains keep bounded memory and small
+/// checkpoints — the streaming observer carries the summary instead.
+#[derive(Clone, Debug)]
+pub struct RecordingObserver {
+    enabled: bool,
+    pub(crate) theta_trace: TraceMatrix,
+    pub(crate) logpost_joint: Vec<f64>,
+    pub(crate) full_logpost: Vec<(usize, f64)>,
+    pub(crate) bright: Vec<usize>,
+    pub(crate) queries_per_iter: Vec<u64>,
+}
+
+impl RecordingObserver {
+    /// Recorder for one chain. When `cfg.record_trace` is set, every series
+    /// is reserved to its final length (the zero-alloc hot-path invariant,
+    /// DESIGN.md §Perf); otherwise the recorder is disabled and empty.
+    pub fn new(cfg: &ChainConfig, dim: usize) -> Self {
+        if !cfg.record_trace {
+            return RecordingObserver {
+                enabled: false,
+                theta_trace: TraceMatrix::new(dim),
+                logpost_joint: Vec::new(),
+                full_logpost: Vec::new(),
+                bright: Vec::new(),
+                queries_per_iter: Vec::new(),
+            };
+        }
+        let full_rows = if cfg.record_full_every > 0 {
+            cfg.iters / cfg.record_full_every + 1
+        } else {
+            0
+        };
+        let trace_rows = cfg.iters.saturating_sub(cfg.burnin) / cfg.thin.max(1) + 1;
+        RecordingObserver {
+            enabled: true,
+            theta_trace: TraceMatrix::with_capacity(dim, trace_rows),
+            logpost_joint: Vec::with_capacity(cfg.iters),
+            full_logpost: Vec::with_capacity(full_rows),
+            bright: Vec::with_capacity(cfg.iters),
+            queries_per_iter: Vec::with_capacity(cfg.iters),
+        }
+    }
+
+    /// Whether this recorder stores anything at all.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The recorded θ trace (post-burn-in, thinned).
+    pub fn theta_trace(&self) -> &TraceMatrix {
+        &self.theta_trace
+    }
+
+    /// Iterations recorded so far.
+    pub fn iters_recorded(&self) -> usize {
+        self.logpost_joint.len()
+    }
+}
+
+impl ChainObserver for RecordingObserver {
+    fn tag(&self) -> [u8; 4] {
+        *b"RECD"
+    }
+
+    fn on_iter(&mut self, rec: &IterRecord<'_>) {
+        if !self.enabled {
+            return;
+        }
+        self.queries_per_iter.push(rec.queries_delta);
+        self.logpost_joint.push(rec.logpost_joint);
+        if let Some(b) = rec.n_bright {
+            self.bright.push(b);
+        }
+        if let Some(f) = rec.full_logpost {
+            self.full_logpost.push((rec.iter, f));
+        }
+        if rec.record_theta {
+            self.theta_trace.push_row(rec.theta);
+        }
+    }
+
+    fn save_state(&self, w: &mut ByteWriter) {
+        w.bool(self.enabled);
+        if !self.enabled {
+            return;
+        }
+        w.usize(self.theta_trace.dim());
+        w.f64_slice(self.theta_trace.raw());
+        w.f64_slice(&self.logpost_joint);
+        w.usize(self.full_logpost.len());
+        for &(it, v) in &self.full_logpost {
+            w.usize(it);
+            w.f64(v);
+        }
+        w.usize(self.bright.len());
+        for &b in &self.bright {
+            w.usize(b);
+        }
+        w.u64_slice(&self.queries_per_iter);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let enabled = r.bool()?;
+        if enabled != self.enabled {
+            return Err(
+                "checkpoint recording mode does not match this chain's (streaming-only \
+                 toggled between sessions?)"
+                    .to_string(),
+            );
+        }
+        if !enabled {
+            return Ok(());
+        }
+        let dim = r.usize()?;
+        let raw = r.f64_vec()?;
+        self.theta_trace.restore_raw(dim, &raw)?;
+        r.f64_slice_into(&mut self.logpost_joint)?;
+        let n_full = r.usize()?;
+        self.full_logpost.clear();
+        for _ in 0..n_full {
+            let it = r.usize()?;
+            let v = r.f64()?;
+            self.full_logpost.push((it, v));
+        }
+        let n_bright = r.usize()?;
+        self.bright.clear();
+        for _ in 0..n_bright {
+            self.bright.push(r.usize()?);
+        }
+        r.u64_slice_into(&mut self.queries_per_iter)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Bounded-memory statistics observer: folds the trace-cadence θ rows and
+/// the post-burn-in bright counts into a [`StreamingStats`] engine
+/// (O(dim) memory regardless of chain length — see
+/// [`crate::diagnostics::streaming`] for the estimators and their
+/// documented tolerances).
+#[derive(Clone, Debug)]
+pub struct StreamingObserver {
+    stats: StreamingStats,
+    burnin: usize,
+}
+
+impl StreamingObserver {
+    /// Streaming statistics for one chain. The θ-moment window is exactly
+    /// the trace cadence (post-burn-in, thinned); bright counts are folded
+    /// for every post-burn-in iteration.
+    pub fn new(cfg: &ChainConfig, dim: usize) -> Self {
+        let post = cfg.iters.saturating_sub(cfg.burnin);
+        let rows = post.div_ceil(cfg.thin.max(1));
+        StreamingObserver { stats: StreamingStats::new(dim, rows), burnin: cfg.burnin }
+    }
+
+    /// The underlying streaming engine.
+    pub fn stats(&self) -> &StreamingStats {
+        &self.stats
+    }
+
+    /// Materialize the exportable summary (allocates; end-of-run only).
+    pub fn into_summary(self) -> StreamingSummary {
+        self.stats.summary()
+    }
+}
+
+impl ChainObserver for StreamingObserver {
+    fn tag(&self) -> [u8; 4] {
+        *b"STAT"
+    }
+
+    fn on_iter(&mut self, rec: &IterRecord<'_>) {
+        if rec.record_theta {
+            self.stats.record_row(rec.theta);
+        }
+        if rec.iter >= self.burnin {
+            self.stats.record_queries(rec.queries_delta);
+            if let Some(b) = rec.n_bright {
+                self.stats.record_bright(b);
+            }
+        }
+    }
+
+    fn save_state(&self, w: &mut ByteWriter) {
+        self.stats.save_state(w);
+    }
+
+    fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        self.stats.load_state(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, theta: &[f64], record_theta: bool) -> IterRecord<'_> {
+        IterRecord {
+            iter,
+            theta,
+            accepted: iter % 2 == 0,
+            logpost_joint: -(iter as f64),
+            n_bright: Some(iter % 5),
+            queries_delta: iter as u64,
+            z: None,
+            full_logpost: if iter % 10 == 0 { Some(-2.0 * iter as f64) } else { None },
+            record_theta,
+        }
+    }
+
+    #[test]
+    fn recording_observer_roundtrips_through_checkpoint_state() {
+        let cfg = ChainConfig { iters: 40, burnin: 10, thin: 3, ..Default::default() };
+        let mut a = RecordingObserver::new(&cfg, 2);
+        for it in 0..25 {
+            let theta = [it as f64, -1.0];
+            let record = it >= 10 && (it - 10) % 3 == 0;
+            a.on_iter(&rec(it, &theta, record));
+        }
+        let mut w = ByteWriter::new();
+        a.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut b = RecordingObserver::new(&cfg, 2);
+        let mut r = ByteReader::new(&bytes);
+        b.load_state(&mut r).unwrap();
+        r.finish().unwrap();
+        // continue both; the final series must be identical
+        for it in 25..40 {
+            let theta = [it as f64, -1.0];
+            let record = (it - 10) % 3 == 0;
+            a.on_iter(&rec(it, &theta, record));
+            b.on_iter(&rec(it, &theta, record));
+        }
+        assert_eq!(a.theta_trace, b.theta_trace);
+        assert_eq!(a.logpost_joint, b.logpost_joint);
+        assert_eq!(a.full_logpost, b.full_logpost);
+        assert_eq!(a.bright, b.bright);
+        assert_eq!(a.queries_per_iter, b.queries_per_iter);
+        assert_eq!(a.iters_recorded(), 40);
+    }
+
+    #[test]
+    fn streaming_observer_burnin_and_cadence() {
+        let cfg = ChainConfig { iters: 30, burnin: 10, thin: 2, ..Default::default() };
+        let mut o = StreamingObserver::new(&cfg, 2);
+        for it in 0..30 {
+            let theta = [1.0 + it as f64, 0.0];
+            let record = it >= 10 && (it - 10) % 2 == 0;
+            o.on_iter(&rec(it, &theta, record));
+        }
+        // rows = ceil((30-10)/2) = 10; bright folded for the 20 post-burnin iters
+        assert_eq!(o.stats().rows(), 10);
+        let s = o.into_summary();
+        assert_eq!(s.bright.count, 20);
+        assert_eq!(s.bright.min, 0);
+        assert_eq!(s.bright.max, 4);
+        assert_eq!(s.bright.last, 29 % 5);
+        // recorded iters 10,12,...,28 -> theta[0] mean = 1 + 19 = 20
+        assert!((s.mean[0] - 20.0).abs() < 1e-12);
+    }
+}

@@ -122,6 +122,36 @@ impl BrightSet {
         self.tab[nbv as usize] = a as u32;
     }
 
+    /// Serialize the exact permutation state (`arr` + boundary). The
+    /// membership *set* alone is not enough for bit-identical resume: the
+    /// order of `arr` determines which dark points the geometric-skip
+    /// z-resampler visits and how future `brighten`/`darken` swaps permute
+    /// the array, so the whole permutation is captured (`tab` is derived
+    /// from `arr` on restore).
+    pub fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.usize(self.nb);
+        w.u32_slice(&self.arr);
+    }
+
+    /// Rebuild a set from [`Self::save_state`] bytes, validating that the
+    /// payload is a permutation of `0..n` with a sane boundary.
+    pub fn load_state(r: &mut crate::util::codec::ByteReader) -> Result<BrightSet, String> {
+        let nb = r.usize()?;
+        let arr = r.u32_vec()?;
+        if nb > arr.len() {
+            return Err(format!("bright boundary {nb} exceeds n = {}", arr.len()));
+        }
+        let mut tab = vec![u32::MAX; arr.len()];
+        for (pos, &v) in arr.iter().enumerate() {
+            let vu = v as usize;
+            if vu >= arr.len() || tab[vu] != u32::MAX {
+                return Err(format!("arr is not a permutation at position {pos}"));
+            }
+            tab[vu] = pos as u32;
+        }
+        Ok(BrightSet { arr, tab, nb })
+    }
+
     /// Debug invariant check (used by property tests).
     pub fn check_invariants(&self) -> Result<(), String> {
         let n = self.arr.len();
@@ -223,6 +253,46 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_exact_permutation() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        let mut rng = Rng::new(11);
+        let mut z = BrightSet::new(64);
+        for _ in 0..200 {
+            let i = rng.below(64);
+            if rng.bernoulli(0.5) {
+                z.brighten(i);
+            } else {
+                z.darken(i);
+            }
+        }
+        let mut w = ByteWriter::new();
+        z.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let got = BrightSet::load_state(&mut ByteReader::new(&bytes)).unwrap();
+        got.check_invariants().unwrap();
+        assert_eq!(got.n_bright(), z.n_bright());
+        // exact permutation, not just the same set: ith_dark order matters
+        for i in 0..z.n_bright() {
+            assert_eq!(got.ith_bright(i), z.ith_bright(i));
+        }
+        for i in 0..z.n_dark() {
+            assert_eq!(got.ith_dark(i), z.ith_dark(i));
+        }
+
+        // corrupt payloads are rejected
+        let mut w = ByteWriter::new();
+        w.usize(1);
+        w.u32_slice(&[0, 0, 2]); // duplicate => not a permutation
+        let bytes = w.into_bytes();
+        assert!(BrightSet::load_state(&mut ByteReader::new(&bytes)).is_err());
+        let mut w = ByteWriter::new();
+        w.usize(5); // boundary beyond n
+        w.u32_slice(&[0, 1]);
+        let bytes = w.into_bytes();
+        assert!(BrightSet::load_state(&mut ByteReader::new(&bytes)).is_err());
     }
 
     #[test]

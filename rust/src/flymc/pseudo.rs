@@ -378,6 +378,97 @@ impl PseudoPosterior {
         stats
     }
 
+    /// Serialize every piece of chain state this posterior owns: θ, the
+    /// exact [`BrightSet`] permutation, the cached `ll`/`lb` values at the
+    /// bright prefix (dark entries are never read before being rewritten,
+    /// so they are not captured), the incremental `pseudo_sum`/`base`
+    /// accumulators, the distribution-version counter, and the off-state
+    /// memo (it determines whether the next evaluation costs queries).
+    pub fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.usize(self.model.n());
+        w.usize(self.model.dim());
+        w.f64_slice(&self.theta);
+        w.f64(self.pseudo_sum);
+        w.f64(self.base);
+        w.u64(self.version);
+        self.bright.save_state(w);
+        let brights = self.bright.bright_slice();
+        w.usize(brights.len());
+        for &n in brights {
+            w.f64(self.ll[n as usize]);
+        }
+        for &n in brights {
+            w.f64(self.lb[n as usize]);
+        }
+        w.bool(self.memo_valid);
+        if self.memo_valid {
+            w.f64_slice(&self.memo_theta);
+            w.f64_slice(&self.memo_ll);
+            w.f64_slice(&self.memo_lb);
+            w.f64(self.memo_pseudo_sum);
+            w.f64(self.memo_base);
+        }
+    }
+
+    /// Restore [`Self::save_state`] bytes into a freshly-constructed
+    /// posterior over the *same* model/prior/backend (shape-checked).
+    /// Restoring never grows the pre-reserved scratch buffers, so the
+    /// zero-allocation steady state resumes intact.
+    pub fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        let n = r.usize()?;
+        let dim = r.usize()?;
+        if n != self.model.n() || dim != self.model.dim() {
+            return Err(format!(
+                "checkpoint is for a {n}×{dim} model, this chain is {}×{}",
+                self.model.n(),
+                self.model.dim()
+            ));
+        }
+        r.f64_slice_into(&mut self.theta)?;
+        if self.theta.len() != dim {
+            return Err(format!("theta has {} components, expected {dim}", self.theta.len()));
+        }
+        self.pseudo_sum = r.f64()?;
+        self.base = r.f64()?;
+        self.version = r.u64()?;
+        let bright = BrightSet::load_state(r)?;
+        if bright.len() != n {
+            return Err(format!("bright set covers {} points, expected {n}", bright.len()));
+        }
+        self.bright = bright;
+        let nb = r.usize()?;
+        if nb != self.bright.n_bright() {
+            return Err(format!(
+                "cache block has {nb} entries, bright set has {}",
+                self.bright.n_bright()
+            ));
+        }
+        for i in 0..nb {
+            let idx = self.bright.ith_bright(i);
+            self.ll[idx] = r.f64()?;
+        }
+        for i in 0..nb {
+            let idx = self.bright.ith_bright(i);
+            self.lb[idx] = r.f64()?;
+        }
+        self.memo_valid = r.bool()?;
+        if self.memo_valid {
+            r.f64_slice_into(&mut self.memo_theta)?;
+            r.f64_slice_into(&mut self.memo_ll)?;
+            r.f64_slice_into(&mut self.memo_lb)?;
+            self.memo_pseudo_sum = r.f64()?;
+            self.memo_base = r.f64()?;
+            if self.memo_theta.len() != dim || self.memo_ll.len() != self.memo_lb.len() {
+                return Err("memo block shape mismatch".to_string());
+            }
+        } else {
+            self.memo_theta.clear();
+            self.memo_ll.clear();
+            self.memo_lb.clear();
+        }
+        Ok(())
+    }
+
     /// Recompute state sums from scratch (test hook: verifies the
     /// incremental bookkeeping).
     pub fn recompute_state(&mut self) -> f64 {
@@ -528,6 +619,49 @@ impl FullPosterior {
             acc += self.model.log_lik(theta, n, &mut scratch);
         }
         acc
+    }
+
+    /// Serialize the baseline's chain state (θ, cached log posterior, memo).
+    pub fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.usize(self.model.n());
+        w.usize(self.model.dim());
+        w.f64_slice(&self.theta);
+        w.f64(self.cur_logp);
+        w.bool(self.memo_valid);
+        if self.memo_valid {
+            w.f64_slice(&self.memo_theta);
+            w.f64(self.memo_logp);
+        }
+    }
+
+    /// Restore [`Self::save_state`] bytes into a posterior over the same
+    /// model/prior/backend (shape-checked).
+    pub fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        let n = r.usize()?;
+        let dim = r.usize()?;
+        if n != self.model.n() || dim != self.model.dim() {
+            return Err(format!(
+                "checkpoint is for a {n}×{dim} model, this chain is {}×{}",
+                self.model.n(),
+                self.model.dim()
+            ));
+        }
+        r.f64_slice_into(&mut self.theta)?;
+        if self.theta.len() != dim {
+            return Err(format!("theta has {} components, expected {dim}", self.theta.len()));
+        }
+        self.cur_logp = r.f64()?;
+        self.memo_valid = r.bool()?;
+        if self.memo_valid {
+            r.f64_slice_into(&mut self.memo_theta)?;
+            self.memo_logp = r.f64()?;
+            if self.memo_theta.len() != dim {
+                return Err("memo block shape mismatch".to_string());
+            }
+        } else {
+            self.memo_theta.clear();
+        }
+        Ok(())
     }
 }
 
@@ -733,6 +867,61 @@ mod tests {
         let eval = Box::new(CpuBackend::new(model.clone(), counters));
         let mut pp = PseudoPosterior::new(model, prior, eval, theta0);
         check_marginal_matches_conditional(&mut pp, 33, 0.03);
+    }
+
+    #[test]
+    fn pseudo_state_roundtrip_resumes_bit_identically() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        let (mut pp, counters) = setup(250, 21);
+        let mut rng = Rng::new(99);
+        pp.init_z(&mut rng);
+        for _ in 0..15 {
+            pp.implicit_resample(0.05, &mut rng);
+        }
+        // leave a live memo so the memo block is exercised
+        let theta2: Vec<f64> = pp.theta().iter().map(|t| t + 0.02).collect();
+        let _ = pp.log_density(&theta2);
+        let mut w = ByteWriter::new();
+        pp.save_state(&mut w);
+        let bytes = w.into_bytes();
+
+        // twin over the same model/prior/backend, then restore
+        let (mut twin, twin_counters) = setup(250, 21);
+        let mut r = ByteReader::new(&bytes);
+        twin.load_state(&mut r).unwrap();
+        r.finish().unwrap();
+        twin_counters.restore_totals(&counters.totals());
+
+        assert_eq!(
+            twin.current_log_density().to_bits(),
+            pp.current_log_density().to_bits()
+        );
+        assert_eq!(twin.n_bright(), pp.n_bright());
+        // memo survives: committing the memoized point costs zero queries
+        let before = twin_counters.lik_queries();
+        twin.commit(&theta2);
+        assert_eq!(twin_counters.lik_queries(), before);
+        pp.commit(&theta2);
+        // identical evolution from the restored state, bit for bit
+        let mut ra = Rng::new(7);
+        let mut rb = Rng::new(7);
+        for it in 0..10 {
+            let sa = pp.implicit_resample(0.1, &mut ra);
+            let sb = twin.implicit_resample(0.1, &mut rb);
+            assert_eq!(sa.brightened, sb.brightened, "iter {it}");
+            assert_eq!(sa.darkened, sb.darkened, "iter {it}");
+            assert_eq!(pp.n_bright(), twin.n_bright(), "iter {it}");
+            assert_eq!(
+                pp.current_log_density().to_bits(),
+                twin.current_log_density().to_bits(),
+                "iter {it}"
+            );
+        }
+        assert_eq!(counters.lik_queries(), twin_counters.lik_queries());
+
+        // shape mismatch rejected
+        let (mut other, _) = setup(100, 3);
+        assert!(other.load_state(&mut ByteReader::new(&bytes)).is_err());
     }
 
     #[test]

@@ -29,6 +29,17 @@
 //! same engine — byte-identical chains, still allocation-free (DESIGN.md
 //! §Storage; CLI `convert` / `--data`).
 //!
+//! Chains are **resumable**: the runtime ([`engine::ChainState`]) is
+//! driven in segments, publishing each iteration to a pluggable observer
+//! pipeline ([`engine::observer`]) — in-memory recording, O(dim)
+//! streaming statistics ([`diagnostics::streaming`]: Welford moments,
+//! batch-means ESS, split-R̂ inputs, so ten-million-iteration chains need
+//! no trace), and a `.fckpt` checkpoint writer ([`engine::checkpoint`]).
+//! A chain killed at any iteration and resumed from its last checkpoint
+//! finishes with byte-identical traces, diagnostics, and query counters
+//! to the never-interrupted run (DESIGN.md §Checkpointing; CLI
+//! `--checkpoint-every` / `--checkpoint-dir` / `resume`).
+//!
 //! ## Quick start
 //!
 //! A complete (tiny) experiment runs in milliseconds:

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run        — run one experiment (flags or --config TOML), print summary
+//!   resume     — continue a checkpointed experiment from its --checkpoint-dir
+//!                (bit-identical to the never-interrupted run)
 //!   table1     — run all three algorithms for a task, print the Table-1 rows
 //!   map        — run the MAP estimation alone, print the objective
 //!   convert    — write a CSV file or a synthetic workload as a `.fbin`
@@ -14,6 +16,10 @@
 //!   firefly convert --task opv --n 1800000 --out opv.fbin
 //!   firefly convert --csv data.csv --kind logistic --out data.fbin
 //!   firefly run --task opv --data opv.fbin --cache-rows 65536
+//!   firefly run --task mnist --iters 1000000 --checkpoint-every 10000 \
+//!       --checkpoint-dir ckpt
+//!   firefly resume --task mnist --iters 1000000 --checkpoint-every 10000 \
+//!       --checkpoint-dir ckpt
 
 use firefly::bench_harness::Report;
 use firefly::cli::Args;
@@ -24,7 +30,7 @@ use firefly::runtime::Manifest;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: firefly <run|table1|map|convert|artifacts> [flags]
+        "usage: firefly <run|resume|table1|map|convert|artifacts> [flags]
   common flags:
     --task mnist|cifar|opv|toy     workload (default mnist)
     --algorithm regular|untuned|map  (default map)
@@ -46,6 +52,20 @@ fn usage() -> ! {
                                    --data (0 = default)
     --config <file.toml>           load config file first, flags override
     --artifacts <dir>              artifact directory (default artifacts)
+    --checkpoint-every <int>       write a .fckpt chain checkpoint every k
+                                   iterations (requires --checkpoint-dir)
+    --checkpoint-dir <dir>         one chain_NNNN.fckpt per replica chain;
+                                   `firefly resume` continues from here,
+                                   bit-identical to an uninterrupted run
+    --stop-after <int>             bound this session to k iterations per
+                                   chain (checkpointed at the stop point;
+                                   resume later)
+    --streaming-only               keep only O(dim) streaming statistics
+                                   (no θ trace / per-iteration series):
+                                   bounded memory for very long chains
+    --record-every <int>           full-data log-posterior instrumentation
+                                   cadence (0 disables; default 1 — set 0
+                                   for long runs, it costs N queries/tick)
   convert flags:
     --out <file.fbin>              output path (required)
     --csv <file.csv>               convert a CSV file (streamed row by row)
@@ -93,6 +113,18 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
         cfg.data_path = Some(p.to_string());
     }
     cfg.cache_rows = args.get_usize("cache-rows", cfg.cache_rows);
+    cfg.checkpoint_every = args.get_usize("checkpoint-every", cfg.checkpoint_every);
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(d.to_string());
+    }
+    if let Some(s) = args.get("stop-after") {
+        cfg.stop_after = Some(s.parse().map_err(|_| "bad --stop-after")?);
+    }
+    if args.has("streaming-only") {
+        cfg.record_trace = false;
+    }
+    cfg.record_every = args.get_usize("record-every", cfg.record_every);
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -139,8 +171,10 @@ fn print_summary(res: &ExperimentResult) {
     println!("data points (N):             {}", res.n_data);
     println!("iterations x chains:         {} x {}", res.config.iters, res.chains.len());
     println!("avg lik queries / iter:      {:.1}", row.avg_lik_queries_per_iter);
-    if row.avg_bright.is_finite() {
-        println!("avg bright points (M):       {:.1}", row.avg_bright);
+    if let Some((min, mean, max, last)) = res.bright_stats() {
+        println!(
+            "bright points M (post-burnin): min {min} / mean {mean:.1} / max {max} / last {last}"
+        );
     }
     println!("ESS / 1000 iters (min dim):  {:.2}", row.ess_per_1000);
     if row.split_rhat.is_finite() {
@@ -154,13 +188,26 @@ fn main() {
     let args = Args::from_env();
     let sub = args.subcommand.clone().unwrap_or_else(|| usage());
     match sub.as_str() {
-        "run" => {
+        "run" | "resume" => {
+            let resume = sub == "resume";
             let cfg = config_from_args(&args).unwrap_or_else(|e| {
                 eprintln!("config error: {e}");
                 std::process::exit(2)
             });
-            match run_experiment(&cfg) {
-                Ok(res) => print_summary(&res),
+            if resume && cfg.checkpoint_dir.is_none() {
+                eprintln!("config error: resume requires --checkpoint-dir (or [checkpoint] dir)");
+                std::process::exit(2)
+            }
+            match firefly::engine::run_experiment_resume(&cfg, resume) {
+                Ok(res) => {
+                    print_summary(&res);
+                    if let (Some(stop), Some(dir)) = (cfg.stop_after, &cfg.checkpoint_dir) {
+                        println!(
+                            "session bounded to {stop} iterations/chain — continue with \
+                             `firefly resume --checkpoint-dir {dir} ...` (same flags)"
+                        );
+                    }
+                }
                 Err(e) => {
                     eprintln!("experiment failed: {e:#}");
                     std::process::exit(1)

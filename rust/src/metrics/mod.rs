@@ -109,6 +109,41 @@ impl Counters {
         self.inner.data_cache_misses.load(Relaxed)
     }
 
+    /// Full totals of every cell (including the padded-lane and data-cache
+    /// counters that [`Counters::snapshot`] deliberately excludes) — the
+    /// checkpoint layer persists these so a resumed chain's final counter
+    /// report matches the uninterrupted run's.
+    pub fn totals(&self) -> CounterTotals {
+        CounterTotals {
+            lik_queries: self.lik_queries(),
+            bound_queries: self.bound_queries(),
+            collapsed_bound_evals: self.collapsed_bound_evals(),
+            xla_executions: self.xla_executions(),
+            padded_lanes: self.padded_lanes(),
+            data_cache_hits: self.data_cache_hits(),
+            data_cache_misses: self.data_cache_misses(),
+        }
+    }
+
+    /// Overwrite every cell with checkpointed totals (shared across clones).
+    /// Counterpart of [`Counters::totals`] on the resume path: construction
+    /// work done while rebuilding a chain (e.g. the `init_z` full pass) is
+    /// deliberately discarded — the restored totals already contain the
+    /// original run's setup cost exactly once.
+    pub fn restore_totals(&self, t: &CounterTotals) {
+        self.inner.lik_queries.store(t.lik_queries, Relaxed);
+        self.inner.bound_queries.store(t.bound_queries, Relaxed);
+        self.inner
+            .collapsed_bound_evals
+            .store(t.collapsed_bound_evals, Relaxed);
+        self.inner.xla_executions.store(t.xla_executions, Relaxed);
+        self.inner.padded_lanes.store(t.padded_lanes, Relaxed);
+        self.inner.data_cache_hits.store(t.data_cache_hits, Relaxed);
+        self.inner
+            .data_cache_misses
+            .store(t.data_cache_misses, Relaxed);
+    }
+
     /// Snapshot for per-iteration deltas.
     pub fn snapshot(&self) -> CounterSnapshot {
         CounterSnapshot {
@@ -128,6 +163,52 @@ impl Counters {
         self.inner.padded_lanes.store(0, Relaxed);
         self.inner.data_cache_hits.store(0, Relaxed);
         self.inner.data_cache_misses.store(0, Relaxed);
+    }
+}
+
+/// Complete point-in-time totals of every counter cell — the checkpointable
+/// superset of [`CounterSnapshot`] (see [`Counters::totals`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CounterTotals {
+    /// likelihood queries
+    pub lik_queries: u64,
+    /// pointwise bound queries
+    pub bound_queries: u64,
+    /// collapsed bound-product evaluations
+    pub collapsed_bound_evals: u64,
+    /// XLA executable launches
+    pub xla_executions: u64,
+    /// padded (masked-out) batch lanes
+    pub padded_lanes: u64,
+    /// feature-row block-cache hits (best-effort; cache-topology-dependent)
+    pub data_cache_hits: u64,
+    /// feature-row block-cache misses (best-effort; cache-topology-dependent)
+    pub data_cache_misses: u64,
+}
+
+impl CounterTotals {
+    /// Serialize (fixed 7 × u64 layout).
+    pub fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.u64(self.lik_queries);
+        w.u64(self.bound_queries);
+        w.u64(self.collapsed_bound_evals);
+        w.u64(self.xla_executions);
+        w.u64(self.padded_lanes);
+        w.u64(self.data_cache_hits);
+        w.u64(self.data_cache_misses);
+    }
+
+    /// Deserialize the [`Self::save_state`] layout.
+    pub fn load_state(r: &mut crate::util::codec::ByteReader) -> Result<Self, String> {
+        Ok(CounterTotals {
+            lik_queries: r.u64()?,
+            bound_queries: r.u64()?,
+            collapsed_bound_evals: r.u64()?,
+            xla_executions: r.u64()?,
+            padded_lanes: r.u64()?,
+            data_cache_hits: r.u64()?,
+            data_cache_misses: r.u64()?,
+        })
     }
 }
 
@@ -265,6 +346,29 @@ mod tests {
         c.reset();
         assert_eq!(c.data_cache_hits(), 0);
         assert_eq!(c.data_cache_misses(), 0);
+    }
+
+    #[test]
+    fn totals_roundtrip_restores_every_cell() {
+        let c = Counters::new();
+        c.add_lik(10);
+        c.add_bound(4);
+        c.add_collapsed(3);
+        c.add_xla_exec(2);
+        c.add_padded(1);
+        c.add_data_cache(7, 5);
+        let t = c.totals();
+        let mut w = crate::util::codec::ByteWriter::new();
+        t.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let got =
+            CounterTotals::load_state(&mut crate::util::codec::ByteReader::new(&bytes)).unwrap();
+        assert_eq!(got, t);
+        let d = Counters::new();
+        d.add_lik(999); // construction noise, overwritten by restore
+        d.restore_totals(&got);
+        assert_eq!(d.totals(), t);
+        assert_eq!(d.snapshot(), c.snapshot());
     }
 
     #[test]

@@ -30,6 +30,26 @@ impl StepSizeAdapter {
         self.frozen
     }
 
+    /// Serialize the adaptation state (target, gain, decay count, frozen
+    /// flag) — the decay count determines every future gain, so it must
+    /// survive a checkpoint for the resumed step-size trajectory to be
+    /// bit-identical.
+    pub fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.f64(self.target_accept);
+        w.f64(self.gamma0);
+        w.usize(self.count);
+        w.bool(self.frozen);
+    }
+
+    /// Restore [`Self::save_state`] bytes.
+    pub fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        self.target_accept = r.f64()?;
+        self.gamma0 = r.f64()?;
+        self.count = r.usize()?;
+        self.frozen = r.bool()?;
+        Ok(())
+    }
+
     /// Update `log step` after observing an accept/reject; returns the new
     /// step size.
     pub fn update(&mut self, step: f64, accepted: bool) -> f64 {

@@ -159,6 +159,51 @@ impl Sampler for Mala {
     fn freeze_adaptation(&mut self) {
         Mala::freeze_adaptation(self);
     }
+
+    fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.f64(self.step);
+        w.u64(self.accepts);
+        w.u64(self.steps);
+        w.bool(self.adapter.is_some());
+        if let Some(a) = &self.adapter {
+            a.save_state(w);
+        }
+        // the current-point cache decides whether the next step spends a
+        // gradient evaluation — it must survive a checkpoint for the
+        // resumed query accounting to match the uninterrupted run
+        w.bool(self.cache_valid);
+        if self.cache_valid {
+            w.u64(self.cache_version);
+            w.f64(self.cache_logp);
+            w.f64_slice(&self.cache_theta);
+            w.f64_slice(&self.grad_cur);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        self.step = r.f64()?;
+        self.accepts = r.u64()?;
+        self.steps = r.u64()?;
+        let adaptive = r.bool()?;
+        match (&mut self.adapter, adaptive) {
+            (Some(a), true) => a.load_state(r)?,
+            (None, false) => {}
+            _ => return Err("checkpoint adaptive-ness does not match this sampler".to_string()),
+        }
+        self.cache_valid = r.bool()?;
+        if self.cache_valid {
+            self.cache_version = r.u64()?;
+            self.cache_logp = r.f64()?;
+            r.f64_slice_into(&mut self.cache_theta)?;
+            r.f64_slice_into(&mut self.grad_cur)?;
+            if self.cache_theta.len() != self.grad_cur.len() {
+                return Err("MALA cache shape mismatch".to_string());
+            }
+        } else {
+            self.cache_theta.clear();
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +248,49 @@ mod tests {
         }
         let rate = (mala.accepts - a0) as f64 / (mala.steps - s0) as f64;
         assert!((rate - 0.574).abs() < 0.1, "acceptance {rate}");
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_bit_identically() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        let mut target = GaussTarget::new(3, 1.0);
+        let mut mala = Mala::adaptive(0.8);
+        let mut theta = vec![0.2; 3];
+        target.commit(&theta);
+        let mut rng = Rng::new(12);
+        for _ in 0..200 {
+            mala.step(&mut target, &mut theta, &mut rng);
+        }
+        let mut w = ByteWriter::new();
+        mala.save_state(&mut w);
+        rng.save_state(&mut w);
+        let bytes = w.into_bytes();
+
+        let mut twin = Mala::adaptive(0.8); // same construction config
+        let mut r = ByteReader::new(&bytes);
+        twin.load_state(&mut r).unwrap();
+        let mut twin_rng = Rng::load_state(&mut r).unwrap();
+        r.finish().unwrap();
+        let mut twin_target = GaussTarget::new(3, 1.0);
+        let mut twin_theta = theta.clone();
+        twin_target.commit(&twin_theta);
+
+        for it in 0..100 {
+            let a = mala.step(&mut target, &mut theta, &mut rng);
+            let b = twin.step(&mut twin_target, &mut twin_theta, &mut twin_rng);
+            assert_eq!(a.accepted, b.accepted, "iter {it}");
+            assert_eq!(a.evals, b.evals, "iter {it}: cache state diverged");
+            assert_eq!(a.log_density.to_bits(), b.log_density.to_bits(), "iter {it}");
+            for (x, y) in theta.iter().zip(&twin_theta) {
+                assert_eq!(x.to_bits(), y.to_bits(), "iter {it}");
+            }
+            assert_eq!(mala.step.to_bits(), twin.step.to_bits(), "iter {it}");
+        }
+        assert_eq!(mala.acceptance_rate(), twin.acceptance_rate());
+
+        // adaptive-ness mismatch is rejected
+        let mut fixed = Mala::new(0.8);
+        assert!(fixed.load_state(&mut ByteReader::new(&bytes)).is_err());
     }
 
     #[test]

@@ -81,6 +81,29 @@ impl Sampler for RandomWalkMh {
     fn freeze_adaptation(&mut self) {
         RandomWalkMh::freeze_adaptation(self);
     }
+
+    fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.f64(self.step);
+        w.u64(self.accepts);
+        w.u64(self.steps);
+        w.bool(self.adapter.is_some());
+        if let Some(a) = &self.adapter {
+            a.save_state(w);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        self.step = r.f64()?;
+        self.accepts = r.u64()?;
+        self.steps = r.u64()?;
+        let adaptive = r.bool()?;
+        match (&mut self.adapter, adaptive) {
+            (Some(a), true) => a.load_state(r)?,
+            (None, false) => {}
+            _ => return Err("checkpoint adaptive-ness does not match this sampler".to_string()),
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -88,4 +88,15 @@ pub trait Sampler {
     /// samplers). Call at the end of burn-in so the chain is asymptotically
     /// exact, and before any timed measurement window.
     fn freeze_adaptation(&mut self) {}
+
+    /// Serialize every piece of sampler state that influences future steps
+    /// or reported statistics — step size, adaptation decay, acceptance
+    /// tallies, and any cross-iteration caches (MALA's current-point
+    /// gradient). Part of the chain checkpoint's bit-identical-resume
+    /// contract (`engine::checkpoint`).
+    fn save_state(&self, w: &mut crate::util::codec::ByteWriter);
+
+    /// Restore [`Sampler::save_state`] bytes into a sampler constructed
+    /// with the same configuration (adaptive-ness must match).
+    fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String>;
 }

@@ -131,6 +131,19 @@ impl Sampler for SliceSampler {
     fn name(&self) -> &'static str {
         "slice sampling"
     }
+
+    fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        // w / max_stepout / coords_per_iter are construction-time config;
+        // only the reported statistics are chain state
+        w.u64(self.evals_total);
+        w.u64(self.steps);
+    }
+
+    fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        self.evals_total = r.u64()?;
+        self.steps = r.u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,338 @@
+//! Little-endian byte codec for chain-state serialization.
+//!
+//! The checkpoint layer (`engine::checkpoint`) serializes every stateful
+//! component of a running chain — RNG, bright set, posterior caches, sampler
+//! adaptation, observer accumulators — through this one writer/reader pair,
+//! so the `.fckpt` byte layout has a single source of truth. Everything is
+//! explicit little-endian (the same discipline as `data::fbin`), length-
+//! prefixed where variable, and read back with bounds checking: a truncated
+//! or corrupt checkpoint surfaces as a `String` error, never a panic or a
+//! silently-wrong state.
+
+/// FNV-1a 64-bit hash — used for checkpoint payload checksums and config
+/// fingerprints (stable across platforms; not cryptographic).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Append-only little-endian byte sink.
+#[derive(Clone, Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the writer, returning the serialized bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Borrow the serialized bytes.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Write one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Write a bool as one byte (0/1).
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Write a `u32` little-endian.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a `u64` little-endian.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a `usize` as `u64` little-endian.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Write an `f64` little-endian (bit-exact).
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a length-prefixed `f64` slice.
+    pub fn f64_slice(&mut self, vs: &[f64]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    /// Write a length-prefixed `u32` slice.
+    pub fn u32_slice(&mut self, vs: &[u32]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.u32(v);
+        }
+    }
+
+    /// Write a length-prefixed `u64` slice.
+    pub fn u64_slice(&mut self, vs: &[u64]) {
+        self.usize(vs.len());
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    /// Write a length-prefixed raw byte slice.
+    pub fn bytes(&mut self, vs: &[u8]) {
+        self.usize(vs.len());
+        self.buf.extend_from_slice(vs);
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+#[derive(Clone, Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Reader positioned at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Error unless every byte has been consumed (trailing-garbage guard).
+    pub fn finish(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} unread trailing bytes", self.remaining()));
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated: need {n} bytes at offset {}, only {} remain",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a bool (one byte; values other than 0/1 are rejected).
+    pub fn bool(&mut self) -> Result<bool, String> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("bad bool byte {v}")),
+        }
+    }
+
+    /// Read a `u32` little-endian.
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64` little-endian.
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64` and narrow it to `usize`.
+    pub fn usize(&mut self) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("value {v} exceeds usize"))
+    }
+
+    /// Read an `f64` little-endian (bit-exact).
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn check_len(&self, len: usize, width: usize) -> Result<(), String> {
+        match len.checked_mul(width) {
+            Some(bytes) if bytes <= self.remaining() => Ok(()),
+            _ => Err(format!(
+                "truncated: slice of {len} × {width}-byte elements exceeds the \
+                 {} remaining bytes",
+                self.remaining()
+            )),
+        }
+    }
+
+    /// Read a length-prefixed `f64` slice into `out` (cleared first; keeps
+    /// `out`'s existing capacity, so restoring into a pre-reserved buffer
+    /// does not reallocate when the payload fits).
+    pub fn f64_slice_into(&mut self, out: &mut Vec<f64>) -> Result<(), String> {
+        let len = self.usize()?;
+        self.check_len(len, 8)?;
+        out.clear();
+        for _ in 0..len {
+            out.push(self.f64()?);
+        }
+        Ok(())
+    }
+
+    /// Read a length-prefixed `f64` slice as a fresh vector.
+    pub fn f64_vec(&mut self) -> Result<Vec<f64>, String> {
+        let mut v = Vec::new();
+        self.f64_slice_into(&mut v)?;
+        Ok(v)
+    }
+
+    /// Read a length-prefixed `u32` slice into `out` (cleared first).
+    pub fn u32_slice_into(&mut self, out: &mut Vec<u32>) -> Result<(), String> {
+        let len = self.usize()?;
+        self.check_len(len, 4)?;
+        out.clear();
+        for _ in 0..len {
+            out.push(self.u32()?);
+        }
+        Ok(())
+    }
+
+    /// Read a length-prefixed `u32` slice as a fresh vector.
+    pub fn u32_vec(&mut self) -> Result<Vec<u32>, String> {
+        let mut v = Vec::new();
+        self.u32_slice_into(&mut v)?;
+        Ok(v)
+    }
+
+    /// Read a length-prefixed `u64` slice into `out` (cleared first).
+    pub fn u64_slice_into(&mut self, out: &mut Vec<u64>) -> Result<(), String> {
+        let len = self.usize()?;
+        self.check_len(len, 8)?;
+        out.clear();
+        for _ in 0..len {
+            out.push(self.u64()?);
+        }
+        Ok(())
+    }
+
+    /// Read a length-prefixed raw byte slice (borrowed, zero-copy).
+    pub fn bytes(&mut self) -> Result<&'a [u8], String> {
+        let len = self.usize()?;
+        self.take(len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_primitives() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.bool(false);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.usize(42);
+        w.f64(-0.0);
+        w.f64(f64::NAN);
+        w.f64_slice(&[1.5, -2.5]);
+        w.u32_slice(&[3, 2, 1]);
+        w.u64_slice(&[9, 10]);
+        w.bytes(b"abc");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.usize().unwrap(), 42);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.f64().unwrap().is_nan());
+        assert_eq!(r.f64_vec().unwrap(), vec![1.5, -2.5]);
+        assert_eq!(r.u32_vec().unwrap(), vec![3, 2, 1]);
+        let mut u = Vec::new();
+        r.u64_slice_into(&mut u).unwrap();
+        assert_eq!(u, vec![9, 10]);
+        assert_eq!(r.bytes().unwrap(), b"abc");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.u64(5);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..4]);
+        assert!(r.u64().unwrap_err().contains("truncated"));
+        // a huge length prefix must be rejected before allocation
+        let mut w = ByteWriter::new();
+        w.u64(u64::MAX / 2);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.f64_vec().is_err());
+    }
+
+    #[test]
+    fn slice_into_preserves_capacity() {
+        let mut w = ByteWriter::new();
+        w.f64_slice(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        let mut out: Vec<f64> = Vec::with_capacity(64);
+        let cap = out.capacity();
+        ByteReader::new(&bytes).f64_slice_into(&mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        assert_eq!(out.capacity(), cap);
+    }
+
+    #[test]
+    fn finish_rejects_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.u32(1);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let _ = r.u8().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn fnv1a_is_stable_and_discriminating() {
+        assert_eq!(fnv1a(b""), 0xCBF2_9CE4_8422_2325);
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+        assert_eq!(fnv1a(b"firefly"), fnv1a(b"firefly"));
+    }
+}

@@ -1,7 +1,9 @@
-//! Shared substrates: PRNG, scalar math, and the counting allocator used by
+//! Shared substrates: PRNG, scalar math, the little-endian byte codec the
+//! checkpoint layer serializes through, and the counting allocator used by
 //! the zero-allocation hot-path tests/benches.
 
 pub mod alloc_count;
+pub mod codec;
 pub mod math;
 pub mod rng;
 

@@ -188,6 +188,51 @@ impl Rng {
         }
     }
 
+    /// Serialize the full generator state (xoshiro words + the cached
+    /// Box–Muller spare) so a restored generator continues the exact output
+    /// stream — the substrate of the chain checkpoint's bit-identical-resume
+    /// guarantee (`engine::checkpoint`).
+    pub fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        for &s in &self.s {
+            w.u64(s);
+        }
+        match self.spare_normal {
+            Some(z) => {
+                w.bool(true);
+                w.f64(z);
+            }
+            None => w.bool(false),
+        }
+    }
+
+    /// Rebuild a generator from [`Self::save_state`] bytes. The restored
+    /// generator's future output is bit-identical to the saved one's.
+    ///
+    /// ```
+    /// use firefly::util::codec::{ByteReader, ByteWriter};
+    /// use firefly::util::Rng;
+    ///
+    /// let mut a = Rng::new(9);
+    /// let _ = a.normal(); // leaves a cached Box–Muller spare
+    /// let mut w = ByteWriter::new();
+    /// a.save_state(&mut w);
+    /// let bytes = w.into_bytes();
+    /// let mut b = Rng::load_state(&mut ByteReader::new(&bytes)).unwrap();
+    /// assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+    /// assert_eq!(a.next_u64(), b.next_u64());
+    /// ```
+    pub fn load_state(r: &mut crate::util::codec::ByteReader) -> Result<Rng, String> {
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            *v = r.u64()?;
+        }
+        let spare_normal = if r.bool()? { Some(r.f64()?) } else { None };
+        if s == [0, 0, 0, 0] {
+            return Err("all-zero xoshiro state (corrupt checkpoint)".to_string());
+        }
+        Ok(Rng { s, spare_normal })
+    }
+
     /// Sample an index from unnormalized non-negative weights.
     pub fn categorical(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
@@ -328,6 +373,59 @@ mod tests {
         assert!((mean - 9.0).abs() < 0.35, "mean {mean}");
         assert_eq!(r.geometric_skip(1.0), 0);
         assert_eq!(r.geometric_skip(0.0), usize::MAX);
+    }
+
+    #[test]
+    fn geometric_skip_boundaries_degenerate_safely() {
+        // q_{d->b} at or beyond the open interval (0, 1) degenerates the
+        // geometric skip — these are exactly the values the config layer
+        // rejects at parse time (configx::ExperimentConfig::validate); the
+        // generator itself must still never panic or return junk indices.
+        let mut r = Rng::new(17);
+        // p = 1: every dark point is proposed (skip 0)
+        assert_eq!(r.geometric_skip(1.0), 0);
+        // p > 1 clamps to the p = 1 behavior
+        assert_eq!(r.geometric_skip(1.5), 0);
+        // p = 0 / p < 0: no proposal ever (MAX sentinel, loop terminates)
+        assert_eq!(r.geometric_skip(0.0), usize::MAX);
+        assert_eq!(r.geometric_skip(-0.25), usize::MAX);
+        // denormal-small p: (1-p) rounds to 1.0, ln(1-p) = 0, k = inf -> MAX
+        assert_eq!(r.geometric_skip(1e-300), usize::MAX);
+        // p just inside 1: skips are essentially always 0
+        for _ in 0..100 {
+            assert_eq!(r.geometric_skip(1.0 - 1e-12), 0);
+        }
+        // p just inside 0 (but representable in 1-p): finite, huge mean
+        let k = r.geometric_skip(1e-9);
+        assert!(k < usize::MAX, "skip {k}");
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        for consume_normals in [0usize, 1, 2, 3] {
+            let mut a = Rng::new(123);
+            for _ in 0..consume_normals {
+                let _ = a.normal(); // odd counts leave a cached spare
+            }
+            let mut w = ByteWriter::new();
+            a.save_state(&mut w);
+            let bytes = w.into_bytes();
+            let mut reader = ByteReader::new(&bytes);
+            let mut b = Rng::load_state(&mut reader).unwrap();
+            reader.finish().unwrap();
+            for _ in 0..64 {
+                assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+                assert_eq!(a.next_u64(), b.next_u64());
+                assert_eq!(a.geometric_skip(0.1), b.geometric_skip(0.1));
+            }
+        }
+        // truncated state errors
+        let mut a = Rng::new(5);
+        let mut w = ByteWriter::new();
+        a.save_state(&mut w);
+        let bytes = w.into_bytes();
+        assert!(Rng::load_state(&mut ByteReader::new(&bytes[..10])).is_err());
     }
 
     #[test]

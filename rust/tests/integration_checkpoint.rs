@@ -1,0 +1,433 @@
+//! Acceptance tests for the checkpointable chain runtime (DESIGN.md
+//! §Checkpointing): for every paper workload (logistic + RW-MH, softmax +
+//! MALA, robust + slice) on both CPU backends, a chain that is
+//! checkpointed, "killed" mid-run (session-bounded via `stop_after`) and
+//! resumed in a fresh process-equivalent (fresh model/backend/sampler
+//! build, state restored from the `.fckpt`) must produce **byte-identical**
+//! θ traces, diagnostics inputs (log-posterior series, streaming moments,
+//! ESS/R̂ inputs), bright trajectories, and query counters to the
+//! never-interrupted run. Also here: the streaming-vs-trace moment
+//! tolerance contract, config-drift rejection, and the zero-allocation
+//! steady state with the full observer pipeline attached.
+//!
+//! The binary hosts the counting global allocator for the zero-alloc test,
+//! so every test serializes through one mutex — a concurrently-running
+//! sibling test would otherwise pollute the allocation window.
+
+use std::sync::Mutex;
+
+use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use firefly::engine::experiment::{build_chain, build_model, build_sampler};
+use firefly::engine::{
+    run_experiment, run_experiment_resume, ChainConfig, ChainResult, ChainState,
+    CheckpointObserver, RecordingObserver, StreamingObserver,
+};
+use firefly::engine::observer::ChainObserver;
+use firefly::util::alloc_count::CountingAlloc;
+use firefly::util::math::{mean, variance};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+/// Serializes all tests in this binary (see module docs).
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_dir(name: &str) -> String {
+    let p = std::env::temp_dir().join(format!("firefly_itckpt_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p.to_string_lossy().into_owned()
+}
+
+fn assert_chain_identical(a: &ChainResult, b: &ChainResult, label: &str) {
+    assert_eq!(a.seed, b.seed, "{label}: seeds differ");
+    assert_eq!(
+        a.logpost_joint.len(),
+        b.logpost_joint.len(),
+        "{label}: iteration counts differ"
+    );
+    for (i, (x, y)) in a.logpost_joint.iter().zip(&b.logpost_joint).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: logpost differs at iter {i}");
+    }
+    assert_eq!(a.theta_trace.n_rows(), b.theta_trace.n_rows(), "{label}: trace rows");
+    for i in 0..a.theta_trace.n_rows() {
+        for (x, y) in a.theta_trace.row(i).iter().zip(b.theta_trace.row(i)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: θ trace differs at row {i}");
+        }
+    }
+    assert_eq!(a.full_logpost.len(), b.full_logpost.len(), "{label}");
+    for ((ia, va), (ib, vb)) in a.full_logpost.iter().zip(&b.full_logpost) {
+        assert_eq!(ia, ib, "{label}: full-logpost tick drifted");
+        assert_eq!(va.to_bits(), vb.to_bits(), "{label}: full logpost differs");
+    }
+    assert_eq!(a.bright, b.bright, "{label}: bright trajectories differ");
+    assert_eq!(a.queries_per_iter, b.queries_per_iter, "{label}: query accounting differs");
+    assert_eq!(a.accepted, b.accepted, "{label}");
+    assert_eq!(a.z_brightened, b.z_brightened, "{label}");
+    assert_eq!(a.z_darkened, b.z_darkened, "{label}");
+    assert_eq!(a.final_counters, b.final_counters, "{label}: counter totals differ");
+    // streaming diagnostics inputs are part of the identity contract
+    assert_eq!(a.stats.rows, b.stats.rows, "{label}");
+    assert_eq!(a.stats.batch_size, b.stats.batch_size, "{label}");
+    for (j, (x, y)) in a.stats.mean.iter().zip(&b.stats.mean).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: streaming mean differs at {j}");
+    }
+    for (j, (x, y)) in a.stats.var.iter().zip(&b.stats.var).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: streaming var differs at {j}");
+    }
+    assert_eq!(
+        a.stats.ess_bm_min.to_bits(),
+        b.stats.ess_bm_min.to_bits(),
+        "{label}: batch-means ESS differs"
+    );
+    assert_eq!(
+        a.stats.split_rhat_halves.to_bits(),
+        b.stats.split_rhat_halves.to_bits(),
+        "{label}: split-R̂ halves differ"
+    );
+    assert_eq!(a.stats.bright, b.stats.bright, "{label}: bright stats differ");
+    assert_eq!(a.stats.iters_post_burnin, b.stats.iters_post_burnin, "{label}");
+    assert_eq!(
+        a.stats.queries_post_burnin, b.stats.queries_post_burnin,
+        "{label}: streaming query aggregate differs"
+    );
+}
+
+fn workload_cfg(task: Task, backend: Backend) -> ExperimentConfig {
+    let (algorithm, n, iters, burnin, map_steps) = match task {
+        // logistic + RW-MH, through the MAP-tuning pre-pass (its queries
+        // and anchor state must be rebuilt deterministically on resume)
+        Task::LogisticMnist => (Algorithm::MapTunedFlyMc, 300, 100, 30, 50),
+        // softmax + MALA: the gradient path and its current-point cache
+        Task::SoftmaxCifar => (Algorithm::UntunedFlyMc, 120, 60, 20, 0),
+        // robust + slice: variable evals/iteration
+        Task::RobustOpv => (Algorithm::UntunedFlyMc, 300, 60, 20, 0),
+        Task::Toy => unreachable!("not a paper workload"),
+    };
+    ExperimentConfig {
+        task,
+        algorithm,
+        backend,
+        n_data: Some(n),
+        iters,
+        burnin,
+        map_steps,
+        chains: 1,
+        record_every: 13,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+/// Reference (uninterrupted, no checkpointing) vs killed-and-resumed:
+/// byte-identical end state for one workload/backend pair.
+fn check_resume_identity(task: Task, backend: Backend, label: &str) {
+    let dir = tmp_dir(label);
+    let reference = run_experiment(&workload_cfg(task, backend)).expect("reference run");
+
+    // session 1: checkpoint every 20, preempted after 33 iterations
+    let mut partial_cfg = workload_cfg(task, backend);
+    partial_cfg.checkpoint_dir = Some(dir.clone());
+    partial_cfg.checkpoint_every = 20;
+    partial_cfg.stop_after = Some(33);
+    let partial = run_experiment(&partial_cfg).expect("partial run");
+    assert_eq!(
+        partial.chains[0].logpost_joint.len(),
+        33,
+        "{label}: session bound ignored"
+    );
+
+    // session 2: fresh build, resume to completion
+    let mut resume_cfg = workload_cfg(task, backend);
+    resume_cfg.checkpoint_dir = Some(dir.clone());
+    resume_cfg.checkpoint_every = 20;
+    let resumed = run_experiment_resume(&resume_cfg, true).expect("resumed run");
+
+    assert_eq!(reference.chains.len(), resumed.chains.len());
+    for (a, b) in reference.chains.iter().zip(&resumed.chains) {
+        assert_chain_identical(a, b, label);
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn logistic_rwmh_resume_byte_identical_cpu_and_parcpu() {
+    let _g = lock();
+    check_resume_identity(Task::LogisticMnist, Backend::Cpu, "logistic/cpu");
+    check_resume_identity(Task::LogisticMnist, Backend::ParCpu, "logistic/parcpu");
+}
+
+#[test]
+fn softmax_mala_resume_byte_identical_cpu_and_parcpu() {
+    let _g = lock();
+    check_resume_identity(Task::SoftmaxCifar, Backend::Cpu, "softmax/cpu");
+    check_resume_identity(Task::SoftmaxCifar, Backend::ParCpu, "softmax/parcpu");
+}
+
+#[test]
+fn robust_slice_resume_byte_identical_cpu_and_parcpu() {
+    let _g = lock();
+    check_resume_identity(Task::RobustOpv, Backend::Cpu, "robust/cpu");
+    check_resume_identity(Task::RobustOpv, Backend::ParCpu, "robust/parcpu");
+}
+
+#[test]
+fn multi_replica_experiment_resumes_and_is_idempotent() {
+    let _g = lock();
+    let dir = tmp_dir("multi");
+    let base = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(250),
+        iters: 80,
+        burnin: 20,
+        chains: 3,
+        threads: 2,
+        record_every: 0,
+        seed: 7,
+        ..Default::default()
+    };
+    let reference = run_experiment(&base).unwrap();
+
+    let mut partial_cfg = base.clone();
+    partial_cfg.checkpoint_dir = Some(dir.clone());
+    partial_cfg.checkpoint_every = 25;
+    partial_cfg.stop_after = Some(40);
+    run_experiment(&partial_cfg).unwrap();
+
+    let mut resume_cfg = base.clone();
+    resume_cfg.checkpoint_dir = Some(dir.clone());
+    resume_cfg.checkpoint_every = 25;
+    let resumed = run_experiment_resume(&resume_cfg, true).unwrap();
+    assert_eq!(resumed.chains.len(), 3);
+    for (r, (a, b)) in reference.chains.iter().zip(&resumed.chains).enumerate() {
+        assert_chain_identical(a, b, &format!("replica {r}"));
+    }
+
+    // resuming a *finished* experiment replays the final checkpoints (zero
+    // further iterations) and must reproduce the same output again
+    let again = run_experiment_resume(&resume_cfg, true).unwrap();
+    for (r, (a, b)) in resumed.chains.iter().zip(&again.chains).enumerate() {
+        assert_chain_identical(a, b, &format!("idempotent replica {r}"));
+    }
+    // the summary the operator sees is the same one, too
+    let (a, b) = (reference.table_row(), again.table_row());
+    assert_eq!(a.avg_lik_queries_per_iter.to_bits(), b.avg_lik_queries_per_iter.to_bits());
+    assert_eq!(a.ess_per_1000.to_bits(), b.ess_per_1000.to_bits());
+    assert_eq!(a.split_rhat.to_bits(), b.split_rhat.to_bits());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn streaming_only_mode_keeps_summaries_and_resumes_identically() {
+    let _g = lock();
+    let dir = tmp_dir("streaming_only");
+    let base = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(250),
+        iters: 120,
+        burnin: 30,
+        chains: 1,
+        record_every: 0,
+        seed: 19,
+        record_trace: false,
+        ..Default::default()
+    };
+
+    // the recorded-mode twin pins the streaming summary's accuracy
+    let mut recorded_cfg = base.clone();
+    recorded_cfg.record_trace = true;
+    let recorded = run_experiment(&recorded_cfg).unwrap();
+
+    let reference = run_experiment(&base).unwrap();
+    let chain = &reference.chains[0];
+    // bounded mode: no series at all...
+    assert!(chain.theta_trace.is_empty());
+    assert!(chain.logpost_joint.is_empty());
+    assert!(chain.queries_per_iter.is_empty());
+    // ...yet the summary columns survive via the streaming aggregates
+    let row = reference.table_row();
+    assert!(row.avg_lik_queries_per_iter.is_finite());
+    assert!(row.ess_per_1000.is_finite() && row.ess_per_1000 > 0.0);
+    assert!(row.avg_bright.is_finite());
+    let rec_chain = &recorded.chains[0];
+    assert!(
+        (chain.avg_queries_post_burnin(base.burnin)
+            - rec_chain.avg_queries_post_burnin(base.burnin))
+        .abs()
+            < 1e-9,
+        "streaming queries/iter disagrees with the recorded series"
+    );
+    assert_eq!(chain.stats.bright, rec_chain.stats.bright);
+
+    // kill-and-resume identity holds in streaming-only mode too
+    let mut partial_cfg = base.clone();
+    partial_cfg.checkpoint_dir = Some(dir.clone());
+    partial_cfg.checkpoint_every = 25;
+    partial_cfg.stop_after = Some(40);
+    run_experiment(&partial_cfg).unwrap();
+    let mut resume_cfg = base.clone();
+    resume_cfg.checkpoint_dir = Some(dir.clone());
+    resume_cfg.checkpoint_every = 25;
+    let resumed = run_experiment_resume(&resume_cfg, true).unwrap();
+    assert_chain_identical(&reference.chains[0], &resumed.chains[0], "streaming-only");
+
+    // toggling the recording mode between sessions is refused up front
+    // (it is part of the config fingerprint)
+    let mut toggled = resume_cfg.clone();
+    toggled.record_trace = true;
+    let err = run_experiment_resume(&toggled, true).unwrap_err();
+    assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn resume_rejects_config_drift() {
+    let _g = lock();
+    let dir = tmp_dir("drift");
+    let mut cfg = workload_cfg(Task::LogisticMnist, Backend::Cpu);
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.checkpoint_every = 20;
+    cfg.stop_after = Some(30);
+    run_experiment(&cfg).unwrap();
+
+    // same directory, different seed => different fingerprint => refused
+    let mut drifted = cfg.clone();
+    drifted.stop_after = None;
+    drifted.seed = 43;
+    let err = run_experiment_resume(&drifted, true).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("fingerprint"),
+        "want a fingerprint-mismatch error, got: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn streaming_moments_match_trace_derived_moments() {
+    let _g = lock();
+    // contract (DESIGN.md §Checkpointing): streaming mean/variance within
+    // 1e-8 relative of the batch TraceMatrix-derived values; the halves
+    // split-R̂ within 1e-6 of the same formula over materialized halves
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(250),
+        iters: 220,
+        burnin: 20,
+        chains: 1,
+        record_every: 0,
+        seed: 11,
+        ..Default::default()
+    };
+    let res = run_experiment(&cfg).unwrap();
+    let chain = &res.chains[0];
+    let trace = &chain.theta_trace;
+    assert_eq!(chain.stats.rows, trace.n_rows());
+    let mut col = Vec::new();
+    for j in 0..trace.dim() {
+        trace.column_into(j, &mut col);
+        let (bm, bv) = (mean(&col), variance(&col));
+        let (sm, sv) = (chain.stats.mean[j], chain.stats.var[j]);
+        assert!(
+            (sm - bm).abs() <= 1e-8 * (1.0 + bm.abs()),
+            "component {j}: streaming mean {sm} vs trace {bm}"
+        );
+        assert!(
+            (sv - bv).abs() <= 1e-8 * (1.0 + bv.abs()),
+            "component {j}: streaming var {sv} vs trace {bv}"
+        );
+    }
+    // split-R̂ halves: reference from the materialized trace halves
+    let h = trace.n_rows() / 2;
+    let mut worst = f64::NEG_INFINITY;
+    for j in 0..trace.dim() {
+        trace.column_into(j, &mut col);
+        let (c1, c2) = (&col[..h], &col[h..2 * h]);
+        let (m1, m2) = (mean(c1), mean(c2));
+        let w = 0.5 * (variance(c1) + variance(c2));
+        if !(w > 0.0) {
+            continue;
+        }
+        let g = 0.5 * (m1 + m2);
+        let hf = h as f64;
+        let b = hf * ((m1 - g) * (m1 - g) + (m2 - g) * (m2 - g));
+        let r = (((hf - 1.0) / hf * w + b / hf) / w).sqrt();
+        if r.is_finite() {
+            worst = worst.max(r);
+        }
+    }
+    let got = chain.stats.split_rhat_halves;
+    assert!(
+        (got - worst).abs() <= 1e-6 * (1.0 + worst.abs()),
+        "split-R̂ halves {got} vs trace-derived {worst}"
+    );
+    // ESS sanity: defined and within [1, rows]
+    let ess = chain.stats.ess_bm_min;
+    assert!(ess >= 1.0 && ess <= chain.stats.rows as f64, "ESS {ess}");
+}
+
+#[test]
+fn zero_alloc_steady_state_with_full_observer_pipeline() {
+    let _g = lock();
+    // The zero-allocation steady-state invariant (DESIGN.md §Perf) must
+    // survive the observer refactor with the streaming observer AND an
+    // armed checkpoint writer attached — checkpoint writes themselves are
+    // boundary events, excluded from the counting window (the writer's
+    // cadence is set beyond the window).
+    let dir = tmp_dir("alloc");
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(300),
+        iters: 500,
+        burnin: 50,
+        chains: 1,
+        record_every: 0, // true_log_posterior allocates by design
+        seed: 3,
+        ..Default::default()
+    };
+    let (model, prior, _, _) = build_model(&cfg).unwrap();
+    let (target, theta0) = build_chain(&cfg, model, prior, cfg.seed).unwrap();
+    let sampler = build_sampler(cfg.task);
+    let ccfg = ChainConfig {
+        iters: cfg.iters,
+        burnin: cfg.burnin,
+        record_full_every: 0,
+        thin: 1,
+        q_dark_to_bright: cfg.effective_q_db(),
+        explicit_resample: false,
+        resample_fraction: 0.1,
+        seed: cfg.seed,
+        record_trace: true,
+    };
+    let dim = theta0.len();
+    let mut state = ChainState::new(target, sampler, theta0, &ccfg);
+    let mut rec = RecordingObserver::new(&ccfg, dim);
+    let mut stats = StreamingObserver::new(&ccfg, dim);
+    // armed writer whose first boundary lies beyond the measured window
+    let mut writer = CheckpointObserver::new(&format!("{dir}/chain.fckpt"), 100_000, 1);
+    let mut observers: [&mut dyn ChainObserver; 3] = [&mut rec, &mut stats, &mut writer];
+
+    state.run_for(100, &mut observers).unwrap(); // warm-up
+    let before = ALLOC.allocations();
+    state.run_for(300, &mut observers).unwrap();
+    let allocs = ALLOC.allocations() - before;
+    assert_eq!(
+        allocs, 0,
+        "steady-state iterations with recording + streaming + checkpoint \
+         observers performed {allocs} heap allocations"
+    );
+    // finish (final checkpoint write happens here, outside the window)
+    state.run_to_end(&mut observers).unwrap();
+    assert_eq!(writer.writes(), 1, "completion forces exactly one write");
+    let res = state.into_result(rec, stats);
+    assert_eq!(res.logpost_joint.len(), 500);
+    assert!(res.stats.bright.count > 0);
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -65,6 +65,7 @@ fn flymc_marginal_matches_regular_mcmc() {
             explicit_resample: false,
             resample_fraction: 0.1,
             seed,
+            record_trace: true,
         };
         run_chain(
             target,
