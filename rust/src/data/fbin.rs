@@ -249,7 +249,7 @@ pub fn open_fbin(path: &str, cache: BlockCacheConfig) -> Result<AnyData, String>
     if header.n == 0 || header.d == 0 {
         return Err(format!("{path}: empty dataset (n={}, d={})", header.n, header.d));
     }
-    if header.n > u32::MAX as u64 {
+    if header.n > u64::from(u32::MAX) {
         return Err(format!(
             "{path}: n={} exceeds the u32 index limit of the sampling engine",
             header.n

@@ -206,6 +206,7 @@ impl BlockStore {
     }
 
     /// Read row `i` through `cache`, filling the row's block on a miss.
+    // lint: zero-alloc
     fn row<'a>(&self, i: usize, cache: &'a mut RowCache) -> &'a [f64] {
         assert!(i < self.n, "row {i} out of range (n={})", self.n);
         assert!(
@@ -340,6 +341,7 @@ impl DataStore {
     /// filling the row's block with one positioned read on a miss.
     /// Allocation-free in both arms.
     #[inline]
+    // lint: zero-alloc
     pub fn row<'a>(&'a self, i: usize, cache: &'a mut RowCache) -> &'a [f64] {
         match self {
             DataStore::Dense(s) => s.x.row(i),

@@ -228,6 +228,7 @@ impl PseudoPosterior {
 
     /// Evaluate at `theta` and memoize. Costs n_bright likelihood queries;
     /// the bright index set is the `BrightSet`'s own u32 prefix (no copy).
+    // lint: zero-alloc
     fn eval_and_memo(&mut self, theta: &[f64]) -> f64 {
         self.eval.eval(
             theta,
@@ -250,6 +251,7 @@ impl PseudoPosterior {
         base + pseudo
     }
 
+    // lint: zero-alloc
     fn promote_memo(&mut self) {
         debug_assert!(self.memo_valid);
         let brights = self.bright.bright_slice();
@@ -282,6 +284,7 @@ impl PseudoPosterior {
     /// Implicit MH resampling of z (paper Alg 2) with q_{b→d} = 1 and the
     /// given q_{d→b}. Bright→dark uses only cached values (no queries);
     /// dark→bright proposes a geometric-skip subset and evaluates just those.
+    // lint: zero-alloc
     pub fn implicit_resample(&mut self, q_db: f64, rng: &mut crate::util::Rng) -> ZStats {
         let mut stats = ZStats::default();
         let ln_q = q_db.ln();
@@ -342,6 +345,7 @@ impl PseudoPosterior {
     /// Explicit Gibbs resampling (paper Alg 1 lines 3–6): `fraction·N`
     /// uniform draws with replacement, each z_n redrawn from its exact
     /// conditional. Every draw costs one likelihood query.
+    // lint: zero-alloc
     pub fn explicit_resample(&mut self, fraction: f64, rng: &mut crate::util::Rng) -> ZStats {
         let n = self.model.n();
         let k = ((fraction * n as f64).ceil() as usize).min(n.max(1));

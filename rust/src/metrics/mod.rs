@@ -401,7 +401,7 @@ mod tests {
     fn histogram_stats() {
         let mut h = Histogram::new(0.0, 10.0, 10);
         for i in 0..10 {
-            h.record(i as f64 + 0.5);
+            h.record(f64::from(i) + 0.5);
         }
         h.record(-1.0);
         h.record(42.0);

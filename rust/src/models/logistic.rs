@@ -103,10 +103,12 @@ impl ModelBound for LogisticJJ {
         EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
     }
 
+    // lint: zero-alloc
     fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
         log_sigmoid(self.s(theta, n, &mut scratch.rows))
     }
 
+    // lint: zero-alloc
     fn log_lik_grad_acc(
         &self,
         theta: &[f64],
@@ -120,6 +122,7 @@ impl ModelBound for LogisticJJ {
         axpy(coeff, row, grad);
     }
 
+    // lint: zero-alloc
     fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
         let s = self.s(theta, n, &mut scratch.rows);
         let ll = log_sigmoid(s);
@@ -128,6 +131,7 @@ impl ModelBound for LogisticJJ {
         (ll, lb)
     }
 
+    // lint: zero-alloc
     fn pseudo_grad_acc(
         &self,
         theta: &[f64],
@@ -146,6 +150,7 @@ impl ModelBound for LogisticJJ {
         axpy(coeff, row, grad);
     }
 
+    // lint: zero-alloc
     fn log_both_pseudo_grad(
         &self,
         theta: &[f64],
@@ -165,10 +170,12 @@ impl ModelBound for LogisticJJ {
         (ll, lb)
     }
 
+    // lint: zero-alloc
     fn log_bound_product(&self, theta: &[f64], _scratch: &mut EvalScratch) -> f64 {
         self.a_mat.quad_form(theta) + dot(&self.b_vec, theta) + self.c_sum
     }
 
+    // lint: zero-alloc
     fn grad_log_bound_product_acc(
         &self,
         theta: &[f64],

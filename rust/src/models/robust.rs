@@ -112,11 +112,13 @@ impl ModelBound for RobustT {
         EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
     }
 
+    // lint: zero-alloc
     fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
         let r = self.resid(theta, n, &mut scratch.rows);
         self.logc - (self.nu + 1.0) / 2.0 * (r * r / self.c2()).ln_1p()
     }
 
+    // lint: zero-alloc
     fn log_lik_grad_acc(
         &self,
         theta: &[f64],
@@ -131,6 +133,7 @@ impl ModelBound for RobustT {
         axpy(coeff, row, grad);
     }
 
+    // lint: zero-alloc
     fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
         let r = self.resid(theta, n, &mut scratch.rows);
         let u = r * r;
@@ -140,6 +143,7 @@ impl ModelBound for RobustT {
         (ll, lb)
     }
 
+    // lint: zero-alloc
     fn pseudo_grad_acc(
         &self,
         theta: &[f64],
@@ -160,6 +164,7 @@ impl ModelBound for RobustT {
         axpy(-coeff, row, grad);
     }
 
+    // lint: zero-alloc
     fn log_both_pseudo_grad(
         &self,
         theta: &[f64],
@@ -181,10 +186,12 @@ impl ModelBound for RobustT {
         (ll, lb)
     }
 
+    // lint: zero-alloc
     fn log_bound_product(&self, theta: &[f64], _scratch: &mut EvalScratch) -> f64 {
         self.a_mat.quad_form(theta) + dot(&self.b_vec, theta) + self.c_sum
     }
 
+    // lint: zero-alloc
     fn grad_log_bound_product_acc(
         &self,
         theta: &[f64],

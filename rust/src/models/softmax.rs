@@ -169,6 +169,7 @@ impl ModelBound for SoftmaxBohning {
         EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
     }
 
+    // lint: zero-alloc
     fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
         let EvalScratch { rows, eta, .. } = scratch;
         let eta = &mut eta[..self.k];
@@ -176,6 +177,7 @@ impl ModelBound for SoftmaxBohning {
         eta[self.data.labels[n]] - logsumexp(eta)
     }
 
+    // lint: zero-alloc
     fn log_lik_grad_acc(
         &self,
         theta: &[f64],
@@ -198,6 +200,7 @@ impl ModelBound for SoftmaxBohning {
         }
     }
 
+    // lint: zero-alloc
     fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
         let EvalScratch { rows, eta, .. } = scratch;
         let eta = &mut eta[..self.k];
@@ -207,6 +210,7 @@ impl ModelBound for SoftmaxBohning {
         (ll, lb)
     }
 
+    // lint: zero-alloc
     fn pseudo_grad_acc(
         &self,
         theta: &[f64],
@@ -234,6 +238,7 @@ impl ModelBound for SoftmaxBohning {
         }
     }
 
+    // lint: zero-alloc
     fn log_both_pseudo_grad(
         &self,
         theta: &[f64],
@@ -262,6 +267,7 @@ impl ModelBound for SoftmaxBohning {
         (ll, lb)
     }
 
+    // lint: zero-alloc
     fn log_bound_product(&self, theta: &[f64], scratch: &mut EvalScratch) -> f64 {
         let (k, d) = (self.k, self.data.d());
         // linear term + c0
@@ -283,6 +289,7 @@ impl ModelBound for SoftmaxBohning {
         acc - 0.25 * (quad_k - quad_v / k as f64)
     }
 
+    // lint: zero-alloc
     fn grad_log_bound_product_acc(
         &self,
         theta: &[f64],

@@ -90,6 +90,7 @@ impl Mala {
 }
 
 impl Sampler for Mala {
+    // lint: zero-alloc
     fn step(
         &mut self,
         target: &mut dyn Target,

@@ -45,6 +45,7 @@ impl RandomWalkMh {
 }
 
 impl Sampler for RandomWalkMh {
+    // lint: zero-alloc
     fn step(
         &mut self,
         target: &mut dyn Target,

@@ -46,6 +46,7 @@ impl SliceSampler {
     }
 
     /// One univariate slice update of coordinate `i`. Returns evals used.
+    // lint: zero-alloc
     fn slice_coord(
         &mut self,
         target: &mut dyn Target,
@@ -111,6 +112,7 @@ impl SliceSampler {
 }
 
 impl Sampler for SliceSampler {
+    // lint: zero-alloc
     fn step(
         &mut self,
         target: &mut dyn Target,

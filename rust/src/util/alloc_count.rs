@@ -55,21 +55,33 @@ impl Default for CountingAlloc {
 // SAFETY: delegates verbatim to `System`; the counters have no effect on
 // allocation behavior.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: the caller upholds `GlobalAlloc::alloc`'s contract (valid,
+    // non-zero-sized `layout`); we pass it unchanged to `System.alloc`, which
+    // has the same contract, and the counter bump touches no memory.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         self.allocs.fetch_add(1, Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: same contract delegation as `alloc`; `System.alloc_zeroed`
+    // receives the caller's `layout` unchanged.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         self.allocs.fetch_add(1, Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: the caller guarantees `ptr` was allocated by this allocator
+    // with `layout` and that `new_size` is non-zero; since every allocation
+    // path here delegates to `System`, `ptr` is a valid `System` allocation
+    // and may be handed to `System.realloc` under the same layout.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         self.allocs.fetch_add(1, Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: the caller guarantees `ptr` came from this allocator with
+    // `layout`; all our allocations come from `System`, so releasing through
+    // `System.dealloc` with the same layout is sound.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         self.deallocs.fetch_add(1, Relaxed);
         System.dealloc(ptr, layout)

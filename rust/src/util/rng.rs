@@ -85,7 +85,7 @@ impl Rng {
     pub fn below(&mut self, n: usize) -> usize {
         assert!(n > 0, "Rng::below(0): empty range");
         // Lemire's method without bias for our n << 2^64 use-cases.
-        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+        ((u128::from(self.next_u64()) * n as u128) >> 64) as usize
     }
 
     /// Uniform in [lo, hi).
@@ -196,12 +196,11 @@ impl Rng {
         for &s in &self.s {
             w.u64(s);
         }
-        match self.spare_normal {
-            Some(z) => {
-                w.bool(true);
-                w.f64(z);
-            }
-            None => w.bool(false),
+        // straight-line presence-flag encoding (mirrors `load_state` exactly,
+        // which the codec-symmetry lint checks at the source level)
+        w.bool(self.spare_normal.is_some());
+        if let Some(z) = self.spare_normal {
+            w.f64(z);
         }
     }
 
@@ -277,6 +276,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
     fn f64_in_unit_interval() {
         let mut r = Rng::new(3);
         for _ in 0..10_000 {
@@ -294,6 +294,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
     fn below_is_unbiased_enough() {
         let mut r = Rng::new(4);
         let mut counts = [0usize; 10];
@@ -306,9 +307,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
     fn normal_moments() {
         let mut r = Rng::new(5);
-        let n = 200_000;
+        let n = 200_000usize;
         let (mut s1, mut s2, mut s4) = (0.0, 0.0, 0.0);
         for _ in 0..n {
             let z = r.normal();
@@ -323,10 +325,11 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
     fn gamma_moments() {
         let mut r = Rng::new(6);
         for &shape in &[0.5, 1.0, 2.5, 7.0] {
-            let n = 100_000;
+            let n = 100_000usize;
             let mut s1 = 0.0;
             let mut s2 = 0.0;
             for _ in 0..n {
@@ -343,9 +346,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
     fn student_t_symmetric_heavy_tail() {
         let mut r = Rng::new(7);
-        let n = 100_000;
+        let n = 100_000usize;
         let mut mean = 0.0;
         let mut beyond3 = 0usize;
         for _ in 0..n {
@@ -363,10 +367,11 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
     fn geometric_skip_mean() {
         let mut r = Rng::new(8);
         let p = 0.1;
-        let n = 50_000;
+        let n = 50_000usize;
         let total: usize = (0..n).map(|_| r.geometric_skip(p)).sum();
         let mean = total as f64 / n as f64;
         // E[skips] = (1-p)/p = 9

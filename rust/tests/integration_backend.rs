@@ -27,8 +27,7 @@ fn compare_backends(source: Arc<dyn XlaSource>, theta_scale: f64, seed: u64) {
     let theta: Vec<f64> = (0..dim).map(|_| rng.normal() * theta_scale).collect();
 
     let mut cpu = CpuBackend::new(source.clone().as_model_bound(), Counters::new());
-    let mut xla = XlaBackend::new(source.clone(), Counters::new(), "artifacts")
-        .expect("artifact lookup");
+    let mut xla = XlaBackend::new(source, Counters::new(), "artifacts").expect("artifact lookup");
 
     // batch sizes: tiny (padding-dominated), bucket-boundary, multi-chunk
     for &bs in &[1usize, 3, 255, 256, 257, 300] {

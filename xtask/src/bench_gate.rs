@@ -1,0 +1,411 @@
+//! `cargo xtask bench-gate` — perf-invariant gate over the bench JSON.
+//!
+//! Reads the `BENCH_*.json` files the smoke benches emit and enforces:
+//!
+//! 1. **allocs/iter == 0** for every FlyMC algorithm in `BENCH_hotpath.json`
+//!    — live immediately, no baseline needed (the steady state of the
+//!    sampler must never touch the allocator).
+//! 2. **queries/iter drift** — once `BENCH_baseline/BENCH_hotpath.json` is
+//!    committed without its `"pending"` flag, measured queries/iter must
+//!    match the baseline to 1e-6 relative (query counts are deterministic
+//!    given the seeds, so any drift is a behavior change, not noise).
+//! 3. **trace identity** — `BENCH_dataio.json` must report
+//!    `trace_identity_dense_vs_block: true`.
+//! 4. **checkpoint size drift** — with a non-pending checkpoint baseline,
+//!    `ckpt_bytes` must match exactly per scenario (the format is
+//!    deterministic; wall-clock fields are never gated).
+//!
+//! Baselines live in `BENCH_baseline/` (NOT the repo root, where the
+//! benches write their fresh measurements). A baseline with
+//! `"pending": true` is a bootstrap placeholder: the gate records what it
+//! would have compared and succeeds, and CI uploads the measured JSON as
+//! the proposed baseline to commit.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+use std::str::FromStr;
+
+/// Minimal JSON value — everything the bench files use.
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn str_val(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn arr(&self) -> &[Json] {
+        match self {
+            Json::Arr(items) => items,
+            _ => &[],
+        }
+    }
+
+    pub fn bool_val(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document (objects, arrays, strings, numbers, bools, null).
+pub fn parse(text: &str) -> Result<Json, String> {
+    let b = text.as_bytes();
+    let mut pos = 0;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing content at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_ascii_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        return Err("unexpected end of input".to_string());
+    };
+    match c {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_str(b, pos)?)),
+        b't' => lit(b, pos, "true", Json::Bool(true)),
+        b'f' => lit(b, pos, "false", Json::Bool(false)),
+        b'n' => lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, word: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {pos}", pos = *pos))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+    f64::from_str(s).map(Json::Num).map_err(|e| format!("bad number `{s}`: {e}"))
+}
+
+fn parse_str(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    *pos += 1; // opening quote
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                let esc = *b.get(*pos).ok_or("unterminated escape")?;
+                match esc {
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        // \uXXXX — the bench files never emit these, but
+                        // decode the BMP case rather than corrupting
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or("bad \\u escape")?;
+                        let code = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        *pos += 4;
+                    }
+                    other => out.push(char::from(other)),
+                }
+                *pos += 1;
+            }
+            other => {
+                out.push(char::from(other));
+                *pos += 1;
+            }
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    *pos += 1; // {
+    let mut pairs = Vec::new();
+    loop {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(pairs));
+            }
+            Some(b'"') => {
+                let key = parse_str(b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected `:` after key `{key}`"));
+                }
+                *pos += 1;
+                let value = parse_value(b, pos)?;
+                pairs.push((key, value));
+                skip_ws(b, pos);
+                if b.get(*pos) == Some(&b',') {
+                    *pos += 1;
+                }
+            }
+            _ => return Err("expected `\"` or `}` in object".to_string()),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    *pos += 1; // [
+    let mut items = Vec::new();
+    loop {
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b']') {
+            *pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if b.get(*pos) == Some(&b',') {
+            *pos += 1;
+        }
+    }
+}
+
+// ------------------------------------------------------------ the gates --
+
+fn load(dir: &Path, name: &str) -> Result<Option<Json>, String> {
+    let p = dir.join(name);
+    if !p.exists() {
+        return Ok(None);
+    }
+    let text = fs::read_to_string(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+    parse(&text).map(Some).map_err(|e| format!("{}: {e}", p.display()))
+}
+
+fn is_pending(j: &Json) -> bool {
+    j.get("pending").and_then(Json::bool_val).unwrap_or(false)
+}
+
+/// scenario+algorithm key -> queries_per_iter, for the hotpath schema.
+fn hotpath_queries(j: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for s in j.get("scenarios").map(Json::arr).unwrap_or(&[]) {
+        let task = s.get("task").and_then(Json::str_val).unwrap_or("?");
+        let sampler = s.get("sampler").and_then(Json::str_val).unwrap_or("?");
+        let n = s.get("n").and_then(Json::num).unwrap_or(0.0);
+        for a in s.get("algorithms").map(Json::arr).unwrap_or(&[]) {
+            let alg = a.get("algorithm").and_then(Json::str_val).unwrap_or("?");
+            if let Some(q) = a.get("queries_per_iter").and_then(Json::num) {
+                out.push((format!("{task}/{sampler}/n={n}/{alg}"), q));
+            }
+        }
+    }
+    out
+}
+
+/// Run the gate. `args`: `--baseline DIR` (default BENCH_baseline),
+/// `--measured DIR` (default `.` — where the benches write).
+pub fn run(args: &[String]) -> Result<(), String> {
+    let mut baseline_dir = "BENCH_baseline".to_string();
+    let mut measured_dir = ".".to_string();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--baseline" => {
+                baseline_dir = it.next().ok_or("--baseline needs a value")?.clone();
+            }
+            "--measured" => {
+                measured_dir = it.next().ok_or("--measured needs a value")?.clone();
+            }
+            other => return Err(format!("unknown bench-gate flag `{other}`")),
+        }
+    }
+    let bdir = Path::new(&baseline_dir);
+    let mdir = Path::new(&measured_dir);
+    let mut failures: Vec<String> = Vec::new();
+    let mut notes = String::new();
+
+    // -- hotpath: zero-alloc gate (live) + queries drift (baseline-armed) --
+    let measured_hot = load(mdir, "BENCH_hotpath.json")?
+        .ok_or("BENCH_hotpath.json not found — run the hotpath bench first")?;
+    for s in measured_hot.get("scenarios").map(Json::arr).unwrap_or(&[]) {
+        let task = s.get("task").and_then(Json::str_val).unwrap_or("?");
+        for a in s.get("algorithms").map(Json::arr).unwrap_or(&[]) {
+            let alg = a.get("algorithm").and_then(Json::str_val).unwrap_or("?");
+            let allocs = a.get("allocs_per_iter").and_then(Json::num).unwrap_or(0.0);
+            if alg.contains("FlyMC") && allocs != 0.0 {
+                failures.push(format!(
+                    "hotpath {task}/{alg}: allocs_per_iter = {allocs} (must be 0 — the \
+                     FlyMC steady state is allocation-free)"
+                ));
+            }
+        }
+    }
+    match load(bdir, "BENCH_hotpath.json")? {
+        Some(base) if !is_pending(&base) => {
+            let same_mode = measured_hot.get("smoke").and_then(Json::bool_val)
+                == base.get("smoke").and_then(Json::bool_val);
+            if same_mode {
+                let baseline = hotpath_queries(&base);
+                for (key, q) in hotpath_queries(&measured_hot) {
+                    match baseline.iter().find(|(k, _)| *k == key) {
+                        Some((_, qb)) => {
+                            let tol = 1e-6 * qb.abs().max(1.0);
+                            if (q - qb).abs() > tol {
+                                failures.push(format!(
+                                    "hotpath {key}: queries_per_iter {q} drifted from \
+                                     committed baseline {qb} (tolerance {tol:.1e})"
+                                ));
+                            }
+                        }
+                        None => {
+                            let _ = writeln!(notes, "note: {key} has no baseline entry");
+                        }
+                    }
+                }
+            } else {
+                let _ = writeln!(
+                    notes,
+                    "note: smoke flag differs between measurement and baseline — \
+                     queries drift not compared"
+                );
+            }
+        }
+        Some(_) => {
+            let _ = writeln!(
+                notes,
+                "note: hotpath baseline is pending — commit the measured \
+                 BENCH_hotpath.json into BENCH_baseline/ to arm the drift gate"
+            );
+        }
+        None => {
+            let _ = writeln!(notes, "note: no hotpath baseline committed");
+        }
+    }
+
+    // -- dataio: the dense-vs-block trace identity must hold --------------
+    if let Some(m) = load(mdir, "BENCH_dataio.json")? {
+        match m.get("trace_identity_dense_vs_block").and_then(Json::bool_val) {
+            Some(true) => {}
+            other => failures.push(format!(
+                "dataio: trace_identity_dense_vs_block = {other:?} (must be true — \
+                 block-cached reads may never change a chain)"
+            )),
+        }
+    }
+
+    // -- checkpoint: deterministic byte-size drift ------------------------
+    if let (Some(m), Some(base)) =
+        (load(mdir, "BENCH_checkpoint.json")?, load(bdir, "BENCH_checkpoint.json")?)
+    {
+        if is_pending(&base) {
+            let _ = writeln!(notes, "note: checkpoint baseline is pending");
+        } else {
+            for s in m.get("scenarios").map(Json::arr).unwrap_or(&[]) {
+                let task = s.get("task").and_then(Json::str_val).unwrap_or("?");
+                let bytes = s.get("ckpt_bytes").and_then(Json::num);
+                let base_bytes = base
+                    .get("scenarios")
+                    .map(Json::arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .find(|bs| bs.get("task").and_then(Json::str_val) == Some(task))
+                    .and_then(|bs| bs.get("ckpt_bytes").and_then(Json::num));
+                if let (Some(got), Some(want)) = (bytes, base_bytes) {
+                    if got != want {
+                        failures.push(format!(
+                            "checkpoint {task}: ckpt_bytes {got} != committed {want} — \
+                             the .fckpt layout changed; re-baseline deliberately"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    print!("{notes}");
+    if failures.is_empty() {
+        println!("bench-gate: all perf invariants hold");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("bench-gate violation: {f}");
+        }
+        Err(format!("{} bench-gate violation(s)", failures.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_hotpath_shape() {
+        let text = r#"{
+  "bench": "hotpath", "smoke": true,
+  "scenarios": [
+    {"task": "logistic", "sampler": "rwmh", "n": 4000,
+     "algorithms": [
+      {"algorithm": "MAP-tuned FlyMC", "wallclock_per_iter_secs": 5.1e-5,
+       "queries_per_iter": 812.250, "allocs_per_iter": 0.000, "avg_bright": 401.20},
+      {"algorithm": "Regular MCMC", "wallclock_per_iter_secs": 1.0e-4,
+       "queries_per_iter": 4000.0, "allocs_per_iter": 0.000, "avg_bright": null}
+     ]}
+  ]
+}"#;
+        let j = parse(text).unwrap();
+        let q = hotpath_queries(&j);
+        assert_eq!(q.len(), 2);
+        assert!(q[0].0.contains("MAP-tuned FlyMC"));
+        assert!((q[0].1 - 812.25).abs() < 1e-9);
+        assert!(!is_pending(&j));
+        assert!(is_pending(&parse(r#"{"pending": true}"#).unwrap()));
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        assert!(parse("{").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("[1, 2] trailing").is_err());
+        assert!(parse("{\"n\": 1e}").is_err());
+    }
+}

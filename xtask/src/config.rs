@@ -1,0 +1,89 @@
+//! `lint.toml` allowlist parsing — a deliberate TOML subset.
+//!
+//! The allowlist is a flat sequence of `[[allow]]` tables with three string
+//! keys (`lint`, `path`, `reason`), which is all the expressiveness the lint
+//! pass wants: every suppression names exactly one lint at exactly one file,
+//! with a written justification. Anything outside that subset is a hard
+//! parse error, so the file cannot quietly grow structure the tool ignores.
+
+/// One `[[allow]]` entry: suppress `lint` diagnostics in `path`.
+pub struct Allow {
+    pub lint: String,
+    pub path: String,
+    pub reason: String,
+}
+
+/// Parse the `lint.toml` subset. Returns entries in file order.
+pub fn parse(text: &str) -> Result<Vec<Allow>, String> {
+    let mut out: Vec<Allow> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let lineno = idx + 1;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            out.push(Allow { lint: String::new(), path: String::new(), reason: String::new() });
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("lint.toml:{lineno}: expected `[[allow]]` or `key = \"value\"`"));
+        };
+        let key = key.trim();
+        let value = value.trim();
+        let Some(value) = value.strip_prefix('"').and_then(|v| v.strip_suffix('"')) else {
+            return Err(format!("lint.toml:{lineno}: value for `{key}` must be a quoted string"));
+        };
+        let Some(entry) = out.last_mut() else {
+            return Err(format!("lint.toml:{lineno}: `{key}` appears before any [[allow]] table"));
+        };
+        match key {
+            "lint" => entry.lint = value.to_string(),
+            "path" => entry.path = value.to_string(),
+            "reason" => entry.reason = value.to_string(),
+            other => {
+                return Err(format!(
+                    "lint.toml:{lineno}: unknown key `{other}` (expected lint/path/reason)"
+                ));
+            }
+        }
+    }
+    for (i, e) in out.iter().enumerate() {
+        if e.lint.is_empty() || e.path.is_empty() || e.reason.is_empty() {
+            return Err(format!(
+                "lint.toml: [[allow]] entry {} must set lint, path, and reason",
+                i + 1
+            ));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_documented_shape() {
+        let text = "# comment\n[[allow]]\nlint = \"nondeterministic-order\"\n\
+                    path = \"rust/src/runtime/xla_backend.rs\"\nreason = \"cache\"\n";
+        let allows = parse(text).unwrap();
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].lint, "nondeterministic-order");
+        assert_eq!(allows[0].path, "rust/src/runtime/xla_backend.rs");
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_incomplete_entries() {
+        assert!(parse("[[allow]]\nwat = \"x\"\n").is_err());
+        assert!(parse("[[allow]]\nlint = \"raw-entropy\"\n").is_err());
+        assert!(parse("lint = \"orphan\"\n").is_err());
+        assert!(parse("[[allow]]\nlint = unquoted\n").is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only_files_parse() {
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("# nothing here\n\n").unwrap().is_empty());
+    }
+}

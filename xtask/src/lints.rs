@@ -1,0 +1,691 @@
+//! The six invariant lints (see DESIGN.md §Static-analysis).
+//!
+//! Each lint guards an invariant the runtime tests already encode, at the
+//! source level, so a regression is caught with a file:line pointer before
+//! anything is compiled or run:
+//!
+//! * `nondeterministic-order` — iteration-order-dependent containers in
+//!   determinism-critical modules.
+//! * `hot-path-alloc` — allocating idioms inside `// lint: zero-alloc` fns.
+//! * `raw-entropy` — wall clocks / ambient randomness outside `util::Rng`.
+//! * `unsafe-safety-comment` — every `unsafe` carries a `// SAFETY:` note.
+//! * `codec-symmetry` — `save_state`/`load_state` pairs write and read the
+//!   same field sequence.
+//! * `float-reduce-order` — unordered parallel float reductions.
+
+use crate::scan::{line_of, FileView};
+
+/// One lint violation at a source line.
+pub struct Diag {
+    pub lint: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Run every lint over one file view.
+pub fn run_all(view: &FileView) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    nondeterministic_order(view, &mut diags);
+    hot_path_alloc(view, &mut diags);
+    raw_entropy(view, &mut diags);
+    unsafe_safety_comment(view, &mut diags);
+    codec_symmetry(view, &mut diags);
+    float_reduce_order(view, &mut diags);
+    diags.sort_by(|a, b| (a.line, a.lint).cmp(&(b.line, b.lint)));
+    diags
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Byte offsets of word-bounded occurrences of `word` in `hay`.
+fn find_word(hay: &str, word: &str) -> Vec<usize> {
+    let h = hay.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(word) {
+        let at = from + rel;
+        let before_ok = at == 0 || !is_ident_byte(h[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= h.len() || !is_ident_byte(h[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+// ---------------------------------------------------------------- lint 1 --
+
+/// Modules where iteration order feeds observable output, so HashMap /
+/// HashSet (randomized iteration since they hash-seed per process) are
+/// banned in favor of BTreeMap / sorted vectors.
+const DET_MODULES: &[&str] =
+    &["flymc", "engine", "samplers", "diagnostics", "data", "linalg", "runtime"];
+
+fn nondeterministic_order(view: &FileView, diags: &mut Vec<Diag>) {
+    let in_det_module = DET_MODULES.iter().any(|m| {
+        view.path.starts_with(&format!("rust/src/{m}/"))
+            || view.path == format!("rust/src/{m}.rs")
+    });
+    if !in_det_module {
+        return;
+    }
+    for (i, line) in view.code.iter().enumerate() {
+        for container in ["HashMap", "HashSet"] {
+            if !find_word(line, container).is_empty() {
+                diags.push(Diag {
+                    lint: "nondeterministic-order",
+                    path: view.path.clone(),
+                    line: i + 1,
+                    msg: format!(
+                        "{container} in determinism-critical module — iteration order is \
+                         per-process-random; use BTreeMap/BTreeSet or a sorted Vec \
+                         (allowlist in lint.toml if order provably never escapes)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- lint 2 --
+
+/// Allocating idioms forbidden inside `// lint: zero-alloc` functions.
+/// (`.push`/`.extend`/`.resize` into pre-reserved buffers stay legal — the
+/// counting-allocator tests police actual allocator traffic; this lint
+/// catches the idioms that always allocate.)
+const ALLOC_IDIOMS: &[&str] = &[
+    "vec!",
+    "Vec::new",
+    "Vec::with_capacity",
+    ".to_vec()",
+    ".clone()",
+    ".collect()",
+    ".collect::<",
+    "format!",
+    "Box::new",
+    "String::",
+    ".to_owned()",
+    ".to_string()",
+];
+
+fn hot_path_alloc(view: &FileView, diags: &mut Vec<Diag>) {
+    let (flat, starts) = view.flat_code();
+    for (i, comment) in view.comments.iter().enumerate() {
+        if !comment.contains("lint: zero-alloc") {
+            continue;
+        }
+        let marker_line = i + 1;
+        let search_from = starts[i];
+        let Some(body) = next_fn_body(&flat, search_from) else {
+            diags.push(Diag {
+                lint: "hot-path-alloc",
+                path: view.path.clone(),
+                line: marker_line,
+                msg: "dangling `// lint: zero-alloc` marker: no fn with a body follows"
+                    .to_string(),
+            });
+            continue;
+        };
+        let text = &flat[body.0..body.1];
+        for idiom in ALLOC_IDIOMS {
+            let mut from = 0;
+            while let Some(rel) = text[from..].find(idiom) {
+                let at = body.0 + from + rel;
+                // word-bound the leading edge of identifier-like idioms
+                let lead = text.as_bytes()[from + rel];
+                let bounded = !is_ident_byte(lead)
+                    || at == 0
+                    || !is_ident_byte(flat.as_bytes()[at - 1]);
+                if bounded {
+                    diags.push(Diag {
+                        lint: "hot-path-alloc",
+                        path: view.path.clone(),
+                        line: line_of(&starts, at),
+                        msg: format!(
+                            "`{idiom}` inside a `// lint: zero-alloc` function (marker at \
+                             line {marker_line}) — hoist the allocation to setup/scratch"
+                        ),
+                    });
+                }
+                from += rel + idiom.len();
+            }
+        }
+    }
+}
+
+/// From `from`, find the next `fn` keyword and return the byte range of its
+/// brace-delimited body (open brace .. close brace inclusive).
+fn next_fn_body(flat: &str, from: usize) -> Option<(usize, usize)> {
+    let fn_at = find_word(&flat[from..], "fn").first().map(|r| from + r)?;
+    let open = from_offset(flat, fn_at, b'{')?;
+    let close = matching_brace(flat, open)?;
+    Some((open, close + 1))
+}
+
+fn from_offset(flat: &str, from: usize, target: u8) -> Option<usize> {
+    flat.as_bytes()[from..].iter().position(|&c| c == target).map(|r| from + r)
+}
+
+/// Offset of the `}` matching the `{` at `open`.
+fn matching_brace(flat: &str, open: usize) -> Option<usize> {
+    let b = flat.as_bytes();
+    let mut depth = 0usize;
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        if c == b'{' {
+            depth += 1;
+        } else if c == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// Offset of the `)` matching the `(` at `open`.
+fn matching_paren(flat: &str, open: usize) -> Option<usize> {
+    let b = flat.as_bytes();
+    let mut depth = 0usize;
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        if c == b'(' {
+            depth += 1;
+        } else if c == b')' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------- lint 3 --
+
+/// Ambient-entropy / wall-clock constructs that break seeded
+/// reproducibility when they feed anything a chain observes.
+const ENTROPY_PATTERNS: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "thread_rng",
+    "rand::",
+    "getrandom",
+    "RandomState",
+    "from_entropy",
+];
+
+/// The only places wall-clock time is legitimate: the Timer abstraction
+/// itself and the measurement layers that consume it.
+const ENTROPY_ALLOWED: &[&str] =
+    &["rust/src/util/mod.rs", "rust/src/metrics/", "rust/src/bench_harness/"];
+
+fn raw_entropy(view: &FileView, diags: &mut Vec<Diag>) {
+    if ENTROPY_ALLOWED.iter().any(|p| view.path.starts_with(p)) {
+        return;
+    }
+    for (i, line) in view.code.iter().enumerate() {
+        for pat in ENTROPY_PATTERNS {
+            if line.contains(pat) {
+                diags.push(Diag {
+                    lint: "raw-entropy",
+                    path: view.path.clone(),
+                    line: i + 1,
+                    msg: format!(
+                        "`{pat}` outside the timing/metrics layers — all randomness must \
+                         flow through the seeded util::Rng, all timing through util::Timer"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- lint 4 --
+
+fn unsafe_safety_comment(view: &FileView, diags: &mut Vec<Diag>) {
+    for (i, line) in view.code.iter().enumerate() {
+        if find_word(line, "unsafe").is_empty() {
+            continue;
+        }
+        if has_safety_comment(view, i) {
+            continue;
+        }
+        diags.push(Diag {
+            lint: "unsafe-safety-comment",
+            path: view.path.clone(),
+            line: i + 1,
+            msg: "`unsafe` without a `// SAFETY:` comment on it or the contiguous \
+                  comment block above"
+                .to_string(),
+        });
+    }
+}
+
+fn has_safety_comment(view: &FileView, line_idx: usize) -> bool {
+    if view.comments[line_idx].contains("SAFETY:") {
+        return true;
+    }
+    // walk the contiguous comment/attribute block directly above
+    let mut i = line_idx;
+    while i > 0 {
+        i -= 1;
+        let code = view.code[i].trim();
+        let comment = view.comments[i].trim();
+        let is_attr = code.starts_with("#[") || code.starts_with("#![");
+        let is_comment_only = code.is_empty() && !comment.is_empty();
+        if !is_attr && !is_comment_only {
+            return false;
+        }
+        if comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------- lint 5 --
+
+const WRITER_NAMES: &[&str] = &["save_state", "snapshot"];
+const READER_NAMES: &[&str] = &["load_state", "restore"];
+const NEST_NAMES: &[&str] = &["save_state", "snapshot", "load_state", "restore"];
+
+/// Writer-side codec methods, i.e. the canonical sequence vocabulary.
+const WRITER_METHODS: &[&str] =
+    &["u8", "bool", "u32", "u64", "usize", "f64", "f64_slice", "u32_slice", "u64_slice", "bytes"];
+
+/// Reader method -> canonical writer-side kind.
+fn normalize_read(method: &str) -> Option<&'static str> {
+    match method {
+        "u8" => Some("u8"),
+        "bool" => Some("bool"),
+        "u32" => Some("u32"),
+        "u64" => Some("u64"),
+        "usize" => Some("usize"),
+        "f64" => Some("f64"),
+        "f64_slice_into" | "f64_vec" => Some("f64_slice"),
+        "u32_slice_into" | "u32_vec" => Some("u32_slice"),
+        "u64_slice_into" | "u64_vec" => Some("u64_slice"),
+        "bytes" => Some("bytes"),
+        _ => None,
+    }
+}
+
+struct CodecFn {
+    writer: bool,
+    name: String,
+    line: usize,
+    seq: Result<Vec<String>, (usize, String)>,
+}
+
+fn codec_symmetry(view: &FileView, diags: &mut Vec<Diag>) {
+    let (flat, starts) = view.flat_code();
+    let mut fns: Vec<CodecFn> = Vec::new();
+    for fn_at in find_word(&flat, "fn") {
+        let Some(f) = parse_codec_fn(&flat, &starts, fn_at) else {
+            continue;
+        };
+        fns.push(f);
+    }
+    // pair each writer with the next reader that follows it
+    let mut pending: Option<CodecFn> = None;
+    for f in fns {
+        // a sequence-extraction failure is itself a violation
+        if let Err((at, msg)) = &f.seq {
+            diags.push(Diag {
+                lint: "codec-symmetry",
+                path: view.path.clone(),
+                line: line_of(&starts, *at),
+                msg: format!("in `{}`: {msg}", f.name),
+            });
+            continue;
+        }
+        if f.writer {
+            pending = Some(f);
+        } else if let Some(w) = pending.take() {
+            let wseq = w.seq.as_ref().unwrap();
+            let rseq = f.seq.as_ref().unwrap();
+            if wseq != rseq {
+                diags.push(Diag {
+                    lint: "codec-symmetry",
+                    path: view.path.clone(),
+                    line: f.line,
+                    msg: format!(
+                        "`{}` (line {}) writes [{}] but `{}` reads [{}] — the checkpoint \
+                         byte layout has drifted",
+                        w.name,
+                        w.line,
+                        wseq.join(", "),
+                        f.name,
+                        rseq.join(", "),
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Parse the fn whose `fn` keyword starts at `fn_at`; return a CodecFn if
+/// it is a named save/load (or snapshot/restore) taking a ByteWriter /
+/// ByteReader and having a body.
+fn parse_codec_fn(flat: &str, starts: &[usize], fn_at: usize) -> Option<CodecFn> {
+    let b = flat.as_bytes();
+    let mut i = fn_at + 2;
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    let name_start = i;
+    while i < b.len() && is_ident_byte(b[i]) {
+        i += 1;
+    }
+    let name = &flat[name_start..i];
+    let writer = WRITER_NAMES.contains(&name);
+    let reader = READER_NAMES.contains(&name);
+    if !writer && !reader {
+        return None;
+    }
+    let open_paren = from_offset(flat, i, b'(')?;
+    let close_paren = matching_paren(flat, open_paren)?;
+    let params = &flat[open_paren + 1..close_paren];
+    let marker = if writer { "ByteWriter" } else { "ByteReader" };
+    if !params.contains(marker) {
+        return None;
+    }
+    let param = param_name(params, marker)?;
+    // body: first `{` or `;` at paren depth 0 after the params
+    let mut j = close_paren + 1;
+    let mut depth = 0usize;
+    let open_brace = loop {
+        if j >= b.len() {
+            return None;
+        }
+        match b[j] {
+            b'(' => depth += 1,
+            b')' => depth = depth.saturating_sub(1),
+            b'{' if depth == 0 => break j,
+            b';' if depth == 0 => return None, // trait declaration, no body
+            _ => {}
+        }
+        j += 1;
+    };
+    let close_brace = matching_brace(flat, open_brace)?;
+    let mut seq = Vec::new();
+    let seq = match extract_seq(flat, open_brace + 1, close_brace, &param, writer, &mut seq) {
+        Ok(()) => Ok(seq),
+        Err(e) => Err(e),
+    };
+    Some(CodecFn { writer, name: name.to_string(), line: line_of(starts, fn_at), seq })
+}
+
+/// The identifier of the parameter whose type mentions `marker`.
+fn param_name(params: &str, marker: &str) -> Option<String> {
+    let mut depth = 0usize;
+    let mut start = 0;
+    let mut pieces = Vec::new();
+    let b = params.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'(' | b'[' | b'<' => depth += 1,
+            b')' | b']' | b'>' => depth = depth.saturating_sub(1),
+            b',' if depth == 0 => {
+                pieces.push(&params[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    pieces.push(&params[start..]);
+    let piece = pieces.into_iter().find(|p| p.contains(marker))?;
+    let name = piece.split(':').next()?.trim();
+    let name = name.strip_prefix("mut ").unwrap_or(name).trim();
+    Some(name.to_string())
+}
+
+/// Append the codec-call kind sequence of `flat[from..to]` to `out`.
+///
+/// `match` blocks are handled structurally: each arm is extracted
+/// separately, empty arms are ignored, and all non-empty arms must agree
+/// (their common sequence is appended once) — branch-divergent arms are a
+/// violation in their own right. `if`/`else` is treated linearly, which is
+/// exactly right for the presence-flag idiom (`w.bool(flag); if flag {
+/// w.f64(x) }`).
+fn extract_seq(
+    flat: &str,
+    from: usize,
+    to: usize,
+    param: &str,
+    writer: bool,
+    out: &mut Vec<String>,
+) -> Result<(), (usize, String)> {
+    let b = flat.as_bytes();
+    let mut i = from;
+    while i < to {
+        let c = b[i];
+        if !is_ident_byte(c) {
+            i += 1;
+            continue;
+        }
+        if i > 0 && is_ident_byte(b[i - 1]) {
+            i += 1;
+            continue;
+        }
+        let word_start = i;
+        while i < to && is_ident_byte(b[i]) {
+            i += 1;
+        }
+        let word = &flat[word_start..i];
+        if word == "match" {
+            i = extract_match(flat, i, to, param, writer, out)?;
+        } else if word == param {
+            // param.method( ... )
+            let mut j = i;
+            while j < to && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j < to && b[j] == b'.' {
+                let m_start = j + 1;
+                let mut m = m_start;
+                while m < to && is_ident_byte(b[m]) {
+                    m += 1;
+                }
+                let method = &flat[m_start..m];
+                let mut k = m;
+                while k < to && b[k].is_ascii_whitespace() {
+                    k += 1;
+                }
+                if k < to && b[k] == b'(' {
+                    let known = if writer {
+                        WRITER_METHODS.contains(&method).then(|| method.to_string())
+                    } else {
+                        normalize_read(method).map(str::to_string)
+                    };
+                    if let Some(kind) = known {
+                        out.push(kind);
+                    }
+                    i = k + 1;
+                }
+            }
+        } else if NEST_NAMES.contains(&word) {
+            // some_field.save_state(w) / load_state(r)? -> opaque NEST
+            let mut j = i;
+            while j < to && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j < to && b[j] == b'(' {
+                if let Some(close) = matching_paren(flat, j) {
+                    if close <= to && !find_word(&flat[j + 1..close], param).is_empty() {
+                        out.push("NEST".to_string());
+                    }
+                }
+                i = j + 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Handle a `match` construct whose keyword just ended at `after_kw`;
+/// returns the offset just past the match block.
+fn extract_match(
+    flat: &str,
+    after_kw: usize,
+    to: usize,
+    param: &str,
+    writer: bool,
+    out: &mut Vec<String>,
+) -> Result<usize, (usize, String)> {
+    let b = flat.as_bytes();
+    // scrutinee: up to the `{` at paren depth 0
+    let mut i = after_kw;
+    let mut depth = 0usize;
+    let open = loop {
+        if i >= to {
+            // malformed; treat the rest linearly
+            extract_seq(flat, after_kw, to, param, writer, out)?;
+            return Ok(to);
+        }
+        match b[i] {
+            b'(' | b'[' => depth += 1,
+            b')' | b']' => depth = depth.saturating_sub(1),
+            b'{' if depth == 0 => break i,
+            _ => {}
+        }
+        i += 1;
+    };
+    extract_seq(flat, after_kw, open, param, writer, out)?;
+    let close = match matching_brace(flat, open) {
+        Some(c) if c <= to => c,
+        _ => return Err((after_kw, "unbalanced match block".to_string())),
+    };
+
+    // split arms at `=>` boundaries at depth 0 inside the block
+    let mut arm_seqs: Vec<Vec<String>> = Vec::new();
+    let mut i = open + 1;
+    let mut depth = 0usize;
+    while i < close {
+        match b[i] {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth = depth.saturating_sub(1),
+            b'=' if depth == 0 && i + 1 < close && b[i + 1] == b'>' => {
+                // arm body: braced block, or expression up to `,` at depth 0
+                let mut j = i + 2;
+                while j < close && b[j].is_ascii_whitespace() {
+                    j += 1;
+                }
+                let (body_from, body_to, resume) = if j < close && b[j] == b'{' {
+                    let bc = match matching_brace(flat, j) {
+                        Some(c) if c <= close => c,
+                        _ => return Err((j, "unbalanced match arm".to_string())),
+                    };
+                    (j + 1, bc, bc + 1)
+                } else {
+                    let mut k = j;
+                    let mut d = 0usize;
+                    while k < close {
+                        match b[k] {
+                            b'(' | b'[' | b'{' => d += 1,
+                            b')' | b']' | b'}' => d = d.saturating_sub(1),
+                            b',' if d == 0 => break,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    (j, k, k)
+                };
+                let mut arm = Vec::new();
+                extract_seq(flat, body_from, body_to, param, writer, &mut arm)?;
+                arm_seqs.push(arm);
+                i = resume;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    let nonempty: Vec<&Vec<String>> = arm_seqs.iter().filter(|a| !a.is_empty()).collect();
+    if let Some(first) = nonempty.first() {
+        if nonempty.iter().any(|a| a != first) {
+            return Err((
+                open,
+                "match arms produce divergent codec sequences — every data-carrying arm \
+                 must write/read the same field layout"
+                    .to_string(),
+            ));
+        }
+        out.extend(first.iter().cloned());
+    }
+    Ok(close + 1)
+}
+
+// ---------------------------------------------------------------- lint 6 --
+
+const PAR_ADAPTERS: &[&str] = &[
+    "par_iter",
+    "par_iter_mut",
+    "into_par_iter",
+    "par_chunks",
+    "par_chunks_mut",
+    "par_chunks_exact",
+    "par_bridge",
+    "par_windows",
+];
+
+const UNORDERED_REDUCERS: &[&str] = &["sum", "product", "reduce", "fold"];
+
+fn float_reduce_order(view: &FileView, diags: &mut Vec<Diag>) {
+    let (flat, starts) = view.flat_code();
+    let b = flat.as_bytes();
+    let mut depth = 0usize;
+    let mut armed: Option<usize> = None; // brace depth where a par adapter appeared
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                if armed.is_some_and(|d| depth < d) {
+                    armed = None;
+                }
+            }
+            b';' => {
+                if armed.is_some_and(|d| depth <= d) {
+                    armed = None;
+                }
+            }
+            c if is_ident_byte(c) && (i == 0 || !is_ident_byte(b[i - 1])) => {
+                let start = i;
+                while i < b.len() && is_ident_byte(b[i]) {
+                    i += 1;
+                }
+                let word = &flat[start..i];
+                if PAR_ADAPTERS.contains(&word) {
+                    armed = Some(depth);
+                } else if UNORDERED_REDUCERS.contains(&word)
+                    && start > 0
+                    && b[start - 1] == b'.'
+                    && armed == Some(depth)
+                {
+                    diags.push(Diag {
+                        lint: "float-reduce-order",
+                        path: view.path.clone(),
+                        line: line_of(&starts, start),
+                        msg: format!(
+                            "`.{word}()` on a parallel iterator — float reduction order is \
+                             nondeterministic under work stealing; reduce per shard and \
+                             combine in shard order (see ParBackend)"
+                        ),
+                    });
+                }
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}

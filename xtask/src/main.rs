@@ -1,0 +1,162 @@
+//! firefly-lint — the repo's invariant-enforcing static-analysis pass,
+//! plus the bench-JSON perf gate. Pure `std`, zero dependencies.
+//!
+//! Run through cargo (`cargo xtask lint`, `cargo xtask bench-gate`) or
+//! build it with nothing but rustc when no cargo exists at all:
+//!
+//! ```text
+//! rustc --edition 2021 -O xtask/src/main.rs -o firefly-lint
+//! ./firefly-lint lint --root /path/to/repo
+//! ```
+//!
+//! `lint` scans `rust/src`, `rust/tests`, and `benches/` and enforces the
+//! six lints in [`lints`] (documented in DESIGN.md §Static-analysis), with
+//! per-line diagnostics, `--format json` output, a `lint.toml` allowlist,
+//! and a non-zero exit on any violation. `bench-gate` checks the emitted
+//! `BENCH_*.json` against the committed baselines in `BENCH_baseline/`.
+
+mod bench_gate;
+mod config;
+mod lints;
+mod scan;
+
+use std::path::Path;
+use std::process::ExitCode;
+
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "benches"];
+
+const USAGE: &str = "usage:
+  xtask lint [--root DIR] [--format human|json]
+  xtask bench-gate [--baseline DIR] [--measured DIR]";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("lint") => lint_cmd(&args[1..]),
+        Some("bench-gate") => bench_gate::run(&args[1..]).map(|()| true),
+        _ => {
+            eprintln!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("xtask: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Run the lint pass. Ok(true) = clean, Ok(false) = violations found.
+fn lint_cmd(args: &[String]) -> Result<bool, String> {
+    let mut root = ".".to_string();
+    let mut json = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => root = it.next().ok_or("--root needs a value")?.clone(),
+            "--format" => match it.next().map(String::as_str) {
+                Some("human") => json = false,
+                Some("json") => json = true,
+                _ => return Err("--format must be `human` or `json`".to_string()),
+            },
+            other => return Err(format!("unknown lint flag `{other}`")),
+        }
+    }
+    let root = Path::new(&root);
+    if !root.join("rust/src").is_dir() {
+        return Err(format!(
+            "`{}` does not look like the repo root (no rust/src) — pass --root",
+            root.display()
+        ));
+    }
+
+    let allows = match std::fs::read_to_string(root.join("lint.toml")) {
+        Ok(text) => config::parse(&text)?,
+        Err(_) => Vec::new(), // no allowlist file: empty allowlist
+    };
+
+    let mut diags = Vec::new();
+    for dir in SCAN_DIRS {
+        for file in scan::rust_files(root, dir) {
+            let text = std::fs::read_to_string(&file)
+                .map_err(|e| format!("{}: {e}", file.display()))?;
+            let rel = file
+                .strip_prefix(root)
+                .unwrap_or(&file)
+                .to_string_lossy()
+                .replace('\\', "/");
+            diags.extend(lints::run_all(&scan::FileView::parse(rel, &text)));
+        }
+    }
+    diags.sort_by(|a, b| (&a.path, a.line, a.lint).cmp(&(&b.path, b.line, b.lint)));
+
+    let mut used = vec![false; allows.len()];
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for d in diags {
+        let hit = allows
+            .iter()
+            .position(|al| al.lint == d.lint && al.path == d.path);
+        if let Some(i) = hit {
+            used[i] = true;
+            suppressed += 1;
+        } else {
+            kept.push(d);
+        }
+    }
+    for (al, was_used) in allows.iter().zip(&used) {
+        if !was_used {
+            eprintln!(
+                "warning: unused lint.toml entry: {} at {} ({})",
+                al.lint, al.path, al.reason
+            );
+        }
+    }
+
+    if json {
+        print_json(&kept, suppressed);
+    } else {
+        for d in &kept {
+            println!("{}:{}: [{}] {}", d.path, d.line, d.lint, d.msg);
+        }
+        println!(
+            "firefly-lint: {} violation(s), {} suppressed by lint.toml",
+            kept.len(),
+            suppressed
+        );
+    }
+    Ok(kept.is_empty())
+}
+
+fn print_json(diags: &[lints::Diag], suppressed: usize) {
+    let mut out = String::from("{\n  \"violations\": [\n");
+    for (i, d) in diags.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"lint\": \"{}\", \"path\": \"{}\", \"line\": {}, \"message\": \"{}\"}}{}\n",
+            d.lint,
+            json_escape(&d.path),
+            d.line,
+            json_escape(&d.msg),
+            if i + 1 < diags.len() { "," } else { "" }
+        ));
+    }
+    out.push_str(&format!("  ],\n  \"suppressed\": {suppressed}\n}}\n"));
+    print!("{out}");
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            other => out.push(other),
+        }
+    }
+    out
+}

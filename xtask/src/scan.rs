@@ -1,0 +1,309 @@
+//! Source scanning: directory walking and the comment/string-stripped
+//! "code view" every lint runs over.
+//!
+//! The stripper is a small character-level state machine, not a parser: it
+//! tracks line comments, nested block comments, string / raw-string / char
+//! literals (distinguishing char literals from lifetimes by lookahead), and
+//! produces two line-aligned views of each file — `code` (literals and
+//! comments blanked out) and `comments` (only comment text kept). Every
+//! lint then works on plain substring/word searches over the right view,
+//! which is exactly the level of rigor the repo's invariants need and keeps
+//! the whole tool dependency-free.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One scanned source file with its original, code-only, and comment-only
+/// line-aligned views.
+pub struct FileView {
+    /// repo-relative path with forward slashes (stable diagnostics on CI)
+    pub path: String,
+    /// code view: comments and literal contents replaced by spaces
+    pub code: Vec<String>,
+    /// comment view: everything except comment text replaced by spaces
+    pub comments: Vec<String>,
+}
+
+impl FileView {
+    /// Build the views from raw source text.
+    pub fn parse(path: String, text: &str) -> FileView {
+        let (code, comments) = strip(text);
+        FileView {
+            path,
+            code: code.split('\n').map(str::to_string).collect(),
+            comments: comments.split('\n').map(str::to_string).collect(),
+        }
+    }
+
+    /// The code view flattened to one string (newline-joined), plus the
+    /// byte offset of each line start — lints that need cross-line
+    /// structure (brace matching, call sequences) work on this.
+    pub fn flat_code(&self) -> (String, Vec<usize>) {
+        let mut flat = String::new();
+        let mut starts = Vec::with_capacity(self.code.len());
+        for line in &self.code {
+            starts.push(flat.len());
+            flat.push_str(line);
+            flat.push('\n');
+        }
+        (flat, starts)
+    }
+}
+
+/// Map a byte offset in the flat code view back to a 1-based line number.
+pub fn line_of(starts: &[usize], offset: usize) -> usize {
+    match starts.binary_search(&offset) {
+        Ok(i) => i + 1,
+        Err(i) => i, // first start greater than offset -> previous line
+    }
+}
+
+#[derive(PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+/// Split source text into a code view and a comment view (same length,
+/// newlines preserved so both stay line-aligned with the original).
+fn strip(text: &str) -> (String, String) {
+    let b = text.as_bytes();
+    let mut code = String::with_capacity(text.len());
+    let mut comments = String::with_capacity(text.len());
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            code.push('\n');
+            comments.push('\n');
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    state = State::LineComment;
+                    code.push_str("  ");
+                    comments.push_str("//");
+                    i += 2;
+                } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    state = State::BlockComment(1);
+                    code.push_str("  ");
+                    comments.push_str("/*");
+                    i += 2;
+                } else if c == b'"' {
+                    state = State::Str;
+                    code.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                } else if (c == b'r' || c == b'b') && !prev_is_ident(b, i) {
+                    // raw string r"...", r#"..."#, br"..." — scan r/b prefix,
+                    // optional hashes, then a quote
+                    let mut j = i;
+                    if c == b'b' && j + 1 < b.len() && b[j + 1] == b'r' {
+                        j += 1;
+                    }
+                    if b[j] == b'r' {
+                        let mut k = j + 1;
+                        let mut hashes = 0u32;
+                        while k < b.len() && b[k] == b'#' {
+                            hashes += 1;
+                            k += 1;
+                        }
+                        if k < b.len() && b[k] == b'"' {
+                            for _ in i..=k {
+                                code.push(' ');
+                                comments.push(' ');
+                            }
+                            state = State::RawStr(hashes);
+                            i = k + 1;
+                            continue;
+                        }
+                    }
+                    code.push(char::from(c));
+                    comments.push(' ');
+                    i += 1;
+                } else if c == b'\'' && is_char_literal(b, i) {
+                    state = State::Char;
+                    code.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                } else {
+                    code.push(char::from(c));
+                    comments.push(' ');
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                code.push(' ');
+                comments.push(char::from(c));
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    code.push_str("  ");
+                    comments.push_str("*/");
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    code.push_str("  ");
+                    comments.push_str("/*");
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    code.push(' ');
+                    comments.push(char::from(c));
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == b'\\' && i + 1 < b.len() {
+                    // keep line alignment across escaped-newline continuations
+                    let esc = if b[i + 1] == b'\n' { " \n" } else { "  " };
+                    code.push_str(esc);
+                    comments.push_str(esc);
+                    i += 2;
+                } else {
+                    if c == b'"' {
+                        state = State::Code;
+                    }
+                    code.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == b'"' && closes_raw(b, i, hashes) {
+                    for _ in 0..=hashes {
+                        code.push(' ');
+                        comments.push(' ');
+                    }
+                    state = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    code.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                }
+            }
+            State::Char => {
+                if c == b'\\' && i + 1 < b.len() {
+                    code.push_str("  ");
+                    comments.push_str("  ");
+                    i += 2;
+                } else {
+                    if c == b'\'' {
+                        state = State::Code;
+                    }
+                    code.push(' ');
+                    comments.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comments)
+}
+
+fn prev_is_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+/// `'` starts a char literal (not a lifetime) when it is `'\...` or a
+/// single character followed by a closing `'`.
+fn is_char_literal(b: &[u8], i: usize) -> bool {
+    if i + 1 >= b.len() {
+        return false;
+    }
+    if b[i + 1] == b'\\' {
+        return true;
+    }
+    i + 2 < b.len() && b[i + 1] != b'\'' && b[i + 2] == b'\''
+}
+
+fn closes_raw(b: &[u8], i: usize, hashes: u32) -> bool {
+    let mut k = i + 1;
+    for _ in 0..hashes {
+        if k >= b.len() || b[k] != b'#' {
+            return false;
+        }
+        k += 1;
+    }
+    true
+}
+
+/// Recursively collect every `.rs` file under `dir`, sorted by path so
+/// diagnostics and JSON output are deterministic.
+pub fn rust_files(root: &Path, dir: &str) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    collect(&root.join(dir), &mut out);
+    out.sort();
+    out
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = "let x = \"Hash//Map\"; // HashMap here\nlet y = 'a';\n";
+        let v = FileView::parse("t.rs".into(), src);
+        assert!(!v.code[0].contains("HashMap"));
+        assert!(v.comments[0].contains("HashMap here"));
+        assert!(v.code[0].contains("let x ="));
+        assert!(!v.code[1].contains('a'));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn row<'a>(&'a self) -> &'a [f64] { &self.x }\n";
+        let v = FileView::parse("t.rs".into(), src);
+        assert!(v.code[0].contains("fn row<'a>"));
+        assert!(v.code[0].contains("&self.x"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "/* a /* b */ HashSet */ let s = r#\"Instant::now\"#;\n";
+        let v = FileView::parse("t.rs".into(), src);
+        assert!(!v.code[0].contains("HashSet"));
+        assert!(!v.code[0].contains("Instant"));
+        assert!(v.code[0].contains("let s ="));
+    }
+
+    #[test]
+    fn line_mapping_round_trips() {
+        let v = FileView::parse("t.rs".into(), "a\nbb\nccc\n");
+        let (flat, starts) = v.flat_code();
+        assert_eq!(line_of(&starts, flat.find("bb").unwrap()), 2);
+        assert_eq!(line_of(&starts, flat.find("ccc").unwrap()), 3);
+    }
+}

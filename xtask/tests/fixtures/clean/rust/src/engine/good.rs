@@ -1,0 +1,48 @@
+//! Fixture: a file every lint passes. Mentions of HashMap or Instant::now
+//! in comments or "string HashMap literals" must not trip anything.
+
+use std::collections::BTreeMap;
+
+pub struct State {
+    order: BTreeMap<u32, f64>,
+    buf: Vec<f64>,
+}
+
+impl State {
+    /// Setup-time construction may allocate freely.
+    pub fn new(n: usize) -> State {
+        State { order: BTreeMap::new(), buf: vec![0.0; n] }
+    }
+
+    // lint: zero-alloc
+    pub fn accumulate(&mut self, xs: &[f64]) -> f64 {
+        let mut total = 0.0;
+        for (i, &x) in xs.iter().enumerate() {
+            self.buf[i % self.buf.len()] += x;
+            total += x;
+        }
+        total
+    }
+
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        w.usize(self.buf.len());
+        w.f64_slice(&self.buf);
+        w.bool(self.order.is_empty());
+    }
+
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let _n = r.usize()?;
+        r.f64_slice_into(&mut self.buf)?;
+        let _empty = r.bool()?;
+        Ok(())
+    }
+
+    pub fn serial_reduce(&self) -> f64 {
+        self.buf.iter().sum()
+    }
+}
+
+// SAFETY: the pointer is derived from a live slice and never outlives it.
+pub unsafe fn first_elem(p: *const f64) -> f64 {
+    *p
+}

@@ -1,0 +1,18 @@
+pub struct Drift {
+    a: u64,
+    xs: Vec<f64>,
+}
+
+impl Drift {
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        w.u64(self.a);
+        w.f64_slice(&self.xs);
+    }
+
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        // field order swapped relative to save_state: layout drift
+        r.f64_slice_into(&mut self.xs)?;
+        self.a = r.u64()?;
+        Ok(())
+    }
+}

@@ -1,0 +1,25 @@
+pub enum Kind {
+    Small(u32),
+    Big(Vec<f64>),
+}
+
+impl Kind {
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        match self {
+            Kind::Small(v) => {
+                w.u8(0);
+                w.u32(*v);
+            }
+            Kind::Big(xs) => {
+                w.u8(1);
+                w.f64_slice(xs);
+            }
+        }
+    }
+
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        let _tag = r.u8()?;
+        let _v = r.u32()?;
+        Ok(())
+    }
+}

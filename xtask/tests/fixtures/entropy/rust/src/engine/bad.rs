@@ -1,0 +1,6 @@
+use std::time::Instant;
+
+pub fn seed_from_clock() -> u64 {
+    let t = Instant::now();
+    t.elapsed().as_nanos() as u64
+}

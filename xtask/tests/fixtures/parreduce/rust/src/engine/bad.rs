@@ -1,0 +1,12 @@
+use rayon::prelude::*;
+
+pub fn log_lik(lls: &[f64]) -> f64 {
+    lls.par_iter().map(|x| x.ln()).sum()
+}
+
+pub fn safe_sharded(lls: &[f64], out: &mut [f64]) {
+    lls.par_chunks(64).zip(out.par_chunks_mut(64)).for_each(|(xs, os)| {
+        let s: f64 = xs.iter().sum();
+        os[0] = s;
+    });
+}

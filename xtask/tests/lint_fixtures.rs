@@ -1,0 +1,153 @@
+//! Negative-fixture tests: spawn the real `xtask` binary over tiny source
+//! trees under `tests/fixtures/` and assert each lint fires (non-zero
+//! exit, named diagnostic) and that clean/allowlisted trees pass. The
+//! fixture `.rs` files are test data — cargo never compiles them.
+
+use std::process::Command;
+
+struct Outcome {
+    ok: bool,
+    code: Option<i32>,
+    stdout: String,
+    stderr: String,
+}
+
+fn run_xtask(args: &[&str]) -> Outcome {
+    let out = Command::new(env!("CARGO_BIN_EXE_xtask"))
+        .args(args)
+        .output()
+        .expect("spawn the xtask binary");
+    Outcome {
+        ok: out.status.success(),
+        code: out.status.code(),
+        stdout: String::from_utf8_lossy(&out.stdout).into_owned(),
+        stderr: String::from_utf8_lossy(&out.stderr).into_owned(),
+    }
+}
+
+fn fixture(case: &str) -> String {
+    format!("{}/tests/fixtures/{case}", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn lint_fixture(case: &str) -> Outcome {
+    run_xtask(&["lint", "--root", &fixture(case)])
+}
+
+#[test]
+fn clean_tree_passes() {
+    let out = lint_fixture("clean");
+    assert!(out.ok, "clean fixture must pass:\n{}{}", out.stdout, out.stderr);
+    assert!(out.stdout.contains("0 violation(s)"), "{}", out.stdout);
+}
+
+#[test]
+fn hashmap_in_det_module_fails() {
+    let out = lint_fixture("nondet");
+    assert!(!out.ok);
+    assert_eq!(out.code, Some(1));
+    assert!(out.stdout.contains("[nondeterministic-order]"), "{}", out.stdout);
+    assert!(out.stdout.contains("rust/src/engine/bad.rs"), "{}", out.stdout);
+}
+
+#[test]
+fn alloc_in_marked_fn_fails() {
+    let out = lint_fixture("hotalloc");
+    assert!(!out.ok);
+    assert!(out.stdout.contains("[hot-path-alloc]"), "{}", out.stdout);
+    // both the Vec::new and the .collect() must be reported
+    assert!(out.stdout.contains("Vec::new"), "{}", out.stdout);
+    assert!(out.stdout.contains(".collect()"), "{}", out.stdout);
+}
+
+#[test]
+fn wall_clock_outside_timer_fails() {
+    let out = lint_fixture("entropy");
+    assert!(!out.ok);
+    assert!(out.stdout.contains("[raw-entropy]"), "{}", out.stdout);
+    assert!(out.stdout.contains("Instant::now"), "{}", out.stdout);
+}
+
+#[test]
+fn unsafe_without_safety_comment_fails() {
+    let out = lint_fixture("unsafe_nocomment");
+    assert!(!out.ok);
+    assert!(out.stdout.contains("[unsafe-safety-comment]"), "{}", out.stdout);
+}
+
+#[test]
+fn codec_field_order_drift_fails() {
+    let out = lint_fixture("codec_drift");
+    assert!(!out.ok);
+    assert!(out.stdout.contains("[codec-symmetry]"), "{}", out.stdout);
+    assert!(out.stdout.contains("u64, f64_slice"), "{}", out.stdout);
+    assert!(out.stdout.contains("f64_slice, u64"), "{}", out.stdout);
+}
+
+#[test]
+fn divergent_match_arms_fail() {
+    let out = lint_fixture("codec_match_divergent");
+    assert!(!out.ok);
+    assert!(out.stdout.contains("[codec-symmetry]"), "{}", out.stdout);
+    assert!(out.stdout.contains("divergent"), "{}", out.stdout);
+}
+
+#[test]
+fn parallel_unordered_reduction_fails() {
+    let out = lint_fixture("parreduce");
+    assert!(!out.ok);
+    assert!(out.stdout.contains("[float-reduce-order]"), "{}", out.stdout);
+    // exactly one violation: the serial .sum() inside the sharded
+    // for_each closure must NOT be flagged
+    assert!(out.stdout.contains("1 violation(s)"), "{}", out.stdout);
+}
+
+#[test]
+fn allowlist_suppresses_with_reason() {
+    let out = lint_fixture("allowed");
+    assert!(out.ok, "allowlisted fixture must pass:\n{}{}", out.stdout, out.stderr);
+    assert!(out.stdout.contains("suppressed by lint.toml"), "{}", out.stdout);
+    // the entry is used, so no unused-entry warning
+    assert!(!out.stderr.contains("unused lint.toml entry"), "{}", out.stderr);
+}
+
+#[test]
+fn json_format_is_machine_readable() {
+    let out = run_xtask(&["lint", "--root", &fixture("nondet"), "--format", "json"]);
+    assert!(!out.ok);
+    assert!(out.stdout.contains("\"violations\""), "{}", out.stdout);
+    assert!(out.stdout.contains("\"lint\": \"nondeterministic-order\""), "{}", out.stdout);
+    assert!(out.stdout.contains("\"line\": "), "{}", out.stdout);
+}
+
+#[test]
+fn bad_root_and_bad_flags_exit_2() {
+    let out = run_xtask(&["lint", "--root", "/nonexistent-firefly-root"]);
+    assert_eq!(out.code, Some(2), "{}", out.stderr);
+    let out = run_xtask(&["lint", "--format", "yaml"]);
+    assert_eq!(out.code, Some(2), "{}", out.stderr);
+    let out = run_xtask(&["frobnicate"]);
+    assert_eq!(out.code, Some(2), "{}", out.stderr);
+}
+
+#[test]
+fn bench_gate_rejects_allocating_flymc() {
+    let dir = fixture("benchfail");
+    let out = run_xtask(&["bench-gate", "--measured", &dir, "--baseline", &dir]);
+    assert!(!out.ok);
+    assert!(out.stderr.contains("allocs_per_iter"), "{}", out.stderr);
+    assert!(out.stderr.contains("MAP-tuned FlyMC"), "{}", out.stderr);
+}
+
+#[test]
+fn lint_runs_clean_on_this_repository() {
+    // the real acceptance criterion: the tree this crate ships in passes
+    // its own lint pass with the committed lint.toml
+    let repo_root = format!("{}/..", env!("CARGO_MANIFEST_DIR"));
+    let out = run_xtask(&["lint", "--root", &repo_root]);
+    assert!(
+        out.ok,
+        "firefly-lint must run clean on the repo:\n{}{}",
+        out.stdout, out.stderr
+    );
+    assert!(!out.stderr.contains("unused lint.toml entry"), "{}", out.stderr);
+}
