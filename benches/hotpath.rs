@@ -12,6 +12,14 @@
 //!   must report 0 — the invariant the `integration_hotpath*` test
 //!   binaries enforce, now including the gradient path),
 //!
+//! plus two kernel-layer sections (DESIGN.md §Kernels):
+//!
+//! * per-kernel ns/datum for every SoA batch kernel on both lane paths
+//!   (scalar reference vs autovectorized fast path), and
+//! * `kernel_identity` — short probe chains for all three tasks re-run on
+//!   both paths with the θ-traces compared bit-for-bit; `cargo xtask
+//!   bench-gate` fails if the field is missing or false,
+//!
 //! and emits `BENCH_hotpath.json` so future PRs have a trajectory to beat.
 //!
 //!     cargo bench --bench hotpath                # full per-task sizes
@@ -30,6 +38,7 @@ use firefly::bench_harness::{fmt_time, Report};
 use firefly::cli::Args;
 use firefly::engine::experiment::{build_model, build_sampler};
 use firefly::flymc::{FullPosterior, PseudoPosterior};
+use firefly::kernels::{set_kernel_path, KernelPath};
 use firefly::metrics::Counters;
 use firefly::models::ModelBound;
 use firefly::prelude::*;
@@ -156,6 +165,148 @@ fn run_algo(scenario: &Scenario, algorithm: Algorithm, seed: u64, map_steps: usi
     }
 }
 
+const KERNEL_NAMES: [&str; 5] = [
+    "log_lik_batch",
+    "log_both_batch",
+    "pseudo_grad_batch",
+    "log_lik_grad_batch",
+    "log_bound_product_batch",
+];
+
+struct KernelRow {
+    model: &'static str,
+    kernel: &'static str,
+    scalar_ns: f64,
+    fast_ns: f64,
+}
+
+/// ns/datum for `reps` repetitions of an `n_items`-point batch.
+fn ns_per_datum<F: FnMut()>(reps: usize, n_items: usize, mut f: F) -> f64 {
+    let timer = Timer::start();
+    for _ in 0..reps {
+        f();
+    }
+    timer.elapsed_secs() * 1e9 / (reps as f64 * n_items as f64)
+}
+
+/// Time the five batch kernels for one model on both lane paths.
+fn time_batch_kernels(
+    task: Task,
+    model_label: &'static str,
+    n: usize,
+    seed: u64,
+    reps: usize,
+    rows: &mut Vec<KernelRow>,
+) {
+    let cfg = ExperimentConfig {
+        task,
+        algorithm: Algorithm::UntunedFlyMc,
+        n_data: Some(n),
+        record_every: 0,
+        map_steps: 0,
+        seed,
+        ..Default::default()
+    };
+    let (source, prior, _map, _tuning_queries) = build_model(&cfg).expect("build model");
+    let model: Arc<dyn ModelBound> = source.as_model_bound();
+    let mut scratch = model.new_scratch();
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let theta = prior.sample(model.dim(), &mut rng);
+    let idx: Vec<u32> = (0..n as u32).collect();
+    let (mut ll, mut lb) = (vec![0.0; n], vec![0.0; n]);
+    let mut grad = vec![0.0; model.dim()];
+    let start = rows.len();
+    for path in [KernelPath::Scalar, KernelPath::Fast] {
+        set_kernel_path(path);
+        let mut ns = [0.0f64; 5];
+        ns[0] = ns_per_datum(reps, n, || {
+            model.log_lik_batch(&theta, &idx, &mut ll, &mut scratch);
+        });
+        ns[1] = ns_per_datum(reps, n, || {
+            model.log_both_batch(&theta, &idx, &mut ll, &mut lb, &mut scratch);
+        });
+        ns[2] = ns_per_datum(reps, n, || {
+            grad.iter_mut().for_each(|g| *g = 0.0);
+            model.pseudo_grad_batch(&theta, &idx, &mut ll, &mut lb, &mut grad, &mut scratch);
+        });
+        ns[3] = ns_per_datum(reps, n, || {
+            grad.iter_mut().for_each(|g| *g = 0.0);
+            model.log_lik_grad_batch(&theta, &idx, &mut ll, &mut grad, &mut scratch);
+        });
+        ns[4] = ns_per_datum(reps, n, || {
+            std::hint::black_box(model.log_bound_product_batch(&theta, &idx, &mut scratch));
+        });
+        for (k, kernel) in KERNEL_NAMES.iter().enumerate() {
+            if path == KernelPath::Scalar {
+                rows.push(KernelRow {
+                    model: model_label,
+                    kernel,
+                    scalar_ns: ns[k],
+                    fast_ns: 0.0,
+                });
+            } else {
+                rows[start + k].fast_ns = ns[k];
+            }
+        }
+    }
+    set_kernel_path(KernelPath::Fast);
+}
+
+/// One short MAP-tuned FlyMC chain; returns the θ-trace as raw f64 bits
+/// (run under whatever kernel path is currently active).
+fn probe_trace(task: Task, n: usize, iters: usize, seed: u64) -> Vec<u64> {
+    let cfg = ExperimentConfig {
+        task,
+        algorithm: Algorithm::MapTunedFlyMc,
+        n_data: Some(n),
+        record_every: 0,
+        map_steps: 30,
+        seed,
+        ..Default::default()
+    };
+    let (source, prior, _map, _tuning_queries) = build_model(&cfg).expect("build model");
+    let model: Arc<dyn ModelBound> = source.as_model_bound();
+    let counters = Counters::new();
+    let eval = Box::new(CpuBackend::new(model.clone(), counters));
+    let mut rng = Rng::new(seed ^ 0x1217);
+    let theta0 = prior.sample(model.dim(), &mut rng);
+    let q_db = cfg.effective_q_db();
+    let mut sampler = build_sampler(task);
+    let mut pp = PseudoPosterior::new(model, prior, eval, theta0.clone());
+    pp.init_z(&mut rng);
+    let mut theta = theta0;
+    let mut bits = Vec::with_capacity(iters * theta.len());
+    for _ in 0..iters {
+        sampler.step(&mut pp, &mut theta, &mut rng);
+        pp.implicit_resample(q_db, &mut rng);
+        bits.extend(theta.iter().map(|v| v.to_bits()));
+    }
+    bits
+}
+
+/// Re-run a short probe chain for each task on the scalar and the fast
+/// kernel path and compare the θ-traces bit-for-bit. This is the field
+/// `cargo xtask bench-gate` refuses to pass without.
+fn kernel_identity_probe(seed: u64) -> bool {
+    let mut ok = true;
+    for (task, label) in [
+        (Task::LogisticMnist, "logistic"),
+        (Task::SoftmaxCifar, "softmax"),
+        (Task::RobustOpv, "robust"),
+    ] {
+        set_kernel_path(KernelPath::Scalar);
+        let scalar = probe_trace(task, 200, 40, seed);
+        set_kernel_path(KernelPath::Fast);
+        let fast = probe_trace(task, 200, 40, seed);
+        if scalar != fast {
+            ok = false;
+            println!("kernel identity FAILED: {label} scalar vs fast θ-traces diverge");
+        }
+    }
+    set_kernel_path(KernelPath::Fast);
+    ok
+}
+
 fn main() {
     let args = Args::from_env();
     let smoke = args.has("smoke");
@@ -265,7 +416,52 @@ fn main() {
             if si + 1 < scenarios.len() { "," } else { "" }
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+
+    // -- per-kernel ns/datum on both lane paths ---------------------------
+    let reps = if smoke { 5 } else { 50 };
+    let kernel_n = if smoke { 400 } else { 4000 };
+    let mut rows = Vec::new();
+    for (task, label) in [
+        (Task::LogisticMnist, "logistic"),
+        (Task::SoftmaxCifar, "softmax"),
+        (Task::RobustOpv, "robust"),
+    ] {
+        time_batch_kernels(task, label, kernel_n, seed, reps, &mut rows);
+    }
+    let mut kreport = Report::new(
+        &format!("SoA batch kernels, ns/datum (N={kernel_n}, {reps} reps)"),
+        &["model/kernel", "scalar", "fast", "fast/scalar"],
+    );
+    json.push_str("  \"kernels\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        kreport.row(&[
+            format!("{}/{}", r.model, r.kernel),
+            format!("{:.1}", r.scalar_ns),
+            format!("{:.1}", r.fast_ns),
+            format!("{:.2}", r.fast_ns / r.scalar_ns),
+        ]);
+        json.push_str(&format!(
+            "    {{\"model\": \"{}\", \"kernel\": \"{}\", \"scalar_ns_per_datum\": {:.2}, \
+             \"fast_ns_per_datum\": {:.2}}}{}\n",
+            r.model,
+            r.kernel,
+            r.scalar_ns,
+            r.fast_ns,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    kreport.print();
+
+    // -- scalar vs fast full-trace identity (bench-gate enforced) ---------
+    let identity = kernel_identity_probe(seed);
+    println!(
+        "kernel identity (scalar vs fast θ-traces, 3 tasks): {}",
+        if identity { "OK" } else { "FAILED" }
+    );
+    json.push_str(&format!("  \"kernel_identity\": {identity}\n"));
+    json.push_str("}\n");
     std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
     println!("wrote BENCH_hotpath.json");
 

@@ -22,6 +22,8 @@
 //! staging buffer plus an in-place little-endian decode into the slot.
 //! Dense reads ignore the cache entirely and return the resident row, so
 //! the `DenseStore` path is byte-for-byte the pre-refactor behaviour.
+//! [`DataStore::gather_tile`] layers the kernel layer's W-lane SoA gather
+//! on top of `row` — same reads, same order, same accounting.
 
 use std::fs::File;
 use std::io;
@@ -349,6 +351,31 @@ impl DataStore {
         }
     }
 
+    /// Gather up to [`W`](crate::kernels::W) rows into a column-major lane
+    /// tile: `tile[j * W + l] = x[idx[l]][j]`, with dead lanes
+    /// (`l >= idx.len()`) zero-filled so downstream reduction trees see
+    /// exact `+0.0` contributions. Rows are read through `cache` in lane
+    /// order — the same reads, in the same order, as `idx.len()` calls to
+    /// [`Self::row`], so block-cache hit/miss accounting is unchanged.
+    // lint: zero-alloc
+    pub fn gather_tile(&self, idx: &[u32], cache: &mut RowCache, tile: &mut [f64]) {
+        use crate::kernels::W;
+        let d = self.d();
+        debug_assert!(idx.len() <= W);
+        debug_assert_eq!(tile.len(), d * W);
+        for (l, &n) in idx.iter().enumerate() {
+            let row = self.row(n as usize, cache);
+            for (j, &v) in row.iter().enumerate() {
+                tile[j * W + l] = v;
+            }
+        }
+        for l in idx.len()..W {
+            for j in 0..d {
+                tile[j * W + l] = 0.0;
+            }
+        }
+    }
+
     /// Scalar element read (tests/tools; slow for block stores).
     pub fn get(&self, i: usize, j: usize) -> f64 {
         match self {
@@ -488,6 +515,35 @@ mod tests {
         let (hits, misses) = cache.take_stats();
         assert_eq!(misses, 1);
         assert_eq!(hits, 19);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn gather_tile_matches_rows_and_zero_pads() {
+        use crate::kernels::W;
+        let m = random_matrix(23, 5, 6);
+        let cfg = BlockCacheConfig { rows_per_block: 4, cached_rows: 8 };
+        let (bs, path) = block_store_over(&m, cfg);
+        for store in [DataStore::dense(m.clone()), DataStore::Block(bs)] {
+            let mut cache = store.new_cache();
+            let mut tile = vec![f64::NAN; 5 * W];
+            let idx = [3u32, 11, 22]; // remainder tile: 3 live lanes
+            store.gather_tile(&idx, &mut cache, &mut tile);
+            for (l, &n) in idx.iter().enumerate() {
+                for j in 0..5 {
+                    assert_eq!(
+                        tile[j * W + l].to_bits(),
+                        m[(n as usize, j)].to_bits(),
+                        "lane {l} feature {j}"
+                    );
+                }
+            }
+            for l in idx.len()..W {
+                for j in 0..5 {
+                    assert_eq!(tile[j * W + l].to_bits(), 0.0f64.to_bits());
+                }
+            }
+        }
         let _ = std::fs::remove_file(path);
     }
 

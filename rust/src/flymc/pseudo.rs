@@ -39,12 +39,14 @@
 //! (`rust/tests/integration_hotpath*.rs`, one binary per scenario because
 //! the counter is process-global) and tracked by `benches/hotpath.rs`.
 //!
-//! The eval/memo/resample sweeps are storage-agnostic: every per-datum
-//! feature read goes through the backend's
-//! [`crate::data::store::DataStore`] access (scratch-owned row caches), so
-//! the same zero-allocation guarantees — and byte-identical traces — hold
-//! whether the dataset is resident or block-cached out of core
-//! (DESIGN.md §Storage; the hotpath binaries measure both stores).
+//! The eval/memo/resample sweeps are storage-agnostic: every feature read
+//! goes through the backend's [`crate::data::store::DataStore`] access
+//! (scratch-owned row caches, gathered `W = 8` lanes at a time into the
+//! SoA kernel tiles — [`crate::kernels`], DESIGN.md §Kernels), so the same
+//! zero-allocation guarantees — and byte-identical traces — hold whether
+//! the dataset is resident or block-cached out of core, and whether the
+//! kernels run the scalar or the vector lane path (DESIGN.md §Storage;
+//! the hotpath binaries measure both stores).
 //!
 //! [`FullPosterior`] is the regular-MCMC baseline: log p(θ) + Σ_n log L_n
 //! evaluated over all N data at every query.

@@ -1,0 +1,172 @@
+//! Batched logistic-regression kernels (Jaakkola–Jordan bound).
+//!
+//! Tile-at-a-time versions of every [`crate::models::LogisticJJ`]
+//! evaluation: gather a `W`-lane feature tile, one [`LanePath::dot_lanes`]
+//! for the margins `s = t_n θᵀx_n`, shared scalar transcendentals per
+//! lane, and [`LanePath::acc_grad_tile`] for gradient folds. Values are
+//! bit-identical to the per-datum formulas (same canonical dot tree);
+//! gradients fold through [`super::tree8`].
+
+use super::{tree8, LanePath, W};
+use crate::models::logistic::{jj_coeffs, LogisticJJ};
+use crate::models::{bright_coeff, EvalScratch};
+use crate::util::math::{log_sigmoid, sigmoid};
+
+/// `ll[i] = log L_{idx[i]}(θ)` for the whole batch.
+// lint: zero-alloc
+pub fn log_lik_batch<P: LanePath>(
+    m: &LogisticJJ,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let d = theta.len();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            ll[base + l] = log_sigmoid(m.data.t[n as usize] * s[l]);
+        }
+        base += chunk.len();
+    }
+}
+
+/// `(ll[i], lb[i]) = (log L, clamped log B)` for the whole batch.
+// lint: zero-alloc
+pub fn log_both_batch<P: LanePath>(
+    m: &LogisticJJ,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let d = theta.len();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let sv = m.data.t[n] * s[l];
+            let llv = log_sigmoid(sv);
+            let (a, b, c) = jj_coeffs(m.xi[n]);
+            ll[base + l] = llv;
+            lb[base + l] = (a * sv * sv + b * sv + c).min(llv);
+        }
+        base += chunk.len();
+    }
+}
+
+/// Fused batch `log_both` + pseudo-likelihood gradient accumulation:
+/// fills `ll`/`lb` and folds each tile's bright-point coefficients into
+/// `grad` through the canonical reduction tree.
+// lint: zero-alloc
+pub fn pseudo_grad_batch<P: LanePath>(
+    m: &LogisticJJ,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let d = theta.len();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        let mut coeff = [0.0; W]; // dead lanes must contribute exact +0.0 products
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let sv = m.data.t[n] * s[l];
+            let llv = log_sigmoid(sv);
+            let (a, b, c) = jj_coeffs(m.xi[n]);
+            let lbv = (a * sv * sv + b * sv + c).min(llv);
+            let dll = sigmoid(-sv);
+            let dlb = 2.0 * a * sv + b;
+            coeff[l] = bright_coeff(dll, dlb, lbv - llv) * m.data.t[n];
+            ll[base + l] = llv;
+            lb[base + l] = lbv;
+        }
+        P::acc_grad_tile(&coeff, tile, grad);
+        base += chunk.len();
+    }
+}
+
+/// Fused batch `log_lik` + likelihood-gradient accumulation.
+// lint: zero-alloc
+pub fn log_lik_grad_batch<P: LanePath>(
+    m: &LogisticJJ,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let d = theta.len();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        let mut coeff = [0.0; W];
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let sv = m.data.t[n] * s[l];
+            ll[base + l] = log_sigmoid(sv);
+            coeff[l] = sigmoid(-sv) * m.data.t[n];
+        }
+        P::acc_grad_tile(&coeff, tile, grad);
+        base += chunk.len();
+    }
+}
+
+/// `Σ_i log B_{idx[i]}(θ)` (clamped bounds, as in `log_both`), each tile
+/// folded through [`tree8`] and tiles summed in batch order.
+// lint: zero-alloc
+pub fn log_bound_product_batch<P: LanePath>(
+    m: &LogisticJJ,
+    theta: &[f64],
+    idx: &[u32],
+    scratch: &mut EvalScratch,
+) -> f64 {
+    let d = theta.len();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut total = 0.0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        let mut lanes = [0.0; W];
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let sv = m.data.t[n] * s[l];
+            let llv = log_sigmoid(sv);
+            let (a, b, c) = jj_coeffs(m.xi[n]);
+            lanes[l] = (a * sv * sv + b * sv + c).min(llv);
+        }
+        total += tree8(&lanes);
+    }
+    total
+}

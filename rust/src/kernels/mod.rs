@@ -1,0 +1,391 @@
+//! Batched structure-of-arrays likelihood kernels (DESIGN.md §Kernels).
+//!
+//! This module is the single home of the evaluation stack's inner loops.
+//! Everything the models evaluate per datum — logistic / softmax / robust
+//! likelihoods, bounds, and gradients — is expressed here as a *batch*
+//! kernel over fixed-width lane tiles, in two interchangeable
+//! implementations selected by the [`LanePath`] type parameter:
+//!
+//! * [`ScalarPath`] — lane-outer scalar reference loops, one datum at a
+//!   time, strided reads from the tile;
+//! * [`FastPath`] — feature-outer loops over contiguous `W`-wide tile
+//!   columns with fixed-size `[f64; W]` accumulator arrays, the shape LLVM
+//!   autovectorizes (no `unsafe`, no intrinsics; `RUSTFLAGS=-C
+//!   target-cpu=native` in CI exercises the widest encodings).
+//!
+//! ## The bit-exactness contract
+//!
+//! Both paths produce **identical bits** for every output, because both
+//! follow the same two canonical association trees and rustc never
+//! contracts or reorders IEEE-754 operations:
+//!
+//! * **Per-lane dot** ([`LanePath::dot_lanes`]): four strided partial sums
+//!   over `len/4` chunks, a sequential remainder, and the final
+//!   `(s0 + s1) + (s2 + s3) + rest` — exactly the association of [`dot`],
+//!   which lives here and is re-exported by [`crate::linalg`]. A lane's
+//!   dot therefore has the same bits as the pre-batch per-datum
+//!   `dot(row, theta)`, so likelihood and bound values are independent of
+//!   how data are grouped into tiles.
+//! * **Cross-lane reduction** ([`tree8`]): gradient contributions of one
+//!   tile fold as `((p0+p1)+(p2+p3)) + ((p4+p5)+(p6+p7))` per feature.
+//!   Dead lanes of a partial tile are zero-padded (zeroed coefficients ×
+//!   zeroed features), and adding `+0.0` cannot change an accumulator that
+//!   is not `-0.0` — accumulators here start at `+0.0` and can never reach
+//!   `-0.0` (IEEE round-to-nearest only yields `-0.0` from a sum when both
+//!   addends are `-0.0`) — so a batch of one datum reproduces the old
+//!   per-datum `axpy` bits exactly.
+//!
+//! The per-lane transcendental steps (`log_sigmoid`, `logsumexp`,
+//! `ln_1p`, …) are shared scalar code between the two paths, outside the
+//! `LanePath` trait, so they cannot diverge.
+//!
+//! Tiles are column-major ([`W`] lanes per feature: element `j` of lane
+//! `l` lives at `tile[j * W + l]`), filled by
+//! [`crate::data::store::DataStore::gather_tile`] through the same
+//! caller-owned row cache as the scalar path. All kernels walk an index
+//! batch in `W`-sized chunks and write into caller-sized slices; nothing
+//! here allocates (the tile and lane buffers ride in
+//! [`crate::models::EvalScratch`]).
+
+pub mod logistic;
+pub mod robust;
+pub mod softmax;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lane width of an SoA feature tile: every batch kernel processes `W`
+/// data points per tile, and [`tree8`] is the canonical reduction over one
+/// tile's lanes. Fixed at 8 (four f64 AVX2 registers / one AVX-512
+/// register worth of doubles); the shard size of
+/// [`crate::runtime::ParBackend`] is a multiple of it, so serial and
+/// sharded tiling agree on tile boundaries.
+pub const W: usize = 8;
+
+/// Dot product. The single hottest scalar kernel in the CPU backend
+/// (every likelihood evaluation is one of these per datum); unrolled
+/// 4-wide so LLVM vectorizes it. This association — four strided partials,
+/// sequential remainder, `(s0 + s1) + (s2 + s3) + rest` — is the *canonical
+/// dot tree*: [`LanePath::dot_lanes`] reproduces it per lane, which is why
+/// batched likelihoods are bit-identical to per-datum ones.
+// lint: zero-alloc
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut rest = 0.0;
+    for i in chunks * 4..a.len() {
+        rest += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + rest
+}
+
+/// y += alpha * x.
+// lint: zero-alloc
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// The canonical cross-lane reduction tree over one tile:
+/// `((p0+p1)+(p2+p3)) + ((p4+p5)+(p6+p7))`. Every gradient accumulation
+/// and every batched bound-product sum folds its `W` lane contributions
+/// through this fixed association, so the result is independent of which
+/// path computed the lanes. firefly-lint's `float-reduce-order` recognizes
+/// reductions routed through this helper as ordered.
+// lint: zero-alloc
+#[inline]
+pub fn tree8(p: &[f64; W]) -> f64 {
+    ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]))
+}
+
+/// One implementation of the lane-level primitives every batch kernel is
+/// generic over. Implementations must follow the canonical association
+/// trees documented on [`dot`] and [`tree8`] exactly — the module-level
+/// bit-exactness contract (and the `integration_kernels` suite) holds each
+/// of them to the same bits.
+pub trait LanePath {
+    /// Human-readable path name for bench/diagnostic labels.
+    const NAME: &'static str;
+
+    /// Per-lane canonical dot: `out[l] = dot(theta, column l of tile)`
+    /// with the association of [`dot`]. `tile` is column-major
+    /// (`theta.len() × W`, element `j` of lane `l` at `tile[j * W + l]`).
+    fn dot_lanes(theta: &[f64], tile: &[f64], out: &mut [f64; W]);
+
+    /// Per-feature gradient accumulation over one tile:
+    /// `grad[j] += tree8([coeff[l] * tile[j * W + l]; W])`. Dead lanes
+    /// must carry `coeff[l] == 0.0` (and gathered tiles zero-pad dead
+    /// features), so partial tiles contribute exact `+0.0` products.
+    fn acc_grad_tile(coeff: &[f64; W], tile: &[f64], grad: &mut [f64]);
+}
+
+/// Lane-outer scalar reference path: one datum at a time, strided tile
+/// reads — the shape of the pre-batch per-datum code, kept as the
+/// executable specification the fast path is checked against.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarPath;
+
+impl LanePath for ScalarPath {
+    const NAME: &'static str = "scalar";
+
+    // lint: zero-alloc
+    #[inline]
+    fn dot_lanes(theta: &[f64], tile: &[f64], out: &mut [f64; W]) {
+        let d = theta.len();
+        debug_assert_eq!(tile.len(), d * W);
+        let chunks = d / 4;
+        for (l, o) in out.iter_mut().enumerate() {
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for c in 0..chunks {
+                let j = c * 4;
+                s0 += tile[j * W + l] * theta[j];
+                s1 += tile[(j + 1) * W + l] * theta[j + 1];
+                s2 += tile[(j + 2) * W + l] * theta[j + 2];
+                s3 += tile[(j + 3) * W + l] * theta[j + 3];
+            }
+            let mut rest = 0.0;
+            for j in chunks * 4..d {
+                rest += tile[j * W + l] * theta[j];
+            }
+            *o = (s0 + s1) + (s2 + s3) + rest;
+        }
+    }
+
+    // lint: zero-alloc
+    #[inline]
+    fn acc_grad_tile(coeff: &[f64; W], tile: &[f64], grad: &mut [f64]) {
+        debug_assert_eq!(tile.len(), grad.len() * W);
+        for (j, g) in grad.iter_mut().enumerate() {
+            let col = &tile[j * W..j * W + W];
+            let p0 = coeff[0] * col[0];
+            let p1 = coeff[1] * col[1];
+            let p2 = coeff[2] * col[2];
+            let p3 = coeff[3] * col[3];
+            let p4 = coeff[4] * col[4];
+            let p5 = coeff[5] * col[5];
+            let p6 = coeff[6] * col[6];
+            let p7 = coeff[7] * col[7];
+            *g += ((p0 + p1) + (p2 + p3)) + ((p4 + p5) + (p6 + p7));
+        }
+    }
+}
+
+/// Feature-outer autovectorized fast path: fixed-width `[f64; W]`
+/// accumulator arrays updated across contiguous tile columns — each lane's
+/// own operation sequence is identical to [`ScalarPath`]'s (independent
+/// accumulators, same order within each), so the bits match while LLVM is
+/// free to map the `W`-wide inner loops onto vector registers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FastPath;
+
+impl LanePath for FastPath {
+    const NAME: &'static str = "fast";
+
+    // lint: zero-alloc
+    #[inline]
+    fn dot_lanes(theta: &[f64], tile: &[f64], out: &mut [f64; W]) {
+        let d = theta.len();
+        debug_assert_eq!(tile.len(), d * W);
+        let chunks = d / 4;
+        let mut s0 = [0.0; W];
+        let mut s1 = [0.0; W];
+        let mut s2 = [0.0; W];
+        let mut s3 = [0.0; W];
+        for c in 0..chunks {
+            let j = c * 4;
+            let base = j * W;
+            let (t0, t1, t2, t3) = (theta[j], theta[j + 1], theta[j + 2], theta[j + 3]);
+            let cols = &tile[base..base + 4 * W];
+            for l in 0..W {
+                s0[l] += cols[l] * t0;
+                s1[l] += cols[W + l] * t1;
+                s2[l] += cols[2 * W + l] * t2;
+                s3[l] += cols[3 * W + l] * t3;
+            }
+        }
+        let mut rest = [0.0; W];
+        for j in chunks * 4..d {
+            let col = &tile[j * W..j * W + W];
+            let tj = theta[j];
+            for l in 0..W {
+                rest[l] += col[l] * tj;
+            }
+        }
+        for l in 0..W {
+            out[l] = (s0[l] + s1[l]) + (s2[l] + s3[l]) + rest[l];
+        }
+    }
+
+    // lint: zero-alloc
+    #[inline]
+    fn acc_grad_tile(coeff: &[f64; W], tile: &[f64], grad: &mut [f64]) {
+        debug_assert_eq!(tile.len(), grad.len() * W);
+        let mut p = [0.0; W];
+        for (j, g) in grad.iter_mut().enumerate() {
+            let col = &tile[j * W..j * W + W];
+            for l in 0..W {
+                p[l] = coeff[l] * col[l];
+            }
+            *g += tree8(&p);
+        }
+    }
+}
+
+/// Which [`LanePath`] the models' batch methods route through — a
+/// process-wide switch because the paths are interchangeable by
+/// construction (identical bits) and threading a preference through every
+/// model/backend constructor would buy nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// [`ScalarPath`] — the lane-outer reference loops.
+    Scalar,
+    /// [`FastPath`] — the feature-outer autovectorized loops (default).
+    Fast,
+}
+
+static ACTIVE_PATH: AtomicU8 = AtomicU8::new(1);
+
+/// Select the process-wide kernel path. Default is [`KernelPath::Fast`];
+/// tests and benches flip it to prove the paths agree bit-for-bit on whole
+/// chains. Relaxed ordering is sufficient: either value is correct, the
+/// switch only chooses between bit-identical implementations.
+pub fn set_kernel_path(p: KernelPath) {
+    ACTIVE_PATH.store(p as u8, Ordering::Relaxed);
+}
+
+/// The currently selected process-wide kernel path.
+pub fn kernel_path() -> KernelPath {
+    if ACTIVE_PATH.load(Ordering::Relaxed) == KernelPath::Scalar as u8 {
+        KernelPath::Scalar
+    } else {
+        KernelPath::Fast
+    }
+}
+
+/// Dispatch a generic batch kernel over the active [`KernelPath`] — the
+/// one place the runtime switch meets the compile-time [`LanePath`]
+/// monomorphizations.
+macro_rules! dispatch_path {
+    ($path:expr, $f:path, ($($arg:expr),* $(,)?)) => {
+        match $path {
+            $crate::kernels::KernelPath::Scalar => $f::<$crate::kernels::ScalarPath>($($arg),*),
+            $crate::kernels::KernelPath::Fast => $f::<$crate::kernels::FastPath>($($arg),*),
+        }
+    };
+}
+pub(crate) use dispatch_path;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut r = Rng::new(1);
+        for len in [0, 1, 3, 4, 7, 51, 256] {
+            let a: Vec<f64> = (0..len).map(|_| r.normal()).collect();
+            let b: Vec<f64> = (0..len).map(|_| r.normal()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-10, "len {len}");
+        }
+    }
+
+    fn random_tile(d: usize, r: &mut Rng) -> Vec<f64> {
+        (0..d * W).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn dot_lanes_paths_bitwise_equal_and_match_scalar_dot() {
+        let mut r = Rng::new(7);
+        for d in [0usize, 1, 2, 3, 4, 5, 7, 8, 12, 33, 100] {
+            let theta: Vec<f64> = (0..d).map(|_| r.normal()).collect();
+            let tile = random_tile(d, &mut r);
+            let mut scalar = [0.0; W];
+            let mut fast = [0.0; W];
+            ScalarPath::dot_lanes(&theta, &tile, &mut scalar);
+            FastPath::dot_lanes(&theta, &tile, &mut fast);
+            for l in 0..W {
+                assert_eq!(scalar[l].to_bits(), fast[l].to_bits(), "d={d} lane {l}");
+                // and both equal the canonical dot of the de-transposed row
+                let row: Vec<f64> = (0..d).map(|j| tile[j * W + l]).collect();
+                assert_eq!(
+                    scalar[l].to_bits(),
+                    dot(&row, &theta).to_bits(),
+                    "d={d} lane {l} vs canonical dot"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn acc_grad_paths_bitwise_equal() {
+        let mut r = Rng::new(8);
+        for d in [1usize, 3, 8, 17, 64] {
+            let tile = random_tile(d, &mut r);
+            let mut coeff = [0.0; W];
+            for c in &mut coeff {
+                *c = r.normal();
+            }
+            let mut ga = vec![0.0; d];
+            let mut gb = vec![0.0; d];
+            ScalarPath::acc_grad_tile(&coeff, &tile, &mut ga);
+            FastPath::acc_grad_tile(&coeff, &tile, &mut gb);
+            for j in 0..d {
+                assert_eq!(ga[j].to_bits(), gb[j].to_bits(), "d={d} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_live_lane_reproduces_axpy_bits() {
+        // batch-of-1 == old per-datum axpy: products of the dead lanes are
+        // +0.0 and tree8 folds them away without touching the live bits
+        let mut r = Rng::new(9);
+        for d in [1usize, 5, 16, 51] {
+            let row: Vec<f64> = (0..d).map(|_| r.normal()).collect();
+            let alpha = r.normal();
+            let mut tile = vec![0.0; d * W];
+            for j in 0..d {
+                tile[j * W] = row[j];
+            }
+            let mut coeff = [0.0; W];
+            coeff[0] = alpha;
+            let mut g_tile = vec![0.0; d];
+            FastPath::acc_grad_tile(&coeff, &tile, &mut g_tile);
+            let mut g_axpy = vec![0.0; d];
+            axpy(alpha, &row, &mut g_axpy);
+            for j in 0..d {
+                assert_eq!(g_tile[j].to_bits(), g_axpy[j].to_bits(), "d={d} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree8_is_the_documented_association() {
+        let p = [1e16, 1.0, -1e16, 1.0, 3.0, -2.0, 0.5, 0.25];
+        let expect = ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]));
+        assert_eq!(tree8(&p).to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn kernel_path_switch_roundtrips() {
+        let before = kernel_path();
+        set_kernel_path(KernelPath::Scalar);
+        assert_eq!(kernel_path(), KernelPath::Scalar);
+        set_kernel_path(KernelPath::Fast);
+        assert_eq!(kernel_path(), KernelPath::Fast);
+        set_kernel_path(before);
+    }
+}

@@ -1,0 +1,178 @@
+//! Batched robust (student-t) regression kernels (tangent Gaussian bound).
+//!
+//! Tile-at-a-time versions of every [`crate::models::RobustT`] evaluation:
+//! one [`LanePath::dot_lanes`] per tile for the predictions `θᵀx_n`,
+//! shared scalar per-lane residual/tangent math, gradient folds through
+//! [`LanePath::acc_grad_tile`]. The per-datum code negates the bright
+//! coefficient before its `axpy` (`dr/dθ = -x`); here the negation folds
+//! into the lane coefficient, which is exact.
+
+use super::{tree8, LanePath, W};
+use crate::models::robust::RobustT;
+use crate::models::{bright_coeff, EvalScratch};
+
+/// `ll[i] = log L_{idx[i]}(θ)` for the whole batch.
+// lint: zero-alloc
+pub fn log_lik_batch<P: LanePath>(
+    m: &RobustT,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let d = theta.len();
+    let c2 = m.c2();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let r = m.data.y[n as usize] - s[l];
+            ll[base + l] = m.logc - (m.nu + 1.0) / 2.0 * (r * r / c2).ln_1p();
+        }
+        base += chunk.len();
+    }
+}
+
+/// `(ll[i], lb[i]) = (log L, clamped log B)` for the whole batch.
+// lint: zero-alloc
+pub fn log_both_batch<P: LanePath>(
+    m: &RobustT,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let d = theta.len();
+    let c2 = m.c2();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let r = m.data.y[n] - s[l];
+            let u = r * r;
+            let llv = m.logc - (m.nu + 1.0) / 2.0 * (u / c2).ln_1p();
+            let (f0, fp0) = m.tangent(m.u0[n]);
+            ll[base + l] = llv;
+            lb[base + l] = (f0 + fp0 * (u - m.u0[n])).min(llv);
+        }
+        base += chunk.len();
+    }
+}
+
+/// Fused batch `log_both` + pseudo-likelihood gradient accumulation.
+// lint: zero-alloc
+pub fn pseudo_grad_batch<P: LanePath>(
+    m: &RobustT,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let d = theta.len();
+    let c2 = m.c2();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        let mut coeff = [0.0; W]; // dead lanes must contribute exact +0.0 products
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let r = m.data.y[n] - s[l];
+            let u = r * r;
+            let llv = m.logc - (m.nu + 1.0) / 2.0 * (u / c2).ln_1p();
+            let (f0, fp0) = m.tangent(m.u0[n]);
+            let lbv = (f0 + fp0 * (u - m.u0[n])).min(llv);
+            let dll = -(m.nu + 1.0) * r / (c2 + u);
+            let dlb = 2.0 * fp0 * r;
+            coeff[l] = -bright_coeff(dll, dlb, lbv - llv);
+            ll[base + l] = llv;
+            lb[base + l] = lbv;
+        }
+        P::acc_grad_tile(&coeff, tile, grad);
+        base += chunk.len();
+    }
+}
+
+/// Fused batch `log_lik` + likelihood-gradient accumulation.
+// lint: zero-alloc
+pub fn log_lik_grad_batch<P: LanePath>(
+    m: &RobustT,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let d = theta.len();
+    let c2 = m.c2();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        let mut coeff = [0.0; W];
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let r = m.data.y[n] - s[l];
+            ll[base + l] = m.logc - (m.nu + 1.0) / 2.0 * (r * r / c2).ln_1p();
+            coeff[l] = (m.nu + 1.0) * r / (c2 + r * r);
+        }
+        P::acc_grad_tile(&coeff, tile, grad);
+        base += chunk.len();
+    }
+}
+
+/// `Σ_i log B_{idx[i]}(θ)` (clamped bounds, as in `log_both`), each tile
+/// folded through [`tree8`] and tiles summed in batch order.
+// lint: zero-alloc
+pub fn log_bound_product_batch<P: LanePath>(
+    m: &RobustT,
+    theta: &[f64],
+    idx: &[u32],
+    scratch: &mut EvalScratch,
+) -> f64 {
+    let d = theta.len();
+    let c2 = m.c2();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut total = 0.0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        let mut lanes = [0.0; W];
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let r = m.data.y[n] - s[l];
+            let u = r * r;
+            let llv = m.logc - (m.nu + 1.0) / 2.0 * (u / c2).ln_1p();
+            let (f0, fp0) = m.tangent(m.u0[n]);
+            lanes[l] = (f0 + fp0 * (u - m.u0[n])).min(llv);
+        }
+        total += tree8(&lanes);
+    }
+    total
+}

@@ -1,0 +1,213 @@
+//! Batched softmax-classification kernels (Böhning bound).
+//!
+//! Tile-at-a-time versions of every [`crate::models::SoftmaxBohning`]
+//! evaluation: one [`LanePath::dot_lanes`] per class per tile fills the
+//! lane-major logit buffer (`scratch.lane_eta[l * K + kk]`), so each
+//! lane's η vector is a contiguous slice fed through exactly the same
+//! scalar `logsumexp`/bound code as the per-datum path; gradients fold
+//! class-by-class through [`LanePath::acc_grad_tile`] into the `[K, D]`
+//! row-major `grad`.
+
+use super::{tree8, LanePath, W};
+use crate::models::softmax::SoftmaxBohning;
+use crate::models::EvalScratch;
+use crate::util::math::logsumexp;
+
+/// Fill the lane-major logit buffer for one gathered tile:
+/// `lane_eta[l * k + kk] = dot(θ_kk, lane l)` via the canonical dot tree.
+// lint: zero-alloc
+#[inline]
+fn logits_tile<P: LanePath>(theta: &[f64], k: usize, tile: &[f64], lane_eta: &mut [f64]) {
+    let d = theta.len() / k;
+    let mut s = [0.0; W];
+    for kk in 0..k {
+        P::dot_lanes(&theta[kk * d..(kk + 1) * d], tile, &mut s);
+        for l in 0..W {
+            lane_eta[l * k + kk] = s[l];
+        }
+    }
+}
+
+/// `ll[i] = log L_{idx[i]}(θ)` for the whole batch.
+// lint: zero-alloc
+pub fn log_lik_batch<P: LanePath>(
+    m: &SoftmaxBohning,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let k = m.k;
+    let d = m.data.d();
+    let EvalScratch { rows, tile, lane_eta, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let lane_eta = &mut lane_eta[..k * W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        logits_tile::<P>(theta, k, tile, lane_eta);
+        for (l, &n) in chunk.iter().enumerate() {
+            let eta = &lane_eta[l * k..(l + 1) * k];
+            ll[base + l] = eta[m.data.labels[n as usize]] - logsumexp(eta);
+        }
+        base += chunk.len();
+    }
+}
+
+/// `(ll[i], lb[i]) = (log L, clamped log B)` for the whole batch.
+// lint: zero-alloc
+pub fn log_both_batch<P: LanePath>(
+    m: &SoftmaxBohning,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let k = m.k;
+    let d = m.data.d();
+    let EvalScratch { rows, tile, lane_eta, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let lane_eta = &mut lane_eta[..k * W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        logits_tile::<P>(theta, k, tile, lane_eta);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let eta = &lane_eta[l * k..(l + 1) * k];
+            let llv = eta[m.data.labels[n]] - logsumexp(eta);
+            ll[base + l] = llv;
+            lb[base + l] = m.log_bound_and_deta(eta, n, None).min(llv);
+        }
+        base += chunk.len();
+    }
+}
+
+/// Fused batch `log_both` + pseudo-likelihood gradient accumulation into
+/// the `[K, D]` row-major `grad`, one class-segment tree fold per tile.
+// lint: zero-alloc
+pub fn pseudo_grad_batch<P: LanePath>(
+    m: &SoftmaxBohning,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let k = m.k;
+    let d = m.data.d();
+    let EvalScratch { rows, tile, lane_eta, lane_dlb, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let lane_eta = &mut lane_eta[..k * W];
+    let lane_dlb = &mut lane_dlb[..k * W];
+    let mut lse = [0.0; W];
+    let mut ed = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        logits_tile::<P>(theta, k, tile, lane_eta);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let eta = &lane_eta[l * k..(l + 1) * k];
+            let lse_l = logsumexp(eta);
+            let llv = eta[m.data.labels[n]] - lse_l;
+            let lbv = m
+                .log_bound_and_deta(eta, n, Some(&mut lane_dlb[l * k..(l + 1) * k]))
+                .min(llv);
+            lse[l] = lse_l;
+            ed[l] = (lbv - llv).min(-1e-12).exp();
+            ll[base + l] = llv;
+            lb[base + l] = lbv;
+        }
+        for kk in 0..k {
+            let mut coeff = [0.0; W]; // dead lanes must contribute exact +0.0 products
+            for (l, &n) in chunk.iter().enumerate() {
+                let n = n as usize;
+                let dll = (if kk == m.data.labels[n] { 1.0 } else { 0.0 })
+                    - (lane_eta[l * k + kk] - lse[l]).exp();
+                let dlb = lane_dlb[l * k + kk];
+                coeff[l] = (dll - ed[l] * dlb) / (1.0 - ed[l]) - dlb;
+            }
+            P::acc_grad_tile(&coeff, tile, &mut grad[kk * d..(kk + 1) * d]);
+        }
+        base += chunk.len();
+    }
+}
+
+/// Fused batch `log_lik` + likelihood-gradient accumulation into the
+/// `[K, D]` row-major `grad`.
+// lint: zero-alloc
+pub fn log_lik_grad_batch<P: LanePath>(
+    m: &SoftmaxBohning,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let k = m.k;
+    let d = m.data.d();
+    let EvalScratch { rows, tile, lane_eta, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let lane_eta = &mut lane_eta[..k * W];
+    let mut lse = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        logits_tile::<P>(theta, k, tile, lane_eta);
+        for (l, &n) in chunk.iter().enumerate() {
+            let eta = &lane_eta[l * k..(l + 1) * k];
+            let lse_l = logsumexp(eta);
+            lse[l] = lse_l;
+            ll[base + l] = eta[m.data.labels[n as usize]] - lse_l;
+        }
+        for kk in 0..k {
+            let mut coeff = [0.0; W];
+            for (l, &n) in chunk.iter().enumerate() {
+                let n = n as usize;
+                coeff[l] = (if kk == m.data.labels[n] { 1.0 } else { 0.0 })
+                    - (lane_eta[l * k + kk] - lse[l]).exp();
+            }
+            P::acc_grad_tile(&coeff, tile, &mut grad[kk * d..(kk + 1) * d]);
+        }
+        base += chunk.len();
+    }
+}
+
+/// `Σ_i log B_{idx[i]}(θ)` (clamped bounds, as in `log_both`), each tile
+/// folded through [`tree8`] and tiles summed in batch order.
+// lint: zero-alloc
+pub fn log_bound_product_batch<P: LanePath>(
+    m: &SoftmaxBohning,
+    theta: &[f64],
+    idx: &[u32],
+    scratch: &mut EvalScratch,
+) -> f64 {
+    let k = m.k;
+    let d = m.data.d();
+    let EvalScratch { rows, tile, lane_eta, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let lane_eta = &mut lane_eta[..k * W];
+    let mut total = 0.0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        logits_tile::<P>(theta, k, tile, lane_eta);
+        let mut lanes = [0.0; W];
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let eta = &lane_eta[l * k..(l + 1) * k];
+            let llv = eta[m.data.labels[n]] - logsumexp(eta);
+            lanes[l] = m.log_bound_and_deta(eta, n, None).min(llv);
+        }
+        total += tree8(&lanes);
+    }
+    total
+}

@@ -17,9 +17,13 @@
 //! **zero heap allocations** on the CPU backends: samplers, posterior and
 //! backends own reusable buffers reserved up front, and the model
 //! evaluation contract threads a caller-owned scratch arena
-//! ([`models::EvalScratch`]) through every per-datum call (DESIGN.md
-//! §Perf; enforced by counting-allocator tests and tracked by
-//! `benches/hotpath.rs`).
+//! ([`models::EvalScratch`]) through every batch call (DESIGN.md §Perf;
+//! enforced by counting-allocator tests and tracked by
+//! `benches/hotpath.rs`). Evaluation itself is batched: models gather
+//! `W = 8`-lane structure-of-arrays feature tiles and run the
+//! [`kernels`] batch kernels — a scalar reference path and an
+//! autovectorized fast path with **identical bits** (DESIGN.md §Kernels),
+//! selected process-wide via [`kernels::set_kernel_path`].
 //!
 //! Datasets feed the models through the unified
 //! [`data::store::DataStore`] layer: resident (`DenseStore`,
@@ -77,6 +81,7 @@ pub mod data;
 pub mod diagnostics;
 pub mod engine;
 pub mod flymc;
+pub mod kernels;
 pub mod linalg;
 pub mod map_estimate;
 pub mod metrics;

@@ -264,36 +264,11 @@ impl PackedQuadForm {
     }
 }
 
-/// Dot product. The single hottest scalar kernel in the CPU backend
-/// (every likelihood evaluation is one of these per datum); unrolled 4-wide
-/// so LLVM vectorizes it.
-#[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut rest = 0.0;
-    for i in chunks * 4..a.len() {
-        rest += a[i] * b[i];
-    }
-    (s0 + s1) + (s2 + s3) + rest
-}
-
-/// y += alpha * x.
-#[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
-}
+// The blessed inner-loop idioms — `dot`'s canonical association tree and
+// `axpy` — live in `crate::kernels` (one copy repo-wide, shared by the
+// scalar and vector lane paths); re-exported here because linear algebra
+// is where every other consumer historically imported them from.
+pub use crate::kernels::{axpy, dot};
 
 /// Euclidean norm.
 #[inline]

@@ -5,6 +5,12 @@
 //! Minibatch Adam ascent on log p(θ) + (N/B) Σ_batch log L_n. The cost is
 //! one-time setup, reported separately from the per-iteration likelihood
 //! queries (as in the paper).
+//!
+//! Gradients are accumulated datum by datum through the per-datum
+//! `ModelBound` methods (batch-of-1 wrappers since the kernel refactor,
+//! DESIGN.md §Kernels), which keep the pre-kernel accumulation order —
+//! so MAP tuning, and therefore every MAP-anchored bound, is bit-identical
+//! across backends and kernel paths.
 
 use crate::models::{ModelBound, Prior};
 use crate::util::Rng;

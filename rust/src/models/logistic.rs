@@ -8,18 +8,24 @@
 //!               A = sum a_n x_n x_n^T,  b = 1/2 sum t_n x_n,  c0 = sum c_n —
 //!               O(D^2) per evaluation after O(N D^2) setup.
 //!
-//! Feature rows are read through the dataset's [`crate::data::store::DataStore`]
-//! (resident or block-cached out-of-core) via the scratch-owned row cache;
-//! the per-datum arithmetic is unchanged, so dense-backed chains are
-//! bit-identical to the pre-`DataStore` code.
+//! Evaluation routes through the batched SoA tile kernels in
+//! [`crate::kernels::logistic`] (feature rows gathered `W = 8` lanes at a
+//! time from the dataset's [`crate::data::store::DataStore`], resident or
+//! block-cached out-of-core); the per-datum `ModelBound` methods are
+//! batch-of-1 views of the same kernels, and the per-lane dot product
+//! reproduces [`crate::linalg::dot`]'s association exactly, so
+//! likelihood/bound values are bit-identical for every batch composition
+//! (DESIGN.md §Kernels).
 
 use std::sync::Arc;
 
-use super::{bright_coeff, EvalScratch, ModelBound, ModelKind};
+use super::{EvalScratch, ModelBound, ModelKind};
+#[cfg(test)]
 use crate::data::store::RowCache;
 use crate::data::LogisticData;
+use crate::kernels::{self, dispatch_path};
 use crate::linalg::{axpy, dot, Matrix};
-use crate::util::math::{log1p_exp, log_sigmoid, sigmoid};
+use crate::util::math::log1p_exp;
 
 /// JJ coefficients for a given xi (mirrors `jj_coeffs` in ref.py).
 #[inline]
@@ -82,7 +88,9 @@ impl LogisticJJ {
         self.c_sum = c_sum;
     }
 
-    #[inline]
+    /// Margin s = t_n θᵀx_n — test oracle for the kernel layer (production
+    /// reads go through `crate::kernels::logistic`).
+    #[cfg(test)]
     fn s(&self, theta: &[f64], n: usize, rows: &mut RowCache) -> f64 {
         self.data.t[n] * dot(self.data.x.row(n, rows), theta)
     }
@@ -103,9 +111,13 @@ impl ModelBound for LogisticJJ {
         EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
     }
 
+    // --- per-datum API: batch-of-1 views of the kernel layer ---
+
     // lint: zero-alloc
     fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
-        log_sigmoid(self.s(theta, n, &mut scratch.rows))
+        let mut ll = [0.0];
+        self.log_lik_batch(theta, &[n as u32], &mut ll, scratch);
+        ll[0]
     }
 
     // lint: zero-alloc
@@ -116,19 +128,15 @@ impl ModelBound for LogisticJJ {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) {
-        let row = self.data.x.row(n, &mut scratch.rows);
-        let s = self.data.t[n] * dot(row, theta);
-        let coeff = sigmoid(-s) * self.data.t[n];
-        axpy(coeff, row, grad);
+        let mut ll = [0.0];
+        self.log_lik_grad_batch(theta, &[n as u32], &mut ll, grad, scratch);
     }
 
     // lint: zero-alloc
     fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
-        let s = self.s(theta, n, &mut scratch.rows);
-        let ll = log_sigmoid(s);
-        let (a, b, c) = jj_coeffs(self.xi[n]);
-        let lb = (a * s * s + b * s + c).min(ll);
-        (ll, lb)
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.log_both_batch(theta, &[n as u32], &mut ll, &mut lb, scratch);
+        (ll[0], lb[0])
     }
 
     // lint: zero-alloc
@@ -139,15 +147,8 @@ impl ModelBound for LogisticJJ {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) {
-        let row = self.data.x.row(n, &mut scratch.rows);
-        let s = self.data.t[n] * dot(row, theta);
-        let ll = log_sigmoid(s);
-        let (a, b, c) = jj_coeffs(self.xi[n]);
-        let lb = (a * s * s + b * s + c).min(ll);
-        let dll = sigmoid(-s);
-        let dlb = 2.0 * a * s + b;
-        let coeff = bright_coeff(dll, dlb, lb - ll) * self.data.t[n];
-        axpy(coeff, row, grad);
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.pseudo_grad_batch(theta, &[n as u32], &mut ll, &mut lb, grad, scratch);
     }
 
     // lint: zero-alloc
@@ -158,16 +159,83 @@ impl ModelBound for LogisticJJ {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) -> (f64, f64) {
-        let row = self.data.x.row(n, &mut scratch.rows);
-        let s = self.data.t[n] * dot(row, theta);
-        let ll = log_sigmoid(s);
-        let (a, b, c) = jj_coeffs(self.xi[n]);
-        let lb = (a * s * s + b * s + c).min(ll);
-        let dll = sigmoid(-s);
-        let dlb = 2.0 * a * s + b;
-        let coeff = bright_coeff(dll, dlb, lb - ll) * self.data.t[n];
-        axpy(coeff, row, grad);
-        (ll, lb)
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.pseudo_grad_batch(theta, &[n as u32], &mut ll, &mut lb, grad, scratch);
+        (ll[0], lb[0])
+    }
+
+    // --- batch API: dispatch to the SoA tile kernels (DESIGN.md §Kernels) ---
+
+    // lint: zero-alloc
+    fn log_lik_batch(&self, theta: &[f64], idx: &[u32], ll: &mut [f64], scratch: &mut EvalScratch) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::logistic::log_lik_batch,
+            (self, theta, idx, ll, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_both_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::logistic::log_both_batch,
+            (self, theta, idx, ll, lb, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn pseudo_grad_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::logistic::pseudo_grad_batch,
+            (self, theta, idx, ll, lb, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_lik_grad_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::logistic::log_lik_grad_batch,
+            (self, theta, idx, ll, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_bound_product_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        scratch: &mut EvalScratch,
+    ) -> f64 {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::logistic::log_bound_product_batch,
+            (self, theta, idx, scratch)
+        )
     }
 
     // lint: zero-alloc
@@ -210,6 +278,7 @@ mod tests {
     use super::*;
     use crate::data::synth;
     use crate::testing;
+    use crate::util::math::log_sigmoid;
     use crate::util::Rng;
 
     fn small() -> LogisticJJ {

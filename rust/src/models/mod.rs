@@ -51,12 +51,15 @@ impl ModelKind {
 /// (backends allocate one per evaluator/worker group at construction;
 /// samplers and the pseudo-posterior own their own).
 ///
-/// Every per-datum and collapsed evaluation method on [`ModelBound`] takes a
-/// `&mut EvalScratch` instead of allocating temporaries, which is what makes
-/// steady-state FlyMC iterations — including the gradient path (MALA on
-/// softmax) — perform **zero heap allocations** (DESIGN.md §Perf). Buffer
-/// contents are unspecified on entry: implementations must overwrite before
-/// reading, and callers must not rely on contents across calls.
+/// Every batch, per-datum, and collapsed evaluation method on
+/// [`ModelBound`] takes a `&mut EvalScratch` instead of allocating
+/// temporaries, which is what makes steady-state FlyMC iterations —
+/// including the gradient path (MALA on softmax) — perform **zero heap
+/// allocations** (DESIGN.md §Perf). The scratch also carries the SoA
+/// buffers of the batch kernel layer (`tile`, `lane_eta`, `lane_dlb`;
+/// DESIGN.md §Kernels). Buffer contents are unspecified on entry:
+/// implementations must overwrite before reading, and callers must not
+/// rely on contents across calls.
 ///
 /// The scratch also carries the [`RowCache`] through which the model reads
 /// its feature rows from the [`crate::data::store::DataStore`]: zero-sized
@@ -78,6 +81,14 @@ pub struct EvalScratch {
     pub(crate) acc: Vec<f64>,
     /// dim-sized column buffer (softmax class-sum / column-mean vectors)
     pub(crate) col: Vec<f64>,
+    /// column-major SoA feature tile for the batch kernels, `feat × W`
+    /// (feat = per-class feature dimension; DESIGN.md §Kernels)
+    pub(crate) tile: Vec<f64>,
+    /// lane-major per-lane logits for the softmax batch kernels,
+    /// `W × n_classes` (lane `l`'s η vector at `[l*K .. (l+1)*K]`)
+    pub(crate) lane_eta: Vec<f64>,
+    /// lane-major per-lane bound gradients d log B / d η, `W × n_classes`
+    pub(crate) lane_dlb: Vec<f64>,
     /// feature-row cache for the model's `DataStore` reads (zero-sized when
     /// the store is dense)
     pub(crate) rows: RowCache,
@@ -89,11 +100,17 @@ impl EvalScratch {
     /// zero-sized row cache (resident data). Models over an out-of-core
     /// store attach a real cache via [`EvalScratch::with_rows`].
     pub fn sized(dim: usize, classes: usize) -> Self {
+        let classes = classes.max(1);
+        // per-class feature dimension D (softmax flattens theta to K*D)
+        let feat = dim / classes;
         EvalScratch {
             eta: vec![0.0; classes],
             dlb: vec![0.0; classes],
             acc: vec![0.0; dim],
             col: vec![0.0; dim],
+            tile: vec![0.0; feat * crate::kernels::W],
+            lane_eta: vec![0.0; classes * crate::kernels::W],
+            lane_dlb: vec![0.0; classes * crate::kernels::W],
             rows: RowCache::empty(),
         }
     }
@@ -188,6 +205,99 @@ pub trait ModelBound: Send + Sync {
         let out = self.log_both(theta, n, scratch);
         self.pseudo_grad_acc(theta, n, grad, scratch);
         out
+    }
+
+    // --- batch API (the backends' hot path; DESIGN.md §Kernels) ---
+    //
+    // The defaults below are per-datum loops: the executable specification
+    // of the batch semantics, and what an exotic `ModelBound` gets for
+    // free. The three paper models override every one of them with the SoA
+    // tile kernels in `crate::kernels` (and implement their per-datum
+    // methods as batch-of-1 wrappers), which keeps likelihood/bound values
+    // bit-identical to these loops while gradients fold through the
+    // canonical `tree8` reduction.
+
+    /// Batched [`Self::log_lik`] over an index batch: `ll[i] = log
+    /// L_{idx[i]}(theta)`. `ll.len() == idx.len()`; caller sizes it.
+    fn log_lik_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        for (i, &n) in idx.iter().enumerate() {
+            ll[i] = self.log_lik(theta, n as usize, scratch);
+        }
+    }
+
+    /// Batched [`Self::log_both`]: fills `ll` and `lb` (both sized
+    /// `idx.len()` by the caller).
+    fn log_both_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        for (i, &n) in idx.iter().enumerate() {
+            let (l, b) = self.log_both(theta, n as usize, scratch);
+            ll[i] = l;
+            lb[i] = b;
+        }
+    }
+
+    /// Batched [`Self::log_both_pseudo_grad`]: fills `ll`/`lb` and
+    /// accumulates the bright-point pseudo-posterior gradient over the
+    /// whole batch into `grad`.
+    fn pseudo_grad_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        for (i, &n) in idx.iter().enumerate() {
+            let (l, b) = self.log_both_pseudo_grad(theta, n as usize, grad, scratch);
+            ll[i] = l;
+            lb[i] = b;
+        }
+    }
+
+    /// Batched [`Self::log_lik`] + [`Self::log_lik_grad_acc`]: fills `ll`
+    /// and accumulates the likelihood gradient over the batch into `grad`.
+    fn log_lik_grad_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        for (i, &n) in idx.iter().enumerate() {
+            ll[i] = self.log_lik(theta, n as usize, scratch);
+            self.log_lik_grad_acc(theta, n as usize, grad, scratch);
+        }
+    }
+
+    /// `sum_i log B_{idx[i]}(theta)` over an explicit index batch (clamped
+    /// bounds, as in [`Self::log_both`]) — the per-subset companion of the
+    /// collapsed [`Self::log_bound_product`], agreeing with it to rounding
+    /// when `idx` covers `0..N` and no clamp engages.
+    fn log_bound_product_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        scratch: &mut EvalScratch,
+    ) -> f64 {
+        let mut acc = 0.0;
+        for &n in idx {
+            acc += self.log_both(theta, n as usize, scratch).1;
+        }
+        acc
     }
 
     /// Collapsed `sum_n log B_n(theta)` — O(dim^2), independent of N.

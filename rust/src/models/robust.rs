@@ -10,15 +10,22 @@
 //!              A = sum fp_n x x^T, b = -2 sum fp_n y_n x_n,
 //!              c0 = sum [f(u0_n) - fp_n u0_n + fp_n y_n^2].
 //!
-//! Feature rows are read through the dataset's [`crate::data::store::DataStore`]
-//! via the scratch-owned row cache; dense-backed chains are bit-identical
-//! to the pre-`DataStore` code.
+//! Evaluation routes through the batched SoA tile kernels in
+//! [`crate::kernels::robust`] (feature rows gathered `W = 8` lanes at a
+//! time from the dataset's [`crate::data::store::DataStore`]); the
+//! per-datum `ModelBound` methods are batch-of-1 views of the same
+//! kernels, and the per-lane dot product reproduces
+//! [`crate::linalg::dot`]'s association exactly, so likelihood/bound
+//! values are bit-identical for every batch composition (DESIGN.md
+//! §Kernels).
 
 use std::sync::Arc;
 
-use super::{bright_coeff, EvalScratch, ModelBound, ModelKind};
+use super::{EvalScratch, ModelBound, ModelKind};
+#[cfg(test)]
 use crate::data::store::RowCache;
 use crate::data::RegressionData;
+use crate::kernels::{self, dispatch_path};
 use crate::linalg::{axpy, dot, Matrix};
 use crate::util::math::t_logconst;
 
@@ -33,7 +40,7 @@ pub struct RobustT {
     pub sigma: f64,
     /// per-datum tangent location u0_n (in u = r^2 space)
     pub u0: Vec<f64>,
-    logc: f64,
+    pub(crate) logc: f64,
     // collapsed sufficient statistics
     a_mat: Matrix,
     b_vec: Vec<f64>,
@@ -59,18 +66,20 @@ impl RobustT {
     }
 
     #[inline]
-    fn c2(&self) -> f64 {
+    pub(crate) fn c2(&self) -> f64 {
         self.nu * self.sigma * self.sigma
     }
 
-    #[inline]
+    /// Residual r = y_n − θᵀx_n — test oracle for the kernel layer
+    /// (production reads go through [`crate::kernels::robust`]).
+    #[cfg(test)]
     fn resid(&self, theta: &[f64], n: usize, rows: &mut RowCache) -> f64 {
         self.data.y[n] - dot(self.data.x.row(n, rows), theta)
     }
 
     /// f(u0) and f'(u0) of the log-density as a function of u.
     #[inline]
-    fn tangent(&self, u0: f64) -> (f64, f64) {
+    pub(crate) fn tangent(&self, u0: f64) -> (f64, f64) {
         let c2 = self.c2();
         let f0 = self.logc - (self.nu + 1.0) / 2.0 * (u0 / c2).ln_1p();
         let fp0 = -(self.nu + 1.0) / 2.0 / (c2 + u0);
@@ -112,10 +121,13 @@ impl ModelBound for RobustT {
         EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
     }
 
+    // --- per-datum API: batch-of-1 views of the kernel layer ---
+
     // lint: zero-alloc
     fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
-        let r = self.resid(theta, n, &mut scratch.rows);
-        self.logc - (self.nu + 1.0) / 2.0 * (r * r / self.c2()).ln_1p()
+        let mut ll = [0.0];
+        self.log_lik_batch(theta, &[n as u32], &mut ll, scratch);
+        ll[0]
     }
 
     // lint: zero-alloc
@@ -126,21 +138,15 @@ impl ModelBound for RobustT {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) {
-        let row = self.data.x.row(n, &mut scratch.rows);
-        let r = self.data.y[n] - dot(row, theta);
-        // d logL / d r = -(nu+1) r / (c2 + r^2); d r / d theta = -x
-        let coeff = (self.nu + 1.0) * r / (self.c2() + r * r);
-        axpy(coeff, row, grad);
+        let mut ll = [0.0];
+        self.log_lik_grad_batch(theta, &[n as u32], &mut ll, grad, scratch);
     }
 
     // lint: zero-alloc
     fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
-        let r = self.resid(theta, n, &mut scratch.rows);
-        let u = r * r;
-        let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / self.c2()).ln_1p();
-        let (f0, fp0) = self.tangent(self.u0[n]);
-        let lb = (f0 + fp0 * (u - self.u0[n])).min(ll);
-        (ll, lb)
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.log_both_batch(theta, &[n as u32], &mut ll, &mut lb, scratch);
+        (ll[0], lb[0])
     }
 
     // lint: zero-alloc
@@ -151,17 +157,8 @@ impl ModelBound for RobustT {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) {
-        let row = self.data.x.row(n, &mut scratch.rows);
-        let r = self.data.y[n] - dot(row, theta);
-        let u = r * r;
-        let c2 = self.c2();
-        let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / c2).ln_1p();
-        let (f0, fp0) = self.tangent(self.u0[n]);
-        let lb = (f0 + fp0 * (u - self.u0[n])).min(ll);
-        let dll = -(self.nu + 1.0) * r / (c2 + u);
-        let dlb = 2.0 * fp0 * r;
-        let coeff = bright_coeff(dll, dlb, lb - ll);
-        axpy(-coeff, row, grad);
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.pseudo_grad_batch(theta, &[n as u32], &mut ll, &mut lb, grad, scratch);
     }
 
     // lint: zero-alloc
@@ -172,18 +169,83 @@ impl ModelBound for RobustT {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) -> (f64, f64) {
-        let row = self.data.x.row(n, &mut scratch.rows);
-        let r = self.data.y[n] - dot(row, theta);
-        let u = r * r;
-        let c2 = self.c2();
-        let ll = self.logc - (self.nu + 1.0) / 2.0 * (u / c2).ln_1p();
-        let (f0, fp0) = self.tangent(self.u0[n]);
-        let lb = (f0 + fp0 * (u - self.u0[n])).min(ll);
-        let dll = -(self.nu + 1.0) * r / (c2 + u);
-        let dlb = 2.0 * fp0 * r;
-        let coeff = bright_coeff(dll, dlb, lb - ll);
-        axpy(-coeff, row, grad);
-        (ll, lb)
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.pseudo_grad_batch(theta, &[n as u32], &mut ll, &mut lb, grad, scratch);
+        (ll[0], lb[0])
+    }
+
+    // --- batch API: dispatch to the SoA tile kernels (DESIGN.md §Kernels) ---
+
+    // lint: zero-alloc
+    fn log_lik_batch(&self, theta: &[f64], idx: &[u32], ll: &mut [f64], scratch: &mut EvalScratch) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::robust::log_lik_batch,
+            (self, theta, idx, ll, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_both_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::robust::log_both_batch,
+            (self, theta, idx, ll, lb, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn pseudo_grad_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::robust::pseudo_grad_batch,
+            (self, theta, idx, ll, lb, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_lik_grad_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::robust::log_lik_grad_batch,
+            (self, theta, idx, ll, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_bound_product_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        scratch: &mut EvalScratch,
+    ) -> f64 {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::robust::log_bound_product_batch,
+            (self, theta, idx, scratch)
+        )
     }
 
     // lint: zero-alloc

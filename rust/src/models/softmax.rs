@@ -11,17 +11,23 @@
 //!               sum_n eta^T A eta = 1/2 [ sum_k theta_k^T S theta_k
 //!                                         - (1/K) v^T S v ],  v = sum_k theta_k.
 //!
-//! `theta` is flattened row-major [K, D]. Feature rows are read through the
-//! dataset's [`crate::data::store::DataStore`] via the scratch-owned row
-//! cache (the per-datum methods split the scratch so the row borrow and the
-//! η/∂B buffers coexist); dense-backed chains are bit-identical to the
-//! pre-`DataStore` code.
+//! `theta` is flattened row-major [K, D]. Evaluation routes through the
+//! batched SoA tile kernels in [`crate::kernels::softmax`] (feature rows
+//! gathered `W = 8` lanes at a time from the dataset's
+//! [`crate::data::store::DataStore`], logits scattered into the lane-major
+//! `scratch.lane_eta` buffer so each lane's η is contiguous); the
+//! per-datum `ModelBound` methods are batch-of-1 views of the same
+//! kernels, and the per-lane dot product reproduces
+//! [`crate::linalg::dot`]'s association exactly, so likelihood/bound
+//! values are bit-identical for every batch composition (DESIGN.md
+//! §Kernels).
 
 use std::sync::Arc;
 
 use super::{EvalScratch, ModelBound, ModelKind};
 use crate::data::store::RowCache;
 use crate::data::SoftmaxData;
+use crate::kernels::{self, dispatch_path};
 use crate::linalg::{axpy, dot, Matrix};
 use crate::util::math::logsumexp;
 
@@ -37,7 +43,7 @@ pub struct SoftmaxBohning {
     g_mat: Matrix,    // [K, D]: sum (g_n + A psi_n) x_n^T
     c0: f64,
     /// number of classes K (cached from the data)
-    k: usize,
+    pub(crate) k: usize,
 }
 
 impl SoftmaxBohning {
@@ -120,7 +126,7 @@ impl SoftmaxBohning {
     }
 
     /// log B_n (unclamped) and d logB/d eta into `dlb`.
-    fn log_bound_and_deta(&self, eta: &[f64], n: usize, dlb: Option<&mut [f64]>) -> f64 {
+    pub(crate) fn log_bound_and_deta(&self, eta: &[f64], n: usize, dlb: Option<&mut [f64]>) -> f64 {
         let k = self.k;
         let psi = self.psi_of(n);
         let lse_psi = logsumexp(psi);
@@ -169,12 +175,13 @@ impl ModelBound for SoftmaxBohning {
         EvalScratch::sized(self.dim(), self.n_classes()).with_rows(self.data.x.new_cache())
     }
 
+    // --- per-datum API: batch-of-1 views of the kernel layer ---
+
     // lint: zero-alloc
     fn log_lik(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> f64 {
-        let EvalScratch { rows, eta, .. } = scratch;
-        let eta = &mut eta[..self.k];
-        self.logits(theta, n, rows, eta);
-        eta[self.data.labels[n]] - logsumexp(eta)
+        let mut ll = [0.0];
+        self.log_lik_batch(theta, &[n as u32], &mut ll, scratch);
+        ll[0]
     }
 
     // lint: zero-alloc
@@ -185,29 +192,15 @@ impl ModelBound for SoftmaxBohning {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) {
-        let (k, d) = (self.k, self.data.d());
-        let EvalScratch { rows, eta, .. } = scratch;
-        let eta = &mut eta[..k];
-        let row = self.data.x.row(n, rows);
-        for (kk, o) in eta.iter_mut().enumerate() {
-            *o = dot(&theta[kk * d..(kk + 1) * d], row);
-        }
-        let lse = logsumexp(eta);
-        for kk in 0..k {
-            let coeff =
-                (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
-            axpy(coeff, row, &mut grad[kk * d..(kk + 1) * d]);
-        }
+        let mut ll = [0.0];
+        self.log_lik_grad_batch(theta, &[n as u32], &mut ll, grad, scratch);
     }
 
     // lint: zero-alloc
     fn log_both(&self, theta: &[f64], n: usize, scratch: &mut EvalScratch) -> (f64, f64) {
-        let EvalScratch { rows, eta, .. } = scratch;
-        let eta = &mut eta[..self.k];
-        self.logits(theta, n, rows, eta);
-        let ll = eta[self.data.labels[n]] - logsumexp(eta);
-        let lb = self.log_bound_and_deta(eta, n, None).min(ll);
-        (ll, lb)
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.log_both_batch(theta, &[n as u32], &mut ll, &mut lb, scratch);
+        (ll[0], lb[0])
     }
 
     // lint: zero-alloc
@@ -218,24 +211,8 @@ impl ModelBound for SoftmaxBohning {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) {
-        let (k, d) = (self.k, self.data.d());
-        let EvalScratch { rows, eta, dlb, .. } = scratch;
-        let eta = &mut eta[..k];
-        let dlb = &mut dlb[..k];
-        let row = self.data.x.row(n, rows);
-        for (kk, o) in eta.iter_mut().enumerate() {
-            *o = dot(&theta[kk * d..(kk + 1) * d], row);
-        }
-        let lse = logsumexp(eta);
-        let ll = eta[self.data.labels[n]] - lse;
-        let lb = self.log_bound_and_deta(eta, n, Some(&mut *dlb)).min(ll);
-        let ed = (lb - ll).min(-1e-12).exp();
-        for kk in 0..k {
-            let dll =
-                (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
-            let coeff = (dll - ed * dlb[kk]) / (1.0 - ed) - dlb[kk];
-            axpy(coeff, row, &mut grad[kk * d..(kk + 1) * d]);
-        }
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.pseudo_grad_batch(theta, &[n as u32], &mut ll, &mut lb, grad, scratch);
     }
 
     // lint: zero-alloc
@@ -246,25 +223,83 @@ impl ModelBound for SoftmaxBohning {
         grad: &mut [f64],
         scratch: &mut EvalScratch,
     ) -> (f64, f64) {
-        let (k, d) = (self.k, self.data.d());
-        let EvalScratch { rows, eta, dlb, .. } = scratch;
-        let eta = &mut eta[..k];
-        let dlb = &mut dlb[..k];
-        let row = self.data.x.row(n, rows);
-        for (kk, o) in eta.iter_mut().enumerate() {
-            *o = dot(&theta[kk * d..(kk + 1) * d], row);
-        }
-        let lse = logsumexp(eta);
-        let ll = eta[self.data.labels[n]] - lse;
-        let lb = self.log_bound_and_deta(eta, n, Some(&mut *dlb)).min(ll);
-        let ed = (lb - ll).min(-1e-12).exp();
-        for kk in 0..k {
-            let dll =
-                (if kk == self.data.labels[n] { 1.0 } else { 0.0 }) - (eta[kk] - lse).exp();
-            let coeff = (dll - ed * dlb[kk]) / (1.0 - ed) - dlb[kk];
-            axpy(coeff, row, &mut grad[kk * d..(kk + 1) * d]);
-        }
-        (ll, lb)
+        let (mut ll, mut lb) = ([0.0], [0.0]);
+        self.pseudo_grad_batch(theta, &[n as u32], &mut ll, &mut lb, grad, scratch);
+        (ll[0], lb[0])
+    }
+
+    // --- batch API: dispatch to the SoA tile kernels (DESIGN.md §Kernels) ---
+
+    // lint: zero-alloc
+    fn log_lik_batch(&self, theta: &[f64], idx: &[u32], ll: &mut [f64], scratch: &mut EvalScratch) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::softmax::log_lik_batch,
+            (self, theta, idx, ll, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_both_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::softmax::log_both_batch,
+            (self, theta, idx, ll, lb, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn pseudo_grad_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::softmax::pseudo_grad_batch,
+            (self, theta, idx, ll, lb, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_lik_grad_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::softmax::log_lik_grad_batch,
+            (self, theta, idx, ll, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_bound_product_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        scratch: &mut EvalScratch,
+    ) -> f64 {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::softmax::log_bound_product_batch,
+            (self, theta, idx, scratch)
+        )
     }
 
     // lint: zero-alloc

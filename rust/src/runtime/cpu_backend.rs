@@ -2,7 +2,10 @@
 //!
 //! Reference implementation of [`BatchEval`] over any [`ModelBound`]; used
 //! for baselines, tests (numerics cross-check against the XLA artifacts),
-//! and as the default when no artifact matches the model's shape.
+//! and as the default when no artifact matches the model's shape. Each
+//! evaluation is one call into the model's batch API, which tiles the
+//! index list through the SoA kernels (DESIGN.md §Kernels); likelihood
+//! and bound values are bit-identical to the historical per-datum loop.
 
 use std::sync::Arc;
 
@@ -16,8 +19,8 @@ pub struct CpuBackend {
     /// the model whose likelihoods/bounds this backend evaluates
     pub model: Arc<dyn ModelBound>,
     counters: Counters,
-    /// reusable per-datum evaluation scratch (allocated once here, so the
-    /// per-datum model calls never allocate — DESIGN.md §Perf)
+    /// reusable evaluation scratch — tile/lane buffers included (allocated
+    /// once here, so the batch model calls never allocate — DESIGN.md §Perf)
     scratch: EvalScratch,
 }
 
@@ -54,13 +57,9 @@ impl BatchEval for CpuBackend {
         self.counters.add_bound(idx.len() as u64);
         ll.clear();
         lb.clear();
-        ll.reserve(idx.len());
-        lb.reserve(idx.len());
-        for &n in idx {
-            let (l, b) = self.model.log_both(theta, n as usize, &mut self.scratch);
-            ll.push(l);
-            lb.push(b);
-        }
+        ll.resize(idx.len(), 0.0);
+        lb.resize(idx.len(), 0.0);
+        self.model.log_both_batch(theta, idx, ll, lb, &mut self.scratch);
         self.flush_cache_stats();
     }
 
@@ -76,25 +75,17 @@ impl BatchEval for CpuBackend {
         self.counters.add_bound(idx.len() as u64);
         ll.clear();
         lb.clear();
-        ll.reserve(idx.len());
-        lb.reserve(idx.len());
-        for &n in idx {
-            let (l, b) = self
-                .model
-                .log_both_pseudo_grad(theta, n as usize, grad, &mut self.scratch);
-            ll.push(l);
-            lb.push(b);
-        }
+        ll.resize(idx.len(), 0.0);
+        lb.resize(idx.len(), 0.0);
+        self.model.pseudo_grad_batch(theta, idx, ll, lb, grad, &mut self.scratch);
         self.flush_cache_stats();
     }
 
     fn eval_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
         self.counters.add_lik(idx.len() as u64);
         ll.clear();
-        ll.reserve(idx.len());
-        for &n in idx {
-            ll.push(self.model.log_lik(theta, n as usize, &mut self.scratch));
-        }
+        ll.resize(idx.len(), 0.0);
+        self.model.log_lik_batch(theta, idx, ll, &mut self.scratch);
         self.flush_cache_stats();
     }
 
@@ -105,10 +96,10 @@ impl BatchEval for CpuBackend {
         ll: &mut Vec<f64>,
         grad: &mut [f64],
     ) {
-        self.eval_lik(theta, idx, ll);
-        for &n in idx {
-            self.model.log_lik_grad_acc(theta, n as usize, grad, &mut self.scratch);
-        }
+        self.counters.add_lik(idx.len() as u64);
+        ll.clear();
+        ll.resize(idx.len(), 0.0);
+        self.model.log_lik_grad_batch(theta, idx, ll, grad, &mut self.scratch);
         self.flush_cache_stats();
     }
 }

@@ -2,9 +2,11 @@
 //!
 //! Everything the samplers need from the likelihood layer goes through
 //! [`BatchEval`]: per-point (log L, log B) over an index set, plus summed
-//! gradients. The CPU backend computes directly; the XLA backend pads the
+//! gradients. The CPU backends hand the whole index set to the model's
+//! batch API, which tiles it through the `W = 8`-lane SoA kernels
+//! ([`crate::kernels`], DESIGN.md §Kernels); the XLA backend pads the
 //! index set to a bucket and executes the AOT-compiled artifact. Query
-//! counting happens here so both backends account identically.
+//! counting happens here so all backends account identically.
 //!
 //! Index sets are `&[u32]` — the same element type `BrightSet` stores — so
 //! the FlyMC hot path hands `BrightSet::bright_slice()` straight to the

@@ -11,14 +11,18 @@
 //! `rust/tests/integration_parallel.rs`):
 //!
 //! * `ll` / `lb` outputs are **bit-identical** to `CpuBackend` for any batch
-//!   and any thread count: every datum is evaluated by exactly the same
-//!   scalar code on one thread, and each task writes a disjoint slice of
-//!   the output buffers, so no floating-point reduction order changes.
+//!   and any thread count: the SoA kernels compute each datum's value from
+//!   its own lane alone (the per-lane dot reproduces `linalg::dot`'s
+//!   association; see DESIGN.md §Kernels), so re-chunking the batch across
+//!   groups never changes a value, and each task writes a disjoint slice
+//!   of the output buffers.
 //! * Gradient accumulations still produce one partial sum **per shard**
-//!   (never per group or per thread) and reduce them **in shard order**, so
-//!   they are deterministic for a fixed shard size regardless of thread
-//!   count or scheduling — grouping only decides which worker computes a
-//!   shard's partial, never its bits or its place in the reduction.
+//!   (never per group or per thread) — each shard is tiled from its own
+//!   start, so a shard's partial depends only on its contents — and reduce
+//!   them **in shard order**, so they are deterministic for a fixed shard
+//!   size regardless of thread count or scheduling: grouping only decides
+//!   which worker computes a shard's partial, never its bits or its place
+//!   in the reduction.
 //! * Query accounting is identical to `CpuBackend` — `idx.len()` likelihood
 //!   (+ bound) queries per call — so the paper's cost unit does not drift
 //!   when the backend goes parallel.
@@ -188,11 +192,7 @@ impl BatchEval for ParBackend {
                 .zip(ll_s.par_chunks_mut(sup).zip(lb_s.par_chunks_mut(sup)))
                 .zip(scratch.par_iter_mut())
                 .for_each(|((ids, (lls, lbs)), sc)| {
-                    for ((&n, l), b) in ids.iter().zip(lls.iter_mut()).zip(lbs.iter_mut()) {
-                        let (lv, bv) = model.log_both(theta, n as usize, sc);
-                        *l = lv;
-                        *b = bv;
-                    }
+                    model.log_both_batch(theta, ids, lls, lbs, sc);
                 });
         };
         run_in(pool, run);
@@ -241,14 +241,7 @@ impl BatchEval for ParBackend {
                             .zip(lbs.chunks_mut(shard))
                             .zip(gslab.chunks_mut(dim))
                         {
-                            for ((&n, l), b) in
-                                sids.iter().zip(slls.iter_mut()).zip(slbs.iter_mut())
-                            {
-                                let (lv, bv) =
-                                    model.log_both_pseudo_grad(theta, n as usize, g, sc);
-                                *l = lv;
-                                *b = bv;
-                            }
+                            model.pseudo_grad_batch(theta, sids, slls, slbs, g, sc);
                         }
                     });
             };
@@ -278,9 +271,7 @@ impl BatchEval for ParBackend {
                 .zip(ll_s.par_chunks_mut(sup))
                 .zip(scratch.par_iter_mut())
                 .for_each(|((ids, lls), sc)| {
-                    for (&n, l) in ids.iter().zip(lls.iter_mut()) {
-                        *l = model.log_lik(theta, n as usize, sc);
-                    }
+                    model.log_lik_batch(theta, ids, lls, sc);
                 });
         };
         run_in(pool, run);
@@ -322,10 +313,7 @@ impl BatchEval for ParBackend {
                             .zip(lls.chunks_mut(shard))
                             .zip(gslab.chunks_mut(dim))
                         {
-                            for (&n, l) in sids.iter().zip(slls.iter_mut()) {
-                                *l = model.log_lik(theta, n as usize, sc);
-                                model.log_lik_grad_acc(theta, n as usize, g, sc);
-                            }
+                            model.log_lik_grad_batch(theta, sids, slls, g, sc);
                         }
                     });
             };

@@ -140,6 +140,7 @@ mod enabled {
             let mut bufs = std::mem::take(&mut self.bufs);
             self.source
                 .fill_inputs(idx, bucket, &mut bufs, &mut self.row_cache);
+            bufs.check_shape(bucket, d, aux_w);
             self.counters.add_padded((bucket - idx.len()) as u64);
 
             let theta_lit = xla::Literal::vec1(theta).reshape(&self.theta_dims)?;

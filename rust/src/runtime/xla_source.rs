@@ -9,7 +9,8 @@
 
 use std::sync::Arc;
 
-use crate::data::store::RowCache;
+use crate::data::store::{DataStore, RowCache};
+use crate::kernels::W;
 use crate::models::{LogisticJJ, ModelBound, ModelKind, RobustT, SoftmaxBohning};
 
 /// Input buffers for one padded chunk, in artifact argument order after
@@ -24,6 +25,38 @@ pub struct BatchBufs {
     pub aux2: Vec<f64>,
     /// 1.0 for live lanes, 0.0 for padding
     pub mask: Vec<f64>,
+    /// W-lane gather scratch (`D × W` column-major, see `DataStore::gather_tile`)
+    tile: Vec<f64>,
+}
+
+impl BatchBufs {
+    /// Append `idx`'s feature rows to `x`, each element scaled by `scale`:
+    /// rows come in through the same [`DataStore::gather_tile`] path the
+    /// CPU kernels use (W lanes at a time, identical reads in identical
+    /// order), then transpose back to the artifact's row-major layout.
+    /// `scale = 1.0` reproduces the raw row bits exactly.
+    fn gather_rows(&mut self, store: &DataStore, idx: &[u32], scale: f64, rows: &mut RowCache) {
+        let d = store.d();
+        self.tile.resize(d * W, 0.0);
+        for chunk in idx.chunks(W) {
+            store.gather_tile(chunk, rows, &mut self.tile);
+            for l in 0..chunk.len() {
+                for j in 0..d {
+                    self.x.push(self.tile[j * W + l] * scale);
+                }
+            }
+        }
+    }
+
+    /// Assert the filled buffers match the artifact's `(bucket, d, aux_w)`
+    /// shape — backends call this before handing pointers to PJRT (or, in
+    /// the stub, before faking an execution).
+    pub fn check_shape(&self, bucket: usize, d: usize, aux_w: usize) {
+        assert_eq!(self.x.len(), bucket * d, "x buffer shape");
+        assert_eq!(self.aux1.len(), bucket * aux_w, "aux1 buffer shape");
+        assert_eq!(self.aux2.len(), bucket * aux_w, "aux2 buffer shape");
+        assert_eq!(self.mask.len(), bucket, "mask buffer shape");
+    }
 }
 
 /// A model that can feed the fixed-shape XLA artifacts (see module docs).
@@ -87,9 +120,9 @@ impl XlaSource for LogisticJJ {
     fn fill_inputs(&self, idx: &[u32], bucket: usize, bufs: &mut BatchBufs, rows: &mut RowCache) {
         let d = self.data.d();
         pad_common(bufs, d, 1, bucket);
+        bufs.gather_rows(&self.data.x, idx, 1.0, rows);
         for &n in idx {
             let n = n as usize;
-            bufs.x.extend_from_slice(self.data.x.row(n, rows));
             bufs.aux1.push(self.data.t[n]);
             bufs.aux2.push(self.xi[n]);
             bufs.mask.push(1.0);
@@ -100,6 +133,7 @@ impl XlaSource for LogisticJJ {
             bufs.aux2.push(1.0);
             bufs.mask.push(0.0);
         }
+        bufs.check_shape(bucket, d, 1);
     }
 }
 
@@ -124,9 +158,9 @@ impl XlaSource for SoftmaxBohning {
         let d = self.data.d();
         let k = self.data.k;
         pad_common(bufs, d, k, bucket);
+        bufs.gather_rows(&self.data.x, idx, 1.0, rows);
         for &n in idx {
             let n = n as usize;
-            bufs.x.extend_from_slice(self.data.x.row(n, rows));
             for kk in 0..k {
                 bufs.aux1
                     .push(if kk == self.data.labels[n] { 1.0 } else { 0.0 });
@@ -141,6 +175,7 @@ impl XlaSource for SoftmaxBohning {
             bufs.aux2.extend(std::iter::repeat(0.0).take(k));
             bufs.mask.push(0.0);
         }
+        bufs.check_shape(bucket, d, k);
     }
 }
 
@@ -165,10 +200,9 @@ impl XlaSource for RobustT {
         let d = self.data.d();
         let inv_s = 1.0 / self.sigma;
         pad_common(bufs, d, 1, bucket);
+        bufs.gather_rows(&self.data.x, idx, inv_s, rows);
         for &n in idx {
             let n = n as usize;
-            bufs.x
-                .extend(self.data.x.row(n, rows).iter().map(|&v| v * inv_s));
             bufs.aux1.push(self.data.y[n] * inv_s);
             bufs.aux2.push(self.u0[n] * inv_s * inv_s);
             bufs.mask.push(1.0);
@@ -179,6 +213,7 @@ impl XlaSource for RobustT {
             bufs.aux2.push(1.0);
             bufs.mask.push(0.0);
         }
+        bufs.check_shape(bucket, d, 1);
     }
 }
 
@@ -214,6 +249,41 @@ mod tests {
             assert_eq!(row.iter().sum::<f64>(), 1.0);
             assert_eq!(row[data.labels[n]], 1.0);
         }
+    }
+
+    #[test]
+    fn fill_crosses_tile_boundaries_bit_exactly() {
+        // 11 live rows = one full W-lane tile plus a 3-lane remainder; the
+        // transposed gather must reproduce every row's bits in row-major x.
+        let data = Arc::new(synth::synth_mnist(40, 6, 9));
+        let m = LogisticJJ::new(data, 1.5);
+        let mut bufs = BatchBufs::default();
+        let mut rows = m.new_row_cache();
+        let idx: Vec<u32> = (0..11).map(|i| (i * 3) as u32).collect();
+        let d = m.data.d();
+        m.fill_inputs(&idx, 16, &mut bufs, &mut rows);
+        let dense = m.data.x.as_dense().unwrap();
+        for (i, &n) in idx.iter().enumerate() {
+            for j in 0..d {
+                assert_eq!(
+                    bufs.x[i * d + j].to_bits(),
+                    dense.row(n as usize)[j].to_bits(),
+                    "row {i} feature {j}"
+                );
+            }
+        }
+        bufs.check_shape(16, d, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "x buffer shape")]
+    fn check_shape_rejects_wrong_bucket() {
+        let data = Arc::new(synth::synth_mnist(10, 4, 5));
+        let m = LogisticJJ::new(data, 1.5);
+        let mut bufs = BatchBufs::default();
+        let mut rows = m.new_row_cache();
+        m.fill_inputs(&[1, 2], 4, &mut bufs, &mut rows);
+        bufs.check_shape(8, m.data.d(), 1); // wrong bucket
     }
 
     #[test]

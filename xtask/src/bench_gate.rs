@@ -5,13 +5,18 @@
 //! 1. **allocs/iter == 0** for every FlyMC algorithm in `BENCH_hotpath.json`
 //!    — live immediately, no baseline needed (the steady state of the
 //!    sampler must never touch the allocator).
-//! 2. **queries/iter drift** — once `BENCH_baseline/BENCH_hotpath.json` is
+//! 2. **kernel identity** — `BENCH_hotpath.json` must report
+//!    `kernel_identity: true`: the bench re-runs a short chain on the
+//!    scalar and the autovectorized kernel paths and compares the traces
+//!    byte-for-byte (DESIGN.md §Kernels). Live immediately; a missing
+//!    field fails too, so the bench can never silently stop checking.
+//! 3. **queries/iter drift** — once `BENCH_baseline/BENCH_hotpath.json` is
 //!    committed without its `"pending"` flag, measured queries/iter must
 //!    match the baseline to 1e-6 relative (query counts are deterministic
 //!    given the seeds, so any drift is a behavior change, not noise).
-//! 3. **trace identity** — `BENCH_dataio.json` must report
+//! 4. **trace identity** — `BENCH_dataio.json` must report
 //!    `trace_identity_dense_vs_block: true`.
-//! 4. **checkpoint size drift** — with a non-pending checkpoint baseline,
+//! 5. **checkpoint size drift** — with a non-pending checkpoint baseline,
 //!    `ckpt_bytes` must match exactly per scenario (the format is
 //!    deterministic; wall-clock fields are never gated).
 //!
@@ -279,6 +284,15 @@ pub fn run(args: &[String]) -> Result<(), String> {
                 ));
             }
         }
+    }
+    // -- hotpath: scalar vs vectorized kernel paths must agree bitwise ----
+    match measured_hot.get("kernel_identity").and_then(Json::bool_val) {
+        Some(true) => {}
+        other => failures.push(format!(
+            "hotpath: kernel_identity = {other:?} (must be true — the scalar and \
+             autovectorized SoA kernel paths must produce byte-identical traces; \
+             a missing field means the bench stopped checking)"
+        )),
     }
     match load(bdir, "BENCH_hotpath.json")? {
         Some(base) if !is_pending(&base) => {

@@ -11,7 +11,9 @@
 //! * `unsafe-safety-comment` — every `unsafe` carries a `// SAFETY:` note.
 //! * `codec-symmetry` — `save_state`/`load_state` pairs write and read the
 //!   same field sequence.
-//! * `float-reduce-order` — unordered parallel float reductions.
+//! * `float-reduce-order` — unordered parallel float reductions
+//!   (`.fold`/`.reduce` combining through the canonical kernel trees
+//!   `tree8`/`dot_lanes` are order-pinned and exempt).
 
 use crate::scan::{line_of, FileView};
 
@@ -63,8 +65,16 @@ fn find_word(hay: &str, word: &str) -> Vec<usize> {
 /// Modules where iteration order feeds observable output, so HashMap /
 /// HashSet (randomized iteration since they hash-seed per process) are
 /// banned in favor of BTreeMap / sorted vectors.
-const DET_MODULES: &[&str] =
-    &["flymc", "engine", "samplers", "diagnostics", "data", "linalg", "runtime"];
+const DET_MODULES: &[&str] = &[
+    "flymc",
+    "engine",
+    "samplers",
+    "diagnostics",
+    "data",
+    "linalg",
+    "runtime",
+    "kernels",
+];
 
 fn nondeterministic_order(view: &FileView, diags: &mut Vec<Diag>) {
     let in_det_module = DET_MODULES.iter().any(|m| {
@@ -638,6 +648,26 @@ const PAR_ADAPTERS: &[&str] = &[
 
 const UNORDERED_REDUCERS: &[&str] = &["sum", "product", "reduce", "fold"];
 
+/// Fixed-shape reduction trees from `crate::kernels` whose combine order is
+/// deterministic by construction (`tree8` is a literal 8-leaf tree,
+/// `dot_lanes` the canonical 4-accumulator dot association). A parallel
+/// `.reduce`/`.fold` whose combine step routes through one of these is
+/// order-pinned regardless of work stealing, so it is not a violation.
+const CANONICAL_REDUCERS: &[&str] = &["tree8", "dot_lanes"];
+
+/// Does the argument list of the reducer call starting at the `(` at
+/// `open` mention a canonical kernel reducer?
+fn reducer_args_canonical(flat: &str, open: usize, limit: usize) -> bool {
+    let Some(close) = matching_paren(flat, open) else {
+        return false;
+    };
+    if close > limit {
+        return false;
+    }
+    let args = &flat[open + 1..close];
+    CANONICAL_REDUCERS.iter().any(|c| !find_word(args, c).is_empty())
+}
+
 fn float_reduce_order(view: &FileView, diags: &mut Vec<Diag>) {
     let (flat, starts) = view.flat_code();
     let b = flat.as_bytes();
@@ -671,6 +701,20 @@ fn float_reduce_order(view: &FileView, diags: &mut Vec<Diag>) {
                     && b[start - 1] == b'.'
                     && armed == Some(depth)
                 {
+                    // `.fold`/`.reduce` combining through a canonical kernel
+                    // tree (tree8 / dot_lanes) has a pinned association —
+                    // skip it. Find the call's `(` past whitespace/turbofish.
+                    let mut k = i;
+                    while k < b.len() && b[k] != b'(' && b[k] != b';' && b[k] != b'{' {
+                        k += 1;
+                    }
+                    if k < b.len()
+                        && b[k] == b'('
+                        && matches!(word, "reduce" | "fold")
+                        && reducer_args_canonical(&flat, k, b.len())
+                    {
+                        continue;
+                    }
                     diags.push(Diag {
                         lint: "float-reduce-order",
                         path: view.path.clone(),

@@ -1,0 +1,16 @@
+use rayon::prelude::*;
+
+/// Literal 8-leaf reduction tree — combine order pinned by construction.
+fn tree8(p: [f64; 8]) -> f64 {
+    ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]))
+}
+
+/// Parallel reduce whose combine step routes through the canonical tree:
+/// the float association is fixed no matter how rayon schedules the
+/// splits, so `float-reduce-order` must not fire here.
+pub fn lane_total(tiles: &[[f64; 8]]) -> f64 {
+    tiles
+        .par_iter()
+        .map(|t| tree8(*t))
+        .reduce(|| 0.0, |a, b| tree8([a, b, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]))
+}

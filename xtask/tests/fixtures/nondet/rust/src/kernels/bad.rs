@@ -1,0 +1,8 @@
+use std::collections::HashSet;
+
+/// `kernels` is a determinism-critical module: lane composition must not
+/// depend on randomized iteration order.
+pub fn lane_set(idx: &[u32]) -> usize {
+    let s: HashSet<u32> = idx.iter().copied().collect();
+    s.len()
+}

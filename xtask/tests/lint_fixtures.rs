@@ -47,6 +47,8 @@ fn hashmap_in_det_module_fails() {
     assert_eq!(out.code, Some(1));
     assert!(out.stdout.contains("[nondeterministic-order]"), "{}", out.stdout);
     assert!(out.stdout.contains("rust/src/engine/bad.rs"), "{}", out.stdout);
+    // `kernels` is determinism-critical too (lane composition feeds bits)
+    assert!(out.stdout.contains("rust/src/kernels/bad.rs"), "{}", out.stdout);
 }
 
 #[test]
@@ -102,6 +104,15 @@ fn parallel_unordered_reduction_fails() {
 }
 
 #[test]
+fn canonical_tree_reduce_passes() {
+    // a parallel .reduce whose combine routes through tree8 has a pinned
+    // association — the float-reduce-order lint must treat it as ordered
+    let out = lint_fixture("canonreduce");
+    assert!(out.ok, "canonical-reducer fixture must pass:\n{}{}", out.stdout, out.stderr);
+    assert!(out.stdout.contains("0 violation(s)"), "{}", out.stdout);
+}
+
+#[test]
 fn allowlist_suppresses_with_reason() {
     let out = lint_fixture("allowed");
     assert!(out.ok, "allowlisted fixture must pass:\n{}{}", out.stdout, out.stderr);
@@ -136,6 +147,19 @@ fn bench_gate_rejects_allocating_flymc() {
     assert!(!out.ok);
     assert!(out.stderr.contains("allocs_per_iter"), "{}", out.stderr);
     assert!(out.stderr.contains("MAP-tuned FlyMC"), "{}", out.stderr);
+    // the fixture predates the kernel layer: its missing kernel_identity
+    // field must itself be a violation (the bench can't stop checking)
+    assert!(out.stderr.contains("kernel_identity"), "{}", out.stderr);
+}
+
+#[test]
+fn bench_gate_rejects_kernel_path_divergence() {
+    // allocs are clean here; the only violation is kernel_identity: false
+    let dir = fixture("benchkern");
+    let out = run_xtask(&["bench-gate", "--measured", &dir, "--baseline", &dir]);
+    assert!(!out.ok);
+    assert!(out.stderr.contains("kernel_identity"), "{}", out.stderr);
+    assert!(out.stderr.contains("1 bench-gate violation"), "{}", out.stderr);
 }
 
 #[test]
