@@ -1,0 +1,264 @@
+//! Head-to-head competitor bench: FlyMC vs full-data MH vs the approximate
+//! baselines (SGLD, austerity MH) on all three paper workloads.
+//!
+//! For every workload × algorithm the bench reports
+//!
+//! * **ESS/sec** — minimum-component effective sample size of the recorded
+//!   θ-trace (projected onto the leading 3 components, same projection for
+//!   every algorithm) divided by sampling wall-clock,
+//! * **queries/iter** — mean post-burnin likelihood queries per iteration,
+//!   the paper's cost unit, metered identically for exact and approximate
+//!   samplers through the shared `BatchEval` path,
+//! * **bias** — the worst |z| from `testing::posterior_check`'s two-sample
+//!   moment/quantile battery against a long full-data reference chain run
+//!   at the same seed (so both chains share θ0). For the exact samplers
+//!   this is calibrated noise (|z| below the Bonferroni threshold); for the
+//!   approximate samplers it measures the subsampling bias the paper's
+//!   exactness claim is about,
+//!
+//! and emits `BENCH_head2head.json`, validated by `cargo xtask bench-gate`
+//! (every workload × algorithm entry must carry finite `ess_per_sec`,
+//! `queries_per_iter`, and `bias_max_abs_z` fields).
+//!
+//!     cargo bench --bench head2head                # full per-task sizes
+//!     cargo bench --bench head2head -- --smoke     # CI smoke mode
+//!
+//! `--seed` is the only other knob; sizes are fixed per task so trajectory
+//! points stay comparable across PRs. The bias column is never NaN: a
+//! degenerate report (NaN z-score) is clamped to the finite sentinel 1e9,
+//! which no calibrated chain can reach.
+
+use firefly::bench_harness::{fmt_time, Report};
+use firefly::cli::Args;
+use firefly::configx::{Algorithm, ExperimentConfig, Task};
+use firefly::diagnostics::{ess_min_components, TraceMatrix};
+use firefly::engine::run_experiment;
+use firefly::testing::posterior_check::check_against_reference;
+
+/// Two-sample battery size (see `posterior_check`): alpha for the
+/// Bonferroni-corrected threshold reported next to each bias value.
+const ALPHA: f64 = 1e-3;
+
+/// Components kept for the ESS and bias statistics — a fixed, small
+/// projection keeps the Bonferroni battery identical across workloads
+/// whose full dimensions differ by two orders of magnitude.
+const PROJ: usize = 3;
+
+/// Finite sentinel for a degenerate (NaN/∞) bias statistic.
+const BIAS_SENTINEL: f64 = 1e9;
+
+struct Workload {
+    task: Task,
+    label: &'static str,
+    sampler: &'static str,
+    n: usize,
+    iters: usize,
+    burnin: usize,
+    ref_iters: usize,
+}
+
+struct Row {
+    algo_key: &'static str,
+    algo_label: &'static str,
+    ess_per_sec: f64,
+    queries_per_iter: f64,
+    bias: f64,
+    threshold: f64,
+    passed: bool,
+    wallclock: f64,
+}
+
+/// Keep the first `k` components of a recorded trace.
+fn project(trace: &TraceMatrix, k: usize) -> TraceMatrix {
+    let k = k.min(trace.dim());
+    let mut out = TraceMatrix::with_capacity(k, trace.n_rows());
+    for row in trace.rows() {
+        out.push_row(&row[..k]);
+    }
+    out
+}
+
+fn base_cfg(w: &Workload, algorithm: Algorithm, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        task: w.task,
+        algorithm,
+        n_data: Some(w.n),
+        iters: w.iters,
+        burnin: w.burnin,
+        map_steps: 60,
+        chains: 1,
+        record_every: 0,
+        seed,
+        ..Default::default()
+    };
+    match algorithm {
+        Algorithm::Sgld => {
+            cfg.minibatch = (w.n / 10).clamp(10, 100);
+            // moderate near-constant step: small enough to track the
+            // posterior, large enough to move in bench-scale chains
+            cfg.sgld_step_a = match w.task {
+                Task::SoftmaxCifar => 1e-5,
+                _ => 1e-4,
+            };
+            cfg.sgld_step_b = 1.0;
+            cfg.sgld_step_gamma = 0.33;
+        }
+        Algorithm::Austerity => {
+            cfg.minibatch = (w.n / 10).clamp(10, 100);
+            cfg.austerity_eps = 0.05;
+        }
+        _ => {}
+    }
+    cfg
+}
+
+fn run_algo(w: &Workload, algorithm: Algorithm, seed: u64, reference: &TraceMatrix) -> Row {
+    let cfg = base_cfg(w, algorithm, seed);
+    let res = run_experiment(&cfg).expect("run experiment");
+    let chain = &res.chains[0];
+    let trace = project(&chain.theta_trace, PROJ);
+    let report = check_against_reference(&trace, reference, ALPHA);
+    let raw_bias = report.max_abs_z();
+    let bias = if raw_bias.is_finite() { raw_bias } else { BIAS_SENTINEL };
+    let ess = ess_min_components(&trace);
+    let secs = chain.wallclock_secs.max(1e-9);
+    let ess_per_sec = ess / secs;
+    Row {
+        algo_key: match algorithm {
+            Algorithm::RegularMcmc => "full",
+            Algorithm::MapTunedFlyMc => "flymc",
+            Algorithm::Sgld => "sgld",
+            Algorithm::Austerity => "austerity",
+            Algorithm::UntunedFlyMc => "flymc_untuned",
+        },
+        algo_label: algorithm.label(),
+        ess_per_sec: if ess_per_sec.is_finite() { ess_per_sec } else { 0.0 },
+        queries_per_iter: res.table_row().avg_lik_queries_per_iter,
+        bias,
+        threshold: report.threshold,
+        passed: report.passed(),
+        wallclock: chain.wallclock_secs,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 11);
+
+    // Per-task sizes. The full-data MH reference bounds the runtime (N
+    // likelihood queries per iteration; slice on robust: ~10·N), so the
+    // softmax/robust workloads run smaller N. Fixed per mode — trajectory
+    // points stay comparable across PRs.
+    let workloads = [
+        Workload {
+            task: Task::LogisticMnist,
+            label: "logistic",
+            sampler: "rwmh",
+            n: if smoke { 300 } else { 2000 },
+            iters: if smoke { 600 } else { 6000 },
+            burnin: if smoke { 200 } else { 2000 },
+            ref_iters: if smoke { 1500 } else { 15000 },
+        },
+        Workload {
+            task: Task::SoftmaxCifar,
+            label: "softmax",
+            sampler: "mala",
+            n: if smoke { 60 } else { 400 },
+            iters: if smoke { 240 } else { 1500 },
+            burnin: if smoke { 80 } else { 500 },
+            ref_iters: if smoke { 600 } else { 3600 },
+        },
+        Workload {
+            task: Task::RobustOpv,
+            label: "robust",
+            sampler: "slice",
+            n: if smoke { 200 } else { 800 },
+            iters: if smoke { 300 } else { 2000 },
+            burnin: if smoke { 100 } else { 600 },
+            ref_iters: if smoke { 800 } else { 5000 },
+        },
+    ];
+
+    const ALGOS: [Algorithm; 4] = [
+        Algorithm::RegularMcmc,
+        Algorithm::MapTunedFlyMc,
+        Algorithm::Sgld,
+        Algorithm::Austerity,
+    ];
+
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"head2head\",\n");
+    json.push_str(&format!("  \"smoke\": {smoke},\n"));
+    json.push_str(&format!("  \"alpha\": {ALPHA:e},\n"));
+    json.push_str(&format!("  \"projection_components\": {PROJ},\n"));
+    json.push_str("  \"workloads\": [\n");
+
+    for (wi, w) in workloads.iter().enumerate() {
+        println!(
+            "head2head: {} + {} N={}, {} iters ({} burnin), reference {} iters{}",
+            w.label,
+            w.sampler,
+            w.n,
+            w.iters,
+            w.burnin,
+            w.ref_iters,
+            if smoke { " (smoke)" } else { "" }
+        );
+        // Long full-data reference chain at the same seed: θ0 matches every
+        // chain under test, so initialization transients largely cancel in
+        // the two-sample bias statistics.
+        let mut ref_cfg = base_cfg(w, Algorithm::RegularMcmc, seed);
+        ref_cfg.iters = w.ref_iters;
+        let reference = run_experiment(&ref_cfg).expect("run reference");
+        let ref_trace = project(&reference.chains[0].theta_trace, PROJ);
+
+        let mut report = Report::new(
+            &format!("head-to-head ({} + {}, N={})", w.label, w.sampler, w.n),
+            &["algorithm", "ESS/sec", "queries/iter", "bias max|z|", "biased?", "wallclock"],
+        );
+        let mut rows = Vec::new();
+        for algorithm in ALGOS {
+            let r = run_algo(w, algorithm, seed, &ref_trace);
+            report.row(&[
+                r.algo_label.to_string(),
+                format!("{:.1}", r.ess_per_sec),
+                format!("{:.1}", r.queries_per_iter),
+                format!("{:.2} (thr {:.2})", r.bias, r.threshold),
+                if r.passed { "no".into() } else { "YES".into() },
+                fmt_time(r.wallclock),
+            ]);
+            rows.push(r);
+        }
+        report.print();
+
+        json.push_str(&format!(
+            "    {{\"task\": \"{}\", \"sampler\": \"{}\", \"n\": {}, \"iters\": {}, \
+             \"burnin\": {}, \"reference_iters\": {},\n     \"algorithms\": [\n",
+            w.label, w.sampler, w.n, w.iters, w.burnin, w.ref_iters,
+        ));
+        for (i, r) in rows.iter().enumerate() {
+            json.push_str(&format!(
+                "      {{\"algorithm\": \"{}\", \"ess_per_sec\": {:.4}, \
+                 \"queries_per_iter\": {:.3}, \"bias_max_abs_z\": {:.4}, \
+                 \"bias_threshold\": {:.4}, \"bias_detected\": {}, \
+                 \"wallclock_secs\": {:e}}}{}\n",
+                r.algo_key,
+                r.ess_per_sec,
+                r.queries_per_iter,
+                r.bias,
+                r.threshold,
+                !r.passed,
+                r.wallclock,
+                if i + 1 < rows.len() { "," } else { "" },
+            ));
+        }
+        json.push_str(&format!(
+            "     ]}}{}\n",
+            if wi + 1 < workloads.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_head2head.json", &json).expect("write BENCH_head2head.json");
+    println!("wrote BENCH_head2head.json");
+}

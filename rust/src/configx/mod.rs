@@ -219,7 +219,9 @@ impl Task {
     }
 }
 
-/// The three algorithms compared in every experiment (Table 1 / Fig 4).
+/// The algorithms the experiments compare: the paper's three exact stacks
+/// (Table 1 / Fig 4) plus the approximate tall-data competitor baselines
+/// (DESIGN.md §Baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algorithm {
     /// full-data MCMC baseline (N likelihood queries per evaluation)
@@ -228,15 +230,23 @@ pub enum Algorithm {
     UntunedFlyMc,
     /// FlyMC with bounds tightened at an approximate MAP (paper: q = 0.01)
     MapTunedFlyMc,
+    /// stochastic-gradient Langevin dynamics (approximate; minibatch
+    /// gradients, no accept/reject — `samplers::Sgld`)
+    Sgld,
+    /// austerity MH (approximate; sequential-test early stopping —
+    /// `samplers::AusterityMh`)
+    Austerity,
 }
 
 impl Algorithm {
     /// Parse a CLI/TOML algorithm name.
     pub fn parse(s: &str) -> Result<Algorithm, String> {
         match s {
-            "regular" | "mcmc" => Ok(Algorithm::RegularMcmc),
+            "regular" | "mcmc" | "full" => Ok(Algorithm::RegularMcmc),
             "untuned" | "flymc" => Ok(Algorithm::UntunedFlyMc),
             "maptuned" | "map" | "map_tuned" => Ok(Algorithm::MapTunedFlyMc),
+            "sgld" => Ok(Algorithm::Sgld),
+            "austerity" | "austere" => Ok(Algorithm::Austerity),
             _ => Err(format!("unknown algorithm {s:?}")),
         }
     }
@@ -246,7 +256,14 @@ impl Algorithm {
             Algorithm::RegularMcmc => "Regular MCMC",
             Algorithm::UntunedFlyMc => "Untuned FlyMC",
             Algorithm::MapTunedFlyMc => "MAP-tuned FlyMC",
+            Algorithm::Sgld => "SGLD",
+            Algorithm::Austerity => "Austerity MH",
         }
+    }
+    /// Whether this algorithm's invariant law is only approximately the
+    /// posterior (subsampling bias — the head-to-head bench measures it).
+    pub fn is_approximate(&self) -> bool {
+        matches!(self, Algorithm::Sgld | Algorithm::Austerity)
     }
 }
 
@@ -347,6 +364,20 @@ pub struct ExperimentConfig {
     /// only the O(dim) streaming summary — bounded memory and small
     /// checkpoints for very long chains
     pub record_trace: bool,
+    /// minibatch size m for the approximate samplers: SGLD's gradient
+    /// estimator, and austerity MH's initial sequential-test batch
+    pub minibatch: usize,
+    /// SGLD step-schedule scale a in ε_t = a (b + t)^{-γ}
+    pub sgld_step_a: f64,
+    /// SGLD step-schedule offset b
+    pub sgld_step_b: f64,
+    /// SGLD step-schedule decay γ (0 = fixed step — deliberately biased,
+    /// used by the validation harness to prove it can detect bias)
+    pub sgld_step_gamma: f64,
+    /// use the control-variate SGLD gradient anchored at the MAP point
+    pub sgld_cv: bool,
+    /// per-decision error tolerance ε of austerity MH's sequential test
+    pub austerity_eps: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -375,6 +406,12 @@ impl Default for ExperimentConfig {
             checkpoint_dir: None,
             stop_after: None,
             record_trace: true,
+            minibatch: 100,
+            sgld_step_a: 1e-5,
+            sgld_step_b: 1.0,
+            sgld_step_gamma: 0.55,
+            sgld_cv: false,
+            austerity_eps: 0.05,
         }
     }
 }
@@ -428,6 +465,12 @@ impl ExperimentConfig {
         if doc.bool_or("experiment", "streaming_only", false) {
             c.record_trace = false;
         }
+        c.minibatch = doc.usize_or("approx", "minibatch", c.minibatch);
+        c.sgld_step_a = doc.f64_or("approx", "sgld_step_a", c.sgld_step_a);
+        c.sgld_step_b = doc.f64_or("approx", "sgld_step_b", c.sgld_step_b);
+        c.sgld_step_gamma = doc.f64_or("approx", "sgld_step_gamma", c.sgld_step_gamma);
+        c.sgld_cv = doc.bool_or("approx", "sgld_cv", c.sgld_cv);
+        c.austerity_eps = doc.f64_or("approx", "austerity_eps", c.austerity_eps);
         c.validate()?;
         Ok(c)
     }
@@ -442,7 +485,8 @@ impl ExperimentConfig {
         self.q_dark_to_bright.unwrap_or(match self.algorithm {
             Algorithm::UntunedFlyMc => 0.1,
             Algorithm::MapTunedFlyMc => 0.01,
-            Algorithm::RegularMcmc => 0.0,
+            // non-FlyMC algorithms have no z-augmentation
+            Algorithm::RegularMcmc | Algorithm::Sgld | Algorithm::Austerity => 0.0,
         })
     }
 
@@ -489,6 +533,32 @@ impl ExperimentConfig {
                     .to_string(),
             );
         }
+        if self.algorithm.is_approximate() {
+            if self.minibatch < 2 {
+                return Err(format!(
+                    "minibatch must be at least 2 for the approximate samplers, got {}",
+                    self.minibatch
+                ));
+            }
+            if self.algorithm == Algorithm::Sgld
+                && !(self.sgld_step_a > 0.0
+                    && self.sgld_step_b > 0.0
+                    && self.sgld_step_gamma >= 0.0)
+            {
+                return Err(format!(
+                    "SGLD schedule needs a > 0, b > 0, gamma >= 0; got a={} b={} gamma={}",
+                    self.sgld_step_a, self.sgld_step_b, self.sgld_step_gamma
+                ));
+            }
+            if self.algorithm == Algorithm::Austerity
+                && !(self.austerity_eps > 0.0 && self.austerity_eps < 1.0)
+            {
+                return Err(format!(
+                    "austerity_eps must lie strictly inside (0, 1), got {}",
+                    self.austerity_eps
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -514,7 +584,7 @@ impl ExperimentConfig {
             Backend::Cpu | Backend::ParCpu => "cpu",
             Backend::Xla => "xla",
         };
-        let canon = format!(
+        let mut canon = format!(
             "task={:?};alg={:?};seed={};iters={};burnin={};n_data={:?};chains={};\
              q={:?};xi={};explicit={};fraction={};prior_scale={:?};map_steps={};\
              record_every={};data_path={:?};record_trace={};backend_family={}",
@@ -536,6 +606,33 @@ impl ExperimentConfig {
             self.record_trace,
             backend_family,
         );
+        // Approximate-sampler knobs join the canon ONLY when an approximate
+        // algorithm is active: every fingerprint minted before these knobs
+        // existed (exact algorithms) must stay byte-for-byte reproducible or
+        // committed `.fckpt` checkpoints would refuse to resume.
+        match self.algorithm {
+            Algorithm::Sgld => {
+                use std::fmt::Write as _;
+                let _ = write!(
+                    canon,
+                    ";minibatch={};sgld_a={};sgld_b={};sgld_gamma={};sgld_cv={}",
+                    self.minibatch,
+                    self.sgld_step_a,
+                    self.sgld_step_b,
+                    self.sgld_step_gamma,
+                    self.sgld_cv,
+                );
+            }
+            Algorithm::Austerity => {
+                use std::fmt::Write as _;
+                let _ = write!(
+                    canon,
+                    ";minibatch={};austerity_eps={}",
+                    self.minibatch, self.austerity_eps,
+                );
+            }
+            _ => {}
+        }
         crate::util::codec::fnv1a(canon.as_bytes())
     }
 }
@@ -734,6 +831,87 @@ mod tests {
         // have no bit-identity guarantee against the CPU family
         let c = ExperimentConfig { backend: Backend::Xla, ..base.clone() };
         assert_ne!(c.fingerprint(), base.fingerprint());
+    }
+
+    #[test]
+    fn approx_algorithms_parse_and_validate() {
+        assert_eq!(Algorithm::parse("full").unwrap(), Algorithm::RegularMcmc);
+        assert_eq!(Algorithm::parse("sgld").unwrap(), Algorithm::Sgld);
+        assert_eq!(Algorithm::parse("austerity").unwrap(), Algorithm::Austerity);
+        assert_eq!(Algorithm::parse("austere").unwrap(), Algorithm::Austerity);
+        assert!(Algorithm::Sgld.is_approximate());
+        assert!(Algorithm::Austerity.is_approximate());
+        assert!(!Algorithm::RegularMcmc.is_approximate());
+        assert!(!Algorithm::MapTunedFlyMc.is_approximate());
+
+        let c = ExperimentConfig::from_str_toml(
+            "[experiment]\nalgorithm = \"sgld\"\n[approx]\nminibatch = 64\n\
+             sgld_step_a = 1e-4\nsgld_step_b = 2.0\nsgld_step_gamma = 0.33\nsgld_cv = true",
+        )
+        .unwrap();
+        assert_eq!(c.algorithm, Algorithm::Sgld);
+        assert_eq!(c.minibatch, 64);
+        assert!((c.sgld_step_a - 1e-4).abs() < 1e-18);
+        assert!((c.sgld_step_b - 2.0).abs() < 1e-12);
+        assert!((c.sgld_step_gamma - 0.33).abs() < 1e-12);
+        assert!(c.sgld_cv);
+        // approximate samplers never run the FlyMC z-sweep
+        assert_eq!(c.effective_q_db(), 0.0);
+
+        let c = ExperimentConfig::from_str_toml(
+            "[experiment]\nalgorithm = \"austerity\"\n[approx]\nausterity_eps = 0.02",
+        )
+        .unwrap();
+        assert_eq!(c.algorithm, Algorithm::Austerity);
+        assert!((c.austerity_eps - 0.02).abs() < 1e-12);
+
+        // knob validation fires only for the approximate algorithms
+        let err = ExperimentConfig::from_str_toml(
+            "[experiment]\nalgorithm = \"sgld\"\n[approx]\nminibatch = 1",
+        )
+        .unwrap_err();
+        assert!(err.contains("minibatch"), "{err}");
+        let err = ExperimentConfig::from_str_toml(
+            "[experiment]\nalgorithm = \"sgld\"\n[approx]\nsgld_step_a = 0.0",
+        )
+        .unwrap_err();
+        assert!(err.contains("SGLD schedule"), "{err}");
+        let err = ExperimentConfig::from_str_toml(
+            "[experiment]\nalgorithm = \"austerity\"\n[approx]\nausterity_eps = 1.0",
+        )
+        .unwrap_err();
+        assert!(err.contains("austerity_eps"), "{err}");
+        // exact algorithms ignore bad approx knobs entirely
+        ExperimentConfig::from_str_toml("[approx]\nminibatch = 1").unwrap();
+    }
+
+    #[test]
+    fn fingerprint_includes_approx_knobs_only_for_approx_algorithms() {
+        // exact algorithms: approx knobs are inert and must NOT perturb the
+        // fingerprint — committed .fckpt checkpoints predate these fields
+        let base = ExperimentConfig::default();
+        let c = ExperimentConfig { minibatch: 7, sgld_step_a: 0.5, ..base.clone() };
+        assert_eq!(c.fingerprint(), base.fingerprint());
+
+        // SGLD: every schedule knob evolves the chain
+        let sgld = ExperimentConfig { algorithm: Algorithm::Sgld, ..base.clone() };
+        for f in [
+            ExperimentConfig { minibatch: 7, ..sgld.clone() },
+            ExperimentConfig { sgld_step_a: 3e-4, ..sgld.clone() },
+            ExperimentConfig { sgld_step_b: 9.0, ..sgld.clone() },
+            ExperimentConfig { sgld_step_gamma: 0.0, ..sgld.clone() },
+            ExperimentConfig { sgld_cv: true, ..sgld.clone() },
+        ] {
+            assert_ne!(f.fingerprint(), sgld.fingerprint());
+        }
+        // austerity: minibatch + eps evolve the chain, SGLD knobs do not
+        let aus = ExperimentConfig { algorithm: Algorithm::Austerity, ..base.clone() };
+        let c = ExperimentConfig { minibatch: 7, ..aus.clone() };
+        assert_ne!(c.fingerprint(), aus.fingerprint());
+        let c = ExperimentConfig { austerity_eps: 0.2, ..aus.clone() };
+        assert_ne!(c.fingerprint(), aus.fingerprint());
+        let c = ExperimentConfig { sgld_step_a: 3e-4, ..aus.clone() };
+        assert_eq!(c.fingerprint(), aus.fingerprint());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::models::{
     IsoGaussian, Laplace, LogisticJJ, ModelBound, Prior, RobustT, SoftmaxBohning,
 };
 use crate::runtime::{make_backend, XlaSource};
-use crate::samplers::{Mala, RandomWalkMh, Sampler, SliceSampler};
+use crate::samplers::{AusterityMh, Mala, RandomWalkMh, Sampler, Sgld, SliceSampler};
 use crate::util::{Rng, Timer};
 
 /// Default problem sizes (paper-scale for MNIST/CIFAR; OPV default scaled,
@@ -52,13 +52,17 @@ pub fn synth_dataset(task: Task, n: usize, seed: u64) -> AnyData {
 }
 
 /// MAP-tune (when the algorithm asks for it) and wrap a freshly built model.
+/// SGLD-CV also needs the MAP point (as its control-variate anchor) but must
+/// NOT re-tune the model's bound anchors — bounds play no role in SGLD.
 fn tune_and_wrap<M: XlaSource + 'static>(
     mut model: M,
     prior: Arc<dyn Prior>,
     cfg: &ExperimentConfig,
     lr: Option<f64>,
 ) -> (Arc<dyn XlaSource>, Arc<dyn Prior>, Option<Vec<f64>>, u64) {
-    let (map, q) = if cfg.algorithm == Algorithm::MapTunedFlyMc {
+    let wants_map = cfg.algorithm == Algorithm::MapTunedFlyMc
+        || (cfg.algorithm == Algorithm::Sgld && cfg.sgld_cv);
+    let (map, q) = if wants_map {
         let mut mc = MapConfig {
             steps: cfg.map_steps,
             seed: cfg.seed ^ 0xAD,
@@ -68,7 +72,9 @@ fn tune_and_wrap<M: XlaSource + 'static>(
             mc.lr = lr;
         }
         let res = map_estimate(&model, prior.as_ref(), &mc);
-        model.tune_anchors_map(&res.theta);
+        if cfg.algorithm == Algorithm::MapTunedFlyMc {
+            model.tune_anchors_map(&res.theta);
+        }
         (Some(res.theta), res.lik_queries)
     } else {
         (None, 0)
@@ -127,6 +133,37 @@ pub fn build_sampler(task: Task) -> Box<dyn Sampler> {
     }
 }
 
+/// The experiment's θ-update operator for its configured algorithm. The
+/// exact algorithms (regular MCMC and both FlyMC variants) delegate to
+/// [`build_sampler`] unchanged — their sampler construction is part of the
+/// byte-identity contract. The approximate competitors get their own
+/// operators, parameterized by the `[approx]` config knobs; SGLD-CV anchors
+/// its control variate at the MAP point computed during model setup.
+pub fn build_algo_sampler(cfg: &ExperimentConfig, map: Option<&[f64]>) -> Box<dyn Sampler> {
+    match cfg.algorithm {
+        Algorithm::Sgld => {
+            let mut s =
+                Sgld::new(cfg.minibatch, cfg.sgld_step_a, cfg.sgld_step_b, cfg.sgld_step_gamma);
+            if cfg.sgld_cv {
+                let anchor = map.expect("sgld_cv requires the MAP point from model setup");
+                s = s.with_anchor(anchor.to_vec());
+            }
+            Box::new(s)
+        }
+        Algorithm::Austerity => {
+            // reuse the task's random-walk scale as the proposal step; the
+            // Robbins–Monro adapter retunes it toward 0.234 during burn-in
+            let step = match cfg.task {
+                Task::LogisticMnist | Task::Toy => 0.02,
+                Task::SoftmaxCifar => 0.005,
+                Task::RobustOpv => 0.05,
+            };
+            Box::new(AusterityMh::adaptive(step, cfg.austerity_eps, cfg.minibatch))
+        }
+        _ => build_sampler(cfg.task),
+    }
+}
+
 /// Assemble a ready-to-run chain target (posterior with committed initial
 /// state) + initial theta, drawing theta0 from the prior (as in the paper).
 pub fn build_chain(
@@ -146,7 +183,10 @@ pub fn build_chain(
     let theta0 = prior.sample(model.dim(), &mut rng);
     let model_mb: Arc<dyn ModelBound> = model.as_model_bound();
     Ok(match cfg.algorithm {
-        Algorithm::RegularMcmc => (
+        // SGLD and austerity MH drive the full-data posterior through its
+        // SubsampleTarget face — no auxiliary z-state, same target type as
+        // regular MCMC
+        Algorithm::RegularMcmc | Algorithm::Sgld | Algorithm::Austerity => (
             ChainTarget::Regular(FullPosterior::new(model_mb, prior, eval, theta0.clone())),
             theta0,
         ),
@@ -296,11 +336,16 @@ pub fn run_experiment_resume(
 ) -> anyhow::Result<ExperimentResult> {
     cfg.validate().map_err(|e| anyhow::anyhow!("config error: {e}"))?;
     let timer = Timer::start();
-    let (model, prior, _map, map_queries) = build_model(cfg)?;
+    let (model, prior, map, map_queries) = build_model(cfg)?;
     let setup_secs = timer.elapsed_secs();
     let n_data = model.n();
-    let chains =
-        crate::engine::multi_chain::run_replica_chains_resume(cfg, model, prior, resume)?;
+    let chains = crate::engine::multi_chain::run_replica_chains_resume(
+        cfg,
+        model,
+        prior,
+        map.as_deref(),
+        resume,
+    )?;
     Ok(ExperimentResult {
         config: cfg.clone(),
         chains,
@@ -341,10 +386,17 @@ mod tests {
     #[test]
     fn all_tasks_and_algorithms_run() {
         for task in [Task::LogisticMnist, Task::SoftmaxCifar, Task::RobustOpv, Task::Toy] {
-            for alg in [Algorithm::RegularMcmc, Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc] {
+            for alg in [
+                Algorithm::RegularMcmc,
+                Algorithm::UntunedFlyMc,
+                Algorithm::MapTunedFlyMc,
+                Algorithm::Sgld,
+                Algorithm::Austerity,
+            ] {
                 let mut cfg = tiny_cfg(task, alg);
                 cfg.iters = 25;
                 cfg.burnin = 10;
+                cfg.minibatch = 30;
                 if task == Task::SoftmaxCifar {
                     cfg.n_data = Some(120); // keep D=256 setup cheap in tests
                     cfg.map_steps = 20;
@@ -358,6 +410,39 @@ mod tests {
                 assert!(res.chains[0].logpost_joint.iter().all(|l| l.is_finite()));
             }
         }
+    }
+
+    #[test]
+    fn sgld_cv_runs_through_the_engine_with_a_map_anchor() {
+        // sgld_cv forces a MAP estimate during setup (reported separately,
+        // like FlyMC's tuning cost) without touching the model's bound
+        // anchors, and the chain runs with finite minibatch log-density
+        let mut cfg = tiny_cfg(Task::Toy, Algorithm::Sgld);
+        cfg.sgld_cv = true;
+        cfg.minibatch = 10;
+        let res = run_experiment(&cfg).unwrap();
+        assert!(res.map_lik_queries > 0, "CV anchor needs the MAP pass");
+        assert!(res.chains[0].logpost_joint.iter().all(|l| l.is_finite()));
+        // plain SGLD skips the MAP pass entirely
+        let res = run_experiment(&tiny_cfg(Task::Toy, Algorithm::Sgld)).unwrap();
+        assert_eq!(res.map_lik_queries, 0);
+    }
+
+    #[test]
+    fn approx_samplers_query_fewer_than_full_mh() {
+        let full = run_experiment(&tiny_cfg(Task::LogisticMnist, Algorithm::RegularMcmc)).unwrap();
+        let fq = full.table_row().avg_lik_queries_per_iter;
+        let mut cfg = tiny_cfg(Task::LogisticMnist, Algorithm::Sgld);
+        cfg.minibatch = 30;
+        let sgld = run_experiment(&cfg).unwrap();
+        let sq = sgld.table_row().avg_lik_queries_per_iter;
+        assert!((sq - 30.0).abs() < 1.0, "SGLD queries/iter {sq} != minibatch");
+        assert!(sq < fq, "SGLD {sq} vs full {fq}");
+        let mut cfg = tiny_cfg(Task::LogisticMnist, Algorithm::Austerity);
+        cfg.minibatch = 30;
+        let aus = run_experiment(&cfg).unwrap();
+        let aq = aus.table_row().avg_lik_queries_per_iter;
+        assert!(aq < fq, "austerity {aq} vs full {fq}");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::configx::{Backend, ExperimentConfig};
 use crate::diagnostics;
 use crate::engine::chain::{ChainConfig, ChainResult};
 use crate::engine::experiment::{
-    build_chain, build_sampler, chain_config, run_experiment, ExperimentResult,
+    build_algo_sampler, build_chain, chain_config, run_experiment, ExperimentResult,
 };
 use crate::models::Prior;
 use crate::runtime::XlaSource;
@@ -52,7 +52,7 @@ pub fn run_replica_chains(
     model: Arc<dyn XlaSource>,
     prior: Arc<dyn Prior>,
 ) -> anyhow::Result<Vec<ChainResult>> {
-    run_replica_chains_resume(cfg, model, prior, false)
+    run_replica_chains_resume(cfg, model, prior, None, false)
 }
 
 /// Assemble the experiment's checkpoint wiring from its config: `None`
@@ -90,6 +90,7 @@ pub fn run_replica_chains_resume(
     cfg: &ExperimentConfig,
     model: Arc<dyn XlaSource>,
     prior: Arc<dyn Prior>,
+    map: Option<&[f64]>,
     resume: bool,
 ) -> anyhow::Result<Vec<ChainResult>> {
     let threads = if cfg.backend == Backend::Xla { 1 } else { cfg.threads };
@@ -102,7 +103,7 @@ pub fn run_replica_chains_resume(
         spec.as_ref(),
         |ccfg: &ChainConfig| {
             let (target, theta0) = build_chain(cfg, model.clone(), prior.clone(), ccfg.seed)?;
-            let sampler: Box<dyn Sampler> = build_sampler(cfg.task);
+            let sampler: Box<dyn Sampler> = build_algo_sampler(cfg, map);
             Ok((target, sampler, theta0))
         },
     )

@@ -57,7 +57,7 @@ use super::bright_set::BrightSet;
 use crate::linalg::PackedQuadForm;
 use crate::models::{log_pseudo_lik, p_bright, EvalScratch, ModelBound, Prior};
 use crate::runtime::evaluator::BatchEval;
-use crate::samplers::target::Target;
+use crate::samplers::target::{SubsampleTarget, Target};
 
 /// Outcome of one z-resampling sweep.
 #[derive(Clone, Copy, Debug, Default)]
@@ -722,6 +722,46 @@ impl Target for FullPosterior {
 
     fn current_log_density(&self) -> f64 {
         self.cur_logp
+    }
+
+    fn as_subsample(&mut self) -> Option<&mut dyn SubsampleTarget> {
+        Some(self)
+    }
+}
+
+impl SubsampleTarget for FullPosterior {
+    fn n_data(&self) -> usize {
+        self.model.n()
+    }
+
+    // lint: zero-alloc
+    fn minibatch_log_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
+        self.eval.eval_lik(theta, idx, ll);
+    }
+
+    // lint: zero-alloc
+    fn minibatch_grad_acc(&mut self, theta: &[f64], idx: &[u32], grad: &mut [f64]) -> f64 {
+        self.eval.eval_lik_grad(theta, idx, &mut self.scratch_ll, grad);
+        self.scratch_ll.iter().sum()
+    }
+
+    fn prior_log_density(&self, theta: &[f64]) -> f64 {
+        self.prior.log_density(theta)
+    }
+
+    fn prior_grad_acc(&self, theta: &[f64], grad: &mut [f64]) {
+        self.prior.grad_acc(theta, grad);
+    }
+
+    // lint: zero-alloc
+    fn set_state(&mut self, theta: &[f64], log_density_estimate: f64) {
+        self.theta.clear();
+        self.theta.extend_from_slice(theta);
+        self.cur_logp = log_density_estimate;
+        // The estimate was formed from a subsample, so the memo (an exact
+        // full-data evaluation, when valid) must not survive a state whose
+        // log density is approximate.
+        self.memo_valid = false;
     }
 }
 

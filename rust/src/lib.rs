@@ -44,6 +44,16 @@
 //! to the never-interrupted run (DESIGN.md §Checkpointing; CLI
 //! `--checkpoint-every` / `--checkpoint-dir` / `resume`).
 //!
+//! Beyond the exact samplers, the crate ships the *approximate* tall-data
+//! competitors the paper's exactness claim is measured against —
+//! [`samplers::Sgld`] and [`samplers::AusterityMh`], driven through the
+//! [`samplers::SubsampleTarget`] minibatch contract with per-minibatch
+//! likelihood-query metering — plus a seeded statistical validation
+//! harness ([`testing::posterior_check`]) and a head-to-head bench
+//! (`benches/head2head.rs`) reporting ESS/sec, queries/iteration, and
+//! posterior-moment bias per algorithm (DESIGN.md §Baselines; CLI
+//! `--algo`).
+//!
 //! ## Quick start
 //!
 //! A complete (tiny) experiment runs in milliseconds:
@@ -102,6 +112,8 @@ pub mod prelude {
         EvalScratch, IsoGaussian, Laplace, LogisticJJ, ModelBound, Prior, RobustT,
         SoftmaxBohning,
     };
-    pub use crate::samplers::{Mala, RandomWalkMh, Sampler, SliceSampler, Target};
+    pub use crate::samplers::{
+        AusterityMh, Mala, RandomWalkMh, Sampler, Sgld, SliceSampler, SubsampleTarget, Target,
+    };
     pub use crate::util::Rng;
 }

@@ -33,7 +33,9 @@ fn usage() -> ! {
         "usage: firefly <run|resume|table1|map|convert|artifacts> [flags]
   common flags:
     --task mnist|cifar|opv|toy     workload (default mnist)
-    --algorithm regular|untuned|map  (default map)
+    --algo flymc|full|sgld|austerity  algorithm, incl. the approximate
+                                   competitors (--algorithm regular|untuned|
+                                   map spells the exact ones; default map)
     --backend cpu|parcpu|xla       likelihood backend (default cpu;
                                    parcpu shards batches across threads)
     --n <int>                      dataset size (default: paper scale)
@@ -66,6 +68,14 @@ fn usage() -> ! {
     --record-every <int>           full-data log-posterior instrumentation
                                    cadence (0 disables; default 1 — set 0
                                    for long runs, it costs N queries/tick)
+  approximate-sampler flags (--algo sgld|austerity):
+    --minibatch <int>              subsample size per step (default 100)
+    --sgld-step-a/-b/-gamma <float>  SGLD step schedule a(b+t)^-gamma
+                                   (gamma 0 = fixed step; default 1e-5/1/0.55)
+    --sgld-cv                      control-variate gradient anchored at the
+                                   MAP point (computed during setup)
+    --austerity-eps <float>        sequential-test error tolerance per
+                                   austerity MH decision (default 0.05)
   convert flags:
     --out <file.fbin>              output path (required)
     --csv <file.csv>               convert a CSV file (streamed row by row)
@@ -87,7 +97,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     if let Some(t) = args.get("task") {
         cfg.task = Task::parse(t)?;
     }
-    if let Some(a) = args.get("algorithm") {
+    // --algo is the head-to-head spelling (flymc|full|sgld|austerity);
+    // --algorithm keeps the historical exact-stack names. Same parser.
+    if let Some(a) = args.get("algorithm").or_else(|| args.get("algo")) {
         cfg.algorithm = Algorithm::parse(a)?;
     }
     if let Some(b) = args.get("backend") {
@@ -124,6 +136,15 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
         cfg.record_trace = false;
     }
     cfg.record_every = args.get_usize("record-every", cfg.record_every);
+    // approximate-sampler knobs ([approx] section equivalents)
+    cfg.minibatch = args.get_usize("minibatch", cfg.minibatch);
+    cfg.sgld_step_a = args.get_f64("sgld-step-a", cfg.sgld_step_a);
+    cfg.sgld_step_b = args.get_f64("sgld-step-b", cfg.sgld_step_b);
+    cfg.sgld_step_gamma = args.get_f64("sgld-step-gamma", cfg.sgld_step_gamma);
+    if args.has("sgld-cv") {
+        cfg.sgld_cv = true;
+    }
+    cfg.austerity_eps = args.get_f64("austerity-eps", cfg.austerity_eps);
     cfg.validate()?;
     Ok(cfg)
 }

@@ -1,0 +1,400 @@
+//! Austerity (subsampled) Metropolis–Hastings with sequential-test early
+//! stopping (Korattikara, Chen & Welling's "austerity" framework, surveyed
+//! critically in Bardenet, Doucet & Holmes, "On Markov chain Monte Carlo
+//! methods for tall data") — the second approximate tall-data baseline.
+//!
+//! The exact MH accept test for a symmetric proposal is
+//!
+//! ```text
+//! accept  ⟺  (1/N) Σ_n [log L_n(θ') − log L_n(θ)]  >  μ₀
+//! μ₀ = [ln u − (log p(θ') − log p(θ))] / N ,   u ~ U(0,1)
+//! ```
+//!
+//! i.e. a comparison between a *population mean* of per-datum log-likelihood
+//! differences and a known threshold. Austerity MH estimates that mean from
+//! a growing without-replacement subsample and stops as soon as a sequential
+//! t-test (normal-approximation form, with the finite-population correction
+//! `√(1 − (c−1)/(N−1))` on the standard error) is confident at level `1−ε`
+//! about which side of μ₀ the population mean falls on. If the test never
+//! concludes, the batch doubles until the whole dataset is consumed and the
+//! decision is exact.
+//!
+//! The accept decision is therefore *approximately* correct per step — each
+//! decision is wrong with probability ≤ ε under the test's normality
+//! assumption, and the assumption itself fails on heavy-tailed difference
+//! distributions (Bardenet et al.'s critique). The chain's invariant law is
+//! biased accordingly; `testing::posterior_check` is the instrument that
+//! measures whether that bias is visible.
+//!
+//! Query metering: each batch evaluates the new indices at both θ and θ',
+//! through [`SubsampleTarget::minibatch_log_lik`] (2·batch queries), so a
+//! step that stops after `c` data costs `2c` queries vs full MH's `N` — the
+//! head-to-head bench reports the realized ratio.
+
+use super::target::SubsampleTarget;
+use super::{Sampler, StepInfo, StepSizeAdapter, Target};
+use crate::util::math::normal_cdf;
+use crate::util::Rng;
+
+/// Subsampled Metropolis–Hastings with sequential-t-test early stopping.
+pub struct AusterityMh {
+    /// isotropic Gaussian proposal step size
+    pub step: f64,
+    /// Robbins–Monro acceptance-rate adaptation (None = fixed step)
+    pub adapter: Option<StepSizeAdapter>,
+    /// per-decision error tolerance ε of the sequential test
+    pub eps: f64,
+    /// initial minibatch size m₀ (doubles until confident; ≥ 2)
+    pub batch0: usize,
+    proposal: Vec<f64>,
+    /// persistent 0..N index permutation; each step re-prefixes suffixes of
+    /// it to extend the consumed sample without replacement
+    pool: Vec<u32>,
+    ll_cur: Vec<f64>,
+    ll_prop: Vec<f64>,
+    accepts: u64,
+    steps: u64,
+    /// total data consumed by sequential tests (diagnostic)
+    consumed_total: u64,
+}
+
+impl AusterityMh {
+    /// Fixed-step austerity MH with tolerance `eps` and initial batch `m0`.
+    pub fn new(step: f64, eps: f64, batch0: usize) -> Self {
+        assert!(eps > 0.0 && eps < 1.0, "AusterityMh: eps must be in (0,1)");
+        assert!(batch0 >= 2, "AusterityMh: batch0 must be at least 2");
+        AusterityMh {
+            step,
+            adapter: None,
+            eps,
+            batch0,
+            proposal: Vec::new(),
+            pool: Vec::new(),
+            ll_cur: Vec::new(),
+            ll_prop: Vec::new(),
+            accepts: 0,
+            steps: 0,
+            consumed_total: 0,
+        }
+    }
+
+    /// Enable Robbins–Monro adaptation toward 0.234 (freeze after burn-in).
+    pub fn adaptive(step: f64, eps: f64, batch0: usize) -> Self {
+        let mut s = Self::new(step, eps, batch0);
+        s.adapter = Some(StepSizeAdapter::new(0.234));
+        s
+    }
+
+    /// Stop step-size adaptation (call at the end of burn-in).
+    pub fn freeze_adaptation(&mut self) {
+        if let Some(a) = &mut self.adapter {
+            a.freeze();
+        }
+    }
+
+    /// Lifetime acceptance rate (NaN before the first step).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.steps == 0 {
+            return f64::NAN;
+        }
+        self.accepts as f64 / self.steps as f64
+    }
+
+    /// Mean number of data consumed per accept/reject decision (NaN before
+    /// the first step) — the early-stopping win the bench reports.
+    pub fn avg_consumed(&self) -> f64 {
+        if self.steps == 0 {
+            return f64::NAN;
+        }
+        self.consumed_total as f64 / self.steps as f64
+    }
+}
+
+impl Sampler for AusterityMh {
+    // lint: zero-alloc
+    fn step(
+        &mut self,
+        target: &mut dyn Target,
+        theta: &mut Vec<f64>,
+        rng: &mut Rng,
+    ) -> StepInfo {
+        debug_assert_eq!(theta.len(), target.dim());
+        let sub = target
+            .as_subsample()
+            .expect("austerity MH requires a subsample-capable target (full-data posterior)");
+        let n = sub.n_data();
+        if self.pool.len() != n {
+            self.pool.clear();
+            self.pool.extend(0..n as u32);
+        }
+
+        self.proposal.clear();
+        self.proposal
+            .extend(theta.iter().map(|&t| t + self.step * rng.normal()));
+
+        // Threshold μ₀ of the exact test, per datum.
+        let dprior = sub.prior_log_density(&self.proposal) - sub.prior_log_density(theta);
+        let mu0 = (rng.f64_open().ln() - dprior) / n as f64;
+
+        // Sequential test over growing without-replacement batches: running
+        // Welford moments of d_i = log L_i(θ') − log L_i(θ).
+        let mut consumed = 0usize;
+        let mut mean_d = 0.0f64;
+        let mut m2_d = 0.0f64;
+        let mut sum_prop = 0.0f64;
+        let mut take = self.batch0.min(n);
+        let accepted = loop {
+            // Extend the uniform sample: prefix-shuffle the unconsumed tail,
+            // then consume `take` fresh indices from it.
+            let tail = self.pool.len() - consumed;
+            let take_now = take.min(tail);
+            rng.shuffle_prefix(&mut self.pool[consumed..], take_now);
+            let batch = &self.pool[consumed..consumed + take_now];
+            sub.minibatch_log_lik(theta, batch, &mut self.ll_cur);
+            sub.minibatch_log_lik(&self.proposal, batch, &mut self.ll_prop);
+            for (&lp, &lc) in self.ll_prop.iter().zip(&self.ll_cur) {
+                sum_prop += lp;
+                consumed += 1;
+                let d = lp - lc;
+                let delta = d - mean_d;
+                mean_d += delta / consumed as f64;
+                m2_d += delta * (d - mean_d);
+            }
+            if consumed >= n {
+                // Whole dataset consumed: the decision is the exact MH test.
+                break mean_d > mu0;
+            }
+            // Std error of the mean with finite-population correction.
+            let var = m2_d / (consumed as f64 - 1.0);
+            let fpc = 1.0 - (consumed as f64 - 1.0) / (n as f64 - 1.0);
+            let se = (var / consumed as f64 * fpc).sqrt();
+            if se == 0.0 {
+                // Degenerate differences: the mean is known exactly.
+                break mean_d > mu0;
+            }
+            let t_stat = (mean_d - mu0) / se;
+            // P(population mean on the other side of μ₀) under the normal
+            // approximation; decide once it drops below ε.
+            if 1.0 - normal_cdf(t_stat.abs()) < self.eps {
+                break mean_d > mu0;
+            }
+            take = consumed; // double the consumed sample
+        };
+        self.consumed_total += consumed as u64;
+        self.steps += 1;
+
+        let logp = if accepted {
+            self.accepts += 1;
+            theta.clear();
+            theta.extend_from_slice(&self.proposal);
+            // Estimated log density at the accepted point from the data the
+            // test already touched (no extra queries).
+            let est = sub.prior_log_density(theta) + n as f64 / consumed as f64 * sum_prop;
+            sub.set_state(theta, est);
+            est
+        } else {
+            target.current_log_density()
+        };
+        if let Some(a) = &mut self.adapter {
+            self.step = a.update(self.step, accepted);
+        }
+        StepInfo { accepted, evals: 1, log_density: logp }
+    }
+
+    fn name(&self) -> &'static str {
+        "austerity MH"
+    }
+
+    fn freeze_adaptation(&mut self) {
+        AusterityMh::freeze_adaptation(self);
+    }
+
+    fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.f64(self.step);
+        w.u64(self.accepts);
+        w.u64(self.steps);
+        w.u64(self.consumed_total);
+        w.u32_slice(&self.pool);
+        w.bool(self.adapter.is_some());
+        if let Some(a) = &self.adapter {
+            a.save_state(w);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        self.step = r.f64()?;
+        self.accepts = r.u64()?;
+        self.steps = r.u64()?;
+        self.consumed_total = r.u64()?;
+        r.u32_slice_into(&mut self.pool)?;
+        let adaptive = r.bool()?;
+        match (&mut self.adapter, adaptive) {
+            (Some(a), true) => a.load_state(r)?,
+            (None, false) => {}
+            _ => return Err("checkpoint adaptive-ness does not match this sampler".to_string()),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_targets::{GaussDataTarget, GaussTarget};
+    use super::*;
+    use crate::util::math::{mean, variance};
+
+    fn run(
+        s: &mut AusterityMh,
+        target: &mut GaussDataTarget,
+        iters: usize,
+        burnin: usize,
+        seed: u64,
+    ) -> Vec<f64> {
+        let mut theta = vec![target.posterior_mean()];
+        target.commit(&theta);
+        let mut rng = crate::util::Rng::new(seed);
+        let mut draws = Vec::new();
+        for i in 0..iters {
+            s.step(target, &mut theta, &mut rng);
+            if i >= burnin {
+                draws.push(theta[0]);
+            }
+        }
+        draws
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn approximates_conjugate_posterior() {
+        let mut rng = crate::util::Rng::new(41);
+        let mut target = GaussDataTarget::synth(500, 0.9, 1.0, 25.0, &mut rng);
+        let sd = target.posterior_var().sqrt();
+        // Tight tolerance: decisions rarely differ from exact MH.
+        let mut s = AusterityMh::new(2.5 * sd, 0.01, 50);
+        let draws = run(&mut s, &mut target, 30_000, 2_000, 42);
+        let m = mean(&draws);
+        assert!((m - target.posterior_mean()).abs() < 0.5 * sd, "mean {m}");
+        let ratio = variance(&draws) / target.posterior_var();
+        assert!((0.5..2.0).contains(&ratio), "var ratio {ratio}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn early_stopping_consumes_a_strict_subset_on_average() {
+        let mut rng = crate::util::Rng::new(43);
+        let mut target = GaussDataTarget::synth(1000, 0.4, 1.0, 25.0, &mut rng);
+        let sd = target.posterior_var().sqrt();
+        // Large proposals make decisions clear-cut, so the first batch
+        // usually settles them.
+        let mut s = AusterityMh::new(4.0 * sd, 0.05, 50);
+        let _ = run(&mut s, &mut target, 2_000, 0, 44);
+        let avg = s.avg_consumed();
+        assert!(avg < 1000.0, "avg consumed {avg} not below N");
+        assert!(avg >= 50.0, "cannot consume less than the first batch");
+    }
+
+    #[test]
+    fn decisions_deterministic_under_pinned_seed() {
+        let mut mk = |seed_data: u64, seed_chain: u64| {
+            let mut rng = crate::util::Rng::new(seed_data);
+            let mut target = GaussDataTarget::synth(300, 0.2, 1.0, 16.0, &mut rng);
+            let mut s = AusterityMh::new(0.2, 0.05, 20);
+            let mut theta = vec![0.0];
+            target.commit(&theta);
+            let mut chain_rng = crate::util::Rng::new(seed_chain);
+            let mut bits = Vec::new();
+            let mut accept_pattern = Vec::new();
+            for _ in 0..200 {
+                let info = s.step(&mut target, &mut theta, &mut chain_rng);
+                bits.push(theta[0].to_bits());
+                accept_pattern.push(info.accepted);
+            }
+            (bits, accept_pattern, s.consumed_total)
+        };
+        let (b1, a1, c1) = mk(7, 8);
+        let (b2, a2, c2) = mk(7, 8);
+        assert_eq!(b1, b2, "trace bits differ under identical seeds");
+        assert_eq!(a1, a2, "accept decisions differ under identical seeds");
+        assert_eq!(c1, c2, "consumed counts differ under identical seeds");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn adaptation_reaches_0234() {
+        let mut rng = crate::util::Rng::new(45);
+        let mut target = GaussDataTarget::synth(300, 0.0, 1.0, 16.0, &mut rng);
+        let mut s = AusterityMh::adaptive(10.0, 0.05, 20);
+        let mut theta = vec![0.0];
+        target.commit(&theta);
+        let mut chain_rng = crate::util::Rng::new(46);
+        for _ in 0..4000 {
+            s.step(&mut target, &mut theta, &mut chain_rng);
+        }
+        s.freeze_adaptation();
+        let (a0, s0) = (s.accepts, s.steps);
+        for _ in 0..8000 {
+            s.step(&mut target, &mut theta, &mut chain_rng);
+        }
+        let rate = (s.accepts - a0) as f64 / (s.steps - s0) as f64;
+        assert!((rate - 0.234).abs() < 0.1, "acceptance {rate}");
+    }
+
+    #[test]
+    #[should_panic(expected = "subsample-capable")]
+    fn refuses_opaque_targets() {
+        let mut target = GaussTarget::new(2, 1.0);
+        let mut theta = vec![0.0; 2];
+        target.commit(&theta);
+        let mut rng = crate::util::Rng::new(1);
+        AusterityMh::new(0.5, 0.05, 10).step(&mut target, &mut theta, &mut rng);
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_bit_identically() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        let mut rng_data = crate::util::Rng::new(51);
+        let mut target = GaussDataTarget::synth(120, 0.1, 1.0, 9.0, &mut rng_data);
+        let mut twin_rng = crate::util::Rng::new(51);
+        let mut twin_target = GaussDataTarget::synth(120, 0.1, 1.0, 9.0, &mut twin_rng);
+        let mut s = AusterityMh::adaptive(0.3, 0.05, 10);
+        let mut theta = vec![0.0];
+        target.commit(&theta);
+        let mut rng = crate::util::Rng::new(52);
+        for _ in 0..60 {
+            s.step(&mut target, &mut theta, &mut rng);
+        }
+        let mut w = ByteWriter::new();
+        s.save_state(&mut w);
+        rng.save_state(&mut w);
+        w.f64_slice(&theta);
+        w.f64(target.current_log_density());
+        let bytes = w.into_bytes();
+
+        let mut resumed = AusterityMh::adaptive(0.3, 0.05, 10);
+        let mut r = ByteReader::new(&bytes);
+        resumed.load_state(&mut r).unwrap();
+        let mut rng2 = crate::util::Rng::load_state(&mut r).unwrap();
+        let mut theta2 = r.f64_vec().unwrap();
+        let logp = r.f64().unwrap();
+        r.finish().unwrap();
+        twin_target.set_state(&theta2, logp);
+
+        for i in 0..60 {
+            let i1 = s.step(&mut target, &mut theta, &mut rng);
+            let i2 = resumed.step(&mut twin_target, &mut theta2, &mut rng2);
+            assert_eq!(theta[0].to_bits(), theta2[0].to_bits(), "diverged at {i}");
+            assert_eq!(i1.accepted, i2.accepted, "decision diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn mismatched_adaptiveness_rejected_on_load() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        let s = AusterityMh::adaptive(0.3, 0.05, 10);
+        let mut w = ByteWriter::new();
+        s.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut fixed = AusterityMh::new(0.3, 0.05, 10);
+        assert!(fixed.load_state(&mut ByteReader::new(&bytes)).is_err());
+    }
+}

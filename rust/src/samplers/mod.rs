@@ -3,16 +3,20 @@
 //! sampler code — the paper's comparison is then apples-to-apples.
 
 pub mod adapt;
+pub mod austerity;
 pub mod mala;
 pub mod mh;
+pub mod sgld;
 pub mod slice;
 pub mod target;
 
 pub use adapt::StepSizeAdapter;
+pub use austerity::AusterityMh;
 pub use mala::Mala;
 pub use mh::RandomWalkMh;
+pub use sgld::Sgld;
 pub use slice::SliceSampler;
-pub use target::Target;
+pub use target::{SubsampleTarget, Target};
 
 /// Outcome of one θ-update.
 #[derive(Clone, Copy, Debug, Default)]
@@ -25,49 +29,13 @@ pub struct StepInfo {
     pub log_density: f64,
 }
 
-/// Standalone analytic targets for sampler unit tests.
+/// Standalone analytic targets for sampler unit tests — the implementations
+/// live in [`crate::testing::targets`] so the statistical harness and
+/// integration suites can use them too; this alias keeps the historical
+/// unit-test import path.
 #[cfg(test)]
 pub(crate) mod test_targets {
-    use super::Target;
-
-    pub struct GaussTarget {
-        pub dim: usize,
-        pub sigma: f64,
-        theta: Vec<f64>,
-        cur: f64,
-    }
-
-    impl GaussTarget {
-        pub fn new(dim: usize, sigma: f64) -> Self {
-            GaussTarget { dim, sigma, theta: vec![0.0; dim], cur: 0.0 }
-        }
-        fn logp(&self, t: &[f64]) -> f64 {
-            -0.5 * t.iter().map(|x| x * x).sum::<f64>() / (self.sigma * self.sigma)
-        }
-    }
-
-    impl Target for GaussTarget {
-        fn dim(&self) -> usize {
-            self.dim
-        }
-        fn log_density(&mut self, theta: &[f64]) -> f64 {
-            self.logp(theta)
-        }
-        fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
-            for (g, t) in grad.iter_mut().zip(theta) {
-                *g = -t / (self.sigma * self.sigma);
-            }
-            self.logp(theta)
-        }
-        fn commit(&mut self, theta: &[f64]) {
-            self.theta.clear();
-            self.theta.extend_from_slice(theta);
-            self.cur = self.logp(theta);
-        }
-        fn current_log_density(&self) -> f64 {
-            self.cur
-        }
-    }
+    pub use crate::testing::targets::{GaussDataTarget, GaussTarget};
 }
 
 /// A Markov θ-update operator.

@@ -1,0 +1,358 @@
+//! Stochastic-gradient Langevin dynamics (Welling & Teh; survey treatment in
+//! Nemeth & Fearnhead, "Stochastic gradient Markov chain Monte Carlo") — the
+//! first of the repo's *approximate* tall-data competitor baselines.
+//!
+//! One iteration draws a uniform without-replacement minibatch `S` of size
+//! `m`, forms the unbiased gradient estimate
+//!
+//! ```text
+//! ĝ(θ) = ∇ log p(θ) + (N/m) Σ_{i∈S} ∇ log L_i(θ)                  (plain)
+//! ĝ(θ) = ∇ log p(θ) + G(θ̂) + (N/m) Σ_{i∈S} [∇ log L_i(θ) − ∇ log L_i(θ̂)]
+//!                                                                  (CV)
+//! ```
+//!
+//! and moves `θ ← θ + (ε_t/2) ĝ + √ε_t ξ`, `ξ ~ N(0, I)`, with the decaying
+//! step schedule `ε_t = a (b + t)^{-γ}`. The control-variate (CV) form
+//! anchors at the MAP point `θ̂` the FlyMC pipeline already computes:
+//! `G(θ̂) = Σ_n ∇ log L_n(θ̂)` is evaluated once over the full dataset at the
+//! first step, after which each iteration touches `2m` likelihood terms (the
+//! minibatch gradient at θ and at θ̂) instead of `m` — variance falls ∝ to
+//! the squared distance from the anchor, a good trade near the mode.
+//!
+//! There is no accept/reject: every step "accepts", and the invariant
+//! distribution is only approximate (O(ε) bias at fixed step — which is
+//! exactly what `testing::posterior_check` is built to detect, and what the
+//! paper's exactness claim is measured against). With `γ = 0` the step never
+//! decays; the integration suite uses that deliberately-biased mode to prove
+//! the statistical harness has power.
+//!
+//! Query metering: minibatch gradients route through
+//! [`SubsampleTarget::minibatch_grad_acc`] and are counted by the backend at
+//! `idx.len()` likelihood queries per call, so queries/iteration (m, or 2m
+//! for CV, plus the one-time N for the anchor) is directly comparable to
+//! FlyMC's bright-set accounting in the head-to-head bench.
+//!
+//! The recorded `StepInfo::log_density` is the minibatch estimate
+//! `log p(θ) + (N/m) Σ_{i∈S} log L_i(θ)` formed at the *pre-step* point (a
+//! free by-product of the gradient pass) — a diagnostic trace signal, not an
+//! exact density.
+
+use super::target::SubsampleTarget;
+use super::{Sampler, StepInfo, Target};
+use crate::util::Rng;
+
+/// Stochastic-gradient Langevin dynamics over a [`SubsampleTarget`].
+pub struct Sgld {
+    /// minibatch size m (clamped to N at step time)
+    pub minibatch: usize,
+    /// step-schedule scale a in ε_t = a (b + t)^{-γ}
+    pub a: f64,
+    /// step-schedule offset b
+    pub b: f64,
+    /// step-schedule decay exponent γ (0 = fixed step, deliberately biased)
+    pub gamma: f64,
+    /// control-variate anchor θ̂ (None = plain SGLD)
+    anchor: Option<Vec<f64>>,
+    /// Σ_n ∇ log L_n(θ̂), filled on the first step when anchored
+    anchor_grad: Vec<f64>,
+    anchor_ready: bool,
+    /// iteration counter t driving the schedule
+    t: u64,
+    /// persistent 0..N index permutation the minibatches are prefixed from
+    pool: Vec<u32>,
+    /// current minibatch indices
+    idx: Vec<u32>,
+    /// gradient-estimate accumulator
+    ghat: Vec<f64>,
+    /// anchor-minibatch gradient accumulator (CV only)
+    gaux: Vec<f64>,
+}
+
+impl Sgld {
+    /// Plain SGLD with minibatch size `m` and schedule `ε_t = a (b + t)^{-γ}`.
+    pub fn new(minibatch: usize, a: f64, b: f64, gamma: f64) -> Self {
+        assert!(minibatch > 0, "Sgld: minibatch must be positive");
+        assert!(a > 0.0 && b > 0.0 && gamma >= 0.0, "Sgld: invalid schedule");
+        Sgld {
+            minibatch,
+            a,
+            b,
+            gamma,
+            anchor: None,
+            anchor_grad: Vec::new(),
+            anchor_ready: false,
+            t: 0,
+            pool: Vec::new(),
+            idx: Vec::new(),
+            ghat: Vec::new(),
+            gaux: Vec::new(),
+        }
+    }
+
+    /// Enable the control-variate gradient anchored at `anchor` (the MAP
+    /// point the FlyMC pipeline tunes bounds at).
+    pub fn with_anchor(mut self, anchor: Vec<f64>) -> Self {
+        self.anchor = Some(anchor);
+        self
+    }
+
+    /// Step size the schedule yields at iteration `t`.
+    pub fn step_size_at(&self, t: u64) -> f64 {
+        self.a * (self.b + t as f64).powf(-self.gamma)
+    }
+
+    /// Iterations taken so far.
+    pub fn iterations(&self) -> u64 {
+        self.t
+    }
+
+    fn ensure_buffers(&mut self, n: usize, d: usize) {
+        if self.pool.len() != n {
+            self.pool.clear();
+            self.pool.extend(0..n as u32);
+        }
+        let m = self.minibatch.min(n);
+        self.idx.resize(m, 0);
+        self.ghat.resize(d, 0.0);
+        self.gaux.resize(d, 0.0);
+        self.anchor_grad.resize(d, 0.0);
+    }
+}
+
+impl Sampler for Sgld {
+    // lint: zero-alloc
+    fn step(
+        &mut self,
+        target: &mut dyn Target,
+        theta: &mut Vec<f64>,
+        rng: &mut Rng,
+    ) -> StepInfo {
+        debug_assert_eq!(theta.len(), target.dim());
+        let d = theta.len();
+        let sub = target
+            .as_subsample()
+            .expect("SGLD requires a subsample-capable target (full-data posterior)");
+        let n = sub.n_data();
+        self.ensure_buffers(n, d);
+        let m = self.idx.len();
+        let scale = n as f64 / m as f64;
+
+        // One-time full-data anchor gradient for the CV estimator, computed
+        // over the pool in its pristine 0..N order (before any shuffling) so
+        // the float reduction order is canonical and deterministic.
+        if self.anchor.is_some() && !self.anchor_ready {
+            self.anchor_grad.fill(0.0);
+            let anchor = self.anchor.as_ref().expect("checked above");
+            sub.minibatch_grad_acc(anchor, &self.pool, &mut self.anchor_grad);
+            self.anchor_ready = true;
+        }
+
+        rng.sample_without_replacement_into(&mut self.pool, &mut self.idx);
+        let eps = self.step_size_at(self.t);
+        self.t += 1;
+
+        // Likelihood part of the gradient estimate.
+        self.ghat.fill(0.0);
+        let ll_sum = sub.minibatch_grad_acc(theta, &self.idx, &mut self.ghat);
+        if let Some(anchor) = &self.anchor {
+            self.gaux.fill(0.0);
+            sub.minibatch_grad_acc(anchor, &self.idx, &mut self.gaux);
+            for ((g, &ga), &gfull) in
+                self.ghat.iter_mut().zip(&self.gaux).zip(&self.anchor_grad)
+            {
+                *g = gfull + scale * (*g - ga);
+            }
+        } else {
+            for g in &mut self.ghat {
+                *g *= scale;
+            }
+        }
+        sub.prior_grad_acc(theta, &mut self.ghat);
+
+        // Minibatch density estimate at the pre-step point (diagnostic).
+        let logp_est = sub.prior_log_density(theta) + scale * ll_sum;
+
+        // Langevin move: θ += (ε/2) ĝ + √ε ξ.
+        let noise = eps.sqrt();
+        for (th, &g) in theta.iter_mut().zip(&self.ghat) {
+            *th += 0.5 * eps * g + noise * rng.normal();
+        }
+        sub.set_state(theta, logp_est);
+        StepInfo { accepted: true, evals: 1, log_density: logp_est }
+    }
+
+    fn name(&self) -> &'static str {
+        if self.anchor.is_some() {
+            "SGLD-CV"
+        } else {
+            "SGLD"
+        }
+    }
+
+    fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.u64(self.t);
+        w.bool(self.anchor_ready);
+        if self.anchor_ready {
+            w.f64_slice(&self.anchor_grad);
+        }
+        w.u32_slice(&self.pool);
+    }
+
+    fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        self.t = r.u64()?;
+        self.anchor_ready = r.bool()?;
+        if self.anchor_ready {
+            if self.anchor.is_none() {
+                return Err("checkpoint has a CV anchor gradient, sampler has no anchor".into());
+            }
+            r.f64_slice_into(&mut self.anchor_grad)?;
+        }
+        r.u32_slice_into(&mut self.pool)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_targets::{GaussDataTarget, GaussTarget};
+    use super::*;
+    use crate::util::math::{mean, variance};
+
+    fn run_sgld(
+        sgld: &mut Sgld,
+        target: &mut GaussDataTarget,
+        iters: usize,
+        burnin: usize,
+        seed: u64,
+    ) -> Vec<f64> {
+        let mut theta = vec![target.posterior_mean()];
+        target.commit(&theta);
+        let mut rng = crate::util::Rng::new(seed);
+        let mut draws = Vec::new();
+        for i in 0..iters {
+            sgld.step(target, &mut theta, &mut rng);
+            if i >= burnin {
+                draws.push(theta[0]);
+            }
+        }
+        draws
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn tracks_conjugate_posterior_mean() {
+        let mut rng = crate::util::Rng::new(11);
+        let mut target = GaussDataTarget::synth(400, 1.2, 1.0, 25.0, &mut rng);
+        // Small near-constant step: bias O(ε) stays below the check tolerance.
+        let mut sgld = Sgld::new(32, 2e-5, 1.0, 0.05);
+        let draws = run_sgld(&mut sgld, &mut target, 30_000, 2_000, 12);
+        let m = mean(&draws);
+        let sd = target.posterior_var().sqrt();
+        assert!(
+            (m - target.posterior_mean()).abs() < 0.5 * sd,
+            "mean {m} vs {}",
+            target.posterior_mean()
+        );
+        let ratio = variance(&draws) / target.posterior_var();
+        assert!((0.3..3.0).contains(&ratio), "var ratio {ratio}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn cv_variant_tracks_posterior_too() {
+        let mut rng = crate::util::Rng::new(13);
+        let mut target = GaussDataTarget::synth(400, -0.7, 1.0, 25.0, &mut rng);
+        let anchor = vec![target.posterior_mean()]; // MAP ≈ posterior mean here
+        let mut sgld = Sgld::new(32, 2e-5, 1.0, 0.05).with_anchor(anchor);
+        assert_eq!(sgld.name(), "SGLD-CV");
+        let draws = run_sgld(&mut sgld, &mut target, 30_000, 2_000, 14);
+        let m = mean(&draws);
+        let sd = target.posterior_var().sqrt();
+        assert!((m - target.posterior_mean()).abs() < 0.5 * sd, "mean {m}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn large_fixed_step_overdisperses() {
+        // γ=0 with a step ~40× posterior variance: the invariant law is
+        // visibly wrong — the mode integration_baselines relies on.
+        let mut rng = crate::util::Rng::new(15);
+        let mut target = GaussDataTarget::synth(400, 0.5, 1.0, 25.0, &mut rng);
+        let mut sgld = Sgld::new(32, 1e-1, 1.0, 0.0);
+        let draws = run_sgld(&mut sgld, &mut target, 8_000, 500, 16);
+        let v = variance(&draws);
+        assert!(v > 3.0 * target.posterior_var(), "var {v} not inflated");
+    }
+
+    #[test]
+    fn schedule_decays_and_gamma0_is_fixed() {
+        let s = Sgld::new(8, 1e-3, 10.0, 0.55);
+        assert!(s.step_size_at(0) > s.step_size_at(100));
+        let fixed = Sgld::new(8, 1e-3, 10.0, 0.0);
+        assert_eq!(fixed.step_size_at(0), fixed.step_size_at(10_000));
+    }
+
+    #[test]
+    #[should_panic(expected = "subsample-capable")]
+    fn refuses_opaque_targets() {
+        let mut target = GaussTarget::new(2, 1.0);
+        let mut theta = vec![0.0; 2];
+        target.commit(&theta);
+        let mut rng = crate::util::Rng::new(1);
+        Sgld::new(4, 1e-4, 1.0, 0.0).step(&mut target, &mut theta, &mut rng);
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_bit_identically() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        let mut rng_data = crate::util::Rng::new(21);
+        let mut target = GaussDataTarget::synth(100, 0.3, 1.0, 9.0, &mut rng_data);
+        let mut twin_rng = crate::util::Rng::new(21);
+        let mut twin_target = GaussDataTarget::synth(100, 0.3, 1.0, 9.0, &mut twin_rng);
+        let mut sgld = Sgld::new(16, 1e-4, 1.0, 0.3);
+        let mut theta = vec![0.0];
+        target.commit(&theta);
+        let mut rng = crate::util::Rng::new(22);
+        for _ in 0..50 {
+            sgld.step(&mut target, &mut theta, &mut rng);
+        }
+        // checkpoint sampler + rng + theta
+        let mut w = ByteWriter::new();
+        sgld.save_state(&mut w);
+        rng.save_state(&mut w);
+        w.f64_slice(&theta);
+        let bytes = w.into_bytes();
+
+        let mut resumed = Sgld::new(16, 1e-4, 1.0, 0.3);
+        let mut r = ByteReader::new(&bytes);
+        resumed.load_state(&mut r).unwrap();
+        let mut rng2 = crate::util::Rng::load_state(&mut r).unwrap();
+        let mut theta2 = r.f64_vec().unwrap();
+        r.finish().unwrap();
+        twin_target.commit(&theta2);
+        target.commit(&theta); // align committed state representations
+
+        for i in 0..50 {
+            sgld.step(&mut target, &mut theta, &mut rng);
+            resumed.step(&mut twin_target, &mut theta2, &mut rng2);
+            assert_eq!(theta[0].to_bits(), theta2[0].to_bits(), "diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn cv_anchor_mismatch_is_rejected_on_load() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        let mut rng_data = crate::util::Rng::new(31);
+        let mut target = GaussDataTarget::synth(50, 0.0, 1.0, 4.0, &mut rng_data);
+        let mut sgld = Sgld::new(8, 1e-4, 1.0, 0.0).with_anchor(vec![0.1]);
+        let mut theta = vec![0.0];
+        target.commit(&theta);
+        let mut rng = crate::util::Rng::new(32);
+        sgld.step(&mut target, &mut theta, &mut rng); // computes anchor grad
+        let mut w = ByteWriter::new();
+        sgld.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut plain = Sgld::new(8, 1e-4, 1.0, 0.0);
+        assert!(plain.load_state(&mut ByteReader::new(&bytes)).is_err());
+    }
+}

@@ -49,4 +49,54 @@ pub trait Target {
     fn version(&self) -> u64 {
         0
     }
+
+    /// Downcast hook for the approximate tall-data samplers: a target that
+    /// can serve minibatch likelihood estimates returns `Some(self)` here.
+    /// Default `None` keeps exact targets (the FlyMC pseudo-posterior)
+    /// opaque, so SGLD/austerity refuse them at startup instead of silently
+    /// subsampling an augmented density.
+    fn as_subsample(&mut self) -> Option<&mut dyn SubsampleTarget> {
+        None
+    }
+}
+
+/// Minibatch view of a full-data posterior, the contract the approximate
+/// samplers (`samplers::sgld`, `samplers::austerity`) are written against.
+///
+/// The posterior factorizes as `p(θ|x) ∝ p(θ) Π_n L_n(θ)`; implementations
+/// serve per-datum log-likelihood terms and their gradients for
+/// caller-chosen index subsets through the same `BatchEval` kernel path the
+/// exact samplers use, so every datum touched is metered as one likelihood
+/// query in `metrics::Counters` — queries/iteration stays comparable across
+/// exact and approximate algorithms.
+///
+/// All buffer parameters follow the crate's zero-alloc contract: outputs are
+/// caller-owned, cleared/overwritten by the callee, never reallocated in
+/// steady state.
+pub trait SubsampleTarget {
+    /// Number of likelihood factors N.
+    fn n_data(&self) -> usize;
+
+    /// Per-datum log-likelihoods `log L_i(θ)` for each `i` in `idx`, written
+    /// to `ll` (cleared and resized to `idx.len()`). Counts `idx.len()`
+    /// likelihood queries.
+    fn minibatch_log_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>);
+
+    /// Accumulates `Σ_{i∈idx} ∇ log L_i(θ)` into `grad` (NOT zeroed first —
+    /// callers compose prior/anchor terms by accumulation) and returns
+    /// `Σ_{i∈idx} log L_i(θ)`. Counts `idx.len()` likelihood queries.
+    fn minibatch_grad_acc(&mut self, theta: &[f64], idx: &[u32], grad: &mut [f64]) -> f64;
+
+    /// Prior log density at `theta` (no likelihood queries).
+    fn prior_log_density(&self, theta: &[f64]) -> f64;
+
+    /// Accumulates the prior's gradient into `grad` (no likelihood queries).
+    fn prior_grad_acc(&self, theta: &[f64], grad: &mut [f64]);
+
+    /// Adopt `theta` as the committed state with `log_density_estimate` as
+    /// its (estimated) log density, WITHOUT re-evaluating the full dataset.
+    /// This is how approximate samplers advance the chain: a full
+    /// [`Target::commit`] on a fresh point would cost N queries and destroy
+    /// the queries/iteration accounting the head-to-head bench reports.
+    fn set_state(&mut self, theta: &[f64], log_density_estimate: f64);
 }

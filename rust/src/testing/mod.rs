@@ -7,6 +7,19 @@
 
 use crate::util::Rng;
 
+pub mod posterior_check;
+pub mod targets;
+
+/// The pinned seed property/statistical tests run under: the
+/// `FIREFLY_PROP_SEED` environment variable when set (to reproduce a reported
+/// failure), else a fixed default so CI is deterministic.
+pub fn prop_seed() -> u64 {
+    std::env::var("FIREFLY_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF1EF_17u64)
+}
+
 /// Run a property over `cases` generated inputs. Panics with seed + debug
 /// dump of the first failing case.
 pub fn check<T: std::fmt::Debug>(
@@ -15,10 +28,7 @@ pub fn check<T: std::fmt::Debug>(
     mut generator: impl FnMut(&mut Rng) -> T,
     mut property: impl FnMut(&T) -> bool,
 ) {
-    let seed = std::env::var("FIREFLY_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xF1EF_17u64);
+    let seed = prop_seed();
     let mut rng = Rng::new(seed);
     for case in 0..cases {
         let input = generator(&mut rng);
@@ -38,10 +48,7 @@ pub fn check_msg<T: std::fmt::Debug>(
     mut generator: impl FnMut(&mut Rng) -> T,
     mut property: impl FnMut(&T) -> Result<(), String>,
 ) {
-    let seed = std::env::var("FIREFLY_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xF1EF_17u64);
+    let seed = prop_seed();
     let mut rng = Rng::new(seed);
     for case in 0..cases {
         let input = generator(&mut rng);

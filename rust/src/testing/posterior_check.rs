@@ -1,0 +1,428 @@
+//! Seeded statistical validation of sampler output against a known
+//! posterior.
+//!
+//! The harness answers one question: *do these MCMC samples come from the
+//! posterior they claim to?* It runs a battery of per-component z-tests —
+//! mean, second moment, and quantile-coverage at 25/50/75% — against either
+//! an analytic Gaussian posterior ([`check_against_normal`]) or a trusted
+//! long reference chain ([`check_against_reference`]).
+//!
+//! False-positive accounting is explicit (DESIGN.md §Baselines):
+//!
+//! * every standard error is scaled by the series' **effective sample
+//!   size**, not its raw length, so autocorrelated chains are not
+//!   over-penalized. The harness takes the more conservative (smaller) of
+//!   the batch-means and Geyer estimates: batch means saturates when the
+//!   autocorrelation time exceeds the batch length, and a too-optimistic
+//!   ESS would turn mixing noise into spurious bias flags;
+//! * the rejection threshold is **Bonferroni-corrected** over the full
+//!   battery (`dim × 5` tests): each |z| is compared against
+//!   `Φ⁻¹(1 − α / (2·tests))`, bounding the family-wise false-positive
+//!   rate of a *correct* sampler at `α`.
+//!
+//! Under the repo's pinned seeds a pass/fail outcome is deterministic, so a
+//! check that passes once in CI passes always; `α` only calibrates how far
+//! into the tail the pinned draw would have to land to flag a correct
+//! sampler. "Bias detected" therefore means the observed discrepancy is
+//! many standard errors beyond what chain noise at this ESS explains — the
+//! operational definition used by `rust/tests/integration_baselines.rs` and
+//! the head-to-head bench's bias column.
+
+use crate::diagnostics::TraceMatrix;
+use crate::util::math::{mean, normal_quantile, variance};
+
+/// Quantile levels every check battery covers.
+pub const QUANTILES: [f64; 3] = [0.25, 0.5, 0.75];
+
+/// One z-test in a check battery.
+#[derive(Clone, Debug)]
+pub struct TestOutcome {
+    /// θ component index the test applies to
+    pub component: usize,
+    /// what was compared ("mean", "second moment", "q25", "q50", "q75")
+    pub statistic: &'static str,
+    /// observed discrepancy in standard-error units
+    pub z: f64,
+}
+
+/// Result of a full check battery.
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    /// family-wise false-positive rate the threshold was derived from
+    pub alpha: f64,
+    /// Bonferroni-corrected two-sided |z| rejection threshold
+    pub threshold: f64,
+    /// every test in the battery (`dim × 5` entries)
+    pub tests: Vec<TestOutcome>,
+}
+
+impl CheckReport {
+    /// Whether every test in the battery stayed below the threshold.
+    pub fn passed(&self) -> bool {
+        self.tests.iter().all(|t| t.z.abs() <= self.threshold)
+    }
+
+    /// Largest |z| over the battery — the scalar "posterior-moment bias"
+    /// the head-to-head bench reports per algorithm. NaN z-scores (a
+    /// degenerate chain) count as infinite bias, never as evidence of
+    /// correctness.
+    pub fn max_abs_z(&self) -> f64 {
+        self.tests
+            .iter()
+            .map(|t| if t.z.is_nan() { f64::INFINITY } else { t.z.abs() })
+            .fold(0.0, f64::max)
+    }
+
+    /// Human-readable descriptions of every failing test.
+    pub fn failures(&self) -> Vec<String> {
+        self.tests
+            .iter()
+            .filter(|t| !(t.z.abs() <= self.threshold))
+            .map(|t| {
+                format!(
+                    "component {} {}: |z| = {:.2} exceeds {:.2}",
+                    t.component, t.statistic, t.z, self.threshold
+                )
+            })
+            .collect()
+    }
+}
+
+/// Effective sample size of a scalar series by the method of batch means
+/// (`B = ⌊√T⌋` batches): `τ̂ = L·Var(batch means)/s²`, `ESS = T/τ̂`,
+/// clamped to `[1, T]`. Matches the estimator the streaming diagnostics
+/// use, computed here over a recorded column.
+pub fn batch_means_ess(x: &[f64]) -> f64 {
+    let t = x.len();
+    if t < 4 {
+        return t.max(1) as f64;
+    }
+    let b = (t as f64).sqrt().floor() as usize;
+    let l = t / b;
+    let used = b * l;
+    let s2 = variance(&x[..used]);
+    if s2.is_nan() || s2 <= 0.0 {
+        return 1.0; // constant (or NaN-poisoned) chain carries no information
+    }
+    let batch_means: Vec<f64> = (0..b).map(|i| mean(&x[i * l..(i + 1) * l])).collect();
+    let tau = (l as f64 * variance(&batch_means) / s2).max(1e-12);
+    (t as f64 / tau).clamp(1.0, t as f64)
+}
+
+/// The ESS estimate the check batteries scale standard errors by: the
+/// smaller of [`batch_means_ess`] and the Geyer initial-monotone-sequence
+/// estimate ([`crate::diagnostics::ess_geyer`]). Conservative by
+/// construction — see the module docs.
+pub fn series_ess(x: &[f64]) -> f64 {
+    batch_means_ess(x).min(crate::diagnostics::ess_geyer(x)).max(1.0)
+}
+
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn fraction_below(x: &[f64], t: f64) -> f64 {
+    x.iter().filter(|&&v| v <= t).count() as f64 / x.len() as f64
+}
+
+fn bonferroni_threshold(alpha: f64, tests: usize) -> f64 {
+    assert!(alpha > 0.0 && alpha < 1.0, "alpha must lie in (0, 1)");
+    normal_quantile(1.0 - alpha / (2.0 * tests.max(1) as f64))
+}
+
+struct ColumnStats {
+    xs: Vec<f64>,
+    sorted: Vec<f64>,
+    mean: f64,
+    var: f64,
+    ess: f64,
+    m2: f64,     // second raw moment  E[x²]
+    var_x2: f64, // sample variance of x²
+}
+
+impl ColumnStats {
+    fn gather(trace: &TraceMatrix, j: usize) -> ColumnStats {
+        let xs: Vec<f64> = trace.column_iter(j).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        let sq: Vec<f64> = xs.iter().map(|&x| x * x).collect();
+        ColumnStats {
+            mean: mean(&xs),
+            var: variance(&xs),
+            ess: series_ess(&xs),
+            m2: mean(&sq),
+            var_x2: variance(&sq),
+            xs,
+            sorted,
+        }
+    }
+}
+
+/// Check a chain's samples against an analytic posterior with independent
+/// Gaussian marginals `θ_j ~ N(means[j], vars[j])` (the conjugate cases the
+/// harness itself is validated on). The analytic side contributes zero
+/// sampling error, so every standard error comes from the chain's
+/// batch-means ESS alone.
+///
+/// Panics unless the trace is non-empty and `means`/`vars` match its
+/// dimension with positive variances.
+pub fn check_against_normal(
+    chain: &TraceMatrix,
+    means: &[f64],
+    vars: &[f64],
+    alpha: f64,
+) -> CheckReport {
+    assert!(!chain.is_empty(), "posterior check needs a recorded trace");
+    assert_eq!(chain.dim(), means.len(), "means do not match trace dim");
+    assert_eq!(chain.dim(), vars.len(), "vars do not match trace dim");
+    assert!(vars.iter().all(|&v| v > 0.0), "analytic variances must be positive");
+    let n_tests = chain.dim() * (2 + QUANTILES.len());
+    let threshold = bonferroni_threshold(alpha, n_tests);
+    let mut tests = Vec::with_capacity(n_tests);
+    for j in 0..chain.dim() {
+        let c = ColumnStats::gather(chain, j);
+        let (mu, v) = (means[j], vars[j]);
+        // mean: Var(θ̄) = σ²/ESS
+        tests.push(TestOutcome {
+            component: j,
+            statistic: "mean",
+            z: (c.mean - mu) / (v / c.ess).sqrt(),
+        });
+        // second raw moment: E[θ²] = μ² + σ², Var(θ²) = 2σ⁴ + 4μ²σ²
+        let m2_true = mu * mu + v;
+        let var_x2 = 2.0 * v * v + 4.0 * mu * mu * v;
+        tests.push(TestOutcome {
+            component: j,
+            statistic: "second moment",
+            z: (c.m2 - m2_true) / (var_x2 / c.ess).sqrt(),
+        });
+        // quantile coverage: P(θ ≤ μ + σΦ⁻¹(q)) must be q
+        for (&q, stat) in QUANTILES.iter().zip(["q25", "q50", "q75"]) {
+            let t = mu + v.sqrt() * normal_quantile(q);
+            let se = (q * (1.0 - q) / c.ess).sqrt();
+            tests.push(TestOutcome {
+                component: j,
+                statistic: stat,
+                z: (fraction_below(&c.xs, t) - q) / se,
+            });
+        }
+    }
+    CheckReport { alpha, threshold, tests }
+}
+
+/// Check a chain's samples against a trusted reference chain of the same
+/// posterior (two-sample): means, second moments, and quantile coverage
+/// must agree within the noise both chains' batch-means ESS predicts.
+///
+/// The reference should be much longer than the chain under test — its ESS
+/// enters every standard error, so a short reference widens all tolerances.
+///
+/// Panics unless both traces are non-empty with equal dimensions.
+pub fn check_against_reference(
+    chain: &TraceMatrix,
+    reference: &TraceMatrix,
+    alpha: f64,
+) -> CheckReport {
+    assert!(
+        !chain.is_empty() && !reference.is_empty(),
+        "posterior check needs recorded traces"
+    );
+    assert_eq!(chain.dim(), reference.dim(), "trace dims differ");
+    let n_tests = chain.dim() * (2 + QUANTILES.len());
+    let threshold = bonferroni_threshold(alpha, n_tests);
+    let mut tests = Vec::with_capacity(n_tests);
+    for j in 0..chain.dim() {
+        let c = ColumnStats::gather(chain, j);
+        let r = ColumnStats::gather(reference, j);
+        tests.push(TestOutcome {
+            component: j,
+            statistic: "mean",
+            z: (c.mean - r.mean) / (c.var / c.ess + r.var / r.ess).sqrt(),
+        });
+        tests.push(TestOutcome {
+            component: j,
+            statistic: "second moment",
+            z: (c.m2 - r.m2) / (c.var_x2 / c.ess + r.var_x2 / r.ess).sqrt(),
+        });
+        // coverage of the reference's empirical quantiles by the chain
+        for (&q, stat) in QUANTILES.iter().zip(["q25", "q50", "q75"]) {
+            let t = quantile_sorted(&r.sorted, q);
+            let p_ref = fraction_below(&r.xs, t);
+            let se = (q * (1.0 - q) * (1.0 / c.ess + 1.0 / r.ess)).sqrt();
+            tests.push(TestOutcome {
+                component: j,
+                statistic: stat,
+                z: (fraction_below(&c.xs, t) - p_ref) / se,
+            });
+        }
+    }
+    CheckReport { alpha, threshold, tests }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::{Mala, RandomWalkMh, Sampler, SliceSampler};
+    use crate::testing::targets::{GaussDataTarget, GaussTarget};
+    use crate::util::Rng;
+
+    fn run_chain(
+        sampler: &mut dyn Sampler,
+        target: &mut dyn crate::samplers::Target,
+        iters: usize,
+        burnin: usize,
+        thin: usize,
+        seed: u64,
+    ) -> TraceMatrix {
+        let mut rng = Rng::new(seed);
+        let mut theta = vec![0.0; target.dim()];
+        target.commit(&theta);
+        let mut trace = TraceMatrix::with_capacity(theta.len(), (iters - burnin) / thin);
+        for i in 0..iters {
+            if i == burnin {
+                sampler.freeze_adaptation();
+            }
+            sampler.step(target, &mut theta, &mut rng);
+            if i >= burnin && (i - burnin) % thin == 0 {
+                trace.push_row(&theta);
+            }
+        }
+        trace
+    }
+
+    fn iid_normal_trace(dim: usize, rows: usize, mu: f64, sigma: f64, seed: u64) -> TraceMatrix {
+        let mut rng = Rng::new(seed);
+        let mut trace = TraceMatrix::with_capacity(dim, rows);
+        let mut row = vec![0.0; dim];
+        for _ in 0..rows {
+            for v in row.iter_mut() {
+                *v = mu + sigma * rng.normal();
+            }
+            trace.push_row(&row);
+        }
+        trace
+    }
+
+    #[test]
+    fn batch_means_ess_tracks_iid_and_correlated_chains() {
+        let mut rng = Rng::new(crate::testing::prop_seed() ^ 0xE55);
+        let iid: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        let e = batch_means_ess(&iid);
+        assert!(e > 4000.0 && e <= 10_000.0, "iid ESS {e}");
+        // AR(1) with rho = 0.95 has tau ≈ 39
+        let mut x = vec![0.0; 50_000];
+        for i in 1..x.len() {
+            x[i] = 0.95 * x[i - 1] + rng.normal();
+        }
+        let e = batch_means_ess(&x);
+        let tau = x.len() as f64 / e;
+        assert!(tau > 15.0 && tau < 120.0, "AR(1) tau {tau}");
+        // the battery's estimate is never more optimistic than either input
+        let s = series_ess(&x);
+        assert!(s <= batch_means_ess(&x) && s >= 1.0);
+        // degenerate inputs
+        assert_eq!(batch_means_ess(&[]), 1.0);
+        assert_eq!(batch_means_ess(&[1.0, 1.0, 1.0, 1.0, 1.0]), 1.0);
+        assert_eq!(series_ess(&[]), 1.0);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn exact_samplers_pass_against_the_analytic_gaussian() {
+        // the harness's own calibration: all three paper samplers on a
+        // target with known moments must clear the battery
+        let seed = crate::testing::prop_seed() ^ 0x9C;
+        let dim = 3;
+        let sigma = 1.3;
+        let means = vec![0.0; dim];
+        let vars = vec![sigma * sigma; dim];
+        let samplers: Vec<(&str, Box<dyn Sampler>)> = vec![
+            ("mh", Box::new(RandomWalkMh::adaptive(0.8))),
+            ("mala", Box::new(Mala::adaptive(0.4))),
+            ("slice", Box::new(SliceSampler::new(1.0))),
+        ];
+        for (name, mut s) in samplers {
+            let mut target = GaussTarget::new(dim, sigma);
+            let trace = run_chain(s.as_mut(), &mut target, 44_000, 4_000, 5, seed);
+            let report = check_against_normal(&trace, &means, &vars, 1e-3);
+            assert!(
+                report.passed(),
+                "{name} flagged on its own target: {:?}",
+                report.failures()
+            );
+            assert!(report.max_abs_z() <= report.threshold);
+            assert_eq!(report.tests.len(), dim * 5);
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn wrong_moments_are_detected() {
+        let seed = crate::testing::prop_seed() ^ 0xBAD;
+        let mut s = RandomWalkMh::adaptive(0.8);
+        let mut target = GaussTarget::new(2, 1.0);
+        let trace = run_chain(&mut s, &mut target, 22_000, 2_000, 5, seed);
+        // wrong mean
+        let r = check_against_normal(&trace, &[0.5, 0.0], &[1.0, 1.0], 0.01);
+        assert!(!r.passed(), "shifted mean not detected");
+        assert!(!r.failures().is_empty());
+        // wrong variance
+        let r = check_against_normal(&trace, &[0.0, 0.0], &[4.0, 4.0], 0.01);
+        assert!(!r.passed(), "inflated variance not detected");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn two_sample_check_passes_same_and_flags_shifted_references() {
+        let seed = crate::testing::prop_seed() ^ 0x25A;
+        let chain = iid_normal_trace(2, 8_000, 0.0, 1.0, seed);
+        let reference = iid_normal_trace(2, 40_000, 0.0, 1.0, seed ^ 1);
+        let r = check_against_reference(&chain, &reference, 1e-3);
+        assert!(r.passed(), "same-distribution pair flagged: {:?}", r.failures());
+        let shifted = iid_normal_trace(2, 40_000, 0.4, 1.0, seed ^ 2);
+        let r = check_against_reference(&chain, &shifted, 0.01);
+        assert!(!r.passed(), "0.4σ shift not detected");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn conjugate_data_posterior_clears_the_battery() {
+        // end-to-end on a data-factorized posterior: RW-MH over
+        // GaussDataTarget vs its closed-form conjugate moments
+        let seed = crate::testing::prop_seed() ^ 0xC0;
+        let mut rng = Rng::new(seed);
+        let mut target = GaussDataTarget::synth(300, 0.7, 1.0, 25.0, &mut rng);
+        let sd = target.posterior_var().sqrt();
+        let mut s = RandomWalkMh::adaptive(2.5 * sd);
+        let trace = run_chain(&mut s, &mut target, 44_000, 4_000, 5, seed ^ 3);
+        let means = vec![target.posterior_mean()];
+        let vars = vec![target.posterior_var()];
+        let r = check_against_normal(&trace, &means, &vars, 1e-3);
+        assert!(r.passed(), "conjugate posterior flagged: {:?}", r.failures());
+    }
+
+    #[test]
+    fn report_accounting_is_consistent() {
+        let trace = iid_normal_trace(1, 512, 0.0, 1.0, 7);
+        let r = check_against_normal(&trace, &[0.0], &[1.0], 0.01);
+        assert_eq!(r.tests.len(), 5);
+        // Bonferroni: threshold grows with the battery size
+        let wide = bonferroni_threshold(0.01, 50);
+        let narrow = bonferroni_threshold(0.01, 5);
+        assert!(wide > narrow && narrow > bonferroni_threshold(0.05, 5));
+        // NaN z-scores never pass silently
+        let mut bad = r.clone();
+        bad.tests[0].z = f64::NAN;
+        assert!(!bad.passed());
+        assert_eq!(bad.max_abs_z(), f64::INFINITY);
+    }
+
+    #[test]
+    #[should_panic(expected = "trace dims differ")]
+    fn mismatched_dims_are_rejected() {
+        let a = iid_normal_trace(1, 64, 0.0, 1.0, 1);
+        let b = iid_normal_trace(2, 64, 0.0, 1.0, 2);
+        check_against_reference(&a, &b, 0.01);
+    }
+}

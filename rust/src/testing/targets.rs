@@ -1,0 +1,205 @@
+//! Analytic targets for sampler validation.
+//!
+//! [`GaussTarget`] is the standalone isotropic Gaussian the θ-sampler unit
+//! tests have always run against (promoted here from a test-only module so
+//! the statistical harness in [`super::posterior_check`] and the integration
+//! suites can validate against a posterior with known moments).
+//!
+//! [`GaussDataTarget`] is the smallest *data-factorized* posterior: N scalar
+//! observations `y_i ~ N(θ, σ²)` under a `N(0, τ²)` prior, with the conjugate
+//! posterior available in closed form. It implements both [`Target`] and
+//! [`SubsampleTarget`], so the approximate samplers (SGLD, austerity MH) can
+//! be unit-tested against exact moments without a model/backend stack.
+
+use crate::samplers::target::{SubsampleTarget, Target};
+
+/// Isotropic zero-mean Gaussian target `N(0, σ² I)` with analytic moments.
+pub struct GaussTarget {
+    /// parameter dimension
+    pub dim: usize,
+    /// per-component standard deviation
+    pub sigma: f64,
+    theta: Vec<f64>,
+    cur: f64,
+}
+
+impl GaussTarget {
+    /// A `dim`-dimensional N(0, σ²I) target.
+    pub fn new(dim: usize, sigma: f64) -> Self {
+        GaussTarget { dim, sigma, theta: vec![0.0; dim], cur: 0.0 }
+    }
+    fn logp(&self, t: &[f64]) -> f64 {
+        -0.5 * t.iter().map(|x| x * x).sum::<f64>() / (self.sigma * self.sigma)
+    }
+}
+
+impl Target for GaussTarget {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn log_density(&mut self, theta: &[f64]) -> f64 {
+        self.logp(theta)
+    }
+    fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        for (g, t) in grad.iter_mut().zip(theta) {
+            *g = -t / (self.sigma * self.sigma);
+        }
+        self.logp(theta)
+    }
+    fn commit(&mut self, theta: &[f64]) {
+        self.theta.clear();
+        self.theta.extend_from_slice(theta);
+        self.cur = self.logp(theta);
+    }
+    fn current_log_density(&self) -> f64 {
+        self.cur
+    }
+}
+
+/// Scalar conjugate-Gaussian data posterior: `y_i ~ N(θ, σ²)`, `θ ~ N(0, τ²)`.
+///
+/// The posterior is `N(m, v)` with precision `P = n/σ² + 1/τ²`,
+/// `v = 1/P`, `m = (Σy/σ²)/P` — see [`Self::posterior_mean`] /
+/// [`Self::posterior_var`]. Likelihood factors are served per-datum through
+/// [`SubsampleTarget`], which is what lets SGLD/austerity unit tests check
+/// their estimators against exact moments.
+pub struct GaussDataTarget {
+    y: Vec<f64>,
+    sigma2: f64,
+    tau2: f64,
+    theta: Vec<f64>,
+    cur: f64,
+}
+
+impl GaussDataTarget {
+    /// Build from observations `y` with noise variance `sigma2` and prior
+    /// variance `tau2`.
+    pub fn new(y: Vec<f64>, sigma2: f64, tau2: f64) -> Self {
+        assert!(!y.is_empty() && sigma2 > 0.0 && tau2 > 0.0);
+        GaussDataTarget { y, sigma2, tau2, theta: vec![0.0], cur: 0.0 }
+    }
+
+    /// Synthesize `n` observations from `N(mu_true, sigma2)` under `rng`.
+    pub fn synth(n: usize, mu_true: f64, sigma2: f64, tau2: f64, rng: &mut crate::util::Rng) -> Self {
+        let y = (0..n).map(|_| mu_true + sigma2.sqrt() * rng.normal()).collect();
+        Self::new(y, sigma2, tau2)
+    }
+
+    /// Exact posterior mean.
+    pub fn posterior_mean(&self) -> f64 {
+        let sum_y: f64 = self.y.iter().sum();
+        (sum_y / self.sigma2) / self.posterior_precision()
+    }
+
+    /// Exact posterior variance.
+    pub fn posterior_var(&self) -> f64 {
+        1.0 / self.posterior_precision()
+    }
+
+    fn posterior_precision(&self) -> f64 {
+        self.y.len() as f64 / self.sigma2 + 1.0 / self.tau2
+    }
+
+    fn log_lik_one(&self, theta: f64, i: usize) -> f64 {
+        let d = self.y[i] - theta;
+        -0.5 * d * d / self.sigma2
+    }
+
+    fn full_logp(&self, theta: f64) -> f64 {
+        let lik: f64 = (0..self.y.len()).map(|i| self.log_lik_one(theta, i)).sum();
+        -0.5 * theta * theta / self.tau2 + lik
+    }
+}
+
+impl Target for GaussDataTarget {
+    fn dim(&self) -> usize {
+        1
+    }
+    fn log_density(&mut self, theta: &[f64]) -> f64 {
+        self.full_logp(theta[0])
+    }
+    fn grad_log_density(&mut self, theta: &[f64], grad: &mut [f64]) -> f64 {
+        let t = theta[0];
+        let dlik: f64 = self.y.iter().map(|&y| (y - t) / self.sigma2).sum();
+        grad[0] = -t / self.tau2 + dlik;
+        self.full_logp(t)
+    }
+    fn commit(&mut self, theta: &[f64]) {
+        self.theta.clear();
+        self.theta.extend_from_slice(theta);
+        self.cur = self.full_logp(theta[0]);
+    }
+    fn current_log_density(&self) -> f64 {
+        self.cur
+    }
+    fn as_subsample(&mut self) -> Option<&mut dyn SubsampleTarget> {
+        Some(self)
+    }
+}
+
+impl SubsampleTarget for GaussDataTarget {
+    fn n_data(&self) -> usize {
+        self.y.len()
+    }
+    fn minibatch_log_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
+        ll.clear();
+        ll.extend(idx.iter().map(|&i| self.log_lik_one(theta[0], i as usize)));
+    }
+    fn minibatch_grad_acc(&mut self, theta: &[f64], idx: &[u32], grad: &mut [f64]) -> f64 {
+        let t = theta[0];
+        let mut ll_sum = 0.0;
+        for &i in idx {
+            let d = self.y[i as usize] - t;
+            grad[0] += d / self.sigma2;
+            ll_sum += -0.5 * d * d / self.sigma2;
+        }
+        ll_sum
+    }
+    fn prior_log_density(&self, theta: &[f64]) -> f64 {
+        -0.5 * theta[0] * theta[0] / self.tau2
+    }
+    fn prior_grad_acc(&self, theta: &[f64], grad: &mut [f64]) {
+        grad[0] += -theta[0] / self.tau2;
+    }
+    fn set_state(&mut self, theta: &[f64], log_density_estimate: f64) {
+        self.theta.clear();
+        self.theta.extend_from_slice(theta);
+        self.cur = log_density_estimate;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauss_data_conjugate_moments_consistent() {
+        let mut rng = crate::util::Rng::new(1);
+        let t = GaussDataTarget::synth(200, 0.8, 1.0, 10.0, &mut rng);
+        // With n=200 and flat-ish prior the posterior mean tracks ȳ.
+        let ybar: f64 = t.y.iter().sum::<f64>() / t.y.len() as f64;
+        assert!((t.posterior_mean() - ybar).abs() < 0.01);
+        assert!((t.posterior_var() - 1.0 / 200.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subsample_full_batch_matches_target() {
+        let mut rng = crate::util::Rng::new(2);
+        let mut t = GaussDataTarget::synth(50, -0.3, 0.7, 4.0, &mut rng);
+        let theta = [0.4];
+        let full = t.log_density(&theta);
+        let idx: Vec<u32> = (0..50).collect();
+        let mut ll = Vec::new();
+        t.minibatch_log_lik(&theta, &idx, &mut ll);
+        let sum: f64 = t.prior_log_density(&theta) + ll.iter().sum::<f64>();
+        assert!((full - sum).abs() < 1e-12);
+        // gradient path agrees with Target::grad_log_density
+        let mut g_full = [0.0];
+        t.grad_log_density(&theta, &mut g_full);
+        let mut g_sub = [0.0];
+        let ll_sum = t.minibatch_grad_acc(&theta, &idx, &mut g_sub);
+        t.prior_grad_acc(&theta, &mut g_sub);
+        assert!((g_full[0] - g_sub[0]).abs() < 1e-12);
+        assert!((ll_sum - ll.iter().sum::<f64>()).abs() < 1e-12);
+    }
+}

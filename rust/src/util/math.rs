@@ -100,6 +100,79 @@ pub fn t_logconst(nu: f64, sigma: f64) -> f64 {
         - 0.5 * (nu * std::f64::consts::PI * sigma * sigma).ln()
 }
 
+/// Error function erf(x), Abramowitz & Stegun 7.1.26 (|err| < 1.5e-7 —
+/// ample for the statistical test thresholds built on it).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    const A1: f64 = 0.254_829_592;
+    const A2: f64 = -0.284_496_736;
+    const A3: f64 = 1.421_413_741;
+    const A4: f64 = -1.453_152_027;
+    const A5: f64 = 1.061_405_429;
+    const P: f64 = 0.327_591_1;
+    let t = 1.0 / (1.0 + P * x);
+    let poly = ((((A5 * t + A4) * t + A3) * t + A2) * t + A1) * t;
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Standard normal CDF Φ(x).
+#[inline]
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Standard normal quantile Φ⁻¹(p) for p ∈ (0, 1), Acklam's rational
+/// approximation (|rel err| < 1.15e-9). Used to turn significance levels
+/// into z thresholds in `testing::posterior_check`.
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "normal_quantile: p={p} outside (0,1)");
+    const A: [f64; 6] = [
+        -3.969_683_028_665_376e1,
+        2.209_460_984_245_205e2,
+        -2.759_285_104_469_687e2,
+        1.383_577_518_672_690e2,
+        -3.066_479_806_614_716e1,
+        2.506_628_277_459_239,
+    ];
+    const B: [f64; 5] = [
+        -5.447_609_879_822_406e1,
+        1.615_858_368_580_409e2,
+        -1.556_989_798_598_866e2,
+        6.680_131_188_771_972e1,
+        -1.328_068_155_288_572e1,
+    ];
+    const C: [f64; 6] = [
+        -7.784_894_002_430_293e-3,
+        -3.223_964_580_411_365e-1,
+        -2.400_758_277_161_838,
+        -2.549_732_539_343_734,
+        4.374_664_141_464_968,
+        2.938_163_982_698_783,
+    ];
+    const D: [f64; 4] = [
+        7.784_695_709_041_462e-3,
+        3.224_671_290_700_398e-1,
+        2.445_134_137_142_996,
+        3.754_408_661_907_416,
+    ];
+    const P_LOW: f64 = 0.024_25;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
 /// Mean of a slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -185,6 +258,35 @@ mod tests {
         // scipy.stats.t(df=4).logpdf(0) = log Γ(2.5)/Γ(2) - 0.5 log(4π)
         let expect = -0.980_829_253_011_726_2;
         assert!(close(t_logconst(4.0, 1.0), expect, 1e-10));
+    }
+
+    #[test]
+    fn normal_cdf_known_values() {
+        assert!(close(normal_cdf(0.0), 0.5, 1e-7));
+        assert!((normal_cdf(1.959_963_985) - 0.975).abs() < 1e-6);
+        assert!((normal_cdf(-1.959_963_985) - 0.025).abs() < 1e-6);
+        assert!(normal_cdf(8.0) > 1.0 - 1e-6);
+        assert!(normal_cdf(-8.0) < 1e-6);
+        // symmetry
+        for &x in &[0.3, 1.1, 2.7] {
+            assert!((normal_cdf(x) + normal_cdf(-x) - 1.0).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn normal_quantile_inverts_cdf() {
+        for &p in &[0.001, 0.01, 0.025, 0.2, 0.5, 0.8, 0.975, 0.99, 0.999] {
+            let z = normal_quantile(p);
+            assert!((normal_cdf(z) - p).abs() < 2e-7, "p={p} z={z}");
+        }
+        assert!((normal_quantile(0.975) - 1.959_963_985).abs() < 1e-6);
+        assert_eq!(normal_quantile(0.5), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "normal_quantile")]
+    fn normal_quantile_rejects_boundary() {
+        normal_quantile(0.0);
     }
 
     #[test]

@@ -252,6 +252,58 @@ impl Rng {
             slice.swap(i, j);
         }
     }
+
+    /// Partial Fisher–Yates: after the call, `slice[..k]` is a uniform
+    /// ordered sample of `k` distinct elements of the slice (the remaining
+    /// elements hold the rest of the permutation in unspecified order).
+    ///
+    /// Uniformity holds from *any* starting permutation, so callers drawing
+    /// repeated minibatches may keep one persistent index pool and re-prefix
+    /// it every iteration without resetting — that is what makes the
+    /// subsample hot path allocation-free. `k >= slice.len()` degrades to a
+    /// full shuffle.
+    // lint: zero-alloc
+    pub fn shuffle_prefix<T>(&mut self, slice: &mut [T], k: usize) {
+        let n = slice.len();
+        for i in 0..k.min(n) {
+            let j = i + self.below(n - i);
+            slice.swap(i, j);
+        }
+    }
+
+    /// Draw `out.len()` distinct indices uniformly without replacement from
+    /// the values held in `pool`, writing them into the caller-owned `out`
+    /// buffer. `pool` must contain the candidate universe (typically a
+    /// persistent `0..n` permutation); it is re-prefixed in place, never
+    /// reallocated.
+    ///
+    /// Panics if `out.len() > pool.len()`.
+    ///
+    /// ```
+    /// use firefly::util::Rng;
+    ///
+    /// let mut rng = Rng::new(7);
+    /// let mut pool: Vec<u32> = (0..100).collect();
+    /// let mut batch = [0u32; 10];
+    /// rng.sample_without_replacement_into(&mut pool, &mut batch);
+    /// let mut seen = batch.to_vec();
+    /// seen.sort_unstable();
+    /// seen.dedup();
+    /// assert_eq!(seen.len(), 10, "indices are distinct");
+    /// assert!(batch.iter().all(|&i| i < 100));
+    /// ```
+    // lint: zero-alloc
+    pub fn sample_without_replacement_into(&mut self, pool: &mut [u32], out: &mut [u32]) {
+        let k = out.len();
+        assert!(
+            k <= pool.len(),
+            "sample_without_replacement_into: k={} exceeds pool {}",
+            k,
+            pool.len()
+        );
+        self.shuffle_prefix(pool, k);
+        out.copy_from_slice(&pool[..k]);
+    }
 }
 
 #[cfg(test)]
@@ -442,6 +494,112 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct_in_range_pool_preserved() {
+        // Draws must be duplicate-free and in-range on every round, and the
+        // persistent pool must remain a permutation of 0..n across rounds
+        // (the minibatch hot path relies on never resetting it).
+        let mut r = Rng::new(crate::testing::prop_seed() ^ 0x5eed);
+        let n = 64usize;
+        let mut pool: Vec<u32> = (0..n as u32).collect();
+        let mut out = vec![0u32; 0];
+        for round in 0..500 {
+            let k = 1 + round % n;
+            out.resize(k, 0);
+            r.sample_without_replacement_into(&mut pool, &mut out);
+            let mut seen = out.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), k, "round {round}: duplicate index drawn");
+            assert!(out.iter().all(|&i| (i as usize) < n), "round {round}");
+        }
+        let mut sorted = pool.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n as u32).collect::<Vec<_>>(), "pool corrupted");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore = "statistical loop is too slow under Miri")]
+    fn sample_without_replacement_uniform_chi_square() {
+        // Position-wise uniformity: the first drawn index is uniform over
+        // 0..n. Chi-square over n=8 cells with 7 dof; the 1e-4 upper critical
+        // value is ~27.9, so 30 gives headroom while still having power —
+        // a sampler that favored low indices by 10% would blow far past it.
+        let mut r = Rng::new(crate::testing::prop_seed() ^ 0xC41);
+        let n = 8usize;
+        let k = 3usize;
+        let draws = 40_000usize;
+        let mut pool: Vec<u32> = (0..n as u32).collect();
+        let mut out = [0u32; 3];
+        let mut first = vec![0usize; n];
+        let mut incl = vec![0usize; n];
+        for _ in 0..draws {
+            r.sample_without_replacement_into(&mut pool, &mut out);
+            first[out[0] as usize] += 1;
+            for &i in &out {
+                incl[i as usize] += 1;
+            }
+        }
+        let expect = draws as f64 / n as f64;
+        let chi2: f64 = first
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - expect;
+                d * d / expect
+            })
+            .sum();
+        assert!(chi2 < 30.0, "chi2 {chi2} (counts {first:?})");
+        // Inclusion probability k/n for every index, within 5% relative.
+        let expect_incl = draws as f64 * k as f64 / n as f64;
+        for (i, &c) in incl.iter().enumerate() {
+            let rel = (c as f64 - expect_incl).abs() / expect_incl;
+            assert!(rel < 0.05, "index {i}: inclusion {c} vs {expect_incl}");
+        }
+    }
+
+    #[test]
+    fn sample_without_replacement_full_range_coverage() {
+        // Every index of 0..n must eventually appear: 400 draws of k=4 from
+        // n=16 miss a fixed index with probability (3/4)^400 ~ 1e-50.
+        let mut r = Rng::new(crate::testing::prop_seed() ^ 0xC0FE);
+        let n = 16usize;
+        let mut pool: Vec<u32> = (0..n as u32).collect();
+        let mut out = [0u32; 4];
+        let mut hit = vec![false; n];
+        for _ in 0..400 {
+            r.sample_without_replacement_into(&mut pool, &mut out);
+            for &i in &out {
+                hit[i as usize] = true;
+            }
+        }
+        assert!(hit.iter().all(|&h| h), "coverage gap: {hit:?}");
+    }
+
+    #[test]
+    fn shuffle_prefix_degenerate_k() {
+        let mut r = Rng::new(11);
+        let mut v: Vec<u32> = (0..10).collect();
+        // k = 0 is a no-op
+        r.shuffle_prefix(&mut v, 0);
+        assert_eq!(v, (0..10).collect::<Vec<_>>());
+        // k >= len degrades to a full shuffle (still a permutation)
+        r.shuffle_prefix(&mut v, 99);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+        // k = len on an empty slice must not panic
+        r.shuffle_prefix::<u32>(&mut [], 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "sample_without_replacement_into")]
+    fn sample_without_replacement_oversized_k_panics() {
+        let mut r = Rng::new(12);
+        let mut pool = [0u32, 1, 2];
+        let mut out = [0u32; 4];
+        r.sample_without_replacement_into(&mut pool, &mut out);
     }
 
     #[test]

@@ -247,6 +247,54 @@ fn hotpath_queries(j: &Json) -> Vec<(String, f64)> {
     out
 }
 
+/// Required per-algorithm metric fields in the head2head schema. Every
+/// value must be a finite JSON number: `null`, a missing key, or a
+/// non-numeric value all fail the gate (a bias column that silently went
+/// NaN would otherwise read as "no bias detected").
+const HEAD2HEAD_FIELDS: [&str; 3] = ["ess_per_sec", "queries_per_iter", "bias_max_abs_z"];
+
+/// The algorithm keys every head2head workload must report.
+const HEAD2HEAD_ALGOS: [&str; 4] = ["full", "flymc", "sgld", "austerity"];
+
+/// The workloads the head2head bench must cover (the three paper tasks).
+const HEAD2HEAD_TASKS: [&str; 3] = ["logistic", "softmax", "robust"];
+
+/// Schema validation for `BENCH_head2head.json`: all three paper workloads,
+/// all four algorithms each, every metric field present and finite.
+fn head2head_failures(j: &Json) -> Vec<String> {
+    let mut failures = Vec::new();
+    let workloads = j.get("workloads").map(Json::arr).unwrap_or(&[]);
+    for want in HEAD2HEAD_TASKS {
+        if !workloads.iter().any(|w| w.get("task").and_then(Json::str_val) == Some(want)) {
+            failures.push(format!("head2head: workload `{want}` missing"));
+        }
+    }
+    for w in workloads {
+        let task = w.get("task").and_then(Json::str_val).unwrap_or("?");
+        let algos = w.get("algorithms").map(Json::arr).unwrap_or(&[]);
+        for want in HEAD2HEAD_ALGOS {
+            let Some(a) =
+                algos.iter().find(|a| a.get("algorithm").and_then(Json::str_val) == Some(want))
+            else {
+                failures.push(format!("head2head {task}: algorithm `{want}` missing"));
+                continue;
+            };
+            for field in HEAD2HEAD_FIELDS {
+                match a.get(field).and_then(Json::num) {
+                    Some(v) if v.is_finite() => {}
+                    Some(v) => failures.push(format!(
+                        "head2head {task}/{want}: {field} = {v} (must be finite)"
+                    )),
+                    None => failures.push(format!(
+                        "head2head {task}/{want}: {field} missing or non-numeric"
+                    )),
+                }
+            }
+        }
+    }
+    failures
+}
+
 /// Run the gate. `args`: `--baseline DIR` (default BENCH_baseline),
 /// `--measured DIR` (default `.` — where the benches write).
 pub fn run(args: &[String]) -> Result<(), String> {
@@ -376,6 +424,11 @@ pub fn run(args: &[String]) -> Result<(), String> {
         }
     }
 
+    // -- head2head: competitor-baseline schema must stay complete ---------
+    let measured_h2h = load(mdir, "BENCH_head2head.json")?
+        .ok_or("BENCH_head2head.json not found — run the head2head bench first")?;
+    failures.extend(head2head_failures(&measured_h2h));
+
     print!("{notes}");
     if failures.is_empty() {
         println!("bench-gate: all perf invariants hold");
@@ -413,6 +466,70 @@ mod tests {
         assert!((q[0].1 - 812.25).abs() < 1e-9);
         assert!(!is_pending(&j));
         assert!(is_pending(&parse(r#"{"pending": true}"#).unwrap()));
+    }
+
+    /// A complete, valid head2head document (template for the fixtures).
+    fn h2h_fixture() -> String {
+        let mut s = String::from("{\"bench\": \"head2head\", \"workloads\": [\n");
+        for (i, task) in HEAD2HEAD_TASKS.iter().enumerate() {
+            s.push_str(&format!("{{\"task\": \"{task}\", \"algorithms\": [\n"));
+            for (k, alg) in HEAD2HEAD_ALGOS.iter().enumerate() {
+                s.push_str(&format!(
+                    "{{\"algorithm\": \"{alg}\", \"ess_per_sec\": 12.5, \
+                     \"queries_per_iter\": 300.0, \"bias_max_abs_z\": 1.07}}{}",
+                    if k + 1 < HEAD2HEAD_ALGOS.len() { ",\n" } else { "" }
+                ));
+            }
+            s.push_str(&format!(
+                "]}}{}",
+                if i + 1 < HEAD2HEAD_TASKS.len() { ",\n" } else { "" }
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    #[test]
+    fn head2head_complete_document_passes() {
+        let j = parse(&h2h_fixture()).unwrap();
+        assert!(head2head_failures(&j).is_empty());
+    }
+
+    #[test]
+    fn head2head_missing_bias_field_fails() {
+        let text = h2h_fixture().replacen("\"bias_max_abs_z\": 1.07", "\"note\": \"gone\"", 1);
+        let fails = head2head_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("bias_max_abs_z missing"), "{fails:?}");
+    }
+
+    #[test]
+    fn head2head_null_metric_fails() {
+        let text = h2h_fixture().replacen("\"ess_per_sec\": 12.5", "\"ess_per_sec\": null", 1);
+        let fails = head2head_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("ess_per_sec missing or non-numeric"), "{fails:?}");
+    }
+
+    #[test]
+    fn head2head_non_finite_metric_fails() {
+        // 1e999 parses as f64::INFINITY — finite-only is the contract
+        let text =
+            h2h_fixture().replacen("\"bias_max_abs_z\": 1.07", "\"bias_max_abs_z\": 1e999", 1);
+        let fails = head2head_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("must be finite"), "{fails:?}");
+    }
+
+    #[test]
+    fn head2head_missing_algorithm_and_workload_fail() {
+        let text = h2h_fixture().replacen("\"algorithm\": \"sgld\"", "\"algorithm\": \"sgd\"", 1);
+        let fails = head2head_failures(&parse(&text).unwrap());
+        assert!(fails.iter().any(|f| f.contains("algorithm `sgld` missing")), "{fails:?}");
+
+        let text = h2h_fixture().replacen("\"task\": \"robust\"", "\"task\": \"opv\"", 1);
+        let fails = head2head_failures(&parse(&text).unwrap());
+        assert!(fails.iter().any(|f| f.contains("workload `robust` missing")), "{fails:?}");
     }
 
     #[test]

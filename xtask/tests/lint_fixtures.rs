@@ -163,6 +163,17 @@ fn bench_gate_rejects_kernel_path_divergence() {
 }
 
 #[test]
+fn bench_gate_rejects_null_head2head_bias() {
+    // hotpath is clean here; the only violation is the head2head schema —
+    // a null bias field must fail, not read as "no bias detected"
+    let dir = fixture("benchh2h");
+    let out = run_xtask(&["bench-gate", "--measured", &dir, "--baseline", &dir]);
+    assert!(!out.ok);
+    assert!(out.stderr.contains("bias_max_abs_z missing or non-numeric"), "{}", out.stderr);
+    assert!(out.stderr.contains("1 bench-gate violation"), "{}", out.stderr);
+}
+
+#[test]
 fn lint_runs_clean_on_this_repository() {
     // the real acceptance criterion: the tree this crate ships in passes
     // its own lint pass with the committed lint.toml
