@@ -12,6 +12,11 @@
 //!   must report 0 — the invariant the `integration_hotpath*` test
 //!   binaries enforce, now including the gradient path),
 //!
+//! plus a re-anchor section — both FlyMC algorithms re-run with an online
+//! bound re-anchor at the warm-up boundary (DESIGN.md §Bound-management),
+//! reporting the post-re-anchor steady state and the summary field
+//! `bright_fraction_post_reanchor` the bench gate requires —
+//!
 //! plus two kernel-layer sections (DESIGN.md §Kernels):
 //!
 //! * per-kernel ns/datum for every SoA batch kernel on both lane paths
@@ -162,6 +167,77 @@ fn run_algo(scenario: &Scenario, algorithm: Algorithm, seed: u64, map_steps: usi
         queries_per_iter: queries as f64 / iters as f64,
         allocs_per_iter: allocs as f64 / iters as f64,
         avg_bright: if flymc { bright_sum as f64 / iters as f64 } else { f64::NAN },
+    }
+}
+
+/// FlyMC chain with an online bound re-anchor at the end of warm-up: the
+/// anchor is the running posterior mean of the warm-up trajectory (the same
+/// statistic `ChainState` feeds `PseudoPosterior::reanchor`). The measured
+/// window is the post-re-anchor steady state, so `queries/iter` is directly
+/// comparable with the one-shot rows above (same sizes, same seed) — and
+/// must stay zero-alloc like every other FlyMC row.
+fn run_reanchored(
+    scenario: &Scenario,
+    algorithm: Algorithm,
+    seed: u64,
+    map_steps: usize,
+) -> AlgoStats {
+    let cfg = ExperimentConfig {
+        task: scenario.task,
+        algorithm,
+        n_data: Some(scenario.n),
+        record_every: 0,
+        map_steps,
+        seed,
+        ..Default::default()
+    };
+    let (source, prior, _map, _tuning_queries) = build_model(&cfg).expect("build model");
+    let model: Arc<dyn ModelBound> = source.as_model_bound();
+    let counters = Counters::new();
+    let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+    let mut rng = Rng::new(seed ^ 0x1217);
+    let theta0 = prior.sample(model.dim(), &mut rng);
+    let q_db = cfg.effective_q_db();
+    let mut sampler = build_sampler(scenario.task);
+    let mut pp = PseudoPosterior::new(model, prior, eval, theta0.clone());
+    pp.init_z(&mut rng);
+    let mut theta = theta0;
+
+    let mut mean = vec![0.0f64; theta.len()];
+    for it in 0..scenario.warmup {
+        sampler.step(&mut pp, &mut theta, &mut rng);
+        pp.implicit_resample(q_db, &mut rng);
+        let k = (it + 1) as f64;
+        for (m, t) in mean.iter_mut().zip(&theta) {
+            *m += (t - *m) / k;
+        }
+    }
+    pp.reanchor(&mean, &mut rng);
+    sampler.freeze_adaptation();
+
+    let mut bright_sum: usize = 0;
+    let allocs_before = ALLOC.allocations();
+    let queries_before = counters.lik_queries();
+    let timer = Timer::start();
+    for _ in 0..scenario.iters {
+        sampler.step(&mut pp, &mut theta, &mut rng);
+        pp.implicit_resample(q_db, &mut rng);
+        bright_sum += pp.n_bright();
+    }
+    let secs = timer.elapsed_secs();
+    let queries = counters.lik_queries() - queries_before;
+    let allocs = ALLOC.allocations() - allocs_before;
+
+    AlgoStats {
+        label: match algorithm {
+            Algorithm::UntunedFlyMc => "untuned+reanchor",
+            Algorithm::MapTunedFlyMc => "maptuned+reanchor",
+            _ => unreachable!("re-anchoring is FlyMC-only"),
+        },
+        wallclock_per_iter: secs / scenario.iters as f64,
+        queries_per_iter: queries as f64 / scenario.iters as f64,
+        allocs_per_iter: allocs as f64 / scenario.iters as f64,
+        avg_bright: bright_sum as f64 / scenario.iters as f64,
     }
 }
 
@@ -417,6 +493,74 @@ fn main() {
         ));
     }
     json.push_str("  ],\n");
+
+    // -- online bound re-anchoring ----------------------------------------
+    // The two FlyMC algorithms again, now with a re-anchor at the running
+    // posterior mean at the warm-up boundary. `queries/iter` is the
+    // post-re-anchor steady state: for the untuned (mis-anchored) chain it
+    // must drop strictly below the one-shot untuned row above, and for the
+    // MAP-tuned chain it must not exceed the one-shot MAP-tuned row.
+    // `cargo xtask bench-gate` refuses a BENCH_hotpath.json without the
+    // summary field `bright_fraction_post_reanchor`.
+    json.push_str("  \"reanchor\": [\n");
+    let mut bright_fracs: Vec<f64> = Vec::new();
+    for (si, scenario) in scenarios.iter().enumerate() {
+        let mut report = Report::new(
+            &format!(
+                "FlyMC + re-anchor ({} + {}, N={})",
+                scenario.task_label, scenario.sampler_label, scenario.n
+            ),
+            &["algorithm", "wallclock/iter", "queries/iter", "allocs/iter", "avg bright"],
+        );
+        let mut results = Vec::new();
+        for algorithm in [Algorithm::UntunedFlyMc, Algorithm::MapTunedFlyMc] {
+            let r = run_reanchored(scenario, algorithm, seed, map_steps);
+            report.row(&[
+                r.label.to_string(),
+                fmt_time(r.wallclock_per_iter),
+                format!("{:.1}", r.queries_per_iter),
+                format!("{:.2}", r.allocs_per_iter),
+                format!("{:.1}", r.avg_bright),
+            ]);
+            fly_allocs += r.allocs_per_iter;
+            bright_fracs.push(r.avg_bright / scenario.n as f64);
+            results.push(r);
+        }
+        report.print();
+        json.push_str(&format!(
+            "    {{\"task\": \"{}\", \"sampler\": \"{}\", \"n\": {}, \
+             \"warmup_iters\": {}, \"measured_iters\": {},\n     \"algorithms\": [\n",
+            scenario.task_label, scenario.sampler_label, scenario.n, scenario.warmup,
+            scenario.iters,
+        ));
+        for (i, r) in results.iter().enumerate() {
+            json.push_str(&format!(
+                "      {{\"algorithm\": \"{}\", \"wallclock_per_iter_secs\": {:e}, \
+                 \"queries_per_iter\": {:.3}, \"allocs_per_iter\": {:.3}, \
+                 \"avg_bright\": {:.2}}}{}\n",
+                r.label,
+                r.wallclock_per_iter,
+                r.queries_per_iter,
+                r.allocs_per_iter,
+                r.avg_bright,
+                if i + 1 < results.len() { "," } else { "" },
+            ));
+        }
+        json.push_str(&format!(
+            "     ]}}{}\n",
+            if si + 1 < scenarios.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    let bright_fraction_post_reanchor =
+        bright_fracs.iter().sum::<f64>() / bright_fracs.len() as f64;
+    json.push_str(&format!(
+        "  \"bright_fraction_post_reanchor\": {bright_fraction_post_reanchor:.4},\n"
+    ));
+    println!(
+        "bright fraction post-re-anchor (mean over FlyMC rows): {:.4}",
+        bright_fraction_post_reanchor
+    );
 
     // -- per-kernel ns/datum on both lane paths ---------------------------
     let reps = if smoke { 5 } else { 50 };

@@ -332,6 +332,19 @@ pub struct ExperimentConfig {
     pub explicit_resample: bool,
     /// explicit-resample fraction of N per iteration
     pub resample_fraction: f64,
+    /// re-anchor the bounds once, at the chain's running posterior mean
+    /// (DESIGN.md §Bound-management; FlyMC algorithms on the CPU backends
+    /// only — XLA artifacts bake the anchors in)
+    pub reanchor: bool,
+    /// iteration the re-anchor fires at (None = end of burn-in); must lie
+    /// in [1, burnin] so every recorded sample is post-restart
+    pub reanchor_at: Option<usize>,
+    /// adapt `q_dark_to_bright` toward the target bright-set turnover with
+    /// a Robbins–Monro controller, frozen before any recorded sample
+    pub adapt_q: bool,
+    /// q-adaptation window in iterations (None = burnin / 2); must end
+    /// strictly inside burn-in
+    pub adapt_window: Option<usize>,
     /// None = per-task default (MNIST 1.0, CIFAR 0.15, OPV 0.5 — the paper
     /// chooses the scale by out-of-sample performance per experiment)
     pub prior_scale: Option<f64>,
@@ -396,6 +409,10 @@ impl Default for ExperimentConfig {
             untuned_xi: 1.5,
             explicit_resample: false,
             resample_fraction: 0.1,
+            reanchor: false,
+            reanchor_at: None,
+            adapt_q: false,
+            adapt_window: None,
             prior_scale: None,
             map_steps: 400,
             record_every: 1,
@@ -437,6 +454,20 @@ impl ExperimentConfig {
         c.untuned_xi = doc.f64_or("flymc", "untuned_xi", c.untuned_xi);
         c.explicit_resample = doc.bool_or("flymc", "explicit_resample", c.explicit_resample);
         c.resample_fraction = doc.f64_or("flymc", "resample_fraction", c.resample_fraction);
+        c.reanchor = doc.bool_or("flymc", "reanchor", c.reanchor);
+        if let Some(v) = doc.get("flymc", "reanchor_at").and_then(|v| v.as_i64()) {
+            if v <= 0 {
+                return Err(format!("flymc.reanchor_at must be positive, got {v}"));
+            }
+            c.reanchor_at = Some(v as usize);
+        }
+        c.adapt_q = doc.bool_or("flymc", "adapt_q", c.adapt_q);
+        if let Some(v) = doc.get("flymc", "adapt_window").and_then(|v| v.as_i64()) {
+            if v <= 0 {
+                return Err(format!("flymc.adapt_window must be positive, got {v}"));
+            }
+            c.adapt_window = Some(v as usize);
+        }
         if let Some(v) = doc.get("model", "prior_scale").and_then(|v| v.as_f64()) {
             c.prior_scale = Some(v);
         }
@@ -490,6 +521,34 @@ impl ExperimentConfig {
         })
     }
 
+    /// Whether the configured algorithm runs the FlyMC auxiliary chain.
+    pub fn is_flymc(&self) -> bool {
+        matches!(
+            self.algorithm,
+            Algorithm::UntunedFlyMc | Algorithm::MapTunedFlyMc
+        )
+    }
+
+    /// The chain-level re-anchor trigger iteration: the configured value,
+    /// defaulting to the end of burn-in; `None` when the feature is off.
+    pub fn effective_reanchor_at(&self) -> Option<usize> {
+        if self.reanchor {
+            Some(self.reanchor_at.unwrap_or(self.burnin))
+        } else {
+            None
+        }
+    }
+
+    /// The q-adaptation window length, defaulting to half the burn-in;
+    /// 0 when adaptation is off.
+    pub fn effective_adapt_window(&self) -> usize {
+        if self.adapt_q {
+            self.adapt_window.unwrap_or(self.burnin / 2)
+        } else {
+            0
+        }
+    }
+
     /// Reject configurations whose FlyMC parameters silently degenerate the
     /// sampler instead of erroring at run time:
     ///
@@ -532,6 +591,59 @@ impl ExperimentConfig {
                  run could never be resumed"
                     .to_string(),
             );
+        }
+        if self.reanchor {
+            if !self.is_flymc() {
+                return Err(format!(
+                    "reanchor requires a FlyMC algorithm (bounds to re-anchor), got {:?}",
+                    self.algorithm
+                ));
+            }
+            if self.backend == Backend::Xla {
+                return Err(
+                    "reanchor cannot run on the XLA backend (the AOT artifacts bake the \
+                     bound anchors in); use cpu or parcpu"
+                        .to_string(),
+                );
+            }
+            let at = self.reanchor_at.unwrap_or(self.burnin);
+            if at == 0 {
+                return Err(
+                    "reanchor_at = 0 would re-anchor before any trajectory exists to \
+                     anchor at"
+                        .to_string(),
+                );
+            }
+            if at > self.burnin {
+                return Err(format!(
+                    "reanchor_at ({at}) must lie inside burn-in ({}) so every recorded \
+                     sample comes from the post-restart bound regime",
+                    self.burnin
+                ));
+            }
+        } else if self.reanchor_at.is_some() {
+            return Err("reanchor_at is set but reanchor is off".to_string());
+        }
+        if self.adapt_q {
+            if !self.is_flymc() {
+                return Err(format!(
+                    "adapt_q requires a FlyMC algorithm (a z-chain to control), got {:?}",
+                    self.algorithm
+                ));
+            }
+            let w = self.adapt_window.unwrap_or(self.burnin / 2);
+            if w == 0 {
+                return Err("adapt_window = 0 would adapt nothing".to_string());
+            }
+            if w >= self.burnin {
+                return Err(format!(
+                    "adapt_window ({w}) must end strictly inside burn-in ({}) so \
+                     adaptation is frozen before any recorded sample",
+                    self.burnin
+                ));
+            }
+        } else if self.adapt_window.is_some() {
+            return Err("adapt_window is set but adapt_q is off".to_string());
         }
         if self.algorithm.is_approximate() {
             if self.minibatch < 2 {
@@ -632,6 +744,21 @@ impl ExperimentConfig {
                 );
             }
             _ => {}
+        }
+        // The re-anchor/adaptive-q knobs join the canon ONLY when active,
+        // for the same reason as the approx knobs: fingerprints minted
+        // before these fields existed must stay byte-for-byte reproducible.
+        if self.reanchor {
+            use std::fmt::Write as _;
+            let _ = write!(
+                canon,
+                ";reanchor_at={}",
+                self.effective_reanchor_at().unwrap_or(0)
+            );
+        }
+        if self.adapt_q {
+            use std::fmt::Write as _;
+            let _ = write!(canon, ";adapt_q_window={}", self.effective_adapt_window());
         }
         crate::util::codec::fnv1a(canon.as_bytes())
     }
@@ -912,6 +1039,97 @@ mod tests {
         assert_ne!(c.fingerprint(), aus.fingerprint());
         let c = ExperimentConfig { sgld_step_a: 3e-4, ..aus.clone() };
         assert_eq!(c.fingerprint(), aus.fingerprint());
+    }
+
+    #[test]
+    fn reanchor_and_adapt_knobs_parse_and_validate() {
+        let c = ExperimentConfig::from_str_toml(
+            "[experiment]\nburnin = 100\n[flymc]\nreanchor = true\nadapt_q = true",
+        )
+        .unwrap();
+        assert!(c.reanchor && c.adapt_q);
+        assert_eq!(c.effective_reanchor_at(), Some(100)); // default: end of burn-in
+        assert_eq!(c.effective_adapt_window(), 50); // default: burnin / 2
+        let c = ExperimentConfig::from_str_toml(
+            "[experiment]\nburnin = 100\n[flymc]\nreanchor = true\nreanchor_at = 60\n\
+             adapt_q = true\nadapt_window = 40",
+        )
+        .unwrap();
+        assert_eq!(c.effective_reanchor_at(), Some(60));
+        assert_eq!(c.effective_adapt_window(), 40);
+        // disabled: both helpers are inert
+        let c = ExperimentConfig::from_str_toml("").unwrap();
+        assert!(!c.reanchor && !c.adapt_q);
+        assert_eq!(c.effective_reanchor_at(), None);
+        assert_eq!(c.effective_adapt_window(), 0);
+
+        for (toml, needle) in [
+            // trigger at 0 (burnin 0 with the default trigger)
+            ("[experiment]\nburnin = 0\n[flymc]\nreanchor = true", "reanchor_at"),
+            // trigger past burn-in
+            (
+                "[experiment]\nburnin = 50\n[flymc]\nreanchor = true\nreanchor_at = 51",
+                "burn-in",
+            ),
+            // knob set without enabling the feature
+            ("[flymc]\nreanchor_at = 10", "reanchor is off"),
+            ("[flymc]\nadapt_window = 10", "adapt_q is off"),
+            // wrong algorithm / backend
+            (
+                "[experiment]\nalgorithm = \"regular\"\n[flymc]\nreanchor = true",
+                "FlyMC",
+            ),
+            ("[experiment]\nalgorithm = \"sgld\"\n[flymc]\nadapt_q = true", "FlyMC"),
+            ("[experiment]\nbackend = \"xla\"\n[flymc]\nreanchor = true", "XLA"),
+            // window degenerate or overrunning burn-in
+            (
+                "[experiment]\nburnin = 50\n[flymc]\nadapt_q = true\nadapt_window = 50",
+                "adapt_window",
+            ),
+            // negatives rejected at parse, never wrapped through `as usize`
+            ("[flymc]\nreanchor = true\nreanchor_at = -3", "positive"),
+            ("[flymc]\nadapt_q = true\nadapt_window = -1", "positive"),
+        ] {
+            let err = ExperimentConfig::from_str_toml(toml).expect_err(toml);
+            assert!(err.contains(needle), "{toml}: {err}");
+        }
+
+        // validate() rejects programmatically-built configs the same way
+        // (the CLI parse path funnels through it)
+        let c = ExperimentConfig {
+            reanchor: true,
+            reanchor_at: Some(0),
+            ..ExperimentConfig::default()
+        };
+        assert!(c.validate().unwrap_err().contains("reanchor_at"));
+        let c = ExperimentConfig {
+            adapt_q: true,
+            adapt_window: Some(600),
+            ..ExperimentConfig::default()
+        };
+        assert!(c.validate().unwrap_err().contains("adapt_window"));
+    }
+
+    #[test]
+    fn fingerprint_includes_reanchor_knobs_only_when_enabled() {
+        // inert knobs must not perturb historical fingerprints
+        let base = ExperimentConfig::default();
+        let re = ExperimentConfig { reanchor: true, ..base.clone() };
+        assert_ne!(re.fingerprint(), base.fingerprint());
+        let re2 = ExperimentConfig {
+            reanchor: true,
+            reanchor_at: Some(100),
+            ..base.clone()
+        };
+        assert_ne!(re2.fingerprint(), re.fingerprint());
+        let aq = ExperimentConfig { adapt_q: true, ..base.clone() };
+        assert_ne!(aq.fingerprint(), base.fingerprint());
+        let aq2 = ExperimentConfig {
+            adapt_q: true,
+            adapt_window: Some(33),
+            ..base.clone()
+        };
+        assert_ne!(aq2.fingerprint(), aq.fingerprint());
     }
 
     #[test]

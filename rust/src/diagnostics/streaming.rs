@@ -191,8 +191,15 @@ pub struct StreamingStats {
     batch_means: WelfordVec,
     first_half: WelfordVec,
     second_half: WelfordVec,
-    /// per-iteration bright-count summary (FlyMC only; empty for regular)
+    /// per-iteration bright-count summary (FlyMC only; empty for regular).
+    /// With online re-anchoring this covers the POST-re-anchor window; the
+    /// pre-re-anchor counts go to [`StreamingStats::bright_pre`] so the two
+    /// bound regimes are never conflated in one min/mean/max series.
     pub bright: BrightStats,
+    /// bright counts observed BEFORE the re-anchor point (empty when
+    /// re-anchoring is disabled: the observer then routes everything to
+    /// [`StreamingStats::bright`], keeping legacy summaries identical)
+    pub bright_pre: BrightStats,
     post_iters: usize,
     queries_sum: u64,
 }
@@ -217,6 +224,7 @@ impl StreamingStats {
             first_half: WelfordVec::new(dim),
             second_half: WelfordVec::new(dim),
             bright: BrightStats::default(),
+            bright_pre: BrightStats::default(),
             post_iters: 0,
             queries_sum: 0,
         }
@@ -265,6 +273,12 @@ impl StreamingStats {
     /// Fold one per-iteration bright count in.
     pub fn record_bright(&mut self, b: usize) {
         self.bright.record(b);
+    }
+
+    /// Fold one PRE-re-anchor bright count in (iterations before the bound
+    /// restart; see [`StreamingStats::bright_pre`]).
+    pub fn record_bright_pre(&mut self, b: usize) {
+        self.bright_pre.record(b);
     }
 
     /// Fold one post-burn-in iteration's likelihood-query count in (O(1)
@@ -376,6 +390,7 @@ impl StreamingStats {
             ess_bm_min: self.ess_batch_means_min(),
             split_rhat_halves: self.split_rhat_halves(),
             bright: self.bright,
+            bright_pre: self.bright_pre,
             iters_post_burnin: self.post_iters,
             queries_post_burnin: self.queries_sum,
         }
@@ -395,6 +410,7 @@ impl StreamingStats {
         self.first_half.save_state(w);
         self.second_half.save_state(w);
         self.bright.save_state(w);
+        self.bright_pre.save_state(w);
         w.usize(self.post_iters);
         w.u64(self.queries_sum);
     }
@@ -426,6 +442,7 @@ impl StreamingStats {
         self.first_half.load_state(r)?;
         self.second_half.load_state(r)?;
         self.bright = BrightStats::load_state(r)?;
+        self.bright_pre = BrightStats::load_state(r)?;
         self.post_iters = r.usize()?;
         self.queries_sum = r.u64()?;
         Ok(())
@@ -448,8 +465,12 @@ pub struct StreamingSummary {
     pub ess_bm_min: f64,
     /// single-chain split-R̂ over the two window halves (NaN if undefined)
     pub split_rhat_halves: f64,
-    /// bright-count min/mean/max/last summary (count = 0 for regular MCMC)
+    /// bright-count min/mean/max/last summary (count = 0 for regular MCMC);
+    /// post-re-anchor window when online re-anchoring ran
     pub bright: BrightStats,
+    /// pre-re-anchor bright-count summary (count = 0 unless a re-anchor
+    /// split the run into two bound regimes)
+    pub bright_pre: BrightStats,
     /// post-burn-in iterations folded in (drives the queries/iter average)
     pub iters_post_burnin: usize,
     /// total likelihood queries over those post-burn-in iterations

@@ -21,9 +21,9 @@ use crate::engine::checkpoint::{
     ExperimentCheckpointSpec,
 };
 use crate::engine::observer::{ChainObserver, IterRecord, RecordingObserver, StreamingObserver};
-use crate::flymc::{FullPosterior, PseudoPosterior, ZStats};
+use crate::flymc::{FullPosterior, PseudoPosterior, ReanchorState, ZStats};
 use crate::metrics::{CounterSnapshot, Counters};
-use crate::samplers::{Sampler, Target};
+use crate::samplers::{QController, Sampler, Target};
 use crate::util::codec::{ByteReader, ByteWriter};
 use crate::util::rng::splitmix64;
 use crate::util::{Rng, Timer};
@@ -106,17 +106,38 @@ impl ChainTarget {
         }
     }
 
-    fn z_step(&mut self, cfg: &ChainConfig, rng: &mut Rng) -> Option<ZStats> {
+    /// One z-resampling sweep under the chain's *working* knobs (the
+    /// adaptive controller may have moved them off their configured values).
+    fn z_step(
+        &mut self,
+        explicit: bool,
+        q_db: f64,
+        fraction: f64,
+        rng: &mut Rng,
+    ) -> Option<ZStats> {
         match self {
-            ChainTarget::FlyMc(p) => Some(if cfg.explicit_resample {
-                p.explicit_resample(cfg.resample_fraction, rng)
+            ChainTarget::FlyMc(p) => Some(if explicit {
+                p.explicit_resample(fraction, rng)
             } else {
-                p.implicit_resample(cfg.q_dark_to_bright, rng)
+                p.implicit_resample(q_db, rng)
             }),
             ChainTarget::Regular(_) => None,
         }
     }
+
+    /// Re-anchor the FlyMC bounds ([`PseudoPosterior::reanchor`]); no-op
+    /// (and `false`) on the regular posterior.
+    fn reanchor(&mut self, anchor: &[f64], rng: &mut Rng) -> bool {
+        match self {
+            ChainTarget::FlyMc(p) => p.reanchor(anchor, rng),
+            ChainTarget::Regular(_) => false,
+        }
+    }
 }
+
+/// Bright-set turnover the adaptive q-controller drives toward (~5% of the
+/// bright set replaced per z-update; DESIGN.md §Bound-management).
+pub const Q_TARGET_TURNOVER: f64 = 0.05;
 
 /// Per-chain driver configuration.
 #[derive(Clone, Debug)]
@@ -142,6 +163,16 @@ pub struct ChainConfig {
     /// series); false = streaming-only bounded memory — the recording
     /// observer is disabled and only the O(dim) streaming summary survives
     pub record_trace: bool,
+    /// re-anchor the FlyMC bounds at the chain's running posterior mean at
+    /// the start of this iteration (must lie inside burn-in; None disables
+    /// — the chain is then byte-identical to one without the feature)
+    pub reanchor_at: Option<usize>,
+    /// adapt `q_dark_to_bright` toward [`Q_TARGET_TURNOVER`] with a
+    /// Robbins–Monro controller during the adapt window
+    pub adapt_q: bool,
+    /// iterations the q-controller adapts for before freezing (must lie
+    /// inside burn-in; meaningful only with `adapt_q`)
+    pub adapt_window: usize,
 }
 
 impl Default for ChainConfig {
@@ -156,6 +187,9 @@ impl Default for ChainConfig {
             resample_fraction: 0.1,
             seed: 0,
             record_trace: true,
+            reanchor_at: None,
+            adapt_q: false,
+            adapt_window: 0,
         }
     }
 }
@@ -280,6 +314,7 @@ impl ChainResult {
 const TAG_CORE: [u8; 4] = *b"CORE";
 const TAG_TARGET: [u8; 4] = *b"TGT0";
 const TAG_SAMPLER: [u8; 4] = *b"SMPL";
+const TAG_REANCHOR: [u8; 4] = *b"RANC";
 
 /// The complete mutable state of a running chain, driven in segments.
 ///
@@ -302,6 +337,16 @@ pub struct ChainState {
     counters: Counters,
     snap: CounterSnapshot,
     wallclock_secs: f64,
+    /// working dark→bright rate: starts at `cfg.q_dark_to_bright`, moved by
+    /// the q-controller during the adapt window, frozen after
+    q_db: f64,
+    /// working resampling mode: starts at `cfg.explicit_resample`, may be
+    /// switched to explicit by the controller's freeze-time recommendation
+    explicit: bool,
+    /// online re-anchoring state (None = feature disabled)
+    reanchor: Option<ReanchorState>,
+    /// adaptive q_dark_to_bright controller (None = feature disabled)
+    qctl: Option<QController>,
 }
 
 impl ChainState {
@@ -317,12 +362,12 @@ impl ChainState {
         let counters = target.counters();
         target.as_target().commit(&theta0);
         let snap = counters.snapshot();
+        let dim = theta0.len();
         ChainState {
             target,
             sampler,
             theta: theta0,
             rng,
-            cfg: cfg.clone(),
             completed: 0,
             accepted: 0,
             z_brightened: 0,
@@ -330,6 +375,11 @@ impl ChainState {
             counters,
             snap,
             wallclock_secs: 0.0,
+            q_db: cfg.q_dark_to_bright,
+            explicit: cfg.explicit_resample,
+            reanchor: cfg.reanchor_at.map(|at| ReanchorState::new(at, dim)),
+            qctl: if cfg.adapt_q { Some(QController::new(Q_TARGET_TURNOVER)) } else { None },
+            cfg: cfg.clone(),
         }
     }
 
@@ -368,14 +418,48 @@ impl ChainState {
         let thin = self.cfg.thin.max(1);
         while self.completed < end {
             let it = self.completed;
+            // Online bound re-anchoring (DESIGN.md §Bound-management): at
+            // the config-declared trigger, retune the bounds at the running
+            // posterior mean and redraw every z from its exact conditional
+            // under the new bounds — a legal Markov restart
+            // (`flymc::reanchor`). Fires before the θ-step so the restart
+            // sits on a committed state; its full-N pass lands in this
+            // iteration's query meter.
+            if let Some(rst) = self.reanchor.as_mut() {
+                if rst.due(it) {
+                    self.target.reanchor(rst.anchor(), &mut self.rng);
+                    rst.applied = true;
+                }
+            }
             let info = self.sampler.step(self.target.as_target(), &mut self.theta, &mut self.rng);
             if info.accepted {
                 self.accepted += 1;
             }
-            let z = self.target.z_step(&self.cfg, &mut self.rng);
+            let z = self.target.z_step(
+                self.explicit,
+                self.q_db,
+                self.cfg.resample_fraction,
+                &mut self.rng,
+            );
             if let Some(z) = z {
                 self.z_brightened += z.brightened;
                 self.z_darkened += z.darkened;
+                // Adaptive bright-set control: Robbins–Monro on q_{d→b}
+                // toward the target turnover during the adapt window, then
+                // freeze (exactly inert afterwards) and apply the
+                // explicit-resampling recommendation once.
+                if let Some(qc) = self.qctl.as_mut() {
+                    if it < self.cfg.adapt_window {
+                        let nb = self.target.n_bright().unwrap_or(0);
+                        self.q_db = qc.update(self.q_db, z.brightened, z.darkened, nb);
+                        if it + 1 == self.cfg.adapt_window {
+                            qc.freeze();
+                            if qc.recommend_explicit(self.q_db) {
+                                self.explicit = true;
+                            }
+                        }
+                    }
+                }
             }
             let now = self.counters.snapshot();
             let queries_delta = self.snap.delta(&now).lik_queries;
@@ -402,6 +486,12 @@ impl ChainState {
             };
             for obs in observers.iter_mut() {
                 obs.on_iter(&rec);
+            }
+            // fold the committed position into the re-anchor accumulator so
+            // the anchor is a function of the trajectory *before* the
+            // trigger only (observe is a no-op once applied)
+            if let Some(rst) = self.reanchor.as_mut() {
+                rst.observe(&self.theta);
             }
             self.completed += 1;
             let finished = self.completed == self.cfg.iters;
@@ -476,6 +566,18 @@ impl ChainState {
         let mut smp = ByteWriter::new();
         self.sampler.save_state(&mut smp);
         image.push_section(TAG_SAMPLER, smp.into_bytes());
+        let mut ran = ByteWriter::new();
+        ran.f64(self.q_db);
+        ran.bool(self.explicit);
+        ran.bool(self.reanchor.is_some());
+        if let Some(rst) = &self.reanchor {
+            rst.save_state(&mut ran);
+        }
+        ran.bool(self.qctl.is_some());
+        if let Some(qc) = &self.qctl {
+            qc.save_state(&mut ran);
+        }
+        image.push_section(TAG_REANCHOR, ran.into_bytes());
         for obs in observers {
             let mut w = ByteWriter::new();
             obs.save_state(&mut w);
@@ -535,6 +637,38 @@ impl ChainState {
         let mut r = ByteReader::new(smp);
         self.sampler.load_state(&mut r)?;
         r.finish().map_err(|e| format!("SMPL section: {e}"))?;
+
+        let ran = image
+            .section(TAG_REANCHOR)
+            .ok_or_else(|| "missing RANC section".to_string())?;
+        let mut r = ByteReader::new(ran);
+        let q_db = r.f64()?;
+        let explicit = r.bool()?;
+        let has_reanchor = r.bool()?;
+        match (self.reanchor.as_mut(), has_reanchor) {
+            (Some(rst), true) => rst.load_state(&mut r)?,
+            (None, false) => {}
+            _ => {
+                return Err(
+                    "checkpoint re-anchor state does not match this chain's configuration"
+                        .to_string(),
+                )
+            }
+        }
+        let has_qctl = r.bool()?;
+        match (self.qctl.as_mut(), has_qctl) {
+            (Some(qc), true) => qc.load_state(&mut r)?,
+            (None, false) => {}
+            _ => {
+                return Err(
+                    "checkpoint q-controller state does not match this chain's configuration"
+                        .to_string(),
+                )
+            }
+        }
+        r.finish().map_err(|e| format!("RANC section: {e}"))?;
+        self.q_db = q_db;
+        self.explicit = explicit;
 
         for obs in observers.iter_mut() {
             let tag = obs.tag();

@@ -10,12 +10,12 @@
 //! (the resume identity guarantee, DESIGN.md §Checkpointing; enforced by
 //! `rust/tests/integration_checkpoint.rs`).
 //!
-//! ## File layout (version 1, all integers little-endian)
+//! ## File layout (version 2, all integers little-endian)
 //!
 //! ```text
 //! offset  size  field
 //! 0       8     magic  b"FFLYCKPT"
-//! 8       4     format version (u32, currently 1)
+//! 8       4     format version (u32, currently 2)
 //! 12      4     section count (u32)
 //! 16      8     config fingerprint (u64, FNV-1a of the canonical config —
 //!               resume refuses a checkpoint written under a different one)
@@ -31,8 +31,10 @@
 //! good checkpoint.
 //!
 //! Section tags: `CORE` (chain driver state), `TGT0` (posterior), `SMPL`
-//! (sampler), then one per attached observer (`RECD` trace recorder,
-//! `STAT` streaming statistics, `CKPT` the writer itself, empty). What is
+//! (sampler), `RANC` (working z-resampling knobs plus the optional
+//! re-anchoring accumulator and q-controller — version 2), then one per
+//! attached observer (`RECD` trace recorder, `STAT` streaming statistics,
+//! `CKPT` the writer itself, empty). What is
 //! deliberately **not** captured: wall-clock (time is not resumable),
 //! block-cache contents (re-warmed on use; its hit/miss counters are
 //! restored as totals but drift is possible and they are excluded from the
@@ -47,8 +49,11 @@ use crate::util::codec::{fnv1a, ByteReader, ByteWriter};
 
 /// The 8-byte magic prefix of every `.fckpt` file.
 pub const FCKPT_MAGIC: [u8; 8] = *b"FFLYCKPT";
-/// Current checkpoint format version.
-pub const FCKPT_VERSION: u32 = 1;
+/// Current checkpoint format version. v2 added the `RANC` chain section
+/// (working q/resampling-mode knobs, re-anchor accumulator, q-controller)
+/// and the pre-re-anchor bright summary inside `STAT` — readers require an
+/// exact version match, so v1 files are rejected rather than misread.
+pub const FCKPT_VERSION: u32 = 2;
 /// Header length in bytes (the section region starts here).
 pub const FCKPT_HEADER_LEN: usize = 40;
 

@@ -236,6 +236,27 @@ impl ExperimentResult {
         Some((min, mean, max, last))
     }
 
+    /// [`Self::bright_stats`] over the *pre-re-anchor* window (the bound
+    /// regime before the online restart) — `None` unless re-anchoring ran
+    /// and recorded at least one pre-trigger iteration, so summaries only
+    /// ever show the split when there is a split to show.
+    pub fn bright_pre_stats(&self) -> Option<(usize, f64, usize, usize)> {
+        let with: Vec<&crate::diagnostics::BrightStats> = self
+            .chains
+            .iter()
+            .map(|c| &c.stats.bright_pre)
+            .filter(|b| b.count > 0)
+            .collect();
+        if with.is_empty() {
+            return None;
+        }
+        let min = with.iter().map(|b| b.min).min().unwrap();
+        let max = with.iter().map(|b| b.max).max().unwrap();
+        let mean = with.iter().map(|b| b.mean()).sum::<f64>() / with.len() as f64;
+        let last = with.last().unwrap().last;
+        Some((min, mean, max, last))
+    }
+
     /// Table-1 style summary over all chains.
     pub fn table_row(&self) -> TableRow {
         let burnin = self.config.burnin;
@@ -311,6 +332,9 @@ pub fn chain_config(cfg: &ExperimentConfig, seed: u64) -> ChainConfig {
         resample_fraction: cfg.resample_fraction,
         seed,
         record_trace: cfg.record_trace,
+        reanchor_at: cfg.effective_reanchor_at(),
+        adapt_q: cfg.adapt_q,
+        adapt_window: cfg.effective_adapt_window(),
     }
 }
 

@@ -235,16 +235,27 @@ impl ChainObserver for RecordingObserver {
 pub struct StreamingObserver {
     stats: StreamingStats,
     burnin: usize,
+    /// re-anchor trigger iteration: bright counts before it are folded into
+    /// the separate pre-re-anchor summary so the two bound regimes are
+    /// never conflated (None = feature off, `bright_pre` stays empty and
+    /// the legacy summary is untouched)
+    split_at: Option<usize>,
 }
 
 impl StreamingObserver {
     /// Streaming statistics for one chain. The θ-moment window is exactly
     /// the trace cadence (post-burn-in, thinned); bright counts are folded
-    /// for every post-burn-in iteration.
+    /// for every post-burn-in iteration, plus — when re-anchoring is on —
+    /// a separate pre-re-anchor bright summary over iterations before the
+    /// trigger.
     pub fn new(cfg: &ChainConfig, dim: usize) -> Self {
         let post = cfg.iters.saturating_sub(cfg.burnin);
         let rows = post.div_ceil(cfg.thin.max(1));
-        StreamingObserver { stats: StreamingStats::new(dim, rows), burnin: cfg.burnin }
+        StreamingObserver {
+            stats: StreamingStats::new(dim, rows),
+            burnin: cfg.burnin,
+            split_at: cfg.reanchor_at,
+        }
     }
 
     /// The underlying streaming engine.
@@ -266,6 +277,11 @@ impl ChainObserver for StreamingObserver {
     fn on_iter(&mut self, rec: &IterRecord<'_>) {
         if rec.record_theta {
             self.stats.record_row(rec.theta);
+        }
+        if let (Some(split), Some(b)) = (self.split_at, rec.n_bright) {
+            if rec.iter < split {
+                self.stats.record_bright_pre(b);
+            }
         }
         if rec.iter >= self.burnin {
             self.stats.record_queries(rec.queries_delta);
@@ -351,5 +367,34 @@ mod tests {
         assert_eq!(s.bright.last, 29 % 5);
         // recorded iters 10,12,...,28 -> theta[0] mean = 1 + 19 = 20
         assert!((s.mean[0] - 20.0).abs() < 1e-12);
+        // re-anchoring off: the pre-re-anchor series stays empty
+        assert_eq!(s.bright_pre.count, 0);
+    }
+
+    #[test]
+    fn streaming_observer_splits_bright_at_the_reanchor_trigger() {
+        let cfg = ChainConfig {
+            iters: 30,
+            burnin: 10,
+            thin: 2,
+            reanchor_at: Some(6),
+            ..Default::default()
+        };
+        let mut o = StreamingObserver::new(&cfg, 2);
+        for it in 0..30 {
+            let theta = [1.0 + it as f64, 0.0];
+            let record = it >= 10 && (it - 10) % 2 == 0;
+            o.on_iter(&rec(it, &theta, record));
+        }
+        let s = o.into_summary();
+        // iters 0..6 (n_bright = it % 5) feed the pre-re-anchor series ...
+        assert_eq!(s.bright_pre.count, 6);
+        assert_eq!(s.bright_pre.min, 0);
+        assert_eq!(s.bright_pre.max, 4);
+        assert_eq!(s.bright_pre.last, 5 % 5);
+        // ... and the post-burn-in series is exactly what it always was
+        assert_eq!(s.bright.count, 20);
+        assert_eq!(s.bright.min, 0);
+        assert_eq!(s.bright.max, 4);
     }
 }

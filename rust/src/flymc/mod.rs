@@ -2,6 +2,8 @@
 
 pub mod bright_set;
 pub mod pseudo;
+pub mod reanchor;
 
 pub use bright_set::BrightSet;
 pub use pseudo::{FullPosterior, PseudoPosterior, ZStats};
+pub use reanchor::ReanchorState;

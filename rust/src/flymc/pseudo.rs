@@ -475,6 +475,64 @@ impl PseudoPosterior {
         Ok(())
     }
 
+    /// Re-anchor the model's bounds at `anchor` and restart the auxiliary
+    /// chain (DESIGN.md §Bound-management). Returns `false` — consuming no
+    /// randomness and touching no state — when `anchor` is bitwise equal to
+    /// the model's current anchor (the no-op case; trace byte-identity is
+    /// preserved). Otherwise:
+    ///
+    /// 1. swaps in a freshly tuned model clone
+    ///    ([`ModelBound::clone_reanchored`]) behind a new `Arc`, so any
+    ///    other holder of the old model keeps its frozen bounds;
+    /// 2. points the backend at it ([`BatchEval::set_model`]) and rebuilds
+    ///    the posterior-owned model scratch and the collapsed
+    ///    [`PackedQuadForm`] base exactly as construction does;
+    /// 3. recomputes the committed base density under the new bounds;
+    /// 4. resamples **all** z from the exact conditional under the new
+    ///    bounds via [`Self::init_z`] — one batched full-N pass (N metered
+    ///    likelihood queries), which also rebuilds `pseudo_sum`,
+    ///    invalidates the memo, and bumps the distribution version so
+    ///    gradient samplers drop their caches.
+    ///
+    /// Together these make the restart a legal Markov transition targeting
+    /// the new augmented model (exactness argument in `flymc::reanchor` and
+    /// DESIGN.md). Panics if the model cannot re-anchor or the backend
+    /// cannot swap models (the XLA backend; configx rejects that pairing up
+    /// front).
+    pub fn reanchor(&mut self, anchor: &[f64], rng: &mut crate::util::Rng) -> bool {
+        if self.model.anchor_theta() == Some(anchor) {
+            return false;
+        }
+        let model = self
+            .model
+            .clone_reanchored(anchor)
+            .expect("model does not support online re-anchoring");
+        assert!(
+            self.eval.set_model(model.clone()),
+            "backend cannot swap models (re-anchoring needs the cpu/parcpu backend)"
+        );
+        self.model_scratch = model.new_scratch();
+        let dim = model.dim();
+        self.base_quad = model.collapsed_quadratic().and_then(|(a, b, c)| {
+            self.prior.iso_quadratic(dim).map(|(pa, pc)| {
+                let mut q = PackedQuadForm::from_symmetric(a, b, c + pc);
+                q.add_diag(pa);
+                q
+            })
+        });
+        self.model = model;
+        self.eval.counters().add_collapsed(1);
+        self.base = Self::base_density(
+            &self.base_quad,
+            &*self.prior,
+            &*self.model,
+            &mut self.model_scratch,
+            &self.theta,
+        );
+        self.init_z(rng);
+        true
+    }
+
     /// Recompute state sums from scratch (test hook: verifies the
     /// incremental bookkeeping).
     pub fn recompute_state(&mut self) -> f64 {
@@ -968,6 +1026,48 @@ mod tests {
         // shape mismatch rejected
         let (mut other, _) = setup(100, 3);
         assert!(other.load_state(&mut ByteReader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn reanchor_restarts_exactly_and_noop_is_free() {
+        let data = Arc::new(synth::synth_mnist(200, 8, 12));
+        let mut raw = LogisticJJ::new(data, 1.5);
+        let mut rng = Rng::new(5);
+        let theta0: Vec<f64> = (0..raw.dim()).map(|_| rng.normal() * 0.3).collect();
+        // deliberately mis-tuned initial anchor, far from the committed point
+        let anchor0: Vec<f64> = theta0.iter().map(|t| t + 0.4).collect();
+        raw.tune_anchors_map(&anchor0);
+        let model: Arc<dyn ModelBound> = Arc::new(raw);
+        let prior: Arc<dyn Prior> = Arc::new(IsoGaussian { scale: 1.0 });
+        let counters = Counters::new();
+        let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+        let mut pp = PseudoPosterior::new(model, prior, eval, theta0.clone());
+        pp.init_z(&mut rng);
+        for _ in 0..10 {
+            pp.implicit_resample(0.05, &mut rng);
+        }
+        let v0 = pp.version();
+
+        // no-op: bitwise-equal anchor consumes no randomness, touches nothing
+        let mut rng_noop = Rng::new(77);
+        let before = counters.lik_queries();
+        assert!(!pp.reanchor(&anchor0, &mut rng_noop));
+        assert_eq!(counters.lik_queries(), before);
+        assert_eq!(pp.version(), v0);
+
+        // real re-anchor: exactly one metered full-N pass, a version bump so
+        // gradient caches drop, the new anchor visible on the model, and the
+        // incremental state consistent with a from-scratch recomputation
+        assert!(pp.reanchor(&theta0, &mut rng));
+        assert_eq!(counters.lik_queries() - before, 200);
+        assert!(pp.version() > v0);
+        assert_eq!(pp.model.anchor_theta(), Some(theta0.as_slice()));
+        let cached = pp.current_log_density();
+        let fresh = pp.recompute_state();
+        assert!(
+            (cached - fresh).abs() < 1e-8 * (1.0 + fresh.abs()),
+            "cached {cached} vs fresh {fresh}"
+        );
     }
 
     #[test]

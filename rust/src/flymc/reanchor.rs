@@ -1,0 +1,129 @@
+//! Online bound re-anchoring state (DESIGN.md §Bound-management).
+//!
+//! FlyMC's per-iteration cost is the bright count, and the bright count is
+//! governed by how tight the bounds are where the chain actually lives. The
+//! one-shot MAP pre-pass anchors the bounds at an *optimizer's* guess; this
+//! module carries the state for re-anchoring them once, at a deterministic
+//! iteration, at the chain's own running posterior mean — an O(dim) Welford
+//! accumulator folded over every committed θ of the pre-re-anchor window.
+//!
+//! ## Exactness
+//!
+//! Re-anchoring changes the augmented distribution p(θ, z): the bounds
+//! B_n, the collapsed base quadratic, and the brightness conditional all
+//! move. It is nevertheless a legal *Markov restart*, because all three of
+//! the following hold (the argument lives in DESIGN.md §Bound-management):
+//!
+//! 1. the trigger is a fixed, config-declared iteration — never a function
+//!    of the chain's future;
+//! 2. the new anchor is a measurable function of the *past* trajectory
+//!    (the running mean up to the trigger), used only once;
+//! 3. immediately after swapping bounds, **every** z_n is redrawn from its
+//!    exact conditional p(z_n = 1 | θ) = 1 − B_n(θ)/L_n(θ) under the NEW
+//!    bounds (`PseudoPosterior::init_z`) — so the post-restart state is a
+//!    draw from the new augmented model's exact z-conditional at the
+//!    current θ, and the subsequent chain targets the new p(θ, z), whose
+//!    θ-marginal is the same exact posterior.
+//!
+//! The marginal p(θ) is invariant to the bound choice (the paper's central
+//! identity), so samples from before and after the restart may be pooled;
+//! only z-statistics (bright counts) change regime, which is why the
+//! streaming observer keeps separate pre/post bright series.
+
+use crate::diagnostics::streaming::WelfordVec;
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Per-chain online re-anchoring state: the trigger iteration, the running
+/// θ mean it will anchor at, and whether the restart has fired. Owned by
+/// the chain (`ChainState`) and checkpointed in the `RANC` section so a
+/// kill/resume straddling the trigger replays it bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReanchorState {
+    /// iteration the restart fires at (start of iteration `at`, before the
+    /// θ-step; config-validated to lie inside burn-in)
+    pub at: usize,
+    /// Welford accumulator over every committed θ so far (O(dim) memory)
+    pub mean: WelfordVec,
+    /// whether the restart has already fired (exactly-once across resumes)
+    pub applied: bool,
+}
+
+impl ReanchorState {
+    /// Fresh state firing at iteration `at` for a `dim`-parameter chain.
+    pub fn new(at: usize, dim: usize) -> Self {
+        ReanchorState { at, mean: WelfordVec::new(dim), applied: false }
+    }
+
+    /// Fold one committed θ into the running mean (O(dim), no allocation).
+    // lint: zero-alloc
+    pub fn observe(&mut self, theta: &[f64]) {
+        if !self.applied {
+            self.mean.update(theta);
+        }
+    }
+
+    /// Whether the restart should fire now, at the start of iteration
+    /// `completed` (fires exactly once, and only with ≥1 observation).
+    pub fn due(&self, completed: usize) -> bool {
+        !self.applied && completed == self.at && self.mean.count() > 0
+    }
+
+    /// The anchor the restart will use: the running mean of the observed
+    /// trajectory.
+    pub fn anchor(&self) -> &[f64] {
+        self.mean.means()
+    }
+
+    /// Serialize (trigger, accumulator, fired flag — bit-exact).
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        w.usize(self.at);
+        self.mean.save_state(w);
+        w.bool(self.applied);
+    }
+
+    /// Restore [`Self::save_state`] bytes (dimension must match).
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<(), String> {
+        self.at = r.usize()?;
+        self.mean.load_state(r)?;
+        self.applied = r.bool()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_once_at_the_trigger() {
+        let mut s = ReanchorState::new(5, 2);
+        assert!(!s.due(5), "no observations yet");
+        for i in 0..5 {
+            s.observe(&[i as f64, 1.0]);
+            assert!(!s.due(i), "early fire at {i}");
+        }
+        assert!(s.due(5));
+        assert_eq!(s.anchor(), &[2.0, 1.0]);
+        s.applied = true;
+        assert!(!s.due(5), "must not re-fire");
+        let before = s.mean.count();
+        s.observe(&[9.0, 9.0]); // post-restart observations are ignored
+        assert_eq!(s.mean.count(), before);
+    }
+
+    #[test]
+    fn codec_roundtrip_is_exact() {
+        let mut s = ReanchorState::new(40, 3);
+        for i in 0..7 {
+            s.observe(&[i as f64, -0.5 * i as f64, 0.25]);
+        }
+        let mut w = ByteWriter::new();
+        s.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut d = ReanchorState::new(0, 3);
+        let mut r = ByteReader::new(&bytes);
+        d.load_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(s, d);
+    }
+}

@@ -141,6 +141,45 @@ pub fn log_lik_grad_batch<P: LanePath>(
     }
 }
 
+/// Batch `log_lik` + likelihood gradient with **per-datum accumulation
+/// order**: values come off the shared tile through the canonical
+/// [`LanePath::dot_lanes`] contract (bit-identical to per-datum dots), but
+/// the gradient is accumulated lane-by-lane in index order — the exact op
+/// sequence of repeated per-datum `log_lik_grad_acc` calls. The `+ 0.0`
+/// reproduces the single-live-lane `tree8` fold's `-0.0` canonicalization
+/// bit-for-bit (see `single_live_lane_reproduces_axpy_bits`). This is the
+/// anchor-invariant entry point `map_estimate` batches through.
+// lint: zero-alloc
+pub fn log_lik_grad_ordered<P: LanePath>(
+    m: &LogisticJJ,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let d = theta.len();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let sv = m.data.t[n] * s[l];
+            let c = sigmoid(-sv) * m.data.t[n];
+            for (j, g) in grad.iter_mut().enumerate() {
+                *g += c * tile[j * W + l] + 0.0;
+            }
+            ll[base + l] = log_sigmoid(sv);
+        }
+        base += chunk.len();
+    }
+}
+
 /// `Σ_i log B_{idx[i]}(θ)` (clamped bounds, as in `log_both`), each tile
 /// folded through [`tree8`] and tiles summed in batch order.
 // lint: zero-alloc

@@ -145,6 +145,43 @@ pub fn log_lik_grad_batch<P: LanePath>(
     }
 }
 
+/// Batch `log_lik` + likelihood gradient with **per-datum accumulation
+/// order** — bit-identical to repeated per-datum `log_lik_grad_acc` /
+/// `log_lik` calls over `idx` in order (see the logistic kernel's
+/// `log_lik_grad_ordered` for the contract and the `+ 0.0`
+/// canonicalization argument).
+// lint: zero-alloc
+pub fn log_lik_grad_ordered<P: LanePath>(
+    m: &RobustT,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let d = theta.len();
+    let c2 = m.c2();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let r = m.data.y[n] - s[l];
+            let c = (m.nu + 1.0) * r / (c2 + r * r);
+            for (j, g) in grad.iter_mut().enumerate() {
+                *g += c * tile[j * W + l] + 0.0;
+            }
+            ll[base + l] = m.logc - (m.nu + 1.0) / 2.0 * (r * r / c2).ln_1p();
+        }
+        base += chunk.len();
+    }
+}
+
 /// `Σ_i log B_{idx[i]}(θ)` (clamped bounds, as in `log_both`), each tile
 /// folded through [`tree8`] and tiles summed in batch order.
 // lint: zero-alloc

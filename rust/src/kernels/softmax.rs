@@ -182,6 +182,49 @@ pub fn log_lik_grad_batch<P: LanePath>(
     }
 }
 
+/// Batch `log_lik` + likelihood gradient with **per-datum accumulation
+/// order**: lanes are drained in index order, and within each datum the
+/// classes are walked class-outer exactly as the per-datum
+/// `log_lik_grad_acc` (batch-of-1) does — so `grad` and `ll` are
+/// bit-identical to the per-datum reference loop (see the logistic
+/// kernel's `log_lik_grad_ordered` for the `+ 0.0` canonicalization
+/// argument).
+// lint: zero-alloc
+pub fn log_lik_grad_ordered<P: LanePath>(
+    m: &SoftmaxBohning,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    grad: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let k = m.k;
+    let d = m.data.d();
+    let EvalScratch { rows, tile, lane_eta, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let lane_eta = &mut lane_eta[..k * W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        logits_tile::<P>(theta, k, tile, lane_eta);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let lse_l = logsumexp(&lane_eta[l * k..(l + 1) * k]);
+            for kk in 0..k {
+                let c = (if kk == m.data.labels[n] { 1.0 } else { 0.0 })
+                    - (lane_eta[l * k + kk] - lse_l).exp();
+                let seg = &mut grad[kk * d..(kk + 1) * d];
+                for (j, g) in seg.iter_mut().enumerate() {
+                    *g += c * tile[j * W + l] + 0.0;
+                }
+            }
+            ll[base + l] = lane_eta[l * k + m.data.labels[n]] - lse_l;
+        }
+        base += chunk.len();
+    }
+}
+
 /// `Σ_i log B_{idx[i]}(θ)` (clamped bounds, as in `log_both`), each tile
 /// folded through [`tree8`] and tiles summed in batch order.
 // lint: zero-alloc

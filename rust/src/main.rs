@@ -47,6 +47,16 @@ fn usage() -> ! {
     --seed <int>
     --q <float>                    q_dark->bright override
     --explicit                     use explicit (Alg 1) z-resampling
+    --reanchor                     re-anchor the bounds at the running
+                                   posterior mean once burn-in ends (FlyMC
+                                   only; exact — a legal Markov restart)
+    --reanchor-at <int>            re-anchor trigger iteration (default:
+                                   end of burn-in; must lie inside burn-in)
+    --adapt-q                      Robbins-Monro adaptation of q_dark->bright
+                                   toward a target z-turnover during early
+                                   burn-in (frozen afterwards; FlyMC only)
+    --adapt-window <int>           adaptation window in iterations (default
+                                   burnin/2; must end strictly inside burn-in)
     --data <file.fbin>             sample this out-of-core dataset instead of
                                    synthesizing (label kind must match --task;
                                    --n is ignored)
@@ -118,6 +128,20 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
     }
     if args.has("explicit") {
         cfg.explicit_resample = true;
+    }
+    if args.has("reanchor") {
+        cfg.reanchor = true;
+    }
+    if let Some(v) = args.get("reanchor-at") {
+        cfg.reanchor = true;
+        cfg.reanchor_at = Some(v.parse().map_err(|_| "bad --reanchor-at")?);
+    }
+    if args.has("adapt-q") {
+        cfg.adapt_q = true;
+    }
+    if let Some(v) = args.get("adapt-window") {
+        cfg.adapt_q = true;
+        cfg.adapt_window = Some(v.parse().map_err(|_| "bad --adapt-window")?);
     }
     cfg.map_steps = args.get_usize("map-steps", cfg.map_steps);
     cfg.artifacts_dir = args.get_str("artifacts", &cfg.artifacts_dir);
@@ -192,6 +216,11 @@ fn print_summary(res: &ExperimentResult) {
     println!("data points (N):             {}", res.n_data);
     println!("iterations x chains:         {} x {}", res.config.iters, res.chains.len());
     println!("avg lik queries / iter:      {:.1}", row.avg_lik_queries_per_iter);
+    if let Some((min, mean, max, _)) = res.bright_pre_stats() {
+        println!(
+            "bright points M (pre-reanchor): min {min} / mean {mean:.1} / max {max}"
+        );
+    }
     if let Some((min, mean, max, last)) = res.bright_stats() {
         println!(
             "bright points M (post-burnin): min {min} / mean {mean:.1} / max {max} / last {last}"

@@ -6,11 +6,14 @@
 //! one-time setup, reported separately from the per-iteration likelihood
 //! queries (as in the paper).
 //!
-//! Gradients are accumulated datum by datum through the per-datum
-//! `ModelBound` methods (batch-of-1 wrappers since the kernel refactor,
-//! DESIGN.md §Kernels), which keep the pre-kernel accumulation order —
-//! so MAP tuning, and therefore every MAP-anchored bound, is bit-identical
-//! across backends and kernel paths.
+//! Gradients flow through the models' **ordered batch** entry point
+//! (`ModelBound::log_lik_grad_ordered_batch`, DESIGN.md §Kernels): one
+//! SoA-tiled kernel call per minibatch whose `ll`/`grad` outputs are
+//! bit-identical to the historical per-datum `log_lik_grad_acc` /
+//! `log_lik` loop — so MAP tuning, and therefore every MAP-anchored
+//! bound, is bit-identical across backends, kernel paths, and the
+//! batched-vs-per-datum choice (`map_batches_like_per_datum_reference`
+//! below pins this).
 
 use crate::models::{ModelBound, Prior};
 use crate::util::Rng;
@@ -73,15 +76,24 @@ pub fn map_estimate(model: &dyn ModelBound, prior: &dyn Prior, cfg: &MapConfig) 
     let scale = n as f64 / batch as f64;
     let mut queries = 0u64;
     let mut last_obj = f64::NEG_INFINITY;
+    // reused across steps: the minibatch index list (same `rng.below` draw
+    // order as the historical per-datum loop — evaluations never touch the
+    // rng) and the per-datum log-likelihood output buffer
+    let mut idx: Vec<u32> = Vec::with_capacity(batch);
+    let mut ll: Vec<f64> = Vec::with_capacity(batch);
 
     for t in 1..=cfg.steps {
         grad.fill(0.0);
-        let mut batch_ll = 0.0;
+        idx.clear();
         for _ in 0..batch {
-            let i = rng.below(n);
-            model.log_lik_grad_acc(&theta, i, &mut grad, &mut scratch);
-            batch_ll += model.log_lik(&theta, i, &mut scratch);
-            queries += 1;
+            idx.push(rng.below(n) as u32);
+        }
+        model.log_lik_grad_ordered_batch(&theta, &idx, &mut ll, &mut grad, &mut scratch);
+        queries += batch as u64;
+        // in-order sum: same bits as the historical per-datum accumulation
+        let mut batch_ll = 0.0;
+        for &l in &ll {
+            batch_ll += l;
         }
         for g in grad.iter_mut() {
             *g *= scale;
@@ -131,6 +143,105 @@ mod tests {
         let at_map = full(&res.theta);
         assert!(at_map > at_zero + 100.0, "MAP {at_map} vs zero {at_zero}");
         assert_eq!(res.lik_queries, 300 * 256);
+    }
+
+    /// Forwards only the *required* per-datum `ModelBound` methods, so every
+    /// batch entry point — including `log_lik_grad_ordered_batch` — falls
+    /// back to the trait's default per-datum loop: the pre-batching
+    /// reference implementation of the MAP pass.
+    struct PerDatumRef<M: ModelBound>(M);
+
+    impl<M: ModelBound> ModelBound for PerDatumRef<M> {
+        fn n(&self) -> usize {
+            self.0.n()
+        }
+        fn dim(&self) -> usize {
+            self.0.dim()
+        }
+        fn kind(&self) -> crate::models::ModelKind {
+            self.0.kind()
+        }
+        fn n_classes(&self) -> usize {
+            self.0.n_classes()
+        }
+        fn new_scratch(&self) -> crate::models::EvalScratch {
+            self.0.new_scratch()
+        }
+        fn log_lik(&self, t: &[f64], n: usize, sc: &mut crate::models::EvalScratch) -> f64 {
+            self.0.log_lik(t, n, sc)
+        }
+        fn log_lik_grad_acc(
+            &self,
+            t: &[f64],
+            n: usize,
+            g: &mut [f64],
+            sc: &mut crate::models::EvalScratch,
+        ) {
+            self.0.log_lik_grad_acc(t, n, g, sc)
+        }
+        fn log_both(
+            &self,
+            t: &[f64],
+            n: usize,
+            sc: &mut crate::models::EvalScratch,
+        ) -> (f64, f64) {
+            self.0.log_both(t, n, sc)
+        }
+        fn pseudo_grad_acc(
+            &self,
+            t: &[f64],
+            n: usize,
+            g: &mut [f64],
+            sc: &mut crate::models::EvalScratch,
+        ) {
+            self.0.pseudo_grad_acc(t, n, g, sc)
+        }
+        fn log_bound_product(&self, t: &[f64], sc: &mut crate::models::EvalScratch) -> f64 {
+            self.0.log_bound_product(t, sc)
+        }
+        fn grad_log_bound_product_acc(
+            &self,
+            t: &[f64],
+            g: &mut [f64],
+            sc: &mut crate::models::EvalScratch,
+        ) {
+            self.0.grad_log_bound_product_acc(t, g, sc)
+        }
+        fn tune_anchors_map(&mut self, t: &[f64]) {
+            self.0.tune_anchors_map(t)
+        }
+    }
+
+    /// Satellite invariance gate: routing the MAP minibatch pass through the
+    /// ordered batch kernel must not perturb a single bit of the MAP point —
+    /// and therefore not a single anchor bit — vs the per-datum reference.
+    #[test]
+    fn map_batches_like_per_datum_reference() {
+        let prior = IsoGaussian { scale: 2.0 };
+        let cfg = MapConfig { steps: 60, batch: 100, ..Default::default() };
+        // logistic
+        let data = Arc::new(synth::synth_mnist(500, 8, 4));
+        let batched = map_estimate(&LogisticJJ::new(data.clone(), 1.5), &prior, &cfg);
+        let reference = map_estimate(&PerDatumRef(LogisticJJ::new(data, 1.5)), &prior, &cfg);
+        assert_eq!(batched.lik_queries, reference.lik_queries);
+        for (a, b) in batched.theta.iter().zip(&reference.theta) {
+            assert_eq!(a.to_bits(), b.to_bits(), "logistic MAP bits differ");
+        }
+        // robust
+        let data = Arc::new(synth::synth_opv(400, 7, 5));
+        let batched = map_estimate(&RobustT::new(data.clone(), 4.0, 0.7), &prior, &cfg);
+        let reference = map_estimate(&PerDatumRef(RobustT::new(data, 4.0, 0.7)), &prior, &cfg);
+        for (a, b) in batched.theta.iter().zip(&reference.theta) {
+            assert_eq!(a.to_bits(), b.to_bits(), "robust MAP bits differ");
+        }
+        // softmax (class-outer per-datum order is the subtle one)
+        let data = Arc::new(synth::synth_cifar3(300, 9, 6));
+        let batched = map_estimate(&crate::models::SoftmaxBohning::new(data.clone()), &prior, &cfg);
+        let reference =
+            map_estimate(&PerDatumRef(crate::models::SoftmaxBohning::new(data)), &prior, &cfg);
+        for (a, b) in batched.theta.iter().zip(&reference.theta) {
+            assert_eq!(a.to_bits(), b.to_bits(), "softmax MAP bits differ");
+        }
     }
 
     #[test]

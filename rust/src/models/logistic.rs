@@ -42,11 +42,14 @@ pub fn jj_coeffs(xi: f64) -> (f64, f64, f64) {
 
 /// Logistic-regression likelihood with the Jaakkola–Jordan lower bound
 /// (the paper's MNIST experiment model).
+#[derive(Clone)]
 pub struct LogisticJJ {
     /// the binary-classification dataset (features + ±1 labels)
     pub data: Arc<LogisticData>,
     /// per-datum bound anchor xi_n (paper: 1.5 untuned; |theta_MAP^T x_n| tuned)
     pub xi: Vec<f64>,
+    /// the θ the anchors were last tuned at (None = constant-xi untuned)
+    anchor: Option<Vec<f64>>,
     // collapsed sufficient statistics
     a_mat: Matrix,
     b_vec: Vec<f64>,
@@ -60,6 +63,7 @@ impl LogisticJJ {
         let mut m = LogisticJJ {
             data,
             xi: vec![xi_const; n],
+            anchor: None,
             a_mat: Matrix::zeros(0, 0),
             b_vec: Vec::new(),
             c_sum: 0.0,
@@ -225,6 +229,24 @@ impl ModelBound for LogisticJJ {
     }
 
     // lint: zero-alloc
+    fn log_lik_grad_ordered_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut Vec<f64>,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        ll.clear();
+        ll.resize(idx.len(), 0.0);
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::logistic::log_lik_grad_ordered,
+            (self, theta, idx, ll, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
     fn log_bound_product_batch(
         &self,
         theta: &[f64],
@@ -265,7 +287,18 @@ impl ModelBound for LogisticJJ {
         self.data.x.for_each_row(|n, row| {
             xi[n] = (t[n] * dot(row, theta_map)).abs();
         });
+        self.anchor = Some(theta_map.to_vec());
         self.rebuild_stats();
+    }
+
+    fn anchor_theta(&self) -> Option<&[f64]> {
+        self.anchor.as_deref()
+    }
+
+    fn clone_reanchored(&self, anchor: &[f64]) -> Option<Arc<dyn ModelBound>> {
+        let mut m = self.clone();
+        m.tune_anchors_map(anchor);
+        Some(Arc::new(m))
     }
 
     fn collapsed_quadratic(&self) -> Option<(&Matrix, &[f64], f64)> {

@@ -311,9 +311,55 @@ pub trait ModelBound: Send + Sync {
         scratch: &mut EvalScratch,
     );
 
+    /// Batched [`Self::log_lik_grad_batch`] with a stronger contract: `ll`
+    /// and `grad` are **bit-identical** to running the per-datum
+    /// `log_lik` / `log_lik_grad_acc` pair over `idx` in order. The generic
+    /// batch kernels fold gradients through the cross-lane `tree8` tree
+    /// (different bits for multi-lane tiles); this entry point keeps the
+    /// per-datum accumulation *order* while still gathering SoA tiles and
+    /// computing values through the canonical `dot_lanes` contract — it is
+    /// what lets `map_estimate` batch its minibatch pass without perturbing
+    /// a single anchor bit (DESIGN.md §Bound-management). `ll` is cleared
+    /// and refilled to `idx.len()`; `grad` accumulates.
+    fn log_lik_grad_ordered_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut Vec<f64>,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        ll.clear();
+        for &n in idx {
+            self.log_lik_grad_acc(theta, n as usize, grad, scratch);
+            ll.push(self.log_lik(theta, n as usize, scratch));
+        }
+    }
+
     /// Re-anchor the bounds to be tight at `theta_map` (paper §4: MAP-tuned)
     /// and rebuild the sufficient statistics. Setup-time; may allocate.
     fn tune_anchors_map(&mut self, theta_map: &[f64]);
+
+    /// The θ the bounds were last anchored at ([`Self::tune_anchors_map`]),
+    /// or `None` if the model still carries its construction-time (untuned)
+    /// anchors. Lets the online re-anchoring layer detect a bitwise no-op
+    /// (requested anchor == current anchor) and skip the restart entirely,
+    /// preserving trace byte-identity.
+    fn anchor_theta(&self) -> Option<&[f64]> {
+        None
+    }
+
+    /// A copy of this model with its bounds re-anchored at `anchor`
+    /// (equivalent to clone + [`Self::tune_anchors_map`]). `None` means the
+    /// model does not support online re-anchoring; the three paper models
+    /// all do. Setup-time; allocates. Returning a fresh `Arc` (instead of
+    /// mutating in place) is what keeps re-anchoring sound while evaluators
+    /// and the pseudo-posterior share the model behind `Arc<dyn ModelBound>`
+    /// — the old bounds stay frozen for anyone still holding them.
+    fn clone_reanchored(&self, anchor: &[f64]) -> Option<std::sync::Arc<dyn ModelBound>> {
+        let _ = anchor;
+        None
+    }
 
     /// The collapsed bound as an explicit quadratic form
     /// `theta^T A theta + b^T theta + c` (A row-major dim×dim), when the

@@ -31,6 +31,7 @@ use crate::util::math::t_logconst;
 
 /// Student-t regression likelihood with the tangent scaled-Gaussian lower
 /// bound (the paper's OPV experiment model).
+#[derive(Clone)]
 pub struct RobustT {
     /// the regression dataset (features + targets)
     pub data: Arc<RegressionData>,
@@ -40,6 +41,8 @@ pub struct RobustT {
     pub sigma: f64,
     /// per-datum tangent location u0_n (in u = r^2 space)
     pub u0: Vec<f64>,
+    /// the θ the tangents were last tuned at (None = untuned, u0 = 0)
+    anchor: Option<Vec<f64>>,
     pub(crate) logc: f64,
     // collapsed sufficient statistics
     a_mat: Matrix,
@@ -56,6 +59,7 @@ impl RobustT {
             nu,
             sigma,
             u0: vec![0.0; n],
+            anchor: None,
             logc: t_logconst(nu, sigma),
             a_mat: Matrix::zeros(0, 0),
             b_vec: Vec::new(),
@@ -235,6 +239,24 @@ impl ModelBound for RobustT {
     }
 
     // lint: zero-alloc
+    fn log_lik_grad_ordered_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut Vec<f64>,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        ll.clear();
+        ll.resize(idx.len(), 0.0);
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::robust::log_lik_grad_ordered,
+            (self, theta, idx, ll, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
     fn log_bound_product_batch(
         &self,
         theta: &[f64],
@@ -275,7 +297,18 @@ impl ModelBound for RobustT {
             let r = y[n] - dot(row, theta_map);
             u0[n] = r * r;
         });
+        self.anchor = Some(theta_map.to_vec());
         self.rebuild_stats();
+    }
+
+    fn anchor_theta(&self) -> Option<&[f64]> {
+        self.anchor.as_deref()
+    }
+
+    fn clone_reanchored(&self, anchor: &[f64]) -> Option<Arc<dyn ModelBound>> {
+        let mut m = self.clone();
+        m.tune_anchors_map(anchor);
+        Some(Arc::new(m))
     }
 
     fn collapsed_quadratic(&self) -> Option<(&Matrix, &[f64], f64)> {

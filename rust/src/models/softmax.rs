@@ -33,11 +33,14 @@ use crate::util::math::logsumexp;
 
 /// Softmax-classification likelihood with the Böhning lower bound (the
 /// paper's CIFAR-3 experiment model). `theta` is flattened row-major [K, D].
+#[derive(Clone)]
 pub struct SoftmaxBohning {
     /// the multi-class dataset (features + integer labels)
     pub data: Arc<SoftmaxData>,
     /// per-datum anchor logits psi_n, flattened [N, K] (zeros = untuned)
     pub psi: Vec<f64>,
+    /// the θ the anchors were last tuned at (None = untuned, psi = 0)
+    anchor: Option<Vec<f64>>,
     // collapsed sufficient statistics
     s_mat: Matrix,    // sum x x^T, anchor-independent
     g_mat: Matrix,    // [K, D]: sum (g_n + A psi_n) x_n^T
@@ -59,6 +62,7 @@ impl SoftmaxBohning {
         let mut m = SoftmaxBohning {
             data,
             psi: vec![0.0; n * k],
+            anchor: None,
             s_mat,
             g_mat: Matrix::zeros(k, d),
             c0: 0.0,
@@ -289,6 +293,24 @@ impl ModelBound for SoftmaxBohning {
     }
 
     // lint: zero-alloc
+    fn log_lik_grad_ordered_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut Vec<f64>,
+        grad: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        ll.clear();
+        ll.resize(idx.len(), 0.0);
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::softmax::log_lik_grad_ordered,
+            (self, theta, idx, ll, grad, scratch)
+        );
+    }
+
+    // lint: zero-alloc
     fn log_bound_product_batch(
         &self,
         theta: &[f64],
@@ -362,7 +384,18 @@ impl ModelBound for SoftmaxBohning {
                 psi[n * k + kk] = dot(&theta_map[kk * d..(kk + 1) * d], row);
             }
         });
+        self.anchor = Some(theta_map.to_vec());
         self.rebuild_stats();
+    }
+
+    fn anchor_theta(&self) -> Option<&[f64]> {
+        self.anchor.as_deref()
+    }
+
+    fn clone_reanchored(&self, anchor: &[f64]) -> Option<Arc<dyn ModelBound>> {
+        let mut m = self.clone();
+        m.tune_anchors_map(anchor);
+        Some(Arc::new(m))
     }
 }
 

@@ -102,6 +102,12 @@ impl BatchEval for CpuBackend {
         self.model.log_lik_grad_batch(theta, idx, ll, grad, &mut self.scratch);
         self.flush_cache_stats();
     }
+
+    fn set_model(&mut self, model: Arc<dyn ModelBound>) -> bool {
+        self.scratch = model.new_scratch();
+        self.model = model;
+        true
+    }
 }
 
 #[cfg(test)]

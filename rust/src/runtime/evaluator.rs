@@ -15,7 +15,10 @@
 //! performs no heap allocation anywhere on this interface: callers own
 //! reusable output buffers and backends only `clear`/`reserve` them.
 
+use std::sync::Arc;
+
 use crate::metrics::Counters;
+use crate::models::ModelBound;
 
 /// Batched per-datum likelihood/bound evaluation over a `&[u32]` index set.
 ///
@@ -62,4 +65,12 @@ pub trait BatchEval {
         ll: &mut Vec<f64>,
         grad: &mut [f64],
     );
+
+    /// Swap the backing model (bound re-anchoring swaps in a freshly tuned
+    /// clone mid-run; see `PseudoPosterior::reanchor`). Backends rebuild
+    /// whatever scratch depends on the model. Returns `false` when the
+    /// backend cannot swap — the XLA backend bakes the bound anchors into
+    /// its AOT artifacts — and the caller must refuse the re-anchor
+    /// (configx validation rejects `reanchor` + the XLA backend up front).
+    fn set_model(&mut self, model: Arc<dyn ModelBound>) -> bool;
 }

@@ -324,6 +324,14 @@ impl BatchEval for ParBackend {
         }
         self.flush_cache_stats();
     }
+
+    fn set_model(&mut self, model: Arc<dyn ModelBound>) -> bool {
+        // fresh scratches lazily rebuilt from the new model on first use;
+        // shard_grads is model-independent (dim is unchanged)
+        self.group_scratch.clear();
+        self.model = model;
+        true
+    }
 }
 
 #[cfg(test)]

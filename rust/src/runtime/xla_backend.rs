@@ -256,6 +256,12 @@ mod enabled {
         ) {
             self.eval_impl(theta, idx, ll, None, None, Some(grad));
         }
+
+        fn set_model(&mut self, _model: std::sync::Arc<dyn crate::models::ModelBound>) -> bool {
+            // The AOT artifacts bake the bound anchors into their aux
+            // inputs; swapping the model cannot retune them.
+            false
+        }
     }
 }
 
@@ -337,6 +343,9 @@ mod disabled {
             _ll: &mut Vec<f64>,
             _grad: &mut [f64],
         ) {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+        fn set_model(&mut self, _model: Arc<dyn crate::models::ModelBound>) -> bool {
             unreachable!("stub XlaBackend cannot be constructed")
         }
     }

@@ -63,6 +63,107 @@ impl StepSizeAdapter {
     }
 }
 
+/// Robbins–Monro controller for the FlyMC dark→bright resampling rate
+/// `q_dark_to_bright`, driving the observed bright-set *turnover* toward a
+/// target (DESIGN.md §Bound-management). Turnover per z-update is
+/// `(brightened + darkened) / (2 max(1, |bright|))` — ~0 means the bright
+/// set is frozen (sticky z chain, high autocorrelation), ~1 means it churns
+/// completely. Mirrors [`StepSizeAdapter`]: log-scale updates with gain
+/// `gamma0 / count^0.6`, adapt during burn-in, [`QController::freeze`]
+/// after — frozen, the controller is exactly inert, so a chain that never
+/// adapts is byte-identical with or without it.
+#[derive(Clone, Debug)]
+pub struct QController {
+    /// bright-set turnover the adaptation drives toward
+    pub target_turnover: f64,
+    /// base adaptation gain (decays as count^-0.6)
+    pub gamma0: f64,
+    /// EWMA of observed turnover (decay 0.9) — the explicit-vs-implicit
+    /// resampling decision at freeze time reads this
+    pub ewma_turnover: f64,
+    count: usize,
+    frozen: bool,
+}
+
+/// Clamp bounds for the controlled `q_dark_to_bright`.
+pub const Q_DB_MIN: f64 = 1e-6;
+/// Upper clamp: q beyond 0.5 churns the dark set faster than it mixes.
+pub const Q_DB_MAX: f64 = 0.5;
+
+impl QController {
+    /// Controller driving toward `target_turnover` (the tentpole default is
+    /// 0.05: 5% of the bright set replaced per z-update).
+    pub fn new(target_turnover: f64) -> Self {
+        QController {
+            target_turnover,
+            gamma0: 0.5,
+            ewma_turnover: target_turnover,
+            count: 0,
+            frozen: false,
+        }
+    }
+
+    /// Stop adapting (end of the adaptation window; before any recorded
+    /// sample so the chain stays asymptotically exact).
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    /// Whether adaptation has been frozen.
+    pub fn is_frozen(&self) -> bool {
+        self.frozen
+    }
+
+    /// Observed bright-set turnover for one z-update.
+    pub fn turnover(brightened: usize, darkened: usize, n_bright: usize) -> f64 {
+        (brightened + darkened) as f64 / (2.0 * n_bright.max(1) as f64)
+    }
+
+    /// Update `q_dark_to_bright` after observing one z-update's flip tallies;
+    /// returns the new (clamped) q. Frozen: identity, zero state touched.
+    pub fn update(&mut self, q: f64, brightened: usize, darkened: usize, n_bright: usize) -> f64 {
+        if self.frozen {
+            return q;
+        }
+        let tau = Self::turnover(brightened, darkened, n_bright);
+        self.ewma_turnover = 0.9 * self.ewma_turnover + 0.1 * tau;
+        self.count += 1;
+        let gamma = self.gamma0 / (self.count as f64).powf(0.6);
+        (q.ln() + gamma * (self.target_turnover - tau))
+            .exp()
+            .clamp(Q_DB_MIN, Q_DB_MAX)
+    }
+
+    /// Resampling-mode recommendation at freeze time: if turnover is still
+    /// below half the target with q pinned at its upper clamp, the geometric
+    /// dark→bright trickle can't keep up (sticky bounds) — switch to the
+    /// explicit full-conditional z sweep.
+    pub fn recommend_explicit(&self, q: f64) -> bool {
+        q >= Q_DB_MAX * (1.0 - 1e-12) && self.ewma_turnover < 0.5 * self.target_turnover
+    }
+
+    /// Serialize the controller (target, gain, EWMA, decay count, frozen
+    /// flag) — the count determines every future gain, so it must survive a
+    /// checkpoint for the resumed q trajectory to be bit-identical.
+    pub fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.f64(self.target_turnover);
+        w.f64(self.gamma0);
+        w.f64(self.ewma_turnover);
+        w.usize(self.count);
+        w.bool(self.frozen);
+    }
+
+    /// Restore [`Self::save_state`] bytes.
+    pub fn load_state(&mut self, r: &mut crate::util::codec::ByteReader) -> Result<(), String> {
+        self.target_turnover = r.f64()?;
+        self.gamma0 = r.f64()?;
+        self.ewma_turnover = r.f64()?;
+        self.count = r.usize()?;
+        self.frozen = r.bool()?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +190,64 @@ mod tests {
         a.freeze();
         assert_eq!(a.update(0.7, true), 0.7);
         assert_eq!(a.update(0.7, false), 0.7);
+    }
+
+    #[test]
+    fn q_controller_raises_q_when_turnover_low() {
+        let mut c = QController::new(0.05);
+        let mut q = 0.01;
+        // bright set of 100, nothing flipping: turnover 0 < target
+        for _ in 0..50 {
+            q = c.update(q, 0, 0, 100);
+        }
+        assert!(q > 0.01, "q should grow, got {q}");
+        assert!(q <= Q_DB_MAX);
+        // heavy churn drives it back down
+        for _ in 0..200 {
+            q = c.update(q, 40, 40, 100);
+        }
+        assert!(q < Q_DB_MAX, "q should shrink under churn, got {q}");
+        assert!(q >= Q_DB_MIN);
+    }
+
+    #[test]
+    fn q_controller_frozen_is_inert() {
+        let mut c = QController::new(0.05);
+        c.freeze();
+        let before = c.ewma_turnover;
+        assert_eq!(c.update(0.03, 10, 10, 50), 0.03);
+        assert_eq!(c.ewma_turnover, before);
+    }
+
+    #[test]
+    fn q_controller_recommends_explicit_only_when_pinned_and_sticky() {
+        let mut c = QController::new(0.05);
+        // sticky: drive the EWMA toward zero
+        for _ in 0..100 {
+            c.update(Q_DB_MAX, 0, 0, 100);
+        }
+        assert!(c.recommend_explicit(Q_DB_MAX));
+        assert!(!c.recommend_explicit(0.01), "not pinned at clamp");
+        let healthy = QController::new(0.05);
+        assert!(!healthy.recommend_explicit(Q_DB_MAX), "EWMA at target");
+    }
+
+    #[test]
+    fn q_controller_codec_roundtrip() {
+        let mut c = QController::new(0.07);
+        for i in 0..9 {
+            c.update(0.02, i, i / 2, 40);
+        }
+        c.freeze();
+        let mut w = crate::util::codec::ByteWriter::new();
+        c.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut d = QController::new(0.0);
+        let mut r = crate::util::codec::ByteReader::new(&bytes);
+        d.load_state(&mut r).unwrap();
+        assert_eq!(c.target_turnover, d.target_turnover);
+        assert_eq!(c.ewma_turnover, d.ewma_turnover);
+        assert_eq!(c.count, d.count);
+        assert!(d.frozen);
     }
 }

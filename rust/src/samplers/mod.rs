@@ -10,7 +10,7 @@ pub mod sgld;
 pub mod slice;
 pub mod target;
 
-pub use adapt::StepSizeAdapter;
+pub use adapt::{QController, StepSizeAdapter};
 pub use austerity::AusterityMh;
 pub use mala::Mala;
 pub use mh::RandomWalkMh;

@@ -405,6 +405,7 @@ fn zero_alloc_steady_state_with_full_observer_pipeline() {
         resample_fraction: 0.1,
         seed: cfg.seed,
         record_trace: true,
+        ..Default::default()
     };
     let dim = theta0.len();
     let mut state = ChainState::new(target, sampler, theta0, &ccfg);

@@ -66,6 +66,7 @@ fn flymc_marginal_matches_regular_mcmc() {
             resample_fraction: 0.1,
             seed,
             record_trace: true,
+            ..Default::default()
         };
         run_chain(
             target,

@@ -1,0 +1,292 @@
+//! Acceptance tests for online bound re-anchoring (DESIGN.md
+//! §Bound-management):
+//!
+//! * exactness end-to-end: re-anchored (and q-adapted) FlyMC chains clear
+//!   the seeded `testing::posterior_check` battery against a long full-data
+//!   reference on all three paper workloads — the mid-run Markov restart
+//!   does not bias the θ-marginal;
+//! * a **no-op** re-anchor (anchor == the model's current anchor, i.e. the
+//!   original MAP point) returns `false`, consumes no RNG and no likelihood
+//!   queries, and leaves the downstream trace byte-identical;
+//! * kill/resume **across the re-anchor boundary** is byte-identical to the
+//!   uninterrupted run on both sides of the trigger (the RANC checkpoint
+//!   section round-trips the Welford accumulator, the applied flag, and the
+//!   frozen q-controller);
+//! * cpu ↔ parcpu byte-identity holds with re-anchoring enabled (the
+//!   re-anchor's batched full-N rebuild rides the same bit-exact kernel
+//!   path as every other evaluation);
+//! * the perf claim: post-re-anchor queries/iter drops strictly below the
+//!   mis-tuned (untuned) chain's and lands at the MAP-tuned chain's level.
+
+use std::sync::Arc;
+
+use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use firefly::diagnostics::TraceMatrix;
+use firefly::engine::experiment::build_model;
+use firefly::engine::{run_experiment, run_experiment_resume, ChainResult};
+use firefly::flymc::PseudoPosterior;
+use firefly::metrics::Counters;
+use firefly::models::{ModelBound, Prior};
+use firefly::runtime::{CpuBackend, XlaSource};
+use firefly::samplers::{RandomWalkMh, Sampler};
+use firefly::testing::posterior_check::check_against_reference;
+use firefly::util::Rng;
+
+/// Keep the first `k` components of a recorded trace (the Bonferroni
+/// battery stays small on the high-dimensional workloads).
+fn project(trace: &TraceMatrix, k: usize) -> TraceMatrix {
+    let k = k.min(trace.dim());
+    let mut out = TraceMatrix::with_capacity(k, trace.n_rows());
+    for row in trace.rows() {
+        out.push_row(&row[..k]);
+    }
+    out
+}
+
+fn workload_cfg(task: Task, algorithm: Algorithm) -> ExperimentConfig {
+    ExperimentConfig {
+        task,
+        algorithm,
+        n_data: Some(match task {
+            Task::SoftmaxCifar => 60,
+            _ => 300,
+        }),
+        iters: match task {
+            Task::SoftmaxCifar => 1_000,
+            _ => 4_000,
+        },
+        burnin: match task {
+            Task::SoftmaxCifar => 400,
+            _ => 1_500,
+        },
+        map_steps: 40,
+        chains: 1,
+        record_every: 0,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn assert_chain_identical(a: &ChainResult, b: &ChainResult, label: &str) {
+    assert_eq!(a.logpost_joint.len(), b.logpost_joint.len(), "{label}: lengths");
+    for (i, (x, y)) in a.logpost_joint.iter().zip(&b.logpost_joint).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: logpost differs at iter {i}");
+    }
+    assert_eq!(a.theta_trace.n_rows(), b.theta_trace.n_rows(), "{label}: trace rows");
+    for i in 0..a.theta_trace.n_rows() {
+        for (x, y) in a.theta_trace.row(i).iter().zip(b.theta_trace.row(i)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: θ trace differs at row {i}");
+        }
+    }
+    assert_eq!(a.bright, b.bright, "{label}: bright trajectories differ");
+    assert_eq!(a.queries_per_iter, b.queries_per_iter, "{label}: query accounting differs");
+    assert_eq!(a.accepted, b.accepted, "{label}: acceptance counts differ");
+    assert_eq!(a.final_counters, b.final_counters, "{label}: counter totals differ");
+    assert_eq!(a.stats.bright, b.stats.bright, "{label}: bright stats differ");
+    assert_eq!(a.stats.bright_pre, b.stats.bright_pre, "{label}: pre-re-anchor stats differ");
+    for (j, (x, y)) in a.stats.mean.iter().zip(&b.stats.mean).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: streaming mean differs at {j}");
+    }
+}
+
+#[test]
+fn reanchored_chains_clear_posterior_check_on_all_workloads() {
+    for task in [Task::LogisticMnist, Task::SoftmaxCifar, Task::RobustOpv] {
+        // long full-data reference chain, same experiment seed (same θ0)
+        let mut ref_cfg = workload_cfg(task, Algorithm::RegularMcmc);
+        ref_cfg.iters = match task {
+            Task::SoftmaxCifar => 2_400,
+            _ => 10_000,
+        };
+        let reference = run_experiment(&ref_cfg).unwrap();
+        let ref_trace = project(&reference.chains[0].theta_trace, 3);
+
+        let mut cfg = workload_cfg(task, Algorithm::MapTunedFlyMc);
+        cfg.reanchor = true; // restart at the running posterior mean at end of burn-in
+        cfg.adapt_q = true; // Robbins–Monro q-controller over the first burnin/2 iters
+        let res = run_experiment(&cfg).unwrap();
+        let trace = project(&res.chains[0].theta_trace, 3);
+        let report = check_against_reference(&trace, &ref_trace, 1e-4);
+        assert!(
+            report.passed(),
+            "{task:?}: re-anchored FlyMC flagged as biased vs the reference: {:?}",
+            report.failures()
+        );
+        // the pre/post split observed both regimes
+        let (min, mean, max, _) =
+            res.bright_pre_stats().expect("pre-re-anchor bright stats recorded");
+        assert!(min <= max && mean.is_finite(), "{task:?}: degenerate pre-re-anchor stats");
+    }
+}
+
+#[test]
+fn noop_reanchor_at_the_original_anchor_is_free_and_byte_identical() {
+    // MAP-tuned build: the model's bound anchor IS the returned MAP point,
+    // so re-anchoring there must hit the fast path — no model swap, no
+    // z-restart, no RNG use, no queries — and the trace downstream of the
+    // call must not move a byte.
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::MapTunedFlyMc,
+        n_data: Some(250),
+        map_steps: 40,
+        seed: 23,
+        ..Default::default()
+    };
+    let (source, prior, map, _) = build_model(&cfg).expect("build model");
+    let anchor = map.expect("MAP-tuned build returns the anchor point");
+    let model: Arc<dyn ModelBound> = source.as_model_bound();
+
+    let run = |noop_at: Option<usize>| -> Vec<u64> {
+        let counters = Counters::new();
+        let eval = Box::new(CpuBackend::new(model.clone(), counters.clone()));
+        let mut rng = Rng::new(77);
+        let theta0 = prior.sample(model.dim(), &mut rng);
+        let mut pp = PseudoPosterior::new(model.clone(), prior.clone(), eval, theta0.clone());
+        pp.init_z(&mut rng);
+        let mut mh = RandomWalkMh::new(0.05);
+        let mut theta = theta0;
+        let mut bits = Vec::new();
+        for it in 0..200 {
+            if noop_at == Some(it) {
+                let q0 = counters.lik_queries();
+                assert!(
+                    !pp.reanchor(&anchor, &mut rng),
+                    "re-anchoring at the current anchor must be a no-op"
+                );
+                assert_eq!(counters.lik_queries(), q0, "no-op re-anchor consumed queries");
+            }
+            mh.step(&mut pp, &mut theta, &mut rng);
+            pp.implicit_resample(0.05, &mut rng);
+            bits.extend(theta.iter().map(|v| v.to_bits()));
+        }
+        bits
+    };
+
+    assert_eq!(run(None), run(Some(80)), "no-op re-anchor perturbed the trace");
+}
+
+/// Uninterrupted re-anchored run vs killed-and-resumed, for one stop point.
+fn check_resume_across_boundary(stop_after: usize, label: &str) {
+    let base = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::MapTunedFlyMc,
+        n_data: Some(300),
+        iters: 100,
+        burnin: 30, // re-anchor fires at iter 30, q-adaptation freezes at 15
+        map_steps: 50,
+        chains: 1,
+        record_every: 13,
+        seed: 42,
+        reanchor: true,
+        adapt_q: true,
+        ..Default::default()
+    };
+    let reference = run_experiment(&base).expect("reference run");
+
+    let dir = std::env::temp_dir()
+        .join(format!("firefly_itra_{}_{label}", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut partial_cfg = base.clone();
+    partial_cfg.checkpoint_dir = Some(dir.clone());
+    partial_cfg.checkpoint_every = 10;
+    partial_cfg.stop_after = Some(stop_after);
+    run_experiment(&partial_cfg).expect("partial run");
+
+    let mut resume_cfg = base.clone();
+    resume_cfg.checkpoint_dir = Some(dir.clone());
+    resume_cfg.checkpoint_every = 10;
+    let resumed = run_experiment_resume(&resume_cfg, true).expect("resumed run");
+    assert_chain_identical(&reference.chains[0], &resumed.chains[0], label);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn resume_is_byte_identical_across_the_reanchor_boundary() {
+    // killed BEFORE the trigger: the restored Welford accumulator must feed
+    // the restart inside the resumed session
+    check_resume_across_boundary(20, "stop-before-boundary");
+    // killed AFTER the trigger: the applied restart (swapped model, frozen
+    // controller) must round-trip through the RANC section
+    check_resume_across_boundary(50, "stop-after-boundary");
+}
+
+#[test]
+fn reanchored_chain_byte_identical_cpu_vs_parcpu() {
+    let mut c_cpu = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::MapTunedFlyMc,
+        n_data: Some(300),
+        iters: 100,
+        burnin: 30,
+        map_steps: 50,
+        chains: 1,
+        record_every: 0,
+        seed: 42,
+        reanchor: true,
+        adapt_q: true,
+        ..Default::default()
+    };
+    c_cpu.backend = Backend::Cpu;
+    let mut c_par = c_cpu.clone();
+    c_par.backend = Backend::ParCpu;
+    c_par.threads = 4;
+    let cpu = run_experiment(&c_cpu).unwrap();
+    let par = run_experiment(&c_par).unwrap();
+    assert_chain_identical(&cpu.chains[0], &par.chains[0], "cpu-vs-parcpu");
+}
+
+#[test]
+fn reanchoring_repairs_a_mistuned_chain_to_map_tuned_cost() {
+    // The perf claim behind the whole feature: an untuned (mis-anchored)
+    // FlyMC chain pays a large bright set forever; re-anchoring at the
+    // running posterior mean at the end of burn-in collapses its
+    // steady-state cost to the MAP-tuned chain's level. The one-time full-N
+    // restart pass lands inside the post-burn-in window and is amortized by
+    // the comparison below.
+    let mk = |algorithm: Algorithm, reanchor: bool| {
+        let mut cfg = ExperimentConfig {
+            task: Task::LogisticMnist,
+            algorithm,
+            n_data: Some(400),
+            iters: 900,
+            burnin: 300,
+            map_steps: 60,
+            chains: 1,
+            record_every: 0,
+            seed: 17,
+            ..Default::default()
+        };
+        cfg.reanchor = reanchor;
+        cfg
+    };
+    let post_q = |cfg: &ExperimentConfig| {
+        let res = run_experiment(cfg).unwrap();
+        res.chains[0].avg_queries_post_burnin(cfg.burnin)
+    };
+
+    let untuned = post_q(&mk(Algorithm::UntunedFlyMc, false));
+    let untuned_ra = post_q(&mk(Algorithm::UntunedFlyMc, true));
+    let maptuned = post_q(&mk(Algorithm::MapTunedFlyMc, false));
+    let maptuned_ra = post_q(&mk(Algorithm::MapTunedFlyMc, true));
+
+    assert!(
+        untuned_ra < untuned,
+        "re-anchoring did not lower the mis-tuned chain's cost: \
+         {untuned_ra} vs {untuned} queries/iter"
+    );
+    assert!(
+        untuned_ra <= 1.1 * maptuned,
+        "re-anchored mis-tuned chain ({untuned_ra} queries/iter) did not reach \
+         the one-shot MAP-tuned level ({maptuned})"
+    );
+    assert!(
+        maptuned_ra <= 1.1 * maptuned,
+        "re-anchoring a well-tuned chain regressed its cost: \
+         {maptuned_ra} vs {maptuned} queries/iter"
+    );
+}
