@@ -1,0 +1,201 @@
+//! Distributed-backend macro-benchmark + serial-identity probe.
+//!
+//! Two jobs, mirroring the contract in DESIGN.md §Distribution:
+//!
+//! * **identity probe** — runs the same FlyMC chain through the serial CPU
+//!   backend and the distributed backend at 1, 2, and 4 in-process workers
+//!   and compares θ-traces, joint log-posteriors, acceptances, z-flips,
+//!   and per-iteration query counts byte-for-byte. The result lands in
+//!   `BENCH_dist.json` as `dist_identity` and the bench-gate fails on
+//!   anything but `true`.
+//! * **scaling point** — times the bright-set eval pattern through
+//!   `DistBackend` at each worker count, reporting secs/iter, queries/iter
+//!   (which must not vary with the worker count — the gate checks), and
+//!   wire bytes/iter from the transport's own `WireStats`.
+//!
+//!     cargo bench --bench dist             # full sizes
+//!     cargo bench --bench dist -- --smoke  # CI smoke mode
+//!
+//! The workers here are spawned in-process threads on loopback sockets —
+//! same wire protocol and reduction path as the multi-process deployment,
+//! so the identity probe covers the real coordinator code.
+
+use std::sync::Arc;
+
+use firefly::bench_harness::{fmt_time, Report};
+use firefly::cli::Args;
+use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use firefly::data::AnyData;
+use firefly::engine::{run_experiment, synth_dataset};
+use firefly::metrics::Counters;
+use firefly::models::{LogisticJJ, ModelBound};
+use firefly::runtime::{BatchEval, DistBackend, DistOptions};
+use firefly::util::{Rng, Timer};
+
+struct DistPoint {
+    workers: usize,
+    secs_per_iter: f64,
+    queries_per_iter: f64,
+    wire_bytes_per_iter: f64,
+}
+
+/// Bright-set-shaped eval loop through `DistBackend`. The batch sequence
+/// is seeded identically for every worker count, so queries/iter must come
+/// out bitwise equal — the gate holds us to that.
+fn bench_workers(workers: usize, n: usize, seed: u64, reps: usize) -> DistPoint {
+    let data = synth_dataset(Task::LogisticMnist, n, seed);
+    let model: Arc<dyn ModelBound> = match data {
+        AnyData::Logistic(dd) => Arc::new(LogisticJJ::new(Arc::new(dd), 1.5)),
+        _ => unreachable!(),
+    };
+    let counters = Counters::new();
+    let opts = DistOptions { workers, ..DistOptions::default() };
+    let mut dist = DistBackend::new(model.clone(), counters.clone(), &opts).expect("dist backend");
+    let theta = vec![0.1; model.dim()];
+    let mut rng = Rng::new(17);
+    let mut idx: Vec<u32> = (0..(n / 8).max(16)).map(|_| rng.below(n) as u32).collect();
+    let (mut ll, mut lb) = (Vec::new(), Vec::new());
+    dist.eval(&theta, &idx, &mut ll, &mut lb); // warm: connections + caches
+    counters.reset();
+    let base_sent = opts.wire.bytes_sent();
+    let base_recv = opts.wire.bytes_received();
+    let timer = Timer::start();
+    for rep in 0..reps {
+        if rep % 10 == 9 {
+            // brightness churn: re-draw a twentieth of the bright set
+            for v in idx.iter_mut().step_by(20) {
+                *v = rng.below(n) as u32;
+            }
+        }
+        dist.eval(&theta, &idx, &mut ll, &mut lb);
+        std::hint::black_box(&ll);
+    }
+    let secs = timer.elapsed_secs();
+    let wire_bytes =
+        (opts.wire.bytes_sent() - base_sent) + (opts.wire.bytes_received() - base_recv);
+    DistPoint {
+        workers,
+        secs_per_iter: secs / reps as f64,
+        queries_per_iter: counters.lik_queries() as f64 / reps as f64,
+        wire_bytes_per_iter: wire_bytes as f64 / reps as f64,
+    }
+}
+
+/// Full-engine probe: the distributed chain must be byte-identical to the
+/// serial CPU chain — θ-trace, logposts, acceptances, z-flips, queries.
+fn chain_identity(workers: usize, n: usize, iters: usize) -> bool {
+    let cfg = ExperimentConfig {
+        task: Task::LogisticMnist,
+        algorithm: Algorithm::MapTunedFlyMc,
+        n_data: Some(n),
+        iters,
+        burnin: iters / 4,
+        record_every: 0,
+        seed: 5,
+        ..Default::default()
+    };
+    let serial = run_experiment(&cfg).expect("serial run");
+    let dist_cfg =
+        ExperimentConfig { backend: Backend::Dist, dist_workers: workers, ..cfg.clone() };
+    let dist = run_experiment(&dist_cfg).expect("dist run");
+    let (s, d) = (&serial.chains[0], &dist.chains[0]);
+    let mut ok = true;
+    if s.queries_per_iter != d.queries_per_iter {
+        eprintln!("dist workers={workers}: queries_per_iter series diverged");
+        ok = false;
+    }
+    if (s.accepted, s.z_brightened, s.z_darkened) != (d.accepted, d.z_brightened, d.z_darkened)
+    {
+        eprintln!("dist workers={workers}: acceptance / z-flip totals diverged");
+        ok = false;
+    }
+    for (i, (x, y)) in s.logpost_joint.iter().zip(&d.logpost_joint).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            eprintln!("dist workers={workers}: logpost differs at iter {i}");
+            ok = false;
+            break;
+        }
+    }
+    for i in 0..s.theta_trace.n_rows() {
+        if s.theta_trace
+            .row(i)
+            .iter()
+            .zip(d.theta_trace.row(i))
+            .any(|(x, y)| x.to_bits() != y.to_bits())
+        {
+            eprintln!("dist workers={workers}: theta differs at trace row {i}");
+            ok = false;
+            break;
+        }
+    }
+    if ok {
+        println!(
+            "identity: serial vs {workers}-worker dist byte-identical over {iters} iterations"
+        );
+    }
+    ok
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.has("smoke");
+    let seed = args.get_u64("seed", 0);
+    let n = args.get_usize("n", if smoke { 2_000 } else { 20_000 });
+    let reps = if smoke { 60 } else { 400 };
+    let iters = if smoke { 120 } else { 400 };
+    println!("dist bench: logistic N={n}{}", if smoke { " (smoke)" } else { "" });
+
+    let worker_counts = [1usize, 2, 4];
+    let mut identity = true;
+    for &w in &worker_counts {
+        identity &= chain_identity(w, if smoke { 800 } else { 4_000 }, iters);
+    }
+
+    let mut report = Report::new(
+        "DistBackend eval cost (logistic, loopback workers)",
+        &["workers", "secs/iter", "queries/iter", "wire KiB/iter"],
+    );
+    let mut points = Vec::new();
+    for &w in &worker_counts {
+        let p = bench_workers(w, n, seed, reps);
+        report.row(&[
+            p.workers.to_string(),
+            fmt_time(p.secs_per_iter),
+            format!("{:.3}", p.queries_per_iter),
+            format!("{:.1}", p.wire_bytes_per_iter / 1024.0),
+        ]);
+        points.push(p);
+    }
+    report.print();
+
+    // queries/iter must be layout-independent; fail fast here too so the
+    // bench never writes a JSON the gate would have to catch
+    for p in &points[1..] {
+        assert_eq!(
+            p.queries_per_iter.to_bits(),
+            points[0].queries_per_iter.to_bits(),
+            "queries/iter varied with worker count"
+        );
+    }
+
+    // JSON trajectory point (no serde in the offline build).
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"dist\",\n");
+    json.push_str(&format!("  \"smoke\": {smoke},\n  \"n\": {n}, \"reps\": {reps},\n"));
+    json.push_str(&format!("  \"dist_identity\": {identity},\n  \"worker_counts\": [\n"));
+    for (i, p) in points.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workers\": {}, \"secs_per_iter\": {:.6e}, \"queries_per_iter\": {:.3}, \
+             \"wire_bytes_per_iter\": {:.1}}}{}\n",
+            p.workers,
+            p.secs_per_iter,
+            p.queries_per_iter,
+            p.wire_bytes_per_iter,
+            if i + 1 < points.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_dist.json", &json).expect("write BENCH_dist.json");
+    println!("wrote BENCH_dist.json");
+    assert!(identity, "distributed chains diverged from the serial cpu backend");
+}

@@ -120,6 +120,16 @@ impl Doc {
     }
 }
 
+/// Split a comma-separated `host:port` list (the `--connect` flag and the
+/// `[dist] connect` key), trimming whitespace and dropping empty items.
+pub fn parse_connect_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
 fn strip_comment(line: &str) -> &str {
     // '#' starts a comment unless inside a quoted string.
     let mut in_str = false;
@@ -274,6 +284,10 @@ pub enum Backend {
     Cpu,
     /// Sharded data-parallel CPU backend (bit-identical to `Cpu`).
     ParCpu,
+    /// Multi-process distributed backend over TCP shard workers
+    /// (bit-identical to `Cpu` at any worker count, DESIGN.md
+    /// §Distribution).
+    Dist,
     /// PJRT/XLA execution of the AOT artifacts (needs the `xla` feature).
     Xla,
 }
@@ -284,6 +298,7 @@ impl Backend {
         match s {
             "cpu" => Ok(Backend::Cpu),
             "parcpu" | "par_cpu" | "par" => Ok(Backend::ParCpu),
+            "dist" | "distributed" => Ok(Backend::Dist),
             "xla" => Ok(Backend::Xla),
             other => Err(format!("unknown backend {other:?}")),
         }
@@ -391,6 +406,23 @@ pub struct ExperimentConfig {
     pub sgld_cv: bool,
     /// per-decision error tolerance ε of austerity MH's sequential test
     pub austerity_eps: f64,
+    /// `dist` backend: spawn this many in-process localhost shard workers
+    /// (0 = connect to standalone `firefly worker` processes instead)
+    pub dist_workers: usize,
+    /// `dist` backend: worker addresses (`host:port`), one per shard in
+    /// ascending shard order; exclusive with `dist_workers`
+    pub dist_connect: Vec<String>,
+    /// `dist` backend: per-request I/O timeout in milliseconds (0 = block
+    /// forever). Execution-only — never fingerprinted.
+    pub dist_timeout_ms: u64,
+    /// `dist` backend: bounded retry attempts per request after a
+    /// transport failure (reconnect + re-handshake + resend)
+    pub dist_retries: u32,
+    /// `dist` backend: back-off between retry attempts, milliseconds
+    pub dist_retry_backoff_ms: u64,
+    /// `dist` backend: optional `.fshard` manifest to cross-check worker
+    /// placement and model shape against at startup
+    pub dist_manifest: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -429,6 +461,12 @@ impl Default for ExperimentConfig {
             sgld_step_gamma: 0.55,
             sgld_cv: false,
             austerity_eps: 0.05,
+            dist_workers: 0,
+            dist_connect: Vec::new(),
+            dist_timeout_ms: 5000,
+            dist_retries: 3,
+            dist_retry_backoff_ms: 200,
+            dist_manifest: None,
         }
     }
 }
@@ -502,6 +540,17 @@ impl ExperimentConfig {
         c.sgld_step_gamma = doc.f64_or("approx", "sgld_step_gamma", c.sgld_step_gamma);
         c.sgld_cv = doc.bool_or("approx", "sgld_cv", c.sgld_cv);
         c.austerity_eps = doc.f64_or("approx", "austerity_eps", c.austerity_eps);
+        c.dist_workers = doc.usize_or("dist", "workers", c.dist_workers);
+        if let Some(s) = doc.get("dist", "connect").and_then(|v| v.as_str()) {
+            c.dist_connect = parse_connect_list(s);
+        }
+        c.dist_timeout_ms = doc.usize_or("dist", "timeout_ms", c.dist_timeout_ms as usize) as u64;
+        c.dist_retries = doc.usize_or("dist", "retries", c.dist_retries as usize) as u32;
+        c.dist_retry_backoff_ms =
+            doc.usize_or("dist", "retry_backoff_ms", c.dist_retry_backoff_ms as usize) as u64;
+        if let Some(m) = doc.get("dist", "manifest").and_then(|v| v.as_str()) {
+            c.dist_manifest = Some(m.to_string());
+        }
         c.validate()?;
         Ok(c)
     }
@@ -645,6 +694,27 @@ impl ExperimentConfig {
         } else if self.adapt_window.is_some() {
             return Err("adapt_window is set but adapt_q is off".to_string());
         }
+        if self.backend == Backend::Dist {
+            let spawn = self.dist_workers > 0;
+            let connect = !self.dist_connect.is_empty();
+            if spawn == connect {
+                return Err(
+                    "the dist backend needs either dist.workers > 0 (spawn localhost \
+                     shard workers) or a non-empty dist.connect list (standalone \
+                     `firefly worker` processes), not both and not neither"
+                        .to_string(),
+                );
+            }
+            if self.dist_retries == 0 {
+                return Err(
+                    "dist.retries = 0 would abort the chain on the first dropped \
+                     packet; use at least 1"
+                        .to_string(),
+                );
+            }
+        } else if self.dist_manifest.is_some() {
+            return Err("dist.manifest is set but the backend is not dist".to_string());
+        }
         if self.algorithm.is_approximate() {
             if self.minibatch < 2 {
                 return Err(format!(
@@ -693,7 +763,10 @@ impl ExperimentConfig {
     /// §Checkpointing).
     pub fn fingerprint(&self) -> u64 {
         let backend_family = match self.backend {
-            Backend::Cpu | Backend::ParCpu => "cpu",
+            // dist joins the cpu family: shard-order reduction replays the
+            // serial fold bit-for-bit (DESIGN.md §Distribution), so a cpu
+            // checkpoint legitimately resumes under dist and vice versa
+            Backend::Cpu | Backend::ParCpu | Backend::Dist => "cpu",
             Backend::Xla => "xla",
         };
         let mut canon = format!(
@@ -1130,6 +1203,74 @@ mod tests {
             ..base.clone()
         };
         assert_ne!(aq2.fingerprint(), aq.fingerprint());
+    }
+
+    #[test]
+    fn dist_section_parses_and_is_validated() {
+        let c = ExperimentConfig::from_str_toml(
+            "[experiment]\nbackend = \"dist\"\n[dist]\nworkers = 4\ntimeout_ms = 900\n\
+             retries = 5\nretry_backoff_ms = 50",
+        )
+        .unwrap();
+        assert_eq!(c.backend, Backend::Dist);
+        assert_eq!(c.dist_workers, 4);
+        assert_eq!(c.dist_timeout_ms, 900);
+        assert_eq!(c.dist_retries, 5);
+        assert_eq!(c.dist_retry_backoff_ms, 50);
+
+        let c = ExperimentConfig::from_str_toml(
+            "[experiment]\nbackend = \"dist\"\n[dist]\n\
+             connect = \"h1:7001, h2:7002,h3:7003\"\nmanifest = \"data.fshard\"",
+        )
+        .unwrap();
+        assert_eq!(c.dist_connect, vec!["h1:7001", "h2:7002", "h3:7003"]);
+        assert_eq!(c.dist_manifest.as_deref(), Some("data.fshard"));
+
+        // spawn/connect are exclusive, and one of them is required
+        for toml in [
+            "[experiment]\nbackend = \"dist\"",
+            "[experiment]\nbackend = \"dist\"\n[dist]\nworkers = 2\nconnect = \"h:1\"",
+        ] {
+            let err = ExperimentConfig::from_str_toml(toml).expect_err(toml);
+            assert!(err.contains("dist"), "{err}");
+        }
+        // zero retries would abort on the first dropped packet
+        let err = ExperimentConfig::from_str_toml(
+            "[experiment]\nbackend = \"dist\"\n[dist]\nworkers = 2\nretries = 0",
+        )
+        .unwrap_err();
+        assert!(err.contains("retries"), "{err}");
+        // a manifest on a non-dist backend is a config mistake
+        let err =
+            ExperimentConfig::from_str_toml("[dist]\nmanifest = \"x.fshard\"").unwrap_err();
+        assert!(err.contains("manifest"), "{err}");
+        // dist knobs on a non-dist backend are otherwise inert
+        ExperimentConfig::from_str_toml("[dist]\nworkers = 4").unwrap();
+    }
+
+    #[test]
+    fn dist_shares_the_cpu_fingerprint_family() {
+        let base = ExperimentConfig::default();
+        let dist = ExperimentConfig {
+            backend: Backend::Dist,
+            dist_workers: 4,
+            dist_timeout_ms: 123,
+            dist_retries: 9,
+            dist_retry_backoff_ms: 7,
+            ..base.clone()
+        };
+        // execution topology never perturbs the fingerprint: a cpu chain's
+        // checkpoint resumes under dist (and at any worker count)
+        assert_eq!(dist.fingerprint(), base.fingerprint());
+        assert_eq!(Backend::parse("dist").unwrap(), Backend::Dist);
+        assert_eq!(Backend::parse("distributed").unwrap(), Backend::Dist);
+    }
+
+    #[test]
+    fn connect_list_splitting() {
+        assert_eq!(parse_connect_list("a:1,b:2"), vec!["a:1", "b:2"]);
+        assert_eq!(parse_connect_list(" a:1 , ,b:2, "), vec!["a:1", "b:2"]);
+        assert!(parse_connect_list("").is_empty());
     }
 
     #[test]

@@ -58,7 +58,8 @@ impl LabelKind {
         }
     }
 
-    fn from_u32(v: u32) -> Option<LabelKind> {
+    /// Decode the on-disk u32 tag (inverse of [`Self::as_u32`]).
+    pub fn from_u32(v: u32) -> Option<LabelKind> {
         match v {
             0 => Some(LabelKind::Binary),
             1 => Some(LabelKind::Class),
@@ -142,6 +143,7 @@ pub struct FbinWriter {
     kind: LabelKind,
     labels: Vec<f64>,
     max_class: u64,
+    forced_k: Option<u64>,
 }
 
 impl FbinWriter {
@@ -155,7 +157,28 @@ impl FbinWriter {
         let placeholder =
             FbinHeader { label_kind: kind, n: 0, d: d as u64, k: 1 };
         out.write_all(&encode_header(&placeholder))?;
-        Ok(FbinWriter { out, d, kind, labels: Vec::new(), max_class: 0 })
+        Ok(FbinWriter { out, d, kind, labels: Vec::new(), max_class: 0, forced_k: None })
+    }
+
+    /// Pin the class count written to the header instead of inferring
+    /// `max label + 1` from the rows. Required when writing a *subset* of
+    /// a class dataset (e.g. one shard of a K-way problem whose slice
+    /// happens not to contain every class): the softmax model's parameter
+    /// dimension is `K·D`, so a shard file with a deflated K would build a
+    /// model of the wrong shape. Rows pushed after this call must keep
+    /// their labels below `k`.
+    pub fn force_classes(&mut self, k: usize) -> io::Result<()> {
+        if self.kind != LabelKind::Class {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "force_classes only applies to class-labelled datasets",
+            ));
+        }
+        if k == 0 {
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "k must be positive"));
+        }
+        self.forced_k = Some(k as u64);
+        Ok(())
     }
 
     /// Append one data row. Labels are validated per kind: binary must be
@@ -184,6 +207,14 @@ impl FbinWriter {
             _ => {}
         }
         if self.kind == LabelKind::Class {
+            if let Some(k) = self.forced_k {
+                if label as u64 >= k {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidInput,
+                        format!("class label {label} out of range for forced k = {k}"),
+                    ));
+                }
+            }
             self.max_class = self.max_class.max(label as u64);
         }
         for v in features {
@@ -206,7 +237,11 @@ impl FbinWriter {
             label_kind: self.kind,
             n: self.labels.len() as u64,
             d: self.d as u64,
-            k: if self.kind == LabelKind::Class { self.max_class + 1 } else { 1 },
+            k: if self.kind == LabelKind::Class {
+                self.forced_k.unwrap_or(self.max_class + 1)
+            } else {
+                1
+            },
         };
         self.out.flush()?;
         let mut file = self.out.into_inner().map_err(|e| e.into_error())?;
@@ -442,6 +477,22 @@ mod tests {
         w.push_row(&[0.0, 0.0], 2.0).unwrap();
         let h = w.finish().unwrap();
         assert_eq!(h.k, 3);
+
+        // forced class count overrides the observed maximum (shard files)
+        let mut w = FbinWriter::create(&path, 2, LabelKind::Class).unwrap();
+        w.force_classes(5).unwrap();
+        assert!(w.push_row(&[0.0, 0.0], 5.0).is_err()); // >= forced k
+        w.push_row(&[0.0, 0.0], 1.0).unwrap();
+        let h = w.finish().unwrap();
+        assert_eq!(h.k, 5);
+        match open_fbin(&path, BlockCacheConfig::default()).unwrap() {
+            AnyData::Softmax(got) => assert_eq!(got.k, 5),
+            other => panic!("wrong kind: {}", other.kind_name()),
+        }
+
+        // force_classes is class-only
+        let mut w = FbinWriter::create(&path, 2, LabelKind::Target).unwrap();
+        assert!(w.force_classes(3).is_err());
 
         // empty dataset rejected at finish
         let w = FbinWriter::create(&path, 2, LabelKind::Target).unwrap();

@@ -18,6 +18,7 @@
 
 pub mod csv;
 pub mod fbin;
+pub mod shard;
 pub mod store;
 pub mod synth;
 

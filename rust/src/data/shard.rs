@@ -1,0 +1,412 @@
+//! Shard manifests: splitting one `.fbin` dataset across worker processes.
+//!
+//! `convert shard` splits a dataset into K contiguous-row `.fbin` shard
+//! files (ranges from [`crate::net::shard_ranges`] — the same function the
+//! in-process worker spawner and the coordinator's coverage check use, so
+//! the three can never disagree on row ownership) plus one `.fshard`
+//! manifest recording, per shard: the file name, its global `[start, end)`
+//! row range, and an FNV-1a checksum of the complete shard file bytes.
+//!
+//! The manifest is the integrity contract of a distributed run: a worker
+//! validates its own shard file's checksum and row count before serving,
+//! and the coordinator validates the manifest's source shape against its
+//! model and each worker's claimed placement against the manifest
+//! (DESIGN.md §Distribution). A stale or re-split shard therefore fails
+//! loudly at startup, never as a silently-wrong likelihood.
+//!
+//! Layout (little-endian, [`crate::util::codec`]):
+//!
+//! ```text
+//! magic   b"FFLYSHRD"
+//! u32     format version (currently 1)
+//! u32     label kind (same tag as .fbin)
+//! u64     N, D, K of the source dataset
+//! u64     shard count
+//! per shard: bytes file-name (relative to the manifest), u64 start,
+//!            u64 end, u64 fnv1a(shard file bytes)
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use super::fbin::{open_fbin, FbinWriter, LabelKind};
+use super::store::BlockCacheConfig;
+use super::AnyData;
+use crate::util::codec::{fnv1a_continue, ByteReader, ByteWriter, FNV1A_BASIS};
+
+/// The 8-byte magic prefix of every `.fshard` manifest.
+pub const SHARD_MAGIC: [u8; 8] = *b"FFLYSHRD";
+/// Current manifest format version.
+pub const SHARD_VERSION: u32 = 1;
+
+/// One shard's placement and integrity record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// shard file name, relative to the manifest's directory
+    pub file: String,
+    /// first global row owned (inclusive)
+    pub start: usize,
+    /// one past the last global row owned (exclusive)
+    pub end: usize,
+    /// FNV-1a hash of the complete shard file bytes
+    pub checksum: u64,
+}
+
+/// The manifest for one sharded dataset.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardManifest {
+    /// label kind of the source dataset (selects the model family)
+    pub kind: LabelKind,
+    /// global row count N of the source dataset
+    pub n: usize,
+    /// feature columns D
+    pub d: usize,
+    /// class count K (1 unless `kind` is class)
+    pub k: usize,
+    /// per-shard records, in ascending `start` order
+    pub shards: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    /// Structural validation: at least one shard, ranges sorted,
+    /// contiguous, and covering exactly `0..n`.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards.is_empty() {
+            return Err("manifest lists no shards".to_string());
+        }
+        if self.shards[0].start != 0 {
+            return Err(format!("first shard starts at {}, not 0", self.shards[0].start));
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.end < s.start {
+                return Err(format!("shard {i} has inverted range {}..{}", s.start, s.end));
+            }
+            if i + 1 < self.shards.len() && self.shards[i + 1].start != s.end {
+                return Err(format!(
+                    "shard {i} ends at {} but shard {} starts at {} — ranges must tile",
+                    s.end,
+                    i + 1,
+                    self.shards[i + 1].start
+                ));
+            }
+        }
+        let last = self.shards.last().unwrap();
+        if last.end != self.n {
+            return Err(format!("shards cover 0..{} but the source has {} rows", last.end, self.n));
+        }
+        Ok(())
+    }
+
+    /// Serialize to `path`.
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        let mut w = ByteWriter::new();
+        w.u32(SHARD_VERSION);
+        w.u32(self.kind.as_u32());
+        w.usize(self.n);
+        w.usize(self.d);
+        w.usize(self.k);
+        w.usize(self.shards.len());
+        for s in &self.shards {
+            w.bytes(s.file.as_bytes());
+            w.usize(s.start);
+            w.usize(s.end);
+            w.u64(s.checksum);
+        }
+        let mut out = Vec::with_capacity(8 + w.len());
+        out.extend_from_slice(&SHARD_MAGIC);
+        out.extend_from_slice(w.as_bytes());
+        std::fs::write(path, out).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Load and structurally validate a manifest.
+    pub fn load(path: &str) -> Result<ShardManifest, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("{path}: {e}"))?;
+        if bytes.len() < 8 || bytes[..8] != SHARD_MAGIC {
+            return Err(format!("{path}: not a shard manifest (bad magic)"));
+        }
+        let mut r = ByteReader::new(&bytes[8..]);
+        let inner = || -> Result<ShardManifest, String> {
+            let version = r.u32()?;
+            if version != SHARD_VERSION {
+                return Err(format!(
+                    "unsupported manifest version {version} (this build reads {SHARD_VERSION})"
+                ));
+            }
+            let kind_raw = r.u32()?;
+            let kind = LabelKind::from_u32(kind_raw)
+                .ok_or_else(|| format!("bad label-kind tag {kind_raw}"))?;
+            let n = r.usize()?;
+            let d = r.usize()?;
+            let k = r.usize()?;
+            let count = r.usize()?;
+            let mut shards = Vec::with_capacity(count.min(1 << 16));
+            for _ in 0..count {
+                let file = String::from_utf8(r.bytes()?.to_vec())
+                    .map_err(|_| "shard file name is not UTF-8".to_string())?;
+                let start = r.usize()?;
+                let end = r.usize()?;
+                let checksum = r.u64()?;
+                shards.push(ShardEntry { file, start, end, checksum });
+            }
+            r.finish()?;
+            Ok(ShardManifest { kind, n, d, k, shards })
+        };
+        let m = inner().map_err(|e| format!("{path}: {e}"))?;
+        m.validate().map_err(|e| format!("{path}: {e}"))?;
+        Ok(m)
+    }
+
+    /// Absolute-ish path of shard `i`'s file: entries are stored relative
+    /// to the manifest, so resolve against the manifest's directory.
+    pub fn shard_path(&self, manifest_path: &str, i: usize) -> String {
+        let dir = Path::new(manifest_path).parent().unwrap_or_else(|| Path::new("."));
+        dir.join(&self.shards[i].file).to_string_lossy().into_owned()
+    }
+}
+
+/// FNV-1a of a whole file, streamed in 64 KiB chunks (shard files are
+/// split precisely because they are large).
+pub fn checksum_file(path: &str) -> Result<u64, String> {
+    let file = File::open(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut r = BufReader::new(file);
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut h = FNV1A_BASIS;
+    loop {
+        let got = r.read(&mut buf).map_err(|e| format!("{path}: {e}"))?;
+        if got == 0 {
+            return Ok(h);
+        }
+        h = fnv1a_continue(h, &buf[..got]);
+    }
+}
+
+/// Open shard `i` of a manifest for serving: verifies the checksum and the
+/// row count against the manifest before handing the dataset back. This is
+/// the worker-side startup validation.
+pub fn open_shard(
+    manifest: &ShardManifest,
+    manifest_path: &str,
+    i: usize,
+    cache: BlockCacheConfig,
+) -> Result<AnyData, String> {
+    if i >= manifest.shards.len() {
+        return Err(format!(
+            "shard index {i} out of range: manifest lists {} shards",
+            manifest.shards.len()
+        ));
+    }
+    let entry = &manifest.shards[i];
+    let path = manifest.shard_path(manifest_path, i);
+    let got = checksum_file(&path)?;
+    if got != entry.checksum {
+        return Err(format!(
+            "{path}: checksum mismatch (file hashes to {got:#018x}, manifest says \
+             {:#018x}) — re-run `convert shard` or fetch the right shard",
+            entry.checksum
+        ));
+    }
+    let data = open_fbin(&path, cache)?;
+    if data.n() != entry.end - entry.start {
+        return Err(format!(
+            "{path}: holds {} rows, manifest range {}..{} implies {}",
+            data.n(),
+            entry.start,
+            entry.end,
+            entry.end - entry.start
+        ));
+    }
+    if data.d() != manifest.d {
+        return Err(format!("{path}: d = {} but the manifest says {}", data.d(), manifest.d));
+    }
+    Ok(data)
+}
+
+/// Split `src` (a `.fbin` dataset) into `k` contiguous shard files under
+/// `out_dir`, writing `<stem>.fshard` there and returning the manifest.
+/// Rows stream through the block cache one at a time — the source is never
+/// materialized. Class datasets propagate the global K into every shard
+/// header via [`FbinWriter::force_classes`].
+pub fn split_fbin(
+    src: &str,
+    out_dir: &str,
+    k: usize,
+    cache: BlockCacheConfig,
+) -> Result<(ShardManifest, String), String> {
+    if k == 0 {
+        return Err("shard count must be positive".to_string());
+    }
+    let data = open_fbin(src, cache)?;
+    let n = data.n();
+    if k > n {
+        return Err(format!("cannot split {n} rows into {k} shards (more shards than rows)"));
+    }
+    let stem = Path::new(src)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "data".to_string());
+    std::fs::create_dir_all(out_dir).map_err(|e| format!("{out_dir}: {e}"))?;
+
+    let (store, label_kind) = match &data {
+        AnyData::Logistic(d) => (&d.x, LabelKind::Binary),
+        AnyData::Softmax(d) => (&d.x, LabelKind::Class),
+        AnyData::Regression(d) => (&d.x, LabelKind::Target),
+    };
+    let classes = match &data {
+        AnyData::Softmax(d) => d.k,
+        _ => 1,
+    };
+    let mut cache_reader = store.new_cache();
+    let mut shards = Vec::with_capacity(k);
+    for (si, (start, end)) in crate::net::shard_ranges(n, k).into_iter().enumerate() {
+        let file = format!("{stem}.shard{si}.fbin");
+        let path = Path::new(out_dir).join(&file).to_string_lossy().into_owned();
+        let mut w = FbinWriter::create(&path, data.d(), label_kind)
+            .map_err(|e| format!("{path}: {e}"))?;
+        if label_kind == LabelKind::Class {
+            w.force_classes(classes).map_err(|e| format!("{path}: {e}"))?;
+        }
+        for i in start..end {
+            let label = match &data {
+                AnyData::Logistic(d) => d.t[i],
+                AnyData::Softmax(d) => d.labels[i] as f64,
+                AnyData::Regression(d) => d.y[i],
+            };
+            let row = store.row(i, &mut cache_reader);
+            w.push_row(row, label).map_err(|e| format!("{path}: row {i}: {e}"))?;
+        }
+        w.finish().map_err(|e| format!("{path}: {e}"))?;
+        let checksum = checksum_file(&path)?;
+        shards.push(ShardEntry { file, start, end, checksum });
+    }
+    let manifest = ShardManifest {
+        kind: label_kind,
+        n,
+        d: data.d(),
+        k: classes,
+        shards,
+    };
+    manifest.validate()?;
+    let manifest_path =
+        Path::new(out_dir).join(format!("{stem}.fshard")).to_string_lossy().into_owned();
+    manifest.save(&manifest_path)?;
+    Ok((manifest, manifest_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::fbin::write_fbin;
+    use crate::data::synth;
+
+    fn tmp_dir(name: &str) -> String {
+        let dir = std::env::temp_dir()
+            .join(format!("firefly_shard_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn split_and_reopen_all_shards_bitwise() {
+        let dir = tmp_dir("roundtrip");
+        let src = format!("{dir}/full.fbin");
+        let d = synth::synth_mnist(101, 6, 3);
+        write_fbin(&src, &AnyData::Logistic(d.clone())).unwrap();
+        let (manifest, mpath) =
+            split_fbin(&src, &dir, 4, BlockCacheConfig::default()).unwrap();
+        assert_eq!(manifest.n, 101);
+        assert_eq!(manifest.shards.len(), 4);
+        assert_eq!(manifest, ShardManifest::load(&mpath).unwrap());
+
+        let dense = d.x.as_dense().unwrap();
+        for (si, entry) in manifest.shards.iter().enumerate() {
+            let shard =
+                open_shard(&manifest, &mpath, si, BlockCacheConfig::default()).unwrap();
+            let AnyData::Logistic(got) = shard else { panic!("wrong kind") };
+            assert_eq!(got.t, d.t[entry.start..entry.end]);
+            let mut rc = got.x.new_cache();
+            for (local, global) in (entry.start..entry.end).enumerate() {
+                for (a, b) in got.x.row(local, &mut rc).iter().zip(dense.row(global)) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn class_shards_inherit_global_k() {
+        let dir = tmp_dir("classes");
+        let src = format!("{dir}/full.fbin");
+        // synth_cifar3 is 3-way; with enough shards some slice will miss a
+        // class, which must NOT deflate that shard's K
+        let d = synth::synth_cifar3(12, 4, 5);
+        write_fbin(&src, &AnyData::Softmax(d)).unwrap();
+        let (manifest, mpath) =
+            split_fbin(&src, &dir, 6, BlockCacheConfig::default()).unwrap();
+        assert_eq!(manifest.k, 3);
+        for si in 0..manifest.shards.len() {
+            let AnyData::Softmax(got) =
+                open_shard(&manifest, &mpath, si, BlockCacheConfig::default()).unwrap()
+            else {
+                panic!("wrong kind")
+            };
+            assert_eq!(got.k, 3, "shard {si} deflated K");
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn tampered_shard_is_rejected_by_checksum() {
+        let dir = tmp_dir("tamper");
+        let src = format!("{dir}/full.fbin");
+        write_fbin(&src, &AnyData::Regression(synth::synth_opv(40, 3, 9))).unwrap();
+        let (manifest, mpath) =
+            split_fbin(&src, &dir, 2, BlockCacheConfig::default()).unwrap();
+        let victim = manifest.shard_path(&mpath, 1);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let at = bytes.len() - 5;
+        bytes[at] ^= 0x01; // flip one label bit
+        std::fs::write(&victim, &bytes).unwrap();
+        let err =
+            open_shard(&manifest, &mpath, 1, BlockCacheConfig::default()).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // shard 0 is untouched and still opens
+        open_shard(&manifest, &mpath, 0, BlockCacheConfig::default()).unwrap();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn manifest_validation_rejects_bad_coverage() {
+        let entry = |start, end| ShardEntry {
+            file: format!("s{start}.fbin"),
+            start,
+            end,
+            checksum: 0,
+        };
+        let m = |shards| ShardManifest {
+            kind: LabelKind::Binary,
+            n: 10,
+            d: 2,
+            k: 1,
+            shards,
+        };
+        assert!(m(vec![]).validate().is_err());
+        assert!(m(vec![entry(1, 10)]).validate().is_err()); // hole at 0
+        assert!(m(vec![entry(0, 4), entry(5, 10)]).validate().is_err()); // gap
+        assert!(m(vec![entry(0, 6), entry(4, 10)]).validate().is_err()); // overlap
+        assert!(m(vec![entry(0, 9)]).validate().is_err()); // short
+        assert!(m(vec![entry(0, 5), entry(5, 10)]).validate().is_ok());
+    }
+
+    #[test]
+    fn streamed_checksum_matches_one_shot() {
+        let dir = tmp_dir("fnv");
+        let path = format!("{dir}/blob");
+        let bytes: Vec<u8> = (0..200_000u32).map(|i| (i * 31 % 251) as u8).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(checksum_file(&path).unwrap(), crate::util::codec::fnv1a(&bytes));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -414,6 +414,22 @@ impl DataStore {
         }
     }
 
+    /// Copy rows `start..end` into a resident [`DenseStore`] — the
+    /// shard-extraction primitive of `ModelBound::shard_model`. Feature
+    /// bits are copied verbatim (reads go through [`Self::row`], which is
+    /// bit-exact for both arms), so a shard model evaluates the same bits
+    /// as the full model on the same data points. Setup-time; allocates.
+    pub fn slice_rows(&self, start: usize, end: usize) -> DataStore {
+        assert!(start <= end && end <= self.n_rows(), "bad shard range {start}..{end}");
+        let d = self.d();
+        let mut cache = self.new_cache();
+        let mut data = Vec::with_capacity((end - start) * d);
+        for i in start..end {
+            data.extend_from_slice(self.row(i, &mut cache));
+        }
+        DataStore::dense(Matrix::from_vec(end - start, d, data))
+    }
+
     /// The resident matrix, when this store is dense (tests/benches).
     pub fn as_dense(&self) -> Option<&Matrix> {
         match self {

@@ -14,7 +14,7 @@ use crate::metrics::Counters;
 use crate::models::{
     IsoGaussian, Laplace, LogisticJJ, ModelBound, Prior, RobustT, SoftmaxBohning,
 };
-use crate::runtime::{make_backend, XlaSource};
+use crate::runtime::{make_backend, DistOptions, XlaSource};
 use crate::samplers::{AusterityMh, Mala, RandomWalkMh, Sampler, Sgld, SliceSampler};
 use crate::util::{Rng, Timer};
 
@@ -124,6 +124,25 @@ pub fn build_model(
     })
 }
 
+/// Distributed-backend topology options from the `[dist]` config section.
+/// The model constants (`untuned_xi`, the robust ν/σ) mirror
+/// [`build_model`] exactly: a shard worker rebuilding its model from shard
+/// data must land on the same bits the coordinator's full model holds.
+pub fn dist_options(cfg: &ExperimentConfig) -> DistOptions {
+    DistOptions {
+        workers: cfg.dist_workers,
+        connect: cfg.dist_connect.clone(),
+        timeout_ms: cfg.dist_timeout_ms,
+        retries: cfg.dist_retries,
+        retry_backoff_ms: cfg.dist_retry_backoff_ms,
+        manifest: cfg.dist_manifest.clone(),
+        untuned_xi: cfg.untuned_xi,
+        nu: 4.0,
+        sigma: 0.5,
+        ..DistOptions::default()
+    }
+}
+
 /// The paper's sampler per task, with the paper's target acceptance rates.
 pub fn build_sampler(task: Task) -> Box<dyn Sampler> {
     match task {
@@ -177,8 +196,14 @@ pub fn build_chain(
     // alone; concurrent replicas share rayon's global pool so the total
     // worker count stays bounded by the machine, not chains × threads.
     let shard_threads = if cfg.chains > 1 { 0 } else { cfg.threads };
-    let eval =
-        make_backend(model.clone(), cfg.backend, counters, &cfg.artifacts_dir, shard_threads)?;
+    let eval = make_backend(
+        model.clone(),
+        cfg.backend,
+        counters,
+        &cfg.artifacts_dir,
+        shard_threads,
+        &dist_options(cfg),
+    )?;
     let mut rng = Rng::new(chain_seed ^ 0x1217);
     let theta0 = prior.sample(model.dim(), &mut rng);
     let model_mb: Arc<dyn ModelBound> = model.as_model_bound();

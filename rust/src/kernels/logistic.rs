@@ -141,6 +141,91 @@ pub fn log_lik_grad_batch<P: LanePath>(
     }
 }
 
+/// Batch `log_both` + per-datum pseudo-gradient **product rows**: fills
+/// `ll`/`lb` exactly as [`pseudo_grad_batch`] does, but instead of folding
+/// each tile into `grad` it writes the raw single-multiply products
+/// `coeff_i · x_i[j]` into `rows_out[i * d + j]`. Coefficients come off
+/// the same gather/dot/coefficient pipeline, so every stored product has
+/// exactly the bits [`LanePath::acc_grad_tile`] would multiply — the shard
+/// workers' half of the distributed gradient contract; the coordinator's
+/// [`crate::kernels::fold_grad_rows`] replays the canonical fold over
+/// them (DESIGN.md §Distribution).
+// lint: zero-alloc
+pub fn pseudo_grad_rows<P: LanePath>(
+    m: &LogisticJJ,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    rows_out: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let d = theta.len();
+    debug_assert_eq!(rows_out.len(), idx.len() * d);
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let sv = m.data.t[n] * s[l];
+            let llv = log_sigmoid(sv);
+            let (a, b, c) = jj_coeffs(m.xi[n]);
+            let lbv = (a * sv * sv + b * sv + c).min(llv);
+            let dll = sigmoid(-sv);
+            let dlb = 2.0 * a * sv + b;
+            let coeff = bright_coeff(dll, dlb, lbv - llv) * m.data.t[n];
+            let row_out = &mut rows_out[(base + l) * d..(base + l + 1) * d];
+            for (j, o) in row_out.iter_mut().enumerate() {
+                *o = coeff * tile[j * W + l];
+            }
+            ll[base + l] = llv;
+            lb[base + l] = lbv;
+        }
+        base += chunk.len();
+    }
+}
+
+/// Batch `log_lik` + per-datum likelihood-gradient **product rows** (the
+/// `eval_lik_grad` companion of [`pseudo_grad_rows`]; same contract).
+// lint: zero-alloc
+pub fn log_lik_grad_rows<P: LanePath>(
+    m: &LogisticJJ,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    rows_out: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let d = theta.len();
+    debug_assert_eq!(rows_out.len(), idx.len() * d);
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let sv = m.data.t[n] * s[l];
+            let coeff = sigmoid(-sv) * m.data.t[n];
+            let row_out = &mut rows_out[(base + l) * d..(base + l + 1) * d];
+            for (j, o) in row_out.iter_mut().enumerate() {
+                *o = coeff * tile[j * W + l];
+            }
+            ll[base + l] = log_sigmoid(sv);
+        }
+        base += chunk.len();
+    }
+}
+
 /// Batch `log_lik` + likelihood gradient with **per-datum accumulation
 /// order**: values come off the shared tile through the canonical
 /// [`LanePath::dot_lanes`] contract (bit-identical to per-datum dots), but

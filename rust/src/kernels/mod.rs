@@ -109,6 +109,50 @@ pub fn tree8(p: &[f64; W]) -> f64 {
     ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]))
 }
 
+/// Fold per-datum gradient *product rows* into `grad` with the exact op
+/// sequence of the batch kernels' [`LanePath::acc_grad_tile`] folds.
+///
+/// `rows` is `m × dim` row-major: `rows[i * dim + c]` holds the raw
+/// single-multiply product `coeff_i · x_i[j]` (for softmax, component
+/// `c = kk·d + j` holds `coeff_{kk,i} · x_i[j]` — the kernels' class
+/// segments flatten to exactly this `kk`-major, `j`-minor order). The fold
+/// walks the rows in `W`-sized chunks — the same chunk boundaries
+/// `idx.chunks(W)` gives the batch kernels — and adds one [`tree8`] per
+/// gradient component per chunk, with literal `+0.0` products for the dead
+/// lanes of a partial final chunk (bit-identical to the kernels'
+/// zero-padded tiles: zeroed coefficients × zeroed features).
+///
+/// Because each product is a single IEEE multiply of
+/// composition-invariant inputs (per-lane dots equal the canonical
+/// [`dot`]; features are gathered bits), rows computed *anywhere* — by a
+/// shard worker tiling only its own sub-batch, in another process — fold
+/// here to the same bits as [`LanePath::acc_grad_tile`] over the full
+/// batch. This is the reduction that keeps the distributed backend's
+/// gradients byte-identical to `CpuBackend` at any worker count
+/// (DESIGN.md §Distribution). firefly-lint's `float-reduce-order` treats
+/// reductions routed through this helper as ordered.
+// lint: zero-alloc
+pub fn fold_grad_rows(rows: &[f64], dim: usize, grad: &mut [f64]) {
+    debug_assert_eq!(grad.len(), dim);
+    if dim == 0 {
+        return;
+    }
+    debug_assert_eq!(rows.len() % dim, 0);
+    let m = rows.len() / dim;
+    let mut start = 0;
+    while start < m {
+        let live = (m - start).min(W);
+        for (c, g) in grad.iter_mut().enumerate() {
+            let mut p = [0.0; W];
+            for (l, pl) in p.iter_mut().enumerate().take(live) {
+                *pl = rows[(start + l) * dim + c];
+            }
+            *g += tree8(&p);
+        }
+        start += live;
+    }
+}
+
 /// One implementation of the lane-level primitives every batch kernel is
 /// generic over. Implementations must follow the canonical association
 /// trees documented on [`dot`] and [`tree8`] exactly — the module-level
@@ -370,6 +414,49 @@ mod tests {
                 assert_eq!(g_tile[j].to_bits(), g_axpy[j].to_bits(), "d={d} j={j}");
             }
         }
+    }
+
+    #[test]
+    fn fold_grad_rows_replays_acc_grad_tile_bits() {
+        // Rows carrying the raw per-lane products of each tile must fold to
+        // the same bits as acc_grad_tile over the tiles — including a
+        // partial final chunk (dead lanes = literal +0.0 vs the kernels'
+        // zero-padded 0.0 * 0.0 products).
+        let mut r = Rng::new(41);
+        for (m, d) in [(1usize, 5usize), (7, 3), (8, 4), (19, 6), (24, 1)] {
+            let mut rows = vec![0.0; m * d];
+            let mut expect = vec![0.0; d];
+            let mut i = 0;
+            while i < m {
+                let live = (m - i).min(W);
+                let mut tile = vec![0.0; d * W];
+                let mut coeff = [0.0; W];
+                for l in 0..live {
+                    coeff[l] = r.normal();
+                    for j in 0..d {
+                        tile[j * W + l] = r.normal();
+                    }
+                }
+                // the raw products, as a worker would ship them
+                for l in 0..live {
+                    for j in 0..d {
+                        rows[(i + l) * d + j] = coeff[l] * tile[j * W + l];
+                    }
+                }
+                FastPath::acc_grad_tile(&coeff, &tile, &mut expect);
+                i += live;
+            }
+            let mut got = vec![0.0; d];
+            fold_grad_rows(&rows, d, &mut got);
+            for j in 0..d {
+                assert_eq!(got[j].to_bits(), expect[j].to_bits(), "m={m} d={d} j={j}");
+            }
+        }
+        // empty batch and dim-0 are no-ops
+        let mut g = vec![1.25; 3];
+        fold_grad_rows(&[], 3, &mut g);
+        assert_eq!(g, vec![1.25; 3]);
+        fold_grad_rows(&[], 0, &mut []);
     }
 
     #[test]

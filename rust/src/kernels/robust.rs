@@ -145,6 +145,90 @@ pub fn log_lik_grad_batch<P: LanePath>(
     }
 }
 
+/// Batch `log_both` + per-datum pseudo-gradient **product rows** (see the
+/// logistic kernel's `pseudo_grad_rows` for the distributed-gradient
+/// contract). The per-lane negation of the bright coefficient folds into
+/// the stored coefficient exactly as in [`pseudo_grad_batch`], so each
+/// product has the bits [`LanePath::acc_grad_tile`] would multiply.
+// lint: zero-alloc
+pub fn pseudo_grad_rows<P: LanePath>(
+    m: &RobustT,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    rows_out: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let d = theta.len();
+    debug_assert_eq!(rows_out.len(), idx.len() * d);
+    let c2 = m.c2();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let r = m.data.y[n] - s[l];
+            let u = r * r;
+            let llv = m.logc - (m.nu + 1.0) / 2.0 * (u / c2).ln_1p();
+            let (f0, fp0) = m.tangent(m.u0[n]);
+            let lbv = (f0 + fp0 * (u - m.u0[n])).min(llv);
+            let dll = -(m.nu + 1.0) * r / (c2 + u);
+            let dlb = 2.0 * fp0 * r;
+            let coeff = -bright_coeff(dll, dlb, lbv - llv);
+            let row_out = &mut rows_out[(base + l) * d..(base + l + 1) * d];
+            for (j, o) in row_out.iter_mut().enumerate() {
+                *o = coeff * tile[j * W + l];
+            }
+            ll[base + l] = llv;
+            lb[base + l] = lbv;
+        }
+        base += chunk.len();
+    }
+}
+
+/// Batch `log_lik` + per-datum likelihood-gradient **product rows** (the
+/// `eval_lik_grad` companion of [`pseudo_grad_rows`]; same contract).
+// lint: zero-alloc
+pub fn log_lik_grad_rows<P: LanePath>(
+    m: &RobustT,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    rows_out: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let d = theta.len();
+    debug_assert_eq!(rows_out.len(), idx.len() * d);
+    let c2 = m.c2();
+    let EvalScratch { rows, tile, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let mut s = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        P::dot_lanes(theta, tile, &mut s);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let r = m.data.y[n] - s[l];
+            let coeff = (m.nu + 1.0) * r / (c2 + r * r);
+            let row_out = &mut rows_out[(base + l) * d..(base + l + 1) * d];
+            for (j, o) in row_out.iter_mut().enumerate() {
+                *o = coeff * tile[j * W + l];
+            }
+            ll[base + l] = m.logc - (m.nu + 1.0) / 2.0 * (r * r / c2).ln_1p();
+        }
+        base += chunk.len();
+    }
+}
+
 /// Batch `log_lik` + likelihood gradient with **per-datum accumulation
 /// order** — bit-identical to repeated per-datum `log_lik_grad_acc` /
 /// `log_lik` calls over `idx` in order (see the logistic kernel's

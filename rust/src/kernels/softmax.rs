@@ -182,6 +182,119 @@ pub fn log_lik_grad_batch<P: LanePath>(
     }
 }
 
+/// Batch `log_both` + per-datum pseudo-gradient **product rows** into
+/// `rows_out[i * (K·D) + kk·d + j] = coeff_{kk,i} · x_i[j]` — the kernels'
+/// per-tile class segments flatten to exactly this `kk`-major, `j`-minor
+/// order, which is the flat component order [`pseudo_grad_batch`]'s
+/// `acc_grad_tile` calls write the `[K, D]` gradient in. Coefficients come
+/// off the same gather/logits/bound pipeline, so each stored product has
+/// the bits the fold would multiply; the coordinator's
+/// [`crate::kernels::fold_grad_rows`] replays the canonical reduction
+/// (DESIGN.md §Distribution).
+// lint: zero-alloc
+pub fn pseudo_grad_rows<P: LanePath>(
+    m: &SoftmaxBohning,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    lb: &mut [f64],
+    rows_out: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    debug_assert_eq!(lb.len(), idx.len());
+    let k = m.k;
+    let d = m.data.d();
+    let dim = k * d;
+    debug_assert_eq!(rows_out.len(), idx.len() * dim);
+    let EvalScratch { rows, tile, lane_eta, lane_dlb, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let lane_eta = &mut lane_eta[..k * W];
+    let lane_dlb = &mut lane_dlb[..k * W];
+    let mut lse = [0.0; W];
+    let mut ed = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        logits_tile::<P>(theta, k, tile, lane_eta);
+        for (l, &n) in chunk.iter().enumerate() {
+            let n = n as usize;
+            let eta = &lane_eta[l * k..(l + 1) * k];
+            let lse_l = logsumexp(eta);
+            let llv = eta[m.data.labels[n]] - lse_l;
+            let lbv = m
+                .log_bound_and_deta(eta, n, Some(&mut lane_dlb[l * k..(l + 1) * k]))
+                .min(llv);
+            lse[l] = lse_l;
+            ed[l] = (lbv - llv).min(-1e-12).exp();
+            ll[base + l] = llv;
+            lb[base + l] = lbv;
+        }
+        for kk in 0..k {
+            for (l, &n) in chunk.iter().enumerate() {
+                let n = n as usize;
+                let dll = (if kk == m.data.labels[n] { 1.0 } else { 0.0 })
+                    - (lane_eta[l * k + kk] - lse[l]).exp();
+                let dlb = lane_dlb[l * k + kk];
+                let coeff = (dll - ed[l] * dlb) / (1.0 - ed[l]) - dlb;
+                let seg = &mut rows_out
+                    [(base + l) * dim + kk * d..(base + l) * dim + (kk + 1) * d];
+                for (j, o) in seg.iter_mut().enumerate() {
+                    *o = coeff * tile[j * W + l];
+                }
+            }
+        }
+        base += chunk.len();
+    }
+}
+
+/// Batch `log_lik` + per-datum likelihood-gradient **product rows** (the
+/// `eval_lik_grad` companion of [`pseudo_grad_rows`]; same contract and
+/// `kk`-major, `j`-minor component order).
+// lint: zero-alloc
+pub fn log_lik_grad_rows<P: LanePath>(
+    m: &SoftmaxBohning,
+    theta: &[f64],
+    idx: &[u32],
+    ll: &mut [f64],
+    rows_out: &mut [f64],
+    scratch: &mut EvalScratch,
+) {
+    debug_assert_eq!(ll.len(), idx.len());
+    let k = m.k;
+    let d = m.data.d();
+    let dim = k * d;
+    debug_assert_eq!(rows_out.len(), idx.len() * dim);
+    let EvalScratch { rows, tile, lane_eta, .. } = scratch;
+    let tile = &mut tile[..d * W];
+    let lane_eta = &mut lane_eta[..k * W];
+    let mut lse = [0.0; W];
+    let mut base = 0;
+    for chunk in idx.chunks(W) {
+        m.data.x.gather_tile(chunk, rows, tile);
+        logits_tile::<P>(theta, k, tile, lane_eta);
+        for (l, &n) in chunk.iter().enumerate() {
+            let eta = &lane_eta[l * k..(l + 1) * k];
+            let lse_l = logsumexp(eta);
+            lse[l] = lse_l;
+            ll[base + l] = eta[m.data.labels[n as usize]] - lse_l;
+        }
+        for kk in 0..k {
+            for (l, &n) in chunk.iter().enumerate() {
+                let n = n as usize;
+                let coeff = (if kk == m.data.labels[n] { 1.0 } else { 0.0 })
+                    - (lane_eta[l * k + kk] - lse[l]).exp();
+                let seg = &mut rows_out
+                    [(base + l) * dim + kk * d..(base + l) * dim + (kk + 1) * d];
+                for (j, o) in seg.iter_mut().enumerate() {
+                    *o = coeff * tile[j * W + l];
+                }
+            }
+        }
+        base += chunk.len();
+    }
+}
+
 /// Batch `log_lik` + likelihood gradient with **per-datum accumulation
 /// order**: lanes are drained in index order, and within each datum the
 /// classes are walked class-outer exactly as the per-datum

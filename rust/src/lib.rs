@@ -44,6 +44,17 @@
 //! to the never-interrupted run (DESIGN.md §Checkpointing; CLI
 //! `--checkpoint-every` / `--checkpoint-dir` / `resume`).
 //!
+//! Chains also scale **out**: [`runtime::DistBackend`] implements the same
+//! [`runtime::BatchEval`] contract over multi-process shard workers
+//! ([`net`], pure-`std` TCP; `firefly worker` + `convert shard` on the
+//! CLI, or in-process with `--backend dist --workers K`). Per-datum
+//! results scatter back into request order and gradient rows re-fold
+//! through the canonical kernel tree on the coordinator, so θ-traces,
+//! acceptances, z-flips and query counters are **byte-identical to the
+//! serial backend at any worker count** — including across worker crashes,
+//! thanks to bounded retry/reconnect against stateless re-handshaking
+//! workers (DESIGN.md §Distribution).
+//!
 //! Beyond the exact samplers, the crate ships the *approximate* tall-data
 //! competitors the paper's exactness claim is measured against —
 //! [`samplers::Sgld`] and [`samplers::AusterityMh`], driven through the
@@ -96,6 +107,7 @@ pub mod linalg;
 pub mod map_estimate;
 pub mod metrics;
 pub mod models;
+pub mod net;
 pub mod runtime;
 pub mod samplers;
 pub mod testing;

@@ -7,7 +7,9 @@
 //!   table1     — run all three algorithms for a task, print the Table-1 rows
 //!   map        — run the MAP estimation alone, print the objective
 //!   convert    — write a CSV file or a synthetic workload as a `.fbin`
-//!                out-of-core dataset
+//!                out-of-core dataset; `convert shard` splits a `.fbin`
+//!                into K shard files + a `.fshard` manifest
+//!   worker     — serve one dataset shard to a `--backend dist` coordinator
 //!   artifacts  — list the XLA artifacts the runtime can see
 //!
 //! Examples:
@@ -20,6 +22,11 @@
 //!       --checkpoint-dir ckpt
 //!   firefly resume --task mnist --iters 1000000 --checkpoint-every 10000 \
 //!       --checkpoint-dir ckpt
+//!   firefly run --task mnist --backend dist --workers 4
+//!   firefly convert shard --src mnist.fbin --shards 2 --out-dir shards
+//!   firefly worker --manifest shards/mnist.fshard --index 0 --listen 0.0.0.0:7001
+//!   firefly run --task mnist --backend dist --connect h1:7001,h2:7002 \
+//!       --dist-manifest shards/mnist.fshard
 
 use firefly::bench_harness::Report;
 use firefly::cli::Args;
@@ -30,14 +37,16 @@ use firefly::runtime::Manifest;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: firefly <run|resume|table1|map|convert|artifacts> [flags]
+        "usage: firefly <run|resume|table1|map|convert|worker|artifacts> [flags]
   common flags:
     --task mnist|cifar|opv|toy     workload (default mnist)
     --algo flymc|full|sgld|austerity  algorithm, incl. the approximate
                                    competitors (--algorithm regular|untuned|
                                    map spells the exact ones; default map)
-    --backend cpu|parcpu|xla       likelihood backend (default cpu;
-                                   parcpu shards batches across threads)
+    --backend cpu|parcpu|dist|xla  likelihood backend (default cpu; parcpu
+                                   shards batches across threads; dist shards
+                                   them across worker processes, bit-identical
+                                   to cpu — see DESIGN.md §Distribution)
     --n <int>                      dataset size (default: paper scale)
     --iters / --burnin <int>
     --chains <int>                 replica chains, run concurrently on the
@@ -86,13 +95,37 @@ fn usage() -> ! {
                                    MAP point (computed during setup)
     --austerity-eps <float>        sequential-test error tolerance per
                                    austerity MH decision (default 0.05)
+  dist-backend flags (--backend dist):
+    --workers <int>                spawn this many in-process localhost shard
+                                   workers (exclusive with --connect)
+    --connect <host:port,...>      standalone `firefly worker` addresses, one
+                                   per shard in ascending shard order
+    --dist-timeout-ms <int>        per-request I/O timeout (default 5000;
+                                   0 = block forever)
+    --dist-retries <int>           bounded reconnect/resend attempts per
+                                   request (default 3)
+    --dist-backoff-ms <int>        sleep between retry attempts (default 200)
+    --dist-manifest <file.fshard>  cross-check worker placement against this
+                                   shard manifest at startup
   convert flags:
     --out <file.fbin>              output path (required)
     --csv <file.csv>               convert a CSV file (streamed row by row)
     --kind logistic|softmax|regression  CSV label kind (default logistic)
     --no-bias                      do not append a bias column to CSV rows
     --task/--n/--seed              without --csv: write the task's synthetic
-                                   workload (paper-scale N by default)"
+                                   workload (paper-scale N by default)
+  convert shard flags (split a .fbin for `firefly worker` processes):
+    --src <file.fbin>              dataset to split (required; streamed)
+    --shards <int>                 shard count K (required)
+    --out-dir <dir>                output directory (default: alongside --src)
+    --cache-rows <int>             reader block-cache budget while splitting
+  worker flags (serve one shard to a --backend dist coordinator):
+    --manifest <file.fshard>       shard manifest (required)
+    --index <int>                  which shard of the manifest to own (required)
+    --listen <host:port>           bind address (default 127.0.0.1:0, prints
+                                   the bound port); blocks until a coordinator
+                                   sends shutdown
+    --cache-rows <int>             block-cache budget in rows for the shard"
     );
     std::process::exit(2);
 }
@@ -169,12 +202,106 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, String> {
         cfg.sgld_cv = true;
     }
     cfg.austerity_eps = args.get_f64("austerity-eps", cfg.austerity_eps);
+    // dist-backend topology ([dist] section equivalents)
+    cfg.dist_workers = args.get_usize("workers", cfg.dist_workers);
+    if let Some(list) = args.get("connect") {
+        cfg.dist_connect = firefly::configx::parse_connect_list(list);
+    }
+    cfg.dist_timeout_ms = args.get_u64("dist-timeout-ms", cfg.dist_timeout_ms);
+    cfg.dist_retries = args.get_usize("dist-retries", cfg.dist_retries as usize) as u32;
+    cfg.dist_retry_backoff_ms = args.get_u64("dist-backoff-ms", cfg.dist_retry_backoff_ms);
+    if let Some(m) = args.get("dist-manifest") {
+        cfg.dist_manifest = Some(m.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
+/// `firefly convert shard`: split a `.fbin` into K shard files plus a
+/// `.fshard` manifest for `firefly worker` processes (streamed row by row,
+/// so the source may be larger than RAM).
+fn run_convert_shard(args: &Args) -> Result<(), String> {
+    let src = args
+        .get("src")
+        .ok_or_else(|| "convert shard requires --src <file.fbin>".to_string())?;
+    let k = args.get_usize("shards", 0);
+    if k == 0 {
+        return Err("convert shard requires --shards <K> (K > 0)".to_string());
+    }
+    let out_dir = match args.get("out-dir") {
+        Some(d) => d.to_string(),
+        None => std::path::Path::new(src)
+            .parent()
+            .unwrap_or_else(|| std::path::Path::new("."))
+            .to_string_lossy()
+            .into_owned(),
+    };
+    let cache = firefly::data::store::BlockCacheConfig::with_budget(
+        args.get_usize("cache-rows", 0),
+    );
+    let (manifest, manifest_path) = firefly::data::shard::split_fbin(src, &out_dir, k, cache)?;
+    println!(
+        "wrote {manifest_path}: kind={} N={} D={}{} across {} shards",
+        manifest.kind.name(),
+        manifest.n,
+        manifest.d,
+        if manifest.kind == LabelKind::Class {
+            format!(" K={}", manifest.k)
+        } else {
+            String::new()
+        },
+        manifest.shards.len()
+    );
+    for (i, s) in manifest.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: {} rows {}..{} checksum {:#018x}",
+            s.file, s.start, s.end, s.checksum
+        );
+    }
+    Ok(())
+}
+
+/// `firefly worker`: validate and serve one manifest shard to a
+/// `--backend dist` coordinator, blocking until a shutdown request.
+fn run_worker(args: &Args) -> Result<(), String> {
+    let manifest_path = args
+        .get("manifest")
+        .ok_or_else(|| "worker requires --manifest <file.fshard>".to_string())?;
+    let index = args
+        .get("index")
+        .ok_or_else(|| "worker requires --index <shard number>".to_string())?
+        .parse::<usize>()
+        .map_err(|_| "bad --index".to_string())?;
+    let listen = args.get_str("listen", "127.0.0.1:0");
+    let manifest = firefly::data::shard::ShardManifest::load(manifest_path)?;
+    let cache = firefly::data::store::BlockCacheConfig::with_budget(
+        args.get_usize("cache-rows", 0),
+    );
+    // checksum + shape validation happens here, before any coordinator
+    // connects — a corrupted or mis-assigned shard never serves a byte
+    let data = firefly::data::shard::open_shard(&manifest, manifest_path, index, cache)?;
+    let entry = &manifest.shards[index];
+    let state = firefly::net::WorkerState::from_data(data, entry.start, entry.end, manifest.n);
+    let listener = std::net::TcpListener::bind(&listen).map_err(|e| format!("{listen}: {e}"))?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    println!(
+        "worker {index}: serving rows {}..{} of {} ({} kind) on {addr}",
+        entry.start,
+        entry.end,
+        manifest.n,
+        manifest.kind.name()
+    );
+    let ctl = firefly::net::ServeControl::new();
+    firefly::net::serve(&listener, state, &ctl, None).map_err(|e| e.to_string())?;
+    println!("worker {index}: shutdown requested, exiting");
+    Ok(())
+}
+
 /// `firefly convert`: CSV or synthetic workload → `.fbin`.
 fn run_convert(args: &Args) -> Result<(), String> {
+    if args.positional.first().map(String::as_str) == Some("shard") {
+        return run_convert_shard(args);
+    }
     let out = args
         .get("out")
         .ok_or_else(|| "convert requires --out <file.fbin>".to_string())?
@@ -338,6 +465,12 @@ fn main() {
         "convert" => {
             if let Err(e) = run_convert(&args) {
                 eprintln!("convert error: {e}");
+                std::process::exit(1)
+            }
+        }
+        "worker" => {
+            if let Err(e) = run_worker(&args) {
+                eprintln!("worker error: {e}");
                 std::process::exit(1)
             }
         }

@@ -166,6 +166,83 @@ impl Counters {
     }
 }
 
+/// Transport-layer tallies for the distributed backend: wire traffic and
+/// the retry/reconnect failure path (`runtime::DistBackend`).
+///
+/// Deliberately a separate struct, **outside** both [`CounterTotals`]
+/// (whose `.fckpt` byte layout is a fixed 7 × u64 contract shared by every
+/// backend family) and [`CounterSnapshot`] (the cross-backend
+/// counter-equality contract): wire traffic is execution topology, not
+/// statistical cost — a dist chain must report the *same* likelihood-query
+/// counters as the serial chain while these cells differ per worker count.
+/// Clones share cells, like [`Counters`].
+#[derive(Clone, Debug, Default)]
+pub struct WireStats {
+    inner: Arc<WireCells>,
+}
+
+#[derive(Debug, Default)]
+struct WireCells {
+    bytes_sent: AtomicU64,
+    bytes_received: AtomicU64,
+    requests: AtomicU64,
+    retries: AtomicU64,
+    reconnects: AtomicU64,
+}
+
+impl WireStats {
+    /// Fresh zeroed stats (clones share the same cells).
+    pub fn new() -> Self {
+        Self::default()
+    }
+    /// Count `n` bytes put on the wire (frame overhead included).
+    #[inline]
+    pub fn add_sent(&self, n: u64) {
+        self.inner.bytes_sent.fetch_add(n, Relaxed);
+    }
+    /// Count `n` bytes taken off the wire (frame overhead included).
+    #[inline]
+    pub fn add_received(&self, n: u64) {
+        self.inner.bytes_received.fetch_add(n, Relaxed);
+    }
+    /// Count one coordinator→worker request (retries of the same request
+    /// count again here but never in the likelihood-query counters).
+    #[inline]
+    pub fn add_request(&self) {
+        self.inner.requests.fetch_add(1, Relaxed);
+    }
+    /// Count one retry attempt after a transport failure.
+    #[inline]
+    pub fn add_retry(&self) {
+        self.inner.retries.fetch_add(1, Relaxed);
+    }
+    /// Count one reconnect (fresh TCP connection + re-handshake).
+    #[inline]
+    pub fn add_reconnect(&self) {
+        self.inner.reconnects.fetch_add(1, Relaxed);
+    }
+    /// Total bytes sent so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent.load(Relaxed)
+    }
+    /// Total bytes received so far.
+    pub fn bytes_received(&self) -> u64 {
+        self.inner.bytes_received.load(Relaxed)
+    }
+    /// Total requests sent so far (including retried sends).
+    pub fn requests(&self) -> u64 {
+        self.inner.requests.load(Relaxed)
+    }
+    /// Total retry attempts so far.
+    pub fn retries(&self) -> u64 {
+        self.inner.retries.load(Relaxed)
+    }
+    /// Total reconnects so far.
+    pub fn reconnects(&self) -> u64 {
+        self.inner.reconnects.load(Relaxed)
+    }
+}
+
 /// Complete point-in-time totals of every counter cell — the checkpointable
 /// superset of [`CounterSnapshot`] (see [`Counters::totals`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -395,6 +472,30 @@ mod tests {
         });
         assert_eq!(c.lik_queries(), 4000);
         assert_eq!(c.bound_queries(), 8000);
+    }
+
+    #[test]
+    fn wire_stats_are_shared_and_outside_the_counter_contract() {
+        let w = WireStats::new();
+        let w2 = w.clone();
+        w2.add_sent(100);
+        w2.add_received(240);
+        w2.add_request();
+        w2.add_request();
+        w2.add_retry();
+        w2.add_reconnect();
+        assert_eq!(w.bytes_sent(), 100);
+        assert_eq!(w.bytes_received(), 240);
+        assert_eq!(w.requests(), 2);
+        assert_eq!(w.retries(), 1);
+        assert_eq!(w.reconnects(), 1);
+        // wire traffic must not perturb the query-counter equality contract
+        let c = Counters::new();
+        let snap = c.snapshot();
+        let totals = c.totals();
+        w.add_sent(1);
+        assert_eq!(snap, c.snapshot());
+        assert_eq!(totals, c.totals());
     }
 
     #[test]

@@ -283,6 +283,74 @@ pub trait ModelBound: Send + Sync {
         }
     }
 
+    /// Batched [`Self::log_both`] + per-datum pseudo-gradient **product
+    /// rows**: fills `ll`/`lb` exactly as [`Self::pseudo_grad_batch`] does
+    /// and writes datum `i`'s raw gradient products into
+    /// `rows[i * dim .. (i+1) * dim]` instead of folding them into a
+    /// summed `grad`. The products must be the exact single multiplies the
+    /// batch fold would perform (for softmax: component `kk·d + j` holds
+    /// `coeff_kk · x[j]`), so that folding the rows through
+    /// [`crate::kernels::fold_grad_rows`] in batch order reproduces
+    /// [`Self::pseudo_grad_batch`]'s `grad` bit-for-bit — the contract the
+    /// distributed backend's shard workers serve (DESIGN.md
+    /// §Distribution). This per-datum default accumulates each row with
+    /// [`Self::pseudo_grad_acc`] (spec-equivalent; the paper models
+    /// override with the exact rows kernels).
+    fn pseudo_grad_rows_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        rows: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        let dim = self.dim();
+        debug_assert_eq!(rows.len(), idx.len() * dim);
+        for (i, &n) in idx.iter().enumerate() {
+            let seg = &mut rows[i * dim..(i + 1) * dim];
+            seg.fill(0.0);
+            let (l, b) = self.log_both_pseudo_grad(theta, n as usize, seg, scratch);
+            ll[i] = l;
+            lb[i] = b;
+        }
+    }
+
+    /// Batched [`Self::log_lik`] + per-datum likelihood-gradient **product
+    /// rows** — the `eval_lik_grad` companion of
+    /// [`Self::pseudo_grad_rows_batch`], same row contract.
+    fn log_lik_grad_rows_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        rows: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        let dim = self.dim();
+        debug_assert_eq!(rows.len(), idx.len() * dim);
+        for (i, &n) in idx.iter().enumerate() {
+            let seg = &mut rows[i * dim..(i + 1) * dim];
+            seg.fill(0.0);
+            self.log_lik_grad_acc(theta, n as usize, seg, scratch);
+            ll[i] = self.log_lik(theta, n as usize, scratch);
+        }
+    }
+
+    /// A self-contained copy of this model restricted to data rows
+    /// `start..end`: shard-local features, labels, **and per-datum bound
+    /// parameters** (anchors are per-datum functions of the anchor θ and
+    /// the datum, so slicing them is bit-identical to re-tuning the shard
+    /// against the same anchor). Worker `n()` is `end - start` and indices
+    /// are shard-local. `None` means the model does not support sharding;
+    /// the three paper models all do. Setup-time; allocates. Used by the
+    /// distributed backend's in-process worker mode (DESIGN.md
+    /// §Distribution).
+    fn shard_model(&self, start: usize, end: usize) -> Option<std::sync::Arc<dyn ModelBound>> {
+        let _ = (start, end);
+        None
+    }
+
     /// `sum_i log B_{idx[i]}(theta)` over an explicit index batch (clamped
     /// bounds, as in [`Self::log_both`]) — the per-subset companion of the
     /// collapsed [`Self::log_bound_product`], agreeing with it to rounding

@@ -257,6 +257,59 @@ impl ModelBound for RobustT {
     }
 
     // lint: zero-alloc
+    fn pseudo_grad_rows_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        rows: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::robust::pseudo_grad_rows,
+            (self, theta, idx, ll, lb, rows, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_lik_grad_rows_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        rows: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::robust::log_lik_grad_rows,
+            (self, theta, idx, ll, rows, scratch)
+        );
+    }
+
+    fn shard_model(&self, start: usize, end: usize) -> Option<Arc<dyn ModelBound>> {
+        let data = Arc::new(crate::data::RegressionData {
+            x: self.data.x.slice_rows(start, end),
+            y: self.data.y[start..end].to_vec(),
+        });
+        let mut m = RobustT {
+            data,
+            nu: self.nu,
+            sigma: self.sigma,
+            u0: self.u0[start..end].to_vec(),
+            anchor: self.anchor.clone(),
+            logc: self.logc,
+            a_mat: Matrix::zeros(0, 0),
+            b_vec: Vec::new(),
+            c_sum: 0.0,
+        };
+        m.rebuild_stats();
+        Some(Arc::new(m))
+    }
+
+    // lint: zero-alloc
     fn log_bound_product_batch(
         &self,
         theta: &[f64],

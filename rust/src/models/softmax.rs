@@ -311,6 +311,64 @@ impl ModelBound for SoftmaxBohning {
     }
 
     // lint: zero-alloc
+    fn pseudo_grad_rows_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        lb: &mut [f64],
+        rows: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::softmax::pseudo_grad_rows,
+            (self, theta, idx, ll, lb, rows, scratch)
+        );
+    }
+
+    // lint: zero-alloc
+    fn log_lik_grad_rows_batch(
+        &self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut [f64],
+        rows: &mut [f64],
+        scratch: &mut EvalScratch,
+    ) {
+        dispatch_path!(
+            kernels::kernel_path(),
+            kernels::softmax::log_lik_grad_rows,
+            (self, theta, idx, ll, rows, scratch)
+        );
+    }
+
+    fn shard_model(&self, start: usize, end: usize) -> Option<Arc<dyn ModelBound>> {
+        let k = self.k;
+        let data = Arc::new(crate::data::SoftmaxData {
+            x: self.data.x.slice_rows(start, end),
+            labels: self.data.labels[start..end].to_vec(),
+            k,
+        });
+        let d = data.d();
+        let mut s_mat = Matrix::zeros(d, d);
+        data.x.for_each_row(|_, row| {
+            s_mat.add_weighted_outer(1.0, row);
+        });
+        let mut m = SoftmaxBohning {
+            data,
+            psi: self.psi[start * k..end * k].to_vec(),
+            anchor: self.anchor.clone(),
+            s_mat,
+            g_mat: Matrix::zeros(k, d),
+            c0: 0.0,
+            k,
+        };
+        m.rebuild_stats();
+        Some(Arc::new(m))
+    }
+
+    // lint: zero-alloc
     fn log_bound_product_batch(
         &self,
         theta: &[f64],

@@ -1,0 +1,144 @@
+//! Length-prefixed, checksummed wire frames.
+//!
+//! Every message between the coordinator and a shard worker travels as one
+//! frame: a `u32` little-endian payload length, the payload bytes, and a
+//! trailing `u64` little-endian FNV-1a checksum of the payload (the same
+//! [`crate::util::codec::fnv1a`] the checkpoint layer uses). The checksum
+//! turns a corrupted or desynchronized stream into a clean
+//! [`std::io::ErrorKind::InvalidData`] error instead of a silently-wrong
+//! likelihood — the distributed backend treats it like any other transport
+//! failure and retries on a fresh connection (DESIGN.md §Distribution).
+//!
+//! Framing is transport-agnostic (`Read`/`Write`), so the protocol tests
+//! exercise it over in-memory buffers and the runtime over `TcpStream`s.
+
+use std::io::{self, Read, Write};
+
+use crate::util::codec::fnv1a;
+
+/// Fixed per-frame overhead: 4-byte length prefix + 8-byte checksum.
+pub const FRAME_OVERHEAD: usize = 12;
+
+/// Hard cap on a single frame's payload (1 GiB). A length prefix beyond
+/// this is treated as stream corruption, not an allocation request.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// Write one frame; returns the total bytes put on the wire
+/// (`payload.len() + FRAME_OVERHEAD`). Flushes so a pipelined request is
+/// visible to the worker before the coordinator blocks on the response.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<usize> {
+    let len = u32::try_from(payload.len())
+        .ok()
+        .filter(|&l| (l as usize) <= MAX_FRAME_LEN)
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("frame payload of {} bytes exceeds MAX_FRAME_LEN", payload.len()),
+            )
+        })?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&fnv1a(payload).to_le_bytes())?;
+    w.flush()?;
+    Ok(payload.len() + FRAME_OVERHEAD)
+}
+
+/// Read one frame into `buf` (cleared and resized to the payload length);
+/// returns the total bytes taken off the wire. A checksum mismatch or an
+/// oversized length prefix surfaces as [`io::ErrorKind::InvalidData`]; a
+/// peer that closed mid-frame surfaces as the underlying
+/// [`io::ErrorKind::UnexpectedEof`].
+pub fn read_frame(r: &mut impl Read, buf: &mut Vec<u8>) -> io::Result<usize> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length prefix {len} exceeds MAX_FRAME_LEN — stream corrupt"),
+        ));
+    }
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    let mut sum_bytes = [0u8; 8];
+    r.read_exact(&mut sum_bytes)?;
+    let expect = u64::from_le_bytes(sum_bytes);
+    let got = fnv1a(buf);
+    if got != expect {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame checksum mismatch: payload hashes to {got:#018x}, trailer says {expect:#018x}"),
+        ));
+    }
+    Ok(len + FRAME_OVERHEAD)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_and_counts_bytes() {
+        let payload = b"firefly dist frame".to_vec();
+        let mut wire = Vec::new();
+        let sent = write_frame(&mut wire, &payload).unwrap();
+        assert_eq!(sent, payload.len() + FRAME_OVERHEAD);
+        assert_eq!(wire.len(), sent);
+        let mut buf = vec![0xAA; 3]; // stale contents must be discarded
+        let got = read_frame(&mut wire.as_slice(), &mut buf).unwrap();
+        assert_eq!(got, sent);
+        assert_eq!(buf, payload);
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &[]).unwrap();
+        let mut buf = Vec::new();
+        read_frame(&mut wire.as_slice(), &mut buf).unwrap();
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn corrupted_payload_is_invalid_data() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"payload under test").unwrap();
+        wire[7] ^= 0x40; // flip one payload bit
+        let mut buf = Vec::new();
+        let err = read_frame(&mut wire.as_slice(), &mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_trailer_is_invalid_data() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"payload under test").unwrap();
+        let at = wire.len() - 1;
+        wire[at] ^= 0x01;
+        let mut buf = Vec::new();
+        let err = read_frame(&mut wire.as_slice(), &mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut buf = Vec::new();
+        let err = read_frame(&mut wire.as_slice(), &mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("length prefix"), "{err}");
+    }
+
+    #[test]
+    fn truncated_stream_is_unexpected_eof() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"cut short").unwrap();
+        wire.truncate(wire.len() - 3);
+        let mut buf = Vec::new();
+        let err = read_frame(&mut wire.as_slice(), &mut buf).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+}

@@ -1,0 +1,78 @@
+//! Multi-process shard transport for the distributed backend.
+//!
+//! Pure-`std` TCP plumbing under `runtime::dist_backend`
+//! (DESIGN.md §Distribution): [`frame`] puts length-prefixed,
+//! FNV-1a-checksummed frames on a stream, [`protocol`] encodes the
+//! request/response payloads with the checkpoint codec (so every `f64`
+//! crosses the wire bit-exactly), and [`worker`] is the shard-serving side
+//! — the accept loop behind both the `firefly worker` CLI mode and the
+//! in-process `--workers K` spawner.
+//!
+//! Determinism contract: nothing in this module may influence *what* is
+//! computed, only *where*. Shards are contiguous index ranges
+//! ([`shard_ranges`]), per-datum results are scattered back into request
+//! order, and gradient rows are re-folded through the canonical kernel
+//! tree on the coordinator — so a chain's θ-trace, acceptances, z-flips
+//! and query counters are byte-identical to the serial backend at any
+//! worker count. Timeouts and retries come from `[dist]` config values,
+//! never from ambient clocks read on a decision path.
+
+pub mod frame;
+pub mod protocol;
+pub mod worker;
+
+pub use frame::{read_frame, write_frame, FRAME_OVERHEAD, MAX_FRAME_LEN};
+pub use protocol::{HelloAck, ModelSpec, Request};
+pub use worker::{
+    build_shard_model, serve, spawn_local_workers, spawn_worker, FaultPlan, ServeControl,
+    WorkerHandle, WorkerState,
+};
+
+/// Balanced contiguous shard ranges: `n` rows over `k` shards, the first
+/// `n % k` shards one row longer. This single function is the index-space
+/// authority for the `convert shard` splitter, the in-process worker
+/// spawner, and the coordinator's coverage validation — they must never
+/// disagree on who owns a row.
+pub fn shard_ranges(n: usize, k: usize) -> Vec<(usize, usize)> {
+    assert!(k > 0, "need at least one shard");
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut at = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push((at, at + len));
+        at += len;
+    }
+    debug_assert_eq!(at, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_exactly_once() {
+        for n in [0usize, 1, 2, 7, 8, 100, 101, 1000] {
+            for k in [1usize, 2, 3, 4, 7, 16] {
+                let r = shard_ranges(n, k);
+                assert_eq!(r.len(), k);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r[k - 1].1, n);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap/overlap at {w:?}");
+                }
+                let max = r.iter().map(|(s, e)| e - s).max().unwrap();
+                let min = r.iter().map(|(s, e)| e - s).min().unwrap();
+                assert!(max - min <= 1, "unbalanced: {r:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_match_front_loaded_remainder() {
+        assert_eq!(shard_ranges(10, 4), vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_eq!(shard_ranges(3, 4), vec![(0, 1), (1, 2), (2, 3), (3, 3)]);
+    }
+}

@@ -1,0 +1,403 @@
+//! Request/response payload encoding for the shard-worker protocol.
+//!
+//! Payloads ride inside [`super::frame`] frames and are encoded with the
+//! same little-endian [`crate::util::codec`] vocabulary as the checkpoint
+//! layer, so every scalar — in particular every `f64` — crosses the wire
+//! bit-exactly. That is a correctness requirement, not a nicety: the
+//! distributed backend's outputs must be byte-identical to
+//! [`crate::runtime::CpuBackend`]'s (DESIGN.md §Distribution).
+//!
+//! Request layout: `u64 req_id, u8 op, <op body>`. Response layout:
+//! `u64 req_id, u8 status` with `status = 0` followed by the op-specific
+//! body, or `status = 1` followed by a length-prefixed UTF-8 error string.
+//! The echoed `req_id` lets the coordinator reject stale responses after a
+//! reconnect (requests are idempotent, so a retried request may legally be
+//! answered twice; only the reply matching the live id is consumed).
+//!
+//! Index sets are *shard-local* `u32`s: the coordinator subtracts the
+//! shard's `start` before encoding, so a worker never needs the global
+//! index space and an out-of-range index is always a protocol error.
+
+use crate::models::ModelKind;
+use crate::util::codec::{ByteReader, ByteWriter};
+
+/// Per-connection handshake carrying the model specification (op body:
+/// [`ModelSpec`]). Must be the first request on every connection.
+pub const OP_HELLO: u8 = 1;
+/// Re-anchor the worker's bound at a new θ (op body: `f64_slice` anchor).
+pub const OP_SET_ANCHOR: u8 = 2;
+/// Per-point log L_n (op body: θ + shard-local indices).
+pub const OP_EVAL_LIK: u8 = 3;
+/// Per-point (log L_n, log B_n).
+pub const OP_EVAL_BOTH: u8 = 4;
+/// log L_n plus per-datum gradient product rows.
+pub const OP_EVAL_LIK_GRAD_ROWS: u8 = 5;
+/// (log L_n, log B_n) plus per-datum pseudo-likelihood gradient rows.
+pub const OP_EVAL_PSEUDO_GRAD_ROWS: u8 = 6;
+/// Liveness probe (empty body).
+pub const OP_PING: u8 = 7;
+/// Ask the worker process/thread to exit after replying (empty body).
+pub const OP_SHUTDOWN: u8 = 8;
+
+/// Everything a worker needs to rebuild its shard's slice of the model,
+/// bit-identically to the coordinator slicing its own full model: the
+/// model family, global shape, the scalar bound hyper-parameters, and the
+/// current anchor θ (if the bounds have been MAP-tuned). Anchor tuning is
+/// per-datum (DESIGN.md §Distribution), so a worker retuning only its own
+/// rows at the same θ reproduces the full model's per-datum anchors
+/// exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// model family
+    pub kind: ModelKind,
+    /// global dataset size N (workers own a contiguous slice of it)
+    pub n: usize,
+    /// feature dimension D
+    pub d: usize,
+    /// softmax class count K (1 for the other families)
+    pub k: usize,
+    /// logistic untuned JJ anchor ξ (ignored by other families)
+    pub xi_const: f64,
+    /// robust-t degrees of freedom ν (ignored by other families)
+    pub nu: f64,
+    /// robust-t scale σ (ignored by other families)
+    pub sigma: f64,
+    /// bound anchor θ, present once the bounds have been tuned
+    pub anchor: Option<Vec<f64>>,
+}
+
+fn kind_to_u8(kind: ModelKind) -> u8 {
+    match kind {
+        ModelKind::Logistic => 0,
+        ModelKind::Softmax => 1,
+        ModelKind::Robust => 2,
+    }
+}
+
+fn kind_from_u8(v: u8) -> Result<ModelKind, String> {
+    match v {
+        0 => Ok(ModelKind::Logistic),
+        1 => Ok(ModelKind::Softmax),
+        2 => Ok(ModelKind::Robust),
+        _ => Err(format!("unknown model-kind byte {v}")),
+    }
+}
+
+impl ModelSpec {
+    /// Append the wire encoding to `w`.
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.u8(kind_to_u8(self.kind));
+        w.usize(self.n);
+        w.usize(self.d);
+        w.usize(self.k);
+        w.f64(self.xi_const);
+        w.f64(self.nu);
+        w.f64(self.sigma);
+        w.bool(self.anchor.is_some());
+        if let Some(a) = &self.anchor {
+            w.f64_slice(a);
+        }
+    }
+
+    /// Decode the [`Self::encode`] layout.
+    pub fn decode(r: &mut ByteReader) -> Result<Self, String> {
+        let kind = kind_from_u8(r.u8()?)?;
+        let n = r.usize()?;
+        let d = r.usize()?;
+        let k = r.usize()?;
+        let xi_const = r.f64()?;
+        let nu = r.f64()?;
+        let sigma = r.f64()?;
+        let anchor = if r.bool()? { Some(r.f64_vec()?) } else { None };
+        Ok(ModelSpec { kind, n, d, k, xi_const, nu, sigma, anchor })
+    }
+}
+
+/// A decoded request, as seen by the worker serve loop. The coordinator
+/// side encodes straight from borrowed slices (`encode_eval` and friends)
+/// to avoid copying θ and the index set an extra time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// per-connection handshake
+    Hello(ModelSpec),
+    /// re-anchor the bounds at this θ
+    SetAnchor(Vec<f64>),
+    /// per-point log L_n at θ over shard-local indices
+    EvalLik {
+        /// flattened parameter vector
+        theta: Vec<f64>,
+        /// shard-local datum indices
+        idx: Vec<u32>,
+    },
+    /// per-point (log L_n, log B_n)
+    EvalBoth {
+        /// flattened parameter vector
+        theta: Vec<f64>,
+        /// shard-local datum indices
+        idx: Vec<u32>,
+    },
+    /// log L_n plus gradient product rows
+    EvalLikGradRows {
+        /// flattened parameter vector
+        theta: Vec<f64>,
+        /// shard-local datum indices
+        idx: Vec<u32>,
+    },
+    /// (log L_n, log B_n) plus pseudo-likelihood gradient rows
+    EvalPseudoGradRows {
+        /// flattened parameter vector
+        theta: Vec<f64>,
+        /// shard-local datum indices
+        idx: Vec<u32>,
+    },
+    /// liveness probe
+    Ping,
+    /// exit after replying
+    Shutdown,
+}
+
+fn header(req_id: u64, op: u8) -> ByteWriter {
+    let mut w = ByteWriter::new();
+    w.u64(req_id);
+    w.u8(op);
+    w
+}
+
+/// Encode a Hello request.
+pub fn encode_hello(req_id: u64, spec: &ModelSpec) -> Vec<u8> {
+    let mut w = header(req_id, OP_HELLO);
+    spec.encode(&mut w);
+    w.into_bytes()
+}
+
+/// Encode a SetAnchor request.
+pub fn encode_set_anchor(req_id: u64, anchor: &[f64]) -> Vec<u8> {
+    let mut w = header(req_id, OP_SET_ANCHOR);
+    w.f64_slice(anchor);
+    w.into_bytes()
+}
+
+/// Encode one of the four eval requests (`op` must be an `OP_EVAL_*`
+/// constant); `idx` holds shard-local indices.
+pub fn encode_eval(req_id: u64, op: u8, theta: &[f64], idx: &[u32]) -> Vec<u8> {
+    debug_assert!((OP_EVAL_LIK..=OP_EVAL_PSEUDO_GRAD_ROWS).contains(&op));
+    let mut w = header(req_id, op);
+    w.f64_slice(theta);
+    w.u32_slice(idx);
+    w.into_bytes()
+}
+
+/// Encode a bodyless request (`OP_PING` / `OP_SHUTDOWN`).
+pub fn encode_bodyless(req_id: u64, op: u8) -> Vec<u8> {
+    header(req_id, op).into_bytes()
+}
+
+/// Decode any request payload into `(req_id, Request)`.
+pub fn decode_request(payload: &[u8]) -> Result<(u64, Request), String> {
+    let mut r = ByteReader::new(payload);
+    let req_id = r.u64()?;
+    let op = r.u8()?;
+    let req = match op {
+        OP_HELLO => Request::Hello(ModelSpec::decode(&mut r)?),
+        OP_SET_ANCHOR => Request::SetAnchor(r.f64_vec()?),
+        OP_EVAL_LIK | OP_EVAL_BOTH | OP_EVAL_LIK_GRAD_ROWS | OP_EVAL_PSEUDO_GRAD_ROWS => {
+            let theta = r.f64_vec()?;
+            let idx = r.u32_vec()?;
+            match op {
+                OP_EVAL_LIK => Request::EvalLik { theta, idx },
+                OP_EVAL_BOTH => Request::EvalBoth { theta, idx },
+                OP_EVAL_LIK_GRAD_ROWS => Request::EvalLikGradRows { theta, idx },
+                _ => Request::EvalPseudoGradRows { theta, idx },
+            }
+        }
+        OP_PING => Request::Ping,
+        OP_SHUTDOWN => Request::Shutdown,
+        _ => return Err(format!("unknown request op {op}")),
+    };
+    r.finish()?;
+    Ok((req_id, req))
+}
+
+/// Start an ok-response payload: header written, op body appended by the
+/// caller before `into_bytes()`.
+pub fn ok_response(req_id: u64) -> ByteWriter {
+    let mut w = ByteWriter::new();
+    w.u64(req_id);
+    w.u8(0);
+    w
+}
+
+/// Encode an error response carrying a human-readable message.
+pub fn err_response(req_id: u64, msg: &str) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u64(req_id);
+    w.u8(1);
+    w.bytes(msg.as_bytes());
+    w.into_bytes()
+}
+
+/// Check a response payload against the expected request id and unwrap its
+/// status byte. Returns a reader positioned at the op body on status 0; a
+/// worker-reported error or an id mismatch becomes `Err`.
+pub fn check_response<'a>(payload: &'a [u8], expect_req_id: u64) -> Result<ByteReader<'a>, String> {
+    let mut r = ByteReader::new(payload);
+    let req_id = r.u64()?;
+    if req_id != expect_req_id {
+        return Err(format!("response for request {req_id}, expected {expect_req_id}"));
+    }
+    match r.u8()? {
+        0 => Ok(r),
+        1 => {
+            let msg = String::from_utf8_lossy(r.bytes()?).into_owned();
+            Err(format!("worker error: {msg}"))
+        }
+        s => Err(format!("unknown response status byte {s}")),
+    }
+}
+
+/// The Hello response body: the worker's claimed shard placement, which
+/// the coordinator cross-checks against the manifest / expected coverage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloAck {
+    /// first global index owned by the worker (inclusive)
+    pub start: usize,
+    /// one past the last global index owned (exclusive)
+    pub end: usize,
+    /// global N the worker believes it is a shard of
+    pub n: usize,
+    /// flattened parameter dimension of the worker's model
+    pub dim: usize,
+}
+
+impl HelloAck {
+    /// Append the wire encoding to `w`.
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.usize(self.start);
+        w.usize(self.end);
+        w.usize(self.n);
+        w.usize(self.dim);
+    }
+
+    /// Decode the [`Self::encode`] layout.
+    pub fn decode(r: &mut ByteReader) -> Result<Self, String> {
+        Ok(HelloAck { start: r.usize()?, end: r.usize()?, n: r.usize()?, dim: r.usize()? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(anchor: Option<Vec<f64>>) -> ModelSpec {
+        ModelSpec {
+            kind: ModelKind::Softmax,
+            n: 1000,
+            d: 7,
+            k: 3,
+            xi_const: 1.5,
+            nu: 4.0,
+            sigma: 0.5,
+            anchor,
+        }
+    }
+
+    #[test]
+    fn model_spec_roundtrips_with_and_without_anchor() {
+        for s in [spec(None), spec(Some(vec![0.25, -1.5, 3.0_f64.sqrt()]))] {
+            let mut w = ByteWriter::new();
+            s.encode(&mut w);
+            let bytes = w.into_bytes();
+            let mut r = ByteReader::new(&bytes);
+            let got = ModelSpec::decode(&mut r).unwrap();
+            r.finish().unwrap();
+            assert_eq!(got, s);
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip_through_decode() {
+        let theta = vec![0.1, -0.2, 0.3];
+        let idx = vec![0u32, 5, 17];
+        let cases: Vec<(Vec<u8>, Request)> = vec![
+            (encode_hello(1, &spec(None)), Request::Hello(spec(None))),
+            (encode_set_anchor(2, &theta), Request::SetAnchor(theta.clone())),
+            (
+                encode_eval(3, OP_EVAL_LIK, &theta, &idx),
+                Request::EvalLik { theta: theta.clone(), idx: idx.clone() },
+            ),
+            (
+                encode_eval(4, OP_EVAL_BOTH, &theta, &idx),
+                Request::EvalBoth { theta: theta.clone(), idx: idx.clone() },
+            ),
+            (
+                encode_eval(5, OP_EVAL_LIK_GRAD_ROWS, &theta, &idx),
+                Request::EvalLikGradRows { theta: theta.clone(), idx: idx.clone() },
+            ),
+            (
+                encode_eval(6, OP_EVAL_PSEUDO_GRAD_ROWS, &theta, &idx),
+                Request::EvalPseudoGradRows { theta: theta.clone(), idx: idx.clone() },
+            ),
+            (encode_bodyless(7, OP_PING), Request::Ping),
+            (encode_bodyless(8, OP_SHUTDOWN), Request::Shutdown),
+        ];
+        for (i, (payload, want)) in cases.into_iter().enumerate() {
+            let (req_id, got) = decode_request(&payload).unwrap();
+            assert_eq!(req_id, i as u64 + 1);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn eval_payload_preserves_f64_bits() {
+        // adversarial bit patterns: -0.0, subnormal, huge, tiny
+        let theta = vec![-0.0, f64::MIN_POSITIVE / 4.0, 1e300, -1e-300];
+        let payload = encode_eval(9, OP_EVAL_LIK, &theta, &[0]);
+        let (_, req) = decode_request(&payload).unwrap();
+        let Request::EvalLik { theta: got, .. } = req else { panic!("wrong op") };
+        for (a, b) in theta.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn responses_unwrap_status_and_req_id() {
+        let mut w = ok_response(42);
+        w.f64_slice(&[1.0, 2.0]);
+        let bytes = w.into_bytes();
+        let mut body = check_response(&bytes, 42).unwrap();
+        assert_eq!(body.f64_vec().unwrap(), vec![1.0, 2.0]);
+        body.finish().unwrap();
+
+        let err = check_response(&bytes, 41).unwrap_err();
+        assert!(err.contains("expected 41"), "{err}");
+
+        let bytes = err_response(7, "shard index out of range");
+        let err = check_response(&bytes, 7).unwrap_err();
+        assert!(err.contains("worker error: shard index out of range"), "{err}");
+    }
+
+    #[test]
+    fn hello_ack_roundtrips() {
+        let ack = HelloAck { start: 250, end: 500, n: 1000, dim: 21 };
+        let mut w = ByteWriter::new();
+        ack.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(HelloAck::decode(&mut r).unwrap(), ack);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut payload = encode_bodyless(1, OP_PING);
+        payload.push(0xFF);
+        assert!(decode_request(&payload).is_err());
+    }
+
+    #[test]
+    fn unknown_op_is_rejected() {
+        let payload = encode_bodyless(1, 200);
+        let err = decode_request(&payload).unwrap_err();
+        assert!(err.contains("unknown request op"), "{err}");
+    }
+}

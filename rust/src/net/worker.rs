@@ -1,0 +1,521 @@
+//! Shard worker: serves one contiguous slice of the dataset over TCP.
+//!
+//! A worker owns rows `start..end` of the global dataset and answers the
+//! coordinator's eval requests through the same SoA kernel path the
+//! in-process backends use, so every per-datum `f64` it returns is
+//! bit-identical to what [`crate::runtime::CpuBackend`] would have
+//! computed for the same global indices (DESIGN.md §Distribution).
+//!
+//! Workers are deliberately **stateless across connections**: each
+//! connection must open with a [`Request::Hello`] carrying the full
+//! [`ModelSpec`] (including the current bound anchor), and the worker
+//! reconciles its cached model against it — building it on first contact,
+//! re-anchoring when the anchor moved while it was away. A worker that
+//! crashed and restarted therefore re-serves correctly from nothing but
+//! its shard file plus the next handshake; the coordinator's bounded
+//! retry/reconnect loop (`runtime::dist_backend`) relies on exactly this.
+//!
+//! The serve loop is sequential: one coordinator connection at a time,
+//! requests answered in arrival order. That is not a scalability
+//! compromise — the coordinator pipelines across *workers*, and each
+//! worker's work per request is the batched kernel evaluation itself.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::frame::{read_frame, write_frame};
+use super::protocol::{
+    decode_request, err_response, ok_response, HelloAck, ModelSpec, Request, OP_EVAL_BOTH,
+    OP_EVAL_LIK, OP_EVAL_LIK_GRAD_ROWS, OP_EVAL_PSEUDO_GRAD_ROWS,
+};
+use crate::data::AnyData;
+use crate::models::{EvalScratch, LogisticJJ, ModelBound, ModelKind, RobustT, SoftmaxBohning};
+
+/// Deterministic fault injection for the integration tests: the worker
+/// closes the live connection after serving this many requests on it, then
+/// keeps accepting. The coordinator sees a dead peer mid-chain and must
+/// reconnect + re-handshake + resend — the full failure path — without any
+/// wall-clock races in the test.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// drop the connection after this many served requests (0 = never)
+    pub drop_conn_after: u64,
+}
+
+/// Bitwise slice equality — anchors are compared by bits, not by `==`,
+/// so `-0.0` vs `0.0` (which tune to different per-datum anchor bits in
+/// the softmax ψ formulas) forces a re-anchor instead of a silent skip.
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// One worker's mutable serving state: the shard placement, the cached
+/// model (lazily built from shard data on first Hello in process mode, or
+/// handed in pre-sliced for in-process workers), and reusable buffers.
+pub struct WorkerState {
+    start: usize,
+    end: usize,
+    n_global: usize,
+    /// shard dataset, consumed by the first Hello (process-worker mode)
+    data: Option<AnyData>,
+    model: Option<Arc<dyn ModelBound>>,
+    scratch: Option<EvalScratch>,
+    ll: Vec<f64>,
+    lb: Vec<f64>,
+    rows: Vec<f64>,
+}
+
+impl WorkerState {
+    /// State for an in-process worker already holding its slice of the
+    /// coordinator's model (`ModelBound::shard_model`).
+    pub fn in_process(model: Arc<dyn ModelBound>, start: usize, end: usize, n_global: usize) -> Self {
+        let scratch = model.new_scratch();
+        WorkerState {
+            start,
+            end,
+            n_global,
+            data: None,
+            model: Some(model),
+            scratch: Some(scratch),
+            ll: Vec::new(),
+            lb: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// State for a standalone `firefly worker` process that loaded its
+    /// shard rows from disk and builds the model on first Hello.
+    pub fn from_data(data: AnyData, start: usize, end: usize, n_global: usize) -> Self {
+        assert_eq!(data.n(), end - start, "shard dataset does not match its manifest range");
+        WorkerState {
+            start,
+            end,
+            n_global,
+            data: Some(data),
+            model: None,
+            scratch: None,
+            ll: Vec::new(),
+            lb: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    fn n_local(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Reconcile the cached model with a Hello's spec: build it if absent,
+    /// validate the static shape, and re-anchor if the anchor moved.
+    fn hello(&mut self, spec: &ModelSpec) -> Result<HelloAck, String> {
+        if spec.n != self.n_global {
+            return Err(format!(
+                "spec says N = {}, this worker was started for N = {}",
+                spec.n, self.n_global
+            ));
+        }
+        if self.model.is_none() {
+            let data = self.data.take().ok_or("worker has neither a model nor shard data")?;
+            let model = build_shard_model(spec, data)?;
+            self.scratch = Some(model.new_scratch());
+            self.model = Some(model);
+        }
+        let model = self.model.as_ref().unwrap();
+        if model.kind() != spec.kind {
+            return Err(format!(
+                "spec wants a {} model, worker holds {}",
+                spec.kind.as_str(),
+                model.kind().as_str()
+            ));
+        }
+        let want_dim = spec.d * spec.k;
+        if model.dim() != want_dim || model.n_classes() != spec.k {
+            return Err(format!(
+                "spec shape (d={}, k={}) does not match worker model (dim={}, k={})",
+                spec.d,
+                spec.k,
+                model.dim(),
+                model.n_classes()
+            ));
+        }
+        self.reanchor(spec.anchor.as_deref())?;
+        let model = self.model.as_ref().unwrap();
+        Ok(HelloAck { start: self.start, end: self.end, n: self.n_global, dim: model.dim() })
+    }
+
+    /// Move the bound anchor to `anchor` (bit-compared; a no-op when it
+    /// already matches). Per-datum anchor tuning over only this shard's
+    /// rows reproduces the coordinator's full-model tuning bits exactly.
+    fn reanchor(&mut self, anchor: Option<&[f64]>) -> Result<(), String> {
+        let model = self.model.as_ref().ok_or("handshake required before set-anchor")?;
+        match (anchor, model.anchor_theta()) {
+            (None, None) => Ok(()),
+            (Some(a), Some(b)) if bits_eq(a, b) => Ok(()),
+            (Some(a), _) => {
+                if a.len() != model.dim() {
+                    return Err(format!(
+                        "anchor has {} components, model dim is {}",
+                        a.len(),
+                        model.dim()
+                    ));
+                }
+                let m = model
+                    .clone_reanchored(a)
+                    .ok_or("model family does not support re-anchoring")?;
+                self.scratch = Some(m.new_scratch());
+                self.model = Some(m);
+                Ok(())
+            }
+            (None, Some(_)) => Err("cannot clear a tuned anchor".to_string()),
+        }
+    }
+
+    /// Serve one eval op over shard-local `idx`, returning the encoded
+    /// ok-response payload.
+    fn eval(&mut self, req_id: u64, op: u8, theta: &[f64], idx: &[u32]) -> Result<Vec<u8>, String> {
+        let model = self.model.clone().ok_or("handshake required before eval")?;
+        if theta.len() != model.dim() {
+            return Err(format!("theta has {} components, model dim is {}", theta.len(), model.dim()));
+        }
+        let n_local = self.n_local();
+        if let Some(&bad) = idx.iter().find(|&&i| i as usize >= n_local) {
+            return Err(format!("shard-local index {bad} out of range (shard holds {n_local} rows)"));
+        }
+        let scratch = self.scratch.as_mut().ok_or("worker scratch missing")?;
+        let dim = model.dim();
+        self.ll.clear();
+        self.ll.resize(idx.len(), 0.0);
+        let mut w = ok_response(req_id);
+        match op {
+            OP_EVAL_LIK => {
+                model.log_lik_batch(theta, idx, &mut self.ll, scratch);
+                w.f64_slice(&self.ll);
+            }
+            OP_EVAL_BOTH => {
+                self.lb.clear();
+                self.lb.resize(idx.len(), 0.0);
+                model.log_both_batch(theta, idx, &mut self.ll, &mut self.lb, scratch);
+                w.f64_slice(&self.ll);
+                w.f64_slice(&self.lb);
+            }
+            OP_EVAL_LIK_GRAD_ROWS => {
+                self.rows.clear();
+                self.rows.resize(idx.len() * dim, 0.0);
+                model.log_lik_grad_rows_batch(theta, idx, &mut self.ll, &mut self.rows, scratch);
+                w.f64_slice(&self.ll);
+                w.f64_slice(&self.rows);
+            }
+            OP_EVAL_PSEUDO_GRAD_ROWS => {
+                self.lb.clear();
+                self.lb.resize(idx.len(), 0.0);
+                self.rows.clear();
+                self.rows.resize(idx.len() * dim, 0.0);
+                model.pseudo_grad_rows_batch(
+                    theta,
+                    idx,
+                    &mut self.ll,
+                    &mut self.lb,
+                    &mut self.rows,
+                    scratch,
+                );
+                w.f64_slice(&self.ll);
+                w.f64_slice(&self.lb);
+                w.f64_slice(&self.rows);
+            }
+            _ => return Err(format!("op {op} is not an eval op")),
+        }
+        // drain the row-cache tallies so they do not grow without bound;
+        // worker-side cache stats are topology-dependent and deliberately
+        // not wired back (same exclusion as the ParBackend shards)
+        let _ = scratch.take_cache_stats();
+        Ok(w.into_bytes())
+    }
+
+    /// Dispatch one decoded request to the matching handler.
+    fn handle(&mut self, req_id: u64, req: &Request, hello_done: bool) -> Result<Vec<u8>, String> {
+        if !hello_done && !matches!(req, Request::Hello(_) | Request::Ping | Request::Shutdown) {
+            return Err("handshake required: first request on a connection must be Hello".into());
+        }
+        match req {
+            Request::Hello(spec) => {
+                let ack = self.hello(spec)?;
+                let mut w = ok_response(req_id);
+                ack.encode(&mut w);
+                Ok(w.into_bytes())
+            }
+            Request::SetAnchor(a) => {
+                self.reanchor(Some(a))?;
+                Ok(ok_response(req_id).into_bytes())
+            }
+            Request::EvalLik { theta, idx } => self.eval(req_id, OP_EVAL_LIK, theta, idx),
+            Request::EvalBoth { theta, idx } => self.eval(req_id, OP_EVAL_BOTH, theta, idx),
+            Request::EvalLikGradRows { theta, idx } => {
+                self.eval(req_id, OP_EVAL_LIK_GRAD_ROWS, theta, idx)
+            }
+            Request::EvalPseudoGradRows { theta, idx } => {
+                self.eval(req_id, OP_EVAL_PSEUDO_GRAD_ROWS, theta, idx)
+            }
+            Request::Ping | Request::Shutdown => Ok(ok_response(req_id).into_bytes()),
+        }
+    }
+}
+
+/// Build a worker's model over its shard dataset from a Hello spec —
+/// the standalone-process path. The constructors' untuned per-datum
+/// anchors are data-local constants and `tune_anchors_map` is a per-datum
+/// formula, so this matches `ModelBound::shard_model` on the
+/// coordinator's full model bit-for-bit.
+pub fn build_shard_model(spec: &ModelSpec, data: AnyData) -> Result<Arc<dyn ModelBound>, String> {
+    match (spec.kind, data) {
+        (ModelKind::Logistic, AnyData::Logistic(d)) => {
+            let mut m = LogisticJJ::new(Arc::new(d), spec.xi_const);
+            if let Some(a) = &spec.anchor {
+                m.tune_anchors_map(a);
+            }
+            Ok(Arc::new(m))
+        }
+        (ModelKind::Softmax, AnyData::Softmax(d)) => {
+            if d.k != spec.k {
+                return Err(format!(
+                    "shard file declares K = {}, spec says K = {} — re-shard with a forced \
+                     class count",
+                    d.k, spec.k
+                ));
+            }
+            let mut m = SoftmaxBohning::new(Arc::new(d));
+            if let Some(a) = &spec.anchor {
+                m.tune_anchors_map(a);
+            }
+            Ok(Arc::new(m))
+        }
+        (ModelKind::Robust, AnyData::Regression(d)) => {
+            let mut m = RobustT::new(Arc::new(d), spec.nu, spec.sigma);
+            if let Some(a) = &spec.anchor {
+                m.tune_anchors_map(a);
+            }
+            Ok(Arc::new(m))
+        }
+        (kind, data) => Err(format!(
+            "spec wants a {} model but the shard file holds {} data",
+            kind.as_str(),
+            data.kind_name()
+        )),
+    }
+}
+
+/// Serve one accepted connection until the peer goes away, the fault plan
+/// drops it, or a Shutdown arrives. Returns `Ok(true)` on Shutdown.
+fn serve_conn(
+    state: &mut WorkerState,
+    stream: &mut TcpStream,
+    fault: Option<FaultPlan>,
+) -> io::Result<bool> {
+    let mut buf = Vec::new();
+    let mut served = 0u64;
+    let mut hello_done = false;
+    loop {
+        if read_frame(stream, &mut buf).is_err() {
+            // EOF, reset, or a corrupt frame: this connection is done; the
+            // coordinator reconnects and re-handshakes if it still cares
+            return Ok(false);
+        }
+        let resp = match decode_request(&buf) {
+            Ok((req_id, req)) => {
+                let shutdown = matches!(req, Request::Shutdown);
+                let resp = match state.handle(req_id, &req, hello_done) {
+                    Ok(bytes) => {
+                        if matches!(req, Request::Hello(_)) {
+                            hello_done = true;
+                        }
+                        bytes
+                    }
+                    Err(msg) => err_response(req_id, &msg),
+                };
+                if shutdown {
+                    let _ = write_frame(stream, &resp);
+                    return Ok(true);
+                }
+                resp
+            }
+            // undecodable request: req_id unknown, answer with id 0 so the
+            // coordinator's id check rejects it loudly, then drop the link
+            Err(msg) => {
+                let _ = write_frame(stream, &err_response(0, &msg));
+                return Ok(false);
+            }
+        };
+        write_frame(stream, &resp)?;
+        served += 1;
+        if let Some(f) = fault {
+            if f.drop_conn_after != 0 && served >= f.drop_conn_after {
+                return Ok(false);
+            }
+        }
+    }
+}
+
+/// Shared shutdown control for a serve loop: a stop flag plus a handle to
+/// the connection currently being served, so a stop request can sever a
+/// live (possibly idle-blocked) connection instead of waiting for the
+/// coordinator to go away on its own.
+#[derive(Default)]
+pub struct ServeControl {
+    stop: AtomicBool,
+    live: std::sync::Mutex<Option<TcpStream>>,
+}
+
+impl ServeControl {
+    /// Fresh control block (not yet stopped, no live connection).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Whether a stop has been requested.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Request a stop: set the flag, sever the live connection (unblocking
+    /// a read), and poke the listener at `addr` to unblock its accept.
+    pub fn stop_and_wake(&self, addr: SocketAddr) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Ok(mut live) = self.live.lock() {
+            if let Some(s) = live.take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        let _ = TcpStream::connect(addr);
+    }
+
+    fn set_live(&self, stream: &TcpStream) {
+        if let Ok(mut live) = self.live.lock() {
+            *live = stream.try_clone().ok();
+        }
+    }
+
+    fn clear_live(&self) {
+        if let Ok(mut live) = self.live.lock() {
+            *live = None;
+        }
+    }
+}
+
+/// Blocking accept-and-serve loop. Exits when `ctl` is stopped (see
+/// [`ServeControl::stop_and_wake`]) or a Shutdown request is served.
+pub fn serve(
+    listener: &TcpListener,
+    mut state: WorkerState,
+    ctl: &ServeControl,
+    fault: Option<FaultPlan>,
+) -> io::Result<()> {
+    for conn in listener.incoming() {
+        if ctl.stopped() {
+            break;
+        }
+        let mut stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_nodelay(true);
+        ctl.set_live(&stream);
+        let shutdown = serve_conn(&mut state, &mut stream, fault);
+        ctl.clear_live();
+        if shutdown? || ctl.stopped() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// A spawned worker thread plus the shard placement it serves. Dropping
+/// the handle stops the thread (idempotent).
+pub struct WorkerHandle {
+    /// the address the worker accepts coordinator connections on
+    pub addr: SocketAddr,
+    /// first global index owned (inclusive)
+    pub start: usize,
+    /// one past the last global index owned (exclusive)
+    pub end: usize,
+    ctl: Arc<ServeControl>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Stop the worker thread and wait for it to exit — even mid-request
+    /// or with an idle coordinator connection open (the live connection is
+    /// severed). Safe to call twice.
+    pub fn stop(&mut self) {
+        self.ctl.stop_and_wake(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Bind `listen`, retrying briefly: a worker restarted on the port it just
+/// vacated can race the kernel's release of the old listening socket.
+fn bind_with_retry(listen: &str) -> io::Result<TcpListener> {
+    let mut last = None;
+    for _ in 0..8 {
+        match TcpListener::bind(listen) {
+            Ok(l) => return Ok(l),
+            Err(e) if e.kind() == io::ErrorKind::AddrInUse => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(250));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| io::Error::new(io::ErrorKind::AddrInUse, listen.to_string())))
+}
+
+/// Spawn one worker thread serving `state` on `listen` (use port 0 for an
+/// ephemeral port; the bound address is on the returned handle).
+pub fn spawn_worker(
+    state: WorkerState,
+    listen: &str,
+    fault: Option<FaultPlan>,
+) -> io::Result<WorkerHandle> {
+    let listener = bind_with_retry(listen)?;
+    let addr = listener.local_addr()?;
+    let (start, end) = (state.start, state.end);
+    let ctl = Arc::new(ServeControl::new());
+    let ctl2 = Arc::clone(&ctl);
+    let join = std::thread::Builder::new()
+        .name(format!("ffly-worker-{start}-{end}"))
+        .spawn(move || {
+            let _ = serve(&listener, state, &ctl2, fault);
+        })?;
+    Ok(WorkerHandle { addr, start, end, ctl, join: Some(join) })
+}
+
+/// Spawn `workers` in-process shard workers over `model` on localhost
+/// ephemeral ports, slicing the model with [`ModelBound::shard_model`]
+/// (exact: per-datum anchor state is sliced, not retuned).
+pub fn spawn_local_workers(
+    model: &Arc<dyn ModelBound>,
+    workers: usize,
+) -> Result<Vec<WorkerHandle>, String> {
+    assert!(workers > 0, "need at least one worker");
+    let n = model.n();
+    let mut handles = Vec::with_capacity(workers);
+    for (start, end) in super::shard_ranges(n, workers) {
+        let shard = model
+            .shard_model(start, end)
+            .ok_or_else(|| format!("{} models do not support sharding", model.kind().as_str()))?;
+        let state = WorkerState::in_process(shard, start, end, n);
+        handles.push(
+            spawn_worker(state, "127.0.0.1:0", None).map_err(|e| format!("spawn worker: {e}"))?,
+        );
+    }
+    Ok(handles)
+}

@@ -1,0 +1,768 @@
+//! Distributed likelihood backend: `BatchEval` over shard workers.
+//!
+//! [`DistBackend`] implements the exact same [`BatchEval`] contract as
+//! [`CpuBackend`](super::CpuBackend), but evaluates each batch across
+//! multi-process shard workers over TCP ([`crate::net`]) — either
+//! spawned in-process over localhost (`--workers K`, each worker owning an
+//! exact [`ModelBound::shard_model`] slice) or connected to standalone
+//! `firefly worker` processes (`--connect host:port,...`), each serving
+//! one `.fbin` shard from a `convert shard` manifest.
+//!
+//! ## Determinism (DESIGN.md §Distribution)
+//!
+//! The coordinator partitions the request's index set by shard ownership,
+//! pipelines one request per shard (write all, then read all), and puts
+//! every per-datum result back in the position the caller asked for:
+//!
+//! * per-point `log L_n` / `log B_n` values are composition-invariant —
+//!   each worker computes the same tile bits the serial backend would,
+//!   and scattering them back is pure placement;
+//! * summed gradients are **not** reduced on the workers. Workers return
+//!   per-datum gradient product rows (raw multiplies, never folded) and
+//!   the coordinator replays the serial kernels' exact fold over the rows
+//!   in original request order ([`crate::kernels::fold_grad_rows`]), so
+//!   worker count and shard boundaries cannot touch a single bit of the
+//!   gradient.
+//!
+//! Likelihood queries are metered here, once per datum per request —
+//! identically to the serial backend, and never again on retry.
+//!
+//! ## Failure model
+//!
+//! Transport failures (timeout, reset, checksum mismatch) trigger a
+//! bounded retry loop: back off, reconnect, re-handshake (the Hello
+//! replays the full model spec including the current bound anchor, so a
+//! restarted worker rebuilds bit-identical state), resend the same
+//! idempotent request. Only after `retries` consecutive failures does the
+//! chain abort — at which point the run's `.fckpt` checkpoint resumes it
+//! byte-identically. Worker-reported *semantic* errors (bad index, shape
+//! mismatch) abort immediately: retrying cannot fix a wrong request.
+
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::evaluator::BatchEval;
+use crate::data::fbin::LabelKind;
+use crate::data::shard::ShardManifest;
+use crate::kernels::fold_grad_rows;
+use crate::metrics::{Counters, WireStats};
+use crate::models::{ModelBound, ModelKind};
+use crate::net::frame::{read_frame, write_frame};
+use crate::net::protocol::{
+    check_response, encode_eval, encode_hello, encode_set_anchor, HelloAck, ModelSpec,
+    OP_EVAL_BOTH, OP_EVAL_LIK, OP_EVAL_LIK_GRAD_ROWS, OP_EVAL_PSEUDO_GRAD_ROWS,
+};
+use crate::net::worker::{spawn_local_workers, WorkerHandle};
+
+/// Execution-topology knobs for [`DistBackend`] — deliberately **not**
+/// part of the config fingerprint: they choose where the arithmetic runs,
+/// never what it computes (the dist backend shares the `cpu` fingerprint
+/// family).
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    /// spawn this many in-process localhost workers (0 = use `connect`)
+    pub workers: usize,
+    /// addresses of standalone `firefly worker` processes
+    pub connect: Vec<String>,
+    /// per-request I/O timeout in milliseconds (0 = block forever)
+    pub timeout_ms: u64,
+    /// bounded retry attempts per request after a transport failure
+    pub retries: u32,
+    /// sleep between retry attempts, milliseconds
+    pub retry_backoff_ms: u64,
+    /// optional shard-manifest path for startup cross-validation
+    pub manifest: Option<String>,
+    /// untuned logistic JJ anchor ξ (must match the workers' model build)
+    pub untuned_xi: f64,
+    /// robust-t degrees of freedom ν
+    pub nu: f64,
+    /// robust-t scale σ
+    pub sigma: f64,
+    /// shared transport tallies (wire bytes, retries, reconnects)
+    pub wire: WireStats,
+}
+
+impl Default for DistOptions {
+    fn default() -> Self {
+        DistOptions {
+            workers: 0,
+            connect: Vec::new(),
+            timeout_ms: 5000,
+            retries: 3,
+            retry_backoff_ms: 200,
+            manifest: None,
+            untuned_xi: 1.5,
+            nu: 4.0,
+            sigma: 0.5,
+            wire: WireStats::new(),
+        }
+    }
+}
+
+/// One worker connection plus its per-batch staging buffers.
+struct ShardConn {
+    addr: String,
+    start: usize,
+    end: usize,
+    stream: Option<TcpStream>,
+    /// shard-local indices of this batch's data owned by this worker
+    local_idx: Vec<u32>,
+    /// output positions (into the caller's buffers) of those indices
+    pos: Vec<u32>,
+    /// outstanding request (kept for idempotent resend on retry)
+    req_id: u64,
+    payload: Vec<u8>,
+    /// response payload buffer
+    resp: Vec<u8>,
+    /// whether the outstanding request was written successfully
+    sent_ok: bool,
+}
+
+/// Distributed [`BatchEval`] backend (see the module docs). Outputs,
+/// query counters, and therefore whole chains are byte-identical to
+/// [`CpuBackend`](super::CpuBackend) at any worker count.
+pub struct DistBackend {
+    model: Arc<dyn ModelBound>,
+    counters: Counters,
+    wire: WireStats,
+    spec: ModelSpec,
+    shards: Vec<ShardConn>,
+    timeout: Option<Duration>,
+    retries: u32,
+    backoff: Duration,
+    next_req_id: u64,
+    /// keeps in-process workers alive for the backend's lifetime
+    _local: Vec<WorkerHandle>,
+    // reusable decode/staging buffers
+    tmp_ll: Vec<f64>,
+    tmp_lb: Vec<f64>,
+    tmp_rows: Vec<f64>,
+    rows_stage: Vec<f64>,
+}
+
+fn kind_matches(kind: ModelKind, label: LabelKind) -> bool {
+    matches!(
+        (kind, label),
+        (ModelKind::Logistic, LabelKind::Binary)
+            | (ModelKind::Softmax, LabelKind::Class)
+            | (ModelKind::Robust, LabelKind::Target)
+    )
+}
+
+impl DistBackend {
+    /// Build the distributed backend: spawn or connect the workers,
+    /// handshake each, and validate that together they own exactly
+    /// `0..model.n()` (cross-checked against the manifest when given).
+    pub fn new(
+        model: Arc<dyn ModelBound>,
+        counters: Counters,
+        opts: &DistOptions,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            (opts.workers > 0) != (!opts.connect.is_empty()),
+            "dist backend needs either workers > 0 or a connect list, not both"
+        );
+        let k = model.n_classes();
+        let spec = ModelSpec {
+            kind: model.kind(),
+            n: model.n(),
+            d: model.dim() / k,
+            k,
+            xi_const: opts.untuned_xi,
+            nu: opts.nu,
+            sigma: opts.sigma,
+            anchor: model.anchor_theta().map(<[f64]>::to_vec),
+        };
+
+        let (placements, local): (Vec<(String, usize, usize)>, Vec<WorkerHandle>) =
+            if opts.workers > 0 {
+                let handles = spawn_local_workers(&model, opts.workers)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                let p = handles
+                    .iter()
+                    .map(|h| (h.addr.to_string(), h.start, h.end))
+                    .collect();
+                (p, handles)
+            } else {
+                // placement discovered from each worker's Hello ack
+                (opts.connect.iter().map(|a| (a.clone(), usize::MAX, 0)).collect(), Vec::new())
+            };
+
+        let mut be = DistBackend {
+            model,
+            counters,
+            wire: opts.wire.clone(),
+            spec,
+            shards: placements
+                .into_iter()
+                .map(|(addr, start, end)| ShardConn {
+                    addr,
+                    start,
+                    end,
+                    stream: None,
+                    local_idx: Vec::new(),
+                    pos: Vec::new(),
+                    req_id: 0,
+                    payload: Vec::new(),
+                    resp: Vec::new(),
+                    sent_ok: false,
+                })
+                .collect(),
+            timeout: (opts.timeout_ms > 0).then(|| Duration::from_millis(opts.timeout_ms)),
+            retries: opts.retries.max(1),
+            backoff: Duration::from_millis(opts.retry_backoff_ms),
+            next_req_id: 0,
+            _local: local,
+            tmp_ll: Vec::new(),
+            tmp_lb: Vec::new(),
+            tmp_rows: Vec::new(),
+            rows_stage: Vec::new(),
+        };
+
+        for si in 0..be.shards.len() {
+            be.connect_shard(si)
+                .map_err(|e| anyhow::anyhow!("worker {}: {e}", be.shards[si].addr))?;
+        }
+        be.shards.sort_by_key(|s| s.start);
+        be.validate_coverage().map_err(|e| anyhow::anyhow!(e))?;
+        if let Some(path) = &opts.manifest {
+            let manifest = ShardManifest::load(path).map_err(|e| anyhow::anyhow!(e))?;
+            be.validate_manifest(&manifest).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        }
+        Ok(be)
+    }
+
+    /// Every row of `0..n` owned by exactly one worker.
+    fn validate_coverage(&self) -> Result<(), String> {
+        if self.shards.is_empty() {
+            return Err("no workers".to_string());
+        }
+        if self.shards[0].start != 0 {
+            return Err(format!("first shard starts at {}, not 0", self.shards[0].start));
+        }
+        for w in self.shards.windows(2) {
+            if w[0].end != w[1].start {
+                return Err(format!(
+                    "worker {} ends at {} but worker {} starts at {} — shard ranges must tile",
+                    w[0].addr, w[0].end, w[1].addr, w[1].start
+                ));
+            }
+        }
+        let last = self.shards.last().unwrap();
+        if last.end != self.model.n() {
+            return Err(format!(
+                "workers cover 0..{} but the model holds {} rows",
+                last.end,
+                self.model.n()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Cross-check worker placement and model shape against a manifest.
+    fn validate_manifest(&self, m: &ShardManifest) -> Result<(), String> {
+        if !kind_matches(self.spec.kind, m.kind) {
+            return Err(format!(
+                "manifest is for {} data, model is {}",
+                m.kind.name(),
+                self.spec.kind.as_str()
+            ));
+        }
+        if m.n != self.spec.n || m.d != self.spec.d || m.k != self.spec.k {
+            return Err(format!(
+                "manifest shape (n={}, d={}, k={}) does not match the model \
+                 (n={}, d={}, k={})",
+                m.n, m.d, m.k, self.spec.n, self.spec.d, self.spec.k
+            ));
+        }
+        if m.shards.len() != self.shards.len() {
+            return Err(format!(
+                "manifest lists {} shards but {} workers are connected",
+                m.shards.len(),
+                self.shards.len()
+            ));
+        }
+        for (s, e) in self.shards.iter().zip(&m.shards) {
+            if s.start != e.start || s.end != e.end {
+                return Err(format!(
+                    "worker {} claims rows {}..{} but the manifest assigns {}..{}",
+                    s.addr, s.start, s.end, e.start, e.end
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn next_id(&mut self) -> u64 {
+        self.next_req_id += 1;
+        self.next_req_id
+    }
+
+    /// Open a fresh connection to shard `si` and run the Hello handshake
+    /// (replays the current spec, so a restarted worker re-anchors).
+    fn connect_shard(&mut self, si: usize) -> io::Result<()> {
+        self.shards[si].stream = None;
+        let addr_str = self.shards[si].addr.clone();
+        let stream = match self.timeout {
+            Some(t) => {
+                let addr = addr_str
+                    .to_socket_addrs()?
+                    .next()
+                    .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, addr_str.clone()))?;
+                TcpStream::connect_timeout(&addr, t)?
+            }
+            None => TcpStream::connect(&*addr_str)?,
+        };
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(self.timeout)?;
+        stream.set_write_timeout(self.timeout)?;
+        self.shards[si].stream = Some(stream);
+
+        let req_id = self.next_id();
+        let hello = encode_hello(req_id, &self.spec);
+        self.write_to(si, &hello)?;
+        self.read_from(si)?;
+        let ack = {
+            let s = &self.shards[si];
+            let mut r = check_response(&s.resp, req_id)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+            HelloAck::decode(&mut r)
+                .and_then(|a| r.finish().map(|()| a))
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?
+        };
+        let s = &mut self.shards[si];
+        if s.start == usize::MAX {
+            // discovery (connect mode): adopt the worker's claimed range;
+            // validate_coverage then proves the claims tile 0..n
+            s.start = ack.start;
+            s.end = ack.end;
+        } else if ack.start != s.start || ack.end != s.end {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "worker claims rows {}..{}, expected {}..{}",
+                    ack.start, ack.end, s.start, s.end
+                ),
+            ));
+        }
+        if ack.n != self.spec.n || ack.dim != self.spec.d * self.spec.k {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "worker model shape (n={}, dim={}) does not match (n={}, dim={})",
+                    ack.n,
+                    ack.dim,
+                    self.spec.n,
+                    self.spec.d * self.spec.k
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    fn write_to(&mut self, si: usize, payload: &[u8]) -> io::Result<()> {
+        let wire = self.wire.clone();
+        let s = &mut self.shards[si];
+        let stream =
+            s.stream.as_mut().ok_or_else(|| io::Error::from(io::ErrorKind::NotConnected))?;
+        match write_frame(stream, payload) {
+            Ok(sent) => {
+                wire.add_request();
+                wire.add_sent(sent as u64);
+                Ok(())
+            }
+            Err(e) => {
+                s.stream = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn read_from(&mut self, si: usize) -> io::Result<()> {
+        let wire = self.wire.clone();
+        let s = &mut self.shards[si];
+        let stream =
+            s.stream.as_mut().ok_or_else(|| io::Error::from(io::ErrorKind::NotConnected))?;
+        let mut resp = std::mem::take(&mut s.resp);
+        let result = read_frame(stream, &mut resp);
+        s.resp = resp;
+        match result {
+            Ok(got) => {
+                wire.add_received(got as u64);
+                Ok(())
+            }
+            Err(e) => {
+                s.stream = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Split the caller's index set by shard ownership, remembering each
+    /// datum's output position. Ranges are sorted and tiling, so ownership
+    /// is a binary search.
+    fn partition(&mut self, idx: &[u32]) {
+        for s in &mut self.shards {
+            s.local_idx.clear();
+            s.pos.clear();
+        }
+        let n = self.model.n();
+        for (i, &g) in idx.iter().enumerate() {
+            let gi = g as usize;
+            assert!(gi < n, "datum index {gi} out of range (N = {n})");
+            let si = self.shards.partition_point(|s| s.end <= gi);
+            let s = &mut self.shards[si];
+            s.local_idx.push(g - s.start as u32);
+            s.pos.push(i as u32);
+        }
+    }
+
+    /// Phase 1 of the pipeline: encode and write one request per active
+    /// shard. Write failures are deferred to the read phase's retry loop.
+    fn send_all(&mut self, op: u8, theta: &[f64]) {
+        for si in 0..self.shards.len() {
+            if self.shards[si].local_idx.is_empty() {
+                self.shards[si].sent_ok = false;
+                continue;
+            }
+            let req_id = self.next_id();
+            let s = &mut self.shards[si];
+            s.req_id = req_id;
+            s.payload = encode_eval(req_id, op, theta, &s.local_idx);
+            let payload = std::mem::take(&mut self.shards[si].payload);
+            self.shards[si].sent_ok = self.write_to(si, &payload).is_ok();
+            self.shards[si].payload = payload;
+        }
+    }
+
+    /// Phase 2, per shard: collect the response, falling back to the
+    /// bounded reconnect/resend/re-read loop on any transport failure.
+    /// Panics (aborting the chain) when a worker stays unreachable.
+    fn recv(&mut self, si: usize) {
+        let mut last_err: io::Error;
+        if self.shards[si].sent_ok {
+            match self.read_from(si) {
+                Ok(()) => return,
+                Err(e) => last_err = e,
+            }
+        } else {
+            last_err = io::Error::from(io::ErrorKind::NotConnected);
+        }
+        for _ in 0..self.retries {
+            self.wire.add_retry();
+            std::thread::sleep(self.backoff);
+            self.wire.add_reconnect();
+            if let Err(e) = self.connect_shard(si) {
+                last_err = e;
+                continue;
+            }
+            let payload = std::mem::take(&mut self.shards[si].payload);
+            let sent = self.write_to(si, &payload);
+            self.shards[si].payload = payload;
+            if let Err(e) = sent {
+                last_err = e;
+                continue;
+            }
+            match self.read_from(si) {
+                Ok(()) => return,
+                Err(e) => last_err = e,
+            }
+        }
+        panic!(
+            "dist backend: worker {} unreachable after {} retries: {last_err} \
+             (the chain can be resumed from its last checkpoint)",
+            self.shards[si].addr, self.retries
+        );
+    }
+
+    /// Unwrap shard `si`'s response status/req-id, leaving the payload
+    /// available, and hand back an owned copy-free reader position via a
+    /// callback. Semantic errors abort the chain.
+    fn take_resp(&mut self, si: usize) -> (Vec<u8>, u64) {
+        let s = &mut self.shards[si];
+        (std::mem::take(&mut s.resp), s.req_id)
+    }
+
+    fn put_resp(&mut self, si: usize, resp: Vec<u8>) {
+        self.shards[si].resp = resp;
+    }
+
+    /// Run one eval op end to end over the already-partitioned batch:
+    /// send to all shards, then per shard (in ascending-range order)
+    /// receive, decode `n_vals` f64 slices into the tmp buffers, and
+    /// scatter/stage through `scatter(self, si)`.
+    fn exchange(
+        &mut self,
+        op: u8,
+        theta: &[f64],
+        n_vals: usize,
+        mut scatter: impl FnMut(&mut Self, usize),
+    ) {
+        self.send_all(op, theta);
+        for si in 0..self.shards.len() {
+            if self.shards[si].local_idx.is_empty() {
+                continue;
+            }
+            self.recv(si);
+            let (resp, req_id) = self.take_resp(si);
+            {
+                let mut r = check_response(&resp, req_id).unwrap_or_else(|e| {
+                    panic!("dist backend: worker {}: {e}", self.shards[si].addr)
+                });
+                let body: Result<(), String> = (|| {
+                    if n_vals >= 1 {
+                        r.f64_slice_into(&mut self.tmp_ll)?;
+                    }
+                    if n_vals >= 2 {
+                        r.f64_slice_into(&mut self.tmp_lb)?;
+                    }
+                    if n_vals >= 3 {
+                        r.f64_slice_into(&mut self.tmp_rows)?;
+                    }
+                    r.finish()
+                })();
+                body.unwrap_or_else(|e| {
+                    panic!("dist backend: worker {}: bad response body: {e}", self.shards[si].addr)
+                });
+            }
+            self.put_resp(si, resp);
+            scatter(self, si);
+        }
+    }
+}
+
+impl BatchEval for DistBackend {
+    fn n(&self) -> usize {
+        self.model.n()
+    }
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn eval(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>, lb: &mut Vec<f64>) {
+        self.counters.add_lik(idx.len() as u64);
+        self.counters.add_bound(idx.len() as u64);
+        ll.clear();
+        lb.clear();
+        ll.resize(idx.len(), 0.0);
+        lb.resize(idx.len(), 0.0);
+        self.partition(idx);
+        self.exchange(OP_EVAL_BOTH, theta, 2, |be, si| {
+            let s = &be.shards[si];
+            for (j, &p) in s.pos.iter().enumerate() {
+                ll[p as usize] = be.tmp_ll[j];
+                lb[p as usize] = be.tmp_lb[j];
+            }
+        });
+    }
+
+    fn eval_pseudo_grad(
+        &mut self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut Vec<f64>,
+        lb: &mut Vec<f64>,
+        grad: &mut [f64],
+    ) {
+        self.counters.add_lik(idx.len() as u64);
+        self.counters.add_bound(idx.len() as u64);
+        ll.clear();
+        lb.clear();
+        ll.resize(idx.len(), 0.0);
+        lb.resize(idx.len(), 0.0);
+        let dim = self.model.dim();
+        self.rows_stage.clear();
+        self.rows_stage.resize(idx.len() * dim, 0.0);
+        self.partition(idx);
+        self.exchange(OP_EVAL_PSEUDO_GRAD_ROWS, theta, 3, |be, si| {
+            let s = &be.shards[si];
+            for (j, &p) in s.pos.iter().enumerate() {
+                let p = p as usize;
+                ll[p] = be.tmp_ll[j];
+                lb[p] = be.tmp_lb[j];
+            }
+            stage_rows(&mut be.rows_stage, &be.tmp_rows, &s.pos, dim);
+        });
+        fold_grad_rows(&self.rows_stage, dim, grad);
+    }
+
+    fn eval_lik(&mut self, theta: &[f64], idx: &[u32], ll: &mut Vec<f64>) {
+        self.counters.add_lik(idx.len() as u64);
+        ll.clear();
+        ll.resize(idx.len(), 0.0);
+        self.partition(idx);
+        self.exchange(OP_EVAL_LIK, theta, 1, |be, si| {
+            let s = &be.shards[si];
+            for (j, &p) in s.pos.iter().enumerate() {
+                ll[p as usize] = be.tmp_ll[j];
+            }
+        });
+    }
+
+    fn eval_lik_grad(
+        &mut self,
+        theta: &[f64],
+        idx: &[u32],
+        ll: &mut Vec<f64>,
+        grad: &mut [f64],
+    ) {
+        self.counters.add_lik(idx.len() as u64);
+        ll.clear();
+        ll.resize(idx.len(), 0.0);
+        let dim = self.model.dim();
+        self.rows_stage.clear();
+        self.rows_stage.resize(idx.len() * dim, 0.0);
+        self.partition(idx);
+        self.exchange(OP_EVAL_LIK_GRAD_ROWS, theta, 3, |be, si| {
+            let s = &be.shards[si];
+            for (j, &p) in s.pos.iter().enumerate() {
+                ll[p as usize] = be.tmp_ll[j];
+            }
+            stage_rows(&mut be.rows_stage, &be.tmp_rows, &s.pos, dim);
+        });
+        fold_grad_rows(&self.rows_stage, dim, grad);
+    }
+
+    fn set_model(&mut self, model: Arc<dyn ModelBound>) -> bool {
+        if model.n() != self.spec.n
+            || model.dim() != self.spec.d * self.spec.k
+            || model.kind() != self.spec.kind
+        {
+            return false;
+        }
+        let Some(anchor) = model.anchor_theta().map(<[f64]>::to_vec) else {
+            // re-anchoring always installs a tuned model; a spec without an
+            // anchor cannot be broadcast retroactively
+            return false;
+        };
+        self.model = model;
+        // updating the spec FIRST makes transport failures below harmless:
+        // any failed write/read drops that worker's stream, and the next
+        // eval's reconnect Hello replays this anchor before serving
+        self.spec.anchor = Some(anchor.clone());
+        for si in 0..self.shards.len() {
+            let req_id = self.next_id();
+            let payload = encode_set_anchor(req_id, &anchor);
+            if self.write_to(si, &payload).is_err() {
+                continue; // stream dropped; reconnect will re-anchor
+            }
+            if self.read_from(si).is_err() {
+                continue; // ditto
+            }
+            let (resp, _) = self.take_resp(si);
+            let ok = match check_response(&resp, req_id) {
+                Ok(mut r) => r.finish().is_ok(),
+                // a worker that *refuses* the anchor (semantic error, not
+                // transport) means the swap cannot be honored
+                Err(_) => false,
+            };
+            self.put_resp(si, resp);
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Copy each response row `j` (worker order) into the staging buffer at
+/// its original request position `pos[j]` — placement only, no arithmetic.
+fn stage_rows(stage: &mut [f64], rows: &[f64], pos: &[u32], dim: usize) {
+    debug_assert_eq!(rows.len(), pos.len() * dim);
+    for (j, &p) in pos.iter().enumerate() {
+        let src = &rows[j * dim..(j + 1) * dim];
+        let dst = &mut stage[p as usize * dim..(p as usize + 1) * dim];
+        dst.copy_from_slice(src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::models::LogisticJJ;
+    use crate::runtime::CpuBackend;
+    use crate::util::Rng;
+
+    fn logistic_model(n: usize, d: usize, seed: u64) -> Arc<dyn ModelBound> {
+        Arc::new(LogisticJJ::new(Arc::new(synth::synth_mnist(n, d, seed)), 1.5))
+    }
+
+    fn opts(workers: usize) -> DistOptions {
+        DistOptions { workers, ..DistOptions::default() }
+    }
+
+    #[test]
+    fn matches_cpu_backend_bitwise_on_random_batches() {
+        let model = logistic_model(200, 6, 11);
+        let mut cpu = CpuBackend::new(model.clone(), Counters::new());
+        for workers in [1usize, 2, 4] {
+            let mut dist =
+                DistBackend::new(model.clone(), Counters::new(), &opts(workers)).unwrap();
+            let mut rng = Rng::new(42 + workers as u64);
+            let dim = model.dim();
+            let (mut ll_a, mut lb_a) = (Vec::new(), Vec::new());
+            let (mut ll_b, mut lb_b) = (Vec::new(), Vec::new());
+            for round in 0..8 {
+                let theta: Vec<f64> =
+                    (0..dim).map(|_| rng.normal() * 0.2).collect();
+                let batch = 1 + (rng.next_u64() as usize) % 150;
+                let idx: Vec<u32> =
+                    (0..batch).map(|_| (rng.next_u64() % 200) as u32).collect();
+                let mut grad_a = vec![0.0; dim];
+                let mut grad_b = vec![0.0; dim];
+                cpu.eval_pseudo_grad(&theta, &idx, &mut ll_a, &mut lb_a, &mut grad_a);
+                dist.eval_pseudo_grad(&theta, &idx, &mut ll_b, &mut lb_b, &mut grad_b);
+                for (a, b) in ll_a.iter().zip(&ll_b) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "ll, {workers} workers");
+                }
+                for (a, b) in lb_a.iter().zip(&lb_b) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "lb, {workers} workers");
+                }
+                for (a, b) in grad_a.iter().zip(&grad_b) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "grad, {workers} workers, round {round}"
+                    );
+                }
+                cpu.eval(&theta, &idx, &mut ll_a, &mut lb_a);
+                dist.eval(&theta, &idx, &mut ll_b, &mut lb_b);
+                assert_eq!(ll_a, ll_b);
+                assert_eq!(lb_a, lb_b);
+            }
+            // identical batches ⇒ identical query metering, at any worker count
+            assert_eq!(cpu.counters().totals(), dist.counters().totals());
+            cpu.counters().reset();
+        }
+    }
+
+    #[test]
+    fn wire_stats_accumulate() {
+        let model = logistic_model(64, 4, 3);
+        let o = opts(2);
+        let mut dist = DistBackend::new(model.clone(), Counters::new(), &o).unwrap();
+        let theta = vec![0.1; model.dim()];
+        let mut ll = Vec::new();
+        dist.eval_lik(&theta, &[0, 13, 40, 63], &mut ll);
+        assert!(o.wire.bytes_sent() > 0);
+        assert!(o.wire.bytes_received() > 0);
+        assert!(o.wire.requests() >= 4, "2 hellos + 2 evals");
+        assert_eq!(o.wire.retries(), 0);
+    }
+
+    #[test]
+    fn rejects_workers_and_connect_together() {
+        let model = logistic_model(10, 2, 1);
+        let mut o = opts(2);
+        o.connect = vec!["127.0.0.1:1".to_string()];
+        assert!(DistBackend::new(model.clone(), Counters::new(), &o).is_err());
+        let o = opts(0);
+        assert!(DistBackend::new(model, Counters::new(), &o).is_err());
+    }
+}

@@ -1,12 +1,15 @@
 //! Likelihood evaluation runtime: the [`evaluator::BatchEval`] interface and
 //! its implementations — serial pure-Rust [`cpu_backend::CpuBackend`], the
 //! sharded data-parallel [`par_backend::ParBackend`] (bit-identical outputs
-//! and identical query counts, fanned across a rayon pool), and the
-//! PJRT-based [`xla_backend::XlaBackend`] that executes the AOT artifacts
-//! from `make artifacts` (requires the `xla` cargo feature; the default
-//! offline build ships a stub). Python never runs on the sampling path.
+//! and identical query counts, fanned across a rayon pool), the multi-process
+//! [`dist_backend::DistBackend`] (same bit-identity contract over TCP shard
+//! workers, see DESIGN.md §Distribution), and the PJRT-based
+//! [`xla_backend::XlaBackend`] that executes the AOT artifacts from
+//! `make artifacts` (requires the `xla` cargo feature; the default offline
+//! build ships a stub). Python never runs on the sampling path.
 
 pub mod cpu_backend;
+pub mod dist_backend;
 pub mod evaluator;
 pub mod manifest;
 pub mod par_backend;
@@ -14,6 +17,7 @@ pub mod xla_backend;
 pub mod xla_source;
 
 pub use cpu_backend::CpuBackend;
+pub use dist_backend::{DistBackend, DistOptions};
 pub use evaluator::BatchEval;
 pub use manifest::Manifest;
 pub use par_backend::ParBackend;
@@ -26,19 +30,22 @@ use std::sync::Arc;
 
 /// Build the configured backend for a model that can feed the XLA artifacts.
 /// `threads` caps the sharded backend's worker pool (0 = rayon's default);
-/// the serial and XLA backends ignore it.
+/// `dist` carries the distributed backend's topology knobs; the serial and
+/// XLA backends ignore both.
 pub fn make_backend(
     source: Arc<dyn XlaSource>,
     backend: Backend,
     counters: Counters,
     artifacts_dir: &str,
     threads: usize,
+    dist: &DistOptions,
 ) -> anyhow::Result<Box<dyn BatchEval>> {
     Ok(match backend {
         Backend::Cpu => Box::new(CpuBackend::new(source.as_model_bound(), counters)),
         Backend::ParCpu => {
             Box::new(ParBackend::with_threads(source.as_model_bound(), counters, threads))
         }
+        Backend::Dist => Box::new(DistBackend::new(source.as_model_bound(), counters, dist)?),
         Backend::Xla => Box::new(XlaBackend::new(source, counters, artifacts_dir)?),
     })
 }

@@ -9,10 +9,20 @@
 //! or corrupt checkpoint surfaces as a `String` error, never a panic or a
 //! silently-wrong state.
 
-/// FNV-1a 64-bit hash — used for checkpoint payload checksums and config
-/// fingerprints (stable across platforms; not cryptographic).
+/// FNV-1a 64-bit offset basis (the hash state before any input byte).
+pub const FNV1A_BASIS: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// FNV-1a 64-bit hash — used for checkpoint payload checksums, wire-frame
+/// checksums, config fingerprints, and shard-file checksums (stable across
+/// platforms; not cryptographic).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    fnv1a_continue(FNV1A_BASIS, bytes)
+}
+
+/// Fold more bytes into an FNV-1a state — the streaming form of
+/// [`fnv1a`]: start from [`FNV1A_BASIS`] and feed chunks in order;
+/// `fnv1a(ab) == fnv1a_continue(fnv1a_continue(BASIS, a), b)`.
+pub fn fnv1a_continue(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= u64::from(b);
         h = h.wrapping_mul(0x0000_0100_0000_01B3);

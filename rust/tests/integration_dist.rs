@@ -1,0 +1,319 @@
+//! End-to-end distributed engine integration (DESIGN.md §Distribution).
+//!
+//! The `dist` backend must be bit-identical to the serial `cpu` backend
+//! through full chains — θ-traces, acceptances, z-flips, and likelihood
+//! query counters — at any worker count, on all three paper workloads, and
+//! across the failure path: a connection dropped mid-chain, and a worker
+//! killed and restarted between evaluations. Malformed inputs (corrupt
+//! frames, mismatched shard manifests) must be rejected cleanly, never
+//! folded into a chain.
+
+use std::sync::Arc;
+
+use firefly::configx::{Algorithm, Backend, ExperimentConfig, Task};
+use firefly::data::fbin::write_fbin;
+use firefly::data::shard::{split_fbin, ShardManifest};
+use firefly::data::store::BlockCacheConfig;
+use firefly::engine::{run_experiment, synth_dataset};
+use firefly::metrics::Counters;
+use firefly::models::ModelBound;
+use firefly::net::worker::{spawn_worker, FaultPlan, WorkerHandle, WorkerState};
+use firefly::runtime::{BatchEval, CpuBackend, DistBackend, DistOptions};
+use firefly::util::Rng;
+
+fn cfg(task: Task, backend: Backend) -> ExperimentConfig {
+    ExperimentConfig {
+        task,
+        algorithm: Algorithm::MapTunedFlyMc,
+        backend,
+        n_data: Some(240),
+        iters: 40,
+        burnin: 10,
+        map_steps: 40,
+        record_every: 0,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+fn assert_chains_identical(a: &ExperimentConfig, b: &ExperimentConfig, label: &str) {
+    let serial = run_experiment(a).unwrap();
+    let dist = run_experiment(b).unwrap();
+    assert_eq!(serial.chains.len(), dist.chains.len(), "{label}");
+    for (s, d) in serial.chains.iter().zip(&dist.chains) {
+        assert_eq!(s.seed, d.seed, "{label}");
+        assert_eq!(s.logpost_joint, d.logpost_joint, "{label}: logpost");
+        assert_eq!(s.theta_trace, d.theta_trace, "{label}: theta trace");
+        assert_eq!(s.bright, d.bright, "{label}: bright trajectory");
+        assert_eq!(s.accepted, d.accepted, "{label}: acceptances");
+        assert_eq!(
+            (s.z_brightened, s.z_darkened),
+            (d.z_brightened, d.z_darkened),
+            "{label}: z-flips"
+        );
+        // the paper's cost unit: metering may not move when the work does
+        assert_eq!(s.queries_per_iter, d.queries_per_iter, "{label}: queries/iter");
+        assert_eq!(s.final_counters, d.final_counters, "{label}: counter totals");
+        assert!(s.logpost_joint.iter().all(|l| l.is_finite()), "{label}");
+    }
+}
+
+#[test]
+fn dist_chains_byte_identical_on_all_three_workloads() {
+    // logistic + RW-MH, softmax + MALA (the gradient path), robust + slice
+    for task in [Task::LogisticMnist, Task::SoftmaxCifar, Task::RobustOpv] {
+        let serial = cfg(task, Backend::Cpu);
+        for workers in [1usize, 2, 4] {
+            let mut dist = cfg(task, Backend::Dist);
+            dist.dist_workers = workers;
+            assert_chains_identical(&serial, &dist, &format!("{task:?} x{workers}"));
+        }
+    }
+}
+
+#[test]
+fn untuned_flymc_dist_chain_matches_serial() {
+    // the untuned variant exercises the no-anchor Hello path (spec.anchor
+    // empty; workers build from xi_const alone)
+    let mut serial = cfg(Task::LogisticMnist, Backend::Cpu);
+    serial.algorithm = Algorithm::UntunedFlyMc;
+    let mut dist = cfg(Task::LogisticMnist, Backend::Dist);
+    dist.algorithm = Algorithm::UntunedFlyMc;
+    dist.dist_workers = 3; // uneven split of 240
+    assert_chains_identical(&serial, &dist, "untuned x3");
+}
+
+/// Temp path helper unique to this test binary's process.
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("firefly_dist_it_{}_{name}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Spawn shard workers from `.fbin` shard files the way `firefly worker`
+/// does (manifest-validated, model built on first Hello), with an optional
+/// fault plan on one worker.
+fn spawn_shard_workers(
+    manifest: &ShardManifest,
+    manifest_path: &str,
+    fault_on: Option<(usize, FaultPlan)>,
+) -> Vec<WorkerHandle> {
+    manifest
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, entry)| {
+            let data = firefly::data::shard::open_shard(
+                manifest,
+                manifest_path,
+                i,
+                BlockCacheConfig::default(),
+            )
+            .unwrap();
+            let state = WorkerState::from_data(data, entry.start, entry.end, manifest.n);
+            let fault = fault_on.and_then(|(fi, f)| (fi == i).then_some(f));
+            spawn_worker(state, "127.0.0.1:0", fault).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn connection_dropped_mid_chain_reconnects_and_stays_identical() {
+    // A worker that deterministically severs its connection every 15
+    // requests forces the coordinator through reconnect + re-Hello + resend
+    // many times per chain. The finished chain must not differ in a single
+    // bit from the uninterrupted serial run.
+    let n = 240;
+    let serial_cfg = cfg(Task::LogisticMnist, Backend::Cpu);
+    let src = tmp("drop.fbin");
+    write_fbin(&src, &synth_dataset(Task::LogisticMnist, n, serial_cfg.seed)).unwrap();
+    let out_dir = tmp("drop_shards");
+    let (manifest, manifest_path) =
+        split_fbin(&src, &out_dir, 2, BlockCacheConfig::default()).unwrap();
+    let workers =
+        spawn_shard_workers(&manifest, &manifest_path, Some((0, FaultPlan { drop_conn_after: 15 })));
+
+    let mut dist_cfg = cfg(Task::LogisticMnist, Backend::Dist);
+    dist_cfg.dist_connect = workers.iter().map(|w| w.addr.to_string()).collect();
+    dist_cfg.dist_manifest = Some(manifest_path.clone());
+    dist_cfg.dist_retry_backoff_ms = 20; // keep the forced retries fast
+    assert_chains_identical(&serial_cfg, &dist_cfg, "conn-drop x2");
+
+    drop(workers);
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn killed_worker_restarted_on_its_port_resumes_statelessly() {
+    // Segmented evaluation against CpuBackend: kill one worker between
+    // batches, restart it on the same port from the same shard file, and
+    // the next evaluations must come back byte-identical — the restarted
+    // worker rebuilds all of its state from the coordinator's re-Hello.
+    let n = 200;
+    let seed = 13;
+    let src = tmp("kill.fbin");
+    write_fbin(&src, &synth_dataset(Task::LogisticMnist, n, seed)).unwrap();
+    let out_dir = tmp("kill_shards");
+    let (manifest, manifest_path) =
+        split_fbin(&src, &out_dir, 2, BlockCacheConfig::default()).unwrap();
+    let mut workers = spawn_shard_workers(&manifest, &manifest_path, None);
+
+    // the exact model the engine would build for this dataset
+    let data = synth_dataset(Task::LogisticMnist, n, seed);
+    let model: Arc<dyn ModelBound> = match data {
+        firefly::data::AnyData::Logistic(d) => {
+            Arc::new(firefly::models::LogisticJJ::new(Arc::new(d), 1.5))
+        }
+        _ => unreachable!(),
+    };
+    let mut cpu = CpuBackend::new(model.clone(), Counters::new());
+    let opts = DistOptions {
+        connect: workers.iter().map(|w| w.addr.to_string()).collect(),
+        manifest: Some(manifest_path.clone()),
+        retry_backoff_ms: 20,
+        ..DistOptions::default()
+    };
+    let mut dist = DistBackend::new(model.clone(), Counters::new(), &opts).unwrap();
+
+    let mut rng = Rng::new(99);
+    let dim = model.dim();
+    let (mut ll_a, mut lb_a) = (Vec::new(), Vec::new());
+    let (mut ll_b, mut lb_b) = (Vec::new(), Vec::new());
+    let mut eval_round = |cpu: &mut CpuBackend,
+                          dist: &mut DistBackend,
+                          rng: &mut Rng,
+                          ll_a: &mut Vec<f64>,
+                          lb_a: &mut Vec<f64>,
+                          ll_b: &mut Vec<f64>,
+                          lb_b: &mut Vec<f64>| {
+        let theta: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.3).collect();
+        let idx: Vec<u32> = (0..120).map(|_| (rng.next_u64() % n as u64) as u32).collect();
+        cpu.eval(&theta, &idx, ll_a, lb_a);
+        dist.eval(&theta, &idx, ll_b, lb_b);
+        assert_eq!(ll_a, ll_b);
+        assert_eq!(lb_a, lb_b);
+    };
+
+    for _ in 0..3 {
+        eval_round(&mut cpu, &mut dist, &mut rng, &mut ll_a, &mut lb_a, &mut ll_b, &mut lb_b);
+    }
+
+    // kill worker 0 and restart it on the very port it vacated, from disk
+    let addr = workers[0].addr;
+    workers[0].stop();
+    let entry = &manifest.shards[0];
+    let data =
+        firefly::data::shard::open_shard(&manifest, &manifest_path, 0, BlockCacheConfig::default())
+            .unwrap();
+    let state = WorkerState::from_data(data, entry.start, entry.end, manifest.n);
+    workers[0] = spawn_worker(state, &addr.to_string(), None).unwrap();
+
+    for _ in 0..3 {
+        eval_round(&mut cpu, &mut dist, &mut rng, &mut ll_a, &mut lb_a, &mut ll_b, &mut lb_b);
+    }
+    // the coordinator went through the reconnect path at least once and the
+    // query metering never double-counted a retried request
+    assert!(opts.wire.reconnects() >= 1, "reconnects: {}", opts.wire.reconnects());
+    assert_eq!(cpu.counters().totals(), dist.counters().totals());
+
+    drop(workers);
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn corrupted_frame_closes_the_connection_cleanly() {
+    // A frame whose checksum trailer does not match its payload must end
+    // that connection (clean EOF for the peer) without taking the worker
+    // down: the next connection gets served normally.
+    use std::io::{Read, Write};
+
+    let n = 60;
+    let data = synth_dataset(Task::LogisticMnist, n, 3);
+    let model: Arc<dyn ModelBound> = match data {
+        firefly::data::AnyData::Logistic(d) => {
+            Arc::new(firefly::models::LogisticJJ::new(Arc::new(d), 1.5))
+        }
+        _ => unreachable!(),
+    };
+    let shard = model.shard_model(0, n).unwrap();
+    let state = WorkerState::in_process(shard, 0, n, n);
+    let worker = spawn_worker(state, "127.0.0.1:0", None).unwrap();
+
+    let mut bad = std::net::TcpStream::connect(worker.addr).unwrap();
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&8u32.to_le_bytes()); // length: 8-byte payload
+    frame.extend_from_slice(&[0x5A; 8]); // payload
+    frame.extend_from_slice(&[0u8; 8]); // checksum trailer: wrong on purpose
+    bad.write_all(&frame).unwrap();
+    bad.flush().unwrap();
+    let mut sink = Vec::new();
+    let got = bad.read_to_end(&mut sink).unwrap();
+    assert_eq!(got, 0, "worker must close a corrupt connection without replying");
+
+    // the worker survives and serves a real coordinator afterwards
+    let opts = DistOptions {
+        connect: vec![worker.addr.to_string()],
+        ..DistOptions::default()
+    };
+    let mut dist = DistBackend::new(model.clone(), Counters::new(), &opts).unwrap();
+    let mut cpu = CpuBackend::new(model.clone(), Counters::new());
+    let theta = vec![0.05; model.dim()];
+    let idx: Vec<u32> = (0..n as u32).collect();
+    let (mut ll_a, mut lb_a) = (Vec::new(), Vec::new());
+    let (mut ll_b, mut lb_b) = (Vec::new(), Vec::new());
+    cpu.eval(&theta, &idx, &mut ll_a, &mut lb_a);
+    dist.eval(&theta, &idx, &mut ll_b, &mut lb_b);
+    assert_eq!(ll_a, ll_b);
+    assert_eq!(lb_a, lb_b);
+}
+
+#[test]
+fn mismatched_manifest_is_rejected_at_startup() {
+    // Coordinator side: a manifest whose N disagrees with the model must
+    // refuse to build the backend (before any chain state exists).
+    let src = tmp("mismatch.fbin");
+    write_fbin(&src, &synth_dataset(Task::LogisticMnist, 160, 5)).unwrap();
+    let out_dir = tmp("mismatch_shards");
+    let (_, manifest_path) = split_fbin(&src, &out_dir, 2, BlockCacheConfig::default()).unwrap();
+
+    let data = synth_dataset(Task::LogisticMnist, 200, 5); // N = 200 != 160
+    let model: Arc<dyn ModelBound> = match data {
+        firefly::data::AnyData::Logistic(d) => {
+            Arc::new(firefly::models::LogisticJJ::new(Arc::new(d), 1.5))
+        }
+        _ => unreachable!(),
+    };
+    let opts = DistOptions {
+        workers: 2,
+        manifest: Some(manifest_path.clone()),
+        ..DistOptions::default()
+    };
+    let err = match DistBackend::new(model, Counters::new(), &opts) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("a mismatched manifest must not build a backend"),
+    };
+    assert!(err.contains("does not match the model"), "{err}");
+
+    // Worker side: a shard file that no longer hashes to the manifest's
+    // checksum is refused before a single row is served.
+    let manifest = ShardManifest::load(&manifest_path).unwrap();
+    let shard_file = manifest.shard_path(&manifest_path, 0);
+    let mut bytes = std::fs::read(&shard_file).unwrap();
+    let at = bytes.len() - 1;
+    bytes[at] ^= 0x10;
+    std::fs::write(&shard_file, &bytes).unwrap();
+    let err = firefly::data::shard::open_shard(
+        &manifest,
+        &manifest_path,
+        0,
+        BlockCacheConfig::default(),
+    )
+    .unwrap_err();
+    assert!(err.contains("checksum mismatch"), "{err}");
+
+    let _ = std::fs::remove_file(&src);
+    let _ = std::fs::remove_dir_all(&out_dir);
+}

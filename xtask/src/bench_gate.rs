@@ -27,6 +27,16 @@
 //! 5. **checkpoint size drift** — with a non-pending checkpoint baseline,
 //!    `ckpt_bytes` must match exactly per scenario (the format is
 //!    deterministic; wall-clock fields are never gated).
+//! 6. **dist identity + coverage** — `BENCH_dist.json` must report
+//!    `dist_identity: true` (the bench runs the same chain on the serial
+//!    cpu backend and the distributed backend and compares θ-traces,
+//!    acceptances, z-flips, and query counters byte-for-byte; DESIGN.md
+//!    §Distribution) plus, for each worker count in {1, 2, 4}, finite
+//!    `secs_per_iter`, `queries_per_iter`, and `wire_bytes_per_iter`.
+//!    `queries_per_iter` must also be bitwise equal across worker counts:
+//!    query metering is part of the determinism contract, so any variation
+//!    with the shard layout is a behavior change. Live immediately; a
+//!    missing file or field fails too.
 //!
 //! Baselines live in `BENCH_baseline/` (NOT the repo root, where the
 //! benches write their fresh measurements). A baseline with
@@ -369,6 +379,68 @@ fn head2head_failures(j: &Json) -> Vec<String> {
     failures
 }
 
+/// The worker counts the dist bench must cover (serial-equivalent, even
+/// split, uneven split — enough to exercise every shard-boundary case).
+const DIST_WORKER_COUNTS: [f64; 3] = [1.0, 2.0, 4.0];
+
+/// Required per-worker-count metric fields in the dist schema. Finite-only,
+/// like the head2head fields: `null`/missing/non-numeric all fail.
+const DIST_ROW_FIELDS: [&str; 3] = ["secs_per_iter", "queries_per_iter", "wire_bytes_per_iter"];
+
+/// Schema + invariant validation for `BENCH_dist.json`: the cpu-vs-dist
+/// trace probe must hold, every worker count must be covered with finite
+/// metrics, and queries/iter may not vary with the worker count.
+fn dist_failures(j: &Json) -> Vec<String> {
+    let mut failures = Vec::new();
+    match j.get("dist_identity").and_then(Json::bool_val) {
+        Some(true) => {}
+        other => failures.push(format!(
+            "dist: dist_identity = {other:?} (must be true — the distributed \
+             backend's θ-trace, acceptances, z-flips, and query counters must be \
+             byte-identical to the serial cpu backend at every worker count; a \
+             missing field means the bench stopped probing)"
+        )),
+    }
+    let rows = j.get("worker_counts").map(Json::arr).unwrap_or(&[]);
+    let mut queries_seen: Vec<(f64, f64)> = Vec::new();
+    for want in DIST_WORKER_COUNTS {
+        let Some(row) =
+            rows.iter().find(|r| r.get("workers").and_then(Json::num) == Some(want))
+        else {
+            failures.push(format!(
+                "dist: no entry for workers = {want} (the bench must cover 1, 2, and 4)"
+            ));
+            continue;
+        };
+        for field in DIST_ROW_FIELDS {
+            match row.get(field).and_then(Json::num) {
+                Some(v) if v.is_finite() => {
+                    if field == "queries_per_iter" {
+                        queries_seen.push((want, v));
+                    }
+                }
+                Some(v) => failures
+                    .push(format!("dist workers={want}: {field} = {v} (must be finite)")),
+                None => failures
+                    .push(format!("dist workers={want}: {field} missing or non-numeric")),
+            }
+        }
+    }
+    // query metering is deterministic and shard-layout-independent, so the
+    // per-iter count must be bitwise equal at every worker count
+    if let Some(&(w0, q0)) = queries_seen.first() {
+        for &(w, q) in &queries_seen[1..] {
+            if q != q0 {
+                failures.push(format!(
+                    "dist: queries_per_iter varies with worker count ({q0} at workers={w0} \
+                     vs {q} at workers={w}) — metering must not depend on the shard layout"
+                ));
+            }
+        }
+    }
+    failures
+}
+
 /// Run the gate. `args`: `--baseline DIR` (default BENCH_baseline),
 /// `--measured DIR` (default `.` — where the benches write).
 pub fn run(args: &[String]) -> Result<(), String> {
@@ -502,6 +574,11 @@ pub fn run(args: &[String]) -> Result<(), String> {
     let measured_h2h = load(mdir, "BENCH_head2head.json")?
         .ok_or("BENCH_head2head.json not found — run the head2head bench first")?;
     failures.extend(head2head_failures(&measured_h2h));
+
+    // -- dist: cpu-identity probe + per-worker-count coverage -------------
+    let measured_dist = load(mdir, "BENCH_dist.json")?
+        .ok_or("BENCH_dist.json not found — run the dist bench first")?;
+    failures.extend(dist_failures(&measured_dist));
 
     print!("{notes}");
     if failures.is_empty() {
@@ -673,6 +750,77 @@ mod tests {
         assert_eq!(fails.len(), 1, "{fails:?}");
         assert!(fails[0].contains("reanchor logistic/untuned+reanchor"), "{fails:?}");
         assert!(fails[0].contains("allocation-free"), "{fails:?}");
+    }
+
+    /// A complete, valid dist document (template for the fixtures).
+    fn dist_fixture() -> String {
+        r#"{
+  "bench": "dist", "smoke": true,
+  "dist_identity": true,
+  "worker_counts": [
+    {"workers": 1, "secs_per_iter": 6.2e-5, "queries_per_iter": 812.250, "wire_bytes_per_iter": 21480.0},
+    {"workers": 2, "secs_per_iter": 4.8e-5, "queries_per_iter": 812.250, "wire_bytes_per_iter": 22132.0},
+    {"workers": 4, "secs_per_iter": 4.1e-5, "queries_per_iter": 812.250, "wire_bytes_per_iter": 23410.0}
+  ]
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn dist_complete_document_passes() {
+        let j = parse(&dist_fixture()).unwrap();
+        assert!(dist_failures(&j).is_empty(), "{:?}", dist_failures(&j));
+    }
+
+    #[test]
+    fn dist_identity_false_or_missing_fails() {
+        let text = dist_fixture().replacen("\"dist_identity\": true", "\"dist_identity\": false", 1);
+        let fails = dist_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("dist_identity = Some(false)"), "{fails:?}");
+        assert!(fails[0].contains("byte-identical"), "{fails:?}");
+
+        let text = dist_fixture().replacen("\"dist_identity\": true,", "", 1);
+        let fails = dist_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("stopped probing"), "{fails:?}");
+    }
+
+    #[test]
+    fn dist_missing_worker_count_fails() {
+        let text = dist_fixture().replacen("\"workers\": 4", "\"workers\": 8", 1);
+        let fails = dist_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("no entry for workers = 4"), "{fails:?}");
+    }
+
+    #[test]
+    fn dist_null_and_non_finite_metrics_fail() {
+        let text =
+            dist_fixture().replacen("\"wire_bytes_per_iter\": 22132.0", "\"wire_bytes_per_iter\": null", 1);
+        let fails = dist_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("workers=2: wire_bytes_per_iter missing"), "{fails:?}");
+
+        // 1e999 parses as infinity — finite-only is the contract
+        let text = dist_fixture().replacen("\"secs_per_iter\": 6.2e-5", "\"secs_per_iter\": 1e999", 1);
+        let fails = dist_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("workers=1: secs_per_iter"), "{fails:?}");
+        assert!(fails[0].contains("must be finite"), "{fails:?}");
+    }
+
+    #[test]
+    fn dist_query_count_varying_with_workers_fails() {
+        let text = dist_fixture().replacen(
+            "\"workers\": 4, \"secs_per_iter\": 4.1e-5, \"queries_per_iter\": 812.250",
+            "\"workers\": 4, \"secs_per_iter\": 4.1e-5, \"queries_per_iter\": 812.375",
+            1,
+        );
+        let fails = dist_failures(&parse(&text).unwrap());
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("varies with worker count"), "{fails:?}");
+        assert!(fails[0].contains("workers=4"), "{fails:?}");
     }
 
     #[test]

@@ -74,6 +74,10 @@ const DET_MODULES: &[&str] = &[
     "linalg",
     "runtime",
     "kernels",
+    // the distributed transport: request partitioning and response
+    // reduction order feed the bit-identity contract (DESIGN.md
+    // §Distribution), so no randomized iteration there either
+    "net",
 ];
 
 fn nondeterministic_order(view: &FileView, diags: &mut Vec<Diag>) {

@@ -1,0 +1,12 @@
+use std::collections::HashMap;
+
+// Shard ownership keyed by a HashMap: iteration order would randomize the
+// reduction order across processes — exactly what the net module must
+// never do.
+pub fn owners(ranges: &[(usize, usize)]) -> HashMap<usize, usize> {
+    let mut m = HashMap::new();
+    for (i, &(start, _)) in ranges.iter().enumerate() {
+        m.insert(start, i);
+    }
+    m
+}

@@ -1,0 +1,8 @@
+use std::time::Instant;
+
+// An ambient clock on the retry decision path: whether to retry must come
+// from config (timeout_ms / retries), never from wall-clock sampling —
+// the raw-entropy lint fences `net` like every other deterministic module.
+pub fn should_retry(started: Instant, budget_ms: u64) -> bool {
+    Instant::now().duration_since(started).as_millis() < budget_ms as u128
+}

@@ -52,6 +52,19 @@ fn hashmap_in_det_module_fails() {
 }
 
 #[test]
+fn net_module_is_determinism_fenced() {
+    // the distributed transport joins DET_MODULES and the raw-entropy
+    // fence: randomized containers and ambient clocks on decision paths
+    // must both fire there
+    let out = lint_fixture("netdet");
+    assert!(!out.ok);
+    assert!(out.stdout.contains("[nondeterministic-order]"), "{}", out.stdout);
+    assert!(out.stdout.contains("rust/src/net/bad.rs"), "{}", out.stdout);
+    assert!(out.stdout.contains("[raw-entropy]"), "{}", out.stdout);
+    assert!(out.stdout.contains("rust/src/net/clock.rs"), "{}", out.stdout);
+}
+
+#[test]
 fn alloc_in_marked_fn_fails() {
     let out = lint_fixture("hotalloc");
     assert!(!out.ok);
@@ -170,6 +183,18 @@ fn bench_gate_rejects_null_head2head_bias() {
     let out = run_xtask(&["bench-gate", "--measured", &dir, "--baseline", &dir]);
     assert!(!out.ok);
     assert!(out.stderr.contains("bias_max_abs_z missing or non-numeric"), "{}", out.stderr);
+    assert!(out.stderr.contains("1 bench-gate violation"), "{}", out.stderr);
+}
+
+#[test]
+fn bench_gate_rejects_dist_identity_divergence() {
+    // hotpath and head2head are clean here; the only violation is
+    // dist_identity: false — a distributed chain that diverged from the
+    // serial cpu trace must never pass the gate
+    let dir = fixture("benchdist");
+    let out = run_xtask(&["bench-gate", "--measured", &dir, "--baseline", &dir]);
+    assert!(!out.ok);
+    assert!(out.stderr.contains("dist_identity = Some(false)"), "{}", out.stderr);
     assert!(out.stderr.contains("1 bench-gate violation"), "{}", out.stderr);
 }
 
